@@ -1,0 +1,84 @@
+//! Fault tolerance demo — the paper's §7 future work, live.
+//!
+//! Runs a real (not simulated) cluster with replication factor 2, kills
+//! a node mid-job, and shows the job still completing with every event
+//! processed exactly once: the heartbeat monitor detects the death, the
+//! locality scheduler fails the node's bricks over to surviving replica
+//! holders, and the merge is complete.
+//!
+//! Then re-runs with replication factor 1 to demonstrate the paper's
+//! "biggest disadvantage": without replicas, a dead node's data is lost.
+//!
+//! Run: `make artifacts && cargo run --release --example fault_tolerance`
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use std::time::Duration;
+
+fn cluster_config(replication: usize) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.n_events = 3000;
+    cfg.events_per_brick = 125; // 24 bricks over 3 nodes
+    cfg.replication = replication;
+    // slow the virtual network a touch so the job is still running when
+    // we pull the trigger
+    cfg.time_scale = 100.0;
+    cfg
+}
+
+fn run_with_kill(replication: usize) -> anyhow::Result<(JobStatus, u64, u64)> {
+    let cluster = ClusterHandle::start(
+        cluster_config(replication),
+        geps::runtime::default_artifacts_dir(),
+    )?;
+    let job = cluster.submit("n_tracks >= 2", "locality");
+
+    // let the job get going, then kill a node mid-flight
+    std::thread::sleep(Duration::from_millis(40));
+    assert!(cluster.kill_node("node1"));
+    println!("[ft] node1 killed mid-job (replication={replication})");
+
+    let status = cluster.wait(job, Duration::from_secs(180))?;
+    let (processed, selected) = {
+        let cat = cluster.catalog.lock().unwrap();
+        let j = cat.jobs.get(job).unwrap();
+        (j.events_processed, j.events_selected)
+    };
+    cluster.shutdown();
+    Ok((status, processed, selected))
+}
+
+fn main() -> anyhow::Result<()> {
+    // RF=2: must survive
+    let (status, processed, _) = run_with_kill(2)?;
+    println!(
+        "[ft] replication=2: job {status:?}, {processed}/3000 events processed"
+    );
+    assert_eq!(status, JobStatus::Done);
+    assert_eq!(processed, 3000, "failover must lose nothing");
+
+    // RF=1: the paper's known weakness — data on the dead node is gone.
+    // The job still terminates (reporting the loss) instead of hanging.
+    let (status, processed, _) = run_with_kill(1)?;
+    println!(
+        "[ft] replication=1: job {status:?}, {processed}/3000 events processed"
+    );
+    if processed < 3000 {
+        println!(
+            "[ft] {} events LOST with the dead node — the paper's \"biggest disadvantage\"",
+            3000 - processed
+        );
+    }
+    assert!(
+        processed <= 3000,
+        "without replicas some bricks may be lost"
+    );
+    println!("fault_tolerance OK");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Fig 7 reproduction driver — the paper's headline experiment.
+//!
+//! Sweeps raw-event-file size (number of ~1 MB events) and compares
+//! "running only on hobbit" against "running in parallel between gandalf
+//! and hobbit" (paper §6), using the discrete-event simulator whose
+//! compute rate is calibrated against the real measured PJRT kernel
+//! (EXPERIMENTS.md §Calibration). Repeats each point `--reps` times
+//! mirroring the paper's 130-execution protocol (13 groups × 10).
+//!
+//! Expected shape (paper): single node wins below the ~2000-event
+//! watershed; GEPS parallel wins above it, with modest (~1.2-1.4×) gains.
+//!
+//! Run: `cargo run --release --example fig7_crossover -- --reps 10`
+
+use geps::sim::{Scenario, ScenarioConfig};
+use geps::util::bench::print_table;
+
+fn main() {
+    let reps: usize = std::env::args()
+        .skip_while(|a| a != "--reps")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+
+    let groups = [
+        250usize, 500, 750, 1000, 1500, 2000, 2500, 3000, 4000, 6000, 8000,
+        12000, 16000,
+    ]; // 13 groups, as in §6
+
+    let mut rows = Vec::new();
+    let mut crossover: Option<usize> = None;
+    let mut prev_winner_single = true;
+    for &n in &groups {
+        let mut single = 0.0;
+        let mut geps = 0.0;
+        for _ in 0..reps {
+            single +=
+                Scenario::run(ScenarioConfig::fig7_hobbit_only(n)).makespan_s;
+            geps += Scenario::run(ScenarioConfig::fig7_geps(n)).makespan_s;
+        }
+        single /= reps as f64;
+        geps /= reps as f64;
+        let winner = if geps < single { "GEPS" } else { "hobbit" };
+        if prev_winner_single && geps < single && crossover.is_none() {
+            crossover = Some(n);
+        }
+        prev_winner_single = geps >= single;
+        rows.push(vec![
+            n.to_string(),
+            format!("{single:.1}"),
+            format!("{geps:.1}"),
+            format!("{:.2}x", single / geps),
+            winner.to_string(),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Fig 7: time cost (s) vs raw event file size ({} runs/point = {} executions)",
+            reps,
+            groups.len() * reps * 2
+        ),
+        &["events", "hobbit-only(s)", "GEPS(s)", "speedup", "winner"],
+        &rows,
+    );
+    match crossover {
+        Some(n) => println!(
+            "\ncrossover (watershed): between {} and {} events — paper reports ~2000",
+            groups[groups.iter().position(|g| *g == n).unwrap() - 1],
+            n
+        ),
+        None => println!("\nno crossover observed (unexpected)"),
+    }
+
+    // ablation the paper discusses in §6: granularity — smaller bricks
+    // mean more per-task overhead and more transfer setup
+    let mut rows = Vec::new();
+    for epb in [50usize, 125, 250, 500, 1000, 2000] {
+        let mut cfg = ScenarioConfig::fig7_geps_staged(4000);
+        cfg.events_per_brick = epb;
+        let r = Scenario::run(cfg);
+        rows.push(vec![
+            epb.to_string(),
+            format!("{}", 4000usize.div_ceil(epb)),
+            format!("{:.1}", r.makespan_s),
+        ]);
+    }
+    print_table(
+        "granularity ablation (§6): 4000 events, prototype (staged) mode",
+        &["events/brick", "bricks", "makespan(s)"],
+        &rows,
+    );
+}

@@ -1,0 +1,78 @@
+//! L1/L2 performance probe (§Perf): measures PJRT throughput of the
+//! Pallas-lowered features program against the pure-jnp reference
+//! lowering, sweeps the Pallas block size (AOT variants built with
+//! `python -m compile.aot --out-dir ../artifacts/perf --block-sweep`),
+//! and prints the static VMEM-footprint estimate per block size that
+//! DESIGN.md §Hardware-Adaptation calls for.
+//!
+//! Run:
+//!   cd python && python -m compile.aot --out-dir ../artifacts/perf --block-sweep && cd ..
+//!   GEPS_ARTIFACTS=artifacts/perf cargo run --release --example l1_perf
+
+use geps::events::{EventBatch, EventGenerator, GeneratorConfig};
+use geps::runtime::Engine;
+use geps::util::bench::{bench, print_table};
+
+fn vmem_estimate(block_b: usize, t: usize) -> f64 {
+    // per-block VMEM residency (f32 bytes): tracks in (B,T,4), mask (B,T),
+    // calibrated copy (B,T,4), pairwise m2 + validity (B,T,T)*2,
+    // per-track temporaries ~6x(B,T), out (B,F)
+    let f = 4.0;
+    let b = block_b as f64;
+    let t = t as f64;
+    (b * t * 4.0 * 2.0 + b * t + b * t * t * 2.0 + 6.0 * b * t + b * 8.0) * f
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = geps::runtime::default_artifacts_dir();
+    let engine = Engine::load(&dir)?;
+    let (bsz, t) = (engine.manifest.batch, engine.manifest.max_tracks);
+    let events = EventGenerator::new(GeneratorConfig::default(), 5).take(bsz);
+    let batch = EventBatch::pack(&events, bsz, t);
+    let calib = Engine::identity_calib();
+
+    let mut names: Vec<String> = engine
+        .manifest
+        .programs
+        .keys()
+        .filter(|n| n.starts_with("features"))
+        .cloned()
+        .collect();
+    names.sort_by_key(|n| {
+        n.strip_prefix("features_b")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(if n == "features" { 32 } else { 0 })
+    });
+
+    let mut rows = Vec::new();
+    for name in &names {
+        let s = bench(3, 30, || {
+            std::hint::black_box(
+                engine.features_variant(name, &batch, &calib).unwrap(),
+            );
+        });
+        let block = name
+            .strip_prefix("features_b")
+            .and_then(|v| v.parse::<usize>().ok());
+        let vmem = block
+            .map(|b| format!("{:.2} MiB", vmem_estimate(b, t) / (1 << 20) as f64))
+            .unwrap_or_else(|| "-".into());
+        rows.push(vec![
+            name.clone(),
+            format!("{:.2} ms", s.mean_ns / 1e6),
+            format!("{:.0}", s.throughput(bsz as f64)),
+            vmem,
+        ]);
+    }
+    print_table(
+        "L1 features program: PJRT CPU throughput per lowering variant",
+        &["program", "mean/batch", "events/s", "est. VMEM/block"],
+        &rows,
+    );
+    println!(
+        "\nNote: interpret=True lowers Pallas to plain HLO; CPU timings gauge\n\
+         the lowered graph's quality, not TPU wallclock. The VMEM column is\n\
+         the static footprint that must stay under ~16 MiB/core on a real TPU."
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! LZSS codec profiler (dev tool for the §Perf loop): measures compress
+//! and decompress rates plus the achieved ratio on a realistic raw event
+//! payload. Real event payloads are float-heavy and essentially
+//! incompressible (ratio ~1.04); the brick format's per-page store-raw
+//! fallback makes that cheap, and this probe keeps the number honest.
+use geps::brick::{codec, BrickFile, BrickId, Codec};
+use geps::events::{EventGenerator, GeneratorConfig};
+fn main() {
+    let events = EventGenerator::new(GeneratorConfig::default(), 7).take(2000);
+    let brick = BrickFile::encode(BrickId::new(1,0), &events, Codec::Raw, 2000);
+    let p = &brick.bytes;
+    let t = std::time::Instant::now();
+    let mut c = Vec::new();
+    for _ in 0..50 { c = codec::compress(p); }
+    let dt = t.elapsed().as_secs_f64()/50.0;
+    println!("payload {} B -> {} B (ratio {:.3}), compress {:.1} MB/s",
+        p.len(), c.len(), c.len() as f64/p.len() as f64, p.len() as f64/dt/1e6);
+    let t = std::time::Instant::now();
+    for _ in 0..50 { codec::decompress(&c, p.len()).unwrap(); }
+    let dt = t.elapsed().as_secs_f64()/50.0;
+    println!("decompress {:.1} MB/s", p.len() as f64/dt/1e6);
+}

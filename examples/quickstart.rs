@@ -1,0 +1,74 @@
+//! Quickstart: the 60-second GEPS tour.
+//!
+//! Starts a live two-node cluster (the paper's gandalf+hobbit testbed),
+//! submits a physics filter through the same API the portal uses, waits
+//! for the JSE to schedule/execute/merge it, and prints the result —
+//! all three layers running for real (rust coordinator, AOT'd JAX
+//! pipeline, Pallas kernel under PJRT).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use geps::config::ClusterConfig;
+use geps::cluster::ClusterHandle;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a cluster config — defaults are the paper's testbed
+    let mut config = ClusterConfig::default();
+    config.n_events = 1000;
+    config.events_per_brick = 125;
+    config.replication = 2;
+
+    // 2. start: generates events, splits them into bricks on the nodes'
+    //    disks, compiles the AOT artifacts, spawns node actors + JSE
+    let cluster =
+        ClusterHandle::start(config, geps::runtime::default_artifacts_dir())?;
+
+    // 3. ask GRIS what resources exist (the portal's node-info page)
+    for (dn, attrs) in
+        cluster.gris_search("o=geps", "(objectclass=GridComputeResource)")?
+    {
+        println!(
+            "node {dn}: {} brick(s), speed {}",
+            attrs.get("nbricks").map(String::as_str).unwrap_or("?"),
+            attrs.get("speed").map(String::as_str).unwrap_or("?"),
+        );
+    }
+
+    // 4. submit a Z-boson-ish selection, exactly what a user would type
+    //    into the Fig 4 submit form
+    let job = cluster.submit(
+        "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20",
+        "locality",
+    );
+    let status = cluster.wait(job, Duration::from_secs(120))?;
+
+    // 5. read back the merged result
+    let (processed, selected) = {
+        let cat = cluster.catalog.lock().unwrap();
+        let j = cat.jobs.get(job).unwrap();
+        (j.events_processed, j.events_selected)
+    };
+    println!("job {job}: {status:?} — selected {selected} of {processed} events");
+    assert_eq!(processed, 1000);
+    assert!(selected > 0, "the Z peak should select something");
+
+    // 6. the merged max_pair_mass histogram peaks at the resonance
+    let hist = cluster.histogram(job).expect("histogram");
+    let bins = hist.len() / geps::events::NUM_FEATURES;
+    let mass = &hist[5 * bins..6 * bins];
+    let (peak_bin, _) = mass
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    let (lo, hi) = geps::events::FeatureId::MaxPairMass.hist_range();
+    let w = (hi - lo) / bins as f32;
+    let peak_mass = lo + (peak_bin as f32 + 0.5) * w;
+    println!("selected-mass peak at ~{peak_mass:.0} GeV (expect ~91)");
+    assert!((peak_mass - 91.2).abs() < 10.0);
+
+    cluster.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

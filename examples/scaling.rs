@@ -1,0 +1,88 @@
+//! Scaling study: grid-brick vs the traditional central-server pattern
+//! as the cluster grows (the paper's core scalability claim, §4:
+//! "scalability ... is just a matter of adding more Grid nodes").
+//!
+//! Uses the calibrated DES so cluster sizes up to 32 nodes sweep in
+//! milliseconds; prints makespan, leader-NIC bytes, and utilisation per
+//! policy × cluster size. Expected shape: locality scales with node
+//! count until the serialized JSE staging dominates, while central
+//! flattens early on the leader's NIC — and the paper's §7 "load
+//! balancing" policy recovers most of locality's loss on heterogeneous
+//! clusters.
+//!
+//! Run: `cargo run --release --example scaling`
+
+use geps::netsim::{Link, Topology};
+use geps::scheduler::Policy;
+use geps::sim::{Scenario, ScenarioConfig};
+use geps::util::bench::print_table;
+use geps::util::ByteSize;
+
+fn main() {
+    // homogeneous scaling
+    let mut rows = Vec::new();
+    for &nodes in &[1usize, 2, 4, 8, 16, 32] {
+        for (policy, par_stage) in [
+            (Policy::Locality, false),
+            (Policy::Locality, true),
+            (Policy::Central, false),
+        ] {
+            let mut cfg = ScenarioConfig::paper_defaults(
+                Topology::lan_cluster(nodes, Link::lan_fast_ethernet()),
+                policy,
+                16_000,
+            );
+            cfg.events_per_brick = 500;
+            cfg.raw_at_leader = false; // grid-brick placement
+            cfg.stage_parallel = par_stage; // §7 extension toggle
+            let r = Scenario::run(cfg);
+            let name = if par_stage {
+                format!("{}+par-stage", policy.name())
+            } else {
+                policy.name().to_string()
+            };
+            rows.push(vec![
+                nodes.to_string(),
+                name,
+                format!("{:.0}", r.makespan_s),
+                ByteSize(r.raw_bytes_moved).to_string(),
+                format!("{:.0}%", r.utilization() * 100.0),
+            ]);
+        }
+    }
+    print_table(
+        "scaling: 16k events (16 GB), fast Ethernet",
+        &["nodes", "policy", "makespan(s)", "raw moved", "util"],
+        &rows,
+    );
+
+    // heterogeneous cluster: the paper's §7 "submit more work to the
+    // best nodes"
+    let mut rows = Vec::new();
+    for policy in [Policy::Locality, Policy::Balanced, Policy::Proof] {
+        let mut cfg = ScenarioConfig::paper_defaults(
+            Topology::lan_cluster(8, Link::lan_fast_ethernet()),
+            policy,
+            16_000,
+        );
+        cfg.events_per_brick = 500;
+        cfg.raw_at_leader = false;
+        for (i, speed) in
+            [1.0, 1.0, 0.5, 0.5, 0.25, 0.25, 2.0, 2.0].iter().enumerate()
+        {
+            cfg.speeds.insert(format!("node{i}"), *speed);
+        }
+        let r = Scenario::run(cfg);
+        rows.push(vec![
+            policy.name().to_string(),
+            format!("{:.0}", r.makespan_s),
+            ByteSize(r.raw_bytes_moved).to_string(),
+            format!("{:.0}%", r.utilization() * 100.0),
+        ]);
+    }
+    print_table(
+        "heterogeneous 8-node cluster (speeds 0.25-2.0), 16k events",
+        &["policy", "makespan(s)", "raw moved", "util"],
+        &rows,
+    );
+}

@@ -1,0 +1,124 @@
+"""AOT lowering: JAX/Pallas programs -> HLO *text* artifacts for rust.
+
+HLO text (NOT ``lowered.compile().serialize()`` and NOT the proto bytes):
+the image's xla_extension 0.5.1 rejects jax>=0.5 protos whose instruction
+ids exceed INT_MAX; ``HloModuleProto::from_text_file`` reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Writes, per program in model.PROGRAMS:
+    artifacts/<name>.hlo.txt
+plus artifacts/manifest.json describing shapes so the rust runtime can
+assemble input literals without guessing.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs after this point; the rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(name: str):
+    fn, argspecs = model.PROGRAMS[name]
+    args = [jax.ShapeDtypeStruct(shape, dtype) for shape, dtype in argspecs]
+    return jax.jit(fn).lower(*args)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--programs", nargs="*", default=list(model.PROGRAMS),
+                    help="subset of programs to lower")
+    ap.add_argument("--block-sweep", action="store_true",
+                    help="also lower features variants with different "
+                         "Pallas block sizes (L1 perf ablation)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "batch": model.BATCH,
+        "max_tracks": model.MAX_TRACKS,
+        "num_features": model.NUM_FEATURES,
+        "hist_bins": model.HIST_BINS,
+        "feature_names": list(model.__dict__["ref"].FEATURES)
+        if hasattr(model, "ref") else [],
+        "programs": {},
+    }
+    # model imports ref via kernels; fetch feature names robustly
+    from .kernels import ref as _ref
+    manifest["feature_names"] = list(_ref.FEATURES)
+
+    for name in args.programs:
+        lowered = lower_program(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, argspecs = model.PROGRAMS[name]
+        manifest["programs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(shape), "dtype": str(jnp.dtype(dtype))}
+                for shape, dtype in argspecs
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    if args.block_sweep:
+        from .kernels import event_filter
+
+        argspecs = model.PROGRAMS["features"][1]
+        ex_args = [jax.ShapeDtypeStruct(shape, dtype)
+                   for shape, dtype in argspecs]
+        for bb in [8, 16, 32, 64, 128, 256]:
+            def fn(tracks, mask, calib, _bb=bb):
+                return (event_filter.event_features(
+                    tracks, mask, calib, block_b=_bb),)
+            name = f"features_b{bb}"
+            text = to_hlo_text(jax.jit(fn).lower(*ex_args))
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["programs"][name] = {
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"shape": list(shape), "dtype": str(jnp.dtype(dtype))}
+                    for shape, dtype in argspecs
+                ],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+            print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest -> {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

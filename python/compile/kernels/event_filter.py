@@ -1,0 +1,167 @@
+"""L1 Pallas kernel: the GEPS event-filter/calibration hot spot.
+
+The paper's per-event ROOT loop (§4.1: calibrate every track, scrutinise
+events one by one) is restructured here as a single fused Pallas kernel over
+a *block of events*:
+
+  1. calibration matmul            (B_blk*T, 4) @ (4, 4)^T   -> MXU
+  2. per-track kinematics          pt, |p|, eta               -> VPU
+  3. pairwise invariant mass       (T, T) per event           -> VPU
+  4. per-event feature reductions  8 features                 -> VPU
+
+Everything happens in one VMEM residency: the track block is read from HBM
+once and only the (B_blk, F) feature slab is written back. BlockSpec tiles
+over the batch dimension; T (max tracks) and F are compile-time constants.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the 2003 paper is
+CPU-era so there is no threadblock structure to port. The insight we keep is
+*process events where they live, touch each byte once*; in kernel terms that
+becomes: stream event blocks HBM->VMEM, fuse calibration+features so raw
+tracks are never re-read. interpret=True everywhere (CPU PJRT cannot run
+Mosaic custom-calls); the real-TPU VMEM/MXU estimate lives in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NUM_FEATURES = ref.NUM_FEATURES
+_EPS = 1e-6
+
+# Events per VMEM block. Chosen by the block-size sweep in
+# examples/l1_perf.rs (EXPERIMENTS.md §Perf): 64 events x 32 tracks keeps
+# the pairwise scratch at ~0.6 MiB VMEM (far under the ~16 MiB/core
+# budget) and maximises lowered-graph throughput.
+DEFAULT_BLOCK_B = 64
+
+
+def _features_kernel(tracks_ref, mask_ref, calib_ref, out_ref):
+    """Fused calibrate+features over one event block.
+
+    tracks_ref: (B_blk, T, 4), mask_ref: (B_blk, T), calib_ref: (4, 4),
+    out_ref: (B_blk, F).
+    """
+    tracks = tracks_ref[...]
+    m = mask_ref[...]
+    calib = calib_ref[...]
+    b_blk, t, _ = tracks.shape
+
+    # (1) calibration matmul -- flatten tracks so it is a single GEMM the
+    # MXU can chew on rather than B_blk tiny matmuls.
+    flat = tracks.reshape(b_blk * t, 4)
+    p = jnp.dot(flat, calib.T, preferred_element_type=jnp.float32)
+    p = p.reshape(b_blk, t, 4)
+
+    e = p[..., 0] * m
+    px = p[..., 1] * m
+    py = p[..., 2] * m
+    pz = p[..., 3] * m
+
+    # (2) per-track kinematics
+    pt = jnp.sqrt(px * px + py * py + _EPS)
+    pmag = jnp.sqrt(px * px + py * py + pz * pz + _EPS)
+
+    n_tracks = jnp.sum(m, axis=1)
+    sum_pt = jnp.sum(pt * m, axis=1)
+    max_pt = jnp.max(pt * m, axis=1)
+
+    sum_px = jnp.sum(px, axis=1)
+    sum_py = jnp.sum(py, axis=1)
+    met = jnp.sqrt(sum_px * sum_px + sum_py * sum_py + _EPS)
+
+    sum_e = jnp.sum(e, axis=1)
+    sum_pz = jnp.sum(pz, axis=1)
+    m2 = sum_e * sum_e - sum_px * sum_px - sum_py * sum_py - sum_pz * sum_pz
+    total_mass = jnp.sqrt(jnp.maximum(m2, 0.0) + _EPS)
+
+    # (3) pairwise invariant mass, (B_blk, T, T) scratch in VMEM.
+    pe = e[:, :, None] + e[:, None, :]
+    px2 = px[:, :, None] + px[:, None, :]
+    py2 = py[:, :, None] + py[:, None, :]
+    pz2 = pz[:, :, None] + pz[:, None, :]
+    pair_m2 = pe * pe - px2 * px2 - py2 * py2 - pz2 * pz2
+    pair_valid = m[:, :, None] * m[:, None, :]
+    eye = jnp.eye(t, dtype=tracks.dtype)
+    pair_valid = pair_valid * (1.0 - eye)[None, :, :]
+    pair_m2 = jnp.maximum(pair_m2, 0.0) * pair_valid
+    max_pair_mass = jnp.sqrt(jnp.max(pair_m2, axis=(1, 2)) + _EPS)
+
+    frac = jnp.clip(pz / (pmag + _EPS), -1.0 + 1e-6, 1.0 - 1e-6)
+    eta = jnp.arctanh(frac)
+    max_abs_eta = jnp.max(jnp.abs(eta) * m, axis=1)
+
+    ht_frac = jnp.sum(jnp.abs(pz) * m, axis=1) / (
+        jnp.sum(pmag * m, axis=1) + _EPS
+    )
+
+    # (4) feature slab write-back
+    out_ref[...] = jnp.stack(
+        [n_tracks, sum_pt, max_pt, met, total_mass, max_pair_mass,
+         max_abs_eta, ht_frac],
+        axis=1,
+    )
+
+
+def _calibrate_kernel(tracks_ref, mask_ref, calib_ref, out_ref):
+    """Calibrated-tree kernel (the paper's 'store result in a new tree')."""
+    tracks = tracks_ref[...]
+    m = mask_ref[...]
+    calib = calib_ref[...]
+    b_blk, t, _ = tracks.shape
+    flat = tracks.reshape(b_blk * t, 4)
+    p = jnp.dot(flat, calib.T, preferred_element_type=jnp.float32)
+    out_ref[...] = p.reshape(b_blk, t, 4) * m[..., None]
+
+
+def _block_b(batch: int, requested: int) -> int:
+    """Largest divisor of ``batch`` not exceeding ``requested``."""
+    bb = min(requested, batch)
+    while batch % bb != 0:
+        bb -= 1
+    return bb
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def event_features(tracks, mask, calib, *, block_b: int = DEFAULT_BLOCK_B):
+    """Pallas entry point: (B,T,4),(B,T),(4,4) -> (B,F) features."""
+    b, t, _ = tracks.shape
+    bb = _block_b(b, block_b)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _features_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, t, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, NUM_FEATURES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, NUM_FEATURES), jnp.float32),
+        interpret=True,
+    )(tracks, mask, calib)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def calibrated_tracks(tracks, mask, calib, *, block_b: int = DEFAULT_BLOCK_B):
+    """Pallas entry point: calibrated, mask-zeroed tracks (B,T,4)."""
+    b, t, _ = tracks.shape
+    bb = _block_b(b, block_b)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _calibrate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, t, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, t), lambda i: (i, 0)),
+            pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, t, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, 4), jnp.float32),
+        interpret=True,
+    )(tracks, mask, calib)

@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracle for the GEPS event-filter kernel.
+
+This is the correctness ground truth: the Pallas kernel in
+``event_filter.py`` must match these functions to float tolerance for every
+shape/seed hypothesis generates. It mirrors the ROOT-era filter/calibration
+loop of the paper (§4.1) as a batched tensor program:
+
+  tracks  : (B, T, 4) f32  -- per-event padded track 4-vectors (E, px, py, pz)
+  mask    : (B, T)   f32   -- 1.0 for a real track, 0.0 for padding
+  calib   : (4, 4)   f32   -- detector calibration matrix (energy scale +
+                              alignment rotation), applied to every track
+
+Outputs per event a fixed feature vector (B, F) consumed by the rust-side
+filter-expression evaluator (L3), so the HLO stays static while user filter
+expressions vary freely.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Feature vector layout — keep in sync with rust/src/events/features.rs and
+# kernels/event_filter.py.
+FEATURES = (
+    "n_tracks",      # 0: number of valid tracks
+    "sum_pt",        # 1: scalar sum of calibrated track pT
+    "max_pt",        # 2: leading-track pT
+    "met",           # 3: missing transverse energy proxy |sum (px, py)|
+    "total_mass",    # 4: invariant mass of the full event 4-vector sum
+    "max_pair_mass", # 5: max invariant mass over all valid track pairs
+    "max_abs_eta",   # 6: max |pseudorapidity| over valid tracks
+    "ht_frac",       # 7: longitudinal fraction sum|pz| / sum|p|
+)
+NUM_FEATURES = len(FEATURES)
+
+_EPS = 1e-6
+
+
+def calibrate(tracks: jnp.ndarray, calib: jnp.ndarray) -> jnp.ndarray:
+    """Apply the 4x4 calibration matrix to every track 4-vector.
+
+    (B, T, 4) @ (4, 4)^T -> (B, T, 4). This is the MXU-shaped hot spot.
+    """
+    return jnp.einsum("btk,jk->btj", tracks, calib)
+
+
+def event_features(
+    tracks: jnp.ndarray, mask: jnp.ndarray, calib: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference per-event feature computation. Returns (B, F) f32."""
+    p = calibrate(tracks, calib)  # (B, T, 4)
+    m = mask  # (B, T)
+    e = p[..., 0] * m
+    px = p[..., 1] * m
+    py = p[..., 2] * m
+    pz = p[..., 3] * m
+
+    pt = jnp.sqrt(px * px + py * py + _EPS)  # (B, T)
+    pmag = jnp.sqrt(px * px + py * py + pz * pz + _EPS)
+
+    n_tracks = jnp.sum(m, axis=1)
+    sum_pt = jnp.sum(pt * m, axis=1)
+    max_pt = jnp.max(pt * m, axis=1)
+
+    sum_px = jnp.sum(px, axis=1)
+    sum_py = jnp.sum(py, axis=1)
+    met = jnp.sqrt(sum_px * sum_px + sum_py * sum_py + _EPS)
+
+    sum_e = jnp.sum(e, axis=1)
+    sum_pz = jnp.sum(pz, axis=1)
+    m2 = sum_e * sum_e - sum_px * sum_px - sum_py * sum_py - sum_pz * sum_pz
+    total_mass = jnp.sqrt(jnp.maximum(m2, 0.0) + _EPS)
+
+    # Pairwise invariant mass: s_ij = (p_i + p_j), m2_ij = E^2 - |p|^2.
+    pe = e[:, :, None] + e[:, None, :]
+    px2 = px[:, :, None] + px[:, None, :]
+    py2 = py[:, :, None] + py[:, None, :]
+    pz2 = pz[:, :, None] + pz[:, None, :]
+    pair_m2 = pe * pe - px2 * px2 - py2 * py2 - pz2 * pz2  # (B, T, T)
+    pair_valid = m[:, :, None] * m[:, None, :]
+    # zero the diagonal (a track paired with itself is not a pair)
+    t = m.shape[1]
+    eye = jnp.eye(t, dtype=tracks.dtype)
+    pair_valid = pair_valid * (1.0 - eye)[None, :, :]
+    pair_m2 = jnp.maximum(pair_m2, 0.0) * pair_valid
+    max_pair_mass = jnp.sqrt(jnp.max(pair_m2, axis=(1, 2)) + _EPS)
+
+    # Pseudorapidity eta = atanh(pz / |p|), guarded; only valid tracks count.
+    frac = jnp.clip(pz / (pmag + _EPS), -1.0 + 1e-6, 1.0 - 1e-6)
+    eta = jnp.arctanh(frac)
+    max_abs_eta = jnp.max(jnp.abs(eta) * m, axis=1)
+
+    ht_frac = jnp.sum(jnp.abs(pz) * m, axis=1) / (jnp.sum(pmag * m, axis=1) + _EPS)
+
+    return jnp.stack(
+        [n_tracks, sum_pt, max_pt, met, total_mass, max_pair_mass,
+         max_abs_eta, ht_frac],
+        axis=1,
+    )
+
+
+def calibrated_tracks(
+    tracks: jnp.ndarray, mask: jnp.ndarray, calib: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference for the 'store the calibrated tree' path (§4.1): returns the
+    calibrated, mask-zeroed track tensor (B, T, 4)."""
+    return calibrate(tracks, calib) * mask[..., None]

@@ -1,0 +1,115 @@
+"""L2: the GEPS event-processing compute graph (build-time JAX).
+
+This is the analogue of the paper's ROOT C++ application (§4.1): the full
+per-batch pipeline a grid node runs over each brick of raw events. It calls
+the L1 Pallas kernels and is lowered once by ``aot.py`` into HLO text that
+the rust runtime (rust/src/runtime/) loads and executes on the request path.
+
+Three exported programs (one HLO artifact each):
+
+  features   (B,T,4),(B,T),(4,4)         -> (B,F)
+      the filter front-end: calibrate + per-event physics features.
+  calibrate  (B,T,4),(B,T),(4,4)         -> (B,T,4)
+      the 'write the calibrated tree' path.
+  histogram  (B,F),(B,),(F,2)            -> (F,NBINS)
+      per-feature histogram of *selected* events (selection mask computed in
+      rust from the user's filter expression), merged across nodes by L3 —
+      this is what the paper's merge step visualises.
+
+Shapes are static (PJRT AOT): B=BATCH events per executable call, T=MAX_TRACKS
+padded tracks. Rust chunks bricks into B-sized batches and pads the tail with
+mask=0 events; padding is exact, not approximate (mask-zeroed tracks
+contribute nothing to any feature).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import event_filter, ref
+
+# Static shapes baked into the AOT artifacts; rust reads them from
+# artifacts/manifest.json. Keep in sync with rust/src/runtime/manifest.rs.
+BATCH = 256          # events per executable invocation
+MAX_TRACKS = 32      # padded tracks per event
+NUM_FEATURES = ref.NUM_FEATURES
+HIST_BINS = 64
+
+
+def features(tracks, mask, calib):
+    """Filter front-end: per-event feature vector via the Pallas kernel."""
+    return (event_filter.event_features(tracks, mask, calib),)
+
+
+def features_ref(tracks, mask, calib):
+    """Pure-jnp variant (no Pallas) — AOT'd too, used by the runtime's
+    self-check mode and by the L2 fusion benchmark."""
+    return (ref.event_features(tracks, mask, calib),)
+
+
+def calibrate(tracks, mask, calib):
+    """Calibrated-tree output path."""
+    return (event_filter.calibrated_tracks(tracks, mask, calib),)
+
+
+def histogram(feats, selected, ranges):
+    """Histogram selected events per feature.
+
+    feats    : (B, F)  feature matrix from ``features``
+    selected : (B,)    1.0 where the rust filter expression accepted the event
+    ranges   : (F, 2)  [lo, hi) histogram range per feature
+
+    Returns (F, HIST_BINS) f32 counts. Merging across nodes is elementwise
+    addition, which L3 does in rust.
+    """
+    b, f = feats.shape
+    lo = ranges[:, 0][None, :]        # (1, F)
+    hi = ranges[:, 1][None, :]
+    width = (hi - lo) / HIST_BINS
+    idx = jnp.floor((feats - lo) / jnp.maximum(width, 1e-9))
+    idx = jnp.clip(idx, 0, HIST_BINS - 1).astype(jnp.int32)   # (B, F)
+    onehot = jax.nn.one_hot(idx, HIST_BINS, dtype=jnp.float32)  # (B, F, NBINS)
+    counts = jnp.einsum("bfn,b->fn", onehot, selected)
+    return (counts,)
+
+
+# jax.nn needs the top-level jax import; keep it at the bottom so the module
+# reads data-flow-first.
+import jax  # noqa: E402
+
+
+PROGRAMS = {
+    # name -> (fn, example-arg shapes)
+    "features": (
+        features,
+        (
+            ((BATCH, MAX_TRACKS, 4), jnp.float32),
+            ((BATCH, MAX_TRACKS), jnp.float32),
+            ((4, 4), jnp.float32),
+        ),
+    ),
+    "features_ref": (
+        features_ref,
+        (
+            ((BATCH, MAX_TRACKS, 4), jnp.float32),
+            ((BATCH, MAX_TRACKS), jnp.float32),
+            ((4, 4), jnp.float32),
+        ),
+    ),
+    "calibrate": (
+        calibrate,
+        (
+            ((BATCH, MAX_TRACKS, 4), jnp.float32),
+            ((BATCH, MAX_TRACKS), jnp.float32),
+            ((4, 4), jnp.float32),
+        ),
+    ),
+    "histogram": (
+        histogram,
+        (
+            ((BATCH, NUM_FEATURES), jnp.float32),
+            ((BATCH,), jnp.float32),
+            ((NUM_FEATURES, 2), jnp.float32),
+        ),
+    ),
+}

@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root: the compile/
+package resolves relative to this directory."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

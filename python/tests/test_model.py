@@ -1,0 +1,82 @@
+"""L2 model tests: program shapes, histogram semantics, Pallas/ref parity
+at the full model batch size."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernel import make_events, make_calib
+
+
+def test_program_registry_shapes():
+    for name, (fn, argspecs) in model.PROGRAMS.items():
+        args = [jax.ShapeDtypeStruct(shape, dtype) for shape, dtype in argspecs]
+        out = jax.eval_shape(fn, *args)
+        assert isinstance(out, tuple) and len(out) == 1, name
+
+
+def test_features_full_batch_matches_ref():
+    tracks, mask = make_events(model.BATCH, model.MAX_TRACKS, seed=42)
+    calib = make_calib(42)
+    (got,) = model.features(tracks, mask, calib)
+    want = ref.event_features(tracks, mask, calib)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    assert got.shape == (model.BATCH, model.NUM_FEATURES)
+
+
+def test_features_ref_program_agrees_with_pallas_program():
+    tracks, mask = make_events(model.BATCH, model.MAX_TRACKS, seed=9)
+    calib = make_calib(9)
+    (pallas_out,) = model.features(tracks, mask, calib)
+    (ref_out,) = model.features_ref(tracks, mask, calib)
+    np.testing.assert_allclose(pallas_out, ref_out, rtol=2e-5, atol=2e-5)
+
+
+def test_histogram_counts_and_range():
+    b, f = model.BATCH, model.NUM_FEATURES
+    rng = np.random.default_rng(0)
+    feats = rng.uniform(0, 10, size=(b, f)).astype(np.float32)
+    selected = (rng.uniform(size=b) < 0.5).astype(np.float32)
+    ranges = np.tile(np.array([[0.0, 10.0]], dtype=np.float32), (f, 1))
+    (counts,) = model.histogram(
+        jnp.asarray(feats), jnp.asarray(selected), jnp.asarray(ranges))
+    counts = np.asarray(counts)
+    assert counts.shape == (f, model.HIST_BINS)
+    # every selected event lands in exactly one bin per feature
+    np.testing.assert_allclose(counts.sum(axis=1), selected.sum() * np.ones(f))
+
+
+def test_histogram_out_of_range_clamps():
+    b, f = model.BATCH, model.NUM_FEATURES
+    feats = np.full((b, f), 1e9, dtype=np.float32)   # way past hi
+    selected = np.ones(b, dtype=np.float32)
+    ranges = np.tile(np.array([[0.0, 1.0]], dtype=np.float32), (f, 1))
+    (counts,) = model.histogram(
+        jnp.asarray(feats), jnp.asarray(selected), jnp.asarray(ranges))
+    counts = np.asarray(counts)
+    np.testing.assert_allclose(counts[:, -1], b * np.ones(f))
+
+
+def test_histogram_none_selected_is_zero():
+    b, f = model.BATCH, model.NUM_FEATURES
+    feats = np.zeros((b, f), dtype=np.float32)
+    ranges = np.tile(np.array([[0.0, 1.0]], dtype=np.float32), (f, 1))
+    (counts,) = model.histogram(
+        jnp.asarray(feats), jnp.zeros(b, dtype=jnp.float32),
+        jnp.asarray(ranges))
+    np.testing.assert_allclose(np.asarray(counts), 0.0)
+
+
+def test_calibrate_program_shape():
+    tracks, mask = make_events(model.BATCH, model.MAX_TRACKS, seed=5)
+    calib = make_calib(5)
+    (out,) = model.calibrate(tracks, mask, calib)
+    assert out.shape == (model.BATCH, model.MAX_TRACKS, 4)
+    # padded slots are zeroed
+    np.testing.assert_allclose(
+        np.asarray(out) * (1 - np.asarray(mask))[..., None], 0.0, atol=1e-6)

@@ -1,0 +1,90 @@
+//! Bench: **Ext-B** — §7 "error handling and fault-tolerance / recover
+//! mechanisms / redundancy": kill a node mid-job and measure completion,
+//! makespan inflation, and data loss across replication factors and
+//! policies.
+//!
+//! Shape targets: RF=1 loses the dead node's sole-held bricks (the
+//! paper's "biggest disadvantage"); RF>=2 completes everything with a
+//! modest makespan penalty; PROOF-style packet reprocessing loses
+//! nothing that is still readable and re-spreads the dead node's packets.
+
+use geps::netsim::{Link, Topology};
+use geps::scheduler::Policy;
+use geps::sim::{FailureSpec, Scenario, ScenarioConfig};
+use geps::util::bench::print_table;
+
+fn run(policy: Policy, rf: usize, kill_at_frac: f64) -> Vec<String> {
+    let mut cfg = ScenarioConfig::paper_defaults(
+        Topology::lan_cluster(4, Link::lan_fast_ethernet()),
+        policy,
+        4000,
+    );
+    cfg.events_per_brick = 250;
+    cfg.replication = rf;
+    cfg.raw_at_leader = false;
+
+    // healthy baseline for the makespan penalty
+    let healthy = Scenario::run(cfg.clone());
+
+    cfg.failures = vec![FailureSpec {
+        node: "node1".into(),
+        at_s: healthy.makespan_s * kill_at_frac,
+    }];
+    let r = Scenario::run(cfg);
+    vec![
+        policy.name().to_string(),
+        rf.to_string(),
+        format!("{:.0}", healthy.makespan_s),
+        format!("{:.0}", r.makespan_s),
+        format!("{:+.0}%", (r.makespan_s / healthy.makespan_s - 1.0) * 100.0),
+        format!("{}/{}", r.events_processed, 4000),
+        r.lost_bricks.to_string(),
+        if r.completed { "yes" } else { "NO" }.to_string(),
+    ]
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for policy in [Policy::Locality, Policy::Proof, Policy::Gfarm] {
+        for rf in [1usize, 2, 3] {
+            rows.push(run(policy, rf, 0.5));
+        }
+    }
+    print_table(
+        "Ext-B: node killed at 50% of healthy makespan (4 nodes, 4000 events)",
+        &[
+            "policy",
+            "RF",
+            "healthy(s)",
+            "with-failure(s)",
+            "penalty",
+            "events",
+            "lost bricks",
+            "done",
+        ],
+        &rows,
+    );
+
+    // kill-time sweep at RF=2, locality
+    let mut rows = Vec::new();
+    for frac in [0.1f64, 0.25, 0.5, 0.75, 0.9] {
+        let mut r = run(Policy::Locality, 2, frac);
+        r.remove(0);
+        r.remove(0);
+        r.insert(0, format!("{:.0}%", frac * 100.0));
+        rows.push(r);
+    }
+    print_table(
+        "Ext-B: kill-time sweep (locality, RF=2)",
+        &[
+            "killed at",
+            "healthy(s)",
+            "with-failure(s)",
+            "penalty",
+            "events",
+            "lost bricks",
+            "done",
+        ],
+        &rows,
+    );
+}

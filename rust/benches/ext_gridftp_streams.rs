@@ -1,0 +1,68 @@
+//! Bench: **Ext-A** — the paper's §7 GridFTP plan: "multiple TCP streams
+//! and proper TCP buffer sizes are very important to obtaining better
+//! performance in TCP wide area links" (ref [12]).
+//!
+//! Sweeps parallel streams × link type for a 100 MB transfer and for a
+//! whole GEPS job over a WAN-separated site. Shape targets (from [12]):
+//! near-linear stream scaling on the window-starved WAN until the raw
+//! path saturates; negligible gain on the LAN; a tuned window matching
+//! multi-stream performance.
+
+use geps::netsim::{transfer_time, Link, Topology, TransferSpec};
+use geps::scheduler::Policy;
+use geps::sim::{Scenario, ScenarioConfig};
+use geps::util::bench::print_table;
+use geps::util::ByteSize;
+
+fn main() {
+    let links: [(&str, Link); 4] = [
+        ("LAN 100Mb/s", Link::lan_fast_ethernet()),
+        ("LAN 1Gb/s", Link::lan_gigabit()),
+        ("WAN 64KiB win", Link::wan_default_window()),
+        ("WAN tuned win", Link::wan_tuned_window()),
+    ];
+    let mut rows = Vec::new();
+    for (name, link) in &links {
+        let base = transfer_time(
+            link,
+            &TransferSpec { bytes: ByteSize::mb(100), streams: 1 },
+        );
+        let mut row = vec![name.to_string(), format!("{base:.1}s")];
+        for streams in [2u32, 4, 8, 16] {
+            let t = transfer_time(
+                link,
+                &TransferSpec { bytes: ByteSize::mb(100), streams },
+            );
+            row.push(format!("{:.2}x", base / t));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Ext-A: 100 MB transfer — speedup vs parallel TCP streams",
+        &["link", "1 stream", "2", "4", "8", "16"],
+        &rows,
+    );
+
+    // whole-job effect: a GEPS site split across a WAN (the §3 concern),
+    // central staging from the far side
+    let mut rows = Vec::new();
+    for streams in [1u32, 2, 4, 8, 16] {
+        let mut topo = Topology::lan_cluster(2, Link::lan_fast_ethernet());
+        topo.set_link("jse", "node0", Link::wan_default_window());
+        topo.set_link("jse", "node1", Link::wan_default_window());
+        let mut cfg =
+            ScenarioConfig::paper_defaults(topo, Policy::Central, 2000);
+        cfg.streams = streams;
+        let r = Scenario::run(cfg);
+        rows.push(vec![
+            streams.to_string(),
+            format!("{:.0}", r.makespan_s),
+            format!("{:.1} GB", r.raw_bytes_moved as f64 / 1e9),
+        ]);
+    }
+    print_table(
+        "Ext-A: whole job, central staging across a WAN (2000 events)",
+        &["streams", "makespan(s)", "raw moved"],
+        &rows,
+    );
+}

@@ -1,0 +1,67 @@
+//! Bench: **Fig 7** — time cost vs raw-event-file size, GEPS parallel
+//! (gandalf+hobbit) vs hobbit-only, plus the §6 granularity discussion
+//! ("different granularities of event data will dramatically affect the
+//! overall performance").
+//!
+//! Regenerates the paper's series on the calibrated DES. Shape targets:
+//! crossover near 2000 events; GEPS gains modest (1.2–1.6×) above it and
+//! growing with N; granularity sweep shows small-brick overhead.
+
+use geps::sim::{Scenario, ScenarioConfig};
+use geps::util::bench::{print_table, time_once};
+
+fn main() {
+    let groups = [
+        250usize, 500, 750, 1000, 1500, 2000, 2500, 3000, 4000, 6000, 8000,
+        12000, 16000,
+    ];
+    let reps = 10; // 13 groups x 10 reps = 130 executions, as in §6
+
+    let mut rows = Vec::new();
+    let (_, wall) = time_once(|| {
+        for &n in &groups {
+            let mut single = 0.0;
+            let mut geps = 0.0;
+            for _ in 0..reps {
+                single += Scenario::run(ScenarioConfig::fig7_hobbit_only(n))
+                    .makespan_s;
+                geps +=
+                    Scenario::run(ScenarioConfig::fig7_geps(n)).makespan_s;
+            }
+            single /= reps as f64;
+            geps /= reps as f64;
+            rows.push(vec![
+                n.to_string(),
+                format!("{single:.1}"),
+                format!("{geps:.1}"),
+                format!("{:.2}x", single / geps),
+                (if geps < single { "GEPS" } else { "hobbit" }).to_string(),
+            ]);
+        }
+    });
+    print_table(
+        "Fig 7: time cost (s) vs number of events (130 executions)",
+        &["events", "hobbit-only", "GEPS(2 nodes)", "speedup", "winner"],
+        &rows,
+    );
+    println!("(whole sweep simulated in {wall:.2}s wall)");
+
+    // §6 granularity: same 4000-event file in different brick sizes,
+    // prototype (staged) mode where transfer setup costs repeat per brick
+    let mut rows = Vec::new();
+    for epb in [50usize, 125, 250, 500, 1000, 2000] {
+        let mut cfg = ScenarioConfig::fig7_geps_staged(4000);
+        cfg.events_per_brick = epb;
+        let r = Scenario::run(cfg);
+        rows.push(vec![
+            epb.to_string(),
+            4000usize.div_ceil(epb).to_string(),
+            format!("{:.1}", r.makespan_s),
+        ]);
+    }
+    print_table(
+        "granularity (§6): 4000 events, staged mode — smaller files pay more overhead",
+        &["events/brick", "bricks", "makespan(s)"],
+        &rows,
+    );
+}

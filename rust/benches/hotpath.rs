@@ -1,0 +1,201 @@
+//! Bench: L3 hot paths — the coordinator must never be the bottleneck
+//! (DESIGN.md §Perf targets): scheduler decisions, catalogue ops, wire
+//! codec, filter evaluation, brick encode/decode, DES event rate,
+//! histogram merge. Used by the §Perf optimization loop; before/after
+//! numbers live in EXPERIMENTS.md.
+
+use geps::brick::{codec, BrickFile, BrickId, Codec};
+use geps::catalog::Catalog;
+use geps::events::{EventBatch, EventGenerator, GeneratorConfig};
+use geps::filterexpr;
+use geps::scheduler::{BrickState, NodeState, Policy, SchedCtx};
+use geps::sim::Engine as SimEngine;
+use geps::util::bench::{bench, print_table};
+use geps::wire::Message;
+
+fn sched_ctx(nodes: usize, bricks: usize) -> SchedCtx {
+    SchedCtx {
+        nodes: (0..nodes)
+            .map(|i| NodeState {
+                name: format!("node{i}"),
+                speed: 1.0,
+                slots: 1,
+                up: true,
+            })
+            .collect(),
+        bricks: (0..bricks)
+            .map(|i| BrickState {
+                id: BrickId::new(1, i as u32),
+                n_events: 500,
+                bytes: 500 << 20,
+                holders: vec![format!("node{}", i % nodes)],
+            })
+            .collect(),
+        leader: "jse".into(),
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut push = |name: &str, unit: &str, per_iter: f64, s: geps::util::bench::Stats| {
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2} us", s.mean_ns / 1e3),
+            format!("{:.0} {unit}/s", s.throughput(per_iter)),
+        ]);
+    };
+
+    // scheduler: full drain of 1024 bricks over 16 nodes
+    let ctx = sched_ctx(16, 1024);
+    let s = bench(3, 30, || {
+        let mut sched = Policy::Locality.build(&ctx);
+        let mut n = 0;
+        loop {
+            let mut any = false;
+            for node in 0..16 {
+                if let Some(t) =
+                    sched.next_task(&format!("node{node}"), &ctx)
+                {
+                    sched.on_complete(&format!("node{node}"), &t, 1.0);
+                    n += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        assert_eq!(n, 1024);
+    });
+    push("scheduler drain (locality, 1024 tasks)", "decisions", 1024.0, s);
+
+    let s = bench(3, 30, || {
+        let mut sched = Policy::Proof.build(&ctx);
+        let mut n = 0;
+        while !sched.is_done() {
+            for node in 0..16 {
+                if let Some(t) =
+                    sched.next_task(&format!("node{node}"), &ctx)
+                {
+                    sched.on_complete(
+                        &format!("node{node}"),
+                        &t,
+                        t.n_events() as f64 / 1000.0,
+                    );
+                    n += 1;
+                }
+            }
+        }
+        std::hint::black_box(n);
+    });
+    push("scheduler drain (proof packets)", "packets", 1.0, s);
+
+    // catalogue: submit+poll+update cycle
+    let s = bench(3, 50, || {
+        let mut cat = Catalog::new();
+        let mut cursor = 0;
+        for i in 0..200 {
+            let id = cat.submit_job(1, "met > 1", "locality");
+            let (c, jobs) = cat.poll_new_jobs(cursor);
+            cursor = c;
+            assert_eq!(jobs.len(), 1);
+            cat.update_job(id, |j| {
+                j.status = geps::catalog::JobStatus::Done;
+                j.events_processed = i;
+            });
+        }
+    });
+    push("catalog submit+poll+update x200", "ops", 600.0, s);
+
+    // wire codec round-trip
+    let msg = Message::TaskDone {
+        job: 7,
+        brick: BrickId::new(2, 9),
+        range: (0, 512),
+        events_in: 512,
+        events_selected: 48,
+        result_bytes: 4800,
+        histogram: vec![0u8; 8 * 64 * 4],
+    };
+    let s = bench(100, 5000, || {
+        let enc = msg.encode();
+        let (dec, _) = Message::decode(&enc).unwrap();
+        std::hint::black_box(dec);
+    });
+    push("wire codec TaskDone round-trip (2KB hist)", "msgs", 1.0, s);
+
+    // filter expression over a feature matrix
+    let filter = filterexpr::compile(
+        "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20 || met > 50",
+    )
+    .unwrap();
+    let feats: Vec<f32> = (0..256 * 8).map(|i| (i % 97) as f32).collect();
+    let s = bench(100, 5000, || {
+        std::hint::black_box(filter.accept_batch(&feats, 256).len());
+    });
+    push("filter eval, 256-event batch", "events", 256.0, s);
+
+    // brick encode/decode (LZSS) of 500 events
+    let events = EventGenerator::new(GeneratorConfig::default(), 7).take(500);
+    let s = bench(3, 100, || {
+        let b = BrickFile::encode(BrickId::new(1, 0), &events, Codec::Lzss, 128);
+        let (_, dec) = BrickFile::decode(&b.bytes).unwrap();
+        assert_eq!(dec.len(), 500);
+    });
+    push("brick encode+decode 500 events (LZSS)", "events", 500.0, s);
+
+    // raw LZSS on a 1 MB event-like payload
+    let brick = BrickFile::encode(BrickId::new(1, 0), &events, Codec::Raw, 500);
+    let payload = &brick.bytes;
+    let s = bench(3, 50, || {
+        let c = codec::compress(payload);
+        std::hint::black_box(codec::decompress(&c, payload.len()).unwrap());
+    });
+    push(
+        "LZSS compress+decompress brick payload",
+        "MB",
+        payload.len() as f64 / 1e6,
+        s,
+    );
+
+    // batch packing (node executor inner loop)
+    let s = bench(10, 500, || {
+        std::hint::black_box(EventBatch::pack(&events, 256, 32));
+    });
+    push("EventBatch::pack 256x32", "events", 500.0, s);
+
+    // DES engine raw event rate
+    let s = bench(3, 30, || {
+        struct W {
+            n: u64,
+        }
+        fn tick(e: &mut SimEngine<W>, w: &mut W) {
+            w.n += 1;
+            if w.n < 100_000 {
+                e.schedule(0.001, tick);
+            }
+        }
+        let mut eng = SimEngine::new();
+        let mut w = W { n: 0 };
+        eng.schedule(0.001, tick);
+        eng.run(&mut w);
+        assert_eq!(w.n, 100_000);
+    });
+    push("DES engine 100k events", "sim-events", 100_000.0, s);
+
+    // histogram merge
+    let mut acc: Vec<f32> = vec![0.0; 8 * 64];
+    let raw: Vec<u8> = (0..8 * 64)
+        .flat_map(|_| 1.0f32.to_le_bytes())
+        .collect();
+    let s = bench(100, 5000, || {
+        geps::jse::merge_histogram(&mut acc, &raw);
+    });
+    push("histogram merge (8x64 bins)", "merges", 1.0, s);
+
+    print_table(
+        "L3 hot paths",
+        &["path", "mean latency", "throughput"],
+        &rows,
+    );
+}

@@ -1,0 +1,266 @@
+//! Byte codecs for the brick format: LEB128 varints and an LZSS-style
+//! compressor with hash-chain match finding. Event payloads are float-heavy
+//! but pattern-rich (repeated vertex indices, zero padding, similar
+//! exponents), so a byte-oriented LZ gets a useful ratio without external
+//! deps.
+//!
+//! Wire format of the compressed stream: a sequence of ops.
+//!   literal run : 0x00, varint len, bytes
+//!   match       : 0x01, varint len (>= MIN_MATCH), varint distance (>= 1)
+
+/// Append a u64 as LEB128.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read a LEB128 u64; returns (value, bytes_consumed).
+pub fn get_varint(data: &[u8]) -> Option<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0;
+    for (i, &b) in data.iter().enumerate() {
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+    }
+    None
+}
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 255;
+const WINDOW: usize = 1 << 16;
+const HASH_BITS: usize = 15;
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes(b[..4].try_into().unwrap());
+    ((v.wrapping_mul(2654435761)) >> (32 - HASH_BITS)) as usize
+}
+
+/// LZSS compress. Worst case output is input + ~input/128 overhead.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let n = input.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n == 0 {
+        return out;
+    }
+    // hash table of last position for each 4-byte prefix hash
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0;
+    let mut lit_start = 0;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize,
+                          input: &[u8]| {
+        let mut s = from;
+        while s < to {
+            let len = (to - s).min(4096);
+            out.push(0x00);
+            put_varint(out, len as u64);
+            out.extend_from_slice(&input[s..s + len]);
+            s += len;
+        }
+    };
+
+    // LZ4-style acceleration: every 32 consecutive match misses, grow the
+    // stride through incompressible regions — cuts hash work ~8x on random
+    // payloads (float-heavy event data) at negligible ratio cost.
+    let mut misses = 0usize;
+    while i + MIN_MATCH <= n {
+        let h = hash4(&input[i..]);
+        let cand = head[h];
+        head[h] = i;
+
+        let mut match_len = 0;
+        if cand != usize::MAX && i - cand <= WINDOW {
+            // cheap 4-byte prefilter before the byte loop
+            if input[cand..cand + 4] == input[i..i + 4] {
+                let max_len = (n - i).min(MAX_MATCH);
+                let mut l = 4;
+                while l < max_len && input[cand + l] == input[i + l] {
+                    l += 1;
+                }
+                match_len = l;
+            }
+        }
+
+        if match_len >= MIN_MATCH {
+            misses = 0;
+            flush_literals(&mut out, lit_start, i, input);
+            out.push(0x01);
+            put_varint(&mut out, match_len as u64);
+            put_varint(&mut out, (i - cand) as u64);
+            // index a few positions inside the match to keep the chain warm
+            let end = i + match_len;
+            let step = (match_len / 4).max(1);
+            let mut j = i + 1;
+            while j + MIN_MATCH <= end.min(n.saturating_sub(MIN_MATCH) + 1) {
+                head[hash4(&input[j..])] = j;
+                j += step;
+            }
+            i = end;
+            lit_start = i;
+        } else {
+            misses += 1;
+            i += 1 + (misses >> 4);
+        }
+    }
+    flush_literals(&mut out, lit_start, n, input);
+    out
+}
+
+/// Decompress; `expected_len` bounds allocation and validates the stream.
+pub fn decompress(data: &[u8], expected_len: usize) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0;
+    while i < data.len() {
+        let op = data[i];
+        i += 1;
+        match op {
+            0x00 => {
+                let (len, used) = get_varint(&data[i..])?;
+                i += used;
+                let len = len as usize;
+                if i + len > data.len() || out.len() + len > expected_len {
+                    return None;
+                }
+                out.extend_from_slice(&data[i..i + len]);
+                i += len;
+            }
+            0x01 => {
+                let (len, used) = get_varint(&data[i..])?;
+                i += used;
+                let (dist, used) = get_varint(&data[i..])?;
+                i += used;
+                let (len, dist) = (len as usize, dist as usize);
+                if dist == 0 || dist > out.len()
+                    || out.len() + len > expected_len
+                {
+                    return None;
+                }
+                let start = out.len() - dist;
+                // may self-overlap: copy byte-by-byte
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            _ => return None,
+        }
+    }
+    if out.len() == expected_len {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX];
+        for &v in &vals {
+            buf.clear();
+            put_varint(&mut buf, v);
+            let (got, used) = get_varint(&buf).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_truncated_fails() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 1 << 30);
+        assert!(get_varint(&buf[..buf.len() - 1]).is_none());
+        assert!(get_varint(&[]).is_none());
+    }
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).expect("decompress");
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abc");
+    }
+
+    #[test]
+    fn repetitive_compresses_well() {
+        let data: Vec<u8> =
+            b"eventeventevent".iter().cycle().take(10_000).copied().collect();
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 4, "{} vs {}", c.len(), data.len());
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn zeros_compress_extremely() {
+        let data = vec![0u8; 65536];
+        let c = compress(&data);
+        assert!(c.len() < 2048);
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn random_data_roundtrips() {
+        let mut rng = Rng::new(77);
+        for len in [1usize, 13, 256, 4096, 70000] {
+            let data: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn float_like_payload_roundtrips() {
+        let mut rng = Rng::new(3);
+        let mut data = Vec::new();
+        for _ in 0..5000 {
+            data.extend_from_slice(
+                &(rng.f32() * 100.0).to_le_bytes(),
+            );
+        }
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let data: Vec<u8> =
+            b"abcdabcdabcdabcd".iter().cycle().take(1000).copied().collect();
+        let mut c = compress(&data);
+        // bogus op code
+        c[0] = 0x7f;
+        assert!(decompress(&c, data.len()).is_none());
+        // wrong expected length
+        let c2 = compress(&data);
+        assert!(decompress(&c2, data.len() + 1).is_none());
+    }
+
+    #[test]
+    fn overlapping_match_decodes() {
+        // 'aaaa...' forces distance-1 overlapping copies
+        let data = vec![b'a'; 500];
+        roundtrip(&data);
+    }
+}

@@ -1,0 +1,435 @@
+//! Brick file format — the ROOT-tree analogue (§4.1: "the Root tree class
+//! is optimized to reduce storage space usage and enhance accession
+//! speed"). A brick is a paged, checksummed, optionally-compressed
+//! container of serialized events:
+//!
+//! ```text
+//! [header]     magic "GEPSBRK1" | version u16 | codec u8 | reserved u8
+//!              dataset u32 | seq u32 | n_events u64 | n_pages u32
+//! [page]*      n_events u32 | raw_len u32 | stored_len u32 |
+//!              xxhash64(stored bytes) u64 | stored bytes
+//! [trailer]    xxhash64 of everything before the trailer
+//! ```
+//!
+//! Every page is independently decodable (so nodes can stream-filter
+//! without loading whole bricks) and every page carries its own checksum —
+//! corruption is detected, which the replication layer (`replica`) turns
+//! into failover instead of wrong answers.
+
+use crate::brick::codec;
+use crate::brick::BrickId;
+use crate::events::model::{Event, Track, Vertex};
+use crate::util::xxhash64;
+
+const MAGIC: &[u8; 8] = b"GEPSBRK1";
+const VERSION: u16 = 1;
+const HASH_SEED: u64 = 0x6765_7073; // "geps"
+
+/// Per-page codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    Raw = 0,
+    Lzss = 1,
+}
+
+impl Codec {
+    fn from_u8(v: u8) -> Option<Codec> {
+        match v {
+            0 => Some(Codec::Raw),
+            1 => Some(Codec::Lzss),
+            _ => None,
+        }
+    }
+}
+
+/// Decoded brick metadata (header fields).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BrickMeta {
+    pub id: BrickId,
+    pub codec: Codec,
+    pub n_events: u64,
+    pub n_pages: u32,
+}
+
+/// An encoded brick: bytes plus its metadata.
+#[derive(Debug, Clone)]
+pub struct BrickFile {
+    pub meta: BrickMeta,
+    pub bytes: Vec<u8>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BrickError {
+    BadMagic,
+    BadVersion(u16),
+    BadCodec(u8),
+    Truncated,
+    ChecksumMismatch { page: Option<u32> },
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for BrickError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BrickError::BadMagic => write!(f, "bad magic"),
+            BrickError::BadVersion(v) => write!(f, "bad version {v}"),
+            BrickError::BadCodec(c) => write!(f, "bad codec {c}"),
+            BrickError::Truncated => write!(f, "truncated brick"),
+            BrickError::ChecksumMismatch { page: Some(p) } => {
+                write!(f, "checksum mismatch in page {p}")
+            }
+            BrickError::ChecksumMismatch { page: None } => {
+                write!(f, "trailer checksum mismatch")
+            }
+            BrickError::Corrupt(m) => write!(f, "corrupt brick: {m}"),
+        }
+    }
+}
+impl std::error::Error for BrickError {}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], BrickError> {
+        if self.i + n > self.b.len() {
+            return Err(BrickError::Truncated);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, BrickError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, BrickError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, BrickError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, BrickError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u8(&mut self) -> Result<u8, BrickError> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+fn encode_event(out: &mut Vec<u8>, ev: &Event) {
+    put_u64(out, ev.id);
+    put_u16(out, ev.tracks.len() as u16);
+    put_u16(out, ev.vertices.len() as u16);
+    out.push(ev.is_signal as u8);
+    for t in &ev.tracks {
+        put_f32(out, t.e);
+        put_f32(out, t.px);
+        put_f32(out, t.py);
+        put_f32(out, t.pz);
+        put_u16(out, t.vertex);
+    }
+    for v in &ev.vertices {
+        put_f32(out, v.x);
+        put_f32(out, v.y);
+        put_f32(out, v.z);
+        put_u16(out, v.n_tracks);
+    }
+}
+
+fn decode_event(r: &mut Reader) -> Result<Event, BrickError> {
+    let id = r.u64()?;
+    let nt = r.u16()? as usize;
+    let nv = r.u16()? as usize;
+    let is_signal = r.u8()? != 0;
+    let mut tracks = Vec::with_capacity(nt);
+    for _ in 0..nt {
+        let e = r.f32()?;
+        let px = r.f32()?;
+        let py = r.f32()?;
+        let pz = r.f32()?;
+        let vertex = r.u16()?;
+        tracks.push(Track { e, px, py, pz, vertex });
+    }
+    let mut vertices = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        vertices.push(Vertex {
+            x: r.f32()?,
+            y: r.f32()?,
+            z: r.f32()?,
+            n_tracks: r.u16()?,
+        });
+    }
+    Ok(Event { id, tracks, vertices, is_signal })
+}
+
+impl BrickFile {
+    /// Encode events into a brick. `events_per_page` controls streaming
+    /// granularity (pages decode independently).
+    pub fn encode(
+        id: BrickId,
+        events: &[Event],
+        codec_kind: Codec,
+        events_per_page: usize,
+    ) -> BrickFile {
+        let epp = events_per_page.max(1);
+        let pages: Vec<&[Event]> = events.chunks(epp).collect();
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u16(&mut out, VERSION);
+        out.push(codec_kind as u8);
+        out.push(0); // reserved
+        put_u32(&mut out, id.dataset);
+        put_u32(&mut out, id.seq);
+        put_u64(&mut out, events.len() as u64);
+        put_u32(&mut out, pages.len() as u32);
+
+        for page in &pages {
+            let mut raw = Vec::new();
+            for ev in *page {
+                encode_event(&mut raw, ev);
+            }
+            let stored = match codec_kind {
+                Codec::Raw => raw.clone(),
+                Codec::Lzss => {
+                    let c = codec::compress(&raw);
+                    // store raw if compression didn't help
+                    if c.len() < raw.len() {
+                        c
+                    } else {
+                        raw.clone()
+                    }
+                }
+            };
+            let effective_raw = stored.len() == raw.len() && stored == raw;
+            put_u32(&mut out, page.len() as u32);
+            put_u32(&mut out, raw.len() as u32);
+            // high bit of stored_len marks "stored raw despite Lzss codec"
+            let mut stored_len = stored.len() as u32;
+            if codec_kind == Codec::Lzss && effective_raw {
+                stored_len |= 0x8000_0000;
+            }
+            put_u32(&mut out, stored_len);
+            put_u64(&mut out, xxhash64(&stored, HASH_SEED));
+            out.extend_from_slice(&stored);
+        }
+        let trailer = xxhash64(&out, HASH_SEED);
+        put_u64(&mut out, trailer);
+
+        BrickFile {
+            meta: BrickMeta {
+                id,
+                codec: codec_kind,
+                n_events: events.len() as u64,
+                n_pages: pages.len() as u32,
+            },
+            bytes: out,
+        }
+    }
+
+    /// Validate + decode header only (cheap).
+    pub fn decode_meta(bytes: &[u8]) -> Result<BrickMeta, BrickError> {
+        let mut r = Reader { b: bytes, i: 0 };
+        if r.take(8)? != MAGIC {
+            return Err(BrickError::BadMagic);
+        }
+        let ver = r.u16()?;
+        if ver != VERSION {
+            return Err(BrickError::BadVersion(ver));
+        }
+        let codec_byte = r.u8()?;
+        let codec =
+            Codec::from_u8(codec_byte).ok_or(BrickError::BadCodec(codec_byte))?;
+        let _reserved = r.u8()?;
+        let dataset = r.u32()?;
+        let seq = r.u32()?;
+        let n_events = r.u64()?;
+        let n_pages = r.u32()?;
+        Ok(BrickMeta {
+            id: BrickId::new(dataset, seq),
+            codec,
+            n_events,
+            n_pages,
+        })
+    }
+
+    /// Full decode with checksum verification.
+    pub fn decode(bytes: &[u8]) -> Result<(BrickMeta, Vec<Event>), BrickError> {
+        if bytes.len() < 8 {
+            return Err(BrickError::Truncated);
+        }
+        // trailer check first: whole-file integrity
+        let body_len = bytes.len() - 8;
+        let trailer =
+            u64::from_le_bytes(bytes[body_len..].try_into().unwrap());
+        if xxhash64(&bytes[..body_len], HASH_SEED) != trailer {
+            return Err(BrickError::ChecksumMismatch { page: None });
+        }
+
+        let meta = Self::decode_meta(bytes)?;
+        let mut r = Reader { b: &bytes[..body_len], i: 32 };
+        let mut events = Vec::with_capacity(meta.n_events as usize);
+        for page_idx in 0..meta.n_pages {
+            let n_ev = r.u32()? as usize;
+            let raw_len = r.u32()? as usize;
+            let stored_len_field = r.u32()?;
+            let stored_raw = stored_len_field & 0x8000_0000 != 0;
+            let stored_len = (stored_len_field & 0x7fff_ffff) as usize;
+            let checksum = r.u64()?;
+            let stored = r.take(stored_len)?;
+            if xxhash64(stored, HASH_SEED) != checksum {
+                return Err(BrickError::ChecksumMismatch {
+                    page: Some(page_idx),
+                });
+            }
+            let raw: Vec<u8> = match (meta.codec, stored_raw) {
+                (Codec::Raw, _) | (Codec::Lzss, true) => stored.to_vec(),
+                (Codec::Lzss, false) => codec::decompress(stored, raw_len)
+                    .ok_or(BrickError::Corrupt("lzss stream"))?,
+            };
+            if raw.len() != raw_len {
+                return Err(BrickError::Corrupt("raw length"));
+            }
+            let mut pr = Reader { b: &raw, i: 0 };
+            for _ in 0..n_ev {
+                events.push(decode_event(&mut pr)?);
+            }
+            if pr.i != raw.len() {
+                return Err(BrickError::Corrupt("page trailing bytes"));
+            }
+        }
+        if events.len() as u64 != meta.n_events {
+            return Err(BrickError::Corrupt("event count"));
+        }
+        Ok((meta, events))
+    }
+
+    pub fn size(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::generator::{EventGenerator, GeneratorConfig};
+
+    fn gen(n: usize, seed: u64) -> Vec<Event> {
+        EventGenerator::new(GeneratorConfig::default(), seed).take(n)
+    }
+
+    #[test]
+    fn roundtrip_raw() {
+        let evs = gen(100, 1);
+        let brick =
+            BrickFile::encode(BrickId::new(1, 0), &evs, Codec::Raw, 32);
+        let (meta, decoded) = BrickFile::decode(&brick.bytes).unwrap();
+        assert_eq!(meta.n_events, 100);
+        assert_eq!(meta.n_pages, 4);
+        assert_eq!(decoded, evs);
+    }
+
+    #[test]
+    fn roundtrip_lzss() {
+        let evs = gen(200, 2);
+        let brick =
+            BrickFile::encode(BrickId::new(2, 7), &evs, Codec::Lzss, 50);
+        let (meta, decoded) = BrickFile::decode(&brick.bytes).unwrap();
+        assert_eq!(meta.id, BrickId::new(2, 7));
+        assert_eq!(decoded, evs);
+    }
+
+    #[test]
+    fn empty_brick() {
+        let brick = BrickFile::encode(BrickId::new(0, 0), &[], Codec::Raw, 16);
+        let (meta, decoded) = BrickFile::decode(&brick.bytes).unwrap();
+        assert_eq!(meta.n_events, 0);
+        assert!(decoded.is_empty());
+    }
+
+    #[test]
+    fn meta_only_decode() {
+        let evs = gen(10, 3);
+        let brick =
+            BrickFile::encode(BrickId::new(5, 9), &evs, Codec::Lzss, 4);
+        let meta = BrickFile::decode_meta(&brick.bytes).unwrap();
+        assert_eq!(meta.id, BrickId::new(5, 9));
+        assert_eq!(meta.n_events, 10);
+        assert_eq!(meta.n_pages, 3);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let evs = gen(5, 4);
+        let mut brick =
+            BrickFile::encode(BrickId::new(1, 1), &evs, Codec::Raw, 8);
+        brick.bytes[0] = b'X';
+        assert_eq!(
+            BrickFile::decode(&brick.bytes).unwrap_err(),
+            // trailer covers header too, so whole-file checksum trips first
+            BrickError::ChecksumMismatch { page: None }
+        );
+        assert_eq!(
+            BrickFile::decode_meta(&brick.bytes).unwrap_err(),
+            BrickError::BadMagic
+        );
+    }
+
+    #[test]
+    fn payload_corruption_detected() {
+        let evs = gen(50, 5);
+        let mut brick =
+            BrickFile::encode(BrickId::new(1, 2), &evs, Codec::Raw, 16);
+        let mid = brick.bytes.len() / 2;
+        brick.bytes[mid] ^= 0xff;
+        assert!(matches!(
+            BrickFile::decode(&brick.bytes).unwrap_err(),
+            BrickError::ChecksumMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let evs = gen(20, 6);
+        let brick =
+            BrickFile::encode(BrickId::new(1, 3), &evs, Codec::Raw, 8);
+        for cut in [3usize, 20, brick.bytes.len() - 1] {
+            assert!(BrickFile::decode(&brick.bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn compression_helps_on_real_events() {
+        let evs = gen(500, 7);
+        let raw = BrickFile::encode(BrickId::new(1, 4), &evs, Codec::Raw, 64);
+        let lz = BrickFile::encode(BrickId::new(1, 4), &evs, Codec::Lzss, 64);
+        assert!(lz.size() <= raw.size());
+    }
+
+    #[test]
+    fn signal_flag_roundtrips() {
+        let cfg = GeneratorConfig { signal_fraction: 0.5, ..Default::default() };
+        let evs = EventGenerator::new(cfg, 8).take(64);
+        let brick =
+            BrickFile::encode(BrickId::new(3, 0), &evs, Codec::Lzss, 16);
+        let (_, decoded) = BrickFile::decode(&brick.bytes).unwrap();
+        for (a, b) in evs.iter().zip(&decoded) {
+            assert_eq!(a.is_signal, b.is_signal);
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! The **grid-brick** data layer: the paper's core idea is that event data
+//! is pre-split into bricks that live on the grid nodes' own disks, so
+//! jobs move to the data instead of the reverse (§4: "data should not be
+//! moved when applying for a job submission").
+//!
+//! - [`codec`]: LZSS compression + varints (substrate — we build our own)
+//! - [`format`]: the on-disk/on-wire brick file format (the ROOT-tree
+//!   analogue: paged, checksummed, optionally compressed)
+//! - [`split`]: splitting an event stream into bricks + placement
+//! - [`replica`]: replication sets (paper §7 future work, built here)
+
+pub mod codec;
+pub mod format;
+pub mod replica;
+pub mod split;
+
+pub use format::{BrickFile, BrickMeta, Codec};
+pub use replica::ReplicaSet;
+pub use split::{placement_nodes, split_events, BrickPlacement, SplitConfig};
+
+/// Identifier of a brick: (dataset, sequence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BrickId {
+    pub dataset: u32,
+    pub seq: u32,
+}
+
+impl BrickId {
+    pub fn new(dataset: u32, seq: u32) -> Self {
+        BrickId { dataset, seq }
+    }
+}
+
+impl std::fmt::Display for BrickId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "d{}.b{}", self.dataset, self.seq)
+    }
+}

@@ -1,0 +1,154 @@
+//! Replica sets: tracking which nodes hold a live copy of each brick and
+//! choosing a read target, with failover. This is the paper's §7
+//! "redundancy mechanism to recover from a malfunction in the nodes",
+//! built as a first-class feature.
+
+use crate::brick::BrickId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Live view of a brick's replicas.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaSet {
+    /// holders in placement order (primary first)
+    holders: Vec<String>,
+}
+
+impl ReplicaSet {
+    pub fn new(holders: Vec<String>) -> Self {
+        ReplicaSet { holders }
+    }
+
+    pub fn holders(&self) -> &[String] {
+        &self.holders
+    }
+
+    /// First holder not in `down` — the node a job should read from.
+    pub fn pick_live(&self, down: &BTreeSet<String>) -> Option<&str> {
+        self.holders
+            .iter()
+            .find(|h| !down.contains(h.as_str()))
+            .map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, node: &str) -> bool {
+        self.holders.iter().any(|h| h == node)
+    }
+}
+
+/// Directory of all bricks' replicas — the metadata the catalogue serves
+/// and the scheduler consults.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaDirectory {
+    map: BTreeMap<BrickId, ReplicaSet>,
+}
+
+impl ReplicaDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, id: BrickId, holders: Vec<String>) {
+        self.map.insert(id, ReplicaSet::new(holders));
+    }
+
+    pub fn get(&self, id: BrickId) -> Option<&ReplicaSet> {
+        self.map.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&BrickId, &ReplicaSet)> {
+        self.map.iter()
+    }
+
+    /// Bricks whose ONLY live replica is on `node` — these become
+    /// unreadable if `node` dies (the paper's "biggest disadvantage").
+    pub fn sole_holder_bricks(
+        &self,
+        node: &str,
+        down: &BTreeSet<String>,
+    ) -> Vec<BrickId> {
+        self.map
+            .iter()
+            .filter(|(_, rs)| {
+                let live: Vec<&String> = rs
+                    .holders
+                    .iter()
+                    .filter(|h| !down.contains(h.as_str()))
+                    .collect();
+                live.len() == 1 && live[0] == node
+            })
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// All bricks readable given `down` nodes; Err(list) if any brick has
+    /// lost all replicas (job must fail loudly, not silently skip data).
+    pub fn check_readable(
+        &self,
+        down: &BTreeSet<String>,
+    ) -> Result<(), Vec<BrickId>> {
+        let lost: Vec<BrickId> = self
+            .map
+            .iter()
+            .filter(|(_, rs)| rs.pick_live(down).is_none())
+            .map(|(id, _)| *id)
+            .collect();
+        if lost.is_empty() {
+            Ok(())
+        } else {
+            Err(lost)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(h: &[&str]) -> ReplicaSet {
+        ReplicaSet::new(h.iter().map(|s| s.to_string()).collect())
+    }
+
+    fn down(ns: &[&str]) -> BTreeSet<String> {
+        ns.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn pick_live_prefers_primary() {
+        let rs = set(&["a", "b", "c"]);
+        assert_eq!(rs.pick_live(&down(&[])), Some("a"));
+        assert_eq!(rs.pick_live(&down(&["a"])), Some("b"));
+        assert_eq!(rs.pick_live(&down(&["a", "b"])), Some("c"));
+        assert_eq!(rs.pick_live(&down(&["a", "b", "c"])), None);
+    }
+
+    #[test]
+    fn sole_holder_detection() {
+        let mut dir = ReplicaDirectory::new();
+        dir.insert(BrickId::new(1, 0), vec!["a".into(), "b".into()]);
+        dir.insert(BrickId::new(1, 1), vec!["a".into()]);
+        dir.insert(BrickId::new(1, 2), vec!["b".into()]);
+        let sole = dir.sole_holder_bricks("a", &down(&[]));
+        assert_eq!(sole, vec![BrickId::new(1, 1)]);
+        // with b down, brick 0 also becomes sole-held by a
+        let sole = dir.sole_holder_bricks("a", &down(&["b"]));
+        assert_eq!(sole, vec![BrickId::new(1, 0), BrickId::new(1, 1)]);
+    }
+
+    #[test]
+    fn readable_check() {
+        let mut dir = ReplicaDirectory::new();
+        dir.insert(BrickId::new(1, 0), vec!["a".into(), "b".into()]);
+        dir.insert(BrickId::new(1, 1), vec!["b".into()]);
+        assert!(dir.check_readable(&down(&["a"])).is_ok());
+        let lost = dir.check_readable(&down(&["b"])).unwrap_err();
+        assert_eq!(lost, vec![BrickId::new(1, 1)]);
+    }
+}

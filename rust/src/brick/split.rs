@@ -1,0 +1,176 @@
+//! Brick splitting and placement: turn an event stream into bricks and
+//! decide which node's disk each brick (and its replicas) lives on.
+//!
+//! Placement uses rendezvous (highest-random-weight) hashing so that
+//! adding/removing a node only moves the bricks that must move — the
+//! paper's scalability claim ("just a matter of adding more Grid nodes",
+//! §4) depends on placement not reshuffling the world.
+
+use crate::brick::BrickId;
+use crate::events::model::Event;
+use crate::util::hash::hash_str;
+
+/// How a dataset is split into bricks.
+#[derive(Debug, Clone)]
+pub struct SplitConfig {
+    pub dataset: u32,
+    /// target events per brick (the paper's "granularity", Fig 7 x-axis
+    /// divided by brick count)
+    pub events_per_brick: usize,
+    /// replication factor (1 = no replicas; §7 future work)
+    pub replication: usize,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        SplitConfig { dataset: 1, events_per_brick: 512, replication: 1 }
+    }
+}
+
+/// A brick's contents plus where its replicas live.
+#[derive(Debug, Clone)]
+pub struct BrickPlacement {
+    pub id: BrickId,
+    /// indices into the event slice: [start, end)
+    pub range: (usize, usize),
+    /// node names holding a replica, primary first
+    pub holders: Vec<String>,
+}
+
+/// Split `n_events` into brick ranges.
+pub fn split_ranges(n_events: usize, events_per_brick: usize) -> Vec<(usize, usize)> {
+    let epb = events_per_brick.max(1);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n_events {
+        let end = (start + epb).min(n_events);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// Rendezvous hashing: pick the top-`k` nodes for a brick.
+pub fn placement_nodes(id: BrickId, nodes: &[String], k: usize) -> Vec<String> {
+    let mut scored: Vec<(u64, &String)> = nodes
+        .iter()
+        .map(|n| {
+            let key = format!("{id}@{n}");
+            (hash_str(&key, 0xB81C), n)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(b.1)));
+    scored.into_iter().take(k.min(nodes.len())).map(|(_, n)| n.clone()).collect()
+}
+
+/// Split events into bricks and place them on nodes.
+pub fn split_events(
+    cfg: &SplitConfig,
+    n_events: usize,
+    nodes: &[String],
+) -> Vec<BrickPlacement> {
+    assert!(!nodes.is_empty(), "cannot place bricks on zero nodes");
+    split_ranges(n_events, cfg.events_per_brick)
+        .into_iter()
+        .enumerate()
+        .map(|(seq, range)| {
+            let id = BrickId::new(cfg.dataset, seq as u32);
+            BrickPlacement {
+                id,
+                range,
+                holders: placement_nodes(id, nodes, cfg.replication.max(1)),
+            }
+        })
+        .collect()
+}
+
+/// Slice helper: the events belonging to a placement.
+pub fn brick_events<'a>(events: &'a [Event], p: &BrickPlacement) -> &'a [Event] {
+    &events[p.range.0..p.range.1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("node{i}")).collect()
+    }
+
+    #[test]
+    fn ranges_partition_exactly() {
+        for (n, epb) in [(1000, 128), (1, 10), (777, 100), (0, 5)] {
+            let rs = split_ranges(n, epb);
+            let mut covered = 0;
+            for (i, (s, e)) in rs.iter().enumerate() {
+                assert_eq!(*s, covered);
+                assert!(*e > *s || n == 0);
+                covered = *e;
+                if i < rs.len() - 1 {
+                    assert_eq!(e - s, epb);
+                }
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn placement_deterministic() {
+        let ns = nodes(8);
+        let a = placement_nodes(BrickId::new(1, 5), &ns, 3);
+        let b = placement_nodes(BrickId::new(1, 5), &ns, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        // replicas are distinct nodes
+        let mut u = a.clone();
+        u.dedup();
+        assert_eq!(u.len(), 3);
+    }
+
+    #[test]
+    fn placement_spreads_load() {
+        let ns = nodes(4);
+        let mut counts = std::collections::HashMap::new();
+        for seq in 0..400 {
+            let p = placement_nodes(BrickId::new(1, seq), &ns, 1);
+            *counts.entry(p[0].clone()).or_insert(0usize) += 1;
+        }
+        for n in &ns {
+            let c = counts.get(n).copied().unwrap_or(0);
+            assert!((60..=140).contains(&c), "{n}: {c}");
+        }
+    }
+
+    #[test]
+    fn adding_node_moves_few_bricks() {
+        let ns4 = nodes(4);
+        let ns5 = nodes(5);
+        let moved = (0..1000)
+            .filter(|&seq| {
+                placement_nodes(BrickId::new(1, seq), &ns4, 1)
+                    != placement_nodes(BrickId::new(1, seq), &ns5, 1)
+            })
+            .count();
+        // rendezvous hashing: expect ~1/5 moved, certainly < 1/3
+        assert!(moved < 334, "moved {moved}");
+    }
+
+    #[test]
+    fn replication_capped_by_cluster_size() {
+        let ns = nodes(2);
+        let p = placement_nodes(BrickId::new(1, 0), &ns, 5);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn split_events_end_to_end() {
+        let cfg = SplitConfig { dataset: 3, events_per_brick: 100, replication: 2 };
+        let ps = split_events(&cfg, 250, &nodes(4));
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps[2].range, (200, 250));
+        for p in &ps {
+            assert_eq!(p.holders.len(), 2);
+            assert_eq!(p.id.dataset, 3);
+        }
+    }
+}

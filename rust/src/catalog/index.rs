@@ -1,0 +1,104 @@
+//! Secondary indexes over catalogue tables: maintain a key → row-id
+//! multimap alongside a `Table`, so hot lookups (results by job, bricks
+//! by dataset) stay O(log n + k) instead of full scans as tables grow to
+//! production sizes (the paper's PgSQL gave them this for free).
+//!
+//! The index is maintained *explicitly* by the schema layer on insert —
+//! the same discipline a database trigger would enforce — and checked
+//! for consistency in tests.
+
+use crate::catalog::store::RowId;
+use std::collections::BTreeMap;
+
+/// A multimap index from `K` to row ids.
+#[derive(Debug, Clone)]
+pub struct Index<K: Ord + Clone> {
+    map: BTreeMap<K, Vec<RowId>>,
+    entries: usize,
+}
+
+impl<K: Ord + Clone> Default for Index<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord + Clone> Index<K> {
+    pub fn new() -> Self {
+        Index { map: BTreeMap::new(), entries: 0 }
+    }
+
+    /// Register `id` under `key`.
+    pub fn insert(&mut self, key: K, id: RowId) {
+        self.map.entry(key).or_default().push(id);
+        self.entries += 1;
+    }
+
+    /// Remove a specific (key, id) pair; returns whether it existed.
+    pub fn remove(&mut self, key: &K, id: RowId) -> bool {
+        if let Some(v) = self.map.get_mut(key) {
+            if let Some(pos) = v.iter().position(|x| *x == id) {
+                v.remove(pos);
+                self.entries -= 1;
+                if v.is_empty() {
+                    self.map.remove(key);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Row ids for `key` (empty slice if none).
+    pub fn get(&self, key: &K) -> &[RowId] {
+        self.map.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Number of (key, id) pairs.
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Distinct keys, ascending.
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut ix: Index<u64> = Index::new();
+        ix.insert(7, 1);
+        ix.insert(7, 2);
+        ix.insert(9, 3);
+        assert_eq!(ix.get(&7), &[1, 2]);
+        assert_eq!(ix.get(&9), &[3]);
+        assert_eq!(ix.get(&8), &[] as &[RowId]);
+        assert_eq!(ix.len(), 3);
+        assert!(ix.remove(&7, 1));
+        assert!(!ix.remove(&7, 1));
+        assert_eq!(ix.get(&7), &[2]);
+        assert!(ix.remove(&7, 2));
+        assert!(ix.get(&7).is_empty());
+        assert_eq!(ix.keys().collect::<Vec<_>>(), vec![&9]);
+    }
+
+    #[test]
+    fn many_keys_ordered() {
+        let mut ix: Index<String> = Index::new();
+        for i in (0..100).rev() {
+            ix.insert(format!("k{i:03}"), i);
+        }
+        let keys: Vec<&String> = ix.keys().collect();
+        assert_eq!(keys.len(), 100);
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,20 @@
+//! The Meta-data catalogue — the paper's PostgreSQL backend (§4.2),
+//! rebuilt as an embedded typed store. It holds the four relations the
+//! JSE needs (job specification tuples, node registry, brick locations,
+//! results), provides secondary indexes, a write-ahead log for
+//! persistence, and the **poll cursor** the JSE broker uses ("through its
+//! broker that searches from time to time into the Meta-data catalogue").
+//!
+//! - [`store`]: generic row table: insert/get/update, secondary index,
+//!   monotonically increasing row versions feeding the poll cursor
+//! - [`wal`]: append-only log + replay (crash recovery)
+//! - [`schema`]: the concrete GEPS relations and the [`Catalog`] facade
+
+pub mod index;
+pub mod schema;
+pub mod store;
+pub mod wal;
+
+pub use schema::{BrickRow, Catalog, JobRow, JobStatus, NodeRow, ResultRow};
+pub use index::Index;
+pub use store::{RowId, Table};

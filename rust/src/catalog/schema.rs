@@ -1,0 +1,541 @@
+//! The concrete GEPS relations (the paper's PgSQL schema, §4.2) and the
+//! [`Catalog`] facade: jobs, nodes, bricks, results — with optional WAL
+//! persistence and the broker poll cursor.
+
+use crate::brick::BrickId;
+use crate::catalog::index::Index;
+use crate::catalog::store::{RowId, Table};
+use crate::catalog::wal::Wal;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Job lifecycle states, mirroring GRAM's PENDING/ACTIVE/DONE/FAILED plus
+/// GEPS phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Submitted,
+    Staging,
+    Running,
+    Merging,
+    Done,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Submitted => "SUBMITTED",
+            JobStatus::Staging => "STAGING",
+            JobStatus::Running => "RUNNING",
+            JobStatus::Merging => "MERGING",
+            JobStatus::Done => "DONE",
+            JobStatus::Failed => "FAILED",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<JobStatus> {
+        Some(match s {
+            "SUBMITTED" => JobStatus::Submitted,
+            "STAGING" => JobStatus::Staging,
+            "RUNNING" => JobStatus::Running,
+            "MERGING" => JobStatus::Merging,
+            "DONE" => JobStatus::Done,
+            "FAILED" => JobStatus::Failed,
+            _ => return None,
+        })
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed)
+    }
+}
+
+/// A job specification tuple (what the portal's submit form writes, §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRow {
+    pub dataset: u32,
+    /// user filter expression, e.g. "max_pair_mass > 80 && max_pt > 20"
+    pub filter_expr: String,
+    pub policy: String,
+    pub status: JobStatus,
+    /// events selected / processed (filled as results arrive)
+    pub events_processed: u64,
+    pub events_selected: u64,
+    pub error: Option<String>,
+}
+
+/// Grid-node registry row (what GRIS publishes, §4.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeRow {
+    pub name: String,
+    pub speed: f64,
+    pub slots: usize,
+    pub up: bool,
+}
+
+/// Brick location row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BrickRow {
+    pub brick: BrickId,
+    pub n_events: u64,
+    pub bytes: u64,
+    pub holders: Vec<String>,
+}
+
+/// Per-task result row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultRow {
+    pub job: RowId,
+    pub node: String,
+    pub brick: BrickId,
+    pub events_in: u64,
+    pub events_selected: u64,
+    pub result_bytes: u64,
+}
+
+// WAL tags
+const TAG_JOB: u8 = 1;
+const TAG_NODE: u8 = 2;
+const TAG_BRICK: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_JOB_UPDATE: u8 = 5;
+
+fn job_to_json(id: RowId, j: &JobRow) -> Json {
+    Json::obj()
+        .set("id", id)
+        .set("dataset", j.dataset as u64)
+        .set("filter", j.filter_expr.as_str())
+        .set("policy", j.policy.as_str())
+        .set("status", j.status.name())
+        .set("processed", j.events_processed)
+        .set("selected", j.events_selected)
+        .set(
+            "error",
+            j.error.clone().map(Json::Str).unwrap_or(Json::Null),
+        )
+}
+
+fn job_from_json(j: &Json) -> Option<(RowId, JobRow)> {
+    Some((
+        j.get("id")?.as_u64()?,
+        JobRow {
+            dataset: j.get("dataset")?.as_u64()? as u32,
+            filter_expr: j.get("filter")?.as_str()?.to_string(),
+            policy: j.get("policy")?.as_str()?.to_string(),
+            status: JobStatus::by_name(j.get("status")?.as_str()?)?,
+            events_processed: j.get("processed")?.as_u64()?,
+            events_selected: j.get("selected")?.as_u64()?,
+            error: j.get("error").and_then(|e| e.as_str()).map(String::from),
+        },
+    ))
+}
+
+/// The metadata catalogue.
+pub struct Catalog {
+    pub jobs: Table<JobRow>,
+    pub nodes: Table<NodeRow>,
+    pub bricks: Table<BrickRow>,
+    pub results: Table<ResultRow>,
+    /// secondary index: job id -> result rows (kept by record_result)
+    results_by_job: Index<RowId>,
+    wal: Option<Wal>,
+}
+
+impl Default for Catalog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Catalog {
+    /// In-memory catalogue (tests, DES).
+    pub fn new() -> Self {
+        Catalog {
+            jobs: Table::new(),
+            nodes: Table::new(),
+            bricks: Table::new(),
+            results: Table::new(),
+            results_by_job: Index::new(),
+            wal: None,
+        }
+    }
+
+    /// Durable catalogue: replays the WAL at `path`.
+    pub fn open(path: &Path) -> std::io::Result<Self> {
+        let (wal, records) = Wal::open(path)?;
+        let mut cat = Catalog::new();
+        for rec in records {
+            let j = match Json::parse(
+                std::str::from_utf8(&rec.payload).unwrap_or(""),
+            ) {
+                Ok(j) => j,
+                Err(_) => continue,
+            };
+            match rec.tag {
+                TAG_JOB => {
+                    if let Some((id, row)) = job_from_json(&j) {
+                        cat.jobs.insert_with_id(id, row);
+                    }
+                }
+                TAG_JOB_UPDATE => {
+                    if let Some((id, row)) = job_from_json(&j) {
+                        if cat.jobs.get(id).is_some() {
+                            cat.jobs.update(id, |r| *r = row);
+                        }
+                    }
+                }
+                TAG_NODE => {
+                    if let (Some(name), Some(speed), Some(slots)) = (
+                        j.get("name").and_then(|v| v.as_str()),
+                        j.get("speed").and_then(|v| v.as_f64()),
+                        j.get("slots").and_then(|v| v.as_u64()),
+                    ) {
+                        cat.nodes.insert(NodeRow {
+                            name: name.to_string(),
+                            speed,
+                            slots: slots as usize,
+                            up: true,
+                        });
+                    }
+                }
+                TAG_BRICK => {
+                    if let (Some(ds), Some(seq), Some(n), Some(b)) = (
+                        j.get("dataset").and_then(|v| v.as_u64()),
+                        j.get("seq").and_then(|v| v.as_u64()),
+                        j.get("n_events").and_then(|v| v.as_u64()),
+                        j.get("bytes").and_then(|v| v.as_u64()),
+                    ) {
+                        let holders = j
+                            .get("holders")
+                            .and_then(|h| h.as_arr())
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(|x| x.as_str())
+                                    .map(String::from)
+                                    .collect()
+                            })
+                            .unwrap_or_default();
+                        cat.bricks.insert(BrickRow {
+                            brick: BrickId::new(ds as u32, seq as u32),
+                            n_events: n,
+                            bytes: b,
+                            holders,
+                        });
+                    }
+                }
+                TAG_RESULT => {
+                    if let (Some(job), Some(node)) = (
+                        j.get("job").and_then(|v| v.as_u64()),
+                        j.get("node").and_then(|v| v.as_str()),
+                    ) {
+                        let job_key = job;
+                        let rid = cat.results.insert(ResultRow {
+                            job,
+                            node: node.to_string(),
+                            brick: BrickId::new(
+                                j.get("ds").and_then(|v| v.as_u64()).unwrap_or(0)
+                                    as u32,
+                                j.get("seq").and_then(|v| v.as_u64()).unwrap_or(0)
+                                    as u32,
+                            ),
+                            events_in: j
+                                .get("in")
+                                .and_then(|v| v.as_u64())
+                                .unwrap_or(0),
+                            events_selected: j
+                                .get("sel")
+                                .and_then(|v| v.as_u64())
+                                .unwrap_or(0),
+                            result_bytes: j
+                                .get("bytes")
+                                .and_then(|v| v.as_u64())
+                                .unwrap_or(0),
+                        });
+                        cat.results_by_job.insert(job_key, rid);
+                    }
+                }
+                _ => {}
+            }
+        }
+        cat.wal = Some(wal);
+        Ok(cat)
+    }
+
+    fn log(&mut self, tag: u8, j: &Json) {
+        if let Some(w) = &mut self.wal {
+            // WAL write failure is fatal for durability; surface loudly.
+            w.append(tag, j.to_string().as_bytes())
+                .expect("WAL append failed");
+        }
+    }
+
+    /// Submit a job tuple (portal → catalogue). Returns the job id.
+    pub fn submit_job(
+        &mut self,
+        dataset: u32,
+        filter_expr: &str,
+        policy: &str,
+    ) -> RowId {
+        let row = JobRow {
+            dataset,
+            filter_expr: filter_expr.to_string(),
+            policy: policy.to_string(),
+            status: JobStatus::Submitted,
+            events_processed: 0,
+            events_selected: 0,
+            error: None,
+        };
+        let id = self.jobs.insert(row.clone());
+        let j = job_to_json(id, &row);
+        self.log(TAG_JOB, &j);
+        id
+    }
+
+    /// Update a job row (status / counters).
+    pub fn update_job(&mut self, id: RowId, f: impl FnOnce(&mut JobRow)) -> bool {
+        let ok = self.jobs.update(id, f);
+        if ok {
+            if let Some(row) = self.jobs.get(id) {
+                let j = job_to_json(id, &row.clone());
+                self.log(TAG_JOB_UPDATE, &j);
+            }
+        }
+        ok
+    }
+
+    pub fn register_node(&mut self, name: &str, speed: f64, slots: usize) -> RowId {
+        let id = self.nodes.insert(NodeRow {
+            name: name.to_string(),
+            speed,
+            slots,
+            up: true,
+        });
+        let j = Json::obj()
+            .set("name", name)
+            .set("speed", speed)
+            .set("slots", slots);
+        self.log(TAG_NODE, &j);
+        id
+    }
+
+    pub fn insert_brick(
+        &mut self,
+        brick: BrickId,
+        n_events: u64,
+        bytes: u64,
+        holders: Vec<String>,
+    ) -> RowId {
+        let j = Json::obj()
+            .set("dataset", brick.dataset as u64)
+            .set("seq", brick.seq as u64)
+            .set("n_events", n_events)
+            .set("bytes", bytes)
+            .set(
+                "holders",
+                Json::Arr(holders.iter().map(|h| Json::Str(h.clone())).collect()),
+            );
+        let id = self.bricks.insert(BrickRow { brick, n_events, bytes, holders });
+        self.log(TAG_BRICK, &j);
+        id
+    }
+
+    pub fn record_result(&mut self, row: ResultRow) -> RowId {
+        let j = Json::obj()
+            .set("job", row.job)
+            .set("node", row.node.as_str())
+            .set("ds", row.brick.dataset as u64)
+            .set("seq", row.brick.seq as u64)
+            .set("in", row.events_in)
+            .set("sel", row.events_selected)
+            .set("bytes", row.result_bytes);
+        let job = row.job;
+        let id = self.results.insert(row);
+        self.results_by_job.insert(job, id);
+        self.log(TAG_RESULT, &j);
+        id
+    }
+
+    /// The broker poll: jobs changed since the cursor that are in
+    /// Submitted state. Returns (new_cursor, job ids).
+    pub fn poll_new_jobs(&self, cursor: u64) -> (u64, Vec<RowId>) {
+        let new_cursor = self.jobs.version();
+        let ids = self
+            .jobs
+            .changed_since(cursor)
+            .into_iter()
+            .filter(|(_, r)| r.status == JobStatus::Submitted)
+            .map(|(id, _)| id)
+            .collect();
+        (new_cursor, ids)
+    }
+
+    /// All results for a job — served from the secondary index.
+    pub fn job_results(&self, job: RowId) -> Vec<&ResultRow> {
+        self.results_by_job
+            .get(&job)
+            .iter()
+            .filter_map(|id| self.results.get(*id))
+            .collect()
+    }
+
+    /// Replace a brick's holder list (re-replication recovery, §7).
+    pub fn update_brick_holders(
+        &mut self,
+        brick: BrickId,
+        holders: Vec<String>,
+    ) -> bool {
+        let ids: Vec<u64> = self
+            .bricks
+            .iter()
+            .filter(|(_, b)| b.brick == brick)
+            .map(|(id, _)| id)
+            .collect();
+        let mut ok = false;
+        for id in ids {
+            ok |= self.bricks.update(id, |b| b.holders = holders.clone());
+        }
+        if ok {
+            // WAL: re-log the brick with its new holders
+            let row = self
+                .bricks
+                .iter()
+                .find(|(_, b)| b.brick == brick)
+                .map(|(_, b)| b.clone());
+            if let Some(row) = row {
+                let j = Json::obj()
+                    .set("dataset", brick.dataset as u64)
+                    .set("seq", brick.seq as u64)
+                    .set("n_events", row.n_events)
+                    .set("bytes", row.bytes)
+                    .set(
+                        "holders",
+                        Json::Arr(
+                            row.holders.iter().map(|h| Json::Str(h.clone())).collect(),
+                        ),
+                    );
+                self.log(TAG_BRICK, &j);
+            }
+        }
+        ok
+    }
+
+    /// Brick states for a dataset in scheduler form.
+    pub fn bricks_for_dataset(&self, dataset: u32) -> Vec<crate::scheduler::BrickState> {
+        self.bricks
+            .iter()
+            .filter(|(_, b)| b.brick.dataset == dataset)
+            .map(|(_, b)| crate::scheduler::BrickState {
+                id: b.brick,
+                n_events: b.n_events as usize,
+                bytes: b.bytes,
+                holders: b.holders.clone(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_and_poll() {
+        let mut cat = Catalog::new();
+        let (c0, ids) = cat.poll_new_jobs(0);
+        assert!(ids.is_empty());
+        let id = cat.submit_job(1, "max_pt > 20", "locality");
+        let (c1, ids) = cat.poll_new_jobs(c0);
+        assert_eq!(ids, vec![id]);
+        // after the cursor advances, the same job is not re-discovered
+        let (_, ids) = cat.poll_new_jobs(c1);
+        assert!(ids.is_empty());
+    }
+
+    #[test]
+    fn status_transitions_hide_from_poll() {
+        let mut cat = Catalog::new();
+        let id = cat.submit_job(1, "true", "locality");
+        cat.update_job(id, |j| j.status = JobStatus::Running);
+        // even from cursor 0, a Running job is not "new"
+        let (_, ids) = cat.poll_new_jobs(0);
+        assert!(ids.is_empty());
+        assert_eq!(cat.jobs.get(id).unwrap().status, JobStatus::Running);
+    }
+
+    #[test]
+    fn results_aggregate_per_job() {
+        let mut cat = Catalog::new();
+        let id = cat.submit_job(1, "true", "locality");
+        for i in 0..3 {
+            cat.record_result(ResultRow {
+                job: id,
+                node: format!("n{i}"),
+                brick: BrickId::new(1, i),
+                events_in: 100,
+                events_selected: 10,
+                result_bytes: 1000,
+            });
+        }
+        assert_eq!(cat.job_results(id).len(), 3);
+        assert_eq!(cat.job_results(999).len(), 0);
+    }
+
+    #[test]
+    fn wal_durability() {
+        let dir = std::env::temp_dir().join("geps-catalog-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("cat-{}.wal", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+
+        let job_id;
+        {
+            let mut cat = Catalog::open(&p).unwrap();
+            job_id = cat.submit_job(7, "met > 30", "proof");
+            cat.register_node("gandalf", 0.8, 1);
+            cat.insert_brick(
+                BrickId::new(7, 0),
+                500,
+                500 << 20,
+                vec!["gandalf".into()],
+            );
+            cat.update_job(job_id, |j| {
+                j.status = JobStatus::Done;
+                j.events_processed = 500;
+            });
+            cat.record_result(ResultRow {
+                job: job_id,
+                node: "gandalf".into(),
+                brick: BrickId::new(7, 0),
+                events_in: 500,
+                events_selected: 42,
+                result_bytes: 4200,
+            });
+        }
+        let cat = Catalog::open(&p).unwrap();
+        let job = cat.jobs.get(job_id).unwrap();
+        assert_eq!(job.status, JobStatus::Done);
+        assert_eq!(job.events_processed, 500);
+        assert_eq!(job.filter_expr, "met > 30");
+        assert_eq!(cat.nodes.len(), 1);
+        assert_eq!(cat.bricks.len(), 1);
+        assert_eq!(cat.results.len(), 1);
+        assert_eq!(cat.bricks_for_dataset(7).len(), 1);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn job_status_names_roundtrip() {
+        for s in [
+            JobStatus::Submitted,
+            JobStatus::Staging,
+            JobStatus::Running,
+            JobStatus::Merging,
+            JobStatus::Done,
+            JobStatus::Failed,
+        ] {
+            assert_eq!(JobStatus::by_name(s.name()), Some(s));
+        }
+        assert!(JobStatus::Done.is_terminal());
+        assert!(!JobStatus::Running.is_terminal());
+    }
+}

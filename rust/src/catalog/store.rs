@@ -1,0 +1,196 @@
+//! Generic row store with secondary indexes and change versions.
+//!
+//! Each mutation bumps a table-wide version counter and stamps the row;
+//! `changed_since(v)` is the primitive the JSE broker polls with — the
+//! paper's "broker that searches from time to time into the Meta-data
+//! catalogue" becomes an O(changes) scan instead of a full-table read.
+
+use std::collections::BTreeMap;
+
+/// Row identifier (monotonic per table).
+pub type RowId = u64;
+
+/// A typed table of rows.
+#[derive(Debug, Clone)]
+pub struct Table<R> {
+    rows: BTreeMap<RowId, (u64, R)>, // id -> (version, row)
+    next_id: RowId,
+    version: u64,
+}
+
+impl<R: Clone> Default for Table<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R: Clone> Table<R> {
+    pub fn new() -> Self {
+        Table { rows: BTreeMap::new(), next_id: 1, version: 0 }
+    }
+
+    /// Insert a row; returns its id.
+    pub fn insert(&mut self, row: R) -> RowId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.version += 1;
+        self.rows.insert(id, (self.version, row));
+        id
+    }
+
+    /// Insert with a caller-chosen id (WAL replay). Panics on collision.
+    pub fn insert_with_id(&mut self, id: RowId, row: R) {
+        assert!(!self.rows.contains_key(&id), "duplicate row id {id}");
+        self.version += 1;
+        self.rows.insert(id, (self.version, row));
+        self.next_id = self.next_id.max(id + 1);
+    }
+
+    pub fn get(&self, id: RowId) -> Option<&R> {
+        self.rows.get(&id).map(|(_, r)| r)
+    }
+
+    /// Update in place via closure; bumps the row's version. Returns
+    /// false if the row doesn't exist.
+    pub fn update(&mut self, id: RowId, f: impl FnOnce(&mut R)) -> bool {
+        if let Some((v, r)) = self.rows.get_mut(&id) {
+            f(r);
+            self.version += 1;
+            *v = self.version;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn remove(&mut self, id: RowId) -> Option<R> {
+        let out = self.rows.remove(&id).map(|(_, r)| r);
+        if out.is_some() {
+            self.version += 1;
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Current table version (the broker's cursor position).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (RowId, &R)> {
+        self.rows.iter().map(|(id, (_, r))| (*id, r))
+    }
+
+    /// Rows whose version is strictly greater than `since`, oldest first.
+    /// This is the broker poll primitive.
+    pub fn changed_since(&self, since: u64) -> Vec<(RowId, &R)> {
+        let mut out: Vec<(u64, RowId, &R)> = self
+            .rows
+            .iter()
+            .filter(|(_, (v, _))| *v > since)
+            .map(|(id, (v, r))| (*v, *id, r))
+            .collect();
+        out.sort_by_key(|(v, _, _)| *v);
+        out.into_iter().map(|(_, id, r)| (id, r)).collect()
+    }
+
+    /// Linear scan select (the catalogue's tables are small; indexes are
+    /// built by the schema layer where needed).
+    pub fn select(&self, pred: impl Fn(&R) -> bool) -> Vec<(RowId, &R)> {
+        self.iter().filter(|(_, r)| pred(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_update_remove() {
+        let mut t: Table<String> = Table::new();
+        let id = t.insert("a".into());
+        assert_eq!(t.get(id), Some(&"a".to_string()));
+        assert!(t.update(id, |r| r.push('b')));
+        assert_eq!(t.get(id), Some(&"ab".to_string()));
+        assert_eq!(t.remove(id), Some("ab".to_string()));
+        assert_eq!(t.get(id), None);
+        assert!(!t.update(id, |_| {}));
+    }
+
+    #[test]
+    fn ids_monotonic() {
+        let mut t: Table<u32> = Table::new();
+        let a = t.insert(1);
+        let b = t.insert(2);
+        assert!(b > a);
+        t.remove(b);
+        let c = t.insert(3);
+        assert!(c > b, "ids never reused");
+    }
+
+    #[test]
+    fn changed_since_cursor() {
+        let mut t: Table<u32> = Table::new();
+        let a = t.insert(10);
+        let v1 = t.version();
+        let b = t.insert(20);
+        let changed: Vec<RowId> =
+            t.changed_since(v1).into_iter().map(|(id, _)| id).collect();
+        assert_eq!(changed, vec![b]);
+        // updating an old row re-surfaces it after the cursor
+        let v2 = t.version();
+        t.update(a, |r| *r += 1);
+        let changed: Vec<RowId> =
+            t.changed_since(v2).into_iter().map(|(id, _)| id).collect();
+        assert_eq!(changed, vec![a]);
+        // cursor at head sees nothing
+        assert!(t.changed_since(t.version()).is_empty());
+    }
+
+    #[test]
+    fn changed_since_ordered_oldest_first() {
+        let mut t: Table<u32> = Table::new();
+        let a = t.insert(1);
+        let b = t.insert(2);
+        t.update(a, |r| *r += 1); // a now newer than b
+        let ids: Vec<RowId> =
+            t.changed_since(0).into_iter().map(|(id, _)| id).collect();
+        assert_eq!(ids, vec![b, a]);
+    }
+
+    #[test]
+    fn insert_with_id_replay() {
+        let mut t: Table<u32> = Table::new();
+        t.insert_with_id(5, 50);
+        t.insert_with_id(3, 30);
+        assert_eq!(t.get(5), Some(&50));
+        // next natural id continues after the max
+        let id = t.insert(60);
+        assert_eq!(id, 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn insert_with_id_collision_panics() {
+        let mut t: Table<u32> = Table::new();
+        t.insert_with_id(1, 1);
+        t.insert_with_id(1, 2);
+    }
+
+    #[test]
+    fn select_predicate() {
+        let mut t: Table<u32> = Table::new();
+        for i in 0..10 {
+            t.insert(i);
+        }
+        let odd = t.select(|r| r % 2 == 1);
+        assert_eq!(odd.len(), 5);
+    }
+}

@@ -1,0 +1,379 @@
+//! The live cluster: wires the whole GEPS stack together with real
+//! threads, real PJRT compute, real byte movement, and netsim-shaped
+//! delays (scaled by `time_scale`).
+//!
+//! Startup (the launcher a user's `geps serve` invokes):
+//! 1. generate the synthetic dataset, split into bricks, place them on
+//!    node disks per the grid-brick placement (plus a full copy on the
+//!    leader so the `central` baseline can stage);
+//! 2. populate the metadata catalogue (bricks, nodes);
+//! 3. spawn one engine-pool worker per node + the node actor threads;
+//! 4. spawn the JSE broker thread, which polls the catalogue and runs
+//!    discovered jobs;
+//! 5. publish every node's GRIS entries.
+//!
+//! The [`ClusterHandle`] is the programmatic API the portal/examples
+//! use: submit, wait, query GRIS, kill nodes, read metrics.
+
+use crate::brick::{split_events, BrickFile, Codec, SplitConfig};
+use crate::catalog::{Catalog, JobStatus};
+use crate::config::ClusterConfig;
+use crate::events::{EventGenerator, GeneratorConfig};
+use crate::gass::GassService;
+use crate::gris::{Directory, NodeInfoProvider};
+use crate::jse::{Jse, JseConfig};
+use crate::metrics::Registry;
+use crate::ft::Rereplicator;
+use crate::node::store::brick_path;
+use crate::node::{spawn_node, NodeConfig, NodeHandle};
+use crate::runtime::EnginePool;
+use crate::wire::Message;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A running cluster.
+pub struct ClusterHandle {
+    pub catalog: Arc<Mutex<Catalog>>,
+    pub gris: Arc<Mutex<Directory>>,
+    pub metrics: Arc<Registry>,
+    pub config: ClusterConfig,
+    gass: GassService,
+    nodes: Arc<Mutex<BTreeMap<String, NodeHandle>>>,
+    histograms: Arc<Mutex<BTreeMap<u64, Vec<f32>>>>,
+    broker_stop: Arc<AtomicBool>,
+    broker_join: Option<std::thread::JoinHandle<()>>,
+    pool: EnginePool,
+}
+
+impl ClusterHandle {
+    /// Start a cluster from config + compiled artifacts.
+    pub fn start(config: ClusterConfig, artifacts: std::path::PathBuf) -> Result<Self> {
+        let metrics = Arc::new(Registry::new());
+        let topology = config.topology();
+        let gass =
+            GassService::new(topology.clone(), config.time_scale, config.streams);
+        // one engine worker per node, min 1
+        let pool = EnginePool::start(artifacts, config.nodes.len().max(1))?;
+
+        // --- dataset generation + brick placement -------------------
+        let mut gen = EventGenerator::new(
+            GeneratorConfig { run: config.dataset, ..Default::default() },
+            config.seed,
+        );
+        let events = gen.take(config.n_events);
+        let node_names: Vec<String> =
+            config.nodes.iter().map(|n| n.name.clone()).collect();
+        let placements = split_events(
+            &SplitConfig {
+                dataset: config.dataset,
+                events_per_brick: config.events_per_brick,
+                replication: config.replication,
+            },
+            events.len(),
+            &node_names,
+        );
+
+        let mut catalog = Catalog::new();
+        for spec in &config.nodes {
+            catalog.register_node(&spec.name, spec.speed, spec.slots);
+        }
+        let leader = topology.leader().to_string();
+        for p in &placements {
+            let slice = &events[p.range.0..p.range.1];
+            let brick = BrickFile::encode(p.id, slice, Codec::Lzss, 256);
+            let path = brick_path(p.id);
+            // replicas on every holder's disk
+            for holder in &p.holders {
+                gass.store(holder)
+                    .ok_or_else(|| anyhow!("no store for {holder}"))?
+                    .put(&path, brick.bytes.clone());
+            }
+            // full copy at the leader: the `central` baseline stages from
+            // here, and recovery can re-replicate from it
+            gass.store(&leader).unwrap().put(&path, brick.bytes.clone());
+            catalog.insert_brick(
+                p.id,
+                (p.range.1 - p.range.0) as u64,
+                brick.size() as u64,
+                p.holders.clone(),
+            );
+        }
+        let catalog = Arc::new(Mutex::new(catalog));
+
+        // --- GRIS ----------------------------------------------------
+        let gris = Arc::new(Mutex::new(Directory::new()));
+        {
+            let mut dir = gris.lock().unwrap();
+            for spec in &config.nodes {
+                let bricks: Vec<(String, u64)> = placements
+                    .iter()
+                    .filter(|p| p.holders.contains(&spec.name))
+                    .map(|p| {
+                        (p.id.to_string(), (p.range.1 - p.range.0) as u64)
+                    })
+                    .collect();
+                NodeInfoProvider {
+                    name: spec.name.clone(),
+                    cpus: spec.slots,
+                    speed: spec.speed,
+                    mbps: (config.link.bandwidth_bps * 8.0 / 1e6) as u64,
+                    free_slots: spec.slots,
+                    bricks,
+                    up: true,
+                }
+                .publish(&mut dir, "geps");
+            }
+        }
+
+        // --- node actors ----------------------------------------------
+        let (out_tx, out_rx) = std::sync::mpsc::channel::<Message>();
+        let mut handles = BTreeMap::new();
+        let mut node_txs: BTreeMap<String, Sender<Message>> = BTreeMap::new();
+        for spec in &config.nodes {
+            let handle = spawn_node(
+                NodeConfig {
+                    name: spec.name.clone(),
+                    slots: spec.slots,
+                    speed: spec.speed,
+                    heartbeat_s: 2.0,
+                    time_scale: config.time_scale,
+                },
+                gass.clone(),
+                pool.clone(),
+                out_tx.clone(),
+            );
+            node_txs.insert(spec.name.clone(), handle.tx.clone());
+            handles.insert(spec.name.clone(), handle);
+        }
+        let nodes = Arc::new(Mutex::new(handles));
+
+        // --- broker ----------------------------------------------------
+        let histograms: Arc<Mutex<BTreeMap<u64, Vec<f32>>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let broker_stop = Arc::new(AtomicBool::new(false));
+        let stop = broker_stop.clone();
+        let cat2 = catalog.clone();
+        let hist2 = histograms.clone();
+        let met2 = metrics.clone();
+        let jse_cfg = JseConfig {
+            time_scale: config.time_scale,
+            streams: config.streams,
+            ..Default::default()
+        };
+        let gass2 = gass.clone();
+        let gris2 = gris.clone();
+        let replication = config.replication;
+        let poll = Duration::from_secs_f64(2.0 / config.time_scale.max(1e-9));
+        let broker_join = std::thread::Builder::new()
+            .name("geps-broker".into())
+            .spawn(move || {
+                let mut jse = Jse::new(jse_cfg, node_txs, out_rx, cat2.clone());
+                let mut cursor = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let (next, jobs) =
+                        cat2.lock().unwrap().poll_new_jobs(cursor);
+                    cursor = next;
+                    for job in jobs {
+                        met2.counter("jse.jobs_discovered").inc();
+                        let t0 = Instant::now();
+                        let outcome = jse.run_job(job);
+                        met2.histogram("jse.job_wall_ns")
+                            .record(t0.elapsed().as_nanos() as u64);
+                        met2.counter(match outcome.status {
+                            JobStatus::Done => "jse.jobs_done",
+                            _ => "jse.jobs_failed",
+                        })
+                        .inc();
+                        hist2
+                            .lock()
+                            .unwrap()
+                            .insert(job, outcome.histogram.clone());
+                        // GRIS reflects liveness ("how many processors
+                        // are available at this moment", §4.3)
+                        for dead in &outcome.nodes_lost {
+                            let mut dir = gris2.lock().unwrap();
+                            let dn = format!("nn={dead}, o=geps");
+                            if let Some(e) = dir.lookup(&dn).cloned() {
+                                let mut e = e;
+                                e.attrs.insert(
+                                    "status".into(),
+                                    "down".into(),
+                                );
+                                e.attrs.insert(
+                                    "freeslots".into(),
+                                    "0".into(),
+                                );
+                                dir.bind(e);
+                            }
+                        }
+                        // §7 recovery: after a node death, restore the
+                        // replication factor by copying sole-held bricks
+                        // from survivors to new holders, and record the
+                        // new placement in the catalogue so the *next*
+                        // job schedules against healthy replicas.
+                        if !outcome.nodes_lost.is_empty() {
+                            recover_replication(
+                                &cat2, &gass2, replication, &met2,
+                            );
+                        }
+                    }
+                    std::thread::sleep(poll);
+                }
+            })
+            .expect("spawn broker");
+
+        Ok(ClusterHandle {
+            catalog,
+            gris,
+            metrics,
+            config,
+            gass,
+            nodes,
+            histograms,
+            broker_stop,
+            broker_join: Some(broker_join),
+            pool,
+        })
+    }
+
+    /// Submit a job (what the portal's submit form does). Returns job id.
+    pub fn submit(&self, filter_expr: &str, policy: &str) -> u64 {
+        self.metrics.counter("portal.submissions").inc();
+        self.catalog.lock().unwrap().submit_job(
+            self.config.dataset,
+            filter_expr,
+            policy,
+        )
+    }
+
+    /// Block until the job reaches a terminal state (or timeout).
+    pub fn wait(&self, job: u64, timeout: Duration) -> Result<JobStatus> {
+        let start = Instant::now();
+        loop {
+            let status = self
+                .catalog
+                .lock()
+                .unwrap()
+                .jobs
+                .get(job)
+                .map(|j| j.status)
+                .ok_or_else(|| anyhow!("no such job {job}"))?;
+            if status.is_terminal() {
+                return Ok(status);
+            }
+            if start.elapsed() > timeout {
+                return Err(anyhow!("timeout waiting for job {job} ({status:?})"));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Merged histogram of a finished job (F x bins, row-major).
+    pub fn histogram(&self, job: u64) -> Option<Vec<f32>> {
+        self.histograms.lock().unwrap().get(&job).cloned()
+    }
+
+    /// Kill a node (fault injection): its thread dies silently.
+    pub fn kill_node(&self, name: &str) -> bool {
+        let nodes = self.nodes.lock().unwrap();
+        match nodes.get(name) {
+            Some(h) => {
+                h.kill();
+                self.metrics.counter("cluster.nodes_killed").inc();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// LDAP-style GRIS query (the portal's node-info page).
+    pub fn gris_search(&self, base: &str, filter: &str) -> Result<Vec<(String, BTreeMap<String, String>)>> {
+        let f = crate::gris::parse_filter(filter)
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(self
+            .gris
+            .lock()
+            .unwrap()
+            .search(base, &f)
+            .into_iter()
+            .map(|e| (e.dn.clone(), e.attrs.clone()))
+            .collect())
+    }
+
+    pub fn gass(&self) -> &GassService {
+        &self.gass
+    }
+
+    /// Orderly shutdown: stop broker, then nodes, then engines.
+    pub fn shutdown(mut self) {
+        self.broker_stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.broker_join.take() {
+            let _ = j.join();
+        }
+        for (_, h) in self.nodes.lock().unwrap().iter_mut() {
+            h.shutdown();
+        }
+        self.pool.shutdown();
+    }
+}
+
+/// Restore the replication factor after node deaths (paper §7: "create
+/// a redundancy mechanism to recover from a malfunction in the nodes").
+fn recover_replication(
+    catalog: &Arc<Mutex<Catalog>>,
+    gass: &GassService,
+    replication: usize,
+    metrics: &Arc<Registry>,
+) {
+    use std::collections::{BTreeSet};
+    let (holders_map, down, live): (
+        std::collections::BTreeMap<crate::brick::BrickId, Vec<String>>,
+        BTreeSet<String>,
+        Vec<String>,
+    ) = {
+        let cat = catalog.lock().unwrap();
+        let holders = cat
+            .bricks
+            .iter()
+            .map(|(_, b)| (b.brick, b.holders.clone()))
+            .collect();
+        let down = cat
+            .nodes
+            .iter()
+            .filter(|(_, n)| !n.up)
+            .map(|(_, n)| n.name.clone())
+            .collect();
+        let live = cat
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.up)
+            .map(|(_, n)| n.name.clone())
+            .collect();
+        (holders, down, live)
+    };
+    let rr = Rereplicator::new(replication);
+    let plans = rr.plan(&holders_map, &down, &live);
+    if plans.is_empty() {
+        return;
+    }
+    let done = rr.execute(&plans, gass);
+    let mut cat = catalog.lock().unwrap();
+    for p in &done {
+        metrics.counter("ft.bricks_rereplicated").inc();
+        let mut new_holders: Vec<String> = holders_map
+            .get(&p.brick)
+            .cloned()
+            .unwrap_or_default()
+            .into_iter()
+            .filter(|h| !down.contains(h))
+            .collect();
+        new_holders.push(p.target.clone());
+        cat.update_brick_holders(p.brick, new_holders);
+    }
+}
+
+// Full-cluster tests need compiled artifacts: see rust/tests/end_to_end.rs.

@@ -1,0 +1,259 @@
+//! Typed cluster configuration — what the `geps` launcher reads.
+//!
+//! ```toml
+//! [cluster]
+//! leader = "jse"
+//! link = "lan_fast_ethernet"   # lan_fast_ethernet|lan_gigabit|wan|wan_tuned
+//! time_scale = 1000.0
+//!
+//! [scheduler]
+//! policy = "locality"
+//! replication = 2
+//! streams = 1
+//!
+//! [data]
+//! dataset = 1
+//! n_events = 4000
+//! events_per_brick = 250
+//! seed = 42
+//!
+//! [node.gandalf]
+//! speed = 0.8
+//! slots = 1
+//!
+//! [node.hobbit]
+//! speed = 1.0
+//! slots = 1
+//! ```
+
+use crate::config::toml::{TomlDoc, TomlValue};
+use crate::netsim::{Link, Topology};
+use crate::scheduler::Policy;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    pub speed: f64,
+    pub slots: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub leader: String,
+    pub link: Link,
+    /// wall-clock speedup of modelled delays in the live cluster
+    pub time_scale: f64,
+    pub policy: Policy,
+    pub replication: usize,
+    pub streams: u32,
+    pub dataset: u32,
+    pub n_events: usize,
+    pub events_per_brick: usize,
+    pub seed: u64,
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            leader: "jse".into(),
+            link: Link::lan_fast_ethernet(),
+            time_scale: 1000.0,
+            policy: Policy::Locality,
+            replication: 1,
+            streams: 1,
+            dataset: 1,
+            n_events: 2000,
+            events_per_brick: 250,
+            seed: 42,
+            nodes: vec![
+                NodeSpec { name: "gandalf".into(), speed: 0.8, slots: 1 },
+                NodeSpec { name: "hobbit".into(), speed: 1.0, slots: 1 },
+            ],
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+fn link_by_name(s: &str) -> Option<Link> {
+    Some(match s {
+        "lan_fast_ethernet" => Link::lan_fast_ethernet(),
+        "lan_gigabit" => Link::lan_gigabit(),
+        "wan" => Link::wan_default_window(),
+        "wan_tuned" => Link::wan_tuned_window(),
+        _ => return None,
+    })
+}
+
+impl ClusterConfig {
+    pub fn parse(src: &str) -> Result<ClusterConfig, ConfigError> {
+        let doc = TomlDoc::parse(src).map_err(|e| ConfigError(e.to_string()))?;
+        let mut cfg = ClusterConfig { nodes: Vec::new(), ..Default::default() };
+
+        let get_str = |sec: &str, key: &str| -> Option<String> {
+            doc.get(sec, key).and_then(|v| v.as_str()).map(String::from)
+        };
+
+        if let Some(l) = get_str("cluster", "leader") {
+            cfg.leader = l;
+        }
+        if let Some(l) = get_str("cluster", "link") {
+            cfg.link = link_by_name(&l)
+                .ok_or_else(|| ConfigError(format!("unknown link '{l}'")))?;
+        }
+        if let Some(v) = doc.get("cluster", "time_scale").and_then(TomlValue::as_f64) {
+            if v <= 0.0 {
+                return Err(ConfigError("time_scale must be > 0".into()));
+            }
+            cfg.time_scale = v;
+        }
+        if let Some(p) = get_str("scheduler", "policy") {
+            cfg.policy = Policy::by_name(&p)
+                .ok_or_else(|| ConfigError(format!("unknown policy '{p}'")))?;
+        }
+        if let Some(v) = doc.get("scheduler", "replication").and_then(TomlValue::as_i64) {
+            if v < 1 {
+                return Err(ConfigError("replication must be >= 1".into()));
+            }
+            cfg.replication = v as usize;
+        }
+        if let Some(v) = doc.get("scheduler", "streams").and_then(TomlValue::as_i64) {
+            if !(1..=64).contains(&v) {
+                return Err(ConfigError("streams must be in 1..=64".into()));
+            }
+            cfg.streams = v as u32;
+        }
+        if let Some(v) = doc.get("data", "dataset").and_then(TomlValue::as_i64) {
+            cfg.dataset = v as u32;
+        }
+        if let Some(v) = doc.get("data", "n_events").and_then(TomlValue::as_i64) {
+            if v < 1 {
+                return Err(ConfigError("n_events must be >= 1".into()));
+            }
+            cfg.n_events = v as usize;
+        }
+        if let Some(v) = doc.get("data", "events_per_brick").and_then(TomlValue::as_i64)
+        {
+            if v < 1 {
+                return Err(ConfigError("events_per_brick must be >= 1".into()));
+            }
+            cfg.events_per_brick = v as usize;
+        }
+        if let Some(v) = doc.get("data", "seed").and_then(TomlValue::as_i64) {
+            cfg.seed = v as u64;
+        }
+
+        for (name, kv) in doc.sections_under("node") {
+            let node_name = name.strip_prefix("node.").unwrap().to_string();
+            let speed = kv.get("speed").and_then(TomlValue::as_f64).unwrap_or(1.0);
+            let slots = kv
+                .get("slots")
+                .and_then(TomlValue::as_i64)
+                .unwrap_or(1)
+                .max(1) as usize;
+            if speed <= 0.0 {
+                return Err(ConfigError(format!(
+                    "node {node_name}: speed must be > 0"
+                )));
+            }
+            cfg.nodes.push(NodeSpec { name: node_name, speed, slots });
+        }
+        if cfg.nodes.is_empty() {
+            cfg.nodes = ClusterConfig::default().nodes;
+        }
+        if cfg.replication > cfg.nodes.len() {
+            return Err(ConfigError(format!(
+                "replication {} exceeds node count {}",
+                cfg.replication,
+                cfg.nodes.len()
+            )));
+        }
+        if cfg.nodes.iter().any(|n| n.name == cfg.leader) {
+            return Err(ConfigError(
+                "leader must not also be a worker node".into(),
+            ));
+        }
+        Ok(cfg)
+    }
+
+    /// Build the netsim topology for this cluster.
+    pub fn topology(&self) -> Topology {
+        let mut t = Topology::new(&self.leader, self.link);
+        for n in &self.nodes {
+            t.add_host(&n.name);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ClusterConfig::parse(
+            r#"
+            [cluster]
+            leader = "jse"
+            link = "lan_gigabit"
+            time_scale = 500.0
+            [scheduler]
+            policy = "proof"
+            replication = 2
+            streams = 4
+            [data]
+            dataset = 3
+            n_events = 10000
+            events_per_brick = 500
+            seed = 7
+            [node.gandalf]
+            speed = 0.8
+            [node.hobbit]
+            speed = 1.0
+            slots = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, Policy::Proof);
+        assert_eq!(cfg.replication, 2);
+        assert_eq!(cfg.streams, 4);
+        assert_eq!(cfg.n_events, 10000);
+        assert_eq!(cfg.nodes.len(), 2);
+        assert_eq!(cfg.nodes[1].slots, 2);
+        let topo = cfg.topology();
+        assert_eq!(topo.workers().len(), 2);
+    }
+
+    #[test]
+    fn defaults_for_empty_config() {
+        let cfg = ClusterConfig::parse("").unwrap();
+        assert_eq!(cfg, ClusterConfig::default());
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(ClusterConfig::parse("[scheduler]\npolicy = \"bogus\"").is_err());
+        assert!(ClusterConfig::parse("[cluster]\nlink = \"carrier-pigeon\"").is_err());
+        assert!(ClusterConfig::parse("[data]\nn_events = 0").is_err());
+        assert!(ClusterConfig::parse(
+            "[scheduler]\nreplication = 5\n[node.a]\nspeed = 1.0"
+        )
+        .is_err());
+        assert!(ClusterConfig::parse(
+            "[cluster]\nleader = \"a\"\n[node.a]\nspeed = 1.0"
+        )
+        .is_err());
+        assert!(ClusterConfig::parse("[node.a]\nspeed = -1.0").is_err());
+        assert!(ClusterConfig::parse("[cluster]\ntime_scale = 0").is_err());
+    }
+}

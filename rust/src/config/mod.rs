@@ -1,0 +1,12 @@
+//! Configuration system: a hand-rolled TOML-subset parser ([`toml`]) and
+//! the typed cluster configuration ([`cluster`]) the launcher consumes.
+//! Supported TOML subset: `[section]` / `[section.sub]` headers,
+//! `key = value` with strings, integers, floats, booleans, and flat
+//! arrays; `#` comments. That covers every config this framework needs
+//! without an external dependency.
+
+pub mod cluster;
+pub mod toml;
+
+pub use cluster::{ClusterConfig, NodeSpec};
+pub use toml::{TomlDoc, TomlValue};

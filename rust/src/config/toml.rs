@@ -1,0 +1,305 @@
+//! TOML-subset parser.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted section path -> key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let s = s.trim();
+    let err = |msg: &str| TomlError { line, msg: msg.to_string() };
+    if s.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string"))?;
+        // basic escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => {
+                        return Err(err(&format!("bad escape {other:?}")))
+                    }
+                }
+            } else if c == '"' {
+                return Err(err("unescaped quote in string"));
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner =
+            inner.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let mut items = Vec::new();
+        // split on top-level commas (no nested arrays in the subset, but
+        // strings may contain commas)
+        let mut depth_quote = false;
+        let mut cur = String::new();
+        for c in inner.chars() {
+            match c {
+                '"' => {
+                    depth_quote = !depth_quote;
+                    cur.push(c);
+                }
+                ',' if !depth_quote => {
+                    if !cur.trim().is_empty() {
+                        items.push(parse_value(&cur, line)?);
+                    }
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            }
+        }
+        if !cur.trim().is_empty() {
+            items.push(parse_value(&cur, line)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(&format!("unparseable value '{s}'")))
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (idx, raw) in src.lines().enumerate() {
+            let line_no = idx + 1;
+            // strip comments outside strings
+            let mut in_str = false;
+            let mut line = String::new();
+            for c in raw.chars() {
+                match c {
+                    '"' => {
+                        in_str = !in_str;
+                        line.push(c);
+                    }
+                    '#' if !in_str => break,
+                    _ => line.push(c),
+                }
+            }
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(hdr) = line.strip_prefix('[') {
+                let hdr = hdr.strip_suffix(']').ok_or(TomlError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = hdr.trim().to_string();
+                if section.is_empty() {
+                    return Err(TomlError {
+                        line: line_no,
+                        msg: "empty section name".into(),
+                    });
+                }
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(TomlError {
+                line: line_no,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(TomlError {
+                    line: line_no,
+                    msg: "empty key".into(),
+                });
+            }
+            let val = parse_value(v, line_no)?;
+            let sect = doc.sections.get_mut(&section).unwrap();
+            if sect.insert(key.clone(), val).is_some() {
+                return Err(TomlError {
+                    line: line_no,
+                    msg: format!("duplicate key '{key}'"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Sections whose path starts with `prefix.` (e.g. all `[node.X]`).
+    pub fn sections_under(&self, prefix: &str) -> Vec<(&str, &BTreeMap<String, TomlValue>)> {
+        let p = format!("{prefix}.");
+        self.sections
+            .iter()
+            .filter(|(name, _)| name.starts_with(&p))
+            .map(|(name, kv)| (name.as_str(), kv))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_typed_values() {
+        let doc = TomlDoc::parse(
+            r#"
+            # cluster config
+            name = "geps"          # inline comment
+            [scheduler]
+            policy = "locality"
+            replication = 2
+            event_s = 0.04
+            prestage = false
+            nodes = ["gandalf", "hobbit"]
+            speeds = [0.8, 1.0]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("geps"));
+        assert_eq!(
+            doc.get("scheduler", "replication").unwrap().as_i64(),
+            Some(2)
+        );
+        assert_eq!(
+            doc.get("scheduler", "event_s").unwrap().as_f64(),
+            Some(0.04)
+        );
+        assert_eq!(
+            doc.get("scheduler", "prestage").unwrap().as_bool(),
+            Some(false)
+        );
+        let nodes = doc.get("scheduler", "nodes").unwrap().as_array().unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[1].as_str(), Some("hobbit"));
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            [node.gandalf]
+            speed = 0.8
+            [node.hobbit]
+            speed = 1.0
+            "#,
+        )
+        .unwrap();
+        let nodes = doc.sections_under("node");
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(
+            doc.get("node.gandalf", "speed").unwrap().as_f64(),
+            Some(0.8)
+        );
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc =
+            TomlDoc::parse("s = \"a#b \\\"q\\\" \\n\"").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b \"q\" \n"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("[]").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("i = 3\nf = 3.5").unwrap();
+        assert_eq!(doc.get("", "i").unwrap().as_i64(), Some(3));
+        assert_eq!(doc.get("", "i").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("", "f").unwrap().as_i64(), None);
+        assert_eq!(doc.get("", "f").unwrap().as_f64(), Some(3.5));
+    }
+}

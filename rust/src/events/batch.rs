@@ -1,0 +1,144 @@
+//! SoA batching: pack `Event`s into the padded dense tensors the AOT HLO
+//! executables expect — tracks (B, T, 4) and mask (B, T) as flat f32
+//! buffers. The runtime executes fixed-shape batches; tails are padded
+//! with mask = 0, which the kernel treats exactly (see L1 padding tests).
+
+use crate::events::model::Event;
+
+/// A dense, kernel-ready batch of events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventBatch {
+    /// flattened (batch, max_tracks, 4) row-major
+    pub tracks: Vec<f32>,
+    /// flattened (batch, max_tracks)
+    pub mask: Vec<f32>,
+    /// event ids, one per *real* row (len == n_real)
+    pub ids: Vec<u64>,
+    /// batch dimension B (incl. padding rows)
+    pub batch: usize,
+    /// padded track dimension T
+    pub max_tracks: usize,
+}
+
+impl EventBatch {
+    /// Pack `events` into a batch of exactly `batch` rows (events beyond
+    /// `batch` are ignored; rows beyond `events.len()` are zero padding).
+    /// Tracks beyond `max_tracks` in an event are dropped deterministically
+    /// (highest-index first — generator orders signal last, so cap configs
+    /// must keep max_tracks >= generator cap + 2; asserted in the cluster
+    /// config validation).
+    pub fn pack(events: &[Event], batch: usize, max_tracks: usize) -> Self {
+        let n_real = events.len().min(batch);
+        let mut tracks = vec![0f32; batch * max_tracks * 4];
+        let mut mask = vec![0f32; batch * max_tracks];
+        let mut ids = Vec::with_capacity(n_real);
+        for (b, ev) in events.iter().take(batch).enumerate() {
+            ids.push(ev.id);
+            for (t, tr) in ev.tracks.iter().take(max_tracks).enumerate() {
+                let base = (b * max_tracks + t) * 4;
+                tracks[base] = tr.e;
+                tracks[base + 1] = tr.px;
+                tracks[base + 2] = tr.py;
+                tracks[base + 3] = tr.pz;
+                mask[b * max_tracks + t] = 1.0;
+            }
+        }
+        EventBatch { tracks, mask, ids, batch, max_tracks }
+    }
+
+    /// Number of real (non-padding) events.
+    pub fn n_real(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Chunk a slice of events into kernel-sized batches.
+    pub fn chunks(
+        events: &[Event],
+        batch: usize,
+        max_tracks: usize,
+    ) -> Vec<EventBatch> {
+        events
+            .chunks(batch)
+            .map(|c| EventBatch::pack(c, batch, max_tracks))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::generator::{EventGenerator, GeneratorConfig};
+
+    fn gen(n: usize) -> Vec<Event> {
+        EventGenerator::new(GeneratorConfig::default(), 5).take(n)
+    }
+
+    #[test]
+    fn pack_shapes() {
+        let evs = gen(10);
+        let b = EventBatch::pack(&evs, 16, 32);
+        assert_eq!(b.tracks.len(), 16 * 32 * 4);
+        assert_eq!(b.mask.len(), 16 * 32);
+        assert_eq!(b.n_real(), 10);
+        assert_eq!(b.batch, 16);
+    }
+
+    #[test]
+    fn mask_matches_track_counts() {
+        let evs = gen(8);
+        let b = EventBatch::pack(&evs, 8, 32);
+        for (i, ev) in evs.iter().enumerate() {
+            let row = &b.mask[i * 32..(i + 1) * 32];
+            let n: f32 = row.iter().sum();
+            assert_eq!(n as usize, ev.tracks.len().min(32));
+            // validity is a prefix
+            let first_zero =
+                row.iter().position(|&m| m == 0.0).unwrap_or(32);
+            assert!(row[..first_zero].iter().all(|&m| m == 1.0));
+            assert!(row[first_zero..].iter().all(|&m| m == 0.0));
+        }
+    }
+
+    #[test]
+    fn padding_rows_are_zero() {
+        let evs = gen(3);
+        let b = EventBatch::pack(&evs, 8, 16);
+        assert!(b.mask[3 * 16..].iter().all(|&m| m == 0.0));
+        assert!(b.tracks[3 * 16 * 4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn values_roundtrip() {
+        let evs = gen(2);
+        let b = EventBatch::pack(&evs, 2, 32);
+        let tr = &evs[1].tracks[0];
+        let base = (32 + 0) * 4;
+        assert_eq!(b.tracks[base], tr.e);
+        assert_eq!(b.tracks[base + 1], tr.px);
+        assert_eq!(b.tracks[base + 2], tr.py);
+        assert_eq!(b.tracks[base + 3], tr.pz);
+    }
+
+    #[test]
+    fn chunking_covers_all_events() {
+        let evs = gen(70);
+        let batches = EventBatch::chunks(&evs, 32, 32);
+        assert_eq!(batches.len(), 3);
+        let total: usize = batches.iter().map(|b| b.n_real()).sum();
+        assert_eq!(total, 70);
+        assert_eq!(batches[2].n_real(), 6);
+        let all_ids: Vec<u64> =
+            batches.iter().flat_map(|b| b.ids.clone()).collect();
+        assert_eq!(all_ids, evs.iter().map(|e| e.id).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn track_overflow_is_truncated() {
+        let evs = gen(4);
+        let b = EventBatch::pack(&evs, 4, 2);
+        for i in 0..4 {
+            let n: f32 = b.mask[i * 2..(i + 1) * 2].iter().sum();
+            assert!(n <= 2.0);
+        }
+    }
+}

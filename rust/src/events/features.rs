@@ -1,0 +1,95 @@
+//! Feature-vector layout — the contract between the L1 Pallas kernel and
+//! the L3 filter-expression evaluator. MUST stay in sync with
+//! `python/compile/kernels/ref.py::FEATURES`; the runtime cross-checks
+//! this list against `artifacts/manifest.json` at load time.
+
+/// Number of per-event features the kernel emits.
+pub const NUM_FEATURES: usize = 8;
+
+/// Feature indices into the kernel's (B, F) output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum FeatureId {
+    NTracks = 0,
+    SumPt = 1,
+    MaxPt = 2,
+    Met = 3,
+    TotalMass = 4,
+    MaxPairMass = 5,
+    MaxAbsEta = 6,
+    HtFrac = 7,
+}
+
+impl FeatureId {
+    pub const ALL: [FeatureId; NUM_FEATURES] = [
+        FeatureId::NTracks,
+        FeatureId::SumPt,
+        FeatureId::MaxPt,
+        FeatureId::Met,
+        FeatureId::TotalMass,
+        FeatureId::MaxPairMass,
+        FeatureId::MaxAbsEta,
+        FeatureId::HtFrac,
+    ];
+
+    /// Canonical name, as used in filter expressions and the manifest.
+    pub fn name(self) -> &'static str {
+        match self {
+            FeatureId::NTracks => "n_tracks",
+            FeatureId::SumPt => "sum_pt",
+            FeatureId::MaxPt => "max_pt",
+            FeatureId::Met => "met",
+            FeatureId::TotalMass => "total_mass",
+            FeatureId::MaxPairMass => "max_pair_mass",
+            FeatureId::MaxAbsEta => "max_abs_eta",
+            FeatureId::HtFrac => "ht_frac",
+        }
+    }
+
+    /// Reverse lookup by name (filter-expression binding).
+    pub fn by_name(name: &str) -> Option<FeatureId> {
+        FeatureId::ALL.iter().copied().find(|f| f.name() == name)
+    }
+
+    /// Sensible histogram range [lo, hi) per feature for merge/visualise.
+    pub fn hist_range(self) -> (f32, f32) {
+        match self {
+            FeatureId::NTracks => (0.0, 64.0),
+            FeatureId::SumPt => (0.0, 500.0),
+            FeatureId::MaxPt => (0.0, 150.0),
+            FeatureId::Met => (0.0, 100.0),
+            FeatureId::TotalMass => (0.0, 600.0),
+            FeatureId::MaxPairMass => (0.0, 300.0),
+            FeatureId::MaxAbsEta => (0.0, 6.0),
+            FeatureId::HtFrac => (0.0, 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique_and_reversible() {
+        for f in FeatureId::ALL {
+            assert_eq!(FeatureId::by_name(f.name()), Some(f));
+        }
+        assert_eq!(FeatureId::by_name("nope"), None);
+    }
+
+    #[test]
+    fn indices_are_dense() {
+        for (i, f) in FeatureId::ALL.iter().enumerate() {
+            assert_eq!(*f as usize, i);
+        }
+    }
+
+    #[test]
+    fn ranges_are_ordered() {
+        for f in FeatureId::ALL {
+            let (lo, hi) = f.hist_range();
+            assert!(lo < hi);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! HEP event data model + synthetic generator (substrate for the paper's
+//! ATLAS raw events, §1.1/§4.1): events are sets of charged-particle tracks
+//! (4-vectors) with optional vertices; the generator produces QCD-like
+//! background plus occasional heavy-resonance "signal" events so that
+//! filter expressions select a physically meaningful subset.
+
+pub mod batch;
+pub mod features;
+pub mod generator;
+pub mod model;
+
+pub use batch::EventBatch;
+pub use features::{FeatureId, NUM_FEATURES};
+pub use generator::{EventGenerator, GeneratorConfig};
+pub use model::{Event, Track, Vertex};

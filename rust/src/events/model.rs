@@ -1,0 +1,139 @@
+//! Core event types: Track (4-vector), Vertex, Event.
+
+/// A charged-particle track as a 4-vector (E, px, py, pz), plus the vertex
+/// it is associated with. Units are GeV (natural units, c = 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Track {
+    pub e: f32,
+    pub px: f32,
+    pub py: f32,
+    pub pz: f32,
+    /// index into the event's vertex list
+    pub vertex: u16,
+}
+
+impl Track {
+    pub fn new(e: f32, px: f32, py: f32, pz: f32) -> Self {
+        Track { e, px, py, pz, vertex: 0 }
+    }
+
+    /// Transverse momentum.
+    pub fn pt(&self) -> f32 {
+        (self.px * self.px + self.py * self.py).sqrt()
+    }
+
+    /// Momentum magnitude.
+    pub fn p(&self) -> f32 {
+        (self.px * self.px + self.py * self.py + self.pz * self.pz).sqrt()
+    }
+
+    /// Invariant mass (guarded against f32 noise making m^2 slightly < 0).
+    pub fn mass(&self) -> f32 {
+        let m2 = self.e * self.e - self.p() * self.p();
+        m2.max(0.0).sqrt()
+    }
+
+    /// Pseudorapidity.
+    pub fn eta(&self) -> f32 {
+        let p = self.p();
+        if p <= 0.0 {
+            return 0.0;
+        }
+        let frac = (self.pz / p).clamp(-0.999_999, 0.999_999);
+        frac.atanh()
+    }
+}
+
+/// A reconstructed interaction vertex.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Vertex {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub n_tracks: u16,
+}
+
+/// One collision event: what the paper stores as one entry of the ROOT
+/// tree (§4.1 — "inside this branch are all event variables that include
+/// the tracks, vertices, and relations").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Globally unique event id (run << 32 | index).
+    pub id: u64,
+    pub tracks: Vec<Track>,
+    pub vertices: Vec<Vertex>,
+    /// True generator label (signal resonance present) — kept for
+    /// validating that filters select what they should; NOT visible to
+    /// the filter kernel.
+    pub is_signal: bool,
+}
+
+impl Event {
+    /// Event id helpers.
+    pub fn make_id(run: u32, index: u32) -> u64 {
+        ((run as u64) << 32) | index as u64
+    }
+
+    pub fn run(&self) -> u32 {
+        (self.id >> 32) as u32
+    }
+
+    pub fn index(&self) -> u32 {
+        (self.id & 0xffff_ffff) as u32
+    }
+
+    /// Nominal serialized payload size of this event in the brick format
+    /// (header + tracks + vertices), used for byte accounting.
+    pub fn payload_bytes(&self) -> usize {
+        16 + self.tracks.len() * 18 + self.vertices.len() * 14
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn track_kinematics() {
+        let t = Track::new(5.0, 3.0, 4.0, 0.0);
+        assert!((t.pt() - 5.0).abs() < 1e-6);
+        assert!((t.p() - 5.0).abs() < 1e-6);
+        assert!(t.mass() < 1e-3);
+        assert!(t.eta().abs() < 1e-6);
+    }
+
+    #[test]
+    fn track_mass_guard() {
+        // E slightly below |p| from float noise must not NaN.
+        let t = Track::new(4.999_999, 3.0, 4.0, 0.0);
+        assert!(t.mass().is_finite());
+    }
+
+    #[test]
+    fn eta_sign_follows_pz() {
+        let fwd = Track::new(10.0, 1.0, 0.0, 5.0);
+        let bwd = Track::new(10.0, 1.0, 0.0, -5.0);
+        assert!(fwd.eta() > 0.0);
+        assert!(bwd.eta() < 0.0);
+        assert!((fwd.eta() + bwd.eta()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn event_id_roundtrip() {
+        let id = Event::make_id(7, 12345);
+        let ev = Event { id, tracks: vec![], vertices: vec![], is_signal: false };
+        assert_eq!(ev.run(), 7);
+        assert_eq!(ev.index(), 12345);
+    }
+
+    #[test]
+    fn payload_bytes_scale_with_tracks() {
+        let mk = |n: usize| Event {
+            id: 0,
+            tracks: vec![Track::new(1.0, 0.0, 0.0, 0.0); n],
+            vertices: vec![],
+            is_signal: false,
+        };
+        assert!(mk(10).payload_bytes() > mk(2).payload_bytes());
+    }
+}

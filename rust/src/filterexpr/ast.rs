@@ -1,0 +1,202 @@
+//! Filter-expression AST and type checking.
+
+use crate::events::FeatureId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Or,
+    And,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl BinOp {
+    pub fn is_comparison(self) -> bool {
+        matches!(
+            self,
+            BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne
+        )
+    }
+
+    pub fn is_logical(self) -> bool {
+        matches!(self, BinOp::Or | BinOp::And)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Not,
+    Neg,
+}
+
+/// Built-in functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Func {
+    Abs,
+    Min,
+    Max,
+    Sqrt,
+}
+
+impl Func {
+    pub fn by_name(s: &str) -> Option<Func> {
+        Some(match s {
+            "abs" => Func::Abs,
+            "min" => Func::Min,
+            "max" => Func::Max,
+            "sqrt" => Func::Sqrt,
+            _ => return None,
+        })
+    }
+
+    pub fn arity(self) -> usize {
+        match self {
+            Func::Abs | Func::Sqrt => 1,
+            Func::Min | Func::Max => 2,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    Bool(bool),
+    Feature(FeatureId),
+    Un(UnOp, Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Call(Func, Vec<Expr>),
+}
+
+/// Expression types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ty {
+    Num,
+    Bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypeError(pub String);
+
+impl std::fmt::Display for TypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "type error: {}", self.0)
+    }
+}
+impl std::error::Error for TypeError {}
+
+impl Expr {
+    /// Infer & check the type of the expression.
+    pub fn check(&self) -> Result<Ty, TypeError> {
+        match self {
+            Expr::Num(_) => Ok(Ty::Num),
+            Expr::Bool(_) => Ok(Ty::Bool),
+            Expr::Feature(_) => Ok(Ty::Num),
+            Expr::Un(UnOp::Not, e) => {
+                if e.check()? == Ty::Bool {
+                    Ok(Ty::Bool)
+                } else {
+                    Err(TypeError("'!' needs a boolean".into()))
+                }
+            }
+            Expr::Un(UnOp::Neg, e) => {
+                if e.check()? == Ty::Num {
+                    Ok(Ty::Num)
+                } else {
+                    Err(TypeError("'-' needs a number".into()))
+                }
+            }
+            Expr::Bin(op, a, b) => {
+                let (ta, tb) = (a.check()?, b.check()?);
+                if op.is_logical() {
+                    if ta == Ty::Bool && tb == Ty::Bool {
+                        Ok(Ty::Bool)
+                    } else {
+                        Err(TypeError(format!(
+                            "logical {op:?} needs booleans"
+                        )))
+                    }
+                } else if op.is_comparison() {
+                    if ta == Ty::Num && tb == Ty::Num {
+                        Ok(Ty::Bool)
+                    } else {
+                        Err(TypeError(format!(
+                            "comparison {op:?} needs numbers"
+                        )))
+                    }
+                } else if ta == Ty::Num && tb == Ty::Num {
+                    Ok(Ty::Num)
+                } else {
+                    Err(TypeError(format!("arithmetic {op:?} needs numbers")))
+                }
+            }
+            Expr::Call(f, args) => {
+                if args.len() != f.arity() {
+                    return Err(TypeError(format!(
+                        "{f:?} takes {} args, got {}",
+                        f.arity(),
+                        args.len()
+                    )));
+                }
+                for a in args {
+                    if a.check()? != Ty::Num {
+                        return Err(TypeError(format!(
+                            "{f:?} needs numeric args"
+                        )));
+                    }
+                }
+                Ok(Ty::Num)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_types() {
+        assert_eq!(Expr::Num(1.0).check().unwrap(), Ty::Num);
+        assert_eq!(Expr::Bool(true).check().unwrap(), Ty::Bool);
+        assert_eq!(
+            Expr::Feature(FeatureId::Met).check().unwrap(),
+            Ty::Num
+        );
+    }
+
+    #[test]
+    fn comparison_yields_bool() {
+        let e = Expr::Bin(
+            BinOp::Gt,
+            Box::new(Expr::Feature(FeatureId::Met)),
+            Box::new(Expr::Num(30.0)),
+        );
+        assert_eq!(e.check().unwrap(), Ty::Bool);
+    }
+
+    #[test]
+    fn bad_logical_operand() {
+        let e = Expr::Bin(
+            BinOp::And,
+            Box::new(Expr::Feature(FeatureId::Met)),
+            Box::new(Expr::Bool(true)),
+        );
+        assert!(e.check().is_err());
+    }
+
+    #[test]
+    fn func_arity_checked() {
+        let e = Expr::Call(Func::Min, vec![Expr::Num(1.0)]);
+        assert!(e.check().is_err());
+        let ok = Expr::Call(Func::Min, vec![Expr::Num(1.0), Expr::Num(2.0)]);
+        assert_eq!(ok.check().unwrap(), Ty::Num);
+    }
+}

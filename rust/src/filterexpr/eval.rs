@@ -1,0 +1,195 @@
+//! Filter evaluation: a compiled filter accepts/rejects events by their
+//! feature vectors, and can batch-evaluate a whole feature matrix (the
+//! node executor's hot path after the kernel runs).
+
+use crate::events::NUM_FEATURES;
+use crate::filterexpr::ast::{BinOp, Expr, Func, Ty, UnOp};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalError(pub String);
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "filter error: {}", self.0)
+    }
+}
+impl std::error::Error for EvalError {}
+
+/// A type-checked, ready-to-run filter.
+#[derive(Debug, Clone)]
+pub struct CompiledFilter {
+    expr: Expr,
+    source_ty: Ty,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum V {
+    N(f64),
+    B(bool),
+}
+
+fn eval(expr: &Expr, feats: &[f32]) -> V {
+    match expr {
+        Expr::Num(n) => V::N(*n),
+        Expr::Bool(b) => V::B(*b),
+        Expr::Feature(f) => V::N(feats[*f as usize] as f64),
+        Expr::Un(UnOp::Not, e) => match eval(e, feats) {
+            V::B(b) => V::B(!b),
+            V::N(_) => unreachable!("typechecked"),
+        },
+        Expr::Un(UnOp::Neg, e) => match eval(e, feats) {
+            V::N(n) => V::N(-n),
+            V::B(_) => unreachable!("typechecked"),
+        },
+        Expr::Bin(op, a, b) => {
+            match op {
+                BinOp::And => {
+                    // short-circuit
+                    if let V::B(false) = eval(a, feats) {
+                        return V::B(false);
+                    }
+                    return eval(b, feats);
+                }
+                BinOp::Or => {
+                    if let V::B(true) = eval(a, feats) {
+                        return V::B(true);
+                    }
+                    return eval(b, feats);
+                }
+                _ => {}
+            }
+            let (x, y) = match (eval(a, feats), eval(b, feats)) {
+                (V::N(x), V::N(y)) => (x, y),
+                _ => unreachable!("typechecked"),
+            };
+            match op {
+                BinOp::Lt => V::B(x < y),
+                BinOp::Le => V::B(x <= y),
+                BinOp::Gt => V::B(x > y),
+                BinOp::Ge => V::B(x >= y),
+                BinOp::Eq => V::B(x == y),
+                BinOp::Ne => V::B(x != y),
+                BinOp::Add => V::N(x + y),
+                BinOp::Sub => V::N(x - y),
+                BinOp::Mul => V::N(x * y),
+                BinOp::Div => V::N(x / y),
+                BinOp::And | BinOp::Or => unreachable!(),
+            }
+        }
+        Expr::Call(f, args) => {
+            let n = |i: usize| match eval(&args[i], feats) {
+                V::N(n) => n,
+                V::B(_) => unreachable!("typechecked"),
+            };
+            V::N(match f {
+                Func::Abs => n(0).abs(),
+                Func::Sqrt => n(0).max(0.0).sqrt(),
+                Func::Min => n(0).min(n(1)),
+                Func::Max => n(0).max(n(1)),
+            })
+        }
+    }
+}
+
+impl CompiledFilter {
+    /// Typecheck and wrap. A numeric top-level expression is rejected —
+    /// the submit form requires a predicate.
+    pub fn new(expr: Expr) -> Result<CompiledFilter, EvalError> {
+        let ty = expr.check().map_err(|e| EvalError(e.to_string()))?;
+        if ty != Ty::Bool {
+            return Err(EvalError(
+                "filter must be a boolean predicate".into(),
+            ));
+        }
+        Ok(CompiledFilter { expr, source_ty: ty })
+    }
+
+    /// Accept/reject one event's feature vector.
+    pub fn accept(&self, feats: &[f32]) -> bool {
+        debug_assert_eq!(feats.len(), NUM_FEATURES);
+        debug_assert_eq!(self.source_ty, Ty::Bool);
+        match eval(&self.expr, feats) {
+            V::B(b) => b,
+            V::N(_) => unreachable!("typechecked"),
+        }
+    }
+
+    /// Batch evaluation over a (B, F) row-major feature matrix. Returns a
+    /// selection mask. `n_real` limits evaluation to real (non-padding)
+    /// rows.
+    pub fn accept_batch(&self, feats: &[f32], n_real: usize) -> Vec<bool> {
+        let rows = feats.len() / NUM_FEATURES;
+        (0..n_real.min(rows))
+            .map(|i| self.accept(&feats[i * NUM_FEATURES..(i + 1) * NUM_FEATURES]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filterexpr::parser::parse;
+
+    fn compile(src: &str) -> CompiledFilter {
+        CompiledFilter::new(parse(src).unwrap()).unwrap()
+    }
+
+    fn feats(vals: &[(usize, f32)]) -> [f32; NUM_FEATURES] {
+        let mut f = [0f32; NUM_FEATURES];
+        for (i, v) in vals {
+            f[*i] = *v;
+        }
+        f
+    }
+
+    #[test]
+    fn arithmetic_and_comparison() {
+        let f = compile("sum_pt / n_tracks > 5"); // mean pt cut
+        assert!(f.accept(&feats(&[(0, 4.0), (1, 30.0)]))); // 7.5 > 5
+        assert!(!f.accept(&feats(&[(0, 10.0), (1, 30.0)])));
+    }
+
+    #[test]
+    fn short_circuit_and_or() {
+        let f = compile("n_tracks > 0 && met / n_tracks > 1");
+        // n_tracks = 0: short-circuits before the division
+        assert!(!f.accept(&feats(&[])));
+        let g = compile("true || met / n_tracks > 1");
+        assert!(g.accept(&feats(&[])));
+    }
+
+    #[test]
+    fn functions() {
+        let f = compile("abs(max_abs_eta - 2.0) < 0.5");
+        assert!(f.accept(&feats(&[(6, 2.3)])));
+        assert!(!f.accept(&feats(&[(6, 3.0)])));
+        let g = compile("sqrt(met) >= 3");
+        assert!(g.accept(&feats(&[(3, 9.0)])));
+        let h = compile("max(met, sum_pt) == 7");
+        assert!(h.accept(&feats(&[(3, 7.0), (1, 2.0)])));
+    }
+
+    #[test]
+    fn numeric_toplevel_rejected() {
+        let e = parse("met + 1").unwrap();
+        assert!(CompiledFilter::new(e).is_err());
+    }
+
+    #[test]
+    fn batch_respects_n_real() {
+        let f = compile("met > 1");
+        let mut m = vec![0f32; 4 * NUM_FEATURES];
+        for row in 0..4 {
+            m[row * NUM_FEATURES + 3] = 2.0; // met = 2 everywhere
+        }
+        let mask = f.accept_batch(&m, 2);
+        assert_eq!(mask, vec![true, true]); // padding rows not evaluated
+    }
+
+    #[test]
+    fn not_operator() {
+        let f = compile("!(met > 10)");
+        assert!(f.accept(&feats(&[(3, 5.0)])));
+        assert!(!f.accept(&feats(&[(3, 20.0)])));
+    }
+}

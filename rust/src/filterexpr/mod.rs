@@ -1,0 +1,69 @@
+//! User filter expressions — the "filter expression" field of the
+//! paper's submit form (§5, Fig 4). Expressions are evaluated in rust
+//! against the per-event feature vector the L1 kernel produced, so the
+//! AOT HLO stays static while users write arbitrary cuts:
+//!
+//! ```text
+//! max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20
+//! n_tracks >= 4 || (met > 30 && ht_frac < 0.8)
+//! abs(max_abs_eta - 2.5) < 1.0
+//! ```
+//!
+//! Grammar (precedence low→high): `||`, `&&`, comparisons, `+ -`, `* /`,
+//! unary `! -`, primary (number, feature name, `true/false`,
+//! parentheses, `abs/min/max` calls). A type checker rejects nonsense
+//! like `met && 3` before any event is touched.
+
+pub mod ast;
+pub mod eval;
+pub mod parser;
+
+pub use ast::{BinOp, Expr, Ty, UnOp};
+pub use eval::{CompiledFilter, EvalError};
+pub use parser::{parse, ParseError};
+
+/// Convenience: parse + typecheck + compile in one step.
+pub fn compile(src: &str) -> Result<CompiledFilter, String> {
+    let expr = parse(src).map_err(|e| e.to_string())?;
+    CompiledFilter::new(expr).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::NUM_FEATURES;
+
+    fn feats(vals: &[(usize, f32)]) -> [f32; NUM_FEATURES] {
+        let mut f = [0f32; NUM_FEATURES];
+        for (i, v) in vals {
+            f[*i] = *v;
+        }
+        f
+    }
+
+    #[test]
+    fn end_to_end_physics_cut() {
+        let f = compile(
+            "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20",
+        )
+        .unwrap();
+        // feature 5 = max_pair_mass, 2 = max_pt
+        assert!(f.accept(&feats(&[(5, 91.0), (2, 45.0)])));
+        assert!(!f.accept(&feats(&[(5, 91.0), (2, 10.0)])));
+        assert!(!f.accept(&feats(&[(5, 120.0), (2, 45.0)])));
+    }
+
+    #[test]
+    fn type_errors_rejected() {
+        assert!(compile("met && 3").is_err());
+        assert!(compile("true + 1").is_err());
+        assert!(compile("unknown_feature > 1").is_err());
+    }
+
+    #[test]
+    fn syntax_errors_rejected() {
+        assert!(compile("met >").is_err());
+        assert!(compile("(met > 1").is_err());
+        assert!(compile("").is_err());
+    }
+}

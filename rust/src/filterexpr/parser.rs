@@ -1,0 +1,387 @@
+//! Filter-expression parser (hand-rolled Pratt-less recursive descent —
+//! the precedence ladder is fixed and shallow).
+
+use crate::events::FeatureId;
+use crate::filterexpr::ast::{BinOp, Expr, Func, UnOp};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "filter parse error at {}: {}", self.pos, self.msg)
+    }
+}
+impl std::error::Error for ParseError {}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(f64),
+    Ident(String),
+    Op(&'static str),
+    LParen,
+    RParen,
+    Comma,
+}
+
+fn lex(src: &str) -> Result<Vec<(usize, Tok)>, ParseError> {
+    let b = src.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                out.push((i, Tok::LParen));
+                i += 1;
+            }
+            b')' => {
+                out.push((i, Tok::RParen));
+                i += 1;
+            }
+            b',' => {
+                out.push((i, Tok::Comma));
+                i += 1;
+            }
+            b'&' if b.get(i + 1) == Some(&b'&') => {
+                out.push((i, Tok::Op("&&")));
+                i += 2;
+            }
+            b'|' if b.get(i + 1) == Some(&b'|') => {
+                out.push((i, Tok::Op("||")));
+                i += 2;
+            }
+            b'>' | b'<' | b'=' | b'!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    let op = match c {
+                        b'>' => ">=",
+                        b'<' => "<=",
+                        b'=' => "==",
+                        _ => "!=",
+                    };
+                    out.push((i, Tok::Op(op)));
+                    i += 2;
+                } else {
+                    let op = match c {
+                        b'>' => ">",
+                        b'<' => "<",
+                        b'!' => "!",
+                        _ => {
+                            return Err(ParseError {
+                                pos: i,
+                                msg: "single '=' (use '==')".into(),
+                            })
+                        }
+                    };
+                    out.push((i, Tok::Op(op)));
+                    i += 1;
+                }
+            }
+            b'+' => {
+                out.push((i, Tok::Op("+")));
+                i += 1;
+            }
+            b'-' => {
+                out.push((i, Tok::Op("-")));
+                i += 1;
+            }
+            b'*' => {
+                out.push((i, Tok::Op("*")));
+                i += 1;
+            }
+            b'/' => {
+                out.push((i, Tok::Op("/")));
+                i += 1;
+            }
+            c if c.is_ascii_digit() || c == b'.' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || b[i] == b'.'
+                        || b[i] == b'e'
+                        || b[i] == b'E'
+                        || ((b[i] == b'+' || b[i] == b'-')
+                            && i > start
+                            && (b[i - 1] == b'e' || b[i - 1] == b'E')))
+                {
+                    i += 1;
+                }
+                let n: f64 = src[start..i].parse().map_err(|_| ParseError {
+                    pos: start,
+                    msg: format!("bad number '{}'", &src[start..i]),
+                })?;
+                out.push((start, Tok::Num(n)));
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                out.push((start, Tok::Ident(src[start..i].to_string())));
+            }
+            _ => {
+                return Err(ParseError {
+                    pos: i,
+                    msg: format!("unexpected character '{}'", c as char),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+struct P {
+    toks: Vec<(usize, Tok)>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i).map(|(_, t)| t)
+    }
+
+    fn pos(&self) -> usize {
+        self.toks.get(self.i).map(|(p, _)| *p).unwrap_or(usize::MAX)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.i).map(|(_, t)| t.clone());
+        if t.is_some() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError { pos: self.pos(), msg: msg.into() }
+    }
+
+    fn eat_op(&mut self, op: &str) -> bool {
+        match self.peek() {
+            Some(Tok::Op(o)) if *o == op => {
+                self.i += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while self.eat_op("||") {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat_op("&&") {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Some(Tok::Op(">")) => BinOp::Gt,
+            Some(Tok::Op(">=")) => BinOp::Ge,
+            Some(Tok::Op("<")) => BinOp::Lt,
+            Some(Tok::Op("<=")) => BinOp::Le,
+            Some(Tok::Op("==")) => BinOp::Eq,
+            Some(Tok::Op("!=")) => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Op("+")) => BinOp::Add,
+                Some(Tok::Op("-")) => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Op("*")) => BinOp::Mul,
+                Some(Tok::Op("/")) => BinOp::Div,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ParseError> {
+        if self.eat_op("!") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Un(UnOp::Not, Box::new(e)));
+        }
+        if self.eat_op("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Un(UnOp::Neg, Box::new(e)));
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Some(Tok::Num(n)) => Ok(Expr::Num(n)),
+            Some(Tok::LParen) => {
+                let e = self.or_expr()?;
+                match self.bump() {
+                    Some(Tok::RParen) => Ok(e),
+                    _ => Err(self.err("expected ')'")),
+                }
+            }
+            Some(Tok::Ident(name)) => {
+                if self.peek() == Some(&Tok::LParen) {
+                    // function call
+                    let f = Func::by_name(&name)
+                        .ok_or_else(|| self.err(format!("unknown function '{name}'")))?;
+                    self.bump(); // (
+                    let mut args = Vec::new();
+                    if self.peek() != Some(&Tok::RParen) {
+                        loop {
+                            args.push(self.or_expr()?);
+                            match self.bump() {
+                                Some(Tok::Comma) => continue,
+                                Some(Tok::RParen) => break,
+                                _ => return Err(self.err("expected ',' or ')'")),
+                            }
+                        }
+                    } else {
+                        self.bump();
+                    }
+                    Ok(Expr::Call(f, args))
+                } else if name == "true" {
+                    Ok(Expr::Bool(true))
+                } else if name == "false" {
+                    Ok(Expr::Bool(false))
+                } else {
+                    let f = FeatureId::by_name(&name).ok_or_else(|| {
+                        self.err(format!("unknown feature '{name}'"))
+                    })?;
+                    Ok(Expr::Feature(f))
+                }
+            }
+            other => Err(self.err(format!("expected expression, got {other:?}"))),
+        }
+    }
+}
+
+/// Parse a filter expression.
+pub fn parse(src: &str) -> Result<Expr, ParseError> {
+    let toks = lex(src)?;
+    if toks.is_empty() {
+        return Err(ParseError { pos: 0, msg: "empty expression".into() });
+    }
+    let mut p = P { toks, i: 0 };
+    let e = p.or_expr()?;
+    if p.i != p.toks.len() {
+        return Err(p.err("trailing tokens"));
+    }
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precedence() {
+        // && binds tighter than ||
+        let e = parse("met > 1 || met > 2 && met > 3").unwrap();
+        match e {
+            Expr::Bin(BinOp::Or, _, rhs) => match *rhs {
+                Expr::Bin(BinOp::And, _, _) => {}
+                other => panic!("rhs {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+        // * binds tighter than +
+        let e = parse("met + 2 * 3 > 0").unwrap();
+        match e {
+            Expr::Bin(BinOp::Gt, lhs, _) => match *lhs {
+                Expr::Bin(BinOp::Add, _, rhs) => match *rhs {
+                    Expr::Bin(BinOp::Mul, _, _) => {}
+                    other => panic!("{other:?}"),
+                },
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parens_override() {
+        let e = parse("(met + 2) * 3 > 0").unwrap();
+        match e {
+            Expr::Bin(BinOp::Gt, lhs, _) => {
+                assert!(matches!(*lhs, Expr::Bin(BinOp::Mul, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn functions_parse() {
+        let e = parse("abs(max_abs_eta - 2.5) < min(1.0, ht_frac)").unwrap();
+        assert!(e.check().is_ok());
+    }
+
+    #[test]
+    fn unary_ops() {
+        assert!(parse("!(met > 3)").unwrap().check().is_ok());
+        assert!(parse("-met < -1").unwrap().check().is_ok());
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let e = parse("sum_pt > 1.5e2").unwrap();
+        match e {
+            Expr::Bin(_, _, rhs) => assert_eq!(*rhs, Expr::Num(150.0)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn all_feature_names_resolve() {
+        for f in crate::events::FeatureId::ALL {
+            let src = format!("{} >= 0", f.name());
+            assert!(parse(&src).is_ok(), "{src}");
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("met = 1").is_err()); // single '='
+        assert!(parse("met >").is_err());
+        assert!(parse("bogus > 1").is_err());
+        assert!(parse("min(1) > 0").unwrap().check().is_err()); // arity at check
+        assert!(parse("met > 1 extra").is_err());
+        assert!(parse("@").is_err());
+    }
+}

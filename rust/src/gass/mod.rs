@@ -1,0 +1,13 @@
+//! GASS — Global Access to Secondary Storage (paper Table 1: "transfer
+//! raw data, retrieve remote results"). In the live cluster this is an
+//! in-process object store per host plus a transfer service whose
+//! latency is shaped by the `netsim` link model (scaled down by
+//! `time_scale` so integration tests run fast while the *virtual*
+//! seconds accounting matches the model exactly). The GridFTP extension
+//! (§7 future work) is the `streams > 1` path.
+
+pub mod store;
+pub mod transfer;
+
+pub use store::{GassStore, GassUrl};
+pub use transfer::{GassService, TransferOutcome};

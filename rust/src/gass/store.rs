@@ -1,0 +1,132 @@
+//! Per-host GASS object store: named blobs with integrity hashes.
+
+use crate::util::xxhash64;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A gass URL: `gass://host/path`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GassUrl {
+    pub host: String,
+    pub path: String,
+}
+
+impl GassUrl {
+    pub fn new(host: &str, path: &str) -> Self {
+        GassUrl { host: host.to_string(), path: path.to_string() }
+    }
+
+    pub fn parse(s: &str) -> Option<GassUrl> {
+        let rest = s.strip_prefix("gass://")?;
+        let (host, path) = rest.split_once('/')?;
+        if host.is_empty() || path.is_empty() {
+            return None;
+        }
+        Some(GassUrl::new(host, &format!("/{path}")))
+    }
+}
+
+impl std::fmt::Display for GassUrl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gass://{}{}", self.host, self.path)
+    }
+}
+
+/// Thread-safe blob store for one host.
+#[derive(Debug, Default, Clone)]
+pub struct GassStore {
+    inner: Arc<Mutex<HashMap<String, Arc<Vec<u8>>>>>,
+}
+
+impl GassStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&self, path: &str, data: Vec<u8>) {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert(path.to_string(), Arc::new(data));
+    }
+
+    pub fn get(&self, path: &str) -> Option<Arc<Vec<u8>>> {
+        self.inner.lock().unwrap().get(path).cloned()
+    }
+
+    pub fn remove(&self, path: &str) -> bool {
+        self.inner.lock().unwrap().remove(path).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|v| v.len() as u64)
+            .sum()
+    }
+
+    pub fn checksum(&self, path: &str) -> Option<u64> {
+        self.get(path).map(|d| xxhash64(&d, 0))
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.inner.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_parse_display() {
+        let u = GassUrl::parse("gass://gandalf/data/d1.b0.brick").unwrap();
+        assert_eq!(u.host, "gandalf");
+        assert_eq!(u.path, "/data/d1.b0.brick");
+        assert_eq!(u.to_string(), "gass://gandalf/data/d1.b0.brick");
+        assert!(GassUrl::parse("http://x/y").is_none());
+        assert!(GassUrl::parse("gass://hostonly").is_none());
+    }
+
+    #[test]
+    fn store_put_get_remove() {
+        let s = GassStore::new();
+        s.put("/a", vec![1, 2, 3]);
+        assert_eq!(s.get("/a").unwrap().as_slice(), &[1, 2, 3]);
+        assert_eq!(s.total_bytes(), 3);
+        assert!(s.remove("/a"));
+        assert!(!s.remove("/a"));
+        assert!(s.get("/a").is_none());
+    }
+
+    #[test]
+    fn checksum_detects_content() {
+        let s = GassStore::new();
+        s.put("/x", b"hello".to_vec());
+        let c1 = s.checksum("/x").unwrap();
+        s.put("/x", b"hellp".to_vec());
+        assert_ne!(s.checksum("/x").unwrap(), c1);
+        assert_eq!(s.checksum("/nope"), None);
+    }
+
+    #[test]
+    fn list_sorted() {
+        let s = GassStore::new();
+        s.put("/b", vec![]);
+        s.put("/a", vec![]);
+        assert_eq!(s.list(), vec!["/a", "/b"]);
+    }
+}

@@ -1,0 +1,157 @@
+//! The GRIS directory information tree (DIT): entries keyed by DN, with
+//! subtree search scoped by DN suffix (LDAP base + scope semantics).
+
+use crate::gris::filter::Filter;
+use std::collections::BTreeMap;
+
+/// One directory entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// distinguished name, e.g. "nn=gandalf, o=geps"
+    pub dn: String,
+    pub attrs: BTreeMap<String, String>,
+}
+
+impl Entry {
+    pub fn new(dn: &str) -> Self {
+        Entry { dn: dn.to_string(), attrs: BTreeMap::new() }
+    }
+
+    pub fn with(mut self, k: &str, v: impl ToString) -> Self {
+        self.attrs.insert(k.to_string(), v.to_string());
+        self
+    }
+}
+
+/// Normalised DN comparison: split on ',', trim each RDN.
+fn dn_components(dn: &str) -> Vec<String> {
+    dn.split(',').map(|c| c.trim().to_ascii_lowercase()).collect()
+}
+
+/// True if `dn` is within the subtree rooted at `base`.
+fn in_subtree(dn: &str, base: &str) -> bool {
+    if base.trim().is_empty() {
+        return true;
+    }
+    let d = dn_components(dn);
+    let b = dn_components(base);
+    d.len() >= b.len() && d[d.len() - b.len()..] == b[..]
+}
+
+/// The directory.
+#[derive(Debug, Clone, Default)]
+pub struct Directory {
+    entries: BTreeMap<String, Entry>,
+}
+
+impl Directory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add or replace an entry.
+    pub fn bind(&mut self, entry: Entry) {
+        self.entries.insert(entry.dn.clone(), entry);
+    }
+
+    pub fn unbind(&mut self, dn: &str) -> Option<Entry> {
+        self.entries.remove(dn)
+    }
+
+    pub fn lookup(&self, dn: &str) -> Option<&Entry> {
+        self.entries.get(dn)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Subtree search: all entries under `base` matching `filter`.
+    pub fn search(&self, base: &str, filter: &Filter) -> Vec<&Entry> {
+        self.entries
+            .values()
+            .filter(|e| in_subtree(&e.dn, base) && filter.matches(&e.attrs))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gris::filter::parse_filter;
+
+    fn dir() -> Directory {
+        let mut d = Directory::new();
+        d.bind(
+            Entry::new("nn=gandalf, o=geps")
+                .with("nn", "gandalf")
+                .with("cpus", 2)
+                .with("mbps", 100)
+                .with("freeslots", 1),
+        );
+        d.bind(
+            Entry::new("nn=hobbit, o=geps")
+                .with("nn", "hobbit")
+                .with("cpus", 1)
+                .with("mbps", 100)
+                .with("freeslots", 0),
+        );
+        d.bind(
+            Entry::new("brick=d1.b0, nn=gandalf, o=geps")
+                .with("brick", "d1.b0")
+                .with("events", 500),
+        );
+        d
+    }
+
+    #[test]
+    fn bind_lookup_unbind() {
+        let mut d = dir();
+        assert_eq!(d.len(), 3);
+        assert!(d.lookup("nn=gandalf, o=geps").is_some());
+        d.unbind("nn=gandalf, o=geps");
+        assert!(d.lookup("nn=gandalf, o=geps").is_none());
+    }
+
+    #[test]
+    fn subtree_scoping() {
+        let d = dir();
+        let all = d.search("o=geps", &parse_filter("(nn=*)").unwrap());
+        assert_eq!(all.len(), 2);
+        // brick entries live under the node's subtree
+        let under_gandalf = d.search(
+            "nn=gandalf, o=geps",
+            &parse_filter("(brick=*)").unwrap(),
+        );
+        assert_eq!(under_gandalf.len(), 1);
+        // empty base = whole tree
+        let everything = d.search("", &parse_filter("(|(nn=*)(brick=*))").unwrap());
+        assert_eq!(everything.len(), 3);
+    }
+
+    #[test]
+    fn the_papers_query() {
+        // "how many processors are available at this moment, what
+        // bandwidth is provided" (§4.3)
+        let d = dir();
+        let free = d.search(
+            "o=geps",
+            &parse_filter("(&(cpus>=2)(mbps>=100)(freeslots>=1))").unwrap(),
+        );
+        assert_eq!(free.len(), 1);
+        assert_eq!(free[0].attrs["nn"], "gandalf");
+    }
+
+    #[test]
+    fn rebind_replaces() {
+        let mut d = dir();
+        d.bind(Entry::new("nn=hobbit, o=geps").with("cpus", 8));
+        let e = d.lookup("nn=hobbit, o=geps").unwrap();
+        assert_eq!(e.attrs["cpus"], "8");
+        assert!(!e.attrs.contains_key("mbps")); // full replace
+    }
+}

@@ -1,0 +1,282 @@
+//! RFC-1960 LDAP search filter parser + matcher.
+//!
+//! Comparisons are numeric when both sides parse as numbers (MDS
+//! attributes like `cpus`, `freeMemory` are numeric strings), string
+//! otherwise. `=*` is a presence test; a trailing `*` in an equality
+//! value is a prefix match.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Filter {
+    And(Vec<Filter>),
+    Or(Vec<Filter>),
+    Not(Box<Filter>),
+    /// attribute present
+    Present(String),
+    /// =, with optional trailing-* prefix semantics
+    Eq(String, String),
+    Ge(String, String),
+    Le(String, String),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FilterError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for FilterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ldap filter error at {}: {}", self.pos, self.msg)
+    }
+}
+impl std::error::Error for FilterError {}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn err(&self, msg: impl Into<String>) -> FilterError {
+        FilterError { pos: self.i, msg: msg.into() }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), FilterError> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn filter(&mut self) -> Result<Filter, FilterError> {
+        self.eat(b'(')?;
+        let f = match self.b.get(self.i) {
+            Some(b'&') => {
+                self.i += 1;
+                Filter::And(self.filter_list()?)
+            }
+            Some(b'|') => {
+                self.i += 1;
+                Filter::Or(self.filter_list()?)
+            }
+            Some(b'!') => {
+                self.i += 1;
+                Filter::Not(Box::new(self.filter()?))
+            }
+            Some(_) => self.comparison()?,
+            None => return Err(self.err("unexpected end")),
+        };
+        self.eat(b')')?;
+        Ok(f)
+    }
+
+    fn filter_list(&mut self) -> Result<Vec<Filter>, FilterError> {
+        let mut out = Vec::new();
+        while self.b.get(self.i) == Some(&b'(') {
+            out.push(self.filter()?);
+        }
+        if out.is_empty() {
+            return Err(self.err("empty filter list"));
+        }
+        Ok(out)
+    }
+
+    fn comparison(&mut self) -> Result<Filter, FilterError> {
+        let start = self.i;
+        while let Some(&c) = self.b.get(self.i) {
+            if c == b'=' || c == b'>' || c == b'<' || c == b')' || c == b'(' {
+                break;
+            }
+            self.i += 1;
+        }
+        let attr = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad attr"))?
+            .trim()
+            .to_string();
+        if attr.is_empty() {
+            return Err(self.err("empty attribute"));
+        }
+        let op = match self.b.get(self.i) {
+            Some(b'=') => {
+                self.i += 1;
+                0u8
+            }
+            Some(b'>') => {
+                self.i += 1;
+                self.eat(b'=')?;
+                1
+            }
+            Some(b'<') => {
+                self.i += 1;
+                self.eat(b'=')?;
+                2
+            }
+            _ => return Err(self.err("expected '=', '>=' or '<='")),
+        };
+        let vstart = self.i;
+        while let Some(&c) = self.b.get(self.i) {
+            if c == b')' {
+                break;
+            }
+            self.i += 1;
+        }
+        let value = std::str::from_utf8(&self.b[vstart..self.i])
+            .map_err(|_| self.err("bad value"))?
+            .trim()
+            .to_string();
+        Ok(match op {
+            0 if value == "*" => Filter::Present(attr),
+            0 => Filter::Eq(attr, value),
+            1 => Filter::Ge(attr, value),
+            _ => Filter::Le(attr, value),
+        })
+    }
+}
+
+/// Parse an LDAP search filter string.
+pub fn parse_filter(src: &str) -> Result<Filter, FilterError> {
+    let mut p = P { b: src.trim().as_bytes(), i: 0 };
+    let f = p.filter()?;
+    if p.i != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(f)
+}
+
+fn cmp_values(a: &str, b: &str) -> Option<std::cmp::Ordering> {
+    match (a.parse::<f64>(), b.parse::<f64>()) {
+        (Ok(x), Ok(y)) => x.partial_cmp(&y),
+        _ => Some(a.cmp(b)),
+    }
+}
+
+impl Filter {
+    /// Match against an entry's attributes (attribute names are
+    /// case-insensitive, per LDAP).
+    pub fn matches(&self, attrs: &BTreeMap<String, String>) -> bool {
+        let get = |name: &str| -> Option<&String> {
+            attrs
+                .iter()
+                .find(|(k, _)| k.eq_ignore_ascii_case(name))
+                .map(|(_, v)| v)
+        };
+        match self {
+            Filter::And(fs) => fs.iter().all(|f| f.matches(attrs)),
+            Filter::Or(fs) => fs.iter().any(|f| f.matches(attrs)),
+            Filter::Not(f) => !f.matches(attrs),
+            Filter::Present(a) => get(a).is_some(),
+            Filter::Eq(a, v) => match get(a) {
+                None => false,
+                Some(actual) => {
+                    if let Some(prefix) = v.strip_suffix('*') {
+                        actual.to_ascii_lowercase().starts_with(
+                            &prefix.to_ascii_lowercase(),
+                        )
+                    } else {
+                        actual.eq_ignore_ascii_case(v)
+                            || cmp_values(actual, v)
+                                == Some(std::cmp::Ordering::Equal)
+                    }
+                }
+            },
+            Filter::Ge(a, v) => match get(a) {
+                None => false,
+                Some(actual) => matches!(
+                    cmp_values(actual, v),
+                    Some(std::cmp::Ordering::Greater)
+                        | Some(std::cmp::Ordering::Equal)
+                ),
+            },
+            Filter::Le(a, v) => match get(a) {
+                None => false,
+                Some(actual) => matches!(
+                    cmp_values(actual, v),
+                    Some(std::cmp::Ordering::Less)
+                        | Some(std::cmp::Ordering::Equal)
+                ),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attrs(kv: &[(&str, &str)]) -> BTreeMap<String, String> {
+        kv.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn parse_basic_forms() {
+        assert_eq!(
+            parse_filter("(cpus>=2)").unwrap(),
+            Filter::Ge("cpus".into(), "2".into())
+        );
+        assert_eq!(
+            parse_filter("(host=gandalf)").unwrap(),
+            Filter::Eq("host".into(), "gandalf".into())
+        );
+        assert_eq!(
+            parse_filter("(host=*)").unwrap(),
+            Filter::Present("host".into())
+        );
+    }
+
+    #[test]
+    fn parse_nested() {
+        let f = parse_filter("(&(cpus>=2)(|(host=gandalf)(host=hobbit))(!(down=1)))")
+            .unwrap();
+        match f {
+            Filter::And(fs) => {
+                assert_eq!(fs.len(), 3);
+                assert!(matches!(fs[1], Filter::Or(_)));
+                assert!(matches!(fs[2], Filter::Not(_)));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn numeric_comparison() {
+        let f = parse_filter("(&(cpus>=2)(freemem<=1024))").unwrap();
+        assert!(f.matches(&attrs(&[("cpus", "4"), ("freemem", "512")])));
+        assert!(!f.matches(&attrs(&[("cpus", "1"), ("freemem", "512")])));
+        // numeric compare, not lexicographic: "10" >= "2"
+        let g = parse_filter("(cpus>=2)").unwrap();
+        assert!(g.matches(&attrs(&[("cpus", "10")])));
+    }
+
+    #[test]
+    fn case_insensitive_attrs_and_values() {
+        let f = parse_filter("(Host=GANDALF)").unwrap();
+        assert!(f.matches(&attrs(&[("host", "gandalf")])));
+    }
+
+    #[test]
+    fn prefix_wildcard() {
+        let f = parse_filter("(host=gan*)").unwrap();
+        assert!(f.matches(&attrs(&[("host", "gandalf")])));
+        assert!(!f.matches(&attrs(&[("host", "hobbit")])));
+    }
+
+    #[test]
+    fn presence_and_not() {
+        let f = parse_filter("(!(error=*))").unwrap();
+        assert!(f.matches(&attrs(&[("host", "x")])));
+        assert!(!f.matches(&attrs(&[("error", "boom")])));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_filter("").is_err());
+        assert!(parse_filter("(cpus>=2").is_err());
+        assert!(parse_filter("(&)").is_err());
+        assert!(parse_filter("(=x)").is_err());
+        assert!(parse_filter("(a=1)(b=2)").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! GRIS/MDS — the Grid Resource Information Service (paper §4.3, Fig 3):
+//! each node publishes its resource attributes into a directory tree and
+//! the portal's `grid-info` routine queries them over the LDAP protocol
+//! on port 2135. We implement the LDAP *model* the paper uses: a DIT of
+//! entries with attribute sets, and RFC-1960 search filters
+//! (`(&(cpus>=2)(bandwidth>=100))`, `(|..)`, `(!..)`, presence `=*`,
+//! prefix wildcards).
+
+pub mod directory;
+pub mod filter;
+pub mod provider;
+pub mod server;
+
+pub use directory::{Directory, Entry};
+pub use filter::{parse_filter, Filter};
+pub use provider::NodeInfoProvider;
+pub use server::{search as gris_search_tcp, serve as gris_serve};

@@ -1,0 +1,118 @@
+//! The per-node GRIS information provider: turns live node state into the
+//! directory entries MDS publishes (the paper's "each Grid node can run a
+//! local GRIS", §4.3). The cluster refreshes these on heartbeat.
+
+use crate::gris::directory::{Directory, Entry};
+
+/// Snapshot of what a node reports about itself.
+#[derive(Debug, Clone)]
+pub struct NodeInfoProvider {
+    pub name: String,
+    pub cpus: usize,
+    pub speed: f64,
+    pub mbps: u64,
+    pub free_slots: usize,
+    pub bricks: Vec<(String, u64)>, // (brick id, n_events)
+    pub up: bool,
+}
+
+impl NodeInfoProvider {
+    pub fn base_dn(org: &str) -> String {
+        format!("o={org}")
+    }
+
+    pub fn node_dn(&self, org: &str) -> String {
+        format!("nn={}, o={org}", self.name)
+    }
+
+    /// Publish (bind/refresh) this node's entries into the directory.
+    pub fn publish(&self, dir: &mut Directory, org: &str) {
+        let dn = self.node_dn(org);
+        dir.bind(
+            Entry::new(&dn)
+                .with("nn", &self.name)
+                .with("objectclass", "GridComputeResource")
+                .with("cpus", self.cpus)
+                .with("speed", format!("{:.2}", self.speed))
+                .with("mbps", self.mbps)
+                .with("freeslots", self.free_slots)
+                .with("status", if self.up { "up" } else { "down" })
+                .with("nbricks", self.bricks.len()),
+        );
+        for (brick, events) in &self.bricks {
+            dir.bind(
+                Entry::new(&format!("brick={brick}, {dn}"))
+                    .with("objectclass", "GridBrick")
+                    .with("brick", brick)
+                    .with("events", *events)
+                    .with("holder", &self.name),
+            );
+        }
+    }
+
+    /// Remove this node's entries (node shutdown).
+    pub fn withdraw(&self, dir: &mut Directory, org: &str) {
+        let dn = self.node_dn(org);
+        for (brick, _) in &self.bricks {
+            dir.unbind(&format!("brick={brick}, {dn}"));
+        }
+        dir.unbind(&dn);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gris::filter::parse_filter;
+
+    fn provider() -> NodeInfoProvider {
+        NodeInfoProvider {
+            name: "gandalf".into(),
+            cpus: 2,
+            speed: 0.8,
+            mbps: 100,
+            free_slots: 1,
+            bricks: vec![("d1.b0".into(), 500), ("d1.b2".into(), 500)],
+            up: true,
+        }
+    }
+
+    #[test]
+    fn publish_and_query() {
+        let mut dir = Directory::new();
+        provider().publish(&mut dir, "geps");
+        assert_eq!(dir.len(), 3);
+        let nodes = dir.search(
+            "o=geps",
+            &parse_filter("(objectclass=GridComputeResource)").unwrap(),
+        );
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].attrs["nbricks"], "2");
+        let bricks = dir.search(
+            "nn=gandalf, o=geps",
+            &parse_filter("(objectclass=GridBrick)").unwrap(),
+        );
+        assert_eq!(bricks.len(), 2);
+    }
+
+    #[test]
+    fn refresh_updates_in_place() {
+        let mut dir = Directory::new();
+        let mut p = provider();
+        p.publish(&mut dir, "geps");
+        p.free_slots = 0;
+        p.publish(&mut dir, "geps");
+        let e = dir.lookup("nn=gandalf, o=geps").unwrap();
+        assert_eq!(e.attrs["freeslots"], "0");
+        assert_eq!(dir.len(), 3); // no duplicates
+    }
+
+    #[test]
+    fn withdraw_removes_subtree() {
+        let mut dir = Directory::new();
+        let p = provider();
+        p.publish(&mut dir, "geps");
+        p.withdraw(&mut dir, "geps");
+        assert!(dir.is_empty());
+    }
+}

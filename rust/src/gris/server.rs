@@ -1,0 +1,189 @@
+//! GRIS network service — the paper's "a GRIS service is automatically
+//! configured and assigned to work on port 2135. In our GEPS, the
+//! grid-info routine obtains the overall Grid node information by
+//! querying this port through the LDAP protocol" (§4.3, Fig 3).
+//!
+//! We speak a line protocol carrying the LDAP *model* (base + RFC-1960
+//! filter in, entries out) rather than full ASN.1/BER — the semantic
+//! surface the portal needs, without pretending to be wire-compatible
+//! with OpenLDAP:
+//!
+//! ```text
+//! C: SEARCH <base-dn> <filter>\n
+//! S: ENTRY <dn>\n
+//! S: ATTR <key> <value>\n            (per attribute)
+//! S: END <count>\n
+//! ```
+
+use crate::gris::directory::Directory;
+use crate::gris::filter::parse_filter;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+/// Serve the directory on `listener` (blocking; thread per connection).
+pub fn serve(listener: TcpListener, dir: Arc<Mutex<Directory>>) -> Result<()> {
+    for conn in listener.incoming() {
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let dir = dir.clone();
+        std::thread::spawn(move || {
+            let _ = handle(&mut stream, &dir);
+        });
+    }
+    Ok(())
+}
+
+fn handle(stream: &mut TcpStream, dir: &Arc<Mutex<Directory>>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let line = line.trim_end();
+        if line.is_empty() || line.eq_ignore_ascii_case("QUIT") {
+            return Ok(());
+        }
+        let Some(rest) = line.strip_prefix("SEARCH ") else {
+            writeln!(stream, "ERR expected 'SEARCH <base> <filter>'")?;
+            continue;
+        };
+        // base is everything before the first '(' (filters start with one)
+        let split = rest.find('(').unwrap_or(rest.len());
+        let base = rest[..split].trim();
+        let filter_src = rest[split..].trim();
+        match parse_filter(filter_src) {
+            Err(e) => writeln!(stream, "ERR {e}")?,
+            Ok(filter) => {
+                let dir = dir.lock().unwrap();
+                let hits = dir.search(base, &filter);
+                for e in &hits {
+                    writeln!(stream, "ENTRY {}", e.dn)?;
+                    for (k, v) in &e.attrs {
+                        writeln!(stream, "ATTR {k} {v}")?;
+                    }
+                }
+                writeln!(stream, "END {}", hits.len())?;
+                stream.flush()?;
+            }
+        }
+    }
+}
+
+/// Client: one search against a GRIS server; returns (dn, attrs) pairs.
+pub fn search(
+    addr: &str,
+    base: &str,
+    filter: &str,
+) -> Result<Vec<(String, BTreeMap<String, String>)>> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    writeln!(stream, "SEARCH {base} {filter}")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut out: Vec<(String, BTreeMap<String, String>)> = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed before END"));
+        }
+        let line = line.trim_end();
+        if let Some(dn) = line.strip_prefix("ENTRY ") {
+            out.push((dn.to_string(), BTreeMap::new()));
+        } else if let Some(attr) = line.strip_prefix("ATTR ") {
+            let (k, v) = attr
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("bad ATTR line"))?;
+            if let Some((_, attrs)) = out.last_mut() {
+                attrs.insert(k.to_string(), v.to_string());
+            }
+        } else if let Some(count) = line.strip_prefix("END ") {
+            let n: usize = count.parse().unwrap_or(0);
+            if n != out.len() {
+                return Err(anyhow!("count mismatch: {n} vs {}", out.len()));
+            }
+            return Ok(out);
+        } else if let Some(err) = line.strip_prefix("ERR ") {
+            return Err(anyhow!("server error: {err}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gris::directory::Entry;
+    use crate::gris::provider::NodeInfoProvider;
+
+    fn spawn(dir: Directory) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dir = Arc::new(Mutex::new(dir));
+        std::thread::spawn(move || serve(listener, dir));
+        addr
+    }
+
+    fn testbed() -> Directory {
+        let mut dir = Directory::new();
+        for (name, slots) in [("gandalf", 1usize), ("hobbit", 0)] {
+            NodeInfoProvider {
+                name: name.into(),
+                cpus: 2,
+                speed: 1.0,
+                mbps: 100,
+                free_slots: slots,
+                bricks: vec![("d1.b0".into(), 500)],
+                up: true,
+            }
+            .publish(&mut dir, "geps");
+        }
+        dir
+    }
+
+    #[test]
+    fn search_over_the_wire() {
+        let addr = spawn(testbed());
+        let hits = search(
+            &addr,
+            "o=geps",
+            "(&(objectclass=GridComputeResource)(freeslots>=1))",
+        )
+        .unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].1["nn"], "gandalf");
+        assert_eq!(hits[0].1["mbps"], "100");
+    }
+
+    #[test]
+    fn multiple_queries_per_connection_and_errors() {
+        let addr = spawn(testbed());
+        // a bad filter returns ERR, then the connection keeps working
+        let err = search(&addr, "o=geps", "(broken").unwrap_err();
+        assert!(err.to_string().contains("server error"));
+        let hits = search(&addr, "o=geps", "(nn=*)").unwrap();
+        assert_eq!(hits.len(), 2);
+    }
+
+    #[test]
+    fn empty_result_set() {
+        let addr = spawn(testbed());
+        let hits = search(&addr, "o=geps", "(nn=frodo)").unwrap();
+        assert!(hits.is_empty());
+    }
+
+    #[test]
+    fn base_scoping_over_the_wire() {
+        let mut dir = testbed();
+        dir.bind(Entry::new("nn=elsewhere, o=other").with("nn", "elsewhere"));
+        let addr = spawn(dir);
+        let hits = search(&addr, "o=geps", "(nn=*)").unwrap();
+        assert_eq!(hits.len(), 2); // o=other excluded
+    }
+}

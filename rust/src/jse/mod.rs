@@ -1,0 +1,610 @@
+//! The Job Submission Engine (paper §4.2): the broker that discovers new
+//! job tuples in the catalogue, plans them with a scheduling policy,
+//! synthesizes RSL, submits tasks to grid nodes, monitors execution and
+//! node liveness, retrieves results, and merges them.
+//!
+//! One [`Jse`] instance owns the node channels; [`Jse::run_job`] drives
+//! a single job to completion (the 2003 prototype processed jobs
+//! sequentially — a faithful choice that the Ext-C bench measures).
+
+use crate::catalog::{Catalog, JobStatus, ResultRow};
+use crate::ft::HeartbeatMonitor;
+use crate::rsl::synthesize_task_rsl;
+use crate::scheduler::{Policy, SchedCtx, Scheduler, Task};
+use crate::wire::Message;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Final accounting for one job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job: u64,
+    pub status: JobStatus,
+    pub events_in: u64,
+    pub events_selected: u64,
+    pub result_bytes: u64,
+    pub tasks_completed: usize,
+    pub tasks_failed: usize,
+    pub nodes_lost: Vec<String>,
+    /// merged (F * bins) histogram of selected events
+    pub histogram: Vec<f32>,
+    pub error: Option<String>,
+}
+
+/// JSE configuration knobs.
+#[derive(Debug, Clone)]
+pub struct JseConfig {
+    /// virtual seconds between liveness checks / recv timeouts
+    pub tick_s: f64,
+    /// virtual seconds without a heartbeat before a node is dead
+    pub heartbeat_timeout_s: f64,
+    pub time_scale: f64,
+    pub streams: u32,
+}
+
+impl Default for JseConfig {
+    fn default() -> Self {
+        JseConfig {
+            tick_s: 2.0,
+            heartbeat_timeout_s: 30.0,
+            time_scale: 200.0,
+            streams: 1,
+        }
+    }
+}
+
+/// The engine.
+pub struct Jse {
+    pub cfg: JseConfig,
+    /// leader->node channels
+    nodes: BTreeMap<String, Sender<Message>>,
+    /// shared node->leader channel
+    node_rx: Receiver<Message>,
+    catalog: Arc<Mutex<Catalog>>,
+    monitor: HeartbeatMonitor,
+}
+
+impl Jse {
+    pub fn new(
+        cfg: JseConfig,
+        nodes: BTreeMap<String, Sender<Message>>,
+        node_rx: Receiver<Message>,
+        catalog: Arc<Mutex<Catalog>>,
+    ) -> Self {
+        // Liveness timeout in wall time. The floor absorbs OS scheduling
+        // jitter at high time_scale values: a node that is merely
+        // descheduled for a few ms must not be declared dead.
+        let timeout = Duration::from_secs_f64(
+            (cfg.heartbeat_timeout_s / cfg.time_scale.max(1e-9)).max(0.1),
+        );
+        Jse {
+            cfg,
+            nodes,
+            node_rx,
+            catalog,
+            monitor: HeartbeatMonitor::new(timeout),
+        }
+    }
+
+    pub fn monitor(&self) -> &HeartbeatMonitor {
+        &self.monitor
+    }
+
+    /// Build the scheduling context for a dataset from the catalogue.
+    fn build_ctx(&self, dataset: u32) -> SchedCtx {
+        let cat = self.catalog.lock().unwrap();
+        let nodes = cat
+            .nodes
+            .iter()
+            .map(|(_, n)| crate::scheduler::NodeState {
+                name: n.name.clone(),
+                speed: n.speed,
+                slots: n.slots,
+                up: n.up && !self.monitor.is_dead(&n.name),
+            })
+            .collect();
+        let bricks = cat.bricks_for_dataset(dataset);
+        SchedCtx { nodes, bricks, leader: "jse".to_string() }
+    }
+
+    fn mark_node_down(&self, node: &str) {
+        let mut cat = self.catalog.lock().unwrap();
+        let ids: Vec<u64> = cat
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.name == node)
+            .map(|(id, _)| id)
+            .collect();
+        for id in ids {
+            cat.nodes.update(id, |n| n.up = false);
+        }
+    }
+
+    /// Drive one job to a terminal state. Returns its outcome and
+    /// updates the catalogue throughout.
+    pub fn run_job(&mut self, job_id: u64) -> JobOutcome {
+        let (dataset, filter_expr, policy_name) = {
+            let cat = self.catalog.lock().unwrap();
+            let row = cat.jobs.get(job_id).expect("job exists");
+            (row.dataset, row.filter_expr.clone(), row.policy.clone())
+        };
+        let policy = Policy::by_name(&policy_name).unwrap_or(Policy::Locality);
+
+        // filter must compile before anything is submitted
+        if let Err(e) = crate::filterexpr::compile(&filter_expr) {
+            let msg = format!("filter rejected: {e}");
+            self.catalog.lock().unwrap().update_job(job_id, |j| {
+                j.status = JobStatus::Failed;
+                j.error = Some(msg.clone());
+            });
+            return JobOutcome {
+                job: job_id,
+                status: JobStatus::Failed,
+                events_in: 0,
+                events_selected: 0,
+                result_bytes: 0,
+                tasks_completed: 0,
+                tasks_failed: 0,
+                nodes_lost: vec![],
+                histogram: vec![],
+                error: Some(msg),
+            };
+        }
+
+        self.catalog
+            .lock()
+            .unwrap()
+            .update_job(job_id, |j| j.status = JobStatus::Staging);
+
+        let mut ctx = self.build_ctx(dataset);
+        let mut sched: Box<dyn Scheduler> = policy.build(&ctx);
+        let mut outstanding: BTreeMap<String, Vec<Task>> = BTreeMap::new();
+        let mut out = JobOutcome {
+            job: job_id,
+            status: JobStatus::Running,
+            events_in: 0,
+            events_selected: 0,
+            result_bytes: 0,
+            tasks_completed: 0,
+            tasks_failed: 0,
+            nodes_lost: vec![],
+            histogram: vec![],
+            error: None,
+        };
+
+        self.catalog
+            .lock()
+            .unwrap()
+            .update_job(job_id, |j| j.status = JobStatus::Running);
+
+        // Seed the liveness monitor with every participating node: a node
+        // that never sends a single heartbeat must still be declared dead
+        // (otherwise a silent node would hang the job forever).
+        for n in ctx.nodes.iter().filter(|n| n.up) {
+            self.monitor.beat(&n.name);
+        }
+
+        let tick = Duration::from_secs_f64(
+            self.cfg.tick_s / self.cfg.time_scale.max(1e-9),
+        );
+
+        loop {
+            // 1. dispatch to every node with a free slot
+            let node_names: Vec<String> = ctx
+                .nodes
+                .iter()
+                .filter(|n| n.up)
+                .map(|n| n.name.clone())
+                .collect();
+            for name in node_names {
+                loop {
+                    let slots = ctx.node(&name).map(|n| n.slots).unwrap_or(1);
+                    let busy =
+                        outstanding.get(&name).map(|v| v.len()).unwrap_or(0);
+                    if busy >= slots {
+                        break;
+                    }
+                    let Some(task) = sched.next_task(&name, &ctx) else {
+                        break;
+                    };
+                    let rsl = synthesize_task_rsl(
+                        job_id,
+                        &task,
+                        &filter_expr,
+                        &name,
+                        self.cfg.streams,
+                    )
+                    .to_string();
+                    let msg = Message::SubmitTask {
+                        job: job_id,
+                        task: task.clone(),
+                        filter: filter_expr.clone(),
+                        rsl,
+                    };
+                    let sent = self
+                        .nodes
+                        .get(&name)
+                        .map(|tx| tx.send(msg).is_ok())
+                        .unwrap_or(false);
+                    if sent {
+                        outstanding.entry(name.clone()).or_default().push(task);
+                    } else {
+                        // channel gone = node process dead: full death
+                        // path (failover + recovery), not just a retry
+                        sched.on_failure(&name, &task, &ctx);
+                        if !out.nodes_lost.contains(&name) {
+                            out.nodes_lost.push(name.clone());
+                            self.mark_node_down(&name);
+                            if let Some(n) =
+                                ctx.nodes.iter_mut().find(|n| n.name == name)
+                            {
+                                n.up = false;
+                            }
+                            for t in
+                                outstanding.remove(&name).unwrap_or_default()
+                            {
+                                out.tasks_failed += 1;
+                                sched.on_failure(&name, &t, &ctx);
+                            }
+                            sched.on_node_down(&name, &ctx);
+                        }
+                        break;
+                    }
+                }
+            }
+
+            if sched.is_done() {
+                break;
+            }
+
+            // 2. wait for node traffic
+            match self.node_rx.recv_timeout(tick) {
+                Ok(Message::Heartbeat { node, .. }) => {
+                    self.monitor.beat(&node);
+                }
+                Ok(Message::TaskDone {
+                    job,
+                    brick,
+                    range,
+                    events_in,
+                    events_selected,
+                    result_bytes,
+                    histogram,
+                }) if job == job_id => {
+                    // find which node ran it
+                    let node = outstanding
+                        .iter()
+                        .find(|(_, v)| {
+                            v.iter().any(|t| {
+                                t.brick == brick && t.range == range
+                            })
+                        })
+                        .map(|(n, _)| n.clone());
+                    if let Some(node) = node {
+                        let task = {
+                            let v = outstanding.get_mut(&node).unwrap();
+                            let pos = v
+                                .iter()
+                                .position(|t| {
+                                    t.brick == brick && t.range == range
+                                })
+                                .unwrap();
+                            v.remove(pos)
+                        };
+                        sched.on_complete(&node, &task, 1.0);
+                        out.tasks_completed += 1;
+                        out.events_in += events_in;
+                        out.events_selected += events_selected;
+                        out.result_bytes += result_bytes;
+                        merge_histogram(&mut out.histogram, &histogram);
+                        let mut cat = self.catalog.lock().unwrap();
+                        cat.record_result(ResultRow {
+                            job: job_id,
+                            node,
+                            brick,
+                            events_in,
+                            events_selected,
+                            result_bytes,
+                        });
+                        cat.update_job(job_id, |j| {
+                            j.events_processed += events_in;
+                            j.events_selected += events_selected;
+                        });
+                    }
+                }
+                Ok(Message::TaskFailed { job, brick, range, error })
+                    if job == job_id =>
+                {
+                    let node = outstanding
+                        .iter()
+                        .find(|(_, v)| {
+                            v.iter().any(|t| {
+                                t.brick == brick && t.range == range
+                            })
+                        })
+                        .map(|(n, _)| n.clone());
+                    if let Some(node) = node {
+                        let task = {
+                            let v = outstanding.get_mut(&node).unwrap();
+                            let pos = v
+                                .iter()
+                                .position(|t| {
+                                    t.brick == brick && t.range == range
+                                })
+                                .unwrap();
+                            v.remove(pos)
+                        };
+                        out.tasks_failed += 1;
+                        out.error = Some(error);
+                        sched.on_failure(&node, &task, &ctx);
+                    }
+                }
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    out.error = Some("all node channels closed".into());
+                    break;
+                }
+            }
+
+            // 3. liveness check
+            for dead in self.monitor.check() {
+                out.nodes_lost.push(dead.clone());
+                self.mark_node_down(&dead);
+                if let Some(n) =
+                    ctx.nodes.iter_mut().find(|n| n.name == dead)
+                {
+                    n.up = false;
+                }
+                // in-flight work on the dead node is void
+                for t in outstanding.remove(&dead).unwrap_or_default() {
+                    out.tasks_failed += 1;
+                    sched.on_failure(&dead, &t, &ctx);
+                }
+                sched.on_node_down(&dead, &ctx);
+            }
+
+            if sched.is_done() {
+                break;
+            }
+            // 4. stall detection: nothing outstanding, nothing
+            //    dispatchable, not done -> the job cannot finish
+            let total_out: usize = outstanding.values().map(|v| v.len()).sum();
+            if total_out == 0 && ctx.nodes.iter().all(|n| !n.up) {
+                out.error =
+                    Some("no live nodes remain; job cannot finish".into());
+                break;
+            }
+        }
+
+        // merge phase + terminal status
+        let done = sched.is_done() && out.error.is_none()
+            || (sched.is_done() && out.tasks_completed > 0);
+        let status =
+            if done { JobStatus::Done } else { JobStatus::Failed };
+        self.catalog.lock().unwrap().update_job(job_id, |j| {
+            j.status = if done { JobStatus::Merging } else { status };
+        });
+        if done {
+            self.catalog
+                .lock()
+                .unwrap()
+                .update_job(job_id, |j| j.status = JobStatus::Done);
+        }
+        out.status = status;
+        out
+    }
+}
+
+/// Histogram merge = elementwise addition (the paper's result merge).
+pub fn merge_histogram(acc: &mut Vec<f32>, raw: &[u8]) {
+    let vals: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if acc.is_empty() {
+        *acc = vals;
+    } else if acc.len() == vals.len() {
+        for (a, v) in acc.iter_mut().zip(vals) {
+            *a += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brick::BrickId;
+    use std::sync::mpsc;
+
+    struct StopOnExit(std::sync::Arc<std::sync::atomic::AtomicBool>);
+    impl Drop for StopOnExit {
+        fn drop(&mut self) {
+            self.0.store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+
+    /// A fake node: replies TaskDone immediately with 10% selectivity.
+    fn fake_node(
+        name: &str,
+        out: Sender<Message>,
+    ) -> (Sender<Message>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel::<Message>();
+        // continuous heartbeat beacon, like the real node executor
+        let beat_name = name.to_string();
+        let beat_out = out.clone();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+                if beat_out
+                    .send(Message::Heartbeat {
+                        node: beat_name.clone(),
+                        free_slots: 1,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        let hb_name = name.to_string();
+        let hb = out.clone();
+        let j = std::thread::spawn(move || {
+            let _stop_on_exit = StopOnExit(stop);
+            let _ = hb.send(Message::Heartbeat {
+                node: hb_name.clone(),
+                free_slots: 1,
+            });
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Message::SubmitTask { job, task, rsl, .. } => {
+                        // the RSL must be parseable — nodes reject junk
+                        assert!(crate::rsl::parse(&rsl).is_ok());
+                        let n = task.n_events() as u64;
+                        let hist: Vec<u8> = (0..8)
+                            .flat_map(|_| 1.0f32.to_le_bytes())
+                            .collect();
+                        let _ = hb.send(Message::Heartbeat {
+                            node: hb_name.clone(),
+                            free_slots: 0,
+                        });
+                        let _ = out.send(Message::TaskDone {
+                            job,
+                            brick: task.brick,
+                            range: task.range,
+                            events_in: n,
+                            events_selected: n / 10,
+                            result_bytes: n * 100,
+                            histogram: hist,
+                        });
+                    }
+                    Message::Shutdown => return,
+                    _ => {}
+                }
+            }
+        });
+        (tx, j)
+    }
+
+    fn catalog_with(dataset: u32, bricks: u32, node_names: &[&str]) -> Catalog {
+        let mut cat = Catalog::new();
+        for n in node_names {
+            cat.register_node(n, 1.0, 1);
+        }
+        for i in 0..bricks {
+            cat.insert_brick(
+                BrickId::new(dataset, i),
+                100,
+                100 << 20,
+                vec![node_names[(i as usize) % node_names.len()].to_string()],
+            );
+        }
+        cat
+    }
+
+    #[test]
+    fn job_runs_to_done_with_fake_nodes() {
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = fake_node("a", out_tx.clone());
+        let (b_tx, b_j) = fake_node("b", out_tx.clone());
+        let mut cat = catalog_with(1, 4, &["a", "b"]);
+        let job = cat.submit_job(1, "max_pt > 0", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> = [
+            ("a".to_string(), a_tx.clone()),
+            ("b".to_string(), b_tx.clone()),
+        ]
+        .into();
+        let mut jse =
+            Jse::new(JseConfig::default(), nodes, out_rx, catalog.clone());
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Done);
+        assert_eq!(outcome.events_in, 400);
+        assert_eq!(outcome.events_selected, 40);
+        assert_eq!(outcome.tasks_completed, 4);
+        assert_eq!(outcome.histogram.len(), 8);
+        assert_eq!(outcome.histogram[0], 4.0); // 4 merged task histograms
+        let cat = catalog.lock().unwrap();
+        assert_eq!(cat.jobs.get(job).unwrap().status, JobStatus::Done);
+        assert_eq!(cat.job_results(job).len(), 4);
+        let _ = a_tx.send(Message::Shutdown);
+        let _ = b_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+        b_j.join().unwrap();
+    }
+
+    #[test]
+    fn bad_filter_fails_before_submission() {
+        let (_out_tx, out_rx) = mpsc::channel::<Message>();
+        let mut cat = catalog_with(1, 2, &["a"]);
+        let job = cat.submit_job(1, "met &&& 3", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let mut jse = Jse::new(
+            JseConfig::default(),
+            BTreeMap::new(),
+            out_rx,
+            catalog.clone(),
+        );
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Failed);
+        assert!(outcome.error.unwrap().contains("filter"));
+        assert_eq!(
+            catalog.lock().unwrap().jobs.get(job).unwrap().status,
+            JobStatus::Failed
+        );
+    }
+
+    #[test]
+    fn dead_node_work_reissued_to_survivor() {
+        // node "a" never answers (no heartbeats after the first, no task
+        // replies); its bricks must fail over to "b" via replication.
+        let (out_tx, out_rx) = mpsc::channel();
+        let (b_tx, b_j) = fake_node("b", out_tx.clone());
+        // silent node a: swallow everything
+        let (a_tx, a_rx) = mpsc::channel::<Message>();
+        let a_j = std::thread::spawn(move || {
+            while let Ok(m) = a_rx.recv() {
+                if matches!(m, Message::Shutdown) {
+                    return;
+                }
+            }
+        });
+        let mut cat = Catalog::new();
+        cat.register_node("a", 1.0, 1);
+        cat.register_node("b", 1.0, 1);
+        for i in 0..2 {
+            cat.insert_brick(
+                BrickId::new(1, i),
+                100,
+                100 << 20,
+                vec!["a".to_string(), "b".to_string()], // replicated
+            );
+        }
+        let job = cat.submit_job(1, "max_pt > 0", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> = [
+            ("a".to_string(), a_tx.clone()),
+            ("b".to_string(), b_tx.clone()),
+        ]
+        .into();
+        let cfg = JseConfig {
+            heartbeat_timeout_s: 20.0, // 100ms real at scale 200
+            tick_s: 1.0,
+            time_scale: 200.0,
+            streams: 1,
+        };
+        let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Done, "{:?}", outcome.error);
+        assert_eq!(outcome.events_in, 200);
+        assert_eq!(outcome.nodes_lost, vec!["a"]);
+        let _ = a_tx.send(Message::Shutdown);
+        let _ = b_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+        b_j.join().unwrap();
+    }
+}

@@ -1,0 +1,45 @@
+//! # GEPS — Grid-Brick Event Processing System
+//!
+//! A reproduction of *"Grid-Brick Event Processing Framework in GEPS"*
+//! (Amorim et al., 2003) as a three-layer rust + JAX + Pallas stack.
+//!
+//! The paper's idea: instead of staging event data from a central server to
+//! compute nodes at every job start (the traditional Globus/DataGrid
+//! pattern), **pre-split the data into bricks across the disks of all grid
+//! nodes** and route jobs to where the data already lives. The coordination
+//! plane — portal, metadata catalogue, job-submission engine (JSE) with its
+//! polling broker, RSL synthesis, GRAM-like execution, GASS-like transfer,
+//! GRIS/LDAP node info — is rebuilt here in rust (layer 3). The per-event
+//! filter/calibration compute (the paper's ROOT C++ application) is a JAX
+//! pipeline (layer 2) whose hot spot is a Pallas kernel (layer 1), AOT-lowered
+//! to HLO text at build time and executed from rust via PJRT.
+//!
+//! Module map (see DESIGN.md for the paper-section cross-reference):
+//!
+//! - substrates: [`util`], [`config`], [`events`], [`brick`], [`catalog`],
+//!   [`rsl`], [`filterexpr`], [`gris`], [`netsim`], [`sim`], [`wire`],
+//!   [`metrics`]
+//! - coordination: [`gass`], [`node`], [`scheduler`], [`jse`], [`ft`],
+//!   [`cluster`], [`portal`]
+//! - compute: [`runtime`] (PJRT engine over `artifacts/*.hlo.txt`)
+
+pub mod brick;
+pub mod catalog;
+pub mod cluster;
+pub mod config;
+pub mod events;
+pub mod filterexpr;
+pub mod ft;
+pub mod gass;
+pub mod gris;
+pub mod jse;
+pub mod metrics;
+pub mod netsim;
+pub mod node;
+pub mod portal;
+pub mod rsl;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod wire;

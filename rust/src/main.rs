@@ -1,0 +1,352 @@
+//! `geps` — the GEPS launcher and control CLI.
+//!
+//! Subcommands:
+//!   serve      start a live cluster + portal (blocks)
+//!   demo       self-contained: start, submit, wait, report, shut down
+//!   submit     POST a job to a running portal
+//!   status     query job status from a running portal
+//!   node-info  GRIS node query via a running portal
+//!   calibrate  measure PJRT kernel throughput (DES calibration input)
+//!   fig7       run the Fig 7 DES sweep and print the table
+//!
+//! Arg parsing is hand-rolled (no network registry in this sandbox), in
+//! the spirit of the 2003-era tooling this reproduces.
+
+use anyhow::{anyhow, bail, Context, Result};
+use geps::config::ClusterConfig;
+use geps::portal;
+use geps::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn load_config(flags: &BTreeMap<String, String>) -> Result<ClusterConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            ClusterConfig::parse(&text).map_err(|e| anyhow!("{e}"))?
+        }
+        None => ClusterConfig::default(),
+    };
+    if let Some(n) = flags.get("events") {
+        cfg.n_events = n.parse().context("--events")?;
+    }
+    if let Some(p) = flags.get("policy") {
+        cfg.policy = geps::scheduler::Policy::by_name(p)
+            .ok_or_else(|| anyhow!("unknown policy '{p}'"))?;
+    }
+    Ok(cfg)
+}
+
+fn start_cluster(flags: &BTreeMap<String, String>) -> Result<geps::cluster::ClusterHandle> {
+    let cfg = load_config(flags)?;
+    let artifacts = geps::runtime::default_artifacts_dir();
+    eprintln!(
+        "[geps] starting cluster: {} nodes, {} events, policy {}",
+        cfg.nodes.len(),
+        cfg.n_events,
+        cfg.policy.name()
+    );
+    geps::cluster::ClusterHandle::start(cfg, artifacts)
+}
+
+fn cmd_serve(flags: BTreeMap<String, String>) -> Result<()> {
+    let cluster = Arc::new(start_cluster(&flags)?);
+    let addr = flags
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:8135".to_string());
+    // GRIS information service on its own port (the paper's 2135, §4.3)
+    let gris_addr = flags
+        .get("gris-listen")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:2135".to_string());
+    match std::net::TcpListener::bind(&gris_addr) {
+        Ok(gl) => {
+            let dir = cluster.gris.clone();
+            println!("[geps] GRIS (LDAP-model) listening on {gris_addr}");
+            std::thread::spawn(move || geps::gris::gris_serve(gl, dir));
+        }
+        Err(e) => eprintln!("[geps] GRIS bind {gris_addr} failed: {e}"),
+    }
+    let (listener, local) = portal::bind_portal(&addr)?;
+    println!("[geps] portal listening on http://{local}/");
+    portal::serve(cluster, listener)
+}
+
+fn cmd_demo(flags: BTreeMap<String, String>) -> Result<()> {
+    let cluster = start_cluster(&flags)?;
+    let filter = flags
+        .get("filter")
+        .cloned()
+        .unwrap_or_else(|| "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20".into());
+    let policy = flags
+        .get("policy")
+        .cloned()
+        .unwrap_or_else(|| "locality".into());
+    println!("[geps] submitting filter: {filter} (policy {policy})");
+    let job = cluster.submit(&filter, &policy);
+    let status =
+        cluster.wait(job, std::time::Duration::from_secs(300))?;
+    let (processed, selected) = {
+        let cat = cluster.catalog.lock().unwrap();
+        let j = cat.jobs.get(job).unwrap();
+        (j.events_processed, j.events_selected)
+    };
+    println!(
+        "[geps] job {job}: {status:?} — {selected}/{processed} events selected"
+    );
+    if let Some(h) = cluster.histogram(job) {
+        let bins = h.len() / geps::events::NUM_FEATURES.max(1);
+        let mass = &h[5 * bins..6 * bins]; // max_pair_mass histogram
+        println!("[geps] max_pair_mass histogram (selected events):");
+        let peak = mass.iter().cloned().fold(0.0f32, f32::max).max(1.0);
+        for (i, v) in mass.iter().enumerate() {
+            if *v > 0.0 {
+                let (lo, hi) = geps::events::FeatureId::MaxPairMass.hist_range();
+                let w = (hi - lo) / bins as f32;
+                let bar = "#".repeat(((v / peak) * 40.0) as usize);
+                println!(
+                    "  [{:>5.1},{:>5.1}) {:>6} {bar}",
+                    lo + i as f32 * w,
+                    lo + (i + 1) as f32 * w,
+                    *v as u64
+                );
+            }
+        }
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+fn portal_addr(flags: &BTreeMap<String, String>) -> String {
+    flags
+        .get("portal")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:8135".to_string())
+}
+
+fn cmd_submit(flags: BTreeMap<String, String>) -> Result<()> {
+    let filter = flags
+        .get("filter")
+        .cloned()
+        .ok_or_else(|| anyhow!("--filter required"))?;
+    let policy = flags
+        .get("policy")
+        .cloned()
+        .unwrap_or_else(|| "locality".into());
+    let body = Json::obj()
+        .set("filter", filter.as_str())
+        .set("policy", policy.as_str())
+        .to_string();
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "POST",
+        "/submit",
+        Some(body.as_bytes()),
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    if status >= 300 {
+        bail!("submit failed with HTTP {status}");
+    }
+    Ok(())
+}
+
+fn cmd_status(flags: BTreeMap<String, String>) -> Result<()> {
+    let path = match flags.get("job") {
+        Some(id) => format!("/jobs/{id}"),
+        None => "/jobs".to_string(),
+    };
+    let (_, resp) =
+        portal::http::request(&portal_addr(&flags), "GET", &path, None)?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    Ok(())
+}
+
+fn cmd_histogram(flags: BTreeMap<String, String>) -> Result<()> {
+    let job = flags
+        .get("job")
+        .cloned()
+        .ok_or_else(|| anyhow!("--job required"))?;
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        &format!("/histogram/{job}"),
+        None,
+    )?;
+    if status >= 300 {
+        bail!("histogram fetch failed: {}", String::from_utf8_lossy(&resp));
+    }
+    let j = Json::parse(std::str::from_utf8(&resp)?)
+        .map_err(|e| anyhow!("{e}"))?;
+    // render every feature's histogram as ASCII bars (the paper's
+    // "visualize events filtering results", §4)
+    for f in geps::events::FeatureId::ALL {
+        let Some(bins) = j.get(f.name()).and_then(Json::as_arr) else {
+            continue;
+        };
+        let vals: Vec<f64> =
+            bins.iter().filter_map(Json::as_f64).collect();
+        let peak = vals.iter().cloned().fold(0.0f64, f64::max);
+        if peak <= 0.0 {
+            continue;
+        }
+        println!("
+{}:", f.name());
+        let (lo, hi) = f.hist_range();
+        let w = (hi - lo) / vals.len() as f32;
+        for (i, v) in vals.iter().enumerate() {
+            if *v > 0.0 {
+                let bar = "#".repeat(((v / peak) * 50.0).ceil() as usize);
+                println!(
+                    "  [{:>8.1},{:>8.1}) {:>8} {bar}",
+                    lo + i as f32 * w,
+                    lo + (i + 1) as f32 * w,
+                    *v as u64
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bricks(flags: BTreeMap<String, String>) -> Result<()> {
+    let (_, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        "/bricks",
+        None,
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    Ok(())
+}
+
+fn cmd_kill(flags: BTreeMap<String, String>) -> Result<()> {
+    let node = flags
+        .get("node")
+        .cloned()
+        .ok_or_else(|| anyhow!("--node required"))?;
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "POST",
+        &format!("/kill/{node}"),
+        None,
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    if status >= 300 {
+        bail!("kill failed with HTTP {status}");
+    }
+    Ok(())
+}
+
+fn cmd_node_info(flags: BTreeMap<String, String>) -> Result<()> {
+    let filter = flags
+        .get("filter")
+        .cloned()
+        .unwrap_or_else(|| "(nn=*)".to_string());
+    // minimal URL-encode of the filter
+    let enc: String = filter
+        .bytes()
+        .map(|b| match b {
+            b'(' | b')' | b'=' | b'*' | b'&' | b'|' | b'!' | b'<' | b'>'
+            | b' ' => format!("%{b:02X}"),
+            _ => (b as char).to_string(),
+        })
+        .collect();
+    let (_, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        &format!("/nodes?filter={enc}"),
+        None,
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    Ok(())
+}
+
+fn cmd_calibrate(_flags: BTreeMap<String, String>) -> Result<()> {
+    let dir = geps::runtime::default_artifacts_dir();
+    let engine = geps::runtime::Engine::load(&dir)?;
+    println!("[geps] platform: {}", engine.platform());
+    let report = geps::runtime::calibrate::calibrate(&engine, 20)?;
+    println!("[geps] {}", report.summary());
+    Ok(())
+}
+
+fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
+    use geps::sim::{Scenario, ScenarioConfig};
+    let reps: usize = flags
+        .get("reps")
+        .and_then(|r| r.parse().ok())
+        .unwrap_or(1);
+    println!("{:>7} {:>12} {:>12}  winner", "events", "hobbit-only", "GEPS");
+    for n in [250, 500, 1000, 1500, 2000, 2500, 3000, 4000, 8000, 16000] {
+        // the DES is deterministic; reps echo the paper's 10-run protocol
+        let mut s_acc = 0.0;
+        let mut g_acc = 0.0;
+        for _ in 0..reps {
+            s_acc += Scenario::run(ScenarioConfig::fig7_hobbit_only(n)).makespan_s;
+            g_acc += Scenario::run(ScenarioConfig::fig7_geps(n)).makespan_s;
+        }
+        let (s, g) = (s_acc / reps as f64, g_acc / reps as f64);
+        println!(
+            "{n:>7} {s:>12.1} {g:>12.1}  {}",
+            if g < s { "GEPS" } else { "single-node" }
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: geps <serve|demo|submit|status|node-info|kill|histogram|bricks|calibrate|fig7> [--flags]
+  serve     --config FILE --listen ADDR --gris-listen ADDR
+  demo      --config FILE --events N --policy P --filter EXPR
+  submit    --portal ADDR --filter EXPR --policy P
+  status    --portal ADDR [--job ID]
+  node-info --portal ADDR [--filter LDAP]
+  kill      --portal ADDR --node NAME        (fault injection)
+  histogram --portal ADDR --job ID           (visualize merged results)
+  bricks    --portal ADDR                    (brick placement view)
+  calibrate
+  fig7      [--reps N]"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "serve" => cmd_serve(flags),
+        "demo" => cmd_demo(flags),
+        "submit" => cmd_submit(flags),
+        "status" => cmd_status(flags),
+        "node-info" => cmd_node_info(flags),
+        "kill" => cmd_kill(flags),
+        "histogram" => cmd_histogram(flags),
+        "bricks" => cmd_bricks(flags),
+        "calibrate" => cmd_calibrate(flags),
+        "fig7" => cmd_fig7(flags),
+        _ => usage(),
+    }
+}

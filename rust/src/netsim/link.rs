@@ -1,0 +1,189 @@
+//! Link model + TCP transfer timing.
+
+use crate::util::ByteSize;
+
+/// A directed network path between two hosts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// one-way latency in seconds (RTT = 2 * latency)
+    pub latency_s: f64,
+    /// raw path bandwidth in bytes/second
+    pub bandwidth_bps: f64,
+    /// TCP window (socket buffer) in bytes — the paper's ref [12] point:
+    /// default buffers cripple WAN transfers
+    pub tcp_window: f64,
+}
+
+impl Link {
+    /// 100 Mb/s fast Ethernet LAN (the paper's testbed, §6).
+    pub fn lan_fast_ethernet() -> Link {
+        Link {
+            latency_s: 0.0001,             // 0.1 ms
+            bandwidth_bps: 12_500_000.0,   // 100 Mb/s
+            tcp_window: 64.0 * 1024.0,
+        }
+    }
+
+    /// Gigabit LAN.
+    pub fn lan_gigabit() -> Link {
+        Link {
+            latency_s: 0.00005,
+            bandwidth_bps: 125_000_000.0,
+            tcp_window: 256.0 * 1024.0,
+        }
+    }
+
+    /// Trans-continental WAN: high bandwidth but 50 ms one-way latency and
+    /// a default 64 KiB window — the configuration [12] shows is
+    /// window-starved.
+    pub fn wan_default_window() -> Link {
+        Link {
+            latency_s: 0.05,
+            bandwidth_bps: 125_000_000.0, // 1 Gb/s path
+            tcp_window: 64.0 * 1024.0,
+        }
+    }
+
+    /// Same WAN with a tuned window (bandwidth-delay product).
+    pub fn wan_tuned_window() -> Link {
+        let mut l = Link::wan_default_window();
+        l.tcp_window = l.bandwidth_bps * (2.0 * l.latency_s);
+        l
+    }
+
+    /// Localhost / same-machine "link" (disk-to-disk copy).
+    pub fn local() -> Link {
+        Link {
+            latency_s: 1e-6,
+            bandwidth_bps: 400_000_000.0, // ~disk copy rate of the era x margin
+            tcp_window: 1e9,
+        }
+    }
+
+    pub fn rtt(&self) -> f64 {
+        2.0 * self.latency_s
+    }
+}
+
+/// Parameters of one logical transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferSpec {
+    pub bytes: ByteSize,
+    /// number of parallel TCP streams (GridFTP striping; 1 = plain GASS)
+    pub streams: u32,
+}
+
+impl TransferSpec {
+    pub fn single(bytes: ByteSize) -> Self {
+        TransferSpec { bytes, streams: 1 }
+    }
+}
+
+/// Single-stream steady-state TCP throughput on `link`:
+/// min(raw bandwidth, window / RTT).
+pub fn tcp_throughput(link: &Link) -> f64 {
+    let rtt = link.rtt().max(1e-9);
+    link.bandwidth_bps.min(link.tcp_window / rtt)
+}
+
+/// Aggregate throughput of `n` parallel streams: each stream gets its own
+/// window (so n*window/RTT) but they share the raw path bandwidth, and
+/// each extra stream pays a small coordination tax (stripe reassembly,
+/// observed in [12] as sub-linear scaling near saturation).
+pub fn multi_stream_throughput(link: &Link, streams: u32) -> f64 {
+    let n = streams.max(1) as f64;
+    let per_stream = tcp_throughput(link);
+    let striped = n * per_stream;
+    let efficiency = 1.0 / (1.0 + 0.02 * (n - 1.0));
+    (striped * efficiency).min(link.bandwidth_bps)
+}
+
+/// Wall-clock seconds for a transfer: connection setup (1.5 RTT TCP
+/// handshake + control channel) once, plus payload over the aggregate
+/// stream rate. GridFTP's stripes share one control channel, so setup does
+/// not multiply with streams.
+pub fn transfer_time(link: &Link, spec: &TransferSpec) -> f64 {
+    if spec.bytes == ByteSize::ZERO {
+        return link.rtt(); // control round-trip only
+    }
+    let setup = 1.5 * link.rtt();
+    let rate = multi_stream_throughput(link, spec.streams);
+    setup + spec.bytes.as_f64() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lan_is_bandwidth_limited() {
+        let l = Link::lan_fast_ethernet();
+        // window/RTT = 64KiB / 0.2ms = ~327 MB/s >> 12.5 MB/s raw
+        assert!((tcp_throughput(&l) - 12_500_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn wan_default_is_window_limited() {
+        let l = Link::wan_default_window();
+        // 64 KiB / 100 ms = 655 KB/s << 125 MB/s raw
+        let t = tcp_throughput(&l);
+        assert!(t < 1_000_000.0, "throughput {t}");
+    }
+
+    #[test]
+    fn tuned_window_restores_wan_bandwidth() {
+        let l = Link::wan_tuned_window();
+        assert!((tcp_throughput(&l) - l.bandwidth_bps).abs() < 1.0);
+    }
+
+    #[test]
+    fn streams_scale_until_saturation() {
+        let l = Link::wan_default_window();
+        let t1 = multi_stream_throughput(&l, 1);
+        let t4 = multi_stream_throughput(&l, 4);
+        let t16 = multi_stream_throughput(&l, 16);
+        assert!(t4 > 3.0 * t1, "t4 {t4} vs t1 {t1}");
+        assert!(t16 > t4);
+        assert!(t16 <= l.bandwidth_bps);
+        // on a LAN (already bandwidth-limited) streams gain nothing
+        let lan = Link::lan_fast_ethernet();
+        let l1 = multi_stream_throughput(&lan, 1);
+        let l8 = multi_stream_throughput(&lan, 8);
+        assert!((l8 - l1).abs() / l1 < 0.01);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let l = Link::lan_fast_ethernet();
+        let t1 = transfer_time(&l, &TransferSpec::single(ByteSize::mb(1)));
+        let t2 = transfer_time(&l, &TransferSpec::single(ByteSize::mb(2)));
+        assert!(t2 > t1);
+        // 125 MB over fast ethernet ~ 10 s
+        let t =
+            transfer_time(&l, &TransferSpec::single(ByteSize(125_000_000)));
+        assert!((t - 10.0).abs() < 0.1, "t {t}");
+    }
+
+    #[test]
+    fn transfer_time_decreases_with_streams_on_wan() {
+        let l = Link::wan_default_window();
+        let one = transfer_time(
+            &l,
+            &TransferSpec { bytes: ByteSize::mb(100), streams: 1 },
+        );
+        let eight = transfer_time(
+            &l,
+            &TransferSpec { bytes: ByteSize::mb(100), streams: 8 },
+        );
+        assert!(eight < one / 4.0, "8-stream {eight} vs 1-stream {one}");
+    }
+
+    #[test]
+    fn empty_transfer_costs_a_round_trip() {
+        let l = Link::wan_default_window();
+        assert!((transfer_time(&l, &TransferSpec::single(ByteSize::ZERO))
+            - l.rtt())
+        .abs()
+            < 1e-12);
+    }
+}

@@ -1,0 +1,21 @@
+//! Network simulation substrate.
+//!
+//! The paper's Fig 7 crossover and its §7 GridFTP plans are both
+//! consequences of *how long bytes take to move*: a RTT-bound TCP stream
+//! over a WAN is slow regardless of raw bandwidth (§3: "even the fastest
+//! global networks are a problem due to the large acknowledgment time"),
+//! and striping over multiple streams recovers the window-limited loss
+//! (ref [12]). This module models exactly that:
+//!
+//! - [`Link`]: latency + bandwidth + TCP window per path
+//! - [`tcp_throughput`]: single-stream throughput = min(bandwidth,
+//!   window/RTT) — the classic bandwidth-delay-product limit
+//! - [`transfer_time`]: startup (handshake) + bytes/effective-rate, with
+//!   multi-stream striping and per-stream diminishing returns
+//! - [`Topology`]: named hosts + per-pair links (LAN/WAN presets)
+
+pub mod link;
+pub mod topology;
+
+pub use link::{tcp_throughput, transfer_time, Link, TransferSpec};
+pub use topology::Topology;

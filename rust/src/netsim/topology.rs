@@ -1,0 +1,122 @@
+//! Cluster topology: named hosts and the links between them.
+//!
+//! The paper's testbed is two machines (`gandalf`, `hobbit`) on fast
+//! Ethernet plus a job-submit server; our topology generalises to N hosts
+//! with per-pair link overrides (so WAN-separated sites can be modelled,
+//! which §3 discusses and Ext-A measures).
+
+use crate::netsim::link::Link;
+use std::collections::BTreeMap;
+
+/// Named hosts + default link + per-pair overrides.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    hosts: Vec<String>,
+    default_link: Link,
+    overrides: BTreeMap<(String, String), Link>,
+    /// the host that runs the JSE / job-submit server
+    leader: String,
+}
+
+impl Topology {
+    pub fn new(leader: &str, default_link: Link) -> Self {
+        Topology {
+            hosts: vec![leader.to_string()],
+            default_link,
+            overrides: BTreeMap::new(),
+            leader: leader.to_string(),
+        }
+    }
+
+    /// The paper's testbed: leader + gandalf + hobbit on fast Ethernet.
+    pub fn paper_testbed() -> Self {
+        let mut t = Topology::new("jse", Link::lan_fast_ethernet());
+        t.add_host("gandalf");
+        t.add_host("hobbit");
+        t
+    }
+
+    /// A uniform LAN cluster of `n` workers named node0..n-1.
+    pub fn lan_cluster(n: usize, link: Link) -> Self {
+        let mut t = Topology::new("jse", link);
+        for i in 0..n {
+            t.add_host(&format!("node{i}"));
+        }
+        t
+    }
+
+    pub fn add_host(&mut self, name: &str) {
+        if !self.hosts.iter().any(|h| h == name) {
+            self.hosts.push(name.to_string());
+        }
+    }
+
+    pub fn set_link(&mut self, a: &str, b: &str, link: Link) {
+        self.overrides.insert((a.to_string(), b.to_string()), link);
+        self.overrides.insert((b.to_string(), a.to_string()), link);
+    }
+
+    /// Link between two hosts (same host = local copy).
+    pub fn link(&self, a: &str, b: &str) -> Link {
+        if a == b {
+            return Link::local();
+        }
+        self.overrides
+            .get(&(a.to_string(), b.to_string()))
+            .copied()
+            .unwrap_or(self.default_link)
+    }
+
+    pub fn leader(&self) -> &str {
+        &self.leader
+    }
+
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
+    /// Worker hosts (everything but the leader).
+    pub fn workers(&self) -> Vec<String> {
+        self.hosts
+            .iter()
+            .filter(|h| *h != &self.leader)
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let t = Topology::paper_testbed();
+        assert_eq!(t.leader(), "jse");
+        assert_eq!(t.workers(), vec!["gandalf", "hobbit"]);
+    }
+
+    #[test]
+    fn same_host_is_local() {
+        let t = Topology::paper_testbed();
+        let l = t.link("hobbit", "hobbit");
+        assert!(l.bandwidth_bps > Link::lan_fast_ethernet().bandwidth_bps);
+    }
+
+    #[test]
+    fn overrides_are_symmetric() {
+        let mut t = Topology::lan_cluster(3, Link::lan_fast_ethernet());
+        t.set_link("node0", "node2", Link::wan_default_window());
+        assert_eq!(t.link("node0", "node2"), Link::wan_default_window());
+        assert_eq!(t.link("node2", "node0"), Link::wan_default_window());
+        assert_eq!(t.link("node0", "node1"), Link::lan_fast_ethernet());
+    }
+
+    #[test]
+    fn add_host_dedupes() {
+        let mut t = Topology::new("jse", Link::lan_gigabit());
+        t.add_host("a");
+        t.add_host("a");
+        assert_eq!(t.hosts().len(), 2);
+    }
+}

@@ -1,0 +1,278 @@
+//! The node executor: a GRAM-like job manager on its own OS thread.
+//!
+//! Lifecycle per task (the paper's event application run, §4.1 + §4.2):
+//! 1. parse the RSL sentence that travelled with the submission
+//! 2. stage-in raw data over GASS if the RSL names a remote source
+//! 3. decode the brick, slice the task's event range
+//! 4. run the AOT kernel (features) batch by batch via the engine pool
+//! 5. evaluate the user filter expression over the features (L3)
+//! 6. histogram selected events (AOT histogram program), build the
+//!    result file, GASS it back to the leader
+//! 7. report TaskDone / TaskFailed on the wire
+//!
+//! A fault-injection switch makes the thread die silently mid-task (a
+//! crash, not an error): the JSE only learns via missed heartbeats.
+
+use crate::brick::{BrickFile, Codec};
+use crate::events::EventBatch;
+use crate::filterexpr;
+use crate::gass::GassService;
+use crate::node::store::{brick_path, result_path, BrickStore};
+use crate::rsl;
+use crate::runtime::EnginePool;
+use crate::scheduler::Task;
+use crate::wire::Message;
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Node runtime configuration.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    pub name: String,
+    pub slots: usize,
+    pub speed: f64,
+    /// virtual heartbeat period (seconds) and cluster time scale
+    pub heartbeat_s: f64,
+    pub time_scale: f64,
+}
+
+/// Handle the cluster keeps per node.
+pub struct NodeHandle {
+    pub name: String,
+    pub tx: Sender<Message>,
+    pub killed: Arc<AtomicBool>,
+    pub tasks_done: Arc<AtomicUsize>,
+    join: Option<std::thread::JoinHandle<()>>,
+    hb_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NodeHandle {
+    /// Crash the node (fault injection): current task dies silently,
+    /// heartbeats stop.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+        // wake the executor if it is blocked on the inbox
+        let _ = self.tx.send(Message::Shutdown);
+    }
+
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.hb_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        self.kill();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.hb_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn a node actor. The returned handle's `tx` is the node's inbox
+/// (leader->node); `outbox` carries node->leader messages.
+pub fn spawn_node(
+    cfg: NodeConfig,
+    gass: GassService,
+    pool: EnginePool,
+    outbox: Sender<Message>,
+) -> NodeHandle {
+    let killed = Arc::new(AtomicBool::new(false));
+    let tasks_done = Arc::new(AtomicUsize::new(0));
+    let (self_tx, inbox): (Sender<Message>, Receiver<Message>) =
+        std::sync::mpsc::channel();
+
+    // heartbeat thread
+    let hb_killed = killed.clone();
+    let hb_out = outbox.clone();
+    let hb_name = cfg.name.clone();
+    let hb_period =
+        Duration::from_secs_f64(cfg.heartbeat_s / cfg.time_scale.max(1e-9));
+    let hb_join = std::thread::Builder::new()
+        .name(format!("geps-hb-{}", cfg.name))
+        .spawn(move || {
+            while !hb_killed.load(Ordering::SeqCst) {
+                if hb_out
+                    .send(Message::Heartbeat {
+                        node: hb_name.clone(),
+                        free_slots: 1,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                std::thread::sleep(hb_period);
+            }
+        })
+        .expect("spawn heartbeat");
+
+    // executor thread
+    let ex_killed = killed.clone();
+    let ex_done = tasks_done.clone();
+    let name = cfg.name.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("geps-node-{}", cfg.name))
+        .spawn(move || {
+            let store = BrickStore::new(
+                gass.store(&name).expect("node has no gass store"),
+            );
+            loop {
+                let msg = match inbox.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                };
+                if ex_killed.load(Ordering::SeqCst) {
+                    return; // crashed: drop everything silently
+                }
+                match msg {
+                    Message::SubmitTask { job, task, filter, rsl } => {
+                        let outcome = run_task(
+                            &name, &store, &gass, &pool, job, &task,
+                            &filter, &rsl, &ex_killed,
+                        );
+                        if ex_killed.load(Ordering::SeqCst) {
+                            return; // died mid-task: no report
+                        }
+                        let reply = match outcome {
+                            Ok(m) => m,
+                            Err(e) => Message::TaskFailed {
+                                job,
+                                brick: task.brick,
+                                range: task.range,
+                                error: format!("{e:#}"),
+                            },
+                        };
+                        if matches!(reply, Message::TaskDone { .. }) {
+                            ex_done.fetch_add(1, Ordering::SeqCst);
+                        }
+                        if outbox.send(reply).is_err() {
+                            return;
+                        }
+                    }
+                    Message::Shutdown => return,
+                    _ => {} // nodes ignore other message kinds
+                }
+            }
+        })
+        .expect("spawn node executor");
+
+    NodeHandle {
+        name: cfg.name,
+        tx: self_tx,
+        killed,
+        tasks_done,
+        join: Some(join),
+        hb_join: Some(hb_join),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_task(
+    name: &str,
+    store: &BrickStore,
+    gass: &GassService,
+    pool: &EnginePool,
+    job: u64,
+    task: &Task,
+    filter_src: &str,
+    rsl_text: &str,
+    killed: &AtomicBool,
+) -> Result<Message> {
+    // 1. the RSL sentence must parse and agree with the wire task —
+    //    (the paper's JSE/GRAM contract; catching drift loudly)
+    let spec = rsl::parse(rsl_text).context("task RSL does not parse")?;
+    let (brick_str, range, rsl_filter, source) =
+        rsl::synth::parse_task_rsl(&spec)
+            .ok_or_else(|| anyhow!("task RSL missing required arguments"))?;
+    if brick_str != task.brick.to_string()
+        || range != task.range
+        || rsl_filter != filter_src
+    {
+        return Err(anyhow!("RSL/wire task mismatch"));
+    }
+
+    let filter = filterexpr::compile(filter_src)
+        .map_err(|e| anyhow!("filter: {e}"))?;
+
+    // 2. stage-in if remote
+    if let Some(src) = source.as_deref().or(task.source.as_deref()) {
+        if src != name {
+            gass.transfer(src, name, &brick_path(task.brick))
+                .map_err(|e| anyhow!("GASS stage-in: {e}"))?;
+            store.evict(task.brick);
+        }
+    }
+
+    // 3. decode + slice
+    let events = store.slice(task.brick, task.range)?;
+    let events_in = events.len() as u64;
+
+    // 4-6. kernel + filter + histogram, batch by batch
+    let calib = crate::runtime::Engine::identity_calib();
+    let mut selected_events = Vec::new();
+    let mut histogram: Vec<f32> = Vec::new();
+    for chunk in events.chunks(pool.batch) {
+        if killed.load(Ordering::SeqCst) {
+            return Err(anyhow!("node crashed"));
+        }
+        let batch = EventBatch::pack(chunk, pool.batch, pool.max_tracks);
+        let feats = pool.features(batch, calib)?;
+        let mask = filter.accept_batch(&feats.data, feats.n_real);
+        let mut sel_f32 = vec![0f32; pool.batch];
+        for (i, &keep) in mask.iter().enumerate() {
+            if keep {
+                sel_f32[i] = 1.0;
+                selected_events.push(chunk[i].clone());
+            }
+        }
+        let h = pool.histogram(feats, sel_f32)?;
+        if histogram.is_empty() {
+            histogram = h;
+        } else {
+            for (a, b) in histogram.iter_mut().zip(h) {
+                *a += b; // histogram merge is elementwise addition
+            }
+        }
+    }
+    let events_selected = selected_events.len() as u64;
+
+    // 6b. result file: selected events as a brick, GASS'd to the leader
+    let rpath = result_path(job, task.brick, task.range);
+    let result_brick = BrickFile::encode(
+        task.brick,
+        &selected_events,
+        Codec::Lzss,
+        256,
+    );
+    let result_bytes = result_brick.size() as u64;
+    store.gass().put(&rpath, result_brick.bytes);
+    let leader = gass.topology().leader().to_string();
+    gass.transfer(name, &leader, &rpath)
+        .map_err(|e| anyhow!("GASS result retrieval: {e}"))?;
+
+    // histogram payload as LE f32 bytes
+    let hist_bytes: Vec<u8> =
+        histogram.iter().flat_map(|v| v.to_le_bytes()).collect();
+
+    Ok(Message::TaskDone {
+        job,
+        brick: task.brick,
+        range: task.range,
+        events_in,
+        events_selected,
+        result_bytes,
+        histogram: hist_bytes,
+    })
+}

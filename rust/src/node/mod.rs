@@ -1,0 +1,14 @@
+//! Grid-node actor: one OS thread per node (the era's daemon model),
+//! owning a brick store view, a GRAM-like task executor, a heartbeat
+//! beacon and a GRIS provider. Nodes speak the [`crate::wire::Message`]
+//! protocol with the JSE over channels (the live-cluster "network";
+//! payload timing is charged by GASS/netsim).
+//!
+//! - [`store`]: decode-and-cache access to the bricks on this node's disk
+//! - [`executor`]: the task lifecycle (stage -> run kernel -> filter -> result)
+
+pub mod executor;
+pub mod store;
+
+pub use executor::{spawn_node, NodeConfig, NodeHandle};
+pub use store::BrickStore;

@@ -1,0 +1,166 @@
+//! Node-local brick access: decode brick files from the node's GASS
+//! store, verify integrity, cache decoded events (the ROOT-file read
+//! path of §4.1, with checksums instead of trust).
+
+use crate::brick::{BrickFile, BrickId};
+use crate::events::Event;
+use crate::gass::GassStore;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Canonical path of a brick object in a GASS store.
+pub fn brick_path(id: BrickId) -> String {
+    format!("/bricks/{id}.brick")
+}
+
+/// Canonical path of a task's result object.
+pub fn result_path(job: u64, id: BrickId, range: (usize, usize)) -> String {
+    format!("/results/job{job}/{id}.{}-{}.brick", range.0, range.1)
+}
+
+/// Decoded-brick cache over a GASS store.
+#[derive(Clone)]
+pub struct BrickStore {
+    gass_store: GassStore,
+    cache: Arc<Mutex<HashMap<BrickId, Arc<Vec<Event>>>>>,
+}
+
+impl BrickStore {
+    pub fn new(gass_store: GassStore) -> Self {
+        BrickStore { gass_store, cache: Arc::new(Mutex::new(HashMap::new())) }
+    }
+
+    /// Load (and cache) a brick's events, verifying checksums.
+    pub fn load(&self, id: BrickId) -> Result<Arc<Vec<Event>>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(&id) {
+            return Ok(hit.clone());
+        }
+        let path = brick_path(id);
+        let bytes = self
+            .gass_store
+            .get(&path)
+            .ok_or_else(|| anyhow!("brick {id} not on this node ({path})"))?;
+        let (meta, events) = BrickFile::decode(&bytes)
+            .map_err(|e| anyhow!("brick {id} corrupt: {e}"))?;
+        if meta.id != id {
+            return Err(anyhow!(
+                "brick identity mismatch: asked {id}, file says {}",
+                meta.id
+            ));
+        }
+        let arc = Arc::new(events);
+        self.cache.lock().unwrap().insert(id, arc.clone());
+        Ok(arc)
+    }
+
+    /// Drop a cached brick (e.g. after corruption-triggered refetch).
+    pub fn evict(&self, id: BrickId) {
+        self.cache.lock().unwrap().remove(&id);
+    }
+
+    /// Bricks physically present in the GASS store.
+    pub fn resident_bricks(&self) -> Vec<String> {
+        self.gass_store
+            .list()
+            .into_iter()
+            .filter(|p| p.starts_with("/bricks/"))
+            .collect()
+    }
+
+    pub fn gass(&self) -> &GassStore {
+        &self.gass_store
+    }
+
+    /// Slice a task range out of a brick, with bounds checking.
+    pub fn slice(
+        &self,
+        id: BrickId,
+        range: (usize, usize),
+    ) -> Result<Vec<Event>> {
+        let events = self.load(id)?;
+        let (a, b) = range;
+        if a > b || b > events.len() {
+            return Err(anyhow!(
+                "range {a}..{b} out of bounds for brick {id} ({} events)",
+                events.len()
+            ))
+            .context("task range");
+        }
+        Ok(events[a..b].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brick::format::Codec;
+    use crate::events::{EventGenerator, GeneratorConfig};
+
+    fn setup(n: usize) -> (BrickStore, BrickId, Vec<Event>) {
+        let gs = GassStore::new();
+        let events =
+            EventGenerator::new(GeneratorConfig::default(), 5).take(n);
+        let id = BrickId::new(1, 0);
+        let brick = BrickFile::encode(id, &events, Codec::Lzss, 64);
+        gs.put(&brick_path(id), brick.bytes);
+        (BrickStore::new(gs), id, events)
+    }
+
+    #[test]
+    fn load_and_cache() {
+        let (store, id, events) = setup(100);
+        let a = store.load(id).unwrap();
+        assert_eq!(*a, events);
+        // second load hits the cache (same Arc)
+        let b = store.load(id).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_brick_errors() {
+        let (store, _, _) = setup(10);
+        assert!(store.load(BrickId::new(9, 9)).is_err());
+    }
+
+    #[test]
+    fn corrupt_brick_detected() {
+        let (store, id, _) = setup(50);
+        let path = brick_path(id);
+        let mut bytes = store.gass().get(&path).unwrap().as_ref().clone();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x55;
+        store.gass().put(&path, bytes);
+        store.evict(id);
+        assert!(store.load(id).is_err());
+    }
+
+    #[test]
+    fn identity_mismatch_detected() {
+        let gs = GassStore::new();
+        let events =
+            EventGenerator::new(GeneratorConfig::default(), 5).take(10);
+        let brick =
+            BrickFile::encode(BrickId::new(2, 2), &events, Codec::Raw, 8);
+        // stored under the WRONG brick path
+        gs.put(&brick_path(BrickId::new(1, 1)), brick.bytes);
+        let store = BrickStore::new(gs);
+        assert!(store.load(BrickId::new(1, 1)).is_err());
+    }
+
+    #[test]
+    fn slice_bounds() {
+        let (store, id, events) = setup(100);
+        let s = store.slice(id, (10, 20)).unwrap();
+        assert_eq!(s, events[10..20]);
+        assert!(store.slice(id, (90, 101)).is_err());
+        assert!(store.slice(id, (20, 10)).is_err());
+        assert_eq!(store.slice(id, (0, 100)).unwrap().len(), 100);
+    }
+
+    #[test]
+    fn resident_listing() {
+        let (store, _, _) = setup(10);
+        assert_eq!(store.resident_bricks().len(), 1);
+    }
+}

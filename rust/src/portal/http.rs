@@ -1,0 +1,251 @@
+//! Minimal HTTP/1.1 server + client — the substrate under the portal
+//! (the paper used PHP behind Apache; we hand-roll the era-appropriate
+//! thread-per-connection server). Supports request-line + headers +
+//! content-length bodies; enough for a JSON control API.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// A response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl ToString) -> Response {
+        Response {
+            status,
+            content_type: "application/json".into(),
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8".into(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn html(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/html; charset=utf-8".into(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            _ => "Internal Server Error",
+        }
+    }
+}
+
+/// Read one request from a stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing path"))?
+        .to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    if !version.starts_with("HTTP/1") {
+        bail!("unsupported version {version}");
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(
+                k.trim().to_ascii_lowercase(),
+                v.trim().to_string(),
+            );
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > 16 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body).context("body")?;
+    }
+    Ok(Request { method, path, headers, body })
+}
+
+/// Write a response.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        resp.status,
+        resp.status_text(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Serve forever with a handler; one thread per connection (2003-style).
+/// Returns the bound local address via the callback before blocking.
+pub fn serve<F>(listener: TcpListener, handler: F) -> Result<()>
+where
+    F: Fn(Request) -> Response + Send + Sync + 'static,
+{
+    let handler = std::sync::Arc::new(handler);
+    for conn in listener.incoming() {
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let h = handler.clone();
+        std::thread::spawn(move || {
+            let resp = match read_request(&mut stream) {
+                Ok(req) => h(req),
+                Err(e) => Response::text(400, format!("bad request: {e}")),
+            };
+            let _ = write_response(&mut stream, &resp);
+        });
+    }
+    Ok(())
+}
+
+/// Minimal HTTP client: one request, returns (status, body).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    let blen = body.map(|b| b.len()).unwrap_or(0);
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-length: {blen}\r\nconnection: close\r\n\r\n"
+    );
+    stream.write_all(head.as_bytes())?;
+    if let Some(b) = body {
+        stream.write_all(b)?;
+    }
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_server<F>(handler: F) -> String
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || serve(listener, handler));
+        addr
+    }
+
+    #[test]
+    fn request_response_roundtrip() {
+        let addr = spawn_server(|req| {
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/echo");
+            Response::json(200, String::from_utf8(req.body).unwrap())
+        });
+        let (status, body) =
+            request(&addr, "POST", "/echo", Some(b"{\"x\":1}")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"x\":1}");
+    }
+
+    #[test]
+    fn get_without_body() {
+        let addr = spawn_server(|req| {
+            assert_eq!(req.method, "GET");
+            assert!(req.body.is_empty());
+            Response::text(404, "nope")
+        });
+        let (status, body) = request(&addr, "GET", "/missing", None).unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, b"nope");
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let addr = spawn_server(|_req| Response::text(200, "ok"));
+        let mut joins = Vec::new();
+        for _ in 0..16 {
+            let a = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                request(&a, "GET", "/", None).unwrap().0
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 200);
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! The GEPS portal — the paper's PHP web interface (§5, Figs 3–6),
+//! exposing the three use-cases over a JSON HTTP API plus a small HTML
+//! index page:
+//!
+//! - `POST /submit {"filter": ..., "policy": ...}` — Fig 4, submit a job
+//! - `GET /jobs/<id>` — Fig 6, job status detail
+//! - `GET /jobs` — job list
+//! - `GET /nodes?filter=(ldap...)` — Figs 3/5, GRIS node information
+//! - `GET /histogram/<id>` — merged result visualisation data
+//! - `POST /kill/<node>` — fault injection (operations/testing surface)
+//! - `GET /bricks` — brick placement view
+//! - `GET /metrics` — coordinator metrics
+//!
+//! The portal is a thin translation layer over [`ClusterHandle`]; all
+//! grid mechanics stay hidden behind it, which is the paper's main
+//! usability claim ("Grid related details and relevant middleware
+//! specifics have been hidden from the end user").
+
+pub mod http;
+
+use crate::cluster::ClusterHandle;
+use crate::util::json::Json;
+use anyhow::Result;
+use http::{Request, Response};
+use std::net::TcpListener;
+use std::sync::Arc;
+
+const INDEX_HTML: &str = r#"<!doctype html>
+<html><head><title>GEPS - Grid-Brick Event Processing System</title></head>
+<body>
+<h1>GEPS</h1>
+<p>Grid-brick Event Processing System &mdash; the grid details are hidden behind this portal.</p>
+<ul>
+  <li>POST /submit {"filter": "max_pair_mass > 80 && max_pt > 20", "policy": "locality"}</li>
+  <li>GET /jobs &mdash; all jobs</li>
+  <li>GET /jobs/&lt;id&gt; &mdash; job status details</li>
+  <li>GET /nodes?filter=(&amp;(cpus&gt;=1)(status=up)) &mdash; GRIS node information</li>
+  <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
+  <li>GET /metrics &mdash; coordinator metrics</li>
+</ul>
+<p>Example filter expressions: <code>max_pair_mass &gt; 80 &amp;&amp; max_pair_mass &lt; 100</code>,
+<code>n_tracks &gt;= 4 || met &gt; 30</code></p>
+</body></html>"#;
+
+fn job_json(cat: &crate::catalog::Catalog, id: u64) -> Option<Json> {
+    let j = cat.jobs.get(id)?;
+    let results = cat.job_results(id);
+    Some(
+        Json::obj()
+            .set("id", id)
+            .set("dataset", j.dataset as u64)
+            .set("filter", j.filter_expr.as_str())
+            .set("policy", j.policy.as_str())
+            .set("status", j.status.name())
+            .set("events_processed", j.events_processed)
+            .set("events_selected", j.events_selected)
+            .set("tasks", results.len())
+            .set(
+                "error",
+                j.error.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+    )
+}
+
+/// URL-decode the minimal set the portal needs (%XX and '+').
+fn url_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < b.len() + 1 && i + 2 < b.len() + 1 => {
+                if i + 2 < b.len() {
+                    if let Ok(v) = u8::from_str_radix(
+                        std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("zz"),
+                        16,
+                    ) {
+                        out.push(v);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Route one request against the cluster.
+pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (req.path.as_str(), None),
+    };
+    match (req.method.as_str(), path) {
+        ("GET", "/") => Response::html(200, INDEX_HTML),
+        ("POST", "/submit") => {
+            let body = match std::str::from_utf8(&req.body)
+                .map_err(|e| e.to_string())
+                .and_then(|s| Json::parse(s).map_err(|e| e.to_string()))
+            {
+                Ok(j) => j,
+                Err(e) => {
+                    return Response::json(
+                        400,
+                        Json::obj().set("error", format!("bad json: {e}")),
+                    )
+                }
+            };
+            let filter = body
+                .get("filter")
+                .and_then(Json::as_str)
+                .unwrap_or("true");
+            let policy = body
+                .get("policy")
+                .and_then(Json::as_str)
+                .unwrap_or("locality");
+            if crate::scheduler::Policy::by_name(policy).is_none() {
+                return Response::json(
+                    400,
+                    Json::obj().set("error", format!("unknown policy '{policy}'")),
+                );
+            }
+            if let Err(e) = crate::filterexpr::compile(filter) {
+                return Response::json(
+                    400,
+                    Json::obj().set("error", format!("bad filter: {e}")),
+                );
+            }
+            let id = cluster.submit(filter, policy);
+            Response::json(201, Json::obj().set("job", id))
+        }
+        ("GET", "/jobs") => {
+            let cat = cluster.catalog.lock().unwrap();
+            let list: Vec<Json> = cat
+                .jobs
+                .iter()
+                .filter_map(|(id, _)| job_json(&cat, id))
+                .collect();
+            Response::json(200, Json::Arr(list))
+        }
+        ("GET", p) if p.starts_with("/jobs/") => {
+            let id: u64 = match p["/jobs/".len()..].parse() {
+                Ok(v) => v,
+                Err(_) => {
+                    return Response::json(
+                        400,
+                        Json::obj().set("error", "bad job id"),
+                    )
+                }
+            };
+            let cat = cluster.catalog.lock().unwrap();
+            match job_json(&cat, id) {
+                Some(j) => Response::json(200, j),
+                None => Response::json(
+                    404,
+                    Json::obj().set("error", "no such job"),
+                ),
+            }
+        }
+        ("GET", "/nodes") => {
+            let filter = query
+                .and_then(|q| {
+                    q.split('&').find_map(|kv| {
+                        kv.strip_prefix("filter=").map(url_decode)
+                    })
+                })
+                .unwrap_or_else(|| "(nn=*)".to_string());
+            match cluster.gris_search("o=geps", &filter) {
+                Ok(entries) => {
+                    let list: Vec<Json> = entries
+                        .into_iter()
+                        .map(|(dn, attrs)| {
+                            let mut o = Json::obj().set("dn", dn);
+                            for (k, v) in attrs {
+                                o = o.set(&k, v.as_str());
+                            }
+                            o
+                        })
+                        .collect();
+                    Response::json(200, Json::Arr(list))
+                }
+                Err(e) => Response::json(
+                    400,
+                    Json::obj().set("error", e.to_string()),
+                ),
+            }
+        }
+        ("GET", p) if p.starts_with("/histogram/") => {
+            let id: u64 = match p["/histogram/".len()..].parse() {
+                Ok(v) => v,
+                Err(_) => {
+                    return Response::json(
+                        400,
+                        Json::obj().set("error", "bad job id"),
+                    )
+                }
+            };
+            match cluster.histogram(id) {
+                Some(h) => {
+                    let bins = h.len() / crate::events::NUM_FEATURES.max(1);
+                    let mut o = Json::obj().set("job", id).set("bins", bins);
+                    for (i, f) in
+                        crate::events::FeatureId::ALL.iter().enumerate()
+                    {
+                        let row: Vec<Json> = h
+                            [i * bins..(i + 1) * bins]
+                            .iter()
+                            .map(|v| Json::Num(*v as f64))
+                            .collect();
+                        o = o.set(f.name(), Json::Arr(row));
+                    }
+                    Response::json(200, o)
+                }
+                None => Response::json(
+                    404,
+                    Json::obj().set("error", "no histogram (job finished?)"),
+                ),
+            }
+        }
+        ("GET", "/bricks") => {
+            let cat = cluster.catalog.lock().unwrap();
+            let list: Vec<Json> = cat
+                .bricks
+                .iter()
+                .map(|(_, b)| {
+                    Json::obj()
+                        .set("brick", b.brick.to_string())
+                        .set("events", b.n_events)
+                        .set("bytes", b.bytes)
+                        .set(
+                            "holders",
+                            Json::Arr(
+                                b.holders
+                                    .iter()
+                                    .map(|h| Json::Str(h.clone()))
+                                    .collect(),
+                            ),
+                        )
+                })
+                .collect();
+            Response::json(200, Json::Arr(list))
+        }
+        ("POST", p) if p.starts_with("/kill/") => {
+            let node = &p["/kill/".len()..];
+            if cluster.kill_node(node) {
+                Response::json(200, Json::obj().set("killed", node))
+            } else {
+                Response::json(
+                    404,
+                    Json::obj().set("error", format!("no such node '{node}'")),
+                )
+            }
+        }
+        ("GET", "/metrics") => {
+            Response::text(200, cluster.metrics.render())
+        }
+        ("GET", _) => Response::json(404, Json::obj().set("error", "not found")),
+        _ => Response::json(405, Json::obj().set("error", "method not allowed")),
+    }
+}
+
+/// Serve the portal on `addr` (blocking). Binds first so callers can
+/// learn the actual port via the returned listener pattern in
+/// [`bind_portal`].
+pub fn serve(cluster: Arc<ClusterHandle>, listener: TcpListener) -> Result<()> {
+    http::serve(listener, move |req| handle(&cluster, &req))
+}
+
+/// Bind a listener (use port 0 for ephemeral) and return it with the
+/// resolved address.
+pub fn bind_portal(addr: &str) -> Result<(TcpListener, String)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?.to_string();
+    Ok((listener, local))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_decode_basics() {
+        assert_eq!(url_decode("a+b"), "a b");
+        assert_eq!(url_decode("%28nn%3D%2A%29"), "(nn=*)");
+        assert_eq!(url_decode("plain"), "plain");
+        assert_eq!(url_decode("bad%zz"), "bad%zz");
+    }
+}

@@ -1,0 +1,246 @@
+//! RSL abstract syntax.
+
+use std::fmt;
+
+/// A value on the right-hand side of a relation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// bare token or quoted string
+    Str(String),
+    /// variable reference `$(NAME)`
+    Var(String),
+    /// nested parenthesised sequence, e.g. environment bindings
+    Seq(Vec<Value>),
+}
+
+impl Value {
+    /// Resolve variables using `lookup`; Seq resolves recursively.
+    pub fn resolve(&self, lookup: &dyn Fn(&str) -> Option<String>) -> Value {
+        match self {
+            Value::Str(s) => Value::Str(s.clone()),
+            Value::Var(name) => match lookup(name) {
+                Some(v) => Value::Str(v),
+                None => Value::Var(name.clone()),
+            },
+            Value::Seq(vs) => {
+                Value::Seq(vs.iter().map(|v| v.resolve(lookup)).collect())
+            }
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn needs_quotes(s: &str) -> bool {
+    s.is_empty()
+        || s.chars().any(|c| {
+            c.is_whitespace() || matches!(c, '(' | ')' | '"' | '=' | '<' | '>' | '!' | '$' | '+' | '&')
+        })
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => {
+                if needs_quotes(s) {
+                    write!(f, "\"{}\"", s.replace('"', "\"\""))
+                } else {
+                    write!(f, "{s}")
+                }
+            }
+            Value::Var(n) => write!(f, "$({n})"),
+            Value::Seq(vs) => {
+                write!(f, "(")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+/// Relational operators RSL supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl RelOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RelOp::Eq => "=",
+            RelOp::Ne => "!=",
+            RelOp::Lt => "<",
+            RelOp::Le => "<=",
+            RelOp::Gt => ">",
+            RelOp::Ge => ">=",
+        }
+    }
+}
+
+/// One `(attribute op value...)` relation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Relation {
+    pub attribute: String,
+    pub op: RelOp,
+    pub values: Vec<Value>,
+}
+
+impl fmt::Display for Relation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({} {}", self.attribute, self.op.as_str())?;
+        for v in &self.values {
+            write!(f, " {v}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// A complete RSL specification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RslSpec {
+    /// `& (rel)...` — a single request
+    Conjunction(Vec<Relation>),
+    /// `+ (spec)(spec)...` — a multi-request (fan-out)
+    MultiRequest(Vec<RslSpec>),
+}
+
+impl RslSpec {
+    /// First value of an attribute in a conjunction (common accessor).
+    pub fn get(&self, attr: &str) -> Option<&Value> {
+        match self {
+            RslSpec::Conjunction(rels) => rels
+                .iter()
+                .find(|r| r.attribute.eq_ignore_ascii_case(attr))
+                .and_then(|r| r.values.first()),
+            RslSpec::MultiRequest(_) => None,
+        }
+    }
+
+    pub fn get_str(&self, attr: &str) -> Option<&str> {
+        self.get(attr).and_then(|v| v.as_str())
+    }
+
+    /// All values of an attribute (e.g. arguments).
+    pub fn get_all(&self, attr: &str) -> Option<&[Value]> {
+        match self {
+            RslSpec::Conjunction(rels) => rels
+                .iter()
+                .find(|r| r.attribute.eq_ignore_ascii_case(attr))
+                .map(|r| r.values.as_slice()),
+            RslSpec::MultiRequest(_) => None,
+        }
+    }
+
+    /// Resolve all `$(VAR)` references.
+    pub fn resolve(&self, lookup: &dyn Fn(&str) -> Option<String>) -> RslSpec {
+        match self {
+            RslSpec::Conjunction(rels) => RslSpec::Conjunction(
+                rels.iter()
+                    .map(|r| Relation {
+                        attribute: r.attribute.clone(),
+                        op: r.op,
+                        values: r.values.iter().map(|v| v.resolve(lookup)).collect(),
+                    })
+                    .collect(),
+            ),
+            RslSpec::MultiRequest(specs) => RslSpec::MultiRequest(
+                specs.iter().map(|s| s.resolve(lookup)).collect(),
+            ),
+        }
+    }
+}
+
+impl fmt::Display for RslSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RslSpec::Conjunction(rels) => {
+                write!(f, "&")?;
+                for r in rels {
+                    write!(f, " {r}")?;
+                }
+                Ok(())
+            }
+            RslSpec::MultiRequest(specs) => {
+                write!(f, "+")?;
+                for s in specs {
+                    write!(f, " ( {s} )")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_display_quoting() {
+        assert_eq!(Value::Str("plain".into()).to_string(), "plain");
+        assert_eq!(
+            Value::Str("has space".into()).to_string(),
+            "\"has space\""
+        );
+        assert_eq!(
+            Value::Str("a\"b".into()).to_string(),
+            "\"a\"\"b\""
+        );
+        assert_eq!(Value::Var("HOME".into()).to_string(), "$(HOME)");
+    }
+
+    #[test]
+    fn resolve_vars() {
+        let v = Value::Seq(vec![
+            Value::Var("X".into()),
+            Value::Str("lit".into()),
+            Value::Var("MISSING".into()),
+        ]);
+        let r = v.resolve(&|n| (n == "X").then(|| "42".to_string()));
+        assert_eq!(
+            r,
+            Value::Seq(vec![
+                Value::Str("42".into()),
+                Value::Str("lit".into()),
+                Value::Var("MISSING".into()),
+            ])
+        );
+    }
+
+    #[test]
+    fn spec_accessors() {
+        let spec = RslSpec::Conjunction(vec![
+            Relation {
+                attribute: "executable".into(),
+                op: RelOp::Eq,
+                values: vec![Value::Str("/bin/filter".into())],
+            },
+            Relation {
+                attribute: "arguments".into(),
+                op: RelOp::Eq,
+                values: vec![
+                    Value::Str("-n".into()),
+                    Value::Str("5".into()),
+                ],
+            },
+        ]);
+        assert_eq!(spec.get_str("EXECUTABLE"), Some("/bin/filter"));
+        assert_eq!(spec.get_all("arguments").unwrap().len(), 2);
+        assert_eq!(spec.get_str("count"), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! RSL lexer: tokens for the v1 grammar.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Token {
+    Amp,              // &
+    Plus,             // +
+    LParen,           // (
+    RParen,           // )
+    Op(String),       // = != < <= > >=
+    Word(String),     // bare token
+    Quoted(String),   // "..."  ("" escapes a quote)
+    Var(String),      // $(NAME)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LexError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rsl lex error at {}: {}", self.pos, self.msg)
+    }
+}
+
+pub fn lex(input: &str) -> Result<Vec<Token>, LexError> {
+    let b = input.as_bytes();
+    let mut i = 0usize;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'#' => {
+                // comment to end of line
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'&' => {
+                out.push(Token::Amp);
+                i += 1;
+            }
+            b'+' => {
+                out.push(Token::Plus);
+                i += 1;
+            }
+            b'(' => {
+                out.push(Token::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Token::RParen);
+                i += 1;
+            }
+            b'=' => {
+                out.push(Token::Op("=".into()));
+                i += 1;
+            }
+            b'!' if b.get(i + 1) == Some(&b'=') => {
+                out.push(Token::Op("!=".into()));
+                i += 2;
+            }
+            b'<' | b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push(Token::Op(format!("{}=", c as char)));
+                    i += 2;
+                } else {
+                    out.push(Token::Op((c as char).to_string()));
+                    i += 1;
+                }
+            }
+            b'$' => {
+                if b.get(i + 1) != Some(&b'(') {
+                    return Err(LexError {
+                        pos: i,
+                        msg: "expected '(' after '$'".into(),
+                    });
+                }
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b')' {
+                    j += 1;
+                }
+                if j >= b.len() {
+                    return Err(LexError {
+                        pos: i,
+                        msg: "unterminated variable".into(),
+                    });
+                }
+                out.push(Token::Var(
+                    input[start..j].trim().to_string(),
+                ));
+                i = j + 1;
+            }
+            b'"' => {
+                let mut s = String::new();
+                let mut j = i + 1;
+                loop {
+                    if j >= b.len() {
+                        return Err(LexError {
+                            pos: i,
+                            msg: "unterminated string".into(),
+                        });
+                    }
+                    if b[j] == b'"' {
+                        if b.get(j + 1) == Some(&b'"') {
+                            s.push('"'); // "" escape
+                            j += 2;
+                        } else {
+                            j += 1;
+                            break;
+                        }
+                    } else {
+                        s.push(b[j] as char);
+                        j += 1;
+                    }
+                }
+                out.push(Token::Quoted(s));
+                i = j;
+            }
+            _ => {
+                let start = i;
+                while i < b.len()
+                    && !matches!(
+                        b[i],
+                        b' ' | b'\t'
+                            | b'\n'
+                            | b'\r'
+                            | b'('
+                            | b')'
+                            | b'='
+                            | b'<'
+                            | b'>'
+                            | b'!'
+                            | b'"'
+                            | b'$'
+                            | b'&'
+                            | b'+'
+                            | b'#'
+                    )
+                {
+                    i += 1;
+                }
+                if start == i {
+                    return Err(LexError {
+                        pos: i,
+                        msg: format!("unexpected character '{}'", c as char),
+                    });
+                }
+                out.push(Token::Word(input[start..i].to_string()));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_simple_relation() {
+        let ts = lex("& (executable = /bin/app)").unwrap();
+        assert_eq!(
+            ts,
+            vec![
+                Token::Amp,
+                Token::LParen,
+                Token::Word("executable".into()),
+                Token::Op("=".into()),
+                Token::Word("/bin/app".into()),
+                Token::RParen,
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_quoted_with_escape() {
+        let ts = lex(r#"(arguments = "a ""b"" c")"#).unwrap();
+        assert_eq!(ts[3], Token::Quoted("a \"b\" c".into()));
+    }
+
+    #[test]
+    fn lex_variable() {
+        let ts = lex("(directory = $(HOME))").unwrap();
+        assert_eq!(ts[3], Token::Var("HOME".into()));
+    }
+
+    #[test]
+    fn lex_comparison_ops() {
+        let ts = lex("(count >= 2)(memory != 0)(x < 1)(y <= 2)(z > 3)").unwrap();
+        let ops: Vec<String> = ts
+            .iter()
+            .filter_map(|t| match t {
+                Token::Op(o) => Some(o.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ops, vec![">=", "!=", "<", "<=", ">"]);
+    }
+
+    #[test]
+    fn lex_comments_skipped() {
+        let ts = lex("& # a comment\n(count = 1)").unwrap();
+        assert_eq!(ts.len(), 6);
+    }
+
+    #[test]
+    fn lex_errors() {
+        assert!(lex("$x").is_err());
+        assert!(lex("\"unterminated").is_err());
+        assert!(lex("$(unterminated").is_err());
+    }
+}

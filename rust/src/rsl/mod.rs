@@ -1,0 +1,26 @@
+//! RSL — the Globus Resource Specification Language (paper §4.2: "by
+//! parsing the job specification tuple, a job RSL sentence is formulated
+//! ... the GRAM component is used for remotely submitting and managing
+//! job"). We implement the classic RSL v1 surface the paper's Globus 2
+//! used:
+//!
+//! ```text
+//! & (executable = /opt/geps/event_filter)
+//!   (arguments = "--brick" "d1.b0" "--filter" "max_pt > 20")
+//!   (count = 1)
+//!   (stdout = /tmp/job1.out) (stderr = /tmp/job1.err)
+//!   (environment = (GEPS_DATASET 1) (GEPS_STREAMS 4))
+//! ```
+//!
+//! plus multi-request `+ ( &(...) ) ( &(...) )` used to fan a job out to
+//! several nodes, and `$(VAR)` substitution. [`synth`] formulates RSL
+//! from a catalogue job tuple exactly the way the paper's JSE does.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod synth;
+
+pub use ast::{Relation, RslSpec, Value};
+pub use parser::{parse, RslError};
+pub use synth::synthesize_task_rsl;

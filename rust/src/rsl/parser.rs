@@ -1,0 +1,276 @@
+//! RSL recursive-descent parser.
+
+use crate::rsl::ast::{RelOp, Relation, RslSpec, Value};
+use crate::rsl::lexer::{lex, LexError, Token};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum RslError {
+    Lex(LexError),
+    Parse(String),
+}
+
+impl std::fmt::Display for RslError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RslError::Lex(e) => write!(f, "{e}"),
+            RslError::Parse(m) => write!(f, "rsl parse error: {m}"),
+        }
+    }
+}
+impl std::error::Error for RslError {}
+
+struct P {
+    tokens: Vec<Token>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Token> {
+        self.tokens.get(self.i)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.tokens.get(self.i).cloned();
+        if t.is_some() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Token) -> Result<(), RslError> {
+        match self.next() {
+            Some(t) if &t == want => Ok(()),
+            other => Err(RslError::Parse(format!(
+                "expected {want:?}, got {other:?}"
+            ))),
+        }
+    }
+
+    fn spec(&mut self) -> Result<RslSpec, RslError> {
+        match self.peek() {
+            Some(Token::Amp) => {
+                self.next();
+                let mut rels = Vec::new();
+                while matches!(self.peek(), Some(Token::LParen)) {
+                    rels.push(self.relation()?);
+                }
+                Ok(RslSpec::Conjunction(rels))
+            }
+            Some(Token::Plus) => {
+                self.next();
+                let mut specs = Vec::new();
+                while matches!(self.peek(), Some(Token::LParen)) {
+                    self.expect(&Token::LParen)?;
+                    specs.push(self.spec()?);
+                    self.expect(&Token::RParen)?;
+                }
+                if specs.is_empty() {
+                    return Err(RslError::Parse(
+                        "empty multi-request".into(),
+                    ));
+                }
+                Ok(RslSpec::MultiRequest(specs))
+            }
+            // bare relation list defaults to a conjunction (lenient, as
+            // globus_rsl_parse was)
+            Some(Token::LParen) => {
+                let mut rels = Vec::new();
+                while matches!(self.peek(), Some(Token::LParen)) {
+                    rels.push(self.relation()?);
+                }
+                Ok(RslSpec::Conjunction(rels))
+            }
+            other => Err(RslError::Parse(format!(
+                "expected '&', '+' or '(', got {other:?}"
+            ))),
+        }
+    }
+
+    fn relation(&mut self) -> Result<Relation, RslError> {
+        self.expect(&Token::LParen)?;
+        let attribute = match self.next() {
+            Some(Token::Word(w)) => w,
+            other => {
+                return Err(RslError::Parse(format!(
+                    "expected attribute name, got {other:?}"
+                )))
+            }
+        };
+        let op = match self.next() {
+            Some(Token::Op(o)) => match o.as_str() {
+                "=" => RelOp::Eq,
+                "!=" => RelOp::Ne,
+                "<" => RelOp::Lt,
+                "<=" => RelOp::Le,
+                ">" => RelOp::Gt,
+                ">=" => RelOp::Ge,
+                _ => unreachable!(),
+            },
+            other => {
+                return Err(RslError::Parse(format!(
+                    "expected operator, got {other:?}"
+                )))
+            }
+        };
+        let mut values = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Token::RParen) => {
+                    self.next();
+                    break;
+                }
+                Some(_) => values.push(self.value()?),
+                None => {
+                    return Err(RslError::Parse(
+                        "unterminated relation".into(),
+                    ))
+                }
+            }
+        }
+        if values.is_empty() {
+            return Err(RslError::Parse(format!(
+                "relation '{attribute}' has no value"
+            )));
+        }
+        Ok(Relation { attribute, op, values })
+    }
+
+    fn value(&mut self) -> Result<Value, RslError> {
+        match self.next() {
+            Some(Token::Word(w)) => Ok(Value::Str(w)),
+            Some(Token::Quoted(q)) => Ok(Value::Str(q)),
+            Some(Token::Var(v)) => Ok(Value::Var(v)),
+            Some(Token::LParen) => {
+                let mut vs = Vec::new();
+                loop {
+                    match self.peek() {
+                        Some(Token::RParen) => {
+                            self.next();
+                            break;
+                        }
+                        Some(_) => vs.push(self.value()?),
+                        None => {
+                            return Err(RslError::Parse(
+                                "unterminated sequence".into(),
+                            ))
+                        }
+                    }
+                }
+                Ok(Value::Seq(vs))
+            }
+            other => Err(RslError::Parse(format!(
+                "expected value, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Parse an RSL string into a spec.
+pub fn parse(input: &str) -> Result<RslSpec, RslError> {
+    let tokens = lex(input).map_err(RslError::Lex)?;
+    let mut p = P { tokens, i: 0 };
+    let spec = p.spec()?;
+    if p.i != p.tokens.len() {
+        return Err(RslError::Parse(format!(
+            "trailing tokens at {}",
+            p.i
+        )));
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rsl::ast::RelOp;
+
+    #[test]
+    fn parse_classic_gram_rsl() {
+        let spec = parse(
+            r#"& (executable = /opt/geps/event_filter)
+               (arguments = "--brick" "d1.b0")
+               (count = 1)
+               (stdout = /tmp/out) (stderr = /tmp/err)"#,
+        )
+        .unwrap();
+        assert_eq!(spec.get_str("executable"), Some("/opt/geps/event_filter"));
+        assert_eq!(spec.get_all("arguments").unwrap().len(), 2);
+        assert_eq!(spec.get_str("count"), Some("1"));
+    }
+
+    #[test]
+    fn parse_environment_seq() {
+        let spec = parse(
+            "& (environment = (GEPS_DATASET 1) (GEPS_STREAMS 4))",
+        )
+        .unwrap();
+        let env = spec.get_all("environment").unwrap();
+        assert_eq!(env.len(), 2);
+        assert_eq!(
+            env[0],
+            Value::Seq(vec![
+                Value::Str("GEPS_DATASET".into()),
+                Value::Str("1".into())
+            ])
+        );
+    }
+
+    #[test]
+    fn parse_multirequest() {
+        let spec = parse(
+            "+ ( & (executable = /a)(count=1) ) ( & (executable = /b)(count=2) )",
+        )
+        .unwrap();
+        match spec {
+            RslSpec::MultiRequest(specs) => {
+                assert_eq!(specs.len(), 2);
+                assert_eq!(specs[1].get_str("executable"), Some("/b"));
+            }
+            _ => panic!("expected multirequest"),
+        }
+    }
+
+    #[test]
+    fn parse_comparison_relation() {
+        let spec = parse("& (memory >= 128)(count != 0)").unwrap();
+        match &spec {
+            RslSpec::Conjunction(rels) => {
+                assert_eq!(rels[0].op, RelOp::Ge);
+                assert_eq!(rels[1].op, RelOp::Ne);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_display_parse() {
+        let src = r#"& (executable = /opt/geps/filter)
+                     (arguments = "--filter" "max_pt > 20" $(EXTRA))
+                     (environment = (DS 1))"#;
+        let spec = parse(src).unwrap();
+        let printed = spec.to_string();
+        let reparsed = parse(&printed).unwrap();
+        assert_eq!(spec, reparsed);
+    }
+
+    #[test]
+    fn resolve_variables() {
+        let spec = parse("& (directory = $(HOME)/work)").unwrap();
+        // note: $(HOME)/work lexes as var + word, two values
+        let spec2 =
+            parse("& (directory = $(HOME))").unwrap().resolve(&|n| {
+                (n == "HOME").then(|| "/home/geps".to_string())
+            });
+        assert_eq!(spec2.get_str("directory"), Some("/home/geps"));
+        drop(spec);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("").is_err());
+        assert!(parse("& (noval =)").is_err());
+        assert!(parse("& (unclosed = 1").is_err());
+        assert!(parse("+").is_err());
+        assert!(parse("& (a = 1) trailing").is_err());
+    }
+}

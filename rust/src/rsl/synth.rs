@@ -1,0 +1,132 @@
+//! RSL synthesis: formulate the RSL sentence for a scheduled task, the
+//! way the paper's JSE does ("by parsing the job specification tuple, a
+//! job RSL sentence is formulated", §4.2 / Table 1).
+
+use crate::rsl::ast::{RelOp, Relation, RslSpec, Value};
+use crate::scheduler::Task;
+
+/// The well-known executable path staged by GRAM.
+pub const FILTER_EXECUTABLE: &str = "/opt/geps/bin/event_filter";
+
+fn rel(attr: &str, values: Vec<Value>) -> Relation {
+    Relation { attribute: attr.to_string(), op: RelOp::Eq, values }
+}
+
+fn s(v: impl Into<String>) -> Value {
+    Value::Str(v.into())
+}
+
+/// Build the per-task RSL sentence the JSE submits to a node's
+/// gatekeeper.
+pub fn synthesize_task_rsl(
+    job_id: u64,
+    task: &Task,
+    filter_expr: &str,
+    node: &str,
+    streams: u32,
+) -> RslSpec {
+    let mut args = vec![
+        s("--brick"),
+        s(task.brick.to_string()),
+        s("--range"),
+        s(format!("{}:{}", task.range.0, task.range.1)),
+        s("--filter"),
+        s(filter_expr),
+    ];
+    if let Some(src) = &task.source {
+        args.push(s("--gass-source"));
+        args.push(s(src.clone()));
+    }
+    RslSpec::Conjunction(vec![
+        rel("executable", vec![s(FILTER_EXECUTABLE)]),
+        rel("arguments", args),
+        rel("count", vec![s("1")]),
+        rel("stdout", vec![s(format!("/tmp/geps-job{job_id}-{}.out", task.brick))]),
+        rel("stderr", vec![s(format!("/tmp/geps-job{job_id}-{}.err", task.brick))]),
+        rel(
+            "environment",
+            vec![
+                Value::Seq(vec![s("GEPS_JOB"), s(job_id.to_string())]),
+                Value::Seq(vec![s("GEPS_NODE"), s(node)]),
+                Value::Seq(vec![s("GEPS_STREAMS"), s(streams.to_string())]),
+            ],
+        ),
+    ])
+}
+
+/// Parse back the pieces a node executor needs from a task RSL. Returns
+/// (brick string, range, filter, gass source).
+pub fn parse_task_rsl(
+    spec: &RslSpec,
+) -> Option<(String, (usize, usize), String, Option<String>)> {
+    let args = spec.get_all("arguments")?;
+    let mut brick = None;
+    let mut range = None;
+    let mut filter = None;
+    let mut source = None;
+    let mut i = 0;
+    while i + 1 < args.len() {
+        let key = args[i].as_str()?;
+        let val = args[i + 1].as_str()?;
+        match key {
+            "--brick" => brick = Some(val.to_string()),
+            "--range" => {
+                let (a, b) = val.split_once(':')?;
+                range = Some((a.parse().ok()?, b.parse().ok()?));
+            }
+            "--filter" => filter = Some(val.to_string()),
+            "--gass-source" => source = Some(val.to_string()),
+            _ => {}
+        }
+        i += 2;
+    }
+    Some((brick?, range?, filter?, source))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brick::BrickId;
+    use crate::rsl::parse;
+
+    fn task() -> Task {
+        Task {
+            brick: BrickId::new(1, 3),
+            range: (100, 350),
+            source: Some("gandalf".into()),
+        }
+    }
+
+    #[test]
+    fn synthesized_rsl_parses_and_extracts() {
+        let spec = synthesize_task_rsl(42, &task(), "max_pt > 20 && met < 50", "hobbit", 4);
+        // round-trip through the text form, as the wire does
+        let text = spec.to_string();
+        let reparsed = parse(&text).unwrap();
+        assert_eq!(reparsed.get_str("executable"), Some(FILTER_EXECUTABLE));
+        let (brick, range, filter, source) =
+            parse_task_rsl(&reparsed).unwrap();
+        assert_eq!(brick, "d1.b3");
+        assert_eq!(range, (100, 350));
+        assert_eq!(filter, "max_pt > 20 && met < 50");
+        assert_eq!(source.as_deref(), Some("gandalf"));
+    }
+
+    #[test]
+    fn local_task_has_no_gass_source() {
+        let t = Task { source: None, ..task() };
+        let spec = synthesize_task_rsl(1, &t, "true", "hobbit", 1);
+        let (_, _, _, source) = parse_task_rsl(&spec).unwrap();
+        assert_eq!(source, None);
+    }
+
+    #[test]
+    fn stdout_stderr_per_task() {
+        let spec = synthesize_task_rsl(7, &task(), "true", "hobbit", 1);
+        assert_eq!(
+            spec.get_str("stdout"),
+            Some("/tmp/geps-job7-d1.b3.out")
+        );
+        assert!(spec.get_str("stderr").unwrap().ends_with(".err"));
+    }
+}

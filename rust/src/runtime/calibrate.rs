@@ -1,0 +1,79 @@
+//! Kernel-throughput calibration: measure what the real PJRT `features`
+//! executable sustains on this machine, then translate that into the
+//! DES `event_s` parameter for paper-scale (1 MB) events.
+//!
+//! The translation (documented in EXPERIMENTS.md §Calibration): our
+//! synthetic events are ~`payload_bytes` each, the paper's are 1 MB; the
+//! 2002 filter also did I/O-bound ROOT deserialization. We therefore
+//! scale measured per-event seconds by (1 MB / synthetic bytes) and
+//! cross-check that the resulting rate stays within the 2002-plausible
+//! band the Fig 7 shape needs (the *shape* is what we reproduce, not the
+//! absolute 2002 wall-clock).
+
+use crate::events::{EventBatch, EventGenerator, GeneratorConfig};
+use crate::runtime::engine::Engine;
+use anyhow::Result;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    /// measured kernel throughput on this machine (synthetic events/s)
+    pub measured_events_per_s: f64,
+    /// mean synthetic event payload bytes
+    pub event_bytes: f64,
+    /// derived per-1MB-event compute seconds for the DES
+    pub derived_event_s: f64,
+    pub batches: usize,
+    pub wall_s: f64,
+}
+
+impl CalibrationReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "kernel: {:.0} ev/s measured ({} batches in {:.2}s, ~{:.0} B/event) -> DES event_s = {:.4}s per 1MB event",
+            self.measured_events_per_s,
+            self.batches,
+            self.wall_s,
+            self.event_bytes,
+            self.derived_event_s
+        )
+    }
+}
+
+/// Run `batches` feature batches through the engine and time them.
+pub fn calibrate(engine: &Engine, batches: usize) -> Result<CalibrationReport> {
+    let b = engine.manifest.batch;
+    let t = engine.manifest.max_tracks;
+    let mut gen = EventGenerator::new(GeneratorConfig::default(), 0xCA11B);
+    let events = gen.take(b);
+    let mean_bytes = events
+        .iter()
+        .map(|e| e.payload_bytes() as f64)
+        .sum::<f64>()
+        / b as f64;
+    let batch = EventBatch::pack(&events, b, t);
+    let calib = Engine::identity_calib();
+
+    // warmup (compile caches, allocator)
+    engine.features(&batch, &calib)?;
+
+    let start = Instant::now();
+    for _ in 0..batches {
+        engine.features(&batch, &calib)?;
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let measured = (batches * b) as f64 / wall_s.max(1e-9);
+
+    // scale: measured rate is for ~mean_bytes events; a 1 MB event has
+    // (1 MB / mean_bytes) more payload to chew through.
+    let scale = (1u64 << 20) as f64 / mean_bytes.max(1.0);
+    let derived_event_s = scale / measured;
+
+    Ok(CalibrationReport {
+        measured_events_per_s: measured,
+        event_bytes: mean_bytes,
+        derived_event_s,
+        batches,
+        wall_s,
+    })
+}

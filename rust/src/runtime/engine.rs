@@ -1,0 +1,208 @@
+//! One PJRT engine: CPU client + compiled `features`, `calibrate` and
+//! `histogram` executables (loaded from HLO text — see
+//! /opt/xla-example/README.md for why text, not serialized protos).
+
+use crate::events::{EventBatch, FeatureId, NUM_FEATURES};
+use crate::runtime::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A (B, F) row-major feature matrix for one executed batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMatrix {
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub n_real: usize,
+}
+
+impl FeatureMatrix {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * NUM_FEATURES..(i + 1) * NUM_FEATURES]
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load and compile all programs from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let client = xla::PjRtClient::cpu()
+            .context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for (name, spec) in &manifest.programs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO for '{name}'"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Engine { client, exes, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run1(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let exe = self
+            .exes
+            .get(name)
+            .with_context(|| format!("no program '{name}'"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        Ok(result.to_tuple1()?)
+    }
+
+    fn literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != data.len() {
+            bail!("literal shape {:?} vs data len {}", dims, data.len());
+        }
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Execute the features program over a packed batch.
+    /// `calib` is the row-major 4x4 calibration matrix.
+    pub fn features(
+        &self,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<FeatureMatrix> {
+        self.features_variant("features", batch, calib)
+    }
+
+    /// Execute any features-shaped program by name (`features`,
+    /// `features_ref`, or a block-size ablation variant) — used by the
+    /// §Perf comparisons of the Pallas lowering vs the pure-jnp lowering.
+    pub fn features_variant(
+        &self,
+        name: &str,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<FeatureMatrix> {
+        let (b, t) = (self.manifest.batch, self.manifest.max_tracks);
+        if batch.batch != b || batch.max_tracks != t {
+            bail!(
+                "batch shape ({}, {}) does not match artifacts ({b}, {t})",
+                batch.batch,
+                batch.max_tracks
+            );
+        }
+        let out = self.run1(
+            name,
+            &[
+                Self::literal(&batch.tracks, &[b as i64, t as i64, 4])?,
+                Self::literal(&batch.mask, &[b as i64, t as i64])?,
+                Self::literal(calib, &[4, 4])?,
+            ],
+        )?;
+        let data = out.to_vec::<f32>()?;
+        if data.len() != b * NUM_FEATURES {
+            bail!("features output len {}", data.len());
+        }
+        Ok(FeatureMatrix { data, batch: b, n_real: batch.n_real() })
+    }
+
+    /// Execute the calibrated-tree program; returns (B, T, 4) flat.
+    pub fn calibrate(
+        &self,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<Vec<f32>> {
+        let (b, t) = (self.manifest.batch, self.manifest.max_tracks);
+        let out = self.run1(
+            "calibrate",
+            &[
+                Self::literal(&batch.tracks, &[b as i64, t as i64, 4])?,
+                Self::literal(&batch.mask, &[b as i64, t as i64])?,
+                Self::literal(calib, &[4, 4])?,
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the histogram program: counts of selected events per
+    /// feature. `selected` is a 0/1 mask of length B.
+    pub fn histogram(
+        &self,
+        feats: &FeatureMatrix,
+        selected: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = self.manifest.batch;
+        let f = self.manifest.num_features;
+        if selected.len() != b {
+            bail!("selected len {} != batch {b}", selected.len());
+        }
+        let ranges: Vec<f32> = FeatureId::ALL
+            .iter()
+            .flat_map(|fid| {
+                let (lo, hi) = fid.hist_range();
+                [lo, hi]
+            })
+            .collect();
+        let out = self.run1(
+            "histogram",
+            &[
+                Self::literal(&feats.data, &[b as i64, f as i64])?,
+                Self::literal(selected, &[b as i64])?,
+                Self::literal(&ranges, &[f as i64, 2])?,
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Identity calibration matrix.
+    pub fn identity_calib() -> [f32; 16] {
+        let mut c = [0f32; 16];
+        for i in 0..4 {
+            c[i * 4 + i] = 1.0;
+        }
+        c
+    }
+}
+
+// NOTE: Engine correctness tests live in rust/tests/integration.rs (they
+// need `make artifacts` to have run); unit tests here cover the pure
+// helpers only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_calib_is_identity() {
+        let c = Engine::identity_calib();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(c[i * 4 + j], if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn feature_matrix_rows() {
+        let fm = FeatureMatrix {
+            data: (0..2 * NUM_FEATURES).map(|x| x as f32).collect(),
+            batch: 2,
+            n_real: 2,
+        };
+        assert_eq!(fm.row(1)[0], NUM_FEATURES as f32);
+    }
+}

@@ -1,0 +1,209 @@
+//! AOT artifact manifest: shapes and program inventory written by
+//! `python/compile/aot.py`. The runtime refuses to start if the manifest
+//! disagrees with the rust-side feature contract — catching L1/L3 drift
+//! at load time instead of as wrong numbers.
+
+use crate::events::FeatureId;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramSpec {
+    pub file: PathBuf,
+    /// input shapes, row-major
+    pub inputs: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub max_tracks: usize,
+    pub num_features: usize,
+    pub hist_bins: usize,
+    pub feature_names: Vec<String>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+impl std::error::Error for ManifestError {}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let j = Json::parse(text).map_err(|e| ManifestError(e.to_string()))?;
+        let num = |k: &str| -> Result<usize, ManifestError> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| ManifestError(format!("missing '{k}'")))
+        };
+        let feature_names: Vec<String> = j
+            .get("feature_names")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(String::from)
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut programs = BTreeMap::new();
+        if let Some(Json::Obj(progs)) = j.get("programs") {
+            for (name, p) in progs {
+                let file = p
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ManifestError(format!("{name}: no file")))?;
+                let inputs = p
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ManifestError(format!("{name}: no inputs")))?
+                    .iter()
+                    .map(|inp| {
+                        inp.get("shape")
+                            .and_then(Json::as_arr)
+                            .map(|s| {
+                                s.iter()
+                                    .filter_map(Json::as_u64)
+                                    .map(|v| v as usize)
+                                    .collect::<Vec<_>>()
+                            })
+                            .ok_or_else(|| {
+                                ManifestError(format!("{name}: bad shape"))
+                            })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                programs.insert(
+                    name.clone(),
+                    ProgramSpec { file: dir.join(file), inputs },
+                );
+            }
+        }
+        let m = Manifest {
+            batch: num("batch")?,
+            max_tracks: num("max_tracks")?,
+            num_features: num("num_features")?,
+            hist_bins: num("hist_bins")?,
+            feature_names,
+            programs,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            ManifestError(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(dir, &text)
+    }
+
+    /// Cross-check against the rust feature contract.
+    fn validate(&self) -> Result<(), ManifestError> {
+        if self.num_features != crate::events::NUM_FEATURES {
+            return Err(ManifestError(format!(
+                "feature count mismatch: manifest {} vs rust {}",
+                self.num_features,
+                crate::events::NUM_FEATURES
+            )));
+        }
+        for (i, f) in FeatureId::ALL.iter().enumerate() {
+            match self.feature_names.get(i) {
+                Some(n) if n == f.name() => {}
+                other => {
+                    return Err(ManifestError(format!(
+                        "feature {i}: manifest {:?} vs rust '{}'",
+                        other,
+                        f.name()
+                    )))
+                }
+            }
+        }
+        for name in ["features", "calibrate", "histogram"] {
+            if !self.programs.contains_key(name) {
+                return Err(ManifestError(format!(
+                    "required program '{name}' missing from manifest"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> String {
+        let names: Vec<String> = FeatureId::ALL
+            .iter()
+            .map(|f| format!("\"{}\"", f.name()))
+            .collect();
+        format!(
+            r#"{{
+              "batch": 256, "max_tracks": 32, "num_features": 8,
+              "hist_bins": 64,
+              "feature_names": [{}],
+              "programs": {{
+                "features": {{"file": "features.hlo.txt",
+                  "inputs": [{{"shape": [256,32,4], "dtype": "float32"}},
+                             {{"shape": [256,32], "dtype": "float32"}},
+                             {{"shape": [4,4], "dtype": "float32"}}]}},
+                "calibrate": {{"file": "calibrate.hlo.txt",
+                  "inputs": [{{"shape": [256,32,4], "dtype": "float32"}},
+                             {{"shape": [256,32], "dtype": "float32"}},
+                             {{"shape": [4,4], "dtype": "float32"}}]}},
+                "histogram": {{"file": "histogram.hlo.txt",
+                  "inputs": [{{"shape": [256,8], "dtype": "float32"}},
+                             {{"shape": [256], "dtype": "float32"}},
+                             {{"shape": [8,2], "dtype": "float32"}}]}}
+              }}
+            }}"#,
+            names.join(",")
+        )
+    }
+
+    #[test]
+    fn parse_valid_manifest() {
+        let m =
+            Manifest::parse(Path::new("/tmp/arts"), &manifest_json()).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.programs["features"].inputs[0], vec![256, 32, 4]);
+        assert_eq!(
+            m.programs["features"].file,
+            PathBuf::from("/tmp/arts/features.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn feature_name_drift_rejected() {
+        let bad = manifest_json().replace("max_pt", "maximum_pt");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn missing_program_rejected() {
+        let bad = manifest_json().replace("\"histogram\"", "\"histogran\"");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn feature_count_mismatch_rejected() {
+        let bad = manifest_json().replace(
+            "\"num_features\": 8",
+            "\"num_features\": 9",
+        );
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+}

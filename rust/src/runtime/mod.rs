@@ -1,0 +1,38 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `make artifacts` and executes them from the rust request path. Python
+//! never runs here — the HLO text is compiled once per engine by the XLA
+//! CPU backend (`xla` crate / xla_extension 0.5.1) and then executed for
+//! every event batch.
+//!
+//! - [`manifest`]: artifact inventory + shape contract validation
+//! - [`engine`]: one PJRT client + the three compiled programs
+//! - [`pool`]: thread-owned engines behind a channel API, so node worker
+//!   threads share compiled executables without `Send` requirements on
+//!   the underlying XLA handles
+//! - [`calibrate`]: measured kernel throughput → DES compute-rate
+//!   calibration (EXPERIMENTS.md §Calibration)
+
+pub mod calibrate;
+pub mod engine;
+pub mod manifest;
+pub mod pool;
+
+pub use calibrate::CalibrationReport;
+pub use engine::{Engine, FeatureMatrix};
+pub use manifest::Manifest;
+pub use pool::EnginePool;
+
+/// Default artifacts directory: $GEPS_ARTIFACTS, else ./artifacts, else
+/// the artifacts dir next to the workspace root (so tests work from any
+/// cwd cargo uses).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("GEPS_ARTIFACTS") {
+        return std::path::PathBuf::from(p);
+    }
+    let local = std::path::PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    // fall back to CARGO_MANIFEST_DIR (compile-time workspace root)
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,166 @@
+//! Engine pool: N worker threads, each owning one compiled [`Engine`],
+//! fed through a channel. XLA handles never cross threads, so no `Send`
+//! bound is needed on them; callers get a cheap cloneable handle whose
+//! calls block until a worker replies. This is the node executor's
+//! compute backend in the live cluster.
+
+use crate::events::EventBatch;
+use crate::runtime::engine::{Engine, FeatureMatrix};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    Features {
+        batch: EventBatch,
+        calib: [f32; 16],
+        reply: mpsc::Sender<Result<FeatureMatrix>>,
+    },
+    Histogram {
+        feats: FeatureMatrix,
+        selected: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Calibrate {
+        batch: EventBatch,
+        calib: [f32; 16],
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the pool.
+#[derive(Clone)]
+pub struct EnginePool {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    pub batch: usize,
+    pub max_tracks: usize,
+    workers: usize,
+}
+
+impl EnginePool {
+    /// Spin up `workers` threads, each compiling its own engine from
+    /// `dir`. Compilation happens before this returns (fail fast).
+    pub fn start(dir: PathBuf, workers: usize) -> Result<EnginePool> {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        // Validate once on the caller thread so errors surface here.
+        let probe = Engine::load(&dir)?;
+        let batch = probe.manifest.batch;
+        let max_tracks = probe.manifest.max_tracks;
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for i in 0..workers {
+            let dir = dir.clone();
+            let rx = rx.clone();
+            let ready = ready_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("geps-engine-{i}"))
+                .spawn(move || {
+                    // worker 0 reuses the probe? engines are !Send, so
+                    // each worker compiles its own.
+                    let engine = match Engine::load(&dir) {
+                        Ok(e) => {
+                            let _ = ready.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    loop {
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match req {
+                            Ok(Request::Features { batch, calib, reply }) => {
+                                let _ =
+                                    reply.send(engine.features(&batch, &calib));
+                            }
+                            Ok(Request::Histogram {
+                                feats,
+                                selected,
+                                reply,
+                            }) => {
+                                let _ = reply
+                                    .send(engine.histogram(&feats, &selected));
+                            }
+                            Ok(Request::Calibrate { batch, calib, reply }) => {
+                                let _ = reply
+                                    .send(engine.calibrate(&batch, &calib));
+                            }
+                            Ok(Request::Shutdown) | Err(_) => return,
+                        }
+                    }
+                })
+                .expect("spawn engine worker");
+        }
+        drop(probe);
+        for _ in 0..workers {
+            ready_rx.recv().map_err(|_| anyhow!("worker died"))??;
+        }
+        Ok(EnginePool {
+            tx: Arc::new(Mutex::new(tx)),
+            batch,
+            max_tracks,
+            workers,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("engine pool is down"))
+    }
+
+    pub fn features(
+        &self,
+        batch: EventBatch,
+        calib: [f32; 16],
+    ) -> Result<FeatureMatrix> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Features { batch, calib, reply })?;
+        rx.recv().map_err(|_| anyhow!("engine worker died"))?
+    }
+
+    pub fn histogram(
+        &self,
+        feats: FeatureMatrix,
+        selected: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Histogram { feats, selected, reply })?;
+        rx.recv().map_err(|_| anyhow!("engine worker died"))?
+    }
+
+    pub fn calibrate(
+        &self,
+        batch: EventBatch,
+        calib: [f32; 16],
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Calibrate { batch, calib, reply })?;
+        rx.recv().map_err(|_| anyhow!("engine worker died"))?
+    }
+
+    /// Stop all workers (each consumes one Shutdown).
+    pub fn shutdown(&self) {
+        for _ in 0..self.workers {
+            let _ = self.send(Request::Shutdown);
+        }
+    }
+}
+
+// Pool tests require compiled artifacts; they live in
+// rust/tests/integration.rs.

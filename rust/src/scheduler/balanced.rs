@@ -1,0 +1,258 @@
+//! Speed-aware load balancing — the paper's §7 future work, "develop a
+//! storage mechanism to submit more work to the best nodes", built as a
+//! first-class policy.
+//!
+//! Strategy: locality first (a node always prefers its own bricks). When a
+//! node runs dry it may take a *remote* brick from the node whose queue
+//! will take the longest to drain **per unit of speed** — i.e. we migrate
+//! work away from slow, backlogged nodes — but only when the estimated
+//! benefit (queue-drain time saved) exceeds the transfer cost estimate.
+
+use crate::brick::BrickId;
+use crate::scheduler::{Progress, SchedCtx, Scheduler, Task};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Rough LAN staging rate used in the migrate-or-not estimate
+/// (bytes/sec). The decision only needs the right order of magnitude; the
+/// DES/netsim charges the *actual* modelled cost.
+const EST_TRANSFER_BPS: f64 = 12_500_000.0;
+/// Rough per-event compute seconds at speed 1.0 for the estimate.
+const EST_EVENT_S: f64 = 0.05;
+
+pub struct Balanced {
+    queues: BTreeMap<String, VecDeque<BrickId>>,
+    progress: Progress,
+    total_tasks: usize,
+    completed_or_lost: usize,
+    lost: BTreeSet<BrickId>,
+}
+
+impl Balanced {
+    pub fn new(ctx: &SchedCtx) -> Self {
+        let mut queues: BTreeMap<String, VecDeque<BrickId>> = BTreeMap::new();
+        for b in &ctx.bricks {
+            let primary = b.holders.first().expect("brick with no holders");
+            queues.entry(primary.clone()).or_default().push_back(b.id);
+        }
+        Balanced {
+            queues,
+            progress: Progress::default(),
+            total_tasks: ctx.bricks.len(),
+            completed_or_lost: 0,
+            lost: BTreeSet::new(),
+        }
+    }
+
+    /// Estimated seconds for `node` to drain its remaining queue.
+    fn drain_estimate(&self, node: &str, ctx: &SchedCtx) -> f64 {
+        let speed = ctx.node(node).map(|n| n.speed).unwrap_or(1.0).max(0.01);
+        let events: usize = self
+            .queues
+            .get(node)
+            .map(|q| {
+                q.iter()
+                    .filter_map(|b| ctx.brick(*b))
+                    .map(|b| b.n_events)
+                    .sum()
+            })
+            .unwrap_or(0);
+        events as f64 * EST_EVENT_S / speed
+    }
+}
+
+impl Scheduler for Balanced {
+    fn next_task(&mut self, node: &str, ctx: &SchedCtx) -> Option<Task> {
+        if !ctx.node(node).map(|n| n.up).unwrap_or(false) {
+            return None;
+        }
+        // 1) local brick
+        if let Some(q) = self.queues.get_mut(node) {
+            if let Some(brick) = q.pop_front() {
+                let n_events =
+                    ctx.brick(brick).map(|b| b.n_events).unwrap_or(0);
+                return Some(self.progress.issue(
+                    node,
+                    Task { brick, range: (0, n_events), source: None },
+                ));
+            }
+        }
+        // 2) migrate from the most backlogged (time-wise) victim if the
+        //    transfer pays for itself
+        let my_speed = ctx.node(node).map(|n| n.speed).unwrap_or(1.0).max(0.01);
+        let victim = self
+            .queues
+            .iter()
+            .filter(|(n, q)| n.as_str() != node && !q.is_empty())
+            .map(|(n, _)| (self.drain_estimate(n, ctx), n.clone()))
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())?;
+        let (victim_drain, victim_name) = victim;
+
+        let brick = *self.queues[&victim_name].back()?;
+        let bs = ctx.brick(brick)?;
+        let transfer_s = bs.bytes as f64 / EST_TRANSFER_BPS;
+        let my_compute = bs.n_events as f64 * EST_EVENT_S / my_speed;
+        let victim_speed =
+            ctx.node(&victim_name).map(|n| n.speed).unwrap_or(1.0).max(0.01);
+        let victim_compute = bs.n_events as f64 * EST_EVENT_S / victim_speed;
+        // benefit: the victim's tail shortens by its compute time; cost:
+        // we spend transfer + compute. Migrate when we'd finish this brick
+        // before the victim would even reach it.
+        let reach_time = victim_drain - victim_compute;
+        if transfer_s + my_compute < reach_time + victim_compute {
+            let brick = self.queues.get_mut(&victim_name)?.pop_back()?;
+            let n_events = bs.n_events;
+            return Some(self.progress.issue(
+                node,
+                Task {
+                    brick,
+                    range: (0, n_events),
+                    source: Some(victim_name),
+                },
+            ));
+        }
+        None
+    }
+
+    fn on_complete(&mut self, node: &str, task: &Task, _elapsed: f64) {
+        self.progress.complete(node, task);
+        self.completed_or_lost += 1;
+    }
+
+    fn on_failure(&mut self, node: &str, task: &Task, ctx: &SchedCtx) {
+        if let Some(v) = self.progress.outstanding.get_mut(node) {
+            v.retain(|t| t != task);
+        }
+        let holders = ctx
+            .brick(task.brick)
+            .map(|b| b.holders.clone())
+            .unwrap_or_default();
+        if let Some(h) = holders
+            .iter()
+            .find(|h| ctx.node(h).map(|n| n.up).unwrap_or(false))
+        {
+            self.queues.entry(h.clone()).or_default().push_back(task.brick);
+        } else if self.lost.insert(task.brick) {
+            self.completed_or_lost += 1;
+        }
+    }
+
+    fn on_node_down(&mut self, node: &str, ctx: &SchedCtx) {
+        let queued: Vec<BrickId> = self
+            .queues
+            .remove(node)
+            .map(|q| q.into_iter().collect())
+            .unwrap_or_default();
+        let inflight: Vec<BrickId> = self
+            .progress
+            .drain_node(node)
+            .into_iter()
+            .map(|t| t.brick)
+            .collect();
+        for brick in queued.into_iter().chain(inflight) {
+            let holders = ctx
+                .brick(brick)
+                .map(|b| b.holders.clone())
+                .unwrap_or_default();
+            if let Some(h) = holders.iter().find(|h| {
+                *h != node && ctx.node(h).map(|n| n.up).unwrap_or(false)
+            }) {
+                self.queues.entry(h.clone()).or_default().push_back(brick);
+            } else if self.lost.insert(brick) {
+                self.completed_or_lost += 1;
+            }
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.completed_or_lost == self.total_tasks
+            && self.progress.outstanding_count() == 0
+    }
+
+    fn name(&self) -> &'static str {
+        "balanced"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BrickState, NodeState};
+
+    fn ctx_hetero() -> SchedCtx {
+        // slow node holds 8 bricks, fast node holds none
+        SchedCtx {
+            nodes: vec![
+                NodeState {
+                    name: "slow".into(),
+                    speed: 0.25,
+                    slots: 1,
+                    up: true,
+                },
+                NodeState {
+                    name: "fast".into(),
+                    speed: 2.0,
+                    slots: 1,
+                    up: true,
+                },
+            ],
+            bricks: (0..8)
+                .map(|i| BrickState {
+                    id: BrickId::new(1, i),
+                    n_events: 2000,
+                    bytes: 64 << 20,
+                    holders: vec!["slow".into()],
+                })
+                .collect(),
+            leader: "jse".into(),
+        }
+    }
+
+    #[test]
+    fn fast_node_takes_remote_work_from_backlogged_slow_node() {
+        let c = ctx_hetero();
+        let mut s = Balanced::new(&c);
+        let t = s.next_task("fast", &c).unwrap();
+        assert_eq!(t.source.as_deref(), Some("slow"));
+    }
+
+    #[test]
+    fn local_work_preferred() {
+        let c = ctx_hetero();
+        let mut s = Balanced::new(&c);
+        let t = s.next_task("slow", &c).unwrap();
+        assert_eq!(t.source, None);
+    }
+
+    #[test]
+    fn no_pointless_migration_when_queues_are_short() {
+        // one small brick on slow: fast shouldn't steal (transfer doesn't pay)
+        let mut c = ctx_hetero();
+        c.bricks.truncate(1);
+        c.bricks[0].n_events = 10;
+        c.bricks[0].bytes = 1 << 30; // huge transfer, tiny compute
+        let mut s = Balanced::new(&c);
+        assert!(s.next_task("fast", &c).is_none());
+    }
+
+    #[test]
+    fn everything_completes() {
+        let c = ctx_hetero();
+        let mut s = Balanced::new(&c);
+        let mut seen = BTreeSet::new();
+        loop {
+            let mut any = false;
+            for n in ["slow", "fast"] {
+                if let Some(t) = s.next_task(n, &c) {
+                    assert!(seen.insert(t.brick));
+                    s.on_complete(n, &t, 1.0);
+                    any = true;
+                }
+            }
+            if s.is_done() {
+                break;
+            }
+            assert!(any, "stalled with {} done", seen.len());
+        }
+        assert_eq!(seen.len(), 8);
+    }
+}

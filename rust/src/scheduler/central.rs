@@ -1,0 +1,137 @@
+//! Traditional central-server scheduling — the baseline the paper argues
+//! against (§3): all raw data lives on the central data server (the
+//! leader); any free node can take any brick, but every brick must first
+//! be staged over the network from the leader. The leader's NIC becomes
+//! the shared bottleneck, which is exactly what Ext-D measures.
+
+use crate::scheduler::{Progress, SchedCtx, Scheduler, Task};
+use std::collections::VecDeque;
+
+pub struct Central {
+    queue: VecDeque<Task>,
+    progress: Progress,
+    total_tasks: usize,
+}
+
+impl Central {
+    pub fn new(ctx: &SchedCtx) -> Self {
+        let queue: VecDeque<Task> = ctx
+            .bricks
+            .iter()
+            .map(|b| Task {
+                brick: b.id,
+                range: (0, b.n_events),
+                source: Some(ctx.leader.clone()),
+            })
+            .collect();
+        Central { total_tasks: queue.len(), queue, progress: Progress::default() }
+    }
+}
+
+impl Scheduler for Central {
+    fn next_task(&mut self, node: &str, ctx: &SchedCtx) -> Option<Task> {
+        if !ctx.node(node).map(|n| n.up).unwrap_or(false) {
+            return None;
+        }
+        let task = self.queue.pop_front()?;
+        Some(self.progress.issue(node, task))
+    }
+
+    fn on_complete(&mut self, node: &str, task: &Task, _elapsed: f64) {
+        self.progress.complete(node, task);
+    }
+
+    fn on_failure(&mut self, node: &str, task: &Task, _ctx: &SchedCtx) {
+        if let Some(v) = self.progress.outstanding.get_mut(node) {
+            v.retain(|t| t != task);
+        }
+        // central server still has the data: simply requeue
+        self.queue.push_back(task.clone());
+    }
+
+    fn on_node_down(&mut self, node: &str, _ctx: &SchedCtx) {
+        for t in self.progress.drain_node(node) {
+            self.queue.push_back(t);
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.queue.is_empty()
+            && self.progress.outstanding_count() == 0
+            && self.progress.completed_tasks == self.total_tasks
+    }
+
+    fn name(&self) -> &'static str {
+        "central"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brick::BrickId;
+    use crate::scheduler::{BrickState, NodeState};
+
+    fn ctx() -> SchedCtx {
+        SchedCtx {
+            nodes: vec![
+                NodeState { name: "a".into(), speed: 1.0, slots: 1, up: true },
+                NodeState { name: "b".into(), speed: 1.0, slots: 1, up: true },
+            ],
+            bricks: (0..3)
+                .map(|i| BrickState {
+                    id: BrickId::new(1, i),
+                    n_events: 10,
+                    bytes: 100,
+                    holders: vec!["a".into()], // ignored by central
+                })
+                .collect(),
+            leader: "datacenter".into(),
+        }
+    }
+
+    #[test]
+    fn every_task_stages_from_leader() {
+        let c = ctx();
+        let mut s = Central::new(&c);
+        while let Some(t) = s.next_task("a", &c) {
+            assert_eq!(t.source.as_deref(), Some("datacenter"));
+            s.on_complete("a", &t, 1.0);
+        }
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn any_node_can_take_any_brick() {
+        let c = ctx();
+        let mut s = Central::new(&c);
+        let t1 = s.next_task("b", &c).unwrap();
+        let t2 = s.next_task("a", &c).unwrap();
+        assert_ne!(t1.brick, t2.brick);
+    }
+
+    #[test]
+    fn failure_requeues() {
+        let c = ctx();
+        let mut s = Central::new(&c);
+        let t = s.next_task("a", &c).unwrap();
+        s.on_failure("a", &t, &c);
+        // the same brick is eventually reissued
+        let mut seen = Vec::new();
+        while let Some(t2) = s.next_task("b", &c) {
+            seen.push(t2.brick);
+            s.on_complete("b", &t2, 1.0);
+        }
+        assert!(seen.contains(&t.brick));
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn down_node_gets_nothing() {
+        let mut c = ctx();
+        c.nodes[0].up = false;
+        let mut s = Central::new(&c);
+        assert!(s.next_task("a", &c).is_none());
+        assert!(s.next_task("b", &c).is_some());
+    }
+}

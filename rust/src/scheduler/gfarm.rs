@@ -1,0 +1,230 @@
+//! Gfarm-style scheduling (paper §2): jobs are "redistributed to nodes
+//! which contain the fragment database files" — affinity to fragment
+//! holders, like locality — but an idle node with no local fragments left
+//! may *steal* a fragment from the most-loaded holder, paying the
+//! transfer explicitly. This models Gfarm's file-affinity scheduling with
+//! its replication-based load spreading.
+
+use crate::brick::BrickId;
+use crate::scheduler::{Progress, SchedCtx, Scheduler, Task};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+pub struct Gfarm {
+    queues: BTreeMap<String, VecDeque<BrickId>>,
+    progress: Progress,
+    total_tasks: usize,
+    completed_or_lost: usize,
+    lost: BTreeSet<BrickId>,
+}
+
+impl Gfarm {
+    pub fn new(ctx: &SchedCtx) -> Self {
+        let mut queues: BTreeMap<String, VecDeque<BrickId>> = BTreeMap::new();
+        for b in &ctx.bricks {
+            let primary = b.holders.first().expect("brick with no holders");
+            queues.entry(primary.clone()).or_default().push_back(b.id);
+        }
+        Gfarm {
+            queues,
+            progress: Progress::default(),
+            total_tasks: ctx.bricks.len(),
+            completed_or_lost: 0,
+            lost: BTreeSet::new(),
+        }
+    }
+
+    /// The node with the longest remaining local queue (steal victim).
+    fn most_loaded(&self) -> Option<&String> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .max_by_key(|(n, q)| (q.len(), std::cmp::Reverse(n.as_str())))
+            .map(|(n, _)| n)
+    }
+}
+
+impl Scheduler for Gfarm {
+    fn next_task(&mut self, node: &str, ctx: &SchedCtx) -> Option<Task> {
+        if !ctx.node(node).map(|n| n.up).unwrap_or(false) {
+            return None;
+        }
+        // local fragment first
+        if let Some(q) = self.queues.get_mut(node) {
+            if let Some(brick) = q.pop_front() {
+                let n_events =
+                    ctx.brick(brick).map(|b| b.n_events).unwrap_or(0);
+                return Some(self.progress.issue(
+                    node,
+                    Task { brick, range: (0, n_events), source: None },
+                ));
+            }
+        }
+        // idle: steal from the most loaded holder, only if it has > 1
+        // queued (stealing its last brick rarely pays)
+        let victim = self.most_loaded()?.clone();
+        if victim == node || self.queues[&victim].len() <= 1 {
+            return None;
+        }
+        let brick = self.queues.get_mut(&victim)?.pop_back()?;
+        let n_events = ctx.brick(brick).map(|b| b.n_events).unwrap_or(0);
+        Some(self.progress.issue(
+            node,
+            Task { brick, range: (0, n_events), source: Some(victim) },
+        ))
+    }
+
+    fn on_complete(&mut self, node: &str, task: &Task, _elapsed: f64) {
+        self.progress.complete(node, task);
+        self.completed_or_lost += 1;
+    }
+
+    fn on_failure(&mut self, node: &str, task: &Task, ctx: &SchedCtx) {
+        if let Some(v) = self.progress.outstanding.get_mut(node) {
+            v.retain(|t| t != task);
+        }
+        // requeue at any live replica holder
+        let holders = ctx
+            .brick(task.brick)
+            .map(|b| b.holders.clone())
+            .unwrap_or_default();
+        if let Some(h) = holders
+            .iter()
+            .find(|h| ctx.node(h).map(|n| n.up).unwrap_or(false))
+        {
+            self.queues.entry(h.clone()).or_default().push_back(task.brick);
+        } else if self.lost.insert(task.brick) {
+            self.completed_or_lost += 1;
+        }
+    }
+
+    fn on_node_down(&mut self, node: &str, ctx: &SchedCtx) {
+        let queued: Vec<BrickId> = self
+            .queues
+            .remove(node)
+            .map(|q| q.into_iter().collect())
+            .unwrap_or_default();
+        let inflight: Vec<BrickId> = self
+            .progress
+            .drain_node(node)
+            .into_iter()
+            .map(|t| t.brick)
+            .collect();
+        for brick in queued.into_iter().chain(inflight) {
+            let holders = ctx
+                .brick(brick)
+                .map(|b| b.holders.clone())
+                .unwrap_or_default();
+            if let Some(h) = holders.iter().find(|h| {
+                *h != node && ctx.node(h).map(|n| n.up).unwrap_or(false)
+            }) {
+                self.queues.entry(h.clone()).or_default().push_back(brick);
+            } else if self.lost.insert(brick) {
+                self.completed_or_lost += 1;
+            }
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.completed_or_lost == self.total_tasks
+            && self.progress.outstanding_count() == 0
+    }
+
+    fn name(&self) -> &'static str {
+        "gfarm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BrickState, NodeState};
+
+    fn ctx_skewed() -> SchedCtx {
+        // all 6 bricks on node a; node b idle
+        SchedCtx {
+            nodes: vec![
+                NodeState { name: "a".into(), speed: 1.0, slots: 1, up: true },
+                NodeState { name: "b".into(), speed: 1.0, slots: 1, up: true },
+            ],
+            bricks: (0..6)
+                .map(|i| BrickState {
+                    id: BrickId::new(1, i),
+                    n_events: 10,
+                    bytes: 100,
+                    holders: vec!["a".into()],
+                })
+                .collect(),
+            leader: "jse".into(),
+        }
+    }
+
+    #[test]
+    fn local_work_has_no_source() {
+        let c = ctx_skewed();
+        let mut s = Gfarm::new(&c);
+        let t = s.next_task("a", &c).unwrap();
+        assert_eq!(t.source, None);
+    }
+
+    #[test]
+    fn idle_node_steals_with_transfer() {
+        let c = ctx_skewed();
+        let mut s = Gfarm::new(&c);
+        let t = s.next_task("b", &c).unwrap();
+        assert_eq!(t.source.as_deref(), Some("a"));
+    }
+
+    #[test]
+    fn steal_leaves_last_brick_alone() {
+        let c = SchedCtx {
+            bricks: c_bricks(1),
+            ..ctx_skewed()
+        };
+        let mut s = Gfarm::new(&c);
+        assert!(s.next_task("b", &c).is_none());
+        assert!(s.next_task("a", &c).is_some());
+    }
+
+    fn c_bricks(n: u32) -> Vec<BrickState> {
+        (0..n)
+            .map(|i| BrickState {
+                id: BrickId::new(1, i),
+                n_events: 10,
+                bytes: 100,
+                holders: vec!["a".into()],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_bricks_processed_once() {
+        let c = ctx_skewed();
+        let mut s = Gfarm::new(&c);
+        let mut seen = BTreeSet::new();
+        loop {
+            let mut any = false;
+            for n in ["a", "b"] {
+                if let Some(t) = s.next_task(n, &c) {
+                    assert!(seen.insert(t.brick), "duplicate {:?}", t.brick);
+                    s.on_complete(n, &t, 1.0);
+                    any = true;
+                }
+            }
+            if s.is_done() {
+                break;
+            }
+            assert!(any);
+        }
+        assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn holder_death_without_replica_loses_brick() {
+        let mut c = ctx_skewed();
+        c.nodes[0].up = false;
+        let mut s = Gfarm::new(&c);
+        s.on_node_down("a", &c);
+        assert!(s.is_done());
+        assert_eq!(s.lost.len(), 6);
+    }
+}

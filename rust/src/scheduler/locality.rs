@@ -1,0 +1,199 @@
+//! Grid-brick locality scheduling — the paper's contribution (§4).
+//!
+//! Every brick is queued at the nodes that hold a replica; a node pulling
+//! work receives one of *its own* bricks, so raw data never crosses the
+//! network. If a node dies, its bricks fail over to surviving replica
+//! holders; bricks whose replicas are all dead are reported lost by
+//! `is_done` staying false and `lost()` listing them (the paper's
+//! "biggest disadvantage ... in the case of failure of one of the nodes").
+
+use crate::brick::BrickId;
+use crate::scheduler::{Progress, SchedCtx, Scheduler, Task};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+pub struct Locality {
+    /// per-node FIFO of bricks local to it
+    queues: BTreeMap<String, VecDeque<BrickId>>,
+    /// brick -> remaining replica holders not yet tried
+    fallbacks: BTreeMap<BrickId, Vec<String>>,
+    progress: Progress,
+    total_tasks: usize,
+    lost: BTreeSet<BrickId>,
+}
+
+impl Locality {
+    pub fn new(ctx: &SchedCtx) -> Self {
+        let mut queues: BTreeMap<String, VecDeque<BrickId>> = BTreeMap::new();
+        let mut fallbacks = BTreeMap::new();
+        for b in &ctx.bricks {
+            let primary = b
+                .holders
+                .first()
+                .expect("brick with no holders")
+                .clone();
+            queues.entry(primary).or_default().push_back(b.id);
+            fallbacks.insert(b.id, b.holders[1..].to_vec());
+        }
+        Locality {
+            queues,
+            fallbacks,
+            progress: Progress::default(),
+            total_tasks: ctx.bricks.len(),
+            lost: BTreeSet::new(),
+        }
+    }
+
+    /// Bricks that can no longer be processed anywhere.
+    pub fn lost(&self) -> &BTreeSet<BrickId> {
+        &self.lost
+    }
+
+    fn requeue(&mut self, brick: BrickId, ctx: &SchedCtx) {
+        let fb = self.fallbacks.entry(brick).or_default();
+        while let Some(next) = fb.pop() {
+            let alive = ctx.node(&next).map(|n| n.up).unwrap_or(false);
+            if alive {
+                self.queues.entry(next).or_default().push_back(brick);
+                return;
+            }
+        }
+        self.lost.insert(brick);
+    }
+}
+
+impl Scheduler for Locality {
+    fn next_task(&mut self, node: &str, _ctx: &SchedCtx) -> Option<Task> {
+        let q = self.queues.get_mut(node)?;
+        let brick = q.pop_front()?;
+        let n_events = _ctx.brick(brick).map(|b| b.n_events).unwrap_or(0);
+        Some(self.progress.issue(
+            node,
+            Task { brick, range: (0, n_events), source: None },
+        ))
+    }
+
+    fn on_complete(&mut self, node: &str, task: &Task, _elapsed: f64) {
+        self.progress.complete(node, task);
+    }
+
+    fn on_failure(&mut self, node: &str, task: &Task, ctx: &SchedCtx) {
+        if let Some(v) = self.progress.outstanding.get_mut(node) {
+            v.retain(|t| t != task);
+        }
+        self.requeue(task.brick, ctx);
+    }
+
+    fn on_node_down(&mut self, node: &str, ctx: &SchedCtx) {
+        // requeue queued-but-unissued bricks
+        let queued: Vec<BrickId> = self
+            .queues
+            .remove(node)
+            .map(|q| q.into_iter().collect())
+            .unwrap_or_default();
+        for b in queued {
+            self.requeue(b, ctx);
+        }
+        // requeue in-flight bricks
+        for t in self.progress.drain_node(node) {
+            self.requeue(t.brick, ctx);
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.progress.completed_tasks + self.lost.len() == self.total_tasks
+            && self.progress.outstanding_count() == 0
+    }
+
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BrickState, NodeState};
+
+    fn ctx() -> SchedCtx {
+        SchedCtx {
+            nodes: vec![
+                NodeState { name: "a".into(), speed: 1.0, slots: 1, up: true },
+                NodeState { name: "b".into(), speed: 1.0, slots: 1, up: true },
+            ],
+            bricks: vec![
+                BrickState {
+                    id: BrickId::new(1, 0),
+                    n_events: 100,
+                    bytes: 1000,
+                    holders: vec!["a".into(), "b".into()],
+                },
+                BrickState {
+                    id: BrickId::new(1, 1),
+                    n_events: 200,
+                    bytes: 2000,
+                    holders: vec!["b".into(), "a".into()],
+                },
+            ],
+            leader: "jse".into(),
+        }
+    }
+
+    #[test]
+    fn tasks_are_strictly_local() {
+        let c = ctx();
+        let mut s = Locality::new(&c);
+        let ta = s.next_task("a", &c).unwrap();
+        assert_eq!(ta.brick, BrickId::new(1, 0));
+        assert_eq!(ta.source, None);
+        let tb = s.next_task("b", &c).unwrap();
+        assert_eq!(tb.brick, BrickId::new(1, 1));
+        assert!(s.next_task("a", &c).is_none());
+    }
+
+    #[test]
+    fn failover_to_replica() {
+        let mut c = ctx();
+        let mut s = Locality::new(&c);
+        let ta = s.next_task("a", &c).unwrap();
+        // node a dies mid-task
+        c.nodes[0].up = false;
+        s.on_failure("a", &ta, &c);
+        s.on_node_down("a", &c);
+        // b picks up both its own brick and a's failed-over brick
+        let t1 = s.next_task("b", &c).unwrap();
+        let t2 = s.next_task("b", &c).unwrap();
+        let mut ids = vec![t1.brick, t2.brick];
+        ids.sort();
+        assert_eq!(ids, vec![BrickId::new(1, 0), BrickId::new(1, 1)]);
+        s.on_complete("b", &t1, 1.0);
+        s.on_complete("b", &t2, 1.0);
+        assert!(s.is_done());
+        assert!(s.lost().is_empty());
+    }
+
+    #[test]
+    fn unreplicated_brick_is_lost_when_holder_dies() {
+        let mut c = ctx();
+        c.bricks[0].holders = vec!["a".into()]; // replication = 1
+        let mut s = Locality::new(&c);
+        c.nodes[0].up = false;
+        s.on_node_down("a", &c);
+        assert_eq!(s.lost().len(), 1);
+        let t = s.next_task("b", &c).unwrap();
+        s.on_complete("b", &t, 1.0);
+        assert!(s.is_done()); // done, with one lost brick reported
+    }
+
+    #[test]
+    fn completion_accounting() {
+        let c = ctx();
+        let mut s = Locality::new(&c);
+        assert!(!s.is_done());
+        let ta = s.next_task("a", &c).unwrap();
+        let tb = s.next_task("b", &c).unwrap();
+        s.on_complete("a", &ta, 2.0);
+        assert!(!s.is_done());
+        s.on_complete("b", &tb, 2.0);
+        assert!(s.is_done());
+    }
+}

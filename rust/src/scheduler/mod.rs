@@ -1,0 +1,324 @@
+//! Task scheduling policies.
+//!
+//! The scheduler answers one question, asked every time a node goes idle:
+//! *what should this node work on next?* The paper's contribution is the
+//! **locality** policy (grid-brick: run where the data lives, §4); the
+//! baselines it argues against / alongside are implemented too so the
+//! benches can compare them (DESIGN.md Ext-C/Ext-D):
+//!
+//! - [`locality`]: grid-brick — each brick is processed by a node that
+//!   holds a replica; zero raw-data movement.
+//! - [`central`]: the traditional Globus/DataGrid pattern (§3) — all data
+//!   sits on the central server and is staged to whichever node is free.
+//! - [`proof`]: PROOF-style master/worker adaptive packets (§2) — event
+//!   ranges handed out pull-style, sized to each worker's measured rate,
+//!   reprocessed elsewhere on worker failure.
+//! - [`gfarm`]: Gfarm-style (§2) — affinity to fragment holders with idle
+//!   work-stealing (a transfer makes the steal explicit).
+//! - [`balanced`]: the paper's §7 "submit more work to the best nodes" —
+//!   locality first, then cost-based migration of queued bricks from slow
+//!   to fast nodes when the transfer pays for itself.
+//!
+//! All policies implement the pull-based [`Scheduler`] trait, which both
+//! the discrete-event simulator (`sim::scenario`) and the live tokio
+//! cluster (`cluster`) drive — the *same decision code* produces Fig 7 and
+//! the real runs.
+
+pub mod balanced;
+pub mod central;
+pub mod gfarm;
+pub mod locality;
+pub mod proof;
+
+use crate::brick::BrickId;
+use std::collections::BTreeMap;
+
+/// What the scheduler knows about a node.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    pub name: String,
+    /// relative CPU speed (events/s multiplier; 1.0 = reference)
+    pub speed: f64,
+    /// concurrent task slots (GRAM job-manager slots)
+    pub slots: usize,
+    pub up: bool,
+}
+
+/// What the scheduler knows about a brick.
+#[derive(Debug, Clone)]
+pub struct BrickState {
+    pub id: BrickId,
+    pub n_events: usize,
+    pub bytes: u64,
+    /// replica holders, primary first
+    pub holders: Vec<String>,
+}
+
+/// A unit of work handed to a node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub brick: BrickId,
+    /// event sub-range within the brick [start, end) — whole brick unless
+    /// the policy packetises (PROOF)
+    pub range: (usize, usize),
+    /// where the raw data must be read from; None = local disk
+    pub source: Option<String>,
+}
+
+impl Task {
+    pub fn n_events(&self) -> usize {
+        self.range.1 - self.range.0
+    }
+}
+
+/// Immutable context handed to the scheduler on each pull.
+#[derive(Debug, Clone)]
+pub struct SchedCtx {
+    pub nodes: Vec<NodeState>,
+    pub bricks: Vec<BrickState>,
+    /// name of the central data host (leader) for `central` staging
+    pub leader: String,
+}
+
+impl SchedCtx {
+    pub fn node(&self, name: &str) -> Option<&NodeState> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    pub fn brick(&self, id: BrickId) -> Option<&BrickState> {
+        // bricks are generated in id order (split_events); binary search
+        // keeps scheduler pulls O(log n) instead of O(n) per task (§Perf)
+        match self.bricks.binary_search_by(|b| b.id.cmp(&id)) {
+            Ok(idx) => Some(&self.bricks[idx]),
+            Err(_) => self.bricks.iter().find(|b| b.id == id),
+        }
+    }
+
+    pub fn live_nodes(&self) -> impl Iterator<Item = &NodeState> {
+        self.nodes.iter().filter(|n| n.up)
+    }
+}
+
+/// Pull-based scheduling policy. Implementations own their queue state.
+pub trait Scheduler: Send {
+    /// Node `node` is idle; hand it a task (or None if nothing suits it).
+    fn next_task(&mut self, node: &str, ctx: &SchedCtx) -> Option<Task>;
+
+    /// `node` finished `task` successfully, processing `n` events in
+    /// `elapsed` seconds (rate feedback for adaptive policies).
+    fn on_complete(&mut self, node: &str, task: &Task, elapsed: f64);
+
+    /// `node` failed (or died) while running `task`; the work must be
+    /// re-issued elsewhere.
+    fn on_failure(&mut self, node: &str, task: &Task, ctx: &SchedCtx);
+
+    /// `node` went down entirely: requeue all its pending affinity work.
+    fn on_node_down(&mut self, node: &str, ctx: &SchedCtx);
+
+    /// All work assigned AND completed.
+    fn is_done(&self) -> bool;
+
+    /// Human-readable policy name (reports/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Which policy to instantiate (config / CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Locality,
+    Central,
+    Proof,
+    Gfarm,
+    Balanced,
+}
+
+impl Policy {
+    pub fn by_name(s: &str) -> Option<Policy> {
+        match s {
+            "locality" | "grid-brick" => Some(Policy::Locality),
+            "central" | "traditional" => Some(Policy::Central),
+            "proof" => Some(Policy::Proof),
+            "gfarm" => Some(Policy::Gfarm),
+            "balanced" => Some(Policy::Balanced),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Locality => "locality",
+            Policy::Central => "central",
+            Policy::Proof => "proof",
+            Policy::Gfarm => "gfarm",
+            Policy::Balanced => "balanced",
+        }
+    }
+
+    /// Instantiate the policy over the brick set.
+    pub fn build(self, ctx: &SchedCtx) -> Box<dyn Scheduler> {
+        match self {
+            Policy::Locality => Box::new(locality::Locality::new(ctx)),
+            Policy::Central => Box::new(central::Central::new(ctx)),
+            Policy::Proof => Box::new(proof::Proof::new(ctx)),
+            Policy::Gfarm => Box::new(gfarm::Gfarm::new(ctx)),
+            Policy::Balanced => Box::new(balanced::Balanced::new(ctx)),
+        }
+    }
+
+    pub const ALL: [Policy; 5] = [
+        Policy::Locality,
+        Policy::Central,
+        Policy::Proof,
+        Policy::Gfarm,
+        Policy::Balanced,
+    ];
+}
+
+/// Shared bookkeeping used by several policies: outstanding (issued but
+/// not completed) tasks per node, completed event count.
+#[derive(Debug, Default)]
+pub struct Progress {
+    pub outstanding: BTreeMap<String, Vec<Task>>,
+    pub completed_events: usize,
+    pub completed_tasks: usize,
+}
+
+impl Progress {
+    pub fn issue(&mut self, node: &str, task: Task) -> Task {
+        self.outstanding
+            .entry(node.to_string())
+            .or_default()
+            .push(task.clone());
+        task
+    }
+
+    pub fn complete(&mut self, node: &str, task: &Task) {
+        if let Some(v) = self.outstanding.get_mut(node) {
+            if let Some(pos) = v.iter().position(|t| t == task) {
+                v.remove(pos);
+            }
+        }
+        self.completed_events += task.n_events();
+        self.completed_tasks += 1;
+    }
+
+    /// Remove and return everything outstanding on `node`.
+    pub fn drain_node(&mut self, node: &str) -> Vec<Task> {
+        self.outstanding.remove(node).unwrap_or_default()
+    }
+
+    pub fn outstanding_count(&self) -> usize {
+        self.outstanding.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn ctx2() -> SchedCtx {
+        // the paper's testbed: gandalf + hobbit, bricks spread across both
+        SchedCtx {
+            nodes: vec![
+                NodeState {
+                    name: "gandalf".into(),
+                    speed: 0.8,
+                    slots: 1,
+                    up: true,
+                },
+                NodeState {
+                    name: "hobbit".into(),
+                    speed: 1.0,
+                    slots: 1,
+                    up: true,
+                },
+            ],
+            bricks: (0..4)
+                .map(|i| BrickState {
+                    id: BrickId::new(1, i),
+                    n_events: 500,
+                    bytes: 500 << 20,
+                    holders: vec![if i % 2 == 0 {
+                        "gandalf".into()
+                    } else {
+                        "hobbit".into()
+                    }],
+                })
+                .collect(),
+            leader: "jse".into(),
+        }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::by_name("grid-brick"), Some(Policy::Locality));
+        assert_eq!(Policy::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn progress_bookkeeping() {
+        let mut p = Progress::default();
+        let t = Task {
+            brick: BrickId::new(1, 0),
+            range: (0, 100),
+            source: None,
+        };
+        p.issue("a", t.clone());
+        assert_eq!(p.outstanding_count(), 1);
+        p.complete("a", &t);
+        assert_eq!(p.outstanding_count(), 0);
+        assert_eq!(p.completed_events, 100);
+    }
+
+    #[test]
+    fn drain_node_returns_outstanding() {
+        let mut p = Progress::default();
+        let t1 = Task {
+            brick: BrickId::new(1, 0),
+            range: (0, 10),
+            source: None,
+        };
+        let t2 = Task {
+            brick: BrickId::new(1, 1),
+            range: (0, 20),
+            source: None,
+        };
+        p.issue("a", t1);
+        p.issue("a", t2);
+        assert_eq!(p.drain_node("a").len(), 2);
+        assert_eq!(p.outstanding_count(), 0);
+    }
+
+    /// Generic conformance: every policy must process all events exactly
+    /// once on a healthy cluster, regardless of pull order.
+    #[test]
+    fn all_policies_cover_all_events() {
+        for policy in Policy::ALL {
+            let ctx = ctx2();
+            let mut s = policy.build(&ctx);
+            let total: usize = ctx.bricks.iter().map(|b| b.n_events).sum();
+            let mut processed = 0usize;
+            let mut guard = 0;
+            'outer: loop {
+                let mut any = false;
+                for node in ["gandalf", "hobbit"] {
+                    if let Some(t) = s.next_task(node, &ctx) {
+                        processed += t.n_events();
+                        s.on_complete(node, &t, 1.0);
+                        any = true;
+                    }
+                }
+                guard += 1;
+                if s.is_done() {
+                    break 'outer;
+                }
+                assert!(any, "{}: stalled before done", s.name());
+                assert!(guard < 10_000, "{}: runaway", s.name());
+            }
+            assert_eq!(processed, total, "{}", s.name());
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! PROOF-style adaptive packet scheduling (paper §2).
+//!
+//! The master hands out *packets* — event sub-ranges of bricks — pull
+//! style. Packet size adapts to each worker's measured rate so that
+//! "slower slave servers get smaller data packets than faster slave
+//! servers", targeting a fixed packet wall-time. The master "keeps a list
+//! of all generated packets per slave, so in case a slave failed then
+//! remaining slaves can reprocess its packets".
+//!
+//! Data affinity: a packet's raw bytes are read from the brick's replica
+//! holder; workers that hold the brick read locally, others pull remotely
+//! (source = holder), matching PROOF's TChain remote-access behaviour.
+
+use crate::brick::BrickId;
+use crate::scheduler::{Progress, SchedCtx, Scheduler, Task};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Target wall-clock seconds per packet (PROOF uses ~ a few seconds).
+const TARGET_PACKET_S: f64 = 4.0;
+/// Bounds on packet size in events.
+const MIN_PACKET: usize = 16;
+const MAX_PACKET: usize = 4096;
+/// Initial assumed rate (events/s) before any feedback.
+const INITIAL_RATE: f64 = 50.0;
+
+struct BrickCursor {
+    id: BrickId,
+    n_events: usize,
+    next: usize,
+}
+
+pub struct Proof {
+    /// bricks with unassigned event ranges
+    cursors: VecDeque<BrickCursor>,
+    /// measured events/s per worker (EWMA)
+    rates: BTreeMap<String, f64>,
+    progress: Progress,
+    total_events: usize,
+    /// events requeued from failures, as explicit (brick, range) packets
+    requeued: VecDeque<(BrickId, (usize, usize))>,
+}
+
+impl Proof {
+    pub fn new(ctx: &SchedCtx) -> Self {
+        Proof {
+            cursors: ctx
+                .bricks
+                .iter()
+                .map(|b| BrickCursor { id: b.id, n_events: b.n_events, next: 0 })
+                .collect(),
+            rates: BTreeMap::new(),
+            progress: Progress::default(),
+            total_events: ctx.bricks.iter().map(|b| b.n_events).sum(),
+            requeued: VecDeque::new(),
+        }
+    }
+
+    fn packet_events(&self, node: &str) -> usize {
+        let rate = self.rates.get(node).copied().unwrap_or(INITIAL_RATE);
+        ((rate * TARGET_PACKET_S) as usize).clamp(MIN_PACKET, MAX_PACKET)
+    }
+
+    fn source_for(&self, brick: BrickId, node: &str, ctx: &SchedCtx) -> Option<String> {
+        let holders = &ctx.brick(brick)?.holders;
+        if holders.iter().any(|h| h == node) {
+            None // local read
+        } else {
+            // remote read from the first live holder, else the leader
+            holders
+                .iter()
+                .find(|h| ctx.node(h).map(|n| n.up).unwrap_or(false))
+                .cloned()
+                .or(Some(ctx.leader.clone()))
+        }
+    }
+
+    /// Current measured rate for a node (exposed for tests/reports).
+    pub fn rate(&self, node: &str) -> Option<f64> {
+        self.rates.get(node).copied()
+    }
+}
+
+impl Scheduler for Proof {
+    fn next_task(&mut self, node: &str, ctx: &SchedCtx) -> Option<Task> {
+        if !ctx.node(node).map(|n| n.up).unwrap_or(false) {
+            return None;
+        }
+        let want = self.packet_events(node);
+
+        // failed packets first (reprocessing)
+        if let Some((brick, range)) = self.requeued.pop_front() {
+            let source = self.source_for(brick, node, ctx);
+            return Some(self.progress.issue(node, Task { brick, range, source }));
+        }
+
+        // otherwise carve the next packet off the current brick cursor
+        let cur = self.cursors.front_mut()?;
+        let start = cur.next;
+        let end = (start + want).min(cur.n_events);
+        cur.next = end;
+        let brick = cur.id;
+        if cur.next >= cur.n_events {
+            self.cursors.pop_front();
+        }
+        let source = self.source_for(brick, node, ctx);
+        Some(self.progress.issue(node, Task { brick, range: (start, end), source }))
+    }
+
+    fn on_complete(&mut self, node: &str, task: &Task, elapsed: f64) {
+        self.progress.complete(node, task);
+        if elapsed > 0.0 {
+            let observed = task.n_events() as f64 / elapsed;
+            let prev = self.rates.get(node).copied().unwrap_or(observed);
+            // EWMA, alpha = 0.5 (PROOF reacts fast)
+            self.rates.insert(node.to_string(), 0.5 * prev + 0.5 * observed);
+        }
+    }
+
+    fn on_failure(&mut self, node: &str, task: &Task, _ctx: &SchedCtx) {
+        if let Some(v) = self.progress.outstanding.get_mut(node) {
+            v.retain(|t| t != task);
+        }
+        self.requeued.push_back((task.brick, task.range));
+    }
+
+    fn on_node_down(&mut self, node: &str, _ctx: &SchedCtx) {
+        for t in self.progress.drain_node(node) {
+            self.requeued.push_back((t.brick, t.range));
+        }
+        self.rates.remove(node);
+    }
+
+    fn is_done(&self) -> bool {
+        self.cursors.is_empty()
+            && self.requeued.is_empty()
+            && self.progress.outstanding_count() == 0
+            && self.progress.completed_events >= self.total_events
+    }
+
+    fn name(&self) -> &'static str {
+        "proof"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{BrickState, NodeState};
+
+    fn ctx() -> SchedCtx {
+        SchedCtx {
+            nodes: vec![
+                NodeState { name: "fast".into(), speed: 2.0, slots: 1, up: true },
+                NodeState { name: "slow".into(), speed: 0.5, slots: 1, up: true },
+            ],
+            bricks: vec![BrickState {
+                id: BrickId::new(1, 0),
+                n_events: 100_000,
+                bytes: 100_000 << 10,
+                holders: vec!["fast".into()],
+            }],
+            leader: "jse".into(),
+        }
+    }
+
+    #[test]
+    fn packets_adapt_to_measured_rate() {
+        let c = ctx();
+        let mut s = Proof::new(&c);
+        // feed rate observations: fast node does 1000 ev/s, slow 25 ev/s
+        let t = s.next_task("fast", &c).unwrap();
+        s.on_complete("fast", &t, t.n_events() as f64 / 1000.0);
+        let t = s.next_task("slow", &c).unwrap();
+        s.on_complete("slow", &t, t.n_events() as f64 / 25.0);
+        // next packets reflect the rates (one more round to converge EWMA)
+        let tf = s.next_task("fast", &c).unwrap();
+        let ts = s.next_task("slow", &c).unwrap();
+        assert!(
+            tf.n_events() > 3 * ts.n_events(),
+            "fast {} slow {}",
+            tf.n_events(),
+            ts.n_events()
+        );
+        assert!(ts.n_events() >= MIN_PACKET);
+        assert!(tf.n_events() <= MAX_PACKET);
+    }
+
+    #[test]
+    fn packets_partition_the_brick() {
+        let c = ctx();
+        let mut s = Proof::new(&c);
+        let mut covered = vec![false; 100_000];
+        loop {
+            let mut any = false;
+            for n in ["fast", "slow"] {
+                if let Some(t) = s.next_task(n, &c) {
+                    for i in t.range.0..t.range.1 {
+                        assert!(!covered[i], "event {i} double-assigned");
+                        covered[i] = true;
+                    }
+                    s.on_complete(n, &t, 0.5);
+                    any = true;
+                }
+            }
+            if s.is_done() {
+                break;
+            }
+            assert!(any, "stalled");
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn failed_packets_reprocessed_elsewhere() {
+        let mut c = ctx();
+        let mut s = Proof::new(&c);
+        let t = s.next_task("slow", &c).unwrap();
+        c.nodes[1].up = false;
+        s.on_failure("slow", &t, &c);
+        s.on_node_down("slow", &c);
+        // the failed range must be re-issued to the surviving node
+        let mut got_range = false;
+        while let Some(t2) = s.next_task("fast", &c) {
+            if t2.brick == t.brick && t2.range == t.range {
+                got_range = true;
+            }
+            s.on_complete("fast", &t2, 0.1);
+        }
+        assert!(got_range);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn remote_readers_get_a_source() {
+        let c = ctx();
+        let mut s = Proof::new(&c);
+        let t = s.next_task("slow", &c).unwrap(); // slow doesn't hold d1.b0
+        assert_eq!(t.source.as_deref(), Some("fast"));
+        let t2 = s.next_task("fast", &c).unwrap(); // fast holds it
+        assert_eq!(t2.source, None);
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal deterministic discrete-event engine.
+//!
+//! Events are boxed closures over a user "world" type `W`; ties in time
+//! break by insertion sequence so runs are exactly reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+type EventFn<W> = Box<dyn FnOnce(&mut Engine<W>, &mut W)>;
+
+struct Scheduled<W> {
+    time: f64,
+    seq: u64,
+    f: EventFn<W>,
+}
+
+impl<W> PartialEq for Scheduled<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Scheduled<W> {}
+impl<W> PartialOrd for Scheduled<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Scheduled<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap via reversed compare; NaN-free by construction
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation engine: a virtual clock and a pending-event queue.
+pub struct Engine<W> {
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<W>>,
+    processed: u64,
+}
+
+impl<W> Default for Engine<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Engine<W> {
+    pub fn new() -> Self {
+        Engine { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `f` to run `delay` seconds from now.
+    pub fn schedule(
+        &mut self,
+        delay: f64,
+        f: impl FnOnce(&mut Engine<W>, &mut W) + 'static,
+    ) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        let time = self.now + delay.max(0.0);
+        self.seq += 1;
+        self.queue.push(Scheduled { time, seq: self.seq, f: Box::new(f) });
+    }
+
+    /// Schedule at an absolute virtual time (>= now).
+    pub fn schedule_at(
+        &mut self,
+        time: f64,
+        f: impl FnOnce(&mut Engine<W>, &mut W) + 'static,
+    ) {
+        self.schedule((time - self.now).max(0.0), f);
+    }
+
+    /// Run until the queue drains (or `max_events` as a runaway guard).
+    /// Returns the final virtual time.
+    pub fn run(&mut self, world: &mut W) -> f64 {
+        self.run_limited(world, u64::MAX)
+    }
+
+    pub fn run_limited(&mut self, world: &mut W, max_events: u64) -> f64 {
+        let mut n = 0u64;
+        while let Some(ev) = self.queue.pop() {
+            debug_assert!(ev.time >= self.now);
+            self.now = ev.time;
+            (ev.f)(self, world);
+            self.processed += 1;
+            n += 1;
+            if n >= max_events {
+                break;
+            }
+        }
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut world = Vec::new();
+        eng.schedule(3.0, |_, w: &mut Vec<u32>| w.push(3));
+        eng.schedule(1.0, |_, w| w.push(1));
+        eng.schedule(2.0, |_, w| w.push(2));
+        let end = eng.run(&mut world);
+        assert_eq!(world, vec![1, 2, 3]);
+        assert_eq!(end, 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut world = Vec::new();
+        for i in 0..10 {
+            eng.schedule(1.0, move |_, w: &mut Vec<u32>| w.push(i));
+        }
+        eng.run(&mut world);
+        assert_eq!(world, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut eng: Engine<Vec<f64>> = Engine::new();
+        let mut world = Vec::new();
+        eng.schedule(1.0, |e, w: &mut Vec<f64>| {
+            w.push(e.now());
+            e.schedule(2.0, |e2, w2: &mut Vec<f64>| w2.push(e2.now()));
+        });
+        let end = eng.run(&mut world);
+        assert_eq!(world, vec![1.0, 3.0]);
+        assert_eq!(end, 3.0);
+    }
+
+    #[test]
+    fn chain_recursion() {
+        // a self-rescheduling ticker
+        struct W {
+            ticks: u32,
+        }
+        fn tick(e: &mut Engine<W>, w: &mut W) {
+            w.ticks += 1;
+            if w.ticks < 100 {
+                e.schedule(0.5, tick);
+            }
+        }
+        let mut eng = Engine::new();
+        let mut w = W { ticks: 0 };
+        eng.schedule(0.5, tick);
+        let end = eng.run(&mut w);
+        assert_eq!(w.ticks, 100);
+        assert!((end - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_limited_guards() {
+        struct W;
+        fn forever(e: &mut Engine<W>, _w: &mut W) {
+            e.schedule(1.0, forever);
+        }
+        let mut eng = Engine::new();
+        eng.schedule(1.0, forever);
+        eng.run_limited(&mut W, 1000);
+        assert_eq!(eng.processed(), 1000);
+    }
+
+    #[test]
+    fn schedule_at_absolute() {
+        let mut eng: Engine<Vec<f64>> = Engine::new();
+        let mut w = Vec::new();
+        eng.schedule(5.0, |e, w: &mut Vec<f64>| {
+            // past-time schedules clamp to now
+            e.schedule_at(1.0, |e2, w2: &mut Vec<f64>| w2.push(e2.now()));
+            w.push(e.now());
+        });
+        eng.run(&mut w);
+        assert_eq!(w, vec![5.0, 5.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's evaluation (Fig 7) ran 130 real executions on a two-node
+//! 2002 testbed. We cannot materialise 16 GB of 1 MB events in this
+//! sandbox, so the sweep path runs on a deterministic virtual clock: the
+//! same scheduling/placement/transfer *logic*, with compute durations
+//! taken from a cost model **calibrated against the real measured PJRT
+//! kernel throughput** (see EXPERIMENTS.md §Calibration). The live tokio
+//! path (`cluster`) runs the identical coordination code with real
+//! compute for correctness validation.
+//!
+//! - [`engine`]: virtual clock + event queue (closures over a world type)
+//! - [`resource`]: FIFO/multi-slot resource timelines (CPU slots, NIC
+//!   serialization)
+//! - [`scenario`]: the GEPS run simulator used by every bench
+
+pub mod engine;
+pub mod resource;
+pub mod scenario;
+
+pub use engine::Engine;
+pub use resource::{MultiSlot, SerialResource};
+pub use scenario::{FailureSpec, RunReport, Scenario, ScenarioConfig};

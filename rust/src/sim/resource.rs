@@ -1,0 +1,125 @@
+//! Resource timelines for the DES: book work onto CPUs/NICs and get back
+//! start/end times. These are analytic FIFO timelines (no token passing),
+//! which keeps the simulator fast enough to sweep thousands of scenarios
+//! (hotpath bench target: >1M bookings/s).
+
+/// A single-server FIFO resource (e.g. a NIC serializing transfers, a
+/// disk serializing reads). Booking returns [start, end).
+#[derive(Debug, Clone, Default)]
+pub struct SerialResource {
+    next_free: f64,
+    busy: f64,
+}
+
+impl SerialResource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Book `duration` seconds at or after `now`. Returns (start, end).
+    pub fn book(&mut self, now: f64, duration: f64) -> (f64, f64) {
+        debug_assert!(duration >= 0.0);
+        let start = self.next_free.max(now);
+        let end = start + duration;
+        self.next_free = end;
+        self.busy += duration;
+        (start, end)
+    }
+
+    /// Earliest time a new booking could start.
+    pub fn free_at(&self, now: f64) -> f64 {
+        self.next_free.max(now)
+    }
+
+    /// Total busy seconds booked.
+    pub fn busy_time(&self) -> f64 {
+        self.busy
+    }
+}
+
+/// A `k`-slot resource (CPU with k cores / GRAM job-manager slots):
+/// bookings go to the earliest-free slot.
+#[derive(Debug, Clone)]
+pub struct MultiSlot {
+    slots: Vec<f64>,
+    busy: f64,
+}
+
+impl MultiSlot {
+    pub fn new(k: usize) -> Self {
+        MultiSlot { slots: vec![0.0; k.max(1)], busy: 0.0 }
+    }
+
+    pub fn k(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Book `duration` on the earliest-available slot at/after `now`.
+    pub fn book(&mut self, now: f64, duration: f64) -> (f64, f64) {
+        debug_assert!(duration >= 0.0);
+        let (idx, _) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = self.slots[idx].max(now);
+        let end = start + duration;
+        self.slots[idx] = end;
+        self.busy += duration;
+        (start, end)
+    }
+
+    /// When all current bookings finish.
+    pub fn drain_time(&self) -> f64 {
+        self.slots.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn busy_time(&self) -> f64 {
+        self.busy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_fifo_order() {
+        let mut r = SerialResource::new();
+        let (s1, e1) = r.book(0.0, 2.0);
+        let (s2, e2) = r.book(0.0, 3.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        assert_eq!((s2, e2), (2.0, 5.0));
+        // a booking after idle time starts at `now`
+        let (s3, _) = r.book(10.0, 1.0);
+        assert_eq!(s3, 10.0);
+        assert_eq!(r.busy_time(), 6.0);
+    }
+
+    #[test]
+    fn multislot_parallelism() {
+        let mut cpu = MultiSlot::new(2);
+        let (s1, e1) = cpu.book(0.0, 4.0);
+        let (s2, e2) = cpu.book(0.0, 4.0);
+        let (s3, e3) = cpu.book(0.0, 4.0);
+        assert_eq!((s1, e1), (0.0, 4.0));
+        assert_eq!((s2, e2), (0.0, 4.0)); // second core
+        assert_eq!((s3, e3), (4.0, 8.0)); // queues behind the earliest
+        assert_eq!(cpu.drain_time(), 8.0);
+    }
+
+    #[test]
+    fn multislot_single_is_serial() {
+        let mut cpu = MultiSlot::new(1);
+        cpu.book(0.0, 1.0);
+        let (s, _) = cpu.book(0.0, 1.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn zero_slot_clamps_to_one() {
+        let cpu = MultiSlot::new(0);
+        assert_eq!(cpu.k(), 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (criterion is not available offline): warmup +
+//! timed iterations, robust stats, and aligned table printing shared by
+//! every `cargo bench` target and the examples.
+
+use std::time::Instant;
+
+/// Timing statistics over n iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} p50 {} p99 {} min {} (n={})",
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` then `iters` timed iterations.
+pub fn bench(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let q = |p: f64| {
+        let idx = ((samples.len() as f64 - 1.0) * p).round() as usize;
+        samples[idx]
+    };
+    Stats {
+        iters,
+        mean_ns: mean,
+        p50_ns: q(0.5),
+        p99_ns: q(0.99),
+        min_ns: samples[0],
+    }
+}
+
+/// Time one closure, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Print an aligned table: header + rows of equal arity.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> =
+        header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(header.iter().map(|s| s.to_string()).collect())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench(2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            iters: 1,
+            mean_ns: 1e9,
+            p50_ns: 1e9,
+            p99_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((s.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

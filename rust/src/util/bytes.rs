@@ -1,0 +1,115 @@
+//! Byte-size arithmetic and human-readable formatting.
+//!
+//! The paper measures everything in "events of ~1 MB"; we keep byte
+//! accounting explicit so transfer times out of `netsim` are auditable.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+
+/// A byte count with helpers for rate math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct ByteSize(pub u64);
+
+impl ByteSize {
+    pub const ZERO: ByteSize = ByteSize(0);
+
+    pub fn kb(n: u64) -> Self {
+        ByteSize(n * KB)
+    }
+    pub fn mb(n: u64) -> Self {
+        ByteSize(n * MB)
+    }
+    pub fn gb(n: u64) -> Self {
+        ByteSize(n * GB)
+    }
+
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    /// Seconds to move this many bytes at `bytes_per_sec`.
+    pub fn time_at(self, bytes_per_sec: f64) -> f64 {
+        if bytes_per_sec <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.0 as f64 / bytes_per_sec
+    }
+}
+
+impl Add for ByteSize {
+    type Output = ByteSize;
+    fn add(self, rhs: ByteSize) -> ByteSize {
+        ByteSize(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for ByteSize {
+    fn add_assign(&mut self, rhs: ByteSize) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for ByteSize {
+    type Output = ByteSize;
+    fn sub(self, rhs: ByteSize) -> ByteSize {
+        ByteSize(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Mul<u64> for ByteSize {
+    type Output = ByteSize;
+    fn mul(self, rhs: u64) -> ByteSize {
+        ByteSize(self.0 * rhs)
+    }
+}
+
+impl fmt::Display for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0;
+        if b >= GB {
+            write!(f, "{:.2} GiB", b as f64 / GB as f64)
+        } else if b >= MB {
+            write!(f, "{:.2} MiB", b as f64 / MB as f64)
+        } else if b >= KB {
+            write!(f, "{:.2} KiB", b as f64 / KB as f64)
+        } else {
+            write!(f, "{b} B")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_units() {
+        assert_eq!(ByteSize(512).to_string(), "512 B");
+        assert_eq!(ByteSize::kb(2).to_string(), "2.00 KiB");
+        assert_eq!(ByteSize::mb(3).to_string(), "3.00 MiB");
+        assert_eq!(ByteSize::gb(1).to_string(), "1.00 GiB");
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(ByteSize::mb(1) + ByteSize::mb(1), ByteSize::mb(2));
+        assert_eq!(ByteSize::mb(3) - ByteSize::mb(1), ByteSize::mb(2));
+        assert_eq!(ByteSize::mb(2) - ByteSize::mb(3), ByteSize::ZERO);
+        assert_eq!(ByteSize::kb(4) * 256, ByteSize::mb(1));
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 100 Mb/s fast Ethernet = 12.5 MB/s; 125 MB takes 10 s.
+        let t = ByteSize(125_000_000).time_at(12_500_000.0);
+        assert!((t - 10.0).abs() < 1e-9);
+        assert!(ByteSize::mb(1).time_at(0.0).is_infinite());
+    }
+}

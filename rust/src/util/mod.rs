@@ -1,0 +1,14 @@
+//! Small shared substrates: deterministic PRNG, hashing, JSON, byte sizes.
+//!
+//! Everything here is hand-rolled (no external deps) so the whole stack
+//! stays auditable and deterministic across platforms.
+
+pub mod bench;
+pub mod bytes;
+pub mod hash;
+pub mod json;
+pub mod rng;
+
+pub use bytes::ByteSize;
+pub use hash::xxhash64;
+pub use rng::Rng;

@@ -1,0 +1,321 @@
+//! Leader↔node wire protocol: length-prefixed frames carrying a compact
+//! binary encoding of coordination messages. Used by the live cluster's
+//! channels and the portal's job-control plane; the same codec is
+//! benchmarked in `hotpath` (it is on the per-task path).
+//!
+//! Frame: len u32 | kind u8 | body. Strings are varint-length-prefixed
+//! UTF-8; integers are LEB128 varints (task ranges and byte counts are
+//! usually small).
+
+use crate::brick::codec::{get_varint, put_varint};
+use crate::brick::BrickId;
+use crate::scheduler::Task;
+
+/// Coordination messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// leader -> node: run this task (RSL text travels alongside for
+    /// fidelity with the paper's GRAM submission)
+    SubmitTask { job: u64, task: Task, filter: String, rsl: String },
+    /// node -> leader: task done
+    TaskDone {
+        job: u64,
+        brick: BrickId,
+        range: (usize, usize),
+        events_in: u64,
+        events_selected: u64,
+        result_bytes: u64,
+        /// merged feature histogram payload (F * bins f32, LE)
+        histogram: Vec<u8>,
+    },
+    /// node -> leader: task failed
+    TaskFailed { job: u64, brick: BrickId, range: (usize, usize), error: String },
+    /// node -> leader: liveness beacon with free slots
+    Heartbeat { node: String, free_slots: u32 },
+    /// leader -> node: orderly shutdown
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire error: {}", self.0)
+    }
+}
+impl std::error::Error for WireError {}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_varint(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> R<'a> {
+    fn varint(&mut self) -> Result<u64, WireError> {
+        let (v, used) = get_varint(&self.b[self.i..])
+            .ok_or_else(|| WireError("truncated varint".into()))?;
+        self.i += used;
+        Ok(v)
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let len = self.varint()? as usize;
+        if self.i + len > self.b.len() {
+            return Err(WireError("truncated string".into()));
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + len])
+            .map_err(|_| WireError("bad utf-8".into()))?
+            .to_string();
+        self.i += len;
+        Ok(s)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        let len = self.varint()? as usize;
+        if self.i + len > self.b.len() {
+            return Err(WireError("truncated bytes".into()));
+        }
+        let v = self.b[self.i..self.i + len].to_vec();
+        self.i += len;
+        Ok(v)
+    }
+
+    fn brick(&mut self) -> Result<BrickId, WireError> {
+        Ok(BrickId::new(self.varint()? as u32, self.varint()? as u32))
+    }
+}
+
+fn put_brick(out: &mut Vec<u8>, b: BrickId) {
+    put_varint(out, b.dataset as u64);
+    put_varint(out, b.seq as u64);
+}
+
+impl Message {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Message::SubmitTask { .. } => 1,
+            Message::TaskDone { .. } => 2,
+            Message::TaskFailed { .. } => 3,
+            Message::Heartbeat { .. } => 4,
+            Message::Shutdown => 5,
+        }
+    }
+
+    /// Encode into a framed buffer (len | kind | body).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Message::SubmitTask { job, task, filter, rsl } => {
+                put_varint(&mut body, *job);
+                put_brick(&mut body, task.brick);
+                put_varint(&mut body, task.range.0 as u64);
+                put_varint(&mut body, task.range.1 as u64);
+                match &task.source {
+                    Some(s) => {
+                        body.push(1);
+                        put_str(&mut body, s);
+                    }
+                    None => body.push(0),
+                }
+                put_str(&mut body, filter);
+                put_str(&mut body, rsl);
+            }
+            Message::TaskDone {
+                job,
+                brick,
+                range,
+                events_in,
+                events_selected,
+                result_bytes,
+                histogram,
+            } => {
+                put_varint(&mut body, *job);
+                put_brick(&mut body, *brick);
+                put_varint(&mut body, range.0 as u64);
+                put_varint(&mut body, range.1 as u64);
+                put_varint(&mut body, *events_in);
+                put_varint(&mut body, *events_selected);
+                put_varint(&mut body, *result_bytes);
+                put_bytes(&mut body, histogram);
+            }
+            Message::TaskFailed { job, brick, range, error } => {
+                put_varint(&mut body, *job);
+                put_brick(&mut body, *brick);
+                put_varint(&mut body, range.0 as u64);
+                put_varint(&mut body, range.1 as u64);
+                put_str(&mut body, error);
+            }
+            Message::Heartbeat { node, free_slots } => {
+                put_str(&mut body, node);
+                put_varint(&mut body, *free_slots as u64);
+            }
+            Message::Shutdown => {}
+        }
+        let mut out = Vec::with_capacity(body.len() + 5);
+        out.extend_from_slice(&((body.len() + 1) as u32).to_le_bytes());
+        out.push(self.kind());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one frame; returns (message, bytes consumed).
+    pub fn decode(buf: &[u8]) -> Result<(Message, usize), WireError> {
+        if buf.len() < 4 {
+            return Err(WireError("short frame header".into()));
+        }
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if buf.len() < 4 + len || len == 0 {
+            return Err(WireError("short frame".into()));
+        }
+        let kind = buf[4];
+        let mut r = R { b: &buf[5..4 + len], i: 0 };
+        let msg = match kind {
+            1 => {
+                let job = r.varint()?;
+                let brick = r.brick()?;
+                let range = (r.varint()? as usize, r.varint()? as usize);
+                let source = match r.b.get(r.i) {
+                    Some(1) => {
+                        r.i += 1;
+                        Some(r.str()?)
+                    }
+                    Some(0) => {
+                        r.i += 1;
+                        None
+                    }
+                    _ => return Err(WireError("bad source flag".into())),
+                };
+                let filter = r.str()?;
+                let rsl = r.str()?;
+                Message::SubmitTask {
+                    job,
+                    task: Task { brick, range, source },
+                    filter,
+                    rsl,
+                }
+            }
+            2 => Message::TaskDone {
+                job: r.varint()?,
+                brick: r.brick()?,
+                range: (r.varint()? as usize, r.varint()? as usize),
+                events_in: r.varint()?,
+                events_selected: r.varint()?,
+                result_bytes: r.varint()?,
+                histogram: r.bytes()?,
+            },
+            3 => Message::TaskFailed {
+                job: r.varint()?,
+                brick: r.brick()?,
+                range: (r.varint()? as usize, r.varint()? as usize),
+                error: r.str()?,
+            },
+            4 => Message::Heartbeat {
+                node: r.str()?,
+                free_slots: r.varint()? as u32,
+            },
+            5 => Message::Shutdown,
+            k => return Err(WireError(format!("unknown kind {k}"))),
+        };
+        if r.i != r.b.len() {
+            return Err(WireError("trailing bytes in frame".into()));
+        }
+        Ok((msg, 4 + len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let enc = m.encode();
+        let (dec, used) = Message::decode(&enc).unwrap();
+        assert_eq!(dec, m);
+        assert_eq!(used, enc.len());
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        roundtrip(Message::SubmitTask {
+            job: 42,
+            task: Task {
+                brick: BrickId::new(1, 3),
+                range: (100, 350),
+                source: Some("gandalf".into()),
+            },
+            filter: "max_pt > 20".into(),
+            rsl: "& (executable = /opt/geps/bin/event_filter)".into(),
+        });
+        roundtrip(Message::SubmitTask {
+            job: 0,
+            task: Task {
+                brick: BrickId::new(0, 0),
+                range: (0, 0),
+                source: None,
+            },
+            filter: String::new(),
+            rsl: String::new(),
+        });
+        roundtrip(Message::TaskDone {
+            job: 7,
+            brick: BrickId::new(2, 9),
+            range: (0, 512),
+            events_in: 512,
+            events_selected: 48,
+            result_bytes: 4800,
+            histogram: vec![1, 2, 3, 255],
+        });
+        roundtrip(Message::TaskFailed {
+            job: 9,
+            brick: BrickId::new(1, 1),
+            range: (5, 10),
+            error: "node exploded".into(),
+        });
+        roundtrip(Message::Heartbeat { node: "hobbit".into(), free_slots: 2 });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[1, 0, 0, 0]).is_err()); // short body
+        let mut enc = Message::Shutdown.encode();
+        enc[4] = 99; // unknown kind
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_trailing_bytes() {
+        let mut enc = Message::Heartbeat { node: "x".into(), free_slots: 1 }
+            .encode();
+        // grow the frame length and add junk inside the frame
+        let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) + 1;
+        enc[..4].copy_from_slice(&len.to_le_bytes());
+        enc.push(0xAB);
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn frames_concatenate() {
+        let a = Message::Heartbeat { node: "a".into(), free_slots: 1 }.encode();
+        let b = Message::Shutdown.encode();
+        let mut buf = a.clone();
+        buf.extend_from_slice(&b);
+        let (m1, used1) = Message::decode(&buf).unwrap();
+        let (m2, used2) = Message::decode(&buf[used1..]).unwrap();
+        assert!(matches!(m1, Message::Heartbeat { .. }));
+        assert_eq!(m2, Message::Shutdown);
+        assert_eq!(used1 + used2, buf.len());
+    }
+}

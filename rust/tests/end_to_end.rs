@@ -1,0 +1,366 @@
+//! End-to-end tests: the full live cluster (threads, channels, GASS byte
+//! movement, PJRT compute, JSE scheduling, merge) on real workloads.
+//! Requires `make artifacts`.
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use std::time::Duration;
+
+fn base_config() -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.n_events = 600;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0; // fast virtual network for tests
+    cfg
+}
+
+fn wait_done(cluster: &ClusterHandle, job: u64) -> JobStatus {
+    cluster
+        .wait(job, Duration::from_secs(180))
+        .expect("job should reach a terminal state")
+}
+
+#[test]
+fn locality_job_processes_everything_once() {
+    let cluster = ClusterHandle::start(
+        base_config(),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let job = cluster.submit("n_tracks >= 0", "locality");
+    assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    let j = cat.jobs.get(job).unwrap();
+    assert_eq!(j.events_processed, 600);
+    // trivially-true filter selects every event exactly once
+    assert_eq!(j.events_selected, 600);
+    // every brick produced exactly one result row
+    assert_eq!(cat.job_results(job).len(), 6);
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn all_policies_complete_and_agree_on_selection() {
+    let filter = "max_pair_mass > 80 && max_pair_mass < 100";
+    let mut selected = Vec::new();
+    for policy in ["locality", "central", "proof", "gfarm", "balanced"] {
+        let cluster = ClusterHandle::start(
+            base_config(),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap();
+        let job = cluster.submit(filter, policy);
+        assert_eq!(wait_done(&cluster, job), JobStatus::Done, "{policy}");
+        let cat = cluster.catalog.lock().unwrap();
+        let j = cat.jobs.get(job).unwrap();
+        assert_eq!(j.events_processed, 600, "{policy}");
+        selected.push(j.events_selected);
+        drop(cat);
+        cluster.shutdown();
+    }
+    // physics does not depend on scheduling policy
+    assert!(
+        selected.windows(2).all(|w| w[0] == w[1]),
+        "selection differs across policies: {selected:?}"
+    );
+    assert!(selected[0] > 0, "the Z window should select something");
+}
+
+#[test]
+fn node_death_with_replication_completes() {
+    let mut cfg = base_config();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 2;
+    cfg.n_events = 1000;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 500.0;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let job = cluster.submit("n_tracks >= 1", "locality");
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(cluster.kill_node("node2"));
+    assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    let j = cat.jobs.get(job).unwrap();
+    assert_eq!(j.events_processed, 1000, "failover must lose nothing");
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn bad_filter_is_rejected_as_failed_job() {
+    let cluster = ClusterHandle::start(
+        base_config(),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let job = cluster.submit("met >>> oops", "locality");
+    assert_eq!(wait_done(&cluster, job), JobStatus::Failed);
+    cluster.shutdown();
+}
+
+#[test]
+fn sequential_jobs_share_the_cluster() {
+    let cluster = ClusterHandle::start(
+        base_config(),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let a = cluster.submit("met > 5", "locality");
+    let b = cluster.submit("met <= 5", "locality");
+    assert_eq!(wait_done(&cluster, a), JobStatus::Done);
+    assert_eq!(wait_done(&cluster, b), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    let sa = cat.jobs.get(a).unwrap().events_selected;
+    let sb = cat.jobs.get(b).unwrap().events_selected;
+    // complementary filters partition the dataset
+    assert_eq!(sa + sb, 600, "met>5 ({sa}) + met<=5 ({sb})");
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn gris_reflects_cluster_state() {
+    let cluster = ClusterHandle::start(
+        base_config(),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let nodes = cluster
+        .gris_search("o=geps", "(objectclass=GridComputeResource)")
+        .unwrap();
+    assert_eq!(nodes.len(), 2); // gandalf + hobbit
+    let bricks = cluster
+        .gris_search("o=geps", "(objectclass=GridBrick)")
+        .unwrap();
+    assert_eq!(bricks.len(), 6); // 600 events / 100 per brick, RF=1
+    // the paper's query: processors + bandwidth
+    let fast = cluster
+        .gris_search("o=geps", "(&(cpus>=1)(mbps>=100)(status=up))")
+        .unwrap();
+    assert_eq!(fast.len(), 2);
+    cluster.shutdown();
+}
+
+#[test]
+fn histograms_merge_to_selected_totals() {
+    let cluster = ClusterHandle::start(
+        base_config(),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let job = cluster.submit("max_pt > 10", "locality");
+    assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+    let selected = cluster
+        .catalog
+        .lock()
+        .unwrap()
+        .jobs
+        .get(job)
+        .unwrap()
+        .events_selected;
+    let hist = cluster.histogram(job).expect("histogram present");
+    let bins = hist.len() / geps::events::NUM_FEATURES;
+    for f in 0..geps::events::NUM_FEATURES {
+        let total: f32 = hist[f * bins..(f + 1) * bins].iter().sum();
+        assert!(
+            (total - selected as f32).abs() < 1e-2,
+            "feature {f}: {total} vs {selected}"
+        );
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn replication_recovers_after_node_death() {
+    // kill a node during job 1; the recovery pass must re-replicate its
+    // bricks so job 2 still sees RF=2 and completes fully even though
+    // only 2 of 3 nodes remain.
+    let mut cfg = base_config();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 2;
+    cfg.n_events = 900;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 500.0;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+
+    // kill node1 BEFORE submitting: the JSE seeds its liveness monitor
+    // with all registered nodes, so the silent node is declared dead
+    // mid-job deterministically and its work fails over.
+    cluster.kill_node("node1");
+    let job1 = cluster.submit("n_tracks >= 1", "locality");
+    assert_eq!(wait_done(&cluster, job1), JobStatus::Done);
+    assert_eq!(
+        cluster
+            .catalog
+            .lock()
+            .unwrap()
+            .jobs
+            .get(job1)
+            .unwrap()
+            .events_processed,
+        900
+    );
+
+    // recovery runs in the broker right after the job; poll for the
+    // restored replication factor
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    'outer: loop {
+        {
+            let cat = cluster.catalog.lock().unwrap();
+            let all_restored = cat.bricks.iter().all(|(_, b)| {
+                b.holders.iter().filter(|h| *h != "node1").count() >= 2
+            });
+            if all_restored {
+                break 'outer;
+            }
+            if std::time::Instant::now() > deadline {
+                let bad: Vec<String> = cat
+                    .bricks
+                    .iter()
+                    .filter(|(_, b)| {
+                        b.holders.iter().filter(|h| *h != "node1").count() < 2
+                    })
+                    .map(|(_, b)| format!("{}:{:?}", b.brick, b.holders))
+                    .collect();
+                panic!("bricks not re-replicated: {bad:?}");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // and the restored replicas are real bytes on the new holders' disks
+    let job2 = cluster.submit("met >= 0", "locality");
+    assert_eq!(wait_done(&cluster, job2), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    assert_eq!(cat.jobs.get(job2).unwrap().events_processed, 900);
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn corrupted_replica_fails_over_to_healthy_copy() {
+    // flip bits in one replica of one brick on disk: the executor's
+    // checksum verification must reject it (TaskFailed, not wrong data)
+    // and the scheduler must retry on the surviving replica.
+    let mut cfg = base_config();
+    cfg.replication = 2;
+    cfg.n_events = 400;
+    cfg.events_per_brick = 100;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+
+    // corrupt brick d1.b0 on its primary holder
+    let (primary, path) = {
+        let cat = cluster.catalog.lock().unwrap();
+        let b = cat
+            .bricks
+            .iter()
+            .map(|(_, b)| b.clone())
+            .next()
+            .unwrap();
+        (
+            b.holders[0].clone(),
+            format!("/bricks/{}.brick", b.brick),
+        )
+    };
+    let store = cluster.gass().store(&primary).unwrap();
+    let mut bytes = store.get(&path).unwrap().as_ref().clone();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    store.put(&path, bytes);
+
+    let job = cluster.submit("n_tracks >= 0", "locality");
+    assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    let j = cat.jobs.get(job).unwrap();
+    // all 400 events processed — the corrupt copy was never used as data
+    assert_eq!(j.events_processed, 400);
+    assert_eq!(j.events_selected, 400);
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn gris_tcp_service_end_to_end() {
+    // the paper's grid-info path: query node resources over the GRIS
+    // network protocol while the cluster runs
+    let cluster = ClusterHandle::start(
+        base_config(),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let dir = cluster.gris.clone();
+    std::thread::spawn(move || geps::gris::gris_serve(listener, dir));
+
+    let hits = geps::gris::gris_search_tcp(
+        &addr,
+        "o=geps",
+        "(&(objectclass=GridComputeResource)(mbps>=100))",
+    )
+    .unwrap();
+    assert_eq!(hits.len(), 2);
+    let names: Vec<&str> =
+        hits.iter().map(|(_, a)| a["nn"].as_str()).collect();
+    assert!(names.contains(&"gandalf") && names.contains(&"hobbit"));
+    cluster.shutdown();
+}
+
+#[test]
+fn gris_marks_dead_nodes_down() {
+    let mut cfg = base_config();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 2;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    cluster.kill_node("node1");
+    let job = cluster.submit("n_tracks >= 0", "locality");
+    assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+    // poll: the broker updates GRIS right after the job outcome
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let down = cluster
+            .gris_search("o=geps", "(&(nn=node1)(status=down))")
+            .unwrap();
+        if down.len() == 1 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "GRIS never updated");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // and the paper's availability query now excludes it
+    let avail = cluster
+        .gris_search("o=geps", "(&(objectclass=GridComputeResource)(status=up))")
+        .unwrap();
+    assert_eq!(avail.len(), 2);
+    cluster.shutdown();
+}

@@ -1,0 +1,166 @@
+//! Portal tests: the paper's §5 user journey over real HTTP — main page,
+//! node information, job submission, job status, histograms, metrics.
+//! Requires `make artifacts`.
+
+use geps::cluster::ClusterHandle;
+use geps::config::ClusterConfig;
+use geps::portal::{self, http};
+use geps::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn start() -> (Arc<ClusterHandle>, String) {
+    let mut cfg = ClusterConfig::default();
+    cfg.n_events = 300;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0;
+    let cluster = Arc::new(
+        ClusterHandle::start(cfg, geps::runtime::default_artifacts_dir())
+            .unwrap(),
+    );
+    let (listener, addr) = portal::bind_portal("127.0.0.1:0").unwrap();
+    let c2 = cluster.clone();
+    std::thread::spawn(move || portal::serve(c2, listener));
+    (cluster, addr)
+}
+
+fn get_json(addr: &str, path: &str) -> (u16, Json) {
+    let (status, body) = http::request(addr, "GET", path, None).unwrap();
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    (status, j)
+}
+
+#[test]
+fn full_user_journey() {
+    let (cluster, addr) = start();
+
+    // Fig 3: the main page
+    let (status, body) = http::request(&addr, "GET", "/", None).unwrap();
+    assert_eq!(status, 200);
+    let html = String::from_utf8(body).unwrap();
+    assert!(html.contains("GEPS"));
+    assert!(html.contains("/submit"));
+
+    // Fig 3/5: node information through LDAP filters
+    let (status, nodes) = get_json(
+        &addr,
+        "/nodes?filter=%28objectclass%3DGridComputeResource%29",
+    );
+    assert_eq!(status, 200);
+    assert_eq!(nodes.as_arr().unwrap().len(), 2);
+
+    // Fig 4: submit a job
+    let body = Json::obj()
+        .set("filter", "max_pair_mass > 80 && max_pair_mass < 100")
+        .set("policy", "locality")
+        .to_string();
+    let (status, resp) =
+        http::request(&addr, "POST", "/submit", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&resp));
+    let job = Json::parse(std::str::from_utf8(&resp).unwrap())
+        .unwrap()
+        .get("job")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+
+    // Fig 6: job status until DONE
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, j) = get_json(&addr, &format!("/jobs/{job}"));
+        assert_eq!(status, 200);
+        let s = j.get("status").unwrap().as_str().unwrap().to_string();
+        if s == "DONE" {
+            assert_eq!(j.get("events_processed").unwrap().as_u64(), Some(300));
+            assert!(j.get("events_selected").unwrap().as_u64().unwrap() > 0);
+            break;
+        }
+        assert_ne!(s, "FAILED");
+        assert!(std::time::Instant::now() < deadline, "portal job timeout");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // job list contains it
+    let (_, jobs) = get_json(&addr, "/jobs");
+    assert_eq!(jobs.as_arr().unwrap().len(), 1);
+
+    // histogram endpoint
+    let (status, hist) = get_json(&addr, &format!("/histogram/{job}"));
+    assert_eq!(status, 200);
+    assert!(hist.get("max_pair_mass").unwrap().as_arr().unwrap().len() > 0);
+
+    // metrics
+    let (status, body) =
+        http::request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("jse.jobs_done"), "{text}");
+
+    Arc::try_unwrap(cluster).ok().map(|c| c.shutdown());
+}
+
+#[test]
+fn error_handling() {
+    let (cluster, addr) = start();
+
+    // unknown route
+    let (status, _) = http::request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+
+    // bad method
+    let (status, _) =
+        http::request(&addr, "DELETE", "/jobs", None).unwrap();
+    assert_eq!(status, 405);
+
+    // bad filter expression rejected at submit time
+    let body = Json::obj().set("filter", "met >>> 3").to_string();
+    let (status, resp) =
+        http::request(&addr, "POST", "/submit", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&resp));
+
+    // unknown policy rejected
+    let body = Json::obj()
+        .set("filter", "met > 3")
+        .set("policy", "quantum")
+        .to_string();
+    let (status, _) =
+        http::request(&addr, "POST", "/submit", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 400);
+
+    // bad LDAP filter
+    let (status, _) =
+        http::request(&addr, "GET", "/nodes?filter=%28broken", None).unwrap();
+    assert_eq!(status, 400);
+
+    // nonexistent job
+    let (status, _) =
+        http::request(&addr, "GET", "/jobs/999", None).unwrap();
+    assert_eq!(status, 404);
+
+    // malformed submit body
+    let (status, _) =
+        http::request(&addr, "POST", "/submit", Some(b"not json")).unwrap();
+    assert_eq!(status, 400);
+
+    Arc::try_unwrap(cluster).ok().map(|c| c.shutdown());
+}
+
+#[test]
+fn bricks_and_kill_endpoints() {
+    let (cluster, addr) = start();
+    let (status, bricks) = get_json(&addr, "/bricks");
+    assert_eq!(status, 200);
+    assert_eq!(bricks.as_arr().unwrap().len(), 3); // 300 events / 100
+    // kill an unknown node
+    let (status, _) =
+        http::request(&addr, "POST", "/kill/mordor", None).unwrap();
+    assert_eq!(status, 404);
+    // kill a real one
+    let (status, body) =
+        http::request(&addr, "POST", "/kill/gandalf", None).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    Arc::try_unwrap(cluster).ok().map(|c| c.shutdown());
+}
