@@ -6,8 +6,9 @@
 //!
 //! This is the "framework a team would deploy" check: the sequential
 //! 2003-style broker serializes jobs, so p99 latency grows linearly
-//! with queue depth — measured here, with the §7 improvements left as
-//! the documented path forward.
+//! with queue depth — measured here by pinning `max_concurrent_jobs`
+//! to 1. The concurrent event-loop JSE that lifts this is measured by
+//! the companion `ext_multijob` bench.
 
 use geps::cluster::ClusterHandle;
 use geps::config::ClusterConfig;
@@ -20,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     cfg.events_per_brick = 128;
     cfg.replication = 2; // survive even a (jitter-induced) node loss
     cfg.time_scale = 5000.0;
+    cfg.max_concurrent_jobs = 1; // the 2003 sequential broker, measured
     let cluster =
         ClusterHandle::start(cfg, geps::runtime::default_artifacts_dir())?;
 

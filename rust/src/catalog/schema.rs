@@ -19,6 +19,8 @@ pub enum JobStatus {
     Merging,
     Done,
     Failed,
+    /// terminated on user request before completing (portal cancel)
+    Cancelled,
 }
 
 impl JobStatus {
@@ -30,6 +32,7 @@ impl JobStatus {
             JobStatus::Merging => "MERGING",
             JobStatus::Done => "DONE",
             JobStatus::Failed => "FAILED",
+            JobStatus::Cancelled => "CANCELLED",
         }
     }
 
@@ -41,12 +44,16 @@ impl JobStatus {
             "MERGING" => JobStatus::Merging,
             "DONE" => JobStatus::Done,
             "FAILED" => JobStatus::Failed,
+            "CANCELLED" => JobStatus::Cancelled,
             _ => return None,
         })
     }
 
     pub fn is_terminal(self) -> bool {
-        matches!(self, JobStatus::Done | JobStatus::Failed)
+        matches!(
+            self,
+            JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled
+        )
     }
 }
 
@@ -532,10 +539,12 @@ mod tests {
             JobStatus::Merging,
             JobStatus::Done,
             JobStatus::Failed,
+            JobStatus::Cancelled,
         ] {
             assert_eq!(JobStatus::by_name(s.name()), Some(s));
         }
         assert!(JobStatus::Done.is_terminal());
+        assert!(JobStatus::Cancelled.is_terminal());
         assert!(!JobStatus::Running.is_terminal());
     }
 }

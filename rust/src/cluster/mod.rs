@@ -8,8 +8,11 @@
 //!    leader so the `central` baseline can stage);
 //! 2. populate the metadata catalogue (bricks, nodes);
 //! 3. spawn one engine-pool worker per node + the node actor threads;
-//! 4. spawn the JSE broker thread, which polls the catalogue and runs
-//!    discovered jobs;
+//! 4. spawn the JSE broker thread — the *admission path*: it polls the
+//!    catalogue for new jobs, queues them into the JSE's concurrent
+//!    event loop (up to `max_concurrent_jobs` in flight at once,
+//!    sharing node slots), relays portal cancellations, and applies
+//!    the per-outcome follow-ups (GRIS liveness, re-replication);
 //! 5. publish every node's GRIS entries.
 //!
 //! The [`ClusterHandle`] is the programmatic API the portal/examples
@@ -46,6 +49,8 @@ pub struct ClusterHandle {
     histograms: Arc<Mutex<BTreeMap<u64, Vec<f32>>>>,
     broker_stop: Arc<AtomicBool>,
     broker_join: Option<std::thread::JoinHandle<()>>,
+    /// portal -> broker control plane (job cancellations)
+    ctl_tx: Sender<Message>,
     pool: EnginePool,
 }
 
@@ -162,36 +167,79 @@ impl ClusterHandle {
         let jse_cfg = JseConfig {
             time_scale: config.time_scale,
             streams: config.streams,
+            max_concurrent_jobs: config.max_concurrent_jobs.max(1),
             ..Default::default()
         };
         let gass2 = gass.clone();
         let gris2 = gris.clone();
         let replication = config.replication;
-        let poll = Duration::from_secs_f64(2.0 / config.time_scale.max(1e-9));
+        let (ctl_tx, ctl_rx) = std::sync::mpsc::channel::<Message>();
         let broker_join = std::thread::Builder::new()
             .name("geps-broker".into())
             .spawn(move || {
                 let mut jse = Jse::new(jse_cfg, node_txs, out_rx, cat2.clone());
+                jse.set_metrics(met2.clone());
                 let mut cursor = 0u64;
+                // submission wall-clock per job (queue + run latency)
+                let mut started: BTreeMap<u64, Instant> = BTreeMap::new();
+                // cancellations seen before their job was discovered
+                let mut pending_cancels: std::collections::BTreeSet<u64> =
+                    std::collections::BTreeSet::new();
                 while !stop.load(Ordering::SeqCst) {
+                    // admission path: discover new job tuples and queue
+                    // them into the concurrent execution core
                     let (next, jobs) =
                         cat2.lock().unwrap().poll_new_jobs(cursor);
                     cursor = next;
                     for job in jobs {
                         met2.counter("jse.jobs_discovered").inc();
-                        let t0 = Instant::now();
-                        let outcome = jse.run_job(job);
-                        met2.histogram("jse.job_wall_ns")
-                            .record(t0.elapsed().as_nanos() as u64);
+                        started.insert(job, Instant::now());
+                        jse.enqueue(job);
+                    }
+                    // control plane: portal cancellations. A cancel can
+                    // outrun discovery, so unmatched ones are retried
+                    // until the job turns up or reaches a terminal state.
+                    while let Ok(m) = ctl_rx.try_recv() {
+                        if let Message::JobCancel { job } = m {
+                            pending_cancels.insert(job);
+                        }
+                    }
+                    let mut still_pending =
+                        std::collections::BTreeSet::new();
+                    for job in pending_cancels {
+                        if jse.cancel(job) {
+                            continue;
+                        }
+                        let alive = cat2
+                            .lock()
+                            .unwrap()
+                            .jobs
+                            .get(job)
+                            .map(|r| !r.status.is_terminal())
+                            .unwrap_or(false);
+                        if alive {
+                            still_pending.insert(job);
+                        }
+                    }
+                    pending_cancels = still_pending;
+                    // one event-loop iteration (blocks for at most one
+                    // tick waiting on node traffic — no extra sleep)
+                    jse.step();
+                    for outcome in jse.drain_completed() {
+                        if let Some(t0) = started.remove(&outcome.job) {
+                            met2.histogram("jse.job_wall_ns")
+                                .record(t0.elapsed().as_nanos() as u64);
+                        }
                         met2.counter(match outcome.status {
                             JobStatus::Done => "jse.jobs_done",
+                            JobStatus::Cancelled => "jse.jobs_cancelled",
                             _ => "jse.jobs_failed",
                         })
                         .inc();
                         hist2
                             .lock()
                             .unwrap()
-                            .insert(job, outcome.histogram.clone());
+                            .insert(outcome.job, outcome.histogram.clone());
                         // GRIS reflects liveness ("how many processors
                         // are available at this moment", §4.3)
                         for dead in &outcome.nodes_lost {
@@ -221,7 +269,6 @@ impl ClusterHandle {
                             );
                         }
                     }
-                    std::thread::sleep(poll);
                 }
             })
             .expect("spawn broker");
@@ -236,6 +283,7 @@ impl ClusterHandle {
             histograms,
             broker_stop,
             broker_join: Some(broker_join),
+            ctl_tx,
             pool,
         })
     }
@@ -275,6 +323,26 @@ impl ClusterHandle {
     /// Merged histogram of a finished job (F x bins, row-major).
     pub fn histogram(&self, job: u64) -> Option<Vec<f32>> {
         self.histograms.lock().unwrap().get(&job).cloned()
+    }
+
+    /// Request cancellation of a queued or running job (the portal's
+    /// `POST /cancel/<id>`). Asynchronous: the broker honours it on its
+    /// next loop iteration. Returns false for unknown or already
+    /// terminal jobs; a job that completes while the request is in
+    /// flight simply stays completed.
+    pub fn cancel(&self, job: u64) -> bool {
+        let cancellable = {
+            let cat = self.catalog.lock().unwrap();
+            cat.jobs
+                .get(job)
+                .map(|j| !j.status.is_terminal())
+                .unwrap_or(false)
+        };
+        if cancellable {
+            self.metrics.counter("portal.cancels").inc();
+            let _ = self.ctl_tx.send(Message::JobCancel { job });
+        }
+        cancellable
     }
 
     /// Kill a node (fault injection): its thread dies silently.

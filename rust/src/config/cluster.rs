@@ -10,6 +10,7 @@
 //! policy = "locality"
 //! replication = 2
 //! streams = 1
+//! max_concurrent_jobs = 4
 //!
 //! [data]
 //! dataset = 1
@@ -46,6 +47,9 @@ pub struct ClusterConfig {
     pub policy: Policy,
     pub replication: usize,
     pub streams: u32,
+    /// how many jobs the JSE runs concurrently (1 = the paper's
+    /// sequential broker; >1 shares node slots across jobs)
+    pub max_concurrent_jobs: usize,
     pub dataset: u32,
     pub n_events: usize,
     pub events_per_brick: usize,
@@ -62,6 +66,7 @@ impl Default for ClusterConfig {
             policy: Policy::Locality,
             replication: 1,
             streams: 1,
+            max_concurrent_jobs: 4,
             dataset: 1,
             n_events: 2000,
             events_per_brick: 250,
@@ -131,6 +136,17 @@ impl ClusterConfig {
                 return Err(ConfigError("streams must be in 1..=64".into()));
             }
             cfg.streams = v as u32;
+        }
+        if let Some(v) = doc
+            .get("scheduler", "max_concurrent_jobs")
+            .and_then(TomlValue::as_i64)
+        {
+            if v < 1 {
+                return Err(ConfigError(
+                    "max_concurrent_jobs must be >= 1".into(),
+                ));
+            }
+            cfg.max_concurrent_jobs = v as usize;
         }
         if let Some(v) = doc.get("data", "dataset").and_then(TomlValue::as_i64) {
             cfg.dataset = v as u32;
@@ -211,6 +227,7 @@ mod tests {
             policy = "proof"
             replication = 2
             streams = 4
+            max_concurrent_jobs = 8
             [data]
             dataset = 3
             n_events = 10000
@@ -227,6 +244,7 @@ mod tests {
         assert_eq!(cfg.policy, Policy::Proof);
         assert_eq!(cfg.replication, 2);
         assert_eq!(cfg.streams, 4);
+        assert_eq!(cfg.max_concurrent_jobs, 8);
         assert_eq!(cfg.n_events, 10000);
         assert_eq!(cfg.nodes.len(), 2);
         assert_eq!(cfg.nodes[1].slots, 2);
@@ -255,5 +273,9 @@ mod tests {
         .is_err());
         assert!(ClusterConfig::parse("[node.a]\nspeed = -1.0").is_err());
         assert!(ClusterConfig::parse("[cluster]\ntime_scale = 0").is_err());
+        assert!(ClusterConfig::parse(
+            "[scheduler]\nmax_concurrent_jobs = 0"
+        )
+        .is_err());
     }
 }

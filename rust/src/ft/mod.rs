@@ -59,6 +59,25 @@ impl HeartbeatMonitor {
         newly
     }
 
+    /// First-contact seeding: start the liveness clock for `node` only
+    /// if it is not already tracked. Job admission uses this instead of
+    /// [`HeartbeatMonitor::beat`] — a node that has gone silent must
+    /// not have its timer refreshed by every newly admitted job, or
+    /// under a steady stream of admissions it would never be declared
+    /// dead.
+    pub fn seed(&mut self, node: &str) {
+        if !self.dead.contains(node) && !self.last_seen.contains_key(node) {
+            self.last_seen.insert(node.to_string(), Instant::now());
+        }
+    }
+
+    /// Externally observed death (e.g. a closed submission channel):
+    /// mark `node` dead immediately so `check` does not re-announce it
+    /// later and stale beacons cannot resurrect it.
+    pub fn note_dead(&mut self, node: &str) {
+        self.dead.insert(node.to_string());
+    }
+
     pub fn is_dead(&self, node: &str) -> bool {
         self.dead.contains(node)
     }
@@ -174,6 +193,33 @@ mod tests {
         assert!(m.is_dead("a"));
         // no double-reporting
         assert!(m.check().is_empty());
+    }
+
+    #[test]
+    fn seed_does_not_refresh_a_silent_node() {
+        let mut m = HeartbeatMonitor::new(Duration::from_millis(30));
+        m.seed("a"); // first contact starts the clock
+        std::thread::sleep(Duration::from_millis(20));
+        m.seed("a"); // a second admission must NOT reset the timer
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(m.check(), vec!["a"], "silent node must still die");
+        // seeding a dead node does not resurrect it
+        m.seed("a");
+        assert!(m.is_dead("a"));
+    }
+
+    #[test]
+    fn note_dead_is_immediate_and_sticky() {
+        let mut m = HeartbeatMonitor::new(Duration::from_millis(30));
+        m.beat("a");
+        m.note_dead("a");
+        assert!(m.is_dead("a"));
+        // no re-announcement from the periodic check
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(m.check().is_empty());
+        // stale beacons do not resurrect it
+        m.beat("a");
+        assert!(m.is_dead("a"));
     }
 
     fn holders(

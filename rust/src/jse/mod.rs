@@ -3,16 +3,40 @@
 //! synthesizes RSL, submits tasks to grid nodes, monitors execution and
 //! node liveness, retrieves results, and merges them.
 //!
-//! One [`Jse`] instance owns the node channels; [`Jse::run_job`] drives
-//! a single job to completion (the 2003 prototype processed jobs
-//! sequentially — a faithful choice that the Ext-C bench measures).
+//! **Architecture (post-concurrency refactor).** The 2003 prototype — and
+//! our original seed — processed jobs strictly one at a time: the broker
+//! called a blocking `run_job` and a grid of N nodes idled whenever a
+//! job's tail tasks drained. The JSE is now a *concurrent multi-job
+//! execution core*, a deliberate departure from the paper's sequential
+//! prototype (in the spirit of its §7 "submit more work" future work and
+//! of DIAL/PROOF-style multiplexing masters):
+//!
+//! - one [`Jse`] owns the shared substrate: the node channels, the
+//!   `node_rx` demultiplexer, the [`HeartbeatMonitor`] and the global
+//!   per-node slot accounting;
+//! - each admitted job gets a [`runner::JobRunner`] state machine
+//!   (plan → dispatch → monitor → merge) holding its policy, context
+//!   and outcome;
+//! - [`Jse::step`] is one event-loop iteration: admit queued jobs up to
+//!   `max_concurrent_jobs`, offer idle slots to runners round-robin (one
+//!   job's tail no longer strands the cluster — its idle slots go to the
+//!   next job immediately), route `TaskDone`/`TaskFailed`/`Heartbeat`
+//!   by job id, run the liveness check (a node death fails over work in
+//!   *every* affected job), and seal finished runners;
+//! - [`Jse::run_job`] survives as the sequential compatibility mode
+//!   (`max_concurrent_jobs = 1` reproduces the 2003 behaviour that the
+//!   Ext-C bench measures).
+
+pub mod runner;
 
 use crate::catalog::{Catalog, JobStatus, ResultRow};
 use crate::ft::HeartbeatMonitor;
+use crate::metrics::Registry;
 use crate::rsl::synthesize_task_rsl;
-use crate::scheduler::{Policy, SchedCtx, Scheduler, Task};
+use crate::scheduler::{Policy, SchedCtx};
 use crate::wire::Message;
-use std::collections::BTreeMap;
+use runner::JobRunner;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -33,6 +57,31 @@ pub struct JobOutcome {
     pub error: Option<String>,
 }
 
+impl JobOutcome {
+    /// A fresh, still-running outcome for `job`.
+    pub fn pending(job: u64) -> Self {
+        JobOutcome {
+            job,
+            status: JobStatus::Running,
+            events_in: 0,
+            events_selected: 0,
+            result_bytes: 0,
+            tasks_completed: 0,
+            tasks_failed: 0,
+            nodes_lost: vec![],
+            histogram: vec![],
+            error: None,
+        }
+    }
+
+    fn failed(job: u64, error: String) -> Self {
+        let mut out = JobOutcome::pending(job);
+        out.status = JobStatus::Failed;
+        out.error = Some(error);
+        out
+    }
+}
+
 /// JSE configuration knobs.
 #[derive(Debug, Clone)]
 pub struct JseConfig {
@@ -42,6 +91,9 @@ pub struct JseConfig {
     pub heartbeat_timeout_s: f64,
     pub time_scale: f64,
     pub streams: u32,
+    /// how many jobs may hold runners at once (1 = the 2003 sequential
+    /// broker; the admission queue holds the rest)
+    pub max_concurrent_jobs: usize,
 }
 
 impl Default for JseConfig {
@@ -51,11 +103,12 @@ impl Default for JseConfig {
             heartbeat_timeout_s: 30.0,
             time_scale: 200.0,
             streams: 1,
+            max_concurrent_jobs: 1,
         }
     }
 }
 
-/// The engine.
+/// The engine: shared event loop + per-job runners.
 pub struct Jse {
     pub cfg: JseConfig,
     /// leader->node channels
@@ -64,6 +117,17 @@ pub struct Jse {
     node_rx: Receiver<Message>,
     catalog: Arc<Mutex<Catalog>>,
     monitor: HeartbeatMonitor,
+    metrics: Option<Arc<Registry>>,
+    /// admission queue: discovered but not yet running
+    queue: VecDeque<u64>,
+    /// every job ever enqueued (dedupe against broker re-polls)
+    admitted: BTreeSet<u64>,
+    /// in-flight jobs, keyed by job id (the demux table)
+    runners: BTreeMap<u64, JobRunner>,
+    /// sealed outcomes waiting for [`Jse::drain_completed`]
+    completed: Vec<JobOutcome>,
+    /// round-robin cursor for fair slot offers across jobs
+    rr: usize,
 }
 
 impl Jse {
@@ -85,11 +149,82 @@ impl Jse {
             node_rx,
             catalog,
             monitor: HeartbeatMonitor::new(timeout),
+            metrics: None,
+            queue: VecDeque::new(),
+            admitted: BTreeSet::new(),
+            runners: BTreeMap::new(),
+            completed: Vec::new(),
+            rr: 0,
         }
+    }
+
+    /// Attach a metrics registry (coordinator gauges + counters).
+    pub fn set_metrics(&mut self, metrics: Arc<Registry>) {
+        self.metrics = Some(metrics);
     }
 
     pub fn monitor(&self) -> &HeartbeatMonitor {
         &self.monitor
+    }
+
+    pub fn queued_jobs(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_jobs(&self) -> usize {
+        self.runners.len()
+    }
+
+    pub fn outstanding_tasks(&self) -> usize {
+        self.runners.values().map(|r| r.outstanding_count()).sum()
+    }
+
+    /// True when no job is queued or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.runners.is_empty()
+    }
+
+    /// Admit a discovered job into the queue (idempotent per job id).
+    pub fn enqueue(&mut self, job_id: u64) {
+        if self.admitted.insert(job_id) {
+            self.queue.push_back(job_id);
+        }
+    }
+
+    /// Cancel a queued or in-flight job. Tasks already on nodes run to
+    /// completion there, but their replies are dropped as stale; every
+    /// node is told via [`Message::JobCancel`]. Returns false if the
+    /// job is unknown or already terminal.
+    pub fn cancel(&mut self, job_id: u64) -> bool {
+        let mut out = if let Some(pos) =
+            self.queue.iter().position(|j| *j == job_id)
+        {
+            let _ = self.queue.remove(pos);
+            let mut out = JobOutcome::pending(job_id);
+            out.error = Some("cancelled before admission".into());
+            out
+        } else if let Some(runner) = self.runners.remove(&job_id) {
+            for tx in self.nodes.values() {
+                let _ = tx.send(Message::JobCancel { job: job_id });
+            }
+            let mut out = runner.out;
+            out.error = Some("cancelled".into());
+            out
+        } else {
+            return false;
+        };
+        out.status = JobStatus::Cancelled;
+        self.catalog.lock().unwrap().update_job(job_id, |j| {
+            j.status = JobStatus::Cancelled;
+            j.error = Some("cancelled".into());
+        });
+        self.completed.push(out);
+        true
+    }
+
+    /// Take the outcomes of every job sealed since the last drain.
+    pub fn drain_completed(&mut self) -> Vec<JobOutcome> {
+        std::mem::take(&mut self.completed)
     }
 
     /// Build the scheduling context for a dataset from the catalogue.
@@ -122,279 +257,393 @@ impl Jse {
         }
     }
 
-    /// Drive one job to a terminal state. Returns its outcome and
-    /// updates the catalogue throughout.
-    pub fn run_job(&mut self, job_id: u64) -> JobOutcome {
-        let (dataset, filter_expr, policy_name) = {
-            let cat = self.catalog.lock().unwrap();
-            let row = cat.jobs.get(job_id).expect("job exists");
-            (row.dataset, row.filter_expr.clone(), row.policy.clone())
-        };
-        let policy = Policy::by_name(&policy_name).unwrap_or(Policy::Locality);
-
-        // filter must compile before anything is submitted
-        if let Err(e) = crate::filterexpr::compile(&filter_expr) {
-            let msg = format!("filter rejected: {e}");
-            self.catalog.lock().unwrap().update_job(job_id, |j| {
-                j.status = JobStatus::Failed;
-                j.error = Some(msg.clone());
-            });
-            return JobOutcome {
-                job: job_id,
-                status: JobStatus::Failed,
-                events_in: 0,
-                events_selected: 0,
-                result_bytes: 0,
-                tasks_completed: 0,
-                tasks_failed: 0,
-                nodes_lost: vec![],
-                histogram: vec![],
-                error: Some(msg),
+    /// Move jobs from the queue into runners while concurrency allows.
+    fn admit(&mut self) {
+        let max = self.cfg.max_concurrent_jobs.max(1);
+        while self.runners.len() < max {
+            let Some(job_id) = self.queue.pop_front() else { break };
+            let row = {
+                let cat = self.catalog.lock().unwrap();
+                cat.jobs.get(job_id).map(|r| {
+                    (r.dataset, r.filter_expr.clone(), r.policy.clone())
+                })
             };
+            let Some((dataset, filter_expr, policy_name)) = row else {
+                self.completed.push(JobOutcome::failed(
+                    job_id,
+                    "no such job in the catalogue".into(),
+                ));
+                continue;
+            };
+            let policy =
+                Policy::by_name(&policy_name).unwrap_or(Policy::Locality);
+
+            // the filter must compile before anything is submitted
+            if let Err(e) = crate::filterexpr::compile(&filter_expr) {
+                let msg = format!("filter rejected: {e}");
+                self.catalog.lock().unwrap().update_job(job_id, |j| {
+                    j.status = JobStatus::Failed;
+                    j.error = Some(msg.clone());
+                });
+                self.completed.push(JobOutcome::failed(job_id, msg));
+                continue;
+            }
+
+            self.catalog
+                .lock()
+                .unwrap()
+                .update_job(job_id, |j| j.status = JobStatus::Staging);
+            let ctx = self.build_ctx(dataset);
+            // Seed the liveness monitor with every participating node: a
+            // node that never sends a single heartbeat must still be
+            // declared dead (otherwise a silent node would hang the job).
+            // seed(), not beat(): a steady stream of admissions must not
+            // keep resetting a silent node's timer.
+            for n in ctx.nodes.iter().filter(|n| n.up) {
+                self.monitor.seed(&n.name);
+            }
+            self.catalog
+                .lock()
+                .unwrap()
+                .update_job(job_id, |j| j.status = JobStatus::Running);
+            if let Some(m) = &self.metrics {
+                m.counter(&format!("jse.jobs_policy.{}", policy.name()))
+                    .inc();
+            }
+            self.runners.insert(
+                job_id,
+                JobRunner::new(job_id, filter_expr, policy, ctx),
+            );
         }
+    }
 
-        self.catalog
-            .lock()
-            .unwrap()
-            .update_job(job_id, |j| j.status = JobStatus::Staging);
-
-        let mut ctx = self.build_ctx(dataset);
-        let mut sched: Box<dyn Scheduler> = policy.build(&ctx);
-        let mut outstanding: BTreeMap<String, Vec<Task>> = BTreeMap::new();
-        let mut out = JobOutcome {
-            job: job_id,
-            status: JobStatus::Running,
-            events_in: 0,
-            events_selected: 0,
-            result_bytes: 0,
-            tasks_completed: 0,
-            tasks_failed: 0,
-            nodes_lost: vec![],
-            histogram: vec![],
-            error: None,
+    /// Offer every idle slot to the in-flight jobs, round-robin. Slot
+    /// capacity is shared cluster-wide: one scheduler's idle slots are
+    /// immediately offered to the next job's queue.
+    fn dispatch(&mut self) {
+        if self.runners.is_empty() {
+            return;
+        }
+        // capacity view: slots per live node from the catalogue, minus
+        // monitor-dead nodes — shared across every in-flight job
+        let caps: Vec<(String, usize)> = {
+            let cat = self.catalog.lock().unwrap();
+            let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
+            for (_, n) in cat.nodes.iter() {
+                if n.up && !self.monitor.is_dead(&n.name) {
+                    by_name.insert(n.name.clone(), n.slots);
+                }
+            }
+            by_name.into_iter().collect()
         };
-
-        self.catalog
-            .lock()
-            .unwrap()
-            .update_job(job_id, |j| j.status = JobStatus::Running);
-
-        // Seed the liveness monitor with every participating node: a node
-        // that never sends a single heartbeat must still be declared dead
-        // (otherwise a silent node would hang the job forever).
-        for n in ctx.nodes.iter().filter(|n| n.up) {
-            self.monitor.beat(&n.name);
-        }
-
-        let tick = Duration::from_secs_f64(
-            self.cfg.tick_s / self.cfg.time_scale.max(1e-9),
-        );
-
-        loop {
-            // 1. dispatch to every node with a free slot
-            let node_names: Vec<String> = ctx
-                .nodes
-                .iter()
-                .filter(|n| n.up)
-                .map(|n| n.name.clone())
-                .collect();
-            for name in node_names {
-                loop {
-                    let slots = ctx.node(&name).map(|n| n.slots).unwrap_or(1);
-                    let busy =
-                        outstanding.get(&name).map(|v| v.len()).unwrap_or(0);
-                    if busy >= slots {
-                        break;
-                    }
-                    let Some(task) = sched.next_task(&name, &ctx) else {
-                        break;
+        let mut lost_channels: BTreeSet<String> = BTreeSet::new();
+        for (name, cap) in &caps {
+            'slots: loop {
+                let busy: usize =
+                    self.runners.values().map(|r| r.busy_on(name)).sum();
+                if busy >= *cap {
+                    break;
+                }
+                let ids: Vec<u64> = self.runners.keys().copied().collect();
+                if ids.is_empty() {
+                    return;
+                }
+                let n = ids.len();
+                let mut assigned = false;
+                for k in 0..n {
+                    let id = ids[(self.rr + k) % n];
+                    let task = match self
+                        .runners
+                        .get_mut(&id)
+                        .and_then(|r| r.next_task(name))
+                    {
+                        Some(t) => t,
+                        None => continue,
                     };
+                    let filter = self
+                        .runners
+                        .get(&id)
+                        .map(|r| r.filter_expr.clone())
+                        .unwrap_or_default();
                     let rsl = synthesize_task_rsl(
-                        job_id,
+                        id,
                         &task,
-                        &filter_expr,
-                        &name,
+                        &filter,
+                        name,
                         self.cfg.streams,
                     )
                     .to_string();
                     let msg = Message::SubmitTask {
-                        job: job_id,
+                        job: id,
                         task: task.clone(),
-                        filter: filter_expr.clone(),
+                        filter,
                         rsl,
                     };
                     let sent = self
                         .nodes
-                        .get(&name)
+                        .get(name)
                         .map(|tx| tx.send(msg).is_ok())
                         .unwrap_or(false);
                     if sent {
-                        outstanding.entry(name.clone()).or_default().push(task);
-                    } else {
-                        // channel gone = node process dead: full death
-                        // path (failover + recovery), not just a retry
-                        sched.on_failure(&name, &task, &ctx);
-                        if !out.nodes_lost.contains(&name) {
-                            out.nodes_lost.push(name.clone());
-                            self.mark_node_down(&name);
-                            if let Some(n) =
-                                ctx.nodes.iter_mut().find(|n| n.name == name)
-                            {
-                                n.up = false;
-                            }
-                            for t in
-                                outstanding.remove(&name).unwrap_or_default()
-                            {
-                                out.tasks_failed += 1;
-                                sched.on_failure(&name, &t, &ctx);
-                            }
-                            sched.on_node_down(&name, &ctx);
+                        if let Some(r) = self.runners.get_mut(&id) {
+                            r.record_dispatch(name, task);
                         }
+                        if let Some(m) = &self.metrics {
+                            m.counter("jse.tasks_dispatched").inc();
+                        }
+                        self.rr = (self.rr + k + 1) % n;
+                        assigned = true;
                         break;
+                    } else {
+                        // channel gone = node process dead: run the full
+                        // death path (failover + recovery) after the
+                        // dispatch pass, for every affected job
+                        if let Some(r) = self.runners.get_mut(&id) {
+                            r.abort_dispatch(name, &task);
+                        }
+                        lost_channels.insert(name.clone());
+                        break 'slots;
                     }
                 }
-            }
-
-            if sched.is_done() {
-                break;
-            }
-
-            // 2. wait for node traffic
-            match self.node_rx.recv_timeout(tick) {
-                Ok(Message::Heartbeat { node, .. }) => {
-                    self.monitor.beat(&node);
+                if !assigned {
+                    break;
                 }
-                Ok(Message::TaskDone {
-                    job,
-                    brick,
-                    range,
-                    events_in,
-                    events_selected,
-                    result_bytes,
-                    histogram,
-                }) if job == job_id => {
-                    // find which node ran it
-                    let node = outstanding
-                        .iter()
-                        .find(|(_, v)| {
-                            v.iter().any(|t| {
-                                t.brick == brick && t.range == range
-                            })
-                        })
-                        .map(|(n, _)| n.clone());
-                    if let Some(node) = node {
-                        let task = {
-                            let v = outstanding.get_mut(&node).unwrap();
-                            let pos = v
-                                .iter()
-                                .position(|t| {
-                                    t.brick == brick && t.range == range
-                                })
-                                .unwrap();
-                            v.remove(pos)
-                        };
-                        sched.on_complete(&node, &task, 1.0);
-                        out.tasks_completed += 1;
-                        out.events_in += events_in;
-                        out.events_selected += events_selected;
-                        out.result_bytes += result_bytes;
-                        merge_histogram(&mut out.histogram, &histogram);
+            }
+        }
+        for name in lost_channels {
+            self.monitor.note_dead(&name);
+            self.node_down(&name);
+        }
+    }
+
+    /// Full node-death path, across *all* in-flight jobs.
+    fn node_down(&mut self, name: &str) {
+        self.mark_node_down(name);
+        let mut failed_over = 0usize;
+        for r in self.runners.values_mut() {
+            failed_over += r.on_node_down(name);
+        }
+        if let Some(m) = &self.metrics {
+            m.counter("jse.nodes_lost").inc();
+            m.counter("jse.tasks_failed_over").add(failed_over as u64);
+        }
+    }
+
+    /// Route one node->leader message to its job's runner.
+    fn route(&mut self, msg: Message) {
+        match msg {
+            Message::Heartbeat { node, .. } => self.monitor.beat(&node),
+            Message::TaskDone {
+                job,
+                brick,
+                range,
+                events_in,
+                events_selected,
+                result_bytes,
+                histogram,
+            } => {
+                let hit = self.runners.get_mut(&job).and_then(|r| {
+                    r.on_task_done(
+                        brick,
+                        range,
+                        events_in,
+                        events_selected,
+                        result_bytes,
+                        &histogram,
+                    )
+                });
+                match hit {
+                    Some((node, wall)) => {
                         let mut cat = self.catalog.lock().unwrap();
                         cat.record_result(ResultRow {
-                            job: job_id,
+                            job,
                             node,
                             brick,
                             events_in,
                             events_selected,
                             result_bytes,
                         });
-                        cat.update_job(job_id, |j| {
+                        cat.update_job(job, |j| {
                             j.events_processed += events_in;
                             j.events_selected += events_selected;
                         });
+                        drop(cat);
+                        if let Some(m) = &self.metrics {
+                            // dispatch-to-completion wall time. With
+                            // slots = 1 per node (the default) at most
+                            // one task is outstanding per node, so this
+                            // equals node-busy time; with slots > 1 it
+                            // also includes node-side inbox queueing.
+                            m.histogram("jse.task_busy_ns")
+                                .record(wall.as_nanos() as u64);
+                        }
                     }
-                }
-                Ok(Message::TaskFailed { job, brick, range, error })
-                    if job == job_id =>
-                {
-                    let node = outstanding
-                        .iter()
-                        .find(|(_, v)| {
-                            v.iter().any(|t| {
-                                t.brick == brick && t.range == range
-                            })
-                        })
-                        .map(|(n, _)| n.clone());
-                    if let Some(node) = node {
-                        let task = {
-                            let v = outstanding.get_mut(&node).unwrap();
-                            let pos = v
-                                .iter()
-                                .position(|t| {
-                                    t.brick == brick && t.range == range
-                                })
-                                .unwrap();
-                            v.remove(pos)
-                        };
-                        out.tasks_failed += 1;
-                        out.error = Some(error);
-                        sched.on_failure(&node, &task, &ctx);
-                    }
-                }
-                Ok(_) => {}
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    out.error = Some("all node channels closed".into());
-                    break;
+                    None => self.drop_stale("TaskDone", job),
                 }
             }
+            Message::TaskFailed { job, brick, range, error } => {
+                let hit = self
+                    .runners
+                    .get_mut(&job)
+                    .and_then(|r| r.on_task_failed(brick, range, error));
+                if hit.is_none() {
+                    self.drop_stale("TaskFailed", job);
+                }
+            }
+            // node-bound kinds never arrive on this channel
+            _ => {}
+        }
+    }
 
-            // 3. liveness check
-            for dead in self.monitor.check() {
-                out.nodes_lost.push(dead.clone());
-                self.mark_node_down(&dead);
-                if let Some(n) =
-                    ctx.nodes.iter_mut().find(|n| n.name == dead)
-                {
-                    n.up = false;
-                }
-                // in-flight work on the dead node is void
-                for t in outstanding.remove(&dead).unwrap_or_default() {
-                    out.tasks_failed += 1;
-                    sched.on_failure(&dead, &t, &ctx);
-                }
-                sched.on_node_down(&dead, &ctx);
-            }
+    /// Hardening: traffic for unknown/stale/finished jobs (or from
+    /// just-declared-dead nodes) is logged and dropped — the broker
+    /// must never crash on it.
+    fn drop_stale(&self, kind: &str, job: u64) {
+        if let Some(m) = &self.metrics {
+            m.counter("jse.stale_messages").inc();
+        }
+        eprintln!("[jse] dropping stale {kind} for job {job}");
+    }
 
-            if sched.is_done() {
-                break;
-            }
-            // 4. stall detection: nothing outstanding, nothing
-            //    dispatchable, not done -> the job cannot finish
-            let total_out: usize = outstanding.values().map(|v| v.len()).sum();
-            if total_out == 0 && ctx.nodes.iter().all(|n| !n.up) {
-                out.error =
-                    Some("no live nodes remain; job cannot finish".into());
-                break;
+    /// Seal runner `id`: pull it out, optionally stamp a stall error,
+    /// compute the terminal status and record it in the catalogue.
+    fn seal(&mut self, id: u64, stall_error: Option<&str>) {
+        let Some(mut runner) = self.runners.remove(&id) else { return };
+        if let Some(e) = stall_error {
+            if runner.out.error.is_none() {
+                runner.out.error = Some(e.to_string());
             }
         }
-
-        // merge phase + terminal status
-        let done = sched.is_done() && out.error.is_none()
-            || (sched.is_done() && out.tasks_completed > 0);
-        let status =
-            if done { JobStatus::Done } else { JobStatus::Failed };
-        self.catalog.lock().unwrap().update_job(job_id, |j| {
-            j.status = if done { JobStatus::Merging } else { status };
+        let out = runner.finish();
+        let done = out.status == JobStatus::Done;
+        self.catalog.lock().unwrap().update_job(id, |j| {
+            j.status =
+                if done { JobStatus::Merging } else { JobStatus::Failed };
         });
         if done {
             self.catalog
                 .lock()
                 .unwrap()
-                .update_job(job_id, |j| j.status = JobStatus::Done);
+                .update_job(id, |j| j.status = JobStatus::Done);
         }
-        out.status = status;
+        self.completed.push(out);
+    }
+
+    fn publish_gauges(&self) {
+        if let Some(m) = &self.metrics {
+            m.gauge("jse.jobs_queued").set(self.queue.len() as u64);
+            m.gauge("jse.jobs_in_flight").set(self.runners.len() as u64);
+            m.gauge("jse.tasks_outstanding")
+                .set(self.outstanding_tasks() as u64);
+        }
+    }
+
+    /// One event-loop iteration: admit, dispatch, wait up to one tick
+    /// for node traffic, check liveness, seal finished jobs. The broker
+    /// calls this in its service loop; [`Jse::run_until_idle`] wraps it
+    /// for synchronous callers.
+    pub fn step(&mut self) {
+        self.admit();
+        self.dispatch();
+
+        let tick = Duration::from_secs_f64(
+            self.cfg.tick_s / self.cfg.time_scale.max(1e-9),
+        );
+        match self.node_rx.recv_timeout(tick) {
+            Ok(msg) => {
+                self.route(msg);
+                // drain whatever else already queued up before the next
+                // dispatch pass — keeps slot turnaround tight
+                while let Ok(m) = self.node_rx.try_recv() {
+                    self.route(m);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // every node->leader sender is gone: nothing in flight
+                // can ever answer
+                let ids: Vec<u64> = self.runners.keys().copied().collect();
+                for id in ids {
+                    self.seal(id, Some("all node channels closed"));
+                }
+            }
+        }
+
+        // liveness check: a node death affects every in-flight job
+        for dead in self.monitor.check() {
+            self.node_down(&dead);
+        }
+
+        // seal runners that finished or can never finish
+        let ids: Vec<u64> = self.runners.keys().copied().collect();
+        for id in ids {
+            let verdict = self
+                .runners
+                .get(&id)
+                .map(|r| (r.is_done(), r.is_stalled()));
+            match verdict {
+                Some((true, _)) => self.seal(id, None),
+                Some((false, true)) => self.seal(
+                    id,
+                    Some("no live nodes remain; job cannot finish"),
+                ),
+                _ => {}
+            }
+        }
+        self.publish_gauges();
+    }
+
+    /// Drive the loop until every enqueued job is terminal; returns the
+    /// outcomes in completion order.
+    pub fn run_until_idle(&mut self) -> Vec<JobOutcome> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            self.step();
+            out.append(&mut self.completed);
+        }
+        out.append(&mut self.completed);
         out
+    }
+
+    /// Drive one job to a terminal state (the sequential 2003 mode that
+    /// `max_concurrent_jobs = 1` reproduces; kept for tests and simple
+    /// callers). Returns its outcome and updates the catalogue.
+    pub fn run_job(&mut self, job_id: u64) -> JobOutcome {
+        self.enqueue(job_id);
+        let outcomes = self.run_until_idle();
+        // outcomes for other in-flight jobs (if any) stay available
+        let mut wanted = None;
+        for o in outcomes {
+            if o.job == job_id && wanted.is_none() {
+                wanted = Some(o);
+            } else {
+                self.completed.push(o);
+            }
+        }
+        match wanted {
+            Some(o) => o,
+            None => {
+                // enqueue() is idempotent, so a repeated run_job for an
+                // already-processed id yields no fresh outcome: report
+                // the committed state from the catalogue instead of a
+                // spurious failure.
+                let cat = self.catalog.lock().unwrap();
+                match cat.jobs.get(job_id) {
+                    Some(row) => {
+                        let mut out = JobOutcome::pending(job_id);
+                        out.status = row.status;
+                        out.events_in = row.events_processed;
+                        out.events_selected = row.events_selected;
+                        out.error = row.error.clone();
+                        out
+                    }
+                    None => JobOutcome::failed(
+                        job_id,
+                        "no such job in the catalogue".into(),
+                    ),
+                }
+            }
+        }
     }
 }
 
@@ -596,6 +845,7 @@ mod tests {
             tick_s: 1.0,
             time_scale: 200.0,
             streams: 1,
+            max_concurrent_jobs: 1,
         };
         let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
         let outcome = jse.run_job(job);
@@ -606,5 +856,154 @@ mod tests {
         let _ = b_tx.send(Message::Shutdown);
         a_j.join().unwrap();
         b_j.join().unwrap();
+    }
+
+    #[test]
+    fn four_jobs_multiplex_over_shared_nodes() {
+        // the tentpole behaviour: 4 jobs with mixed policies in flight
+        // at once over the same two nodes, each merging the full
+        // dataset exactly once.
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = fake_node("a", out_tx.clone());
+        let (b_tx, b_j) = fake_node("b", out_tx.clone());
+        let mut cat = catalog_with(1, 8, &["a", "b"]);
+        let jobs: Vec<u64> = ["locality", "proof", "gfarm", "balanced"]
+            .iter()
+            .map(|p| cat.submit_job(1, "max_pt > 0", p))
+            .collect();
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> = [
+            ("a".to_string(), a_tx.clone()),
+            ("b".to_string(), b_tx.clone()),
+        ]
+        .into();
+        let cfg = JseConfig {
+            max_concurrent_jobs: 4,
+            ..Default::default()
+        };
+        let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
+        let metrics = Arc::new(Registry::new());
+        jse.set_metrics(metrics.clone());
+        for j in &jobs {
+            jse.enqueue(*j);
+        }
+        assert_eq!(jse.queued_jobs(), 4);
+        let outcomes = jse.run_until_idle();
+        assert_eq!(outcomes.len(), 4);
+        for o in &outcomes {
+            assert_eq!(o.status, JobStatus::Done, "{:?}", o.error);
+            // every job processed the whole 8x100-event dataset once
+            assert_eq!(o.events_in, 800, "job {}", o.job);
+            assert_eq!(o.histogram.len(), 8);
+        }
+        let cat = catalog.lock().unwrap();
+        for j in &jobs {
+            assert_eq!(cat.jobs.get(*j).unwrap().status, JobStatus::Done);
+        }
+        drop(cat);
+        // per-policy counters registered one job each
+        for p in ["locality", "proof", "gfarm", "balanced"] {
+            assert_eq!(
+                metrics.counter(&format!("jse.jobs_policy.{p}")).get(),
+                1
+            );
+        }
+        assert_eq!(metrics.gauge("jse.jobs_in_flight").get(), 0);
+        let _ = a_tx.send(Message::Shutdown);
+        let _ = b_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+        b_j.join().unwrap();
+    }
+
+    #[test]
+    fn stale_and_unknown_messages_are_dropped_not_fatal() {
+        // the satellite hardening: junk traffic (unknown job ids,
+        // unknown tasks, ghost-node heartbeats) must never crash the
+        // loop or corrupt a real job's accounting.
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = fake_node("a", out_tx.clone());
+        let mut cat = catalog_with(1, 2, &["a"]);
+        let job = cat.submit_job(1, "max_pt > 0", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> =
+            [("a".to_string(), a_tx.clone())].into();
+        // pre-load junk before the job even starts
+        out_tx
+            .send(Message::TaskDone {
+                job: 9999,
+                brick: BrickId::new(7, 7),
+                range: (0, 10),
+                events_in: 10,
+                events_selected: 1,
+                result_bytes: 100,
+                histogram: vec![],
+            })
+            .unwrap();
+        out_tx
+            .send(Message::TaskDone {
+                job, // real job id, but a task nobody dispatched
+                brick: BrickId::new(1, 99),
+                range: (0, 5),
+                events_in: 5,
+                events_selected: 5,
+                result_bytes: 50,
+                histogram: vec![],
+            })
+            .unwrap();
+        out_tx
+            .send(Message::TaskFailed {
+                job: 4242,
+                brick: BrickId::new(1, 0),
+                range: (0, 100),
+                error: "ghost".into(),
+            })
+            .unwrap();
+        out_tx
+            .send(Message::Heartbeat { node: "ghost".into(), free_slots: 3 })
+            .unwrap();
+        let mut jse =
+            Jse::new(JseConfig::default(), nodes, out_rx, catalog.clone());
+        let metrics = Arc::new(Registry::new());
+        jse.set_metrics(metrics.clone());
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Done, "{:?}", outcome.error);
+        // the junk changed nothing
+        assert_eq!(outcome.events_in, 200);
+        assert_eq!(outcome.tasks_completed, 2);
+        assert!(metrics.counter("jse.stale_messages").get() >= 3);
+        let _ = a_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+    }
+
+    #[test]
+    fn cancelled_queued_job_never_runs() {
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = fake_node("a", out_tx.clone());
+        let mut cat = catalog_with(1, 2, &["a"]);
+        let keep = cat.submit_job(1, "max_pt > 0", "locality");
+        let drop_id = cat.submit_job(1, "max_pt > 0", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> =
+            [("a".to_string(), a_tx.clone())].into();
+        let mut jse =
+            Jse::new(JseConfig::default(), nodes, out_rx, catalog.clone());
+        jse.enqueue(keep);
+        jse.enqueue(drop_id);
+        assert!(jse.cancel(drop_id));
+        assert!(!jse.cancel(77), "unknown job must not cancel");
+        let outcomes = jse.run_until_idle();
+        assert_eq!(outcomes.len(), 2);
+        let cancelled =
+            outcomes.iter().find(|o| o.job == drop_id).unwrap();
+        assert_eq!(cancelled.status, JobStatus::Cancelled);
+        assert_eq!(cancelled.tasks_completed, 0);
+        let done = outcomes.iter().find(|o| o.job == keep).unwrap();
+        assert_eq!(done.status, JobStatus::Done, "{:?}", done.error);
+        assert_eq!(
+            catalog.lock().unwrap().jobs.get(drop_id).unwrap().status,
+            JobStatus::Cancelled
+        );
+        let _ = a_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
     }
 }

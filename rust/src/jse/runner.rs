@@ -1,0 +1,208 @@
+//! Per-job execution state machine for the concurrent JSE event loop.
+//!
+//! A [`JobRunner`] owns everything *specific to one in-flight job*: its
+//! compiled scheduling policy, its view of the cluster ([`SchedCtx`]),
+//! its outstanding tasks and its accumulating [`JobOutcome`]. The
+//! [`super::Jse`] event loop owns everything *shared*: the node
+//! channels, the heartbeat monitor, the catalogue and the global slot
+//! accounting. The runner is a passive state machine — the loop feeds
+//! it demultiplexed wire messages and idle-slot offers, and it answers
+//! with scheduling decisions:
+//!
+//! ```text
+//! plan (policy built over the brick set)
+//!   └─ dispatch (next_task / record_dispatch per offered slot)
+//!        └─ monitor (on_task_done / on_task_failed / on_node_down)
+//!             └─ merge (finish → terminal JobOutcome)
+//! ```
+//!
+//! Every message-handling path here is total: replies for tasks the
+//! runner does not know about (a node declared dead whose answer
+//! arrived late, a duplicate, a cancelled job's stragglers) return
+//! `None` instead of panicking — the broker must never crash on stale
+//! traffic.
+
+use super::JobOutcome;
+use crate::brick::BrickId;
+use crate::catalog::JobStatus;
+use crate::scheduler::{Policy, SchedCtx, Scheduler, Task};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// One job's in-flight state inside the shared event loop.
+pub struct JobRunner {
+    pub job: u64,
+    pub filter_expr: String,
+    pub policy: Policy,
+    sched: Box<dyn Scheduler>,
+    pub ctx: SchedCtx,
+    /// node -> in-flight tasks with their dispatch timestamps
+    outstanding: BTreeMap<String, Vec<(Task, Instant)>>,
+    pub out: JobOutcome,
+}
+
+impl JobRunner {
+    pub fn new(
+        job: u64,
+        filter_expr: String,
+        policy: Policy,
+        ctx: SchedCtx,
+    ) -> Self {
+        let sched = policy.build(&ctx);
+        JobRunner {
+            job,
+            filter_expr,
+            policy,
+            sched,
+            ctx,
+            outstanding: BTreeMap::new(),
+            out: JobOutcome::pending(job),
+        }
+    }
+
+    /// Tasks currently in flight on `node` for this job (the runner's
+    /// share of the node's slot budget).
+    pub fn busy_on(&self, node: &str) -> usize {
+        self.outstanding.get(node).map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn outstanding_count(&self) -> usize {
+        self.outstanding.values().map(|v| v.len()).sum()
+    }
+
+    /// Offer an idle slot on `node` to this job's policy. The caller
+    /// must follow up with [`JobRunner::record_dispatch`] once the
+    /// submission is on the wire, or [`JobRunner::abort_dispatch`] if
+    /// the channel turned out to be gone — the pull itself already
+    /// committed the policy's queue state.
+    pub fn next_task(&mut self, node: &str) -> Option<Task> {
+        if self.ctx.node(node).map(|n| n.up) != Some(true) {
+            return None; // not a participant of this job, or down
+        }
+        self.sched.next_task(node, &self.ctx)
+    }
+
+    pub fn record_dispatch(&mut self, node: &str, task: Task) {
+        self.outstanding
+            .entry(node.to_string())
+            .or_default()
+            .push((task, Instant::now()));
+    }
+
+    /// The submission channel was closed mid-send: hand the task back
+    /// to the policy's failure path (the loop will run the full node
+    /// death sequence afterwards).
+    pub fn abort_dispatch(&mut self, node: &str, task: &Task) {
+        self.sched.on_failure(node, task, &self.ctx);
+    }
+
+    /// Remove the outstanding entry matching (brick, range), returning
+    /// the node that ran it. None = stale/unknown (drop, never crash).
+    fn take_outstanding(
+        &mut self,
+        brick: BrickId,
+        range: (usize, usize),
+    ) -> Option<(String, Task, Instant)> {
+        let node = self
+            .outstanding
+            .iter()
+            .find(|(_, v)| {
+                v.iter().any(|(t, _)| t.brick == brick && t.range == range)
+            })
+            .map(|(n, _)| n.clone())?;
+        let v = self.outstanding.get_mut(&node)?;
+        let pos = v
+            .iter()
+            .position(|(t, _)| t.brick == brick && t.range == range)?;
+        let (task, t0) = v.remove(pos);
+        if v.is_empty() {
+            self.outstanding.remove(&node);
+        }
+        Some((node, task, t0))
+    }
+
+    /// A `TaskDone` routed to this job. Returns the node that ran the
+    /// task and the task's wall time, or `None` for an unknown task
+    /// (late reply from a declared-dead node, duplicate, …) which is
+    /// dropped without touching the outcome.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_task_done(
+        &mut self,
+        brick: BrickId,
+        range: (usize, usize),
+        events_in: u64,
+        events_selected: u64,
+        result_bytes: u64,
+        histogram: &[u8],
+    ) -> Option<(String, Duration)> {
+        let (node, task, t0) = self.take_outstanding(brick, range)?;
+        // virtual elapsed of 1.0 keeps the adaptive policies' feedback
+        // identical to the sequential prototype (wall time is reported
+        // separately for metrics)
+        self.sched.on_complete(&node, &task, 1.0);
+        self.out.tasks_completed += 1;
+        self.out.events_in += events_in;
+        self.out.events_selected += events_selected;
+        self.out.result_bytes += result_bytes;
+        super::merge_histogram(&mut self.out.histogram, histogram);
+        Some((node, t0.elapsed()))
+    }
+
+    /// A `TaskFailed` routed to this job: the work is re-queued via the
+    /// policy. Returns the node, or `None` for stale/unknown tasks.
+    pub fn on_task_failed(
+        &mut self,
+        brick: BrickId,
+        range: (usize, usize),
+        error: String,
+    ) -> Option<String> {
+        let (node, task, _) = self.take_outstanding(brick, range)?;
+        self.out.tasks_failed += 1;
+        self.out.error = Some(error);
+        self.sched.on_failure(&node, &task, &self.ctx);
+        Some(node)
+    }
+
+    /// `node` died (missed heartbeats or a closed channel): void its
+    /// in-flight work and re-queue everything through the policy's
+    /// failure paths. Returns how many in-flight tasks were failed
+    /// over; 0 if the node was not a live participant of this job.
+    pub fn on_node_down(&mut self, node: &str) -> usize {
+        if !self.ctx.mark_down(node) {
+            return 0; // not ours, or already handled
+        }
+        self.out.nodes_lost.push(node.to_string());
+        let drained = self.outstanding.remove(node).unwrap_or_default();
+        let n = drained.len();
+        for (t, _) in &drained {
+            self.out.tasks_failed += 1;
+            self.sched.on_failure(node, t, &self.ctx);
+        }
+        self.sched.on_node_down(node, &self.ctx);
+        n
+    }
+
+    /// All work assigned and completed.
+    pub fn is_done(&self) -> bool {
+        self.sched.is_done()
+    }
+
+    /// Nothing in flight, nothing dispatchable, not done: the job can
+    /// never finish (all of its nodes are gone).
+    pub fn is_stalled(&self) -> bool {
+        !self.is_done()
+            && self.outstanding_count() == 0
+            && self.ctx.nodes.iter().all(|n| !n.up)
+    }
+
+    /// Merge phase: seal the outcome with its terminal status. A job is
+    /// Done when the policy covered everything and either nothing went
+    /// wrong or the failures were all recovered (some work completed).
+    pub fn finish(mut self) -> JobOutcome {
+        let done = self.sched.is_done()
+            && (self.out.error.is_none() || self.out.tasks_completed > 0);
+        self.out.status =
+            if done { JobStatus::Done } else { JobStatus::Failed };
+        self.out
+    }
+}

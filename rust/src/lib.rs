@@ -7,20 +7,34 @@
 //! compute nodes at every job start (the traditional Globus/DataGrid
 //! pattern), **pre-split the data into bricks across the disks of all grid
 //! nodes** and route jobs to where the data already lives. The coordination
-//! plane — portal, metadata catalogue, job-submission engine (JSE) with its
-//! polling broker, RSL synthesis, GRAM-like execution, GASS-like transfer,
-//! GRIS/LDAP node info — is rebuilt here in rust (layer 3). The per-event
-//! filter/calibration compute (the paper's ROOT C++ application) is a JAX
-//! pipeline (layer 2) whose hot spot is a Pallas kernel (layer 1), AOT-lowered
-//! to HLO text at build time and executed from rust via PJRT.
+//! plane — portal, metadata catalogue, job-submission engine (JSE), RSL
+//! synthesis, GRAM-like execution, GASS-like transfer, GRIS/LDAP node info
+//! — is rebuilt here in rust (layer 3). The per-event filter/calibration
+//! compute (the paper's ROOT C++ application) is a JAX pipeline (layer 2)
+//! whose hot spot is a Pallas kernel (layer 1), AOT-lowered to HLO text at
+//! build time and executed from rust via PJRT.
+//!
+//! One deliberate departure from the 2003 prototype: the JSE is a
+//! *concurrent multi-job execution core*, not a blocking per-job broker.
+//! A single event loop owns the node channels, demultiplexes task
+//! traffic by job id into per-job runner state machines, and shares
+//! node slots across every in-flight job (up to
+//! `max_concurrent_jobs`), so one job's draining tail no longer idles
+//! the grid — see [`jse`] for the architecture and [`cluster`] for the
+//! admission path that feeds it.
 //!
 //! Module map (see DESIGN.md for the paper-section cross-reference):
 //!
 //! - substrates: [`util`], [`config`], [`events`], [`brick`], [`catalog`],
-//!   [`rsl`], [`filterexpr`], [`gris`], [`netsim`], [`sim`], [`wire`],
-//!   [`metrics`]
-//! - coordination: [`gass`], [`node`], [`scheduler`], [`jse`], [`ft`],
-//!   [`cluster`], [`portal`]
+//!   [`rsl`], [`filterexpr`], [`gris`], [`netsim`], [`sim`], [`wire`]
+//!   (leader↔node protocol + job-id routing invariants), [`metrics`]
+//!   (counters, gauges, histograms)
+//! - coordination: [`gass`], [`node`], [`scheduler`] (pull policies fed
+//!   per-job from shared slot state), [`jse`] (event loop +
+//!   [`jse::runner`] state machines), [`ft`] (heartbeat liveness +
+//!   re-replication; node death fails over across *all* jobs),
+//!   [`cluster`] (admission + wiring), [`portal`] (submit / status /
+//!   cancel over HTTP)
 //! - compute: [`runtime`] (PJRT engine over `artifacts/*.hlo.txt`)
 
 pub mod brick;

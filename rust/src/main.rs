@@ -5,6 +5,7 @@
 //!   demo       self-contained: start, submit, wait, report, shut down
 //!   submit     POST a job to a running portal
 //!   status     query job status from a running portal
+//!   cancel     cancel a queued or running job via the portal
 //!   node-info  GRIS node query via a running portal
 //!   calibrate  measure PJRT kernel throughput (DES calibration input)
 //!   fig7       run the Fig 7 DES sweep and print the table
@@ -61,10 +62,11 @@ fn start_cluster(flags: &BTreeMap<String, String>) -> Result<geps::cluster::Clus
     let cfg = load_config(flags)?;
     let artifacts = geps::runtime::default_artifacts_dir();
     eprintln!(
-        "[geps] starting cluster: {} nodes, {} events, policy {}",
+        "[geps] starting cluster: {} nodes, {} events, policy {}, up to {} concurrent jobs",
         cfg.nodes.len(),
         cfg.n_events,
-        cfg.policy.name()
+        cfg.policy.name(),
+        cfg.max_concurrent_jobs
     );
     geps::cluster::ClusterHandle::start(cfg, artifacts)
 }
@@ -167,6 +169,24 @@ fn cmd_submit(flags: BTreeMap<String, String>) -> Result<()> {
     println!("{}", String::from_utf8_lossy(&resp));
     if status >= 300 {
         bail!("submit failed with HTTP {status}");
+    }
+    Ok(())
+}
+
+fn cmd_cancel(flags: BTreeMap<String, String>) -> Result<()> {
+    let job = flags
+        .get("job")
+        .cloned()
+        .ok_or_else(|| anyhow!("--job required"))?;
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "POST",
+        &format!("/cancel/{job}"),
+        None,
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    if status >= 300 {
+        bail!("cancel failed with HTTP {status}");
     }
     Ok(())
 }
@@ -317,11 +337,12 @@ fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: geps <serve|demo|submit|status|node-info|kill|histogram|bricks|calibrate|fig7> [--flags]
+        "usage: geps <serve|demo|submit|status|cancel|node-info|kill|histogram|bricks|calibrate|fig7> [--flags]
   serve     --config FILE --listen ADDR --gris-listen ADDR
   demo      --config FILE --events N --policy P --filter EXPR
   submit    --portal ADDR --filter EXPR --policy P
   status    --portal ADDR [--job ID]
+  cancel    --portal ADDR --job ID           (cancel queued/running job)
   node-info --portal ADDR [--filter LDAP]
   kill      --portal ADDR --node NAME        (fault injection)
   histogram --portal ADDR --job ID           (visualize merged results)
@@ -341,6 +362,7 @@ fn main() -> Result<()> {
         "demo" => cmd_demo(flags),
         "submit" => cmd_submit(flags),
         "status" => cmd_status(flags),
+        "cancel" => cmd_cancel(flags),
         "node-info" => cmd_node_info(flags),
         "kill" => cmd_kill(flags),
         "histogram" => cmd_histogram(flags),

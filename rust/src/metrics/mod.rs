@@ -25,6 +25,20 @@ impl Counter {
     }
 }
 
+/// A settable point-in-time value (queue depths, in-flight counts).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Log2-bucketed latency/size histogram (ns or bytes). 64 buckets cover
 /// the full u64 range.
 #[derive(Debug)]
@@ -92,6 +106,7 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
@@ -102,6 +117,15 @@ impl Registry {
 
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -123,6 +147,9 @@ impl Registry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -180,6 +207,18 @@ mod tests {
         let text = r.render();
         assert!(text.contains("counter jobs 2"));
         assert!(text.contains("hist lat count=1"));
+    }
+
+    #[test]
+    fn gauge_set_overwrites_and_renders() {
+        let r = Registry::new();
+        r.gauge("jse.jobs_in_flight").set(3);
+        r.gauge("jse.jobs_in_flight").set(7);
+        assert_eq!(r.gauge("jse.jobs_in_flight").get(), 7);
+        r.gauge("jse.jobs_queued").set(0);
+        let text = r.render();
+        assert!(text.contains("gauge jse.jobs_in_flight 7"), "{text}");
+        assert!(text.contains("gauge jse.jobs_queued 0"), "{text}");
     }
 
     #[test]

@@ -128,6 +128,11 @@ pub fn spawn_node(
             let store = BrickStore::new(
                 gass.store(&name).expect("node has no gass store"),
             );
+            // jobs cancelled by the leader: inbox-queued tasks for them
+            // are dropped without running (a task already mid-execution
+            // completes; the leader discards its reply as stale)
+            let mut cancelled: std::collections::BTreeSet<u64> =
+                std::collections::BTreeSet::new();
             loop {
                 let msg = match inbox.recv() {
                     Ok(m) => m,
@@ -137,7 +142,13 @@ pub fn spawn_node(
                     return; // crashed: drop everything silently
                 }
                 match msg {
+                    Message::JobCancel { job } => {
+                        cancelled.insert(job);
+                    }
                     Message::SubmitTask { job, task, filter, rsl } => {
+                        if cancelled.contains(&job) {
+                            continue;
+                        }
                         let outcome = run_task(
                             &name, &store, &gass, &pool, job, &task,
                             &filter, &rsl, &ex_killed,

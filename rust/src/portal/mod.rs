@@ -4,12 +4,15 @@
 //!
 //! - `POST /submit {"filter": ..., "policy": ...}` — Fig 4, submit a job
 //! - `GET /jobs/<id>` — Fig 6, job status detail
-//! - `GET /jobs` — job list
+//! - `GET /jobs` — live job list (multiple jobs RUNNING at once under
+//!   the concurrent JSE; queue depth and in-flight gauges on /metrics)
+//! - `POST /cancel/<id>` — cancel a queued or running job
 //! - `GET /nodes?filter=(ldap...)` — Figs 3/5, GRIS node information
 //! - `GET /histogram/<id>` — merged result visualisation data
 //! - `POST /kill/<node>` — fault injection (operations/testing surface)
 //! - `GET /bricks` — brick placement view
-//! - `GET /metrics` — coordinator metrics
+//! - `GET /metrics` — coordinator metrics (jobs_queued, jobs_in_flight,
+//!   tasks_outstanding, per-policy job counters, …)
 //!
 //! The portal is a thin translation layer over [`ClusterHandle`]; all
 //! grid mechanics stay hidden behind it, which is the paper's main
@@ -32,8 +35,9 @@ const INDEX_HTML: &str = r#"<!doctype html>
 <p>Grid-brick Event Processing System &mdash; the grid details are hidden behind this portal.</p>
 <ul>
   <li>POST /submit {"filter": "max_pair_mass > 80 && max_pt > 20", "policy": "locality"}</li>
-  <li>GET /jobs &mdash; all jobs</li>
+  <li>GET /jobs &mdash; all jobs (live status; several run concurrently)</li>
   <li>GET /jobs/&lt;id&gt; &mdash; job status details</li>
+  <li>POST /cancel/&lt;id&gt; &mdash; cancel a queued or running job</li>
   <li>GET /nodes?filter=(&amp;(cpus&gt;=1)(status=up)) &mdash; GRIS node information</li>
   <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
   <li>GET /metrics &mdash; coordinator metrics</li>
@@ -250,6 +254,26 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                 })
                 .collect();
             Response::json(200, Json::Arr(list))
+        }
+        ("POST", p) if p.starts_with("/cancel/") => {
+            let id: u64 = match p["/cancel/".len()..].parse() {
+                Ok(v) => v,
+                Err(_) => {
+                    return Response::json(
+                        400,
+                        Json::obj().set("error", "bad job id"),
+                    )
+                }
+            };
+            if cluster.cancel(id) {
+                Response::json(200, Json::obj().set("cancelled", id))
+            } else {
+                Response::json(
+                    404,
+                    Json::obj()
+                        .set("error", "no such job, or already terminal"),
+                )
+            }
         }
         ("POST", p) if p.starts_with("/kill/") => {
             let node = &p["/kill/".len()..];

@@ -97,6 +97,20 @@ impl SchedCtx {
     pub fn live_nodes(&self) -> impl Iterator<Item = &NodeState> {
         self.nodes.iter().filter(|n| n.up)
     }
+
+    /// Mark `name` down in this context. Returns true only when the
+    /// node was present and up — i.e. this call made the transition —
+    /// so callers (the per-job runners fed by the shared JSE event
+    /// loop) can run their failover path exactly once per node death.
+    pub fn mark_down(&mut self, name: &str) -> bool {
+        match self.nodes.iter_mut().find(|n| n.name == name) {
+            Some(n) if n.up => {
+                n.up = false;
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 /// Pull-based scheduling policy. Implementations own their queue state.
@@ -256,6 +270,16 @@ mod tests {
         }
         assert_eq!(Policy::by_name("grid-brick"), Some(Policy::Locality));
         assert_eq!(Policy::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn mark_down_transitions_once() {
+        let mut ctx = ctx2();
+        assert!(ctx.mark_down("gandalf"));
+        assert!(!ctx.mark_down("gandalf"), "second call is a no-op");
+        assert!(!ctx.mark_down("mordor"), "unknown node is a no-op");
+        assert!(!ctx.node("gandalf").unwrap().up);
+        assert_eq!(ctx.live_nodes().count(), 1);
     }
 
     #[test]

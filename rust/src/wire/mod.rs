@@ -6,6 +6,15 @@
 //! Frame: len u32 | kind u8 | body. Strings are varint-length-prefixed
 //! UTF-8; integers are LEB128 varints (task ranges and byte counts are
 //! usually small).
+//!
+//! **Job-id routing invariant.** Every task-level message carries the
+//! job id as its first body field: the leader's event loop multiplexes
+//! many concurrent jobs over the one `node_rx` channel and demultiplexes
+//! replies purely by job id, so a node must echo the id it was given in
+//! `SubmitTask` verbatim in `TaskDone`/`TaskFailed`. Messages whose job
+//! id no longer maps to an in-flight job are dropped by the leader
+//! (stale replies from slow or declared-dead nodes are expected
+//! traffic, not errors).
 
 use crate::brick::codec::{get_varint, put_varint};
 use crate::brick::BrickId;
@@ -34,6 +43,11 @@ pub enum Message {
     Heartbeat { node: String, free_slots: u32 },
     /// leader -> node: orderly shutdown
     Shutdown,
+    /// leader -> node: the job was cancelled — drop its inbox-queued
+    /// tasks without running them. A task already mid-execution runs to
+    /// completion; the leader discards its reply as stale. Nodes
+    /// without work for the job ignore the message.
+    JobCancel { job: u64 },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -109,6 +123,7 @@ impl Message {
             Message::TaskFailed { .. } => 3,
             Message::Heartbeat { .. } => 4,
             Message::Shutdown => 5,
+            Message::JobCancel { .. } => 6,
         }
     }
 
@@ -161,6 +176,9 @@ impl Message {
                 put_varint(&mut body, *free_slots as u64);
             }
             Message::Shutdown => {}
+            Message::JobCancel { job } => {
+                put_varint(&mut body, *job);
+            }
         }
         let mut out = Vec::with_capacity(body.len() + 5);
         out.extend_from_slice(&((body.len() + 1) as u32).to_le_bytes());
@@ -225,6 +243,7 @@ impl Message {
                 free_slots: r.varint()? as u32,
             },
             5 => Message::Shutdown,
+            6 => Message::JobCancel { job: r.varint()? },
             k => return Err(WireError(format!("unknown kind {k}"))),
         };
         if r.i != r.b.len() {
@@ -284,6 +303,8 @@ mod tests {
         });
         roundtrip(Message::Heartbeat { node: "hobbit".into(), free_slots: 2 });
         roundtrip(Message::Shutdown);
+        roundtrip(Message::JobCancel { job: 1234567 });
+        roundtrip(Message::JobCancel { job: 0 });
     }
 
     #[test]

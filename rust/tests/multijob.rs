@@ -1,0 +1,195 @@
+//! Concurrency-correctness tests for the multi-job JSE on the LIVE
+//! cluster (real threads, real PJRT compute, real byte movement).
+//! Requires `make artifacts`.
+//!
+//! The contract under test: running many jobs concurrently over the
+//! shared event loop must be *observationally identical* to running
+//! them one at a time — same merged histograms bit for bit (histogram
+//! bins are integer event counts, so f32 summation order cannot
+//! perturb them), same per-job event totals — and a node death must
+//! fail work over in every affected job, not just one.
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use std::time::{Duration, Instant};
+
+/// Mixed policies + filters, enough jobs to keep >= 4 in flight.
+const SPECS: [(&str, &str); 5] = [
+    ("n_tracks >= 0", "locality"),
+    ("met > 10", "proof"),
+    ("max_pt > 15", "gfarm"),
+    ("max_pair_mass > 80 && max_pair_mass < 100", "balanced"),
+    ("sum_pt > 50", "central"),
+];
+
+/// These tests need the AOT artifacts (`make artifacts`); skip cleanly
+/// when they are absent so the concurrency suite does not add new hard
+/// failures to artifact-less environments.
+fn artifacts_present() -> bool {
+    let ok = geps::runtime::default_artifacts_dir()
+        .join("manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn base_config(max_jobs: usize) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.n_events = 400;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0;
+    cfg.max_concurrent_jobs = max_jobs;
+    cfg
+}
+
+/// Run every spec through one cluster; returns (histogram bit-patterns,
+/// selected counts, wall seconds).
+fn run_batch(max_jobs: usize) -> (Vec<Vec<u32>>, Vec<u64>, f64) {
+    let cluster = ClusterHandle::start(
+        base_config(max_jobs),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let jobs: Vec<u64> = SPECS
+        .iter()
+        .map(|(filter, policy)| cluster.submit(filter, policy))
+        .collect();
+    for (job, (filter, policy)) in jobs.iter().zip(SPECS.iter()) {
+        let status = cluster
+            .wait(*job, Duration::from_secs(180))
+            .expect("terminal state");
+        assert_eq!(status, JobStatus::Done, "{policy} / {filter}");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut hists = Vec::new();
+    let mut selected = Vec::new();
+    {
+        let cat = cluster.catalog.lock().unwrap();
+        for job in &jobs {
+            let j = cat.jobs.get(*job).unwrap();
+            assert_eq!(j.events_processed, 400, "job {job} incomplete");
+            selected.push(j.events_selected);
+        }
+    }
+    for job in &jobs {
+        let h = cluster.histogram(*job).expect("histogram present");
+        hists.push(h.iter().map(|v| v.to_bits()).collect());
+    }
+    cluster.shutdown();
+    (hists, selected, wall)
+}
+
+#[test]
+fn concurrent_batch_matches_sequential_baseline_bit_for_bit() {
+    if !artifacts_present() {
+        return;
+    }
+    let (seq_h, seq_sel, seq_wall) = run_batch(1);
+    let (conc_h, conc_sel, conc_wall) = run_batch(4);
+    for (i, (filter, policy)) in SPECS.iter().enumerate() {
+        assert_eq!(
+            seq_sel[i], conc_sel[i],
+            "selection differs for {policy} / {filter}"
+        );
+        assert_eq!(
+            seq_h[i], conc_h[i],
+            "merged histogram differs for {policy} / {filter}"
+        );
+    }
+    // wall-clock is asserted by the ext_multijob bench (timing in unit
+    // tests is flaky under CI load); record it for the log
+    println!(
+        "sequential {seq_wall:.2}s vs concurrent {conc_wall:.2}s \
+         for {} jobs",
+        SPECS.len()
+    );
+}
+
+#[test]
+fn node_death_fails_over_every_inflight_job() {
+    if !artifacts_present() {
+        return;
+    }
+    // 4 jobs in flight over 3 nodes with RF=2; killing a node mid-run
+    // must fail its tasks over in *all* affected jobs.
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 2;
+    cfg.n_events = 800;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 500.0;
+    cfg.max_concurrent_jobs = 4;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let jobs: Vec<u64> = [
+        ("n_tracks >= 1", "locality"),
+        ("met >= 0", "locality"),
+        ("max_pt >= 0", "gfarm"),
+        ("sum_pt >= 0", "balanced"),
+    ]
+    .iter()
+    .map(|(f, p)| cluster.submit(f, p))
+    .collect();
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(cluster.kill_node("node2"));
+    for job in &jobs {
+        let status = cluster
+            .wait(*job, Duration::from_secs(180))
+            .expect("terminal state");
+        assert_eq!(status, JobStatus::Done, "job {job}");
+    }
+    let cat = cluster.catalog.lock().unwrap();
+    for job in &jobs {
+        assert_eq!(
+            cat.jobs.get(*job).unwrap().events_processed,
+            800,
+            "job {job} lost events in failover"
+        );
+    }
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn portal_cancel_stops_a_queued_job() {
+    if !artifacts_present() {
+        return;
+    }
+    // depth-1 concurrency so the second submission sits in the
+    // admission queue long enough to cancel deterministically... or
+    // completes first (both are valid terminal races; assert on the
+    // committed status).
+    let cluster = ClusterHandle::start(
+        base_config(1),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let a = cluster.submit("n_tracks >= 0", "locality");
+    let b = cluster.submit("met >= 0", "locality");
+    let cancelled = cluster.cancel(b);
+    let sa = cluster.wait(a, Duration::from_secs(180)).unwrap();
+    assert_eq!(sa, JobStatus::Done);
+    let sb = cluster.wait(b, Duration::from_secs(180)).unwrap();
+    if cancelled {
+        assert!(
+            sb == JobStatus::Cancelled || sb == JobStatus::Done,
+            "cancel raced to {sb:?}"
+        );
+    } else {
+        assert_eq!(sb, JobStatus::Done);
+    }
+    // unknown job ids are rejected
+    assert!(!cluster.cancel(99_999));
+    cluster.shutdown();
+}

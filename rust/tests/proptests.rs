@@ -314,7 +314,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
                 .map(|_| (b'a' + (rng.index(26)) as u8) as char)
                 .collect()
         };
-        let msg = match rng.index(5) {
+        let msg = match rng.index(6) {
             0 => Message::SubmitTask {
                 job: rng.next_u64(),
                 task: geps::scheduler::Task {
@@ -352,6 +352,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
                 node: rand_str(rng, 30),
                 free_slots: rng.next_u64() as u32 & 0xffff,
             },
+            4 => Message::JobCancel { job: rng.next_u64() },
             _ => Message::Shutdown,
         };
         let enc = msg.encode();
