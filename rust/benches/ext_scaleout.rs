@@ -1,0 +1,121 @@
+//! Bench: **Ext-G** — elastic scale-out. The paper's headline claim is
+//! that capacity grows by "just adding more Grid nodes"; this measures
+//! it live. A 3-node grid runs a 6-job batch (baseline jobs/sec), then
+//! a 4th node joins THROUGH THE MEMBERSHIP PATH (`add_node`: executor
+//! spawned, catalogue + GRIS registration, brick rebalancing onto the
+//! newcomer) and the same batch runs again. With locality scheduling
+//! the moved bricks pull work onto the new node, so jobs/sec must
+//! rise. Requires `make artifacts`.
+
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use geps::util::bench::print_table;
+use std::time::{Duration, Instant};
+
+const JOBS: usize = 6;
+
+const FILTERS: [&str; 3] = [
+    "max_pair_mass > 80 && max_pair_mass < 100",
+    "met > 10",
+    "n_tracks >= 4",
+];
+
+fn run_batch(cluster: &ClusterHandle) -> anyhow::Result<f64> {
+    let t0 = Instant::now();
+    let jobs: Vec<u64> = (0..JOBS)
+        .map(|i| cluster.submit(FILTERS[i % FILTERS.len()], "locality"))
+        .collect();
+    for job in &jobs {
+        cluster.wait(*job, Duration::from_secs(300))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let cat = cluster.catalog.lock().unwrap();
+    for job in &jobs {
+        let j = cat.jobs.get(*job).unwrap();
+        assert_eq!(j.events_processed, 1200, "job {job} incomplete: {j:?}");
+    }
+    Ok(wall)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = (0..3)
+        .map(|i| NodeSpec {
+            name: format!("node{i}"),
+            speed: 1.0,
+            slots: 1,
+        })
+        .collect();
+    cfg.replication = 2;
+    cfg.n_events = 1200;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0;
+    cfg.max_concurrent_jobs = 4;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )?;
+
+    // baseline: the static 3-node grid
+    let wall_before = run_batch(&cluster)?;
+
+    // live join + rebalance, then wait until the newcomer owns bricks
+    let t_join = Instant::now();
+    cluster.add_node("node3", 1.0, 1)?;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let owned = {
+            let cat = cluster.catalog.lock().unwrap();
+            cat.bricks
+                .iter()
+                .filter(|(_, b)| {
+                    b.holders.first().map(String::as_str) == Some("node3")
+                })
+                .count()
+        };
+        if owned >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "rebalance never happened");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let join_s = t_join.elapsed().as_secs_f64();
+
+    // the same batch on the grown grid
+    let wall_after = run_batch(&cluster)?;
+
+    let rebalanced =
+        cluster.metrics.counter("ft.bricks_rebalanced").get();
+    cluster.shutdown();
+
+    print_table(
+        "Ext-G: 6-job batch before/after a live node join (1200-event jobs)",
+        &["grid", "wall(s)", "jobs/s"],
+        &[
+            vec![
+                "3 nodes (static)".into(),
+                format!("{wall_before:.2}"),
+                format!("{:.2}", JOBS as f64 / wall_before),
+            ],
+            vec![
+                "4 nodes (joined live)".into(),
+                format!("{wall_after:.2}"),
+                format!("{:.2}", JOBS as f64 / wall_after),
+            ],
+        ],
+    );
+    println!(
+        "join-to-rebalanced latency: {join_s:.2}s; bricks moved: {rebalanced}"
+    );
+    // the acceptance bar: the joined node adds real throughput
+    assert!(
+        wall_after < wall_before,
+        "scale-out regressed: {wall_after:.2}s (4 nodes) vs \
+         {wall_before:.2}s (3 nodes)"
+    );
+    println!(
+        "scale-out speedup: {:.2}x from one joined node",
+        wall_before / wall_after
+    );
+    Ok(())
+}

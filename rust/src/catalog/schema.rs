@@ -106,6 +106,10 @@ const TAG_NODE: u8 = 2;
 const TAG_BRICK: u8 = 3;
 const TAG_RESULT: u8 = 4;
 const TAG_JOB_UPDATE: u8 = 5;
+/// holder-list rewrite (re-replication / rebalancing). Replays as an
+/// in-place update — logging these as TAG_BRICK used to insert a
+/// duplicate brick row on every recovery.
+const TAG_BRICK_UPDATE: u8 = 6;
 
 fn job_to_json(id: RowId, j: &JobRow) -> Json {
     Json::obj()
@@ -228,6 +232,30 @@ impl Catalog {
                             bytes: b,
                             holders,
                         });
+                    }
+                }
+                TAG_BRICK_UPDATE => {
+                    if let (Some(ds), Some(seq), Some(hs)) = (
+                        j.get("dataset").and_then(|v| v.as_u64()),
+                        j.get("seq").and_then(|v| v.as_u64()),
+                        j.get("holders").and_then(|h| h.as_arr()),
+                    ) {
+                        let brick = BrickId::new(ds as u32, seq as u32);
+                        let holders: Vec<String> = hs
+                            .iter()
+                            .filter_map(|x| x.as_str())
+                            .map(String::from)
+                            .collect();
+                        let ids: Vec<RowId> = cat
+                            .bricks
+                            .iter()
+                            .filter(|(_, b)| b.brick == brick)
+                            .map(|(id, _)| id)
+                            .collect();
+                        for id in ids {
+                            cat.bricks
+                                .update(id, |b| b.holders = holders.clone());
+                        }
                     }
                 }
                 TAG_RESULT => {
@@ -385,8 +413,12 @@ impl Catalog {
             .collect()
     }
 
-    /// Replace a brick's holder list (re-replication recovery, §7).
-    pub fn update_brick_holders(
+    /// Atomically replace a brick's holder list (re-replication
+    /// recovery §7, join-time rebalancing): the in-memory row and the
+    /// WAL record are written under the same `&mut self` critical
+    /// section, so a recovery replay always sees either the old or the
+    /// new holder set, never a partial one.
+    pub fn set_brick_holders(
         &mut self,
         brick: BrickId,
         holders: Vec<String>,
@@ -402,26 +434,16 @@ impl Catalog {
             ok |= self.bricks.update(id, |b| b.holders = holders.clone());
         }
         if ok {
-            // WAL: re-log the brick with its new holders
-            let row = self
-                .bricks
-                .iter()
-                .find(|(_, b)| b.brick == brick)
-                .map(|(_, b)| b.clone());
-            if let Some(row) = row {
-                let j = Json::obj()
-                    .set("dataset", brick.dataset as u64)
-                    .set("seq", brick.seq as u64)
-                    .set("n_events", row.n_events)
-                    .set("bytes", row.bytes)
-                    .set(
-                        "holders",
-                        Json::Arr(
-                            row.holders.iter().map(|h| Json::Str(h.clone())).collect(),
-                        ),
-                    );
-                self.log(TAG_BRICK, &j);
-            }
+            let j = Json::obj()
+                .set("dataset", brick.dataset as u64)
+                .set("seq", brick.seq as u64)
+                .set(
+                    "holders",
+                    Json::Arr(
+                        holders.iter().map(|h| Json::Str(h.clone())).collect(),
+                    ),
+                );
+            self.log(TAG_BRICK_UPDATE, &j);
         }
         ok
     }
@@ -527,6 +549,36 @@ mod tests {
         assert_eq!(cat.bricks.len(), 1);
         assert_eq!(cat.results.len(), 1);
         assert_eq!(cat.bricks_for_dataset(7).len(), 1);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn holder_rewrite_replays_in_place() {
+        let dir = std::env::temp_dir().join("geps-catalog-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("holders-{}.wal", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+
+        let brick = BrickId::new(3, 0);
+        {
+            let mut cat = Catalog::open(&p).unwrap();
+            cat.insert_brick(brick, 100, 1 << 20, vec!["node0".into()]);
+            // two rewrites: failover then join-rebalance
+            assert!(cat
+                .set_brick_holders(brick, vec!["node1".into()]));
+            assert!(cat.set_brick_holders(
+                brick,
+                vec!["node3".into(), "node1".into()]
+            ));
+            assert!(!cat
+                .set_brick_holders(BrickId::new(9, 9), vec!["x".into()]));
+        }
+        let cat = Catalog::open(&p).unwrap();
+        // exactly ONE row survives replay (rewrites must not duplicate)
+        assert_eq!(cat.bricks.len(), 1);
+        let row = cat.bricks.iter().next().map(|(_, b)| b.clone()).unwrap();
+        assert_eq!(row.holders, vec!["node3", "node1"]);
+        assert_eq!(row.n_events, 100, "metadata survives the rewrite");
         std::fs::remove_file(&p).unwrap();
     }
 

@@ -11,28 +11,41 @@
 //! 4. spawn the JSE broker thread — the *admission path*: it polls the
 //!    catalogue for new jobs, queues them into the JSE's concurrent
 //!    event loop (up to `max_concurrent_jobs` in flight at once,
-//!    sharing node slots), relays portal cancellations, and applies
-//!    the per-outcome follow-ups (GRIS liveness, re-replication);
+//!    sharing node slots), relays portal cancellations and node joins,
+//!    and applies the per-outcome follow-ups (GRIS liveness,
+//!    re-replication, failing jobs whose bricks became unrecoverable);
 //! 5. publish every node's GRIS entries.
 //!
+//! **Elastic membership.** [`ClusterHandle::add_node`] registers a node
+//! mid-run: it provisions a GASS store, spawns the node actor, writes
+//! the catalogue `NodeRow` (WAL-durable), publishes the GRIS entry and
+//! hands the channel to the broker over the control plane
+//! ([`Message::NodeJoin`]). The broker folds the node into the JSE
+//! event loop (fresh slot capacity for in-flight jobs) and runs the
+//! [`Rebalancer`], which copies a fair share of bricks to the newcomer
+//! over GASS (integrity-checked) and rewrites holder lists via
+//! [`Catalog::set_brick_holders`] so subsequent locality scheduling
+//! lands on the new node.
+//!
 //! The [`ClusterHandle`] is the programmatic API the portal/examples
-//! use: submit, wait, query GRIS, kill nodes, read metrics.
+//! use: submit, wait, query GRIS, kill or add nodes, read metrics.
 
-use crate::brick::{split_events, BrickFile, Codec, SplitConfig};
+use crate::brick::{split_events, BrickFile, BrickId, Codec, SplitConfig};
 use crate::catalog::{Catalog, JobStatus};
 use crate::config::ClusterConfig;
 use crate::events::{EventGenerator, GeneratorConfig};
+use crate::ft::{Rebalancer, Rereplicator};
 use crate::gass::GassService;
-use crate::gris::{Directory, NodeInfoProvider};
+use crate::gris::{Directory, Entry, NodeInfoProvider};
 use crate::jse::{Jse, JseConfig};
 use crate::metrics::Registry;
-use crate::ft::Rereplicator;
 use crate::node::store::brick_path;
 use crate::node::{spawn_node, NodeConfig, NodeHandle};
 use crate::runtime::EnginePool;
 use crate::wire::Message;
+use crate::util::lock;
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
@@ -49,8 +62,13 @@ pub struct ClusterHandle {
     histograms: Arc<Mutex<BTreeMap<u64, Vec<f32>>>>,
     broker_stop: Arc<AtomicBool>,
     broker_join: Option<std::thread::JoinHandle<()>>,
-    /// portal -> broker control plane (job cancellations)
+    /// portal -> broker control plane (job cancellations, node joins)
     ctl_tx: Sender<Message>,
+    /// node->leader outbox, cloned into every node spawned after start
+    node_out_tx: Sender<Message>,
+    /// join handshake: `add_node` parks the new node's channel here and
+    /// announces it over `ctl_tx`; the broker picks it up by name
+    pending_joins: Arc<Mutex<BTreeMap<String, Sender<Message>>>>,
     pool: EnginePool,
 }
 
@@ -174,6 +192,9 @@ impl ClusterHandle {
         let gris2 = gris.clone();
         let replication = config.replication;
         let (ctl_tx, ctl_rx) = std::sync::mpsc::channel::<Message>();
+        let pending_joins: Arc<Mutex<BTreeMap<String, Sender<Message>>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let joins2 = pending_joins.clone();
         let broker_join = std::thread::Builder::new()
             .name("geps-broker".into())
             .spawn(move || {
@@ -188,20 +209,43 @@ impl ClusterHandle {
                 while !stop.load(Ordering::SeqCst) {
                     // admission path: discover new job tuples and queue
                     // them into the concurrent execution core
-                    let (next, jobs) =
-                        cat2.lock().unwrap().poll_new_jobs(cursor);
+                    let (next, jobs) = lock(&cat2).poll_new_jobs(cursor);
                     cursor = next;
                     for job in jobs {
                         met2.counter("jse.jobs_discovered").inc();
                         started.insert(job, Instant::now());
                         jse.enqueue(job);
                     }
-                    // control plane: portal cancellations. A cancel can
-                    // outrun discovery, so unmatched ones are retried
-                    // until the job turns up or reaches a terminal state.
+                    // control plane: portal cancellations and node
+                    // joins. A cancel can outrun discovery, so
+                    // unmatched ones are retried until the job turns up
+                    // or reaches a terminal state.
                     while let Ok(m) = ctl_rx.try_recv() {
-                        if let Message::JobCancel { job } = m {
-                            pending_cancels.insert(job);
+                        match m {
+                            Message::JobCancel { job } => {
+                                pending_cancels.insert(job);
+                            }
+                            Message::NodeJoin { name, speed, slots } => {
+                                let tx = lock(&joins2).remove(&name);
+                                let joined = tx.map(|tx| {
+                                    jse.add_node(
+                                        &name,
+                                        speed,
+                                        slots as usize,
+                                        tx,
+                                    )
+                                });
+                                if joined == Some(true) {
+                                    // brick rebalancing toward the
+                                    // newcomer: copy, verify, rewrite
+                                    // holders, refresh GRIS
+                                    rebalance_to_newcomer(
+                                        &cat2, &gass2, &gris2, &met2,
+                                        &name,
+                                    );
+                                }
+                            }
+                            _ => {}
                         }
                     }
                     let mut still_pending =
@@ -210,9 +254,7 @@ impl ClusterHandle {
                         if jse.cancel(job) {
                             continue;
                         }
-                        let alive = cat2
-                            .lock()
-                            .unwrap()
+                        let alive = lock(&cat2)
                             .jobs
                             .get(job)
                             .map(|r| !r.status.is_terminal())
@@ -236,14 +278,12 @@ impl ClusterHandle {
                             _ => "jse.jobs_failed",
                         })
                         .inc();
-                        hist2
-                            .lock()
-                            .unwrap()
+                        lock(&hist2)
                             .insert(outcome.job, outcome.histogram.clone());
                         // GRIS reflects liveness ("how many processors
                         // are available at this moment", §4.3)
                         for dead in &outcome.nodes_lost {
-                            let mut dir = gris2.lock().unwrap();
+                            let mut dir = lock(&gris2);
                             let dn = format!("nn={dead}, o=geps");
                             if let Some(e) = dir.lookup(&dn).cloned() {
                                 let mut e = e;
@@ -263,10 +303,69 @@ impl ClusterHandle {
                         // from survivors to new holders, and record the
                         // new placement in the catalogue so the *next*
                         // job schedules against healthy replicas.
+                        // Bricks with NO surviving replica are beyond
+                        // recovery: count them and fail every live job
+                        // over the affected datasets explicitly —
+                        // hanging forever is the one forbidden outcome.
                         if !outcome.nodes_lost.is_empty() {
-                            recover_replication(
+                            let lost = recover_replication(
                                 &cat2, &gass2, replication, &met2,
                             );
+                            if !lost.is_empty() {
+                                met2.counter("ft.bricks_unrecoverable")
+                                    .add(lost.len() as u64);
+                                let datasets: BTreeSet<u32> = lost
+                                    .iter()
+                                    .map(|b| b.dataset)
+                                    .collect();
+                                let affected: Vec<u64> = {
+                                    let cat = lock(&cat2);
+                                    cat.jobs
+                                        .iter()
+                                        .filter(|(id, r)| {
+                                            if r.status.is_terminal()
+                                                || !datasets
+                                                    .contains(&r.dataset)
+                                            {
+                                                return false;
+                                            }
+                                            // spare jobs that already
+                                            // recorded results for every
+                                            // lost brick (whole-brick
+                                            // tasks, the common case);
+                                            // partially-covered packet
+                                            // jobs fall back to their
+                                            // policy's own lost-brick
+                                            // accounting
+                                            let covered: BTreeSet<
+                                                BrickId,
+                                            > = cat
+                                                .job_results(*id)
+                                                .iter()
+                                                .map(|row| row.brick)
+                                                .collect();
+                                            lost.iter().any(|b| {
+                                                b.dataset == r.dataset
+                                                    && !covered
+                                                        .contains(b)
+                                            })
+                                        })
+                                        .map(|(id, _)| id)
+                                        .collect()
+                                };
+                                let detail: Vec<String> = lost
+                                    .iter()
+                                    .map(|b| b.to_string())
+                                    .collect();
+                                let msg = format!(
+                                    "unrecoverable brick(s) [{}]: every \
+                                     replica holder is dead",
+                                    detail.join(", ")
+                                );
+                                for job in affected {
+                                    jse.fail_job(job, &msg);
+                                }
+                            }
                         }
                     }
                 }
@@ -284,8 +383,96 @@ impl ClusterHandle {
             broker_stop,
             broker_join: Some(broker_join),
             ctl_tx,
+            node_out_tx: out_tx,
+            pending_joins,
             pool,
         })
+    }
+
+    /// Register a new grid node while the cluster is running (elastic
+    /// membership; the portal's `POST /nodes/add`, the `geps add-node`
+    /// CLI). The admission sequence: provision a GASS store, spawn the
+    /// node actor (executor + heartbeat beacon), announce the join to
+    /// the broker over the control plane, then write the catalogue
+    /// `NodeRow` (WAL-durable) and publish the GRIS entry. The broker
+    /// folds the node into the JSE event loop — in-flight jobs see it
+    /// as fresh slot capacity — and rebalances a fair share of bricks
+    /// onto it. Names are never recycled: re-registering any known
+    /// name (alive or dead) is rejected.
+    pub fn add_node(&self, name: &str, speed: f64, slots: usize) -> Result<()> {
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(anyhow!("invalid node name '{name}'"));
+        }
+        if name == self.config.leader {
+            return Err(anyhow!("'{name}' is the leader, not a worker"));
+        }
+        if !speed.is_finite() || speed <= 0.0 {
+            return Err(anyhow!("speed must be a finite value > 0"));
+        }
+        let slots = slots.max(1);
+        // uniqueness check + catalogue NodeRow (WAL-durable) in ONE
+        // critical section, so concurrent add_node calls cannot both
+        // claim a name. The JSE dispatch loop treats a row whose
+        // channel has not arrived yet as zero capacity, not a death,
+        // so registering before the spawn below is safe.
+        {
+            let mut cat = lock(&self.catalog);
+            if cat.nodes.iter().any(|(_, n)| n.name == name) {
+                return Err(anyhow!(
+                    "node '{name}' already registered (names are never \
+                     recycled; rejoin under a fresh name)"
+                ));
+            }
+            cat.register_node(name, speed, slots);
+        }
+        // storage fabric next: the actor's executor thread resolves
+        // its store at startup
+        self.gass.add_host(name);
+        let handle = spawn_node(
+            NodeConfig {
+                name: name.to_string(),
+                slots,
+                speed,
+                heartbeat_s: 2.0,
+                time_scale: self.config.time_scale,
+            },
+            self.gass.clone(),
+            self.pool.clone(),
+            self.node_out_tx.clone(),
+        );
+        let tx = handle.tx.clone();
+        lock(&self.nodes).insert(name.to_string(), handle);
+        // GRIS entry BEFORE the broker announcement: the broker's
+        // rebalancer updates this entry's nbricks after it moves
+        // bricks, so publishing afterwards could clobber (or miss) it
+        {
+            let mut dir = lock(&self.gris);
+            NodeInfoProvider {
+                name: name.to_string(),
+                cpus: slots,
+                speed,
+                mbps: (self.config.link.bandwidth_bps * 8.0 / 1e6) as u64,
+                free_slots: slots,
+                bricks: vec![],
+                up: true,
+            }
+            .publish(&mut dir, "geps");
+        }
+        // the catalogue row and GRIS entry exist by now, so when the
+        // broker processes this announcement its rebalancer sees the
+        // newcomer as live and can decorate its directory entry
+        lock(&self.pending_joins).insert(name.to_string(), tx);
+        let _ = self.ctl_tx.send(Message::NodeJoin {
+            name: name.to_string(),
+            speed,
+            slots: slots as u32,
+        });
+        self.metrics.counter("cluster.nodes_joined").inc();
+        Ok(())
     }
 
     /// Submit a job (what the portal's submit form does). Returns job id.
@@ -391,19 +578,20 @@ impl ClusterHandle {
 
 /// Restore the replication factor after node deaths (paper §7: "create
 /// a redundancy mechanism to recover from a malfunction in the nodes").
+/// Returns the bricks that are beyond recovery (no surviving replica);
+/// the broker fails their jobs explicitly.
 fn recover_replication(
     catalog: &Arc<Mutex<Catalog>>,
     gass: &GassService,
     replication: usize,
     metrics: &Arc<Registry>,
-) {
-    use std::collections::{BTreeSet};
+) -> Vec<BrickId> {
     let (holders_map, down, live): (
-        std::collections::BTreeMap<crate::brick::BrickId, Vec<String>>,
+        BTreeMap<BrickId, Vec<String>>,
         BTreeSet<String>,
         Vec<String>,
     ) = {
-        let cat = catalog.lock().unwrap();
+        let cat = lock(catalog);
         let holders = cat
             .bricks
             .iter()
@@ -424,24 +612,129 @@ fn recover_replication(
         (holders, down, live)
     };
     let rr = Rereplicator::new(replication);
-    let plans = rr.plan(&holders_map, &down, &live);
+    let plan = rr.plan(&holders_map, &down, &live);
+    if !plan.copies.is_empty() {
+        let done = rr.execute(&plan.copies, gass);
+        let mut cat = lock(catalog);
+        for p in &done {
+            metrics.counter("ft.bricks_rereplicated").inc();
+            let mut new_holders: Vec<String> = holders_map
+                .get(&p.brick)
+                .cloned()
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|h| !down.contains(h))
+                .collect();
+            new_holders.push(p.target.clone());
+            cat.set_brick_holders(p.brick, new_holders);
+        }
+    }
+    plan.unrecoverable
+}
+
+/// Elastic membership, data side: copy a fair share of bricks to
+/// `newcomer` and make it their primary holder so subsequent locality
+/// scheduling lands on it. Bytes move over GASS with its end-to-end
+/// checksum verification *before* any holder list is rewritten via
+/// [`Catalog::set_brick_holders`] (catalogue + WAL in one critical
+/// section). The donor's on-disk copy is retired from the catalogue
+/// but left on disk (lazy deletion), so jobs scheduled against the old
+/// placement keep reading valid bytes.
+fn rebalance_to_newcomer(
+    catalog: &Arc<Mutex<Catalog>>,
+    gass: &GassService,
+    gris: &Arc<Mutex<Directory>>,
+    metrics: &Arc<Registry>,
+    newcomer: &str,
+) {
+    let (holders_map, events_map, live): (
+        BTreeMap<BrickId, Vec<String>>,
+        BTreeMap<BrickId, u64>,
+        Vec<String>,
+    ) = {
+        let cat = lock(catalog);
+        let holders = cat
+            .bricks
+            .iter()
+            .map(|(_, b)| (b.brick, b.holders.clone()))
+            .collect();
+        let events = cat
+            .bricks
+            .iter()
+            .map(|(_, b)| (b.brick, b.n_events))
+            .collect();
+        let live = cat
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.up)
+            .map(|(_, n)| n.name.clone())
+            .collect();
+        (holders, events, live)
+    };
+    let rb = Rebalancer::new();
+    let plans = rb.plan(&holders_map, newcomer, &live);
     if plans.is_empty() {
         return;
     }
-    let done = rr.execute(&plans, gass);
-    let mut cat = catalog.lock().unwrap();
-    for p in &done {
-        metrics.counter("ft.bricks_rereplicated").inc();
-        let mut new_holders: Vec<String> = holders_map
-            .get(&p.brick)
-            .cloned()
-            .unwrap_or_default()
-            .into_iter()
-            .filter(|h| !down.contains(h))
-            .collect();
-        new_holders.push(p.target.clone());
-        cat.update_brick_holders(p.brick, new_holders);
+    let done = rb.execute(&plans, gass);
+    let mut applied: Vec<CopyPlan> = Vec::new();
+    {
+        let mut cat = lock(catalog);
+        for p in &done {
+            let mut rest: Vec<String> =
+                holders_map.get(&p.brick).cloned().unwrap_or_default();
+            rest.retain(|h| h != &p.source && h != newcomer);
+            let mut new_holders = vec![newcomer.to_string()];
+            new_holders.extend(rest);
+            if cat.set_brick_holders(p.brick, new_holders) {
+                metrics.counter("ft.bricks_rebalanced").inc();
+                applied.push(p.clone());
+            }
+        }
     }
+    if applied.is_empty() {
+        return;
+    }
+    // GRIS mirrors the new placement (the paper's Fig 3 brick view):
+    // bind the newcomer's brick entries, retire the donors' stale ones,
+    // and adjust nbricks on both sides so the directory never
+    // contradicts the catalogue placement the scheduler uses
+    let mut dir = lock(gris);
+    let dn = format!("nn={newcomer}, o=geps");
+    for p in &applied {
+        dir.bind(
+            Entry::new(&format!("brick={}, {dn}", p.brick))
+                .with("objectclass", "GridBrick")
+                .with("brick", p.brick)
+                .with(
+                    "events",
+                    events_map.get(&p.brick).copied().unwrap_or(0),
+                )
+                .with("holder", newcomer),
+        );
+        dir.unbind(&format!("brick={}, nn={}, o=geps", p.brick, p.source));
+    }
+    let bump = |dir: &mut Directory, node_dn: &str, delta: i64| {
+        if let Some(e) = dir.lookup(node_dn).cloned() {
+            let mut e = e;
+            let old: i64 = e
+                .attrs
+                .get("nbricks")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0);
+            e.attrs
+                .insert("nbricks".into(), (old + delta).max(0).to_string());
+            dir.bind(e);
+        }
+    };
+    let mut shed: BTreeMap<&str, i64> = BTreeMap::new();
+    for p in &applied {
+        *shed.entry(p.source.as_str()).or_insert(0) += 1;
+    }
+    for (source, n) in shed {
+        bump(&mut dir, &format!("nn={source}, o=geps"), -n);
+    }
+    bump(&mut dir, &dn, applied.len() as i64);
 }
 
 // Full-cluster tests need compiled artifacts: see rust/tests/end_to_end.rs.

@@ -7,7 +7,14 @@
 //! - [`Rereplicator`]: after a node death, bricks that fell below the
 //!   replication factor are re-copied from surviving holders to new
 //!   nodes ("create a redundancy mechanism to recover from a
-//!   malfunction in the nodes").
+//!   malfunction in the nodes"). Bricks with *no* surviving replica are
+//!   reported in [`RecoveryPlan::unrecoverable`] so the broker can fail
+//!   the affected jobs loudly instead of letting them hang.
+//! - [`Rebalancer`]: elastic membership — when a node joins mid-run,
+//!   plan brick moves from the most primary-loaded holders to the
+//!   newcomer until it owns a fair share, execute them over GASS
+//!   (integrity-checked) and let the catalogue's holder lists be
+//!   rewritten so locality scheduling lands on the new node.
 
 use crate::brick::BrickId;
 use crate::gass::GassService;
@@ -99,6 +106,17 @@ pub struct CopyPlan {
     pub target: String,
 }
 
+/// Outcome of a recovery planning pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryPlan {
+    /// copies that restore the replication factor
+    pub copies: Vec<CopyPlan>,
+    /// bricks with no surviving replica — nothing can restore them; the
+    /// caller must surface this (metric + explicit job failure) rather
+    /// than silently dropping the brick
+    pub unrecoverable: Vec<BrickId>,
+}
+
 /// Plans and executes recovery copies after node deaths.
 pub struct Rereplicator {
     pub replication: usize,
@@ -112,18 +130,20 @@ impl Rereplicator {
     /// Compute the copies needed to restore the replication factor.
     /// `holders` maps brick -> current holders (placement order);
     /// `down` is the set of dead nodes; `live_nodes` the candidates.
+    /// Bricks whose holders are all down are listed as unrecoverable.
     pub fn plan(
         &self,
         holders: &BTreeMap<BrickId, Vec<String>>,
         down: &BTreeSet<String>,
         live_nodes: &[String],
-    ) -> Vec<CopyPlan> {
-        let mut plans = Vec::new();
+    ) -> RecoveryPlan {
+        let mut plan = RecoveryPlan::default();
         for (brick, hs) in holders {
             let live: Vec<&String> =
                 hs.iter().filter(|h| !down.contains(h.as_str())).collect();
             if live.is_empty() {
-                continue; // unrecoverable: no surviving replica
+                plan.unrecoverable.push(*brick);
+                continue;
             }
             let deficit = self.replication.saturating_sub(live.len());
             if deficit == 0 {
@@ -143,14 +163,14 @@ impl Rereplicator {
                 crate::util::hash::hash_str(&format!("{brick}@{n}"), 0xFA11)
             });
             for target in candidates.into_iter().take(deficit) {
-                plans.push(CopyPlan {
+                plan.copies.push(CopyPlan {
                     brick: *brick,
                     source: source.clone(),
                     target: target.clone(),
                 });
             }
         }
-        plans
+        plan
     }
 
     /// Execute a plan over GASS; returns successfully restored copies.
@@ -159,16 +179,115 @@ impl Rereplicator {
         plans: &[CopyPlan],
         gass: &GassService,
     ) -> Vec<CopyPlan> {
-        let mut done = Vec::new();
-        for p in plans {
-            if gass
-                .transfer(&p.source, &p.target, &brick_path(p.brick))
-                .is_ok()
-            {
-                done.push(p.clone());
-            }
+        execute_copies(plans, gass)
+    }
+}
+
+/// Run a batch of brick copies over GASS (each transfer is
+/// integrity-checked end-to-end by the transfer service); returns the
+/// copies that landed.
+fn execute_copies(plans: &[CopyPlan], gass: &GassService) -> Vec<CopyPlan> {
+    let mut done = Vec::new();
+    for p in plans {
+        if gass
+            .transfer(&p.source, &p.target, &brick_path(p.brick))
+            .is_ok()
+        {
+            done.push(p.clone());
         }
-        done
+    }
+    done
+}
+
+/// Plans and executes brick moves toward a newly joined node (elastic
+/// membership). Generalizes the [`Rereplicator`]'s planning: instead of
+/// restoring a replication deficit, it evens out *primary ownership* —
+/// the queue the locality policy schedules from — by reassigning bricks
+/// from the most-loaded primary holders to the newcomer.
+pub struct Rebalancer;
+
+impl Rebalancer {
+    pub fn new() -> Self {
+        Rebalancer
+    }
+
+    /// Compute the moves that bring `newcomer` up to a fair share of
+    /// primary brick ownership. `holders` maps brick -> holder list
+    /// (primary first); `live_nodes` is every live node *including* the
+    /// newcomer. Deterministic: donors are drained most-loaded-first
+    /// (ties broken by name), each donating its highest-sequence brick.
+    pub fn plan(
+        &self,
+        holders: &BTreeMap<BrickId, Vec<String>>,
+        newcomer: &str,
+        live_nodes: &[String],
+    ) -> Vec<CopyPlan> {
+        let live: BTreeSet<&str> =
+            live_nodes.iter().map(|s| s.as_str()).collect();
+        if !live.contains(newcomer) || live.is_empty() {
+            return Vec::new();
+        }
+        // primary ownership per live donor, skipping bricks the
+        // newcomer already holds (nothing to move for those)
+        let mut by_primary: BTreeMap<&str, Vec<BrickId>> = BTreeMap::new();
+        let mut already = 0usize;
+        for (brick, hs) in holders {
+            if hs.iter().any(|h| h == newcomer) {
+                already += 1;
+                continue;
+            }
+            let Some(primary) =
+                hs.iter().find(|h| live.contains(h.as_str()))
+            else {
+                continue; // no live holder: recovery's problem, not ours
+            };
+            by_primary.entry(primary).or_default().push(*brick);
+        }
+        // bricks are iterated in BTreeMap id order; donate from the back
+        // (highest seq) for a stable, documented choice
+        let fair = holders.len() / live.len();
+        let mut want = fair.saturating_sub(already);
+        let mut plans = Vec::new();
+        while want > 0 {
+            // most-loaded donor still above the fair share
+            let donor = by_primary
+                .iter()
+                .filter(|(_, v)| v.len() > fair.max(1))
+                .max_by(|a, b| {
+                    a.1.len().cmp(&b.1.len()).then(b.0.cmp(a.0))
+                })
+                .map(|(n, _)| *n);
+            let Some(donor) = donor else { break };
+            let Some(brick) =
+                by_primary.get_mut(donor).and_then(|v| v.pop())
+            else {
+                break;
+            };
+            plans.push(CopyPlan {
+                brick,
+                source: donor.to_string(),
+                target: newcomer.to_string(),
+            });
+            want -= 1;
+        }
+        plans
+    }
+
+    /// Execute the moves over GASS; returns the copies whose bytes
+    /// landed (integrity-verified by the transfer service). The caller
+    /// rewrites the catalogue holder lists for exactly these.
+    pub fn execute(
+        &self,
+        plans: &[CopyPlan],
+        gass: &GassService,
+    ) -> Vec<CopyPlan> {
+        execute_copies(plans, gass)
+    }
+}
+
+impl Default for Rebalancer {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -243,18 +362,19 @@ mod tests {
         let down: BTreeSet<String> = ["b".to_string()].into();
         let nodes: Vec<String> =
             ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
-        let plans = r.plan(&h, &down, &nodes);
+        let plan = r.plan(&h, &down, &nodes);
         // both bricks lost one replica; each needs one copy to the one
         // node that doesn't hold it
-        assert_eq!(plans.len(), 2);
-        for p in &plans {
+        assert_eq!(plan.copies.len(), 2);
+        assert!(plan.unrecoverable.is_empty());
+        for p in &plan.copies {
             assert_ne!(p.target, "b");
             assert_ne!(p.source, "b");
         }
     }
 
     #[test]
-    fn plan_skips_healthy_and_unrecoverable() {
+    fn plan_skips_healthy_and_reports_unrecoverable() {
         let r = Rereplicator::new(2);
         let h = holders(&[
             (BrickId::new(1, 0), &["a", "c"]), // healthy
@@ -263,7 +383,10 @@ mod tests {
         let down: BTreeSet<String> = ["b".to_string()].into();
         let nodes: Vec<String> =
             ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
-        assert!(r.plan(&h, &down, &nodes).is_empty());
+        let plan = r.plan(&h, &down, &nodes);
+        assert!(plan.copies.is_empty());
+        // the lost brick is reported, not silently dropped
+        assert_eq!(plan.unrecoverable, vec![BrickId::new(1, 1)]);
     }
 
     #[test]
@@ -287,5 +410,85 @@ mod tests {
             .unwrap()
             .get(&brick_path(brick))
             .is_some());
+    }
+
+    fn live(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn rebalance_moves_a_fair_share_to_the_newcomer() {
+        // 3 donors x 3 bricks, a 4th node joins: fair = 9/4 = 2 moves,
+        // each taken from the currently most-loaded donor
+        let mut entries = Vec::new();
+        let ids: Vec<BrickId> =
+            (0..9).map(|i| BrickId::new(1, i)).collect();
+        let donors = ["node0", "node1", "node2"];
+        for (i, id) in ids.iter().enumerate() {
+            entries.push((*id, donors[i % 3]));
+        }
+        let h: BTreeMap<BrickId, Vec<String>> = entries
+            .into_iter()
+            .map(|(id, d)| (id, vec![d.to_string()]))
+            .collect();
+        let rb = Rebalancer::new();
+        let plans =
+            rb.plan(&h, "node3", &live(&["node0", "node1", "node2", "node3"]));
+        assert_eq!(plans.len(), 2);
+        let sources: BTreeSet<&str> =
+            plans.iter().map(|p| p.source.as_str()).collect();
+        // two distinct donors shed one brick each (3,3,3 -> 2,2,3 + 2)
+        assert_eq!(sources.len(), 2);
+        for p in &plans {
+            assert_eq!(p.target, "node3");
+            assert!(h[&p.brick].contains(&p.source));
+        }
+        // deterministic: planning twice gives the same moves
+        assert_eq!(
+            plans,
+            rb.plan(&h, "node3", &live(&["node0", "node1", "node2", "node3"]))
+        );
+    }
+
+    #[test]
+    fn rebalance_skips_held_bricks_and_balanced_grids() {
+        let h = holders(&[
+            (BrickId::new(1, 0), &["a"]),
+            (BrickId::new(1, 1), &["b"]),
+            (BrickId::new(1, 2), &["new", "a"]),
+        ]);
+        let rb = Rebalancer::new();
+        // newcomer already owns its fair share (3/3 = 1): no moves
+        assert!(rb.plan(&h, "new", &live(&["a", "b", "new"])).is_empty());
+        // a node not in the live set gets nothing
+        assert!(rb.plan(&h, "ghost", &live(&["a", "b"])).is_empty());
+        // donors at or below the fair share are never drained
+        let h2 = holders(&[
+            (BrickId::new(1, 0), &["a"]),
+            (BrickId::new(1, 1), &["b"]),
+        ]);
+        assert!(rb.plan(&h2, "new", &live(&["a", "b", "new"])).is_empty());
+    }
+
+    #[test]
+    fn rebalance_execute_moves_real_bytes_with_integrity() {
+        use crate::netsim::Topology;
+        let gass = GassService::new(Topology::paper_testbed(), 1e9, 1);
+        let brick = BrickId::new(2, 0);
+        gass.store("gandalf")
+            .unwrap()
+            .put(&brick_path(brick), vec![42u8; 2048]);
+        let rb = Rebalancer::new();
+        let plans = vec![CopyPlan {
+            brick,
+            source: "gandalf".into(),
+            target: "hobbit".into(),
+        }];
+        let done = rb.execute(&plans, &gass);
+        assert_eq!(done.len(), 1);
+        assert_eq!(
+            gass.store("hobbit").unwrap().checksum(&brick_path(brick)),
+            gass.store("gandalf").unwrap().checksum(&brick_path(brick)),
+        );
     }
 }

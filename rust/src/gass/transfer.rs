@@ -74,6 +74,19 @@ impl GassService {
         self.stores.lock().unwrap().get(host).cloned()
     }
 
+    /// Elastic membership: provision a store for a host that joined
+    /// after construction. Idempotent — an existing host's store (and
+    /// its blobs) is left untouched. Transfers to/from hosts without a
+    /// topology entry are shaped by the default link.
+    pub fn add_host(&self, host: &str) -> GassStore {
+        self.stores
+            .lock()
+            .unwrap()
+            .entry(host.to_string())
+            .or_default()
+            .clone()
+    }
+
     pub fn topology(&self) -> &Topology {
         &self.topology
     }
@@ -181,6 +194,23 @@ mod tests {
             &TransferSpec { bytes: ByteSize(bytes as u64), streams: 1 },
         );
         assert!((out.virtual_s - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn added_host_can_receive_transfers() {
+        let g = svc();
+        assert!(g.store("node3").is_none());
+        g.add_host("node3");
+        g.store("jse").unwrap().put("/b", vec![5u8; 256]);
+        let out = g.transfer("jse", "node3", "/b").unwrap();
+        assert_eq!(out.bytes, 256);
+        assert_eq!(
+            g.store("node3").unwrap().get("/b").unwrap().as_slice(),
+            &vec![5u8; 256][..]
+        );
+        // idempotent: re-adding does not wipe the store
+        g.add_host("node3");
+        assert!(g.store("node3").unwrap().get("/b").is_some());
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! RFC-1960 LDAP search filter parser + matcher.
+//! RFC-1960 LDAP search filter parser + matcher, with RFC-2254 value
+//! escapes.
 //!
 //! Comparisons are numeric when both sides parse as numbers (MDS
 //! attributes like `cpus`, `freeMemory` are numeric strings), string
-//! otherwise. `=*` is a presence test; a trailing `*` in an equality
-//! value is a prefix match.
+//! otherwise. `=*` is a presence test; a trailing unescaped `*` in an
+//! equality value is a prefix match. Special characters in values —
+//! `(` `)` `*` `\` — are written as RFC-2254 hex escapes (`\28` `\29`
+//! `\2a` `\5c`), so `(gridname=dc\282003\29)` matches the literal
+//! attribute value `dc(2003)` and `(note=\2a)` matches a literal `*`.
 
 use std::collections::BTreeMap;
 
@@ -14,8 +18,10 @@ pub enum Filter {
     Not(Box<Filter>),
     /// attribute present
     Present(String),
-    /// =, with optional trailing-* prefix semantics
+    /// exact (case-insensitive / numeric-aware) equality
     Eq(String, String),
+    /// equality with a trailing unescaped `*`: prefix match
+    Prefix(String, String),
     Ge(String, String),
     Le(String, String),
 }
@@ -117,22 +123,69 @@ impl<'a> P<'a> {
             }
             _ => return Err(self.err("expected '=', '>=' or '<='")),
         };
+        // value scan with RFC-2254 escapes: `\XX` contributes a literal
+        // byte (so `\29` puts a ')' into the value instead of ending
+        // the filter, and `\2a` a literal '*' that is NOT a wildcard)
         let vstart = self.i;
+        let mut raw: Vec<u8> = Vec::new();
+        let mut escaped: Vec<bool> = Vec::new();
         while let Some(&c) = self.b.get(self.i) {
-            if c == b')' {
-                break;
+            match c {
+                b')' => break,
+                b'\\' => {
+                    let hex = self
+                        .b
+                        .get(self.i + 1..self.i + 3)
+                        .and_then(|h| std::str::from_utf8(h).ok())
+                        .and_then(|h| u8::from_str_radix(h, 16).ok());
+                    match hex {
+                        Some(v) => {
+                            raw.push(v);
+                            escaped.push(true);
+                            self.i += 3;
+                        }
+                        None => {
+                            return Err(self.err(
+                                "bad escape: expected \\XX hex pair",
+                            ))
+                        }
+                    }
+                }
+                _ => {
+                    raw.push(c);
+                    escaped.push(false);
+                    self.i += 1;
+                }
             }
-            self.i += 1;
         }
-        let value = std::str::from_utf8(&self.b[vstart..self.i])
-            .map_err(|_| self.err("bad value"))?
-            .trim()
-            .to_string();
+        // trim unescaped ASCII whitespace at both ends (escaped spaces
+        // are deliberate and survive)
+        let mut lo = 0usize;
+        let mut hi = raw.len();
+        while lo < hi && !escaped[lo] && raw[lo].is_ascii_whitespace() {
+            lo += 1;
+        }
+        while hi > lo && !escaped[hi - 1] && raw[hi - 1].is_ascii_whitespace()
+        {
+            hi -= 1;
+        }
+        let presence = hi - lo == 1 && raw[lo] == b'*' && !escaped[lo];
+        let prefix_wildcard =
+            hi > lo && raw[hi - 1] == b'*' && !escaped[hi - 1];
+        let to_string = |bytes: &[u8]| -> Result<String, FilterError> {
+            String::from_utf8(bytes.to_vec()).map_err(|_| FilterError {
+                pos: vstart,
+                msg: "bad value".into(),
+            })
+        };
         Ok(match op {
-            0 if value == "*" => Filter::Present(attr),
-            0 => Filter::Eq(attr, value),
-            1 => Filter::Ge(attr, value),
-            _ => Filter::Le(attr, value),
+            0 if presence => Filter::Present(attr),
+            0 if prefix_wildcard => {
+                Filter::Prefix(attr, to_string(&raw[lo..hi - 1])?)
+            }
+            0 => Filter::Eq(attr, to_string(&raw[lo..hi])?),
+            1 => Filter::Ge(attr, to_string(&raw[lo..hi])?),
+            _ => Filter::Le(attr, to_string(&raw[lo..hi])?),
         })
     }
 }
@@ -172,16 +225,16 @@ impl Filter {
             Filter::Eq(a, v) => match get(a) {
                 None => false,
                 Some(actual) => {
-                    if let Some(prefix) = v.strip_suffix('*') {
-                        actual.to_ascii_lowercase().starts_with(
-                            &prefix.to_ascii_lowercase(),
-                        )
-                    } else {
-                        actual.eq_ignore_ascii_case(v)
-                            || cmp_values(actual, v)
-                                == Some(std::cmp::Ordering::Equal)
-                    }
+                    actual.eq_ignore_ascii_case(v)
+                        || cmp_values(actual, v)
+                            == Some(std::cmp::Ordering::Equal)
                 }
+            },
+            Filter::Prefix(a, p) => match get(a) {
+                None => false,
+                Some(actual) => actual
+                    .to_ascii_lowercase()
+                    .starts_with(&p.to_ascii_lowercase()),
             },
             Filter::Ge(a, v) => match get(a) {
                 None => false,
@@ -260,8 +313,58 @@ mod tests {
     #[test]
     fn prefix_wildcard() {
         let f = parse_filter("(host=gan*)").unwrap();
+        assert_eq!(f, Filter::Prefix("host".into(), "gan".into()));
         assert!(f.matches(&attrs(&[("host", "gandalf")])));
         assert!(!f.matches(&attrs(&[("host", "hobbit")])));
+    }
+
+    #[test]
+    fn rfc2254_escapes_parse_to_literals() {
+        // \28 = '(', \29 = ')', \2a = '*', \5c = '\'
+        assert_eq!(
+            parse_filter(r"(gridname=dc\282003\29)").unwrap(),
+            Filter::Eq("gridname".into(), "dc(2003)".into())
+        );
+        assert_eq!(
+            parse_filter(r"(note=\2a)").unwrap(),
+            Filter::Eq("note".into(), "*".into())
+        );
+        assert_eq!(
+            parse_filter(r"(path=C:\5ctmp)").unwrap(),
+            Filter::Eq("path".into(), r"C:\tmp".into())
+        );
+        // escaped star is literal even in trailing position; unescaped
+        // trailing star after a literal prefix is still a wildcard
+        assert_eq!(
+            parse_filter(r"(v=x\2a)").unwrap(),
+            Filter::Eq("v".into(), "x*".into())
+        );
+        assert_eq!(
+            parse_filter(r"(v=x\28y*)").unwrap(),
+            Filter::Prefix("v".into(), "x(y".into())
+        );
+    }
+
+    #[test]
+    fn rfc2254_escapes_match_literal_values() {
+        let f = parse_filter(r"(gridname=dc\282003\29)").unwrap();
+        assert!(f.matches(&attrs(&[("gridname", "dc(2003)")])));
+        assert!(!f.matches(&attrs(&[("gridname", "dc2003")])));
+        // a literal '*' value can finally be matched at all
+        let star = parse_filter(r"(note=\2a)").unwrap();
+        assert!(star.matches(&attrs(&[("note", "*")])));
+        assert!(!star.matches(&attrs(&[("note", "anything")])));
+        // ... while the unescaped form stays a presence test
+        let present = parse_filter("(note=*)").unwrap();
+        assert_eq!(present, Filter::Present("note".into()));
+        assert!(present.matches(&attrs(&[("note", "anything")])));
+    }
+
+    #[test]
+    fn bad_escapes_are_rejected() {
+        assert!(parse_filter(r"(a=x\2)").is_err()); // truncated pair
+        assert!(parse_filter(r"(a=x\zz)").is_err()); // not hex
+        assert!(parse_filter("(a=x\\").is_err()); // dangling backslash
     }
 
     #[test]

@@ -25,7 +25,20 @@
 //!   *every* affected job), and seal finished runners;
 //! - [`Jse::run_job`] survives as the sequential compatibility mode
 //!   (`max_concurrent_jobs = 1` reproduces the 2003 behaviour that the
-//!   Ext-C bench measures).
+//!   Ext-C bench measures);
+//! - membership is *elastic*: [`Jse::add_node`] folds a node that
+//!   registered mid-run into the loop — its channel joins the dispatch
+//!   set, the liveness monitor starts tracking it, and every in-flight
+//!   runner's [`SchedCtx`] gains the node so policies can offer it work
+//!   immediately (the admission-side rebalancing of bricks toward the
+//!   newcomer lives in `cluster`/`ft`).
+//!
+//! **Robustness contract.** The loop must never panic on bad state:
+//! stale wire traffic is dropped ([`Jse::drop_stale`]), a missing
+//! catalogue row fails only that job, a poisoned catalogue mutex is
+//! recovered rather than propagated ([`Jse::cat`]), and bricks that
+//! become unrecoverable fail their jobs explicitly via
+//! [`Jse::fail_job`] instead of hanging them.
 
 pub mod runner;
 
@@ -33,12 +46,12 @@ use crate::catalog::{Catalog, JobStatus, ResultRow};
 use crate::ft::HeartbeatMonitor;
 use crate::metrics::Registry;
 use crate::rsl::synthesize_task_rsl;
-use crate::scheduler::{Policy, SchedCtx};
+use crate::scheduler::{NodeState, Policy, SchedCtx};
 use crate::wire::Message;
 use runner::JobRunner;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Final accounting for one job.
@@ -163,6 +176,15 @@ impl Jse {
         self.metrics = Some(metrics);
     }
 
+    /// Lock the catalogue, recovering from poisoning
+    /// ([`crate::util::lock`]): a panic on some other thread while it
+    /// held the lock must not cascade into the event loop — the
+    /// coordinator keeps serving the remaining jobs with whatever
+    /// state the catalogue was left in.
+    fn cat(&self) -> MutexGuard<'_, Catalog> {
+        crate::util::lock(&self.catalog)
+    }
+
     pub fn monitor(&self) -> &HeartbeatMonitor {
         &self.monitor
     }
@@ -191,6 +213,78 @@ impl Jse {
         }
     }
 
+    /// Elastic membership: fold a node that registered mid-run into the
+    /// event loop. Its channel joins the dispatch set, the liveness
+    /// monitor starts its clock, and every in-flight runner's context
+    /// gains the node so policies can offer it work on the very next
+    /// dispatch pass. Rejects duplicate names and names of nodes the
+    /// monitor has declared dead (a name is never recycled — churn must
+    /// rejoin under a fresh name). The caller registers the node in the
+    /// catalogue; this method only wires the execution plane.
+    pub fn add_node(
+        &mut self,
+        name: &str,
+        speed: f64,
+        slots: usize,
+        tx: Sender<Message>,
+    ) -> bool {
+        if self.nodes.contains_key(name) || self.monitor.is_dead(name) {
+            return false;
+        }
+        self.nodes.insert(name.to_string(), tx);
+        // seed (not beat): a joined node that never heartbeats must
+        // still be declared dead by the liveness check
+        self.monitor.seed(name);
+        let state = NodeState {
+            name: name.to_string(),
+            speed,
+            slots,
+            up: true,
+        };
+        for r in self.runners.values_mut() {
+            r.add_node(state.clone());
+        }
+        if let Some(m) = &self.metrics {
+            m.counter("jse.nodes_joined").inc();
+        }
+        true
+    }
+
+    /// Fail a queued or in-flight job with an explicit error (e.g. a
+    /// brick of its dataset became unrecoverable): seal it as Failed,
+    /// record the error in the catalogue, and tell the nodes to drop
+    /// its queued tasks. In-flight replies arriving afterwards are
+    /// dropped as stale. Returns false for unknown/terminal jobs.
+    pub fn fail_job(&mut self, job_id: u64, error: &str) -> bool {
+        let out = if let Some(pos) =
+            self.queue.iter().position(|j| *j == job_id)
+        {
+            let _ = self.queue.remove(pos);
+            JobOutcome::failed(job_id, error.to_string())
+        } else if let Some(runner) = self.runners.remove(&job_id) {
+            for tx in self.nodes.values() {
+                let _ = tx.send(Message::JobCancel { job: job_id });
+            }
+            let mut out = runner.out;
+            out.status = JobStatus::Failed;
+            out.error = Some(error.to_string());
+            out
+        } else {
+            return false;
+        };
+        let msg = error.to_string();
+        self.cat().update_job(job_id, |j| {
+            j.status = JobStatus::Failed;
+            j.error = Some(msg.clone());
+        });
+        if let Some(m) = &self.metrics {
+            m.counter("jse.jobs_failed_explicitly").inc();
+        }
+        eprintln!("[jse] failing job {job_id}: {error}");
+        self.completed.push(out);
+        true
+    }
+
     /// Cancel a queued or in-flight job. Tasks already on nodes run to
     /// completion there, but their replies are dropped as stale; every
     /// node is told via [`Message::JobCancel`]. Returns false if the
@@ -214,7 +308,7 @@ impl Jse {
             return false;
         };
         out.status = JobStatus::Cancelled;
-        self.catalog.lock().unwrap().update_job(job_id, |j| {
+        self.cat().update_job(job_id, |j| {
             j.status = JobStatus::Cancelled;
             j.error = Some("cancelled".into());
         });
@@ -229,7 +323,7 @@ impl Jse {
 
     /// Build the scheduling context for a dataset from the catalogue.
     fn build_ctx(&self, dataset: u32) -> SchedCtx {
-        let cat = self.catalog.lock().unwrap();
+        let cat = self.cat();
         let nodes = cat
             .nodes
             .iter()
@@ -245,7 +339,7 @@ impl Jse {
     }
 
     fn mark_node_down(&self, node: &str) {
-        let mut cat = self.catalog.lock().unwrap();
+        let mut cat = self.cat();
         let ids: Vec<u64> = cat
             .nodes
             .iter()
@@ -263,7 +357,7 @@ impl Jse {
         while self.runners.len() < max {
             let Some(job_id) = self.queue.pop_front() else { break };
             let row = {
-                let cat = self.catalog.lock().unwrap();
+                let cat = self.cat();
                 cat.jobs.get(job_id).map(|r| {
                     (r.dataset, r.filter_expr.clone(), r.policy.clone())
                 })
@@ -281,7 +375,7 @@ impl Jse {
             // the filter must compile before anything is submitted
             if let Err(e) = crate::filterexpr::compile(&filter_expr) {
                 let msg = format!("filter rejected: {e}");
-                self.catalog.lock().unwrap().update_job(job_id, |j| {
+                self.cat().update_job(job_id, |j| {
                     j.status = JobStatus::Failed;
                     j.error = Some(msg.clone());
                 });
@@ -289,9 +383,7 @@ impl Jse {
                 continue;
             }
 
-            self.catalog
-                .lock()
-                .unwrap()
+            self.cat()
                 .update_job(job_id, |j| j.status = JobStatus::Staging);
             let ctx = self.build_ctx(dataset);
             // Seed the liveness monitor with every participating node: a
@@ -302,9 +394,7 @@ impl Jse {
             for n in ctx.nodes.iter().filter(|n| n.up) {
                 self.monitor.seed(&n.name);
             }
-            self.catalog
-                .lock()
-                .unwrap()
+            self.cat()
                 .update_job(job_id, |j| j.status = JobStatus::Running);
             if let Some(m) = &self.metrics {
                 m.counter(&format!("jse.jobs_policy.{}", policy.name()))
@@ -327,7 +417,7 @@ impl Jse {
         // capacity view: slots per live node from the catalogue, minus
         // monitor-dead nodes — shared across every in-flight job
         let caps: Vec<(String, usize)> = {
-            let cat = self.catalog.lock().unwrap();
+            let cat = self.cat();
             let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
             for (_, n) in cat.nodes.iter() {
                 if n.up && !self.monitor.is_dead(&n.name) {
@@ -338,6 +428,13 @@ impl Jse {
         };
         let mut lost_channels: BTreeSet<String> = BTreeSet::new();
         for (name, cap) in &caps {
+            // a joining node's catalogue row can land before its
+            // channel reaches the loop: no channel yet means "no
+            // capacity right now", NOT a node death — only a channel
+            // that existed and then failed mid-send is a death below
+            if !self.nodes.contains_key(name) {
+                continue;
+            }
             'slots: loop {
                 let busy: usize =
                     self.runners.values().map(|r| r.busy_on(name)).sum();
@@ -454,7 +551,7 @@ impl Jse {
                 });
                 match hit {
                     Some((node, wall)) => {
-                        let mut cat = self.catalog.lock().unwrap();
+                        let mut cat = self.cat();
                         cat.record_result(ResultRow {
                             job,
                             node,
@@ -516,15 +613,12 @@ impl Jse {
         }
         let out = runner.finish();
         let done = out.status == JobStatus::Done;
-        self.catalog.lock().unwrap().update_job(id, |j| {
+        self.cat().update_job(id, |j| {
             j.status =
                 if done { JobStatus::Merging } else { JobStatus::Failed };
         });
         if done {
-            self.catalog
-                .lock()
-                .unwrap()
-                .update_job(id, |j| j.status = JobStatus::Done);
+            self.cat().update_job(id, |j| j.status = JobStatus::Done);
         }
         self.completed.push(out);
     }
@@ -627,7 +721,7 @@ impl Jse {
                 // already-processed id yields no fresh outcome: report
                 // the committed state from the catalogue instead of a
                 // spurious failure.
-                let cat = self.catalog.lock().unwrap();
+                let cat = self.cat();
                 match cat.jobs.get(job_id) {
                     Some(row) => {
                         let mut out = JobOutcome::pending(job_id);
@@ -648,10 +742,13 @@ impl Jse {
 }
 
 /// Histogram merge = elementwise addition (the paper's result merge).
+/// Total on any input: a ragged payload's trailing bytes are ignored
+/// and a length mismatch leaves the accumulator untouched — malformed
+/// node output must never panic the coordinator.
 pub fn merge_histogram(acc: &mut Vec<f32>, raw: &[u8]) {
     let vals: Vec<f32> = raw
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
     if acc.is_empty() {
         *acc = vals;
@@ -971,6 +1068,90 @@ mod tests {
         assert_eq!(outcome.events_in, 200);
         assert_eq!(outcome.tasks_completed, 2);
         assert!(metrics.counter("jse.stale_messages").get() >= 3);
+        let _ = a_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+    }
+
+    #[test]
+    fn joined_node_receives_work_mid_job() {
+        // elastic membership: a job is running over node "a" alone;
+        // node "c" joins mid-run and must end up executing some of the
+        // job's tasks (gfarm steals from the backlogged holder).
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = fake_node("a", out_tx.clone());
+        let mut cat = catalog_with(1, 6, &["a"]);
+        let job = cat.submit_job(1, "max_pt > 0", "gfarm");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> =
+            [("a".to_string(), a_tx.clone())].into();
+        let mut jse =
+            Jse::new(JseConfig::default(), nodes, out_rx, catalog.clone());
+        let metrics = Arc::new(Registry::new());
+        jse.set_metrics(metrics.clone());
+        jse.enqueue(job);
+        // admit + first dispatch pass before the join
+        jse.step();
+        assert_eq!(jse.active_jobs(), 1, "job should be in flight");
+
+        // "c" registers: catalogue row first (the cluster's admission
+        // path does this), then the execution plane
+        catalog.lock().unwrap().register_node("c", 1.0, 1);
+        let (c_tx, c_j) = fake_node("c", out_tx.clone());
+        assert!(jse.add_node("c", 1.0, 1, c_tx.clone()));
+        assert!(!jse.add_node("c", 1.0, 1, c_tx.clone()), "no name reuse");
+
+        let outcomes = jse.run_until_idle();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].status, JobStatus::Done, "{:?}", outcomes[0].error);
+        assert_eq!(outcomes[0].events_in, 600);
+        assert_eq!(metrics.counter("jse.nodes_joined").get(), 1);
+        // the newcomer really executed tasks for the in-flight job
+        let cat = catalog.lock().unwrap();
+        let on_c = cat
+            .job_results(job)
+            .iter()
+            .filter(|r| r.node == "c")
+            .count();
+        assert!(on_c >= 1, "joined node never got work");
+        drop(cat);
+        let _ = a_tx.send(Message::Shutdown);
+        let _ = c_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+        c_j.join().unwrap();
+    }
+
+    #[test]
+    fn fail_job_seals_queued_and_running_jobs_explicitly() {
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = fake_node("a", out_tx.clone());
+        let mut cat = catalog_with(1, 2, &["a"]);
+        let queued = cat.submit_job(1, "max_pt > 0", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> =
+            [("a".to_string(), a_tx.clone())].into();
+        let mut jse =
+            Jse::new(JseConfig::default(), nodes, out_rx, catalog.clone());
+        jse.enqueue(queued);
+        assert!(jse.fail_job(queued, "brick d1.b0 unrecoverable"));
+        assert!(!jse.fail_job(queued, "again"), "already terminal");
+        assert!(!jse.fail_job(4242, "unknown"), "unknown job");
+        let outcomes = jse.run_until_idle();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].status, JobStatus::Failed);
+        assert!(outcomes[0]
+            .error
+            .as_deref()
+            .unwrap()
+            .contains("unrecoverable"));
+        let row_err = catalog
+            .lock()
+            .unwrap()
+            .jobs
+            .get(queued)
+            .unwrap()
+            .error
+            .clone();
+        assert!(row_err.unwrap().contains("unrecoverable"));
         let _ = a_tx.send(Message::Shutdown);
         a_j.join().unwrap();
     }

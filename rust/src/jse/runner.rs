@@ -25,7 +25,7 @@
 use super::JobOutcome;
 use crate::brick::BrickId;
 use crate::catalog::JobStatus;
-use crate::scheduler::{Policy, SchedCtx, Scheduler, Task};
+use crate::scheduler::{NodeState, Policy, SchedCtx, Scheduler, Task};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
@@ -161,6 +161,20 @@ impl JobRunner {
         self.out.error = Some(error);
         self.sched.on_failure(&node, &task, &self.ctx);
         Some(node)
+    }
+
+    /// Elastic membership: a node joined the grid while this job is in
+    /// flight. Fold it into the job's context as fresh slot capacity
+    /// and tell the policy. Returns false if the name is already a
+    /// participant (names are never recycled within a job, so a
+    /// same-named rejoin after a death is rejected here).
+    pub fn add_node(&mut self, node: NodeState) -> bool {
+        let name = node.name.clone();
+        if !self.ctx.add_node(node) {
+            return false;
+        }
+        self.sched.on_node_up(&name, &self.ctx);
+        true
     }
 
     /// `node` died (missed heartbeats or a closed channel): void its

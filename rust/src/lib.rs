@@ -23,6 +23,32 @@
 //! the grid — see [`jse`] for the architecture and [`cluster`] for the
 //! admission path that feeds it.
 //!
+//! ## Elastic grid membership
+//!
+//! The cluster is elastic in both directions. Nodes can die (heartbeat
+//! liveness, task failover, re-replication — [`ft`]) and, since the
+//! membership extension, **join while work is running**:
+//!
+//! 1. `POST /nodes/add` (portal) or `geps add-node` (CLI) calls
+//!    [`cluster::ClusterHandle::add_node`], which provisions a GASS
+//!    store, spawns the node actor, registers the catalogue `NodeRow`
+//!    (WAL-durable) and publishes the GRIS/MDS entry;
+//! 2. a [`wire::Message::NodeJoin`] control message hands the node's
+//!    channel to the broker, which folds it into the JSE event loop —
+//!    every in-flight job's scheduling context gains the node, so
+//!    policies can offer it work on the next dispatch pass;
+//! 3. the [`ft::Rebalancer`] copies a fair share of bricks to the
+//!    newcomer over GASS (checksum-verified end to end) and rewrites
+//!    holder lists atomically via `Catalog::set_brick_holders`, making
+//!    the newcomer their primary holder so subsequent locality
+//!    scheduling lands on it with full data locality.
+//!
+//! Node names are never recycled: a crashed node rejoins under a fresh
+//! name, which keeps liveness accounting and per-job failover
+//! idempotent. Bricks whose every replica holder died are reported
+//! unrecoverable (`ft.bricks_unrecoverable`) and their jobs failed
+//! explicitly rather than left hanging.
+//!
 //! Module map (see DESIGN.md for the paper-section cross-reference):
 //!
 //! - substrates: [`util`], [`config`], [`events`], [`brick`], [`catalog`],

@@ -6,6 +6,7 @@
 //!   submit     POST a job to a running portal
 //!   status     query job status from a running portal
 //!   cancel     cancel a queued or running job via the portal
+//!   add-node   register a new grid node mid-run (elastic membership)
 //!   node-info  GRIS node query via a running portal
 //!   calibrate  measure PJRT kernel throughput (DES calibration input)
 //!   fig7       run the Fig 7 DES sweep and print the table
@@ -191,6 +192,39 @@ fn cmd_cancel(flags: BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_add_node(flags: BTreeMap<String, String>) -> Result<()> {
+    let node = flags
+        .get("node")
+        .cloned()
+        .ok_or_else(|| anyhow!("--node required"))?;
+    let speed: f64 = flags
+        .get("speed")
+        .map(|s| s.parse().context("--speed"))
+        .transpose()?
+        .unwrap_or(1.0);
+    let slots: u64 = flags
+        .get("slots")
+        .map(|s| s.parse().context("--slots"))
+        .transpose()?
+        .unwrap_or(1);
+    let body = Json::obj()
+        .set("name", node.as_str())
+        .set("speed", speed)
+        .set("slots", slots)
+        .to_string();
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "POST",
+        "/nodes/add",
+        Some(body.as_bytes()),
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    if status >= 300 {
+        bail!("add-node failed with HTTP {status}");
+    }
+    Ok(())
+}
+
 fn cmd_status(flags: BTreeMap<String, String>) -> Result<()> {
     let path = match flags.get("job") {
         Some(id) => format!("/jobs/{id}"),
@@ -337,12 +371,15 @@ fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: geps <serve|demo|submit|status|cancel|node-info|kill|histogram|bricks|calibrate|fig7> [--flags]
+        "usage: geps <serve|demo|submit|status|cancel|add-node|node-info|kill|histogram|bricks|calibrate|fig7> [--flags]
   serve     --config FILE --listen ADDR --gris-listen ADDR
   demo      --config FILE --events N --policy P --filter EXPR
   submit    --portal ADDR --filter EXPR --policy P
   status    --portal ADDR [--job ID]
   cancel    --portal ADDR --job ID           (cancel queued/running job)
+  add-node  --portal ADDR --node NAME [--speed S] [--slots N]
+                                             (join a node mid-run; bricks
+                                              rebalance onto it)
   node-info --portal ADDR [--filter LDAP]
   kill      --portal ADDR --node NAME        (fault injection)
   histogram --portal ADDR --job ID           (visualize merged results)
@@ -363,6 +400,7 @@ fn main() -> Result<()> {
         "submit" => cmd_submit(flags),
         "status" => cmd_status(flags),
         "cancel" => cmd_cancel(flags),
+        "add-node" => cmd_add_node(flags),
         "node-info" => cmd_node_info(flags),
         "kill" => cmd_kill(flags),
         "histogram" => cmd_histogram(flags),

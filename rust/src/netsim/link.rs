@@ -101,12 +101,15 @@ pub fn multi_stream_throughput(link: &Link, streams: u32) -> f64 {
 /// Wall-clock seconds for a transfer: connection setup (1.5 RTT TCP
 /// handshake + control channel) once, plus payload over the aggregate
 /// stream rate. GridFTP's stripes share one control channel, so setup does
-/// not multiply with streams.
+/// not multiply with streams. A zero-byte transfer pays the same setup
+/// and nothing else — it used to short-circuit to a bare RTT, which
+/// made the cost model discontinuous at 0 bytes (an empty transfer was
+/// *cheaper* than the setup every 1-byte transfer paid).
 pub fn transfer_time(link: &Link, spec: &TransferSpec) -> f64 {
-    if spec.bytes == ByteSize::ZERO {
-        return link.rtt(); // control round-trip only
-    }
     let setup = 1.5 * link.rtt();
+    if spec.bytes == ByteSize::ZERO {
+        return setup;
+    }
     let rate = multi_stream_throughput(link, spec.streams);
     setup + spec.bytes.as_f64() / rate
 }
@@ -179,11 +182,17 @@ mod tests {
     }
 
     #[test]
-    fn empty_transfer_costs_a_round_trip() {
+    fn empty_transfer_costs_connection_setup() {
         let l = Link::wan_default_window();
         assert!((transfer_time(&l, &TransferSpec::single(ByteSize::ZERO))
-            - l.rtt())
+            - 1.5 * l.rtt())
         .abs()
             < 1e-12);
+        // the model is continuous at zero: one byte costs setup plus an
+        // infinitesimal payload term, never less than the empty transfer
+        let one = transfer_time(&l, &TransferSpec::single(ByteSize(1)));
+        let zero = transfer_time(&l, &TransferSpec::single(ByteSize::ZERO));
+        assert!(one >= zero);
+        assert!(one - zero < 1e-3, "payload term for 1 byte is tiny");
     }
 }

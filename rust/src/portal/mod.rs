@@ -9,10 +9,17 @@
 //! - `POST /cancel/<id>` — cancel a queued or running job
 //! - `GET /nodes?filter=(ldap...)` — Figs 3/5, GRIS node information
 //! - `GET /histogram/<id>` — merged result visualisation data
+//! - `POST /nodes/add {"name": ..., "speed": ..., "slots": ...}` —
+//!   elastic membership: register a node mid-run. The cluster spawns
+//!   its executor, the broker folds it into the JSE event loop as
+//!   fresh slot capacity, and the rebalancer moves a fair share of
+//!   bricks onto it (integrity-checked copies, holder lists rewritten
+//!   in catalogue + WAL) so subsequent tasks schedule there.
 //! - `POST /kill/<node>` — fault injection (operations/testing surface)
 //! - `GET /bricks` — brick placement view
 //! - `GET /metrics` — coordinator metrics (jobs_queued, jobs_in_flight,
-//!   tasks_outstanding, per-policy job counters, …)
+//!   tasks_outstanding, per-policy job counters, nodes_joined,
+//!   bricks_rebalanced, …)
 //!
 //! The portal is a thin translation layer over [`ClusterHandle`]; all
 //! grid mechanics stay hidden behind it, which is the paper's main
@@ -39,9 +46,18 @@ const INDEX_HTML: &str = r#"<!doctype html>
   <li>GET /jobs/&lt;id&gt; &mdash; job status details</li>
   <li>POST /cancel/&lt;id&gt; &mdash; cancel a queued or running job</li>
   <li>GET /nodes?filter=(&amp;(cpus&gt;=1)(status=up)) &mdash; GRIS node information</li>
+  <li>POST /nodes/add {"name": "node3", "speed": 1.0, "slots": 1} &mdash; join a node mid-run</li>
   <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
   <li>GET /metrics &mdash; coordinator metrics</li>
 </ul>
+<p><b>Membership protocol:</b> a node added via <code>/nodes/add</code> is
+registered in the catalogue (WAL-durable) and GRIS, its executor is
+spawned, and the broker receives a <code>NodeJoin</code> control message:
+running jobs gain the node as fresh slot capacity immediately, and the
+rebalancer copies a fair share of bricks onto it (checksum-verified)
+before rewriting holder lists, so new tasks schedule on it with full
+data locality. Node names are never recycled; a crashed node rejoins
+under a fresh name.</p>
 <p>Example filter expressions: <code>max_pair_mass &gt; 80 &amp;&amp; max_pair_mass &lt; 100</code>,
 <code>n_tracks &gt;= 4 || met &gt; 30</code></p>
 </body></html>"#;
@@ -273,6 +289,47 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                     Json::obj()
                         .set("error", "no such job, or already terminal"),
                 )
+            }
+        }
+        ("POST", "/nodes/add") => {
+            let body = match std::str::from_utf8(&req.body)
+                .map_err(|e| e.to_string())
+                .and_then(|s| Json::parse(s).map_err(|e| e.to_string()))
+            {
+                Ok(j) => j,
+                Err(e) => {
+                    return Response::json(
+                        400,
+                        Json::obj().set("error", format!("bad json: {e}")),
+                    )
+                }
+            };
+            let Some(name) =
+                body.get("name").and_then(Json::as_str).map(String::from)
+            else {
+                return Response::json(
+                    400,
+                    Json::obj().set("error", "missing node name"),
+                );
+            };
+            let speed =
+                body.get("speed").and_then(Json::as_f64).unwrap_or(1.0);
+            let slots = body
+                .get("slots")
+                .and_then(Json::as_u64)
+                .unwrap_or(1) as usize;
+            match cluster.add_node(&name, speed, slots) {
+                Ok(()) => Response::json(
+                    201,
+                    Json::obj()
+                        .set("joined", name.as_str())
+                        .set("speed", speed)
+                        .set("slots", slots as u64),
+                ),
+                Err(e) => Response::json(
+                    400,
+                    Json::obj().set("error", e.to_string()),
+                ),
             }
         }
         ("POST", p) if p.starts_with("/kill/") => {

@@ -111,6 +111,18 @@ impl SchedCtx {
             _ => false,
         }
     }
+
+    /// Elastic membership: fold a newly joined node into this context
+    /// mid-job so the policy can start offering it work. Returns false
+    /// (and changes nothing) if a node of that name already exists —
+    /// a name is never recycled within one job.
+    pub fn add_node(&mut self, node: NodeState) -> bool {
+        if self.nodes.iter().any(|n| n.name == node.name) {
+            return false;
+        }
+        self.nodes.push(node);
+        true
+    }
 }
 
 /// Pull-based scheduling policy. Implementations own their queue state.
@@ -128,6 +140,12 @@ pub trait Scheduler: Send {
 
     /// `node` went down entirely: requeue all its pending affinity work.
     fn on_node_down(&mut self, node: &str, ctx: &SchedCtx);
+
+    /// A node joined the grid mid-job (elastic membership). The default
+    /// is a no-op: pull-based policies see the newcomer the moment the
+    /// event loop starts offering its idle slots through `next_task`
+    /// with the updated context, so most need no queue surgery.
+    fn on_node_up(&mut self, _node: &str, _ctx: &SchedCtx) {}
 
     /// All work assigned AND completed.
     fn is_done(&self) -> bool;
@@ -280,6 +298,37 @@ mod tests {
         assert!(!ctx.mark_down("mordor"), "unknown node is a no-op");
         assert!(!ctx.node("gandalf").unwrap().up);
         assert_eq!(ctx.live_nodes().count(), 1);
+    }
+
+    #[test]
+    fn add_node_joins_once_and_feeds_stealing_policies() {
+        let mut ctx = ctx2();
+        let newcomer = NodeState {
+            name: "rohan".into(),
+            speed: 1.0,
+            slots: 1,
+            up: true,
+        };
+        assert!(ctx.add_node(newcomer.clone()));
+        assert!(!ctx.add_node(newcomer), "names are never recycled");
+        assert_eq!(ctx.live_nodes().count(), 3);
+        // a gfarm scheduler built before the join hands the newcomer
+        // stolen work once the context knows about it
+        let base = ctx2();
+        let mut s = Policy::Gfarm.build(&base);
+        let mut joined = base.clone();
+        assert!(s.next_task("rohan", &joined).is_none(), "not a member yet");
+        joined.add_node(NodeState {
+            name: "rohan".into(),
+            speed: 1.0,
+            slots: 1,
+            up: true,
+        });
+        s.on_node_up("rohan", &joined);
+        let t = s.next_task("rohan", &joined);
+        // ctx2 holds 2 bricks per node; the newcomer steals one
+        assert!(t.is_some(), "joined node must be offered work");
+        assert!(t.unwrap().source.is_some(), "stolen work pays a transfer");
     }
 
     #[test]

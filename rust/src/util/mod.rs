@@ -12,3 +12,15 @@ pub mod rng;
 pub use bytes::ByteSize;
 pub use hash::xxhash64;
 pub use rng::Rng;
+
+/// Lock a mutex, recovering from poisoning. Coordinator threads (the
+/// JSE event loop, the cluster broker) must keep serving even if some
+/// other thread panicked while holding a shared lock — per-row metadata
+/// stays internally consistent, so continuing with the last-written
+/// state beats taking the whole coordinator down.
+pub fn lock<T>(
+    m: &std::sync::Mutex<T>,
+) -> std::sync::MutexGuard<'_, T> {
+    m.lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}

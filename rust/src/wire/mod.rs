@@ -48,6 +48,11 @@ pub enum Message {
     /// completion; the leader discards its reply as stale. Nodes
     /// without work for the job ignore the message.
     JobCancel { job: u64 },
+    /// control plane -> broker: a new node registered with the grid
+    /// mid-run (elastic membership). The broker folds the node into the
+    /// JSE event loop as fresh slot capacity and kicks off brick
+    /// rebalancing toward it. Nodes themselves ignore this kind.
+    NodeJoin { name: String, speed: f64, slots: u32 },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -124,6 +129,7 @@ impl Message {
             Message::Heartbeat { .. } => 4,
             Message::Shutdown => 5,
             Message::JobCancel { .. } => 6,
+            Message::NodeJoin { .. } => 7,
         }
     }
 
@@ -178,6 +184,12 @@ impl Message {
             Message::Shutdown => {}
             Message::JobCancel { job } => {
                 put_varint(&mut body, *job);
+            }
+            Message::NodeJoin { name, speed, slots } => {
+                put_str(&mut body, name);
+                // f64 travels as its IEEE-754 bit pattern in a varint
+                put_varint(&mut body, speed.to_bits());
+                put_varint(&mut body, *slots as u64);
             }
         }
         let mut out = Vec::with_capacity(body.len() + 5);
@@ -244,6 +256,11 @@ impl Message {
             },
             5 => Message::Shutdown,
             6 => Message::JobCancel { job: r.varint()? },
+            7 => Message::NodeJoin {
+                name: r.str()?,
+                speed: f64::from_bits(r.varint()?),
+                slots: r.varint()? as u32,
+            },
             k => return Err(WireError(format!("unknown kind {k}"))),
         };
         if r.i != r.b.len() {
@@ -305,6 +322,16 @@ mod tests {
         roundtrip(Message::Shutdown);
         roundtrip(Message::JobCancel { job: 1234567 });
         roundtrip(Message::JobCancel { job: 0 });
+        roundtrip(Message::NodeJoin {
+            name: "node3".into(),
+            speed: 1.25,
+            slots: 2,
+        });
+        roundtrip(Message::NodeJoin {
+            name: String::new(),
+            speed: 0.0,
+            slots: 0,
+        });
     }
 
     #[test]

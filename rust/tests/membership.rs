@@ -1,0 +1,372 @@
+//! Elastic membership scenario suite: live node join on the REAL
+//! cluster (threads, PJRT compute, GASS byte movement) — join while
+//! idle, join mid-run, kill+join churn, and the portal route.
+//! Requires `make artifacts`.
+//!
+//! The contract under test: `POST /nodes/add` registers a node mid-run
+//! (catalogue NodeRow + WAL, GRIS entry, executor spawned), the broker
+//! folds it into the JSE event loop as fresh slot capacity, and the
+//! rebalancer moves a fair share of bricks onto it — checksum-verified
+//! bytes, holder lists rewritten — so subsequent tasks schedule there.
+//! Merged physics results must be bit-identical to a static grid run.
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use geps::node::store::brick_path;
+use geps::portal::{self, http};
+use geps::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// These tests need the AOT artifacts (`make artifacts`); skip cleanly
+/// when they are absent so the suite does not add new hard failures to
+/// artifact-less environments.
+fn artifacts_present() -> bool {
+    let ok = geps::runtime::default_artifacts_dir()
+        .join("manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn grid3(n_events: usize, replication: usize) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = (0..3)
+        .map(|i| NodeSpec {
+            name: format!("node{i}"),
+            speed: 1.0,
+            slots: 1,
+        })
+        .collect();
+    cfg.replication = replication;
+    cfg.n_events = n_events;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 1000.0;
+    cfg.max_concurrent_jobs = 4;
+    cfg
+}
+
+fn wait_done(cluster: &ClusterHandle, job: u64) -> JobStatus {
+    cluster
+        .wait(job, Duration::from_secs(180))
+        .expect("job should reach a terminal state")
+}
+
+/// Bricks whose catalogue primary holder is `node`.
+fn primaries_of(cluster: &ClusterHandle, node: &str) -> Vec<geps::brick::BrickId> {
+    let cat = cluster.catalog.lock().unwrap();
+    cat.bricks
+        .iter()
+        .filter(|(_, b)| b.holders.first().map(String::as_str) == Some(node))
+        .map(|(_, b)| b.brick)
+        .collect()
+}
+
+/// Poll until the rebalancer has made `node` primary of >= `n` bricks.
+fn wait_rebalanced(
+    cluster: &ClusterHandle,
+    node: &str,
+    n: usize,
+) -> Vec<geps::brick::BrickId> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let moved = primaries_of(cluster, node);
+        if moved.len() >= n {
+            return moved;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "rebalancer never moved {n} bricks to {node} (got {moved:?})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn join_while_idle_rebalances_bricks_and_schedules_on_newcomer() {
+    if !artifacts_present() {
+        return;
+    }
+    // 9 bricks over 3 nodes, RF=1; a 4th node joins while the grid is
+    // idle. Fair share = 9/4 = 2 bricks must move to it.
+    let cluster = ClusterHandle::start(
+        grid3(900, 1),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+
+    // admission validation: bad names, the leader, duplicates
+    assert!(cluster.add_node("", 1.0, 1).is_err());
+    assert!(cluster.add_node("no spaces", 1.0, 1).is_err());
+    assert!(cluster.add_node("jse", 1.0, 1).is_err(), "leader rejected");
+    assert!(cluster.add_node("node0", 1.0, 1).is_err(), "existing name");
+    assert!(cluster.add_node("node3", 0.0, 1).is_err(), "bad speed");
+
+    cluster.add_node("node3", 1.0, 1).unwrap();
+    assert!(
+        cluster.add_node("node3", 1.0, 1).is_err(),
+        "names are never recycled"
+    );
+    assert_eq!(cluster.metrics.counter("cluster.nodes_joined").get(), 1);
+
+    let moved = wait_rebalanced(&cluster, "node3", 2);
+    assert_eq!(moved.len(), 2, "fair share is exactly 9/4 = 2 bricks");
+    assert_eq!(
+        cluster.metrics.counter("ft.bricks_rebalanced").get(),
+        2
+    );
+
+    // the moved bytes are REAL and intact on the newcomer's disk:
+    // checksums match the leader's full reference copy
+    let leader = cluster.config.leader.clone();
+    for brick in &moved {
+        let path = brick_path(*brick);
+        let on_new = cluster
+            .gass()
+            .store("node3")
+            .expect("newcomer has a store")
+            .checksum(&path)
+            .expect("moved brick bytes present on newcomer");
+        let on_leader =
+            cluster.gass().store(&leader).unwrap().checksum(&path).unwrap();
+        assert_eq!(on_new, on_leader, "brick {brick} corrupted in move");
+    }
+
+    // GRIS knows the node (published synchronously by add_node) ...
+    let nodes = cluster.gris_search("o=geps", "(nn=node3)").unwrap();
+    assert_eq!(nodes.len(), 1);
+    // ... and its bricks (bound by the broker just after the catalogue
+    // rewrite, so poll briefly)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let bricks = cluster
+            .gris_search("nn=node3, o=geps", "(objectclass=GridBrick)")
+            .unwrap();
+        if bricks.len() == 2 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "GRIS never published the moved bricks ({bricks:?})"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // subsequent tasks schedule on the newcomer: a locality job runs
+    // the moved bricks exactly where they now live
+    let job = cluster.submit("n_tracks >= 0", "locality");
+    assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    assert_eq!(cat.jobs.get(job).unwrap().events_processed, 900);
+    let on_newcomer = cat
+        .job_results(job)
+        .iter()
+        .filter(|r| r.node == "node3")
+        .count();
+    assert!(
+        on_newcomer >= 1,
+        "no task of the post-join job ran on the newcomer"
+    );
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn join_mid_run_keeps_results_bit_identical_to_static_grid() {
+    if !artifacts_present() {
+        return;
+    }
+    // Histogram bins are integer event counts, so scheduling (and
+    // therefore elasticity) must not perturb a single bit of the
+    // merged physics: run the same batch on a static 3-node grid and
+    // on a grid that gains a 4th node mid-run, then compare.
+    let specs: [(&str, &str); 3] = [
+        ("max_pair_mass > 80 && max_pair_mass < 100", "proof"),
+        ("met > 10", "gfarm"),
+        ("n_tracks >= 0", "central"),
+    ];
+    let run = |join: bool| -> (Vec<Vec<u32>>, Vec<u64>) {
+        let cluster = ClusterHandle::start(
+            grid3(800, 2),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap();
+        let jobs: Vec<u64> = specs
+            .iter()
+            .map(|(f, p)| cluster.submit(f, p))
+            .collect();
+        if join {
+            std::thread::sleep(Duration::from_millis(50));
+            cluster.add_node("node3", 1.0, 1).unwrap();
+        }
+        let mut hists = Vec::new();
+        let mut selected = Vec::new();
+        for (job, (f, p)) in jobs.iter().zip(specs.iter()) {
+            assert_eq!(wait_done(&cluster, *job), JobStatus::Done, "{p} {f}");
+            let cat = cluster.catalog.lock().unwrap();
+            let row = cat.jobs.get(*job).unwrap();
+            assert_eq!(row.events_processed, 800, "{p} {f}");
+            selected.push(row.events_selected);
+            drop(cat);
+            hists.push(
+                cluster
+                    .histogram(*job)
+                    .expect("histogram present")
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect(),
+            );
+        }
+        if join {
+            // the join also repositions data for FUTURE work: a fresh
+            // locality job must put tasks on the newcomer
+            wait_rebalanced(&cluster, "node3", 1);
+            let job = cluster.submit("met >= 0", "locality");
+            assert_eq!(wait_done(&cluster, job), JobStatus::Done);
+            let cat = cluster.catalog.lock().unwrap();
+            assert_eq!(cat.jobs.get(job).unwrap().events_processed, 800);
+            assert!(
+                cat.job_results(job)
+                    .iter()
+                    .any(|r| r.node == "node3"),
+                "post-join job never scheduled on the newcomer"
+            );
+        }
+        cluster.shutdown();
+        (hists, selected)
+    };
+    let (static_h, static_sel) = run(false);
+    let (elastic_h, elastic_sel) = run(true);
+    for (i, (f, p)) in specs.iter().enumerate() {
+        assert_eq!(
+            static_sel[i], elastic_sel[i],
+            "selection differs for {p} / {f}"
+        );
+        assert_eq!(
+            static_h[i], elastic_h[i],
+            "merged histogram differs for {p} / {f}"
+        );
+    }
+}
+
+#[test]
+fn kill_then_join_churn_restores_capacity() {
+    if !artifacts_present() {
+        return;
+    }
+    // Churn: lose a node mid-job (failover covers the work), then join
+    // a replacement under a FRESH name; the rebalancer hands it bricks
+    // and the next job uses it. Dead names stay retired.
+    let cluster = ClusterHandle::start(
+        grid3(900, 2),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let job1 = cluster.submit("n_tracks >= 1", "locality");
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(cluster.kill_node("node2"));
+    assert_eq!(wait_done(&cluster, job1), JobStatus::Done);
+    assert_eq!(
+        cluster
+            .catalog
+            .lock()
+            .unwrap()
+            .jobs
+            .get(job1)
+            .unwrap()
+            .events_processed,
+        900,
+        "failover must lose nothing"
+    );
+
+    // a dead node's name is never recycled...
+    assert!(cluster.add_node("node2", 1.0, 1).is_err());
+    // ...the replacement joins under a fresh one
+    cluster.add_node("node3", 1.0, 1).unwrap();
+    wait_rebalanced(&cluster, "node3", 1);
+
+    let job2 = cluster.submit("met >= 0", "locality");
+    assert_eq!(wait_done(&cluster, job2), JobStatus::Done);
+    let cat = cluster.catalog.lock().unwrap();
+    assert_eq!(cat.jobs.get(job2).unwrap().events_processed, 900);
+    assert!(
+        cat.job_results(job2).iter().any(|r| r.node == "node3"),
+        "replacement node never received work"
+    );
+    assert!(
+        cat.job_results(job2).iter().all(|r| r.node != "node2"),
+        "dead node must not reappear in results"
+    );
+    drop(cat);
+    cluster.shutdown();
+}
+
+#[test]
+fn portal_nodes_add_route() {
+    if !artifacts_present() {
+        return;
+    }
+    let cluster = Arc::new(
+        ClusterHandle::start(
+            grid3(300, 1),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap(),
+    );
+    let (listener, addr) = portal::bind_portal("127.0.0.1:0").unwrap();
+    let c2 = cluster.clone();
+    std::thread::spawn(move || portal::serve(c2, listener));
+
+    // malformed / invalid requests are 400s
+    let (status, _) =
+        http::request(&addr, "POST", "/nodes/add", Some(b"not json")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http::request(
+        &addr,
+        "POST",
+        "/nodes/add",
+        Some(br#"{"speed": 1.0}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "name is required");
+
+    // a good join: 201 with the admission echo
+    let body = Json::obj()
+        .set("name", "node3")
+        .set("speed", 1.5)
+        .set("slots", 2u64)
+        .to_string();
+    let (status, resp) =
+        http::request(&addr, "POST", "/nodes/add", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&resp));
+    let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    assert_eq!(j.get("joined").unwrap().as_str(), Some("node3"));
+
+    // duplicates rejected over HTTP too
+    let (status, _) =
+        http::request(&addr, "POST", "/nodes/add", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 400);
+
+    // the node shows up in the GRIS view with its declared shape
+    let (status, resp) = http::request(
+        &addr,
+        "GET",
+        "/nodes?filter=%28nn%3Dnode3%29",
+        None,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let nodes = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    let arr = nodes.as_arr().unwrap();
+    assert_eq!(arr.len(), 1);
+    assert_eq!(arr[0].get("cpus").unwrap().as_str(), Some("2"));
+
+    if let Ok(c) = Arc::try_unwrap(cluster) {
+        c.shutdown();
+    }
+}
