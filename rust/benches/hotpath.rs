@@ -1,16 +1,25 @@
 //! Bench: L3 hot paths — the coordinator must never be the bottleneck
 //! (DESIGN.md §Perf targets): scheduler decisions, catalogue ops, wire
 //! codec, filter evaluation, brick encode/decode, DES event rate,
-//! histogram merge. Used by the §Perf optimization loop; before/after
-//! numbers live in EXPERIMENTS.md.
+//! histogram merge — plus the columnar-vs-row node hot path (v2 bricks
+//! + filter bytecode vs v1 bricks + tree walk).
+//!
+//! Besides the human-readable table, writes machine-readable results to
+//! `BENCH_hotpath.json` at the repo root so the perf trajectory is
+//! tracked across PRs (CI runs this in smoke mode — set
+//! `GEPS_BENCH_SMOKE=1` for a fast pass — and uploads the JSON as a
+//! workflow artifact).
 
-use geps::brick::{codec, BrickFile, BrickId, Codec};
+use geps::brick::{codec, BrickFile, BrickId, Codec, ColumnarEvents};
 use geps::catalog::Catalog;
-use geps::events::{EventBatch, EventGenerator, GeneratorConfig};
+use geps::events::{
+    EventBatch, EventGenerator, GeneratorConfig, NUM_FEATURES,
+};
 use geps::filterexpr;
 use geps::scheduler::{BrickState, NodeState, Policy, SchedCtx};
 use geps::sim::Engine as SimEngine;
-use geps::util::bench::{bench, print_table};
+use geps::util::bench::{bench, print_table, Stats};
+use geps::util::json::Json;
 use geps::wire::Message;
 
 fn sched_ctx(nodes: usize, bricks: usize) -> SchedCtx {
@@ -35,19 +44,42 @@ fn sched_ctx(nodes: usize, bricks: usize) -> SchedCtx {
     }
 }
 
+/// The node hot-path configuration the columnar comparison runs at.
+const HOT_EVENTS: usize = 2000;
+const HOT_EPP: usize = 256; // events per brick page
+const HOT_BATCH: usize = 256;
+const HOT_TRACKS: usize = 32;
+const HOT_FILTER: &str =
+    "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20 || met > 50";
+
 fn main() {
+    let smoke = std::env::var("GEPS_BENCH_SMOKE").is_ok();
+    // smoke mode: same benches, fewer iterations (CI wants signal that
+    // the path works and a rough number, not tight confidence intervals)
+    let scale = |iters: usize| if smoke { (iters / 10).max(5) } else { iters };
+
     let mut rows = Vec::new();
-    let mut push = |name: &str, unit: &str, per_iter: f64, s: geps::util::bench::Stats| {
+    // (key, events/sec from the mean, median ns per iteration)
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    let mut push = |name: &str,
+                    key: Option<&str>,
+                    unit: &str,
+                    per_iter: f64,
+                    s: Stats| {
+        let tput = s.throughput(per_iter);
         rows.push(vec![
             name.to_string(),
             format!("{:.2} us", s.mean_ns / 1e3),
-            format!("{:.0} {unit}/s", s.throughput(per_iter)),
+            format!("{tput:.0} {unit}/s"),
         ]);
+        if let Some(k) = key {
+            results.push((k.to_string(), tput, s.p50_ns));
+        }
     };
 
     // scheduler: full drain of 1024 bricks over 16 nodes
     let ctx = sched_ctx(16, 1024);
-    let s = bench(3, 30, || {
+    let s = bench(3, scale(30), || {
         let mut sched = Policy::Locality.build(&ctx);
         let mut n = 0;
         loop {
@@ -67,9 +99,9 @@ fn main() {
         }
         assert_eq!(n, 1024);
     });
-    push("scheduler drain (locality, 1024 tasks)", "decisions", 1024.0, s);
+    push("scheduler drain (locality, 1024 tasks)", None, "decisions", 1024.0, s);
 
-    let s = bench(3, 30, || {
+    let s = bench(3, scale(30), || {
         let mut sched = Policy::Proof.build(&ctx);
         let mut n = 0;
         while !sched.is_done() {
@@ -88,10 +120,10 @@ fn main() {
         }
         std::hint::black_box(n);
     });
-    push("scheduler drain (proof packets)", "packets", 1.0, s);
+    push("scheduler drain (proof packets)", None, "packets", 1.0, s);
 
     // catalogue: submit+poll+update cycle
-    let s = bench(3, 50, || {
+    let s = bench(3, scale(50), || {
         let mut cat = Catalog::new();
         let mut cursor = 0;
         for i in 0..200 {
@@ -105,7 +137,7 @@ fn main() {
             });
         }
     });
-    push("catalog submit+poll+update x200", "ops", 600.0, s);
+    push("catalog submit+poll+update x200", None, "ops", 600.0, s);
 
     // wire codec round-trip
     let msg = Message::TaskDone {
@@ -117,55 +149,207 @@ fn main() {
         result_bytes: 4800,
         histogram: vec![0u8; 8 * 64 * 4],
     };
-    let s = bench(100, 5000, || {
+    let s = bench(100, scale(5000), || {
         let enc = msg.encode();
         let (dec, _) = Message::decode(&enc).unwrap();
         std::hint::black_box(dec);
     });
-    push("wire codec TaskDone round-trip (2KB hist)", "msgs", 1.0, s);
+    push("wire codec TaskDone round-trip (2KB hist)", None, "msgs", 1.0, s);
 
-    // filter expression over a feature matrix
-    let filter = filterexpr::compile(
-        "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20 || met > 50",
-    )
-    .unwrap();
-    let feats: Vec<f32> = (0..256 * 8).map(|i| (i % 97) as f32).collect();
-    let s = bench(100, 5000, || {
-        std::hint::black_box(filter.accept_batch(&feats, 256).len());
+    // ---- the node hot path: columnar v2 vs row-wise v1 ----------------
+    let events =
+        EventGenerator::new(GeneratorConfig::default(), 7).take(HOT_EVENTS);
+    let cols = ColumnarEvents::from_events(&events);
+    let v1 =
+        BrickFile::encode(BrickId::new(1, 0), &events, Codec::Lzss, HOT_EPP);
+    let v2 = BrickFile::encode_columnar(
+        BrickId::new(1, 0),
+        &cols,
+        Codec::Lzss,
+        HOT_EPP,
+    );
+    let filter = filterexpr::compile(HOT_FILTER).unwrap();
+    // one batch worth of synthetic kernel output, reused per page
+    let feats: Vec<f32> =
+        (0..HOT_BATCH * NUM_FEATURES).map(|i| (i % 97) as f32).collect();
+
+    // decode: v1 rows vs v2 columns
+    let s = bench(3, scale(60), || {
+        let (_, dec) = BrickFile::decode(&v1.bytes).unwrap();
+        assert_eq!(dec.len(), HOT_EVENTS);
     });
-    push("filter eval, 256-event batch", "events", 256.0, s);
+    push(
+        "brick decode v1 rows (LZSS, 2000 ev)",
+        Some("decode_v1_rowwise"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+    let s = bench(3, scale(60), || {
+        let (_, dec) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+        assert_eq!(dec.len(), HOT_EVENTS);
+    });
+    push(
+        "brick decode v2 columnar (LZSS, 2000 ev)",
+        Some("decode_v2_columnar"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+
+    // batch packing: row structs vs column slices
+    let s = bench(10, scale(500), || {
+        for chunk in events.chunks(HOT_BATCH) {
+            std::hint::black_box(EventBatch::pack(
+                chunk, HOT_BATCH, HOT_TRACKS,
+            ));
+        }
+    });
+    push(
+        "EventBatch::pack rows 2000 ev",
+        Some("pack_rowwise"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+    let s = bench(10, scale(500), || {
+        let mut start = 0;
+        while start < cols.len() {
+            let end = (start + HOT_BATCH).min(cols.len());
+            std::hint::black_box(cols.pack_range(
+                (start, end),
+                HOT_BATCH,
+                HOT_TRACKS,
+            ));
+            start = end;
+        }
+    });
+    push(
+        "pack_range columns 2000 ev",
+        Some("pack_columnar"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+
+    // filter: recursive tree walk vs postfix bytecode
+    let s = bench(100, scale(5000), || {
+        std::hint::black_box(
+            filter.accept_batch_treewalk(&feats, HOT_BATCH).len(),
+        );
+    });
+    push(
+        "filter tree-walk, 256-event batch",
+        Some("filter_treewalk"),
+        "events",
+        HOT_BATCH as f64,
+        s,
+    );
+    let mut scratch = filterexpr::VmScratch::new();
+    let mut mask = Vec::new();
+    let s = bench(100, scale(5000), || {
+        filter.accept_batch_into(&feats, HOT_BATCH, &mut scratch, &mut mask);
+        std::hint::black_box(mask.len());
+    });
+    push(
+        "filter bytecode, 256-event batch",
+        Some("filter_bytecode"),
+        "events",
+        HOT_BATCH as f64,
+        s,
+    );
+
+    // end-to-end decode→pack→filter node path, old vs new
+    let s = bench(3, scale(40), || {
+        let (_, evs) = BrickFile::decode(&v1.bytes).unwrap();
+        let mut accepted = 0usize;
+        for chunk in evs.chunks(HOT_BATCH) {
+            let batch = EventBatch::pack(chunk, HOT_BATCH, HOT_TRACKS);
+            let m = filter.accept_batch_treewalk(&feats, batch.n_real());
+            accepted += m.iter().filter(|&&k| k).count();
+        }
+        std::hint::black_box(accepted);
+    });
+    push(
+        "end-to-end v1: decode+pack+tree-walk",
+        Some("end_to_end_v1_row_treewalk"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+    let mut scratch = filterexpr::VmScratch::new();
+    let mut mask = Vec::new();
+    let s = bench(3, scale(40), || {
+        let (_, c) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+        let mut accepted = 0usize;
+        let mut start = 0;
+        while start < c.len() {
+            let end = (start + HOT_BATCH).min(c.len());
+            let batch = c.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+            filter.accept_batch_into(
+                &feats,
+                batch.n_real(),
+                &mut scratch,
+                &mut mask,
+            );
+            accepted += mask.iter().filter(|&&k| k).count();
+            start = end;
+        }
+        std::hint::black_box(accepted);
+    });
+    push(
+        "end-to-end v2: decode+pack+bytecode",
+        Some("end_to_end_v2_columnar_bytecode"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+
+    // bit-identity checks backing the JSON claims: v1 and v2 bricks must
+    // produce identical kernel batches, and both filter engines must
+    // produce identical accept masks
+    let (_, rows_v1) = BrickFile::decode(&v1.bytes).unwrap();
+    let (_, cols_v2) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+    let mut batches_identical = true;
+    let mut start = 0;
+    for chunk in rows_v1.chunks(HOT_BATCH) {
+        let end = start + chunk.len();
+        let a = EventBatch::pack(chunk, HOT_BATCH, HOT_TRACKS);
+        let b = cols_v2.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+        batches_identical &= a == b;
+        start = end;
+    }
+    let masks_identical = filter.accept_batch(&feats, HOT_BATCH)
+        == filter.accept_batch_treewalk(&feats, HOT_BATCH);
+    assert!(batches_identical, "v1 and v2 kernel batches diverged");
+    assert!(masks_identical, "bytecode and tree-walk masks diverged");
 
     // brick encode/decode (LZSS) of 500 events
-    let events = EventGenerator::new(GeneratorConfig::default(), 7).take(500);
-    let s = bench(3, 100, || {
-        let b = BrickFile::encode(BrickId::new(1, 0), &events, Codec::Lzss, 128);
+    let ev500 = &events[..500];
+    let s = bench(3, scale(100), || {
+        let b = BrickFile::encode(BrickId::new(1, 0), ev500, Codec::Lzss, 128);
         let (_, dec) = BrickFile::decode(&b.bytes).unwrap();
         assert_eq!(dec.len(), 500);
     });
-    push("brick encode+decode 500 events (LZSS)", "events", 500.0, s);
+    push("brick encode+decode 500 events (LZSS)", None, "events", 500.0, s);
 
     // raw LZSS on a 1 MB event-like payload
-    let brick = BrickFile::encode(BrickId::new(1, 0), &events, Codec::Raw, 500);
+    let brick = BrickFile::encode(BrickId::new(1, 0), ev500, Codec::Raw, 500);
     let payload = &brick.bytes;
-    let s = bench(3, 50, || {
+    let s = bench(3, scale(50), || {
         let c = codec::compress(payload);
         std::hint::black_box(codec::decompress(&c, payload.len()).unwrap());
     });
     push(
         "LZSS compress+decompress brick payload",
+        None,
         "MB",
         payload.len() as f64 / 1e6,
         s,
     );
 
-    // batch packing (node executor inner loop)
-    let s = bench(10, 500, || {
-        std::hint::black_box(EventBatch::pack(&events, 256, 32));
-    });
-    push("EventBatch::pack 256x32", "events", 500.0, s);
-
     // DES engine raw event rate
-    let s = bench(3, 30, || {
+    let s = bench(3, scale(30), || {
         struct W {
             n: u64,
         }
@@ -181,21 +365,101 @@ fn main() {
         eng.run(&mut w);
         assert_eq!(w.n, 100_000);
     });
-    push("DES engine 100k events", "sim-events", 100_000.0, s);
+    push("DES engine 100k events", None, "sim-events", 100_000.0, s);
 
     // histogram merge
     let mut acc: Vec<f32> = vec![0.0; 8 * 64];
     let raw: Vec<u8> = (0..8 * 64)
         .flat_map(|_| 1.0f32.to_le_bytes())
         .collect();
-    let s = bench(100, 5000, || {
+    let s = bench(100, scale(5000), || {
         geps::jse::merge_histogram(&mut acc, &raw);
     });
-    push("histogram merge (8x64 bins)", "merges", 1.0, s);
+    push("histogram merge (8x64 bins)", None, "merges", 1.0, s);
 
     print_table(
         "L3 hot paths",
         &["path", "mean latency", "throughput"],
         &rows,
     );
+
+    write_json(smoke, &results, batches_identical, masks_identical);
+}
+
+/// Emit `BENCH_hotpath.json` at the repo root: events/sec per stage,
+/// columnar-vs-row speedups, and the bit-identity checks.
+fn write_json(
+    smoke: bool,
+    results: &[(String, f64, f64)],
+    batches_identical: bool,
+    masks_identical: bool,
+) {
+    // speedups compare MEDIAN iteration times (robust against a single
+    // noisy-neighbor spike in smoke mode, where iteration counts are low)
+    let p50 = |k: &str| {
+        results
+            .iter()
+            .find(|(n, _, _)| n == k)
+            .map(|(_, _, p)| *p)
+            .unwrap_or(0.0)
+    };
+    let ratio = |new: &str, old: &str| {
+        let (n, o) = (p50(new), p50(old));
+        if n > 0.0 {
+            o / n // same work per iteration, so time ratio = speedup
+        } else {
+            0.0
+        }
+    };
+
+    let mut eps = Json::obj();
+    for (k, v, _) in results {
+        eps = eps.set(k, *v);
+    }
+    let doc = Json::obj()
+        .set("bench", "hotpath")
+        .set("generated", true)
+        .set("smoke", smoke)
+        .set(
+            "config",
+            Json::obj()
+                .set("events", HOT_EVENTS)
+                .set("events_per_page", HOT_EPP)
+                .set("batch", HOT_BATCH)
+                .set("max_tracks", HOT_TRACKS)
+                .set("codec", "lzss")
+                .set("filter", HOT_FILTER),
+        )
+        .set("events_per_sec", eps)
+        .set(
+            "speedup",
+            Json::obj()
+                .set("decode", ratio("decode_v2_columnar", "decode_v1_rowwise"))
+                .set("pack", ratio("pack_columnar", "pack_rowwise"))
+                .set("filter", ratio("filter_bytecode", "filter_treewalk"))
+                .set(
+                    "end_to_end",
+                    ratio(
+                        "end_to_end_v2_columnar_bytecode",
+                        "end_to_end_v1_row_treewalk",
+                    ),
+                ),
+        )
+        .set(
+            "bit_identical",
+            Json::obj()
+                .set("v1_v2_kernel_batches", batches_identical)
+                .set("treewalk_bytecode_masks", masks_identical),
+        );
+
+    // repo root = parent of the crate dir (rust/)
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_hotpath.json");
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
 }

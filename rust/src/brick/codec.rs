@@ -263,4 +263,113 @@ mod tests {
         let data = vec![b'a'; 500];
         roundtrip(&data);
     }
+
+    #[test]
+    fn all_zero_every_length() {
+        for len in [0usize, 1, 3, 4, 5, 127, 128, 4095, 4096, 4097, 70_000] {
+            roundtrip(&vec![0u8; len]);
+        }
+    }
+
+    #[test]
+    fn all_distinct_bytes() {
+        // no 4-byte repeats at all: pure literal path + the miss-stride
+        // acceleration
+        let data: Vec<u8> = (0..=255u8).collect();
+        roundtrip(&data);
+        // longer pseudo-distinct stream (wide-period LCG keeps 4-grams
+        // effectively unique)
+        let mut x = 1u32;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                (x >> 24) as u8
+            })
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn repeated_four_byte_periods() {
+        // exactly MIN_MATCH-periodic input: every position matches at
+        // distance 4, the minimum representable useful match
+        for period in [b"abcd".to_vec(), vec![0, 1, 2, 3], vec![255, 0, 255, 1]] {
+            for len in [4usize, 7, 8, 16, 4096, 65_537] {
+                let data: Vec<u8> =
+                    period.iter().cycle().take(len).copied().collect();
+                roundtrip(&data);
+            }
+        }
+    }
+
+    #[test]
+    fn near_window_distances() {
+        // a motif, WINDOW-ish bytes of incompressible filler, then the
+        // motif again: matches right at / across the window boundary
+        let motif: Vec<u8> = b"GEPSBRICKMOTIF00".to_vec();
+        let mut rng = Rng::new(41);
+        for gap in [
+            WINDOW - MIN_MATCH - 1,
+            WINDOW - motif.len() - 1,
+            WINDOW - motif.len(),
+            WINDOW - motif.len() + 1,
+            WINDOW - 1,
+            WINDOW,
+            WINDOW + 1,
+        ] {
+            let mut data = motif.clone();
+            data.extend((0..gap).map(|_| rng.next_u64() as u8));
+            data.extend_from_slice(&motif);
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn varint_ten_bytes_is_max() {
+        // u64::MAX encodes to exactly 10 bytes and roundtrips
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX);
+        assert_eq!(buf.len(), 10);
+        assert_eq!(get_varint(&buf), Some((u64::MAX, 10)));
+    }
+
+    #[test]
+    fn varint_overlong_rejected() {
+        // an 11th continuation byte shifts past 64 bits: must be None,
+        // not a wrap or a panic
+        let mut buf = vec![0x80u8; 10];
+        buf.push(0x01);
+        assert_eq!(get_varint(&buf), None);
+        // ... and a run of continuation bytes with no terminator
+        assert_eq!(get_varint(&[0x80; 12]), None);
+        assert_eq!(get_varint(&[0x80]), None);
+    }
+
+    #[test]
+    fn decompress_match_before_start_rejected() {
+        // hand-built stream: a match whose distance exceeds the bytes
+        // produced so far must be rejected
+        let mut c = Vec::new();
+        c.push(0x00); // literal run
+        put_varint(&mut c, 2);
+        c.extend_from_slice(b"ab");
+        c.push(0x01); // match len 4 dist 5 — only 2 bytes exist
+        put_varint(&mut c, 4);
+        put_varint(&mut c, 5);
+        assert_eq!(decompress(&c, 6), None);
+    }
+
+    #[test]
+    fn decompress_truncated_varint_rejected() {
+        let data: Vec<u8> = b"abcdabcdabcd".to_vec();
+        let c = compress(&data);
+        // chop the stream mid-token at every length: never a panic,
+        // never a wrong answer
+        for cut in 0..c.len() {
+            match decompress(&c[..cut], data.len()) {
+                None => {}
+                Some(d) => assert_eq!(d, data),
+            }
+        }
+    }
 }

@@ -1,0 +1,384 @@
+//! Column-wise (SoA) event storage — the in-memory twin of the v2 brick
+//! page layout and the substrate of the per-node hot path.
+//!
+//! The paper's premise is that brick-holding nodes do the event
+//! processing locally, so aggregate throughput is the sum of per-node
+//! hot paths (§4.1). Row-wise `Event` structs fight that: every decoded
+//! event costs two heap allocations (`Vec<Track>`, `Vec<Vertex>`) that
+//! are immediately torn apart again when `EventBatch::pack` builds the
+//! SoA tensors the kernel wants. [`ColumnarEvents`] keeps the data in
+//! column form end to end: one flat buffer per field, with per-event
+//! offset tables, so a brick decodes into kernel-ready columns with
+//! **zero per-event allocation** and batches are packed by slicing.
+//!
+//! Invariants (checked by the brick decoder, assumed everywhere else):
+//! - `ids`, `signal` have length `n` (the event count);
+//! - `track_off` and `vert_off` have length `n + 1`, start at 0, and are
+//!   non-decreasing; `track_off[n]` equals the track-column lengths;
+//! - the five track columns (`e`, `px`, `py`, `pz`, `track_vertex`)
+//!   share one length, as do the four vertex columns.
+
+use crate::events::model::{Event, Track, Vertex};
+use crate::events::EventBatch;
+
+/// A set of events stored column-wise. Event `i` owns tracks
+/// `track_off[i]..track_off[i+1]` and vertices `vert_off[i]..vert_off[i+1]`
+/// of the flat columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnarEvents {
+    /// Event ids (run << 32 | index), one per event.
+    pub ids: Vec<u64>,
+    /// Generator truth label (0/1), one per event — never kernel-visible.
+    pub signal: Vec<u8>,
+    /// Track offset table, `len() + 1` entries, `track_off[0] == 0`.
+    pub track_off: Vec<u32>,
+    /// Track energy column (GeV).
+    pub e: Vec<f32>,
+    /// Track momentum columns (GeV).
+    pub px: Vec<f32>,
+    pub py: Vec<f32>,
+    pub pz: Vec<f32>,
+    /// Per-track vertex association (index into the event's vertex list).
+    pub track_vertex: Vec<u16>,
+    /// Vertex offset table, `len() + 1` entries, `vert_off[0] == 0`.
+    pub vert_off: Vec<u32>,
+    /// Vertex position columns.
+    pub vx: Vec<f32>,
+    pub vy: Vec<f32>,
+    pub vz: Vec<f32>,
+    /// Per-vertex associated-track count.
+    pub vert_ntracks: Vec<u16>,
+}
+
+impl Default for ColumnarEvents {
+    fn default() -> Self {
+        ColumnarEvents::new()
+    }
+}
+
+impl ColumnarEvents {
+    pub fn new() -> Self {
+        ColumnarEvents {
+            ids: Vec::new(),
+            signal: Vec::new(),
+            track_off: vec![0],
+            e: Vec::new(),
+            px: Vec::new(),
+            py: Vec::new(),
+            pz: Vec::new(),
+            track_vertex: Vec::new(),
+            vert_off: vec![0],
+            vx: Vec::new(),
+            vy: Vec::new(),
+            vz: Vec::new(),
+            vert_ntracks: Vec::new(),
+        }
+    }
+
+    /// Pre-size the columns. Writers know all three totals up front;
+    /// the brick decoder knows only `n_events` (track/vertex totals live
+    /// inside each — possibly compressed — page payload), so it passes
+    /// zeros and relies on the bulk column readers' per-page `reserve`
+    /// for amortized growth.
+    pub fn with_capacity(n_events: usize, n_tracks: usize, n_verts: usize) -> Self {
+        let mut c = ColumnarEvents::new();
+        c.ids.reserve(n_events);
+        c.signal.reserve(n_events);
+        c.track_off.reserve(n_events + 1);
+        c.vert_off.reserve(n_events + 1);
+        c.e.reserve(n_tracks);
+        c.px.reserve(n_tracks);
+        c.py.reserve(n_tracks);
+        c.pz.reserve(n_tracks);
+        c.track_vertex.reserve(n_tracks);
+        c.vx.reserve(n_verts);
+        c.vy.reserve(n_verts);
+        c.vz.reserve(n_verts);
+        c.vert_ntracks.reserve(n_verts);
+        c
+    }
+
+    /// Number of events.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Total tracks across all events.
+    pub fn n_tracks_total(&self) -> usize {
+        self.e.len()
+    }
+
+    /// Total vertices across all events.
+    pub fn n_verts_total(&self) -> usize {
+        self.vx.len()
+    }
+
+    /// Track span of event `i` in the flat track columns.
+    #[inline]
+    pub fn tracks_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.track_off[i] as usize..self.track_off[i + 1] as usize
+    }
+
+    /// Vertex span of event `i` in the flat vertex columns.
+    #[inline]
+    pub fn verts_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.vert_off[i] as usize..self.vert_off[i + 1] as usize
+    }
+
+    /// Append one row-wise event (writer path and v1 migration).
+    pub fn push_event(&mut self, ev: &Event) {
+        self.ids.push(ev.id);
+        self.signal.push(ev.is_signal as u8);
+        for t in &ev.tracks {
+            self.e.push(t.e);
+            self.px.push(t.px);
+            self.py.push(t.py);
+            self.pz.push(t.pz);
+            self.track_vertex.push(t.vertex);
+        }
+        self.track_off.push(self.e.len() as u32);
+        for v in &ev.vertices {
+            self.vx.push(v.x);
+            self.vy.push(v.y);
+            self.vz.push(v.z);
+            self.vert_ntracks.push(v.n_tracks);
+        }
+        self.vert_off.push(self.vx.len() as u32);
+    }
+
+    /// Convert a row-wise slice (writer path).
+    pub fn from_events(events: &[Event]) -> Self {
+        let n_tracks: usize = events.iter().map(|e| e.tracks.len()).sum();
+        let n_verts: usize = events.iter().map(|e| e.vertices.len()).sum();
+        let mut c = ColumnarEvents::with_capacity(events.len(), n_tracks, n_verts);
+        for ev in events {
+            c.push_event(ev);
+        }
+        c
+    }
+
+    /// Materialize event `i` as a row-wise struct (migration / result
+    /// inspection — NOT the hot path).
+    pub fn event(&self, i: usize) -> Event {
+        let tr = self.tracks_range(i);
+        let vr = self.verts_range(i);
+        Event {
+            id: self.ids[i],
+            tracks: tr
+                .map(|t| Track {
+                    e: self.e[t],
+                    px: self.px[t],
+                    py: self.py[t],
+                    pz: self.pz[t],
+                    vertex: self.track_vertex[t],
+                })
+                .collect(),
+            vertices: vr
+                .map(|v| Vertex {
+                    x: self.vx[v],
+                    y: self.vy[v],
+                    z: self.vz[v],
+                    n_tracks: self.vert_ntracks[v],
+                })
+                .collect(),
+            is_signal: self.signal[i] != 0,
+        }
+    }
+
+    /// Materialize events `a..b` row-wise (compatibility path).
+    pub fn events_range(&self, a: usize, b: usize) -> Vec<Event> {
+        (a..b).map(|i| self.event(i)).collect()
+    }
+
+    /// Materialize all events row-wise.
+    pub fn to_events(&self) -> Vec<Event> {
+        self.events_range(0, self.len())
+    }
+
+    /// Append all of `other`, rebasing its offset tables — a general
+    /// column-set merge utility (the brick decoder appends pages
+    /// directly into one shared buffer instead).
+    pub fn append(&mut self, other: &ColumnarEvents) {
+        let t0 = self.e.len() as u32;
+        let v0 = self.vx.len() as u32;
+        self.ids.extend_from_slice(&other.ids);
+        self.signal.extend_from_slice(&other.signal);
+        self.track_off
+            .extend(other.track_off[1..].iter().map(|o| o + t0));
+        self.vert_off
+            .extend(other.vert_off[1..].iter().map(|o| o + v0));
+        self.e.extend_from_slice(&other.e);
+        self.px.extend_from_slice(&other.px);
+        self.py.extend_from_slice(&other.py);
+        self.pz.extend_from_slice(&other.pz);
+        self.track_vertex.extend_from_slice(&other.track_vertex);
+        self.vx.extend_from_slice(&other.vx);
+        self.vy.extend_from_slice(&other.vy);
+        self.vz.extend_from_slice(&other.vz);
+        self.vert_ntracks.extend_from_slice(&other.vert_ntracks);
+    }
+
+    /// Gather the events at `idx` (ascending global indices) into a new
+    /// column set — the result-brick path: selected events leave the node
+    /// without ever becoming row-wise structs.
+    pub fn select(&self, idx: &[u32]) -> ColumnarEvents {
+        let n_tracks: usize = idx
+            .iter()
+            .map(|&i| self.tracks_range(i as usize).len())
+            .sum();
+        let n_verts: usize = idx
+            .iter()
+            .map(|&i| self.verts_range(i as usize).len())
+            .sum();
+        let mut out = ColumnarEvents::with_capacity(idx.len(), n_tracks, n_verts);
+        for &i in idx {
+            let i = i as usize;
+            out.ids.push(self.ids[i]);
+            out.signal.push(self.signal[i]);
+            let tr = self.tracks_range(i);
+            out.e.extend_from_slice(&self.e[tr.clone()]);
+            out.px.extend_from_slice(&self.px[tr.clone()]);
+            out.py.extend_from_slice(&self.py[tr.clone()]);
+            out.pz.extend_from_slice(&self.pz[tr.clone()]);
+            out.track_vertex.extend_from_slice(&self.track_vertex[tr]);
+            out.track_off.push(out.e.len() as u32);
+            let vr = self.verts_range(i);
+            out.vx.extend_from_slice(&self.vx[vr.clone()]);
+            out.vy.extend_from_slice(&self.vy[vr.clone()]);
+            out.vz.extend_from_slice(&self.vz[vr.clone()]);
+            out.vert_ntracks
+                .extend_from_slice(&self.vert_ntracks[vr]);
+            out.vert_off.push(out.vx.len() as u32);
+        }
+        out
+    }
+
+    /// Pack events `range.0..range.1` into a kernel-ready batch —
+    /// byte-identical to `EventBatch::pack` over the same row-wise
+    /// events, with no intermediate `Event` structs. Events beyond
+    /// `batch` rows are ignored; tracks beyond `max_tracks` are dropped
+    /// (same truncation rule as `pack`).
+    pub fn pack_range(
+        &self,
+        range: (usize, usize),
+        batch: usize,
+        max_tracks: usize,
+    ) -> EventBatch {
+        let (a, b) = range;
+        debug_assert!(a <= b && b <= self.len());
+        let mut out = EventBatch::zeroed(batch, max_tracks);
+        for (row, i) in (a..b.min(a + batch)).enumerate() {
+            let tr = self.tracks_range(i);
+            out.fill_event(
+                row,
+                self.ids[i],
+                &self.e[tr.clone()],
+                &self.px[tr.clone()],
+                &self.py[tr.clone()],
+                &self.pz[tr],
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{EventGenerator, GeneratorConfig};
+
+    fn gen(n: usize, seed: u64) -> Vec<Event> {
+        EventGenerator::new(GeneratorConfig::default(), seed).take(n)
+    }
+
+    #[test]
+    fn roundtrip_through_columns() {
+        let evs = gen(120, 1);
+        let cols = ColumnarEvents::from_events(&evs);
+        assert_eq!(cols.len(), 120);
+        assert_eq!(cols.to_events(), evs);
+        // single-event materialization agrees
+        assert_eq!(cols.event(7), evs[7]);
+    }
+
+    #[test]
+    fn offsets_are_consistent() {
+        let evs = gen(50, 2);
+        let cols = ColumnarEvents::from_events(&evs);
+        assert_eq!(cols.track_off.len(), 51);
+        assert_eq!(cols.vert_off.len(), 51);
+        assert_eq!(cols.track_off[0], 0);
+        assert_eq!(
+            *cols.track_off.last().unwrap() as usize,
+            cols.n_tracks_total()
+        );
+        assert_eq!(
+            *cols.vert_off.last().unwrap() as usize,
+            cols.n_verts_total()
+        );
+        for i in 0..50 {
+            assert!(cols.track_off[i] <= cols.track_off[i + 1]);
+            assert_eq!(cols.tracks_range(i).len(), evs[i].tracks.len());
+            assert_eq!(cols.verts_range(i).len(), evs[i].vertices.len());
+        }
+    }
+
+    #[test]
+    fn pack_range_matches_rowwise_pack() {
+        let evs = gen(100, 3);
+        let cols = ColumnarEvents::from_events(&evs);
+        for (a, b, batch, max_tracks) in
+            [(0, 100, 128, 32), (10, 42, 32, 32), (90, 100, 32, 4), (5, 5, 8, 8)]
+        {
+            let row = EventBatch::pack(&evs[a..b], batch, max_tracks);
+            let col = cols.pack_range((a, b), batch, max_tracks);
+            assert_eq!(col, row, "range {a}..{b} batch {batch}x{max_tracks}");
+        }
+    }
+
+    #[test]
+    fn pack_range_caps_at_batch_rows() {
+        let evs = gen(40, 4);
+        let cols = ColumnarEvents::from_events(&evs);
+        let row = EventBatch::pack(&evs[0..40], 16, 32);
+        let col = cols.pack_range((0, 40), 16, 32);
+        assert_eq!(col, row);
+        assert_eq!(col.n_real(), 16);
+    }
+
+    #[test]
+    fn append_concatenates() {
+        let evs = gen(60, 5);
+        let a = ColumnarEvents::from_events(&evs[..25]);
+        let b = ColumnarEvents::from_events(&evs[25..]);
+        let mut joined = a;
+        joined.append(&b);
+        assert_eq!(joined, ColumnarEvents::from_events(&evs));
+    }
+
+    #[test]
+    fn select_gathers_rows() {
+        let evs = gen(30, 6);
+        let cols = ColumnarEvents::from_events(&evs);
+        let idx = [0u32, 3, 7, 29];
+        let sel = cols.select(&idx);
+        let expect: Vec<Event> =
+            idx.iter().map(|&i| evs[i as usize].clone()).collect();
+        assert_eq!(sel.to_events(), expect);
+    }
+
+    #[test]
+    fn empty_set() {
+        let cols = ColumnarEvents::new();
+        assert!(cols.is_empty());
+        assert!(cols.to_events().is_empty());
+        let sel = cols.select(&[]);
+        assert_eq!(sel, cols);
+        let b = cols.pack_range((0, 0), 4, 4);
+        assert_eq!(b.n_real(), 0);
+    }
+}

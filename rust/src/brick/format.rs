@@ -4,25 +4,64 @@
 //! container of serialized events:
 //!
 //! ```text
-//! [header]     magic "GEPSBRK1" | version u16 | codec u8 | reserved u8
-//!              dataset u32 | seq u32 | n_events u64 | n_pages u32
+//! [header]     magic "GEPSBRK1" | version u16 (1 | 2) | codec u8 |
+//!              reserved u8 | dataset u32 | seq u32 | n_events u64 |
+//!              n_pages u32
 //! [page]*      n_events u32 | raw_len u32 | stored_len u32 |
 //!              xxhash64(stored bytes) u64 | stored bytes
 //! [trailer]    xxhash64 of everything before the trailer
 //! ```
 //!
+//! The *page payload* (the raw bytes before optional compression) comes
+//! in two layouts, selected by the header version:
+//!
+//! **v1 — row-wise** (migration format): events serialized one after
+//! another, each as `id u64 | n_tracks u16 | n_vertices u16 | signal u8`
+//! followed by its track and vertex records.
+//!
+//! **v2 — columnar (SoA)**: one flat array per field, so a page decodes
+//! straight into kernel-ready [`ColumnarEvents`] buffers with zero
+//! per-event allocation:
+//!
+//! ```text
+//! n_tracks u32 | n_verts u32            (page column lengths)
+//! ids          u64 × n_events
+//! signal       u8  × n_events
+//! track_count  u16 × n_events           (prefix-summed into offsets)
+//! vert_count   u16 × n_events
+//! e, px, py, pz        f32 × n_tracks   (one array per component)
+//! track_vertex         u16 × n_tracks
+//! vx, vy, vz           f32 × n_verts
+//! vert_ntracks         u16 × n_verts
+//! ```
+//!
+//! **Version negotiation:** readers accept both versions ([`decode`] and
+//! [`decode_columnar`] dispatch on the header); writers emit v2
+//! ([`BrickFile::encode_columnar`] — the cluster authoring and node
+//! result paths) while [`BrickFile::encode`] keeps producing v1 for
+//! migration and format tests. Both decode paths yield bit-identical
+//! events, batches, and therefore histograms.
+//!
 //! Every page is independently decodable (so nodes can stream-filter
 //! without loading whole bricks) and every page carries its own checksum —
 //! corruption is detected, which the replication layer (`replica`) turns
 //! into failover instead of wrong answers.
+//!
+//! [`decode`]: BrickFile::decode
+//! [`decode_columnar`]: BrickFile::decode_columnar
 
 use crate::brick::codec;
+use crate::brick::columnar::ColumnarEvents;
 use crate::brick::BrickId;
-use crate::events::model::{Event, Track, Vertex};
+use crate::events::model::Event;
 use crate::util::xxhash64;
+use std::borrow::Cow;
 
 const MAGIC: &[u8; 8] = b"GEPSBRK1";
-const VERSION: u16 = 1;
+/// Row-wise page payloads (the 2003-style serialization).
+pub const VERSION_V1: u16 = 1;
+/// Columnar (SoA) page payloads — the hot-path format.
+pub const VERSION_V2: u16 = 2;
 const HASH_SEED: u64 = 0x6765_7073; // "geps"
 
 /// Per-page codec.
@@ -46,6 +85,9 @@ impl Codec {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BrickMeta {
     pub id: BrickId,
+    /// Page payload layout: [`VERSION_V1`] (row-wise) or [`VERSION_V2`]
+    /// (columnar).
+    pub version: u16,
     pub codec: Codec,
     pub n_events: u64,
     pub n_pages: u32,
@@ -129,9 +171,54 @@ impl<'a> Reader<'a> {
     fn u8(&mut self) -> Result<u8, BrickError> {
         Ok(self.take(1)?[0])
     }
+
+    /// Bulk-read `n` little-endian f32s into a column buffer.
+    fn f32_col(&mut self, n: usize, out: &mut Vec<f32>) -> Result<(), BrickError> {
+        let b = self.take(n * 4)?;
+        out.reserve(n);
+        for c in b.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Bulk-read `n` little-endian u16s into a column buffer.
+    fn u16_col(&mut self, n: usize, out: &mut Vec<u16>) -> Result<(), BrickError> {
+        let b = self.take(n * 2)?;
+        out.reserve(n);
+        for c in b.chunks_exact(2) {
+            out.push(u16::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Bulk-read `n` little-endian u64s into a column buffer.
+    fn u64_col(&mut self, n: usize, out: &mut Vec<u64>) -> Result<(), BrickError> {
+        let b = self.take(n * 8)?;
+        out.reserve(n);
+        for c in b.chunks_exact(8) {
+            out.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
 }
 
+/// v1 row-wise event serialization.
 fn encode_event(out: &mut Vec<u8>, ev: &Event) {
+    // same fail-fast as the v2 writer: a wrapped count would serialize
+    // all the records but only be discovered at decode time
+    assert!(
+        ev.tracks.len() <= u16::MAX as usize,
+        "event {}: {} tracks exceed the u16 brick limit",
+        ev.id,
+        ev.tracks.len()
+    );
+    assert!(
+        ev.vertices.len() <= u16::MAX as usize,
+        "event {}: {} vertices exceed the u16 brick limit",
+        ev.id,
+        ev.vertices.len()
+    );
     put_u64(out, ev.id);
     put_u16(out, ev.tracks.len() as u16);
     put_u16(out, ev.vertices.len() as u16);
@@ -151,35 +238,217 @@ fn encode_event(out: &mut Vec<u8>, ev: &Event) {
     }
 }
 
-fn decode_event(r: &mut Reader) -> Result<Event, BrickError> {
+/// v1 row-wise event deserialization, appended straight into columns
+/// (even the migration path never builds per-event `Vec`s).
+fn decode_event_columnar(
+    r: &mut Reader,
+    cols: &mut ColumnarEvents,
+) -> Result<(), BrickError> {
     let id = r.u64()?;
     let nt = r.u16()? as usize;
     let nv = r.u16()? as usize;
-    let is_signal = r.u8()? != 0;
-    let mut tracks = Vec::with_capacity(nt);
+    let is_signal = r.u8()?;
+    cols.ids.push(id);
+    cols.signal.push((is_signal != 0) as u8);
     for _ in 0..nt {
-        let e = r.f32()?;
-        let px = r.f32()?;
-        let py = r.f32()?;
-        let pz = r.f32()?;
-        let vertex = r.u16()?;
-        tracks.push(Track { e, px, py, pz, vertex });
+        cols.e.push(r.f32()?);
+        cols.px.push(r.f32()?);
+        cols.py.push(r.f32()?);
+        cols.pz.push(r.f32()?);
+        cols.track_vertex.push(r.u16()?);
     }
-    let mut vertices = Vec::with_capacity(nv);
+    cols.track_off.push(cols.e.len() as u32);
     for _ in 0..nv {
-        vertices.push(Vertex {
-            x: r.f32()?,
-            y: r.f32()?,
-            z: r.f32()?,
-            n_tracks: r.u16()?,
-        });
+        cols.vx.push(r.f32()?);
+        cols.vy.push(r.f32()?);
+        cols.vz.push(r.f32()?);
+        cols.vert_ntracks.push(r.u16()?);
     }
-    Ok(Event { id, tracks, vertices, is_signal })
+    cols.vert_off.push(cols.vx.len() as u32);
+    Ok(())
+}
+
+/// v2 columnar page payload serialization (events `a..b` of `cols`).
+fn encode_page_v2(out: &mut Vec<u8>, cols: &ColumnarEvents, a: usize, b: usize) {
+    let ta = cols.track_off[a] as usize;
+    let tb = cols.track_off[b] as usize;
+    let va = cols.vert_off[a] as usize;
+    let vb = cols.vert_off[b] as usize;
+    put_u32(out, (tb - ta) as u32);
+    put_u32(out, (vb - va) as u32);
+    for &id in &cols.ids[a..b] {
+        put_u64(out, id);
+    }
+    out.extend_from_slice(&cols.signal[a..b]);
+    for i in a..b {
+        let nt = cols.track_off[i + 1] - cols.track_off[i];
+        // fail fast at authoring time: a silently wrapped count would
+        // only surface as Corrupt("track counts") at some later reader
+        assert!(nt <= u16::MAX as u32, "event {i}: {nt} tracks exceed the u16 brick limit");
+        put_u16(out, nt as u16);
+    }
+    for i in a..b {
+        let nv = cols.vert_off[i + 1] - cols.vert_off[i];
+        assert!(nv <= u16::MAX as u32, "event {i}: {nv} vertices exceed the u16 brick limit");
+        put_u16(out, nv as u16);
+    }
+    for &v in &cols.e[ta..tb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.px[ta..tb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.py[ta..tb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.pz[ta..tb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.track_vertex[ta..tb] {
+        put_u16(out, v);
+    }
+    for &v in &cols.vx[va..vb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.vy[va..vb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.vz[va..vb] {
+        put_f32(out, v);
+    }
+    for &v in &cols.vert_ntracks[va..vb] {
+        put_u16(out, v);
+    }
+}
+
+/// v2 columnar page payload deserialization: bulk column reads appended
+/// onto `cols`, with counts prefix-summed into the offset tables.
+fn decode_page_v2(
+    r: &mut Reader,
+    n_ev: usize,
+    cols: &mut ColumnarEvents,
+) -> Result<(), BrickError> {
+    let n_tracks = r.u32()? as usize;
+    let n_verts = r.u32()? as usize;
+    r.u64_col(n_ev, &mut cols.ids)?;
+    cols.signal.extend_from_slice(r.take(n_ev)?);
+    // counts → absolute offsets (accumulated in usize so hostile counts
+    // cannot overflow the u32 offsets undetected)
+    let track_base = cols.e.len();
+    let counts = r.take(n_ev * 2)?;
+    let mut acc = track_base;
+    cols.track_off.reserve(n_ev);
+    for c in counts.chunks_exact(2) {
+        acc += u16::from_le_bytes(c.try_into().unwrap()) as usize;
+        if acc > u32::MAX as usize {
+            return Err(BrickError::Corrupt("track counts"));
+        }
+        cols.track_off.push(acc as u32);
+    }
+    if acc - track_base != n_tracks {
+        return Err(BrickError::Corrupt("track counts"));
+    }
+    let vert_base = cols.vx.len();
+    let counts = r.take(n_ev * 2)?;
+    let mut acc = vert_base;
+    cols.vert_off.reserve(n_ev);
+    for c in counts.chunks_exact(2) {
+        acc += u16::from_le_bytes(c.try_into().unwrap()) as usize;
+        if acc > u32::MAX as usize {
+            return Err(BrickError::Corrupt("vertex counts"));
+        }
+        cols.vert_off.push(acc as u32);
+    }
+    if acc - vert_base != n_verts {
+        return Err(BrickError::Corrupt("vertex counts"));
+    }
+    r.f32_col(n_tracks, &mut cols.e)?;
+    r.f32_col(n_tracks, &mut cols.px)?;
+    r.f32_col(n_tracks, &mut cols.py)?;
+    r.f32_col(n_tracks, &mut cols.pz)?;
+    r.u16_col(n_tracks, &mut cols.track_vertex)?;
+    r.f32_col(n_verts, &mut cols.vx)?;
+    r.f32_col(n_verts, &mut cols.vy)?;
+    r.f32_col(n_verts, &mut cols.vz)?;
+    r.u16_col(n_verts, &mut cols.vert_ntracks)?;
+    Ok(())
+}
+
+/// Serialize one page: header + (optionally compressed) payload. Shared
+/// by both brick versions — the compression decision and the "stored
+/// raw despite Lzss codec" flag live only here.
+fn write_page(out: &mut Vec<u8>, n_ev: usize, raw: &[u8], codec_kind: Codec) {
+    let (stored, stored_raw): (Cow<[u8]>, bool) = match codec_kind {
+        Codec::Raw => (Cow::Borrowed(raw), false),
+        Codec::Lzss => {
+            let c = codec::compress(raw);
+            // store raw if compression didn't help
+            if c.len() < raw.len() {
+                (Cow::Owned(c), false)
+            } else {
+                (Cow::Borrowed(raw), true)
+            }
+        }
+    };
+    put_u32(out, n_ev as u32);
+    put_u32(out, raw.len() as u32);
+    // high bit of stored_len marks "stored raw despite Lzss codec"
+    let mut stored_len = stored.len() as u32;
+    if stored_raw {
+        stored_len |= 0x8000_0000;
+    }
+    put_u32(out, stored_len);
+    put_u64(out, xxhash64(&stored, HASH_SEED));
+    out.extend_from_slice(&stored);
+}
+
+/// Read one page header + payload, verifying its checksum and inflating
+/// the payload. Borrows from the brick bytes when the page is stored raw.
+fn read_page<'a>(
+    r: &mut Reader<'a>,
+    codec_kind: Codec,
+    page_idx: u32,
+) -> Result<(usize, Cow<'a, [u8]>), BrickError> {
+    let n_ev = r.u32()? as usize;
+    let raw_len = r.u32()? as usize;
+    let stored_len_field = r.u32()?;
+    let stored_raw = stored_len_field & 0x8000_0000 != 0;
+    let stored_len = (stored_len_field & 0x7fff_ffff) as usize;
+    let checksum = r.u64()?;
+    let stored = r.take(stored_len)?;
+    if xxhash64(stored, HASH_SEED) != checksum {
+        return Err(BrickError::ChecksumMismatch { page: Some(page_idx) });
+    }
+    let raw: Cow<[u8]> = match (codec_kind, stored_raw) {
+        (Codec::Raw, _) | (Codec::Lzss, true) => Cow::Borrowed(stored),
+        (Codec::Lzss, false) => Cow::Owned(
+            codec::decompress(stored, raw_len)
+                .ok_or(BrickError::Corrupt("lzss stream"))?,
+        ),
+    };
+    if raw.len() != raw_len {
+        return Err(BrickError::Corrupt("raw length"));
+    }
+    Ok((n_ev, raw))
+}
+
+fn put_header(out: &mut Vec<u8>, id: BrickId, version: u16, codec_kind: Codec, n_events: u64, n_pages: u32) {
+    out.extend_from_slice(MAGIC);
+    put_u16(out, version);
+    out.push(codec_kind as u8);
+    out.push(0); // reserved
+    put_u32(out, id.dataset);
+    put_u32(out, id.seq);
+    put_u64(out, n_events);
+    put_u32(out, n_pages);
 }
 
 impl BrickFile {
-    /// Encode events into a brick. `events_per_page` controls streaming
-    /// granularity (pages decode independently).
+    /// Encode events into a **v1 row-wise** brick. `events_per_page`
+    /// controls streaming granularity (pages decode independently).
+    /// Kept for migration — new bricks should use [`encode_columnar`].
+    ///
+    /// [`encode_columnar`]: BrickFile::encode_columnar
     pub fn encode(
         id: BrickId,
         events: &[Event],
@@ -190,43 +459,22 @@ impl BrickFile {
         let pages: Vec<&[Event]> = events.chunks(epp).collect();
 
         let mut out = Vec::new();
-        out.extend_from_slice(MAGIC);
-        put_u16(&mut out, VERSION);
-        out.push(codec_kind as u8);
-        out.push(0); // reserved
-        put_u32(&mut out, id.dataset);
-        put_u32(&mut out, id.seq);
-        put_u64(&mut out, events.len() as u64);
-        put_u32(&mut out, pages.len() as u32);
+        put_header(
+            &mut out,
+            id,
+            VERSION_V1,
+            codec_kind,
+            events.len() as u64,
+            pages.len() as u32,
+        );
 
+        let mut raw = Vec::new();
         for page in &pages {
-            let mut raw = Vec::new();
+            raw.clear();
             for ev in *page {
                 encode_event(&mut raw, ev);
             }
-            let stored = match codec_kind {
-                Codec::Raw => raw.clone(),
-                Codec::Lzss => {
-                    let c = codec::compress(&raw);
-                    // store raw if compression didn't help
-                    if c.len() < raw.len() {
-                        c
-                    } else {
-                        raw.clone()
-                    }
-                }
-            };
-            let effective_raw = stored.len() == raw.len() && stored == raw;
-            put_u32(&mut out, page.len() as u32);
-            put_u32(&mut out, raw.len() as u32);
-            // high bit of stored_len marks "stored raw despite Lzss codec"
-            let mut stored_len = stored.len() as u32;
-            if codec_kind == Codec::Lzss && effective_raw {
-                stored_len |= 0x8000_0000;
-            }
-            put_u32(&mut out, stored_len);
-            put_u64(&mut out, xxhash64(&stored, HASH_SEED));
-            out.extend_from_slice(&stored);
+            write_page(&mut out, page.len(), &raw, codec_kind);
         }
         let trailer = xxhash64(&out, HASH_SEED);
         put_u64(&mut out, trailer);
@@ -234,9 +482,59 @@ impl BrickFile {
         BrickFile {
             meta: BrickMeta {
                 id,
+                version: VERSION_V1,
                 codec: codec_kind,
                 n_events: events.len() as u64,
                 n_pages: pages.len() as u32,
+            },
+            bytes: out,
+        }
+    }
+
+    /// Encode a column set into a **v2 columnar** brick — the default
+    /// writer path (cluster dataset authoring, node result bricks).
+    /// Events with more than `u16::MAX` tracks or vertices are not
+    /// representable (same limit as v1's row-wise counts); encoding
+    /// panics rather than write a brick that cannot decode.
+    pub fn encode_columnar(
+        id: BrickId,
+        cols: &ColumnarEvents,
+        codec_kind: Codec,
+        events_per_page: usize,
+    ) -> BrickFile {
+        let epp = events_per_page.max(1);
+        let n = cols.len();
+        let n_pages = n.div_ceil(epp);
+
+        let mut out = Vec::new();
+        put_header(
+            &mut out,
+            id,
+            VERSION_V2,
+            codec_kind,
+            n as u64,
+            n_pages as u32,
+        );
+
+        let mut raw = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + epp).min(n);
+            raw.clear();
+            encode_page_v2(&mut raw, cols, start, end);
+            write_page(&mut out, end - start, &raw, codec_kind);
+            start = end;
+        }
+        let trailer = xxhash64(&out, HASH_SEED);
+        put_u64(&mut out, trailer);
+
+        BrickFile {
+            meta: BrickMeta {
+                id,
+                version: VERSION_V2,
+                codec: codec_kind,
+                n_events: n as u64,
+                n_pages: n_pages as u32,
             },
             bytes: out,
         }
@@ -249,7 +547,7 @@ impl BrickFile {
             return Err(BrickError::BadMagic);
         }
         let ver = r.u16()?;
-        if ver != VERSION {
+        if ver != VERSION_V1 && ver != VERSION_V2 {
             return Err(BrickError::BadVersion(ver));
         }
         let codec_byte = r.u8()?;
@@ -262,14 +560,20 @@ impl BrickFile {
         let n_pages = r.u32()?;
         Ok(BrickMeta {
             id: BrickId::new(dataset, seq),
+            version: ver,
             codec,
             n_events,
             n_pages,
         })
     }
 
-    /// Full decode with checksum verification.
-    pub fn decode(bytes: &[u8]) -> Result<(BrickMeta, Vec<Event>), BrickError> {
+    /// Full decode with checksum verification, directly into column
+    /// buffers — the node hot path. Handles both brick versions (v1
+    /// events are transposed on the fly; v2 pages are bulk column reads
+    /// with zero per-event work).
+    pub fn decode_columnar(
+        bytes: &[u8],
+    ) -> Result<(BrickMeta, ColumnarEvents), BrickError> {
         if bytes.len() < 8 {
             return Err(BrickError::Truncated);
         }
@@ -283,40 +587,33 @@ impl BrickFile {
 
         let meta = Self::decode_meta(bytes)?;
         let mut r = Reader { b: &bytes[..body_len], i: 32 };
-        let mut events = Vec::with_capacity(meta.n_events as usize);
+        let mut cols =
+            ColumnarEvents::with_capacity(meta.n_events as usize, 0, 0);
         for page_idx in 0..meta.n_pages {
-            let n_ev = r.u32()? as usize;
-            let raw_len = r.u32()? as usize;
-            let stored_len_field = r.u32()?;
-            let stored_raw = stored_len_field & 0x8000_0000 != 0;
-            let stored_len = (stored_len_field & 0x7fff_ffff) as usize;
-            let checksum = r.u64()?;
-            let stored = r.take(stored_len)?;
-            if xxhash64(stored, HASH_SEED) != checksum {
-                return Err(BrickError::ChecksumMismatch {
-                    page: Some(page_idx),
-                });
-            }
-            let raw: Vec<u8> = match (meta.codec, stored_raw) {
-                (Codec::Raw, _) | (Codec::Lzss, true) => stored.to_vec(),
-                (Codec::Lzss, false) => codec::decompress(stored, raw_len)
-                    .ok_or(BrickError::Corrupt("lzss stream"))?,
-            };
-            if raw.len() != raw_len {
-                return Err(BrickError::Corrupt("raw length"));
-            }
+            let (n_ev, raw) = read_page(&mut r, meta.codec, page_idx)?;
             let mut pr = Reader { b: &raw, i: 0 };
-            for _ in 0..n_ev {
-                events.push(decode_event(&mut pr)?);
+            if meta.version == VERSION_V1 {
+                for _ in 0..n_ev {
+                    decode_event_columnar(&mut pr, &mut cols)?;
+                }
+            } else {
+                decode_page_v2(&mut pr, n_ev, &mut cols)?;
             }
             if pr.i != raw.len() {
                 return Err(BrickError::Corrupt("page trailing bytes"));
             }
         }
-        if events.len() as u64 != meta.n_events {
+        if cols.len() as u64 != meta.n_events {
             return Err(BrickError::Corrupt("event count"));
         }
-        Ok((meta, events))
+        Ok((meta, cols))
+    }
+
+    /// Full decode with checksum verification, materializing row-wise
+    /// `Event`s (tests, tooling, migration — NOT the node hot path).
+    pub fn decode(bytes: &[u8]) -> Result<(BrickMeta, Vec<Event>), BrickError> {
+        let (meta, cols) = Self::decode_columnar(bytes)?;
+        Ok((meta, cols.to_events()))
     }
 
     pub fn size(&self) -> usize {
@@ -339,6 +636,7 @@ mod tests {
         let brick =
             BrickFile::encode(BrickId::new(1, 0), &evs, Codec::Raw, 32);
         let (meta, decoded) = BrickFile::decode(&brick.bytes).unwrap();
+        assert_eq!(meta.version, VERSION_V1);
         assert_eq!(meta.n_events, 100);
         assert_eq!(meta.n_pages, 4);
         assert_eq!(decoded, evs);
@@ -355,11 +653,87 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_columnar_v2() {
+        let evs = gen(150, 9);
+        let cols = ColumnarEvents::from_events(&evs);
+        for codec_kind in [Codec::Raw, Codec::Lzss] {
+            let brick = BrickFile::encode_columnar(
+                BrickId::new(4, 2),
+                &cols,
+                codec_kind,
+                48,
+            );
+            let meta = BrickFile::decode_meta(&brick.bytes).unwrap();
+            assert_eq!(meta.version, VERSION_V2);
+            assert_eq!(meta.n_events, 150);
+            assert_eq!(meta.n_pages, 4); // ceil(150/48)
+            let (m2, decoded_cols) =
+                BrickFile::decode_columnar(&brick.bytes).unwrap();
+            assert_eq!(m2, meta);
+            assert_eq!(decoded_cols, cols);
+            // row-wise view agrees too
+            let (_, decoded_rows) = BrickFile::decode(&brick.bytes).unwrap();
+            assert_eq!(decoded_rows, evs);
+        }
+    }
+
+    #[test]
+    fn v1_and_v2_decode_to_identical_columns() {
+        let evs = gen(300, 10);
+        let cols = ColumnarEvents::from_events(&evs);
+        let v1 = BrickFile::encode(BrickId::new(5, 5), &evs, Codec::Lzss, 64);
+        let v2 = BrickFile::encode_columnar(
+            BrickId::new(5, 5),
+            &cols,
+            Codec::Lzss,
+            64,
+        );
+        let (_, c1) = BrickFile::decode_columnar(&v1.bytes).unwrap();
+        let (_, c2) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn columnar_bricks_are_no_larger() {
+        // SoA grouping puts similar bytes together, so LZSS should do at
+        // least as well as on the interleaved row-wise layout (the §4.1
+        // "reduce storage space usage" claim, carried to v2).
+        let evs = gen(500, 11);
+        let cols = ColumnarEvents::from_events(&evs);
+        let v1 = BrickFile::encode(BrickId::new(6, 0), &evs, Codec::Lzss, 128);
+        let v2 = BrickFile::encode_columnar(
+            BrickId::new(6, 0),
+            &cols,
+            Codec::Lzss,
+            128,
+        );
+        // allow a small tolerance: the column layout adds two u32 lengths
+        // per page and changes match structure
+        assert!(
+            (v2.size() as f64) < v1.size() as f64 * 1.05,
+            "v2 {} vs v1 {}",
+            v2.size(),
+            v1.size()
+        );
+    }
+
+    #[test]
     fn empty_brick() {
         let brick = BrickFile::encode(BrickId::new(0, 0), &[], Codec::Raw, 16);
         let (meta, decoded) = BrickFile::decode(&brick.bytes).unwrap();
         assert_eq!(meta.n_events, 0);
         assert!(decoded.is_empty());
+        let empty = ColumnarEvents::new();
+        let v2 = BrickFile::encode_columnar(
+            BrickId::new(0, 0),
+            &empty,
+            Codec::Lzss,
+            16,
+        );
+        let (meta, cols) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+        assert_eq!(meta.n_events, 0);
+        assert_eq!(meta.n_pages, 0);
+        assert!(cols.is_empty());
     }
 
     #[test]
@@ -391,6 +765,18 @@ mod tests {
     }
 
     #[test]
+    fn unknown_version_rejected() {
+        let evs = gen(5, 12);
+        let mut brick =
+            BrickFile::encode(BrickId::new(1, 1), &evs, Codec::Raw, 8);
+        brick.bytes[8] = 9; // version LE low byte
+        assert_eq!(
+            BrickFile::decode_meta(&brick.bytes).unwrap_err(),
+            BrickError::BadVersion(9)
+        );
+    }
+
+    #[test]
     fn payload_corruption_detected() {
         let evs = gen(50, 5);
         let mut brick =
@@ -410,6 +796,12 @@ mod tests {
             BrickFile::encode(BrickId::new(1, 3), &evs, Codec::Raw, 8);
         for cut in [3usize, 20, brick.bytes.len() - 1] {
             assert!(BrickFile::decode(&brick.bytes[..cut]).is_err());
+        }
+        let cols = ColumnarEvents::from_events(&gen(20, 6));
+        let v2 =
+            BrickFile::encode_columnar(BrickId::new(1, 3), &cols, Codec::Raw, 8);
+        for cut in [3usize, 20, v2.bytes.len() - 1] {
+            assert!(BrickFile::decode_columnar(&v2.bytes[..cut]).is_err());
         }
     }
 

@@ -5,15 +5,21 @@
 //!
 //! - [`codec`]: LZSS compression + varints (substrate — we build our own)
 //! - [`format`]: the on-disk/on-wire brick file format (the ROOT-tree
-//!   analogue: paged, checksummed, optionally compressed)
+//!   analogue: paged, checksummed, optionally compressed; v1 row-wise
+//!   pages for migration, v2 columnar pages for the hot path)
+//! - [`columnar`]: column-wise (SoA) event storage — what v2 pages
+//!   decode into, and what the node packs kernel batches from with zero
+//!   per-event allocation
 //! - [`split`]: splitting an event stream into bricks + placement
 //! - [`replica`]: replication sets (paper §7 future work, built here)
 
 pub mod codec;
+pub mod columnar;
 pub mod format;
 pub mod replica;
 pub mod split;
 
+pub use columnar::ColumnarEvents;
 pub use format::{BrickFile, BrickMeta, Codec};
 pub use replica::ReplicaSet;
 pub use split::{placement_nodes, split_events, BrickPlacement, SplitConfig};

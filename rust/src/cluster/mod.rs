@@ -34,7 +34,7 @@ use crate::brick::{split_events, BrickFile, BrickId, Codec, SplitConfig};
 use crate::catalog::{Catalog, JobStatus};
 use crate::config::ClusterConfig;
 use crate::events::{EventGenerator, GeneratorConfig};
-use crate::ft::{Rebalancer, Rereplicator};
+use crate::ft::{CopyPlan, Rebalancer, Rereplicator};
 use crate::gass::GassService;
 use crate::gris::{Directory, Entry, NodeInfoProvider};
 use crate::jse::{Jse, JseConfig};
@@ -107,7 +107,10 @@ impl ClusterHandle {
         let leader = topology.leader().to_string();
         for p in &placements {
             let slice = &events[p.range.0..p.range.1];
-            let brick = BrickFile::encode(p.id, slice, Codec::Lzss, 256);
+            // v2 columnar bricks: nodes decode these straight into
+            // kernel-ready columns (v1 row-wise bricks stay readable)
+            let cols = crate::brick::ColumnarEvents::from_events(slice);
+            let brick = BrickFile::encode_columnar(p.id, &cols, Codec::Lzss, 256);
             let path = brick_path(p.id);
             // replicas on every holder's disk
             for holder in &p.holders {

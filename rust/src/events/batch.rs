@@ -2,6 +2,11 @@
 //! executables expect — tracks (B, T, 4) and mask (B, T) as flat f32
 //! buffers. The runtime executes fixed-shape batches; tails are padded
 //! with mask = 0, which the kernel treats exactly (see L1 padding tests).
+//!
+//! Two fill paths produce byte-identical batches: [`EventBatch::pack`]
+//! over row-wise `Event` slices (tests, migration), and
+//! [`EventBatch::fill_event`] over column slices — the allocation-free
+//! node hot path driven by `brick::ColumnarEvents::pack_range`.
 
 use crate::events::model::Event;
 
@@ -21,6 +26,47 @@ pub struct EventBatch {
 }
 
 impl EventBatch {
+    /// An all-padding batch: zero tensors, no real rows. The starting
+    /// point for both `pack` (row-wise events) and the columnar fill
+    /// path (`brick::ColumnarEvents::pack_range`).
+    pub fn zeroed(batch: usize, max_tracks: usize) -> Self {
+        EventBatch {
+            tracks: vec![0f32; batch * max_tracks * 4],
+            mask: vec![0f32; batch * max_tracks],
+            ids: Vec::new(),
+            batch,
+            max_tracks,
+        }
+    }
+
+    /// Fill row `row` from column slices (one value per track). Rows must
+    /// be filled in increasing order so `ids` stays row-ordered. Tracks
+    /// beyond `max_tracks` are dropped — same truncation rule as `pack`.
+    #[inline]
+    pub fn fill_event(
+        &mut self,
+        row: usize,
+        id: u64,
+        e: &[f32],
+        px: &[f32],
+        py: &[f32],
+        pz: &[f32],
+    ) {
+        debug_assert!(row < self.batch);
+        debug_assert_eq!(self.ids.len(), row, "rows must be filled in order");
+        debug_assert!(e.len() == px.len() && e.len() == py.len() && e.len() == pz.len());
+        self.ids.push(id);
+        let nt = e.len().min(self.max_tracks);
+        for t in 0..nt {
+            let base = (row * self.max_tracks + t) * 4;
+            self.tracks[base] = e[t];
+            self.tracks[base + 1] = px[t];
+            self.tracks[base + 2] = py[t];
+            self.tracks[base + 3] = pz[t];
+            self.mask[row * self.max_tracks + t] = 1.0;
+        }
+    }
+
     /// Pack `events` into a batch of exactly `batch` rows (events beyond
     /// `batch` are ignored; rows beyond `events.len()` are zero padding).
     /// Tracks beyond `max_tracks` in an event are dropped deterministically
@@ -130,6 +176,21 @@ mod tests {
         let all_ids: Vec<u64> =
             batches.iter().flat_map(|b| b.ids.clone()).collect();
         assert_eq!(all_ids, evs.iter().map(|e| e.id).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fill_event_matches_pack() {
+        let evs = gen(6);
+        let packed = EventBatch::pack(&evs, 8, 16);
+        let mut filled = EventBatch::zeroed(8, 16);
+        for (row, ev) in evs.iter().enumerate() {
+            let e: Vec<f32> = ev.tracks.iter().map(|t| t.e).collect();
+            let px: Vec<f32> = ev.tracks.iter().map(|t| t.px).collect();
+            let py: Vec<f32> = ev.tracks.iter().map(|t| t.py).collect();
+            let pz: Vec<f32> = ev.tracks.iter().map(|t| t.pz).collect();
+            filled.fill_event(row, ev.id, &e, &px, &py, &pz);
+        }
+        assert_eq!(filled, packed);
     }
 
     #[test]

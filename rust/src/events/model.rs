@@ -1,4 +1,9 @@
 //! Core event types: Track (4-vector), Vertex, Event.
+//!
+//! These row-wise structs are the *interchange* representation (tests,
+//! generators, v1 bricks, result inspection). The per-node hot path
+//! never materializes them: v2 bricks decode straight into
+//! `brick::ColumnarEvents` column buffers (see `brick::columnar`).
 
 /// A charged-particle track as a 4-vector (E, px, py, pz), plus the vertex
 /// it is associated with. Units are GeV (natural units, c = 1).

@@ -1,6 +1,11 @@
 //! Filter-expression AST and type checking.
-
-use crate::events::FeatureId;
+//!
+//! `Expr::Feature` carries a raw feature *index* (what the parser
+//! resolves feature names to via `events::FeatureId`). The index is NOT
+//! validated here — programmatic AST construction can name any index —
+//! so `CompiledFilter::new` bounds-checks every referenced feature
+//! against `NUM_FEATURES` before an expression may touch event data
+//! (see [`Expr::max_feature`]).
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BinOp {
@@ -69,7 +74,9 @@ impl Func {
 pub enum Expr {
     Num(f64),
     Bool(bool),
-    Feature(FeatureId),
+    /// Index into the per-event feature vector (see `events::FeatureId`
+    /// for the named indices the parser produces).
+    Feature(u16),
     Un(UnOp, Box<Expr>),
     Bin(BinOp, Box<Expr>, Box<Expr>),
     Call(Func, Vec<Expr>),
@@ -93,6 +100,23 @@ impl std::fmt::Display for TypeError {
 impl std::error::Error for TypeError {}
 
 impl Expr {
+    /// Highest feature index referenced anywhere in the expression, or
+    /// `None` if it touches no features. `CompiledFilter::new` rejects
+    /// expressions whose maximum is >= `NUM_FEATURES` — indexing past
+    /// the feature vector must be a compile error, never a runtime
+    /// panic in the node hot loop.
+    pub fn max_feature(&self) -> Option<u16> {
+        match self {
+            Expr::Num(_) | Expr::Bool(_) => None,
+            Expr::Feature(f) => Some(*f),
+            Expr::Un(_, e) => e.max_feature(),
+            Expr::Bin(_, a, b) => a.max_feature().max(b.max_feature()),
+            Expr::Call(_, args) => {
+                args.iter().filter_map(|a| a.max_feature()).max()
+            }
+        }
+    }
+
     /// Infer & check the type of the expression.
     pub fn check(&self) -> Result<Ty, TypeError> {
         match self {
@@ -161,22 +185,22 @@ impl Expr {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::events::FeatureId;
+
+    const MET: u16 = FeatureId::Met as u16;
 
     #[test]
     fn literal_types() {
         assert_eq!(Expr::Num(1.0).check().unwrap(), Ty::Num);
         assert_eq!(Expr::Bool(true).check().unwrap(), Ty::Bool);
-        assert_eq!(
-            Expr::Feature(FeatureId::Met).check().unwrap(),
-            Ty::Num
-        );
+        assert_eq!(Expr::Feature(MET).check().unwrap(), Ty::Num);
     }
 
     #[test]
     fn comparison_yields_bool() {
         let e = Expr::Bin(
             BinOp::Gt,
-            Box::new(Expr::Feature(FeatureId::Met)),
+            Box::new(Expr::Feature(MET)),
             Box::new(Expr::Num(30.0)),
         );
         assert_eq!(e.check().unwrap(), Ty::Bool);
@@ -186,10 +210,26 @@ mod tests {
     fn bad_logical_operand() {
         let e = Expr::Bin(
             BinOp::And,
-            Box::new(Expr::Feature(FeatureId::Met)),
+            Box::new(Expr::Feature(MET)),
             Box::new(Expr::Bool(true)),
         );
         assert!(e.check().is_err());
+    }
+
+    #[test]
+    fn max_feature_scans_the_whole_tree() {
+        assert_eq!(Expr::Num(1.0).max_feature(), None);
+        let e = Expr::Bin(
+            BinOp::Add,
+            Box::new(Expr::Feature(2)),
+            Box::new(Expr::Call(
+                Func::Max,
+                vec![Expr::Feature(7), Expr::Feature(5)],
+            )),
+        );
+        assert_eq!(e.max_feature(), Some(7));
+        let deep = Expr::Un(UnOp::Neg, Box::new(Expr::Feature(200)));
+        assert_eq!(deep.max_feature(), Some(200));
     }
 
     #[test]

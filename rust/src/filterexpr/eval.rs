@@ -1,9 +1,22 @@
 //! Filter evaluation: a compiled filter accepts/rejects events by their
 //! feature vectors, and can batch-evaluate a whole feature matrix (the
 //! node executor's hot path after the kernel runs).
+//!
+//! Compilation does three things: type-check the AST, bounds-check every
+//! referenced feature index against `NUM_FEATURES` (so evaluation can
+//! never index past a feature row), and flatten the tree into the
+//! postfix [`bytecode`] program that the batch paths execute
+//! column-at-a-time. The recursive tree walk survives as
+//! [`CompiledFilter::accept`] / [`accept_batch_treewalk`] — the
+//! reference oracle the bytecode is tested bit-identical against (and
+//! the baseline the hotpath bench compares throughput to).
+//!
+//! [`bytecode`]: crate::filterexpr::bytecode
+//! [`accept_batch_treewalk`]: CompiledFilter::accept_batch_treewalk
 
 use crate::events::NUM_FEATURES;
 use crate::filterexpr::ast::{BinOp, Expr, Func, Ty, UnOp};
+use crate::filterexpr::bytecode::{self, Program, VmScratch};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct EvalError(pub String);
@@ -15,10 +28,11 @@ impl std::fmt::Display for EvalError {
 }
 impl std::error::Error for EvalError {}
 
-/// A type-checked, ready-to-run filter.
+/// A type-checked, bounds-checked, ready-to-run filter.
 #[derive(Debug, Clone)]
 pub struct CompiledFilter {
     expr: Expr,
+    program: Program,
     source_ty: Ty,
 }
 
@@ -32,6 +46,7 @@ fn eval(expr: &Expr, feats: &[f32]) -> V {
     match expr {
         Expr::Num(n) => V::N(*n),
         Expr::Bool(b) => V::B(*b),
+        // in range: CompiledFilter::new rejects indices >= NUM_FEATURES
         Expr::Feature(f) => V::N(feats[*f as usize] as f64),
         Expr::Un(UnOp::Not, e) => match eval(e, feats) {
             V::B(b) => V::B(!b),
@@ -92,8 +107,9 @@ fn eval(expr: &Expr, feats: &[f32]) -> V {
 }
 
 impl CompiledFilter {
-    /// Typecheck and wrap. A numeric top-level expression is rejected —
-    /// the submit form requires a predicate.
+    /// Typecheck, bounds-check feature references, and compile to
+    /// bytecode. A numeric top-level expression is rejected — the submit
+    /// form requires a predicate.
     pub fn new(expr: Expr) -> Result<CompiledFilter, EvalError> {
         let ty = expr.check().map_err(|e| EvalError(e.to_string()))?;
         if ty != Ty::Bool {
@@ -101,10 +117,24 @@ impl CompiledFilter {
                 "filter must be a boolean predicate".into(),
             ));
         }
-        Ok(CompiledFilter { expr, source_ty: ty })
+        // reject out-of-range feature indices at compile time: the
+        // parser only produces named (in-range) features, but the AST is
+        // public and a programmatic expression must not be able to index
+        // past a feature row at evaluation time
+        if let Some(f) = expr.max_feature() {
+            if f as usize >= NUM_FEATURES {
+                return Err(EvalError(format!(
+                    "feature index {f} out of range (only {NUM_FEATURES} \
+                     features exist)"
+                )));
+            }
+        }
+        let program = bytecode::compile(&expr);
+        Ok(CompiledFilter { expr, program, source_ty: ty })
     }
 
-    /// Accept/reject one event's feature vector.
+    /// Accept/reject one event's feature vector (recursive tree walk —
+    /// the reference oracle; batch paths must agree bit for bit).
     pub fn accept(&self, feats: &[f32]) -> bool {
         debug_assert_eq!(feats.len(), NUM_FEATURES);
         debug_assert_eq!(self.source_ty, Ty::Bool);
@@ -116,12 +146,47 @@ impl CompiledFilter {
 
     /// Batch evaluation over a (B, F) row-major feature matrix. Returns a
     /// selection mask. `n_real` limits evaluation to real (non-padding)
-    /// rows.
+    /// rows. Runs the vectorized bytecode; allocates fresh scratch — the
+    /// hot loop should use [`accept_batch_into`] with reused scratch.
+    ///
+    /// [`accept_batch_into`]: CompiledFilter::accept_batch_into
     pub fn accept_batch(&self, feats: &[f32], n_real: usize) -> Vec<bool> {
+        let mut scratch = VmScratch::new();
+        let mut out = Vec::new();
+        self.accept_batch_into(feats, n_real, &mut scratch, &mut out);
+        out
+    }
+
+    /// Allocation-free batch evaluation: write the accept mask for the
+    /// first `n_real` rows into `out`, recycling `scratch`'s column
+    /// buffers across calls.
+    pub fn accept_batch_into(
+        &self,
+        feats: &[f32],
+        n_real: usize,
+        scratch: &mut VmScratch,
+        out: &mut Vec<bool>,
+    ) {
+        let rows = feats.len() / NUM_FEATURES;
+        self.program.eval_into(feats, n_real.min(rows), scratch, out);
+    }
+
+    /// Batch evaluation via the per-event tree walk — kept as the
+    /// reference baseline for oracle tests and the hotpath bench.
+    pub fn accept_batch_treewalk(
+        &self,
+        feats: &[f32],
+        n_real: usize,
+    ) -> Vec<bool> {
         let rows = feats.len() / NUM_FEATURES;
         (0..n_real.min(rows))
             .map(|i| self.accept(&feats[i * NUM_FEATURES..(i + 1) * NUM_FEATURES]))
             .collect()
+    }
+
+    /// The compiled postfix program (bench/introspection).
+    pub fn program(&self) -> &Program {
+        &self.program
     }
 }
 
@@ -176,6 +241,36 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_feature_rejected_at_compile_time() {
+        // the parser cannot produce this, but the AST is public — an
+        // index past the feature vector must fail compilation, not
+        // panic during evaluation on the node
+        let e = Expr::Bin(
+            BinOp::Gt,
+            Box::new(Expr::Feature(NUM_FEATURES as u16)),
+            Box::new(Expr::Num(1.0)),
+        );
+        let err = CompiledFilter::new(e).unwrap_err();
+        assert!(err.0.contains("out of range"), "{err}");
+        let far = Expr::Bin(
+            BinOp::Lt,
+            Box::new(Expr::Call(
+                Func::Min,
+                vec![Expr::Feature(0), Expr::Feature(40_000)],
+            )),
+            Box::new(Expr::Num(1.0)),
+        );
+        assert!(CompiledFilter::new(far).is_err());
+        // the boundary index is fine
+        let ok = Expr::Bin(
+            BinOp::Gt,
+            Box::new(Expr::Feature(NUM_FEATURES as u16 - 1)),
+            Box::new(Expr::Num(1.0)),
+        );
+        assert!(CompiledFilter::new(ok).is_ok());
+    }
+
+    #[test]
     fn batch_respects_n_real() {
         let f = compile("met > 1");
         let mut m = vec![0f32; 4 * NUM_FEATURES];
@@ -184,6 +279,20 @@ mod tests {
         }
         let mask = f.accept_batch(&m, 2);
         assert_eq!(mask, vec![true, true]); // padding rows not evaluated
+        assert_eq!(f.accept_batch_treewalk(&m, 2), mask);
+    }
+
+    #[test]
+    fn bytecode_and_treewalk_agree_on_division_by_zero() {
+        // the tree walk short-circuits past the division; the bytecode
+        // evaluates it eagerly (inf/NaN) — accept sets must still match
+        let f = compile("n_tracks > 0 && met / n_tracks > 1");
+        let mut m = vec![0f32; 3 * NUM_FEATURES];
+        m[NUM_FEATURES] = 2.0; // row 1: n_tracks = 2
+        m[NUM_FEATURES + 3] = 6.0; // row 1: met = 6 -> 3 > 1
+        m[2 * NUM_FEATURES + 3] = 5.0; // row 2: n_tracks = 0, met = 5
+        assert_eq!(f.accept_batch(&m, 3), vec![false, true, false]);
+        assert_eq!(f.accept_batch_treewalk(&m, 3), f.accept_batch(&m, 3));
     }
 
     #[test]

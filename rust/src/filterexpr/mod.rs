@@ -12,13 +12,22 @@
 //! Grammar (precedence low→high): `||`, `&&`, comparisons, `+ -`, `* /`,
 //! unary `! -`, primary (number, feature name, `true/false`,
 //! parentheses, `abs/min/max` calls). A type checker rejects nonsense
-//! like `met && 3` before any event is touched.
+//! like `met && 3` before any event is touched, and compilation rejects
+//! feature indices outside the kernel's `NUM_FEATURES`-wide rows.
+//!
+//! Execution is vectorized: compilation flattens the AST into a postfix
+//! [`bytecode`] program evaluated column-at-a-time over the feature
+//! matrix (one tight loop per opcode, column buffers recycled across
+//! pages via [`VmScratch`]). The recursive tree walk remains as the
+//! reference oracle; both paths produce bit-identical accept sets.
 
 pub mod ast;
+pub mod bytecode;
 pub mod eval;
 pub mod parser;
 
 pub use ast::{BinOp, Expr, Ty, UnOp};
+pub use bytecode::{Op, Program, VmScratch};
 pub use eval::{CompiledFilter, EvalError};
 pub use parser::{parse, ParseError};
 

@@ -284,7 +284,7 @@ impl P {
                     let f = FeatureId::by_name(&name).ok_or_else(|| {
                         self.err(format!("unknown feature '{name}'"))
                     })?;
-                    Ok(Expr::Feature(f))
+                    Ok(Expr::Feature(f as u16))
                 }
             }
             other => Err(self.err(format!("expected expression, got {other:?}"))),

@@ -49,6 +49,30 @@
 //! unrecoverable (`ft.bricks_unrecoverable`) and their jobs failed
 //! explicitly rather than left hanging.
 //!
+//! ## The columnar node hot path
+//!
+//! Per-node throughput is the whole ball game (§4.1: bricks exist "to
+//! reduce storage space usage and enhance accession speed"), so the
+//! event pipeline on a node is column-wise end to end:
+//!
+//! 1. **v2 columnar bricks** ([`brick::format`]) store each page as SoA
+//!    arrays (`e/px/py/pz`, vertex columns, per-event offset tables)
+//!    and decode straight into [`brick::ColumnarEvents`] buffers — no
+//!    per-event structs, no per-event allocation. v1 row-wise bricks
+//!    remain readable (they transpose into the same columns on decode).
+//! 2. **Kernel batches are sliced, not packed**:
+//!    `ColumnarEvents::pack_range` fills the `(B, T, 4)` tensors the
+//!    AOT kernel expects directly from the columns, byte-identical to
+//!    the old `Vec<Event>` → `EventBatch::pack` round-trip it replaced.
+//! 3. **Filters compile to postfix bytecode** ([`filterexpr::bytecode`])
+//!    evaluated column-at-a-time over the kernel's feature matrix — one
+//!    tight loop per opcode, value-stack buffers recycled across pages,
+//!    bit-identical accept sets to the tree-walk reference.
+//! 4. **The executor pipelines** ([`node`]): a pack thread prepares page
+//!    N+1 while the kernel runs page N and the filter/histogram stage
+//!    drains page N−1; batches complete strictly in order so merged
+//!    histograms stay bit-identical to the sequential loop.
+//!
 //! Module map (see DESIGN.md for the paper-section cross-reference):
 //!
 //! - substrates: [`util`], [`config`], [`events`], [`brick`], [`catalog`],
@@ -61,7 +85,9 @@
 //!   re-replication; node death fails over across *all* jobs),
 //!   [`cluster`] (admission + wiring), [`portal`] (submit / status /
 //!   cancel over HTTP)
-//! - compute: [`runtime`] (PJRT engine over `artifacts/*.hlo.txt`)
+//! - compute: [`runtime`] (PJRT engine over `artifacts/*.hlo.txt`;
+//!   builds against an in-tree `xla` API stub so the coordination plane
+//!   compiles without the native backend — see [`runtime::xla`])
 
 pub mod brick;
 pub mod catalog;

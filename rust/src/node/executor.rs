@@ -3,26 +3,35 @@
 //! Lifecycle per task (the paper's event application run, §4.1 + §4.2):
 //! 1. parse the RSL sentence that travelled with the submission
 //! 2. stage-in raw data over GASS if the RSL names a remote source
-//! 3. decode the brick, slice the task's event range
+//! 3. load the brick's columns (cached; v2 bricks decode straight into
+//!    them) and bounds-check the task's event range
 //! 4. run the AOT kernel (features) batch by batch via the engine pool
-//! 5. evaluate the user filter expression over the features (L3)
+//! 5. evaluate the user filter bytecode over the features (L3)
 //! 6. histogram selected events (AOT histogram program), build the
 //!    result file, GASS it back to the leader
 //! 7. report TaskDone / TaskFailed on the wire
+//!
+//! Steps 4–6 run as a **two-stage pipeline**: a pack thread slices
+//! kernel-ready batches out of the brick columns (zero per-event
+//! allocation) while this thread keeps one kernel execution in flight
+//! and filters/histograms the previous batch — page N+1 decodes/packs
+//! while page N runs the kernel. Batches are processed strictly in
+//! order, so histogram merges (f32 adds) are bit-identical to the old
+//! sequential loop.
 //!
 //! A fault-injection switch makes the thread die silently mid-task (a
 //! crash, not an error): the JSE only learns via missed heartbeats.
 
 use crate::brick::{BrickFile, Codec};
-use crate::events::EventBatch;
 use crate::filterexpr;
 use crate::gass::GassService;
 use crate::node::store::{brick_path, result_path, BrickStore};
 use crate::rsl;
-use crate::runtime::EnginePool;
+use crate::runtime::{EnginePool, FeatureMatrix};
 use crate::scheduler::Task;
 use crate::wire::Message;
 use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -199,7 +208,7 @@ fn run_task(
     task: &Task,
     filter_src: &str,
     rsl_text: &str,
-    killed: &AtomicBool,
+    killed: &Arc<AtomicBool>,
 ) -> Result<Message> {
     // 1. the RSL sentence must parse and agree with the wire task —
     //    (the paper's JSE/GRAM contract; catching drift loudly)
@@ -226,44 +235,104 @@ fn run_task(
         }
     }
 
-    // 3. decode + slice
-    let events = store.slice(task.brick, task.range)?;
-    let events_in = events.len() as u64;
+    // 3. columnar brick (cached; v2 decodes straight into columns) +
+    //    task range bounds check
+    let cols = store.slice_columnar(task.brick, task.range)?;
+    let (range_a, range_b) = task.range;
+    let events_in = (range_b - range_a) as u64;
 
-    // 4-6. kernel + filter + histogram, batch by batch
+    // 4-6. pipelined: a pack thread fills kernel-ready batches from the
+    // columns (page N+1) while this thread keeps one kernel execution in
+    // flight and filters/histograms page N. Strict batch order is
+    // preserved end to end, so the merged histogram is bit-identical to
+    // the sequential loop this replaces.
     let calib = crate::runtime::Engine::identity_calib();
-    let mut selected_events = Vec::new();
-    let mut histogram: Vec<f32> = Vec::new();
-    for chunk in events.chunks(pool.batch) {
-        if killed.load(Ordering::SeqCst) {
-            return Err(anyhow!("node crashed"));
-        }
-        let batch = EventBatch::pack(chunk, pool.batch, pool.max_tracks);
-        let feats = pool.features(batch, calib)?;
-        let mask = filter.accept_batch(&feats.data, feats.n_real);
-        let mut sel_f32 = vec![0f32; pool.batch];
-        for (i, &keep) in mask.iter().enumerate() {
-            if keep {
-                sel_f32[i] = 1.0;
-                selected_events.push(chunk[i].clone());
+    let batch_size = pool.batch;
+    let max_tracks = pool.max_tracks;
+    let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<(
+        usize,
+        crate::events::EventBatch,
+    )>(2);
+    let pack_cols = cols.clone();
+    let pack_killed = killed.clone();
+    let packer = std::thread::Builder::new()
+        .name(format!("geps-pack-{name}"))
+        .spawn(move || {
+            let mut start = range_a;
+            while start < range_b {
+                if pack_killed.load(Ordering::SeqCst) {
+                    return;
+                }
+                let end = (start + batch_size).min(range_b);
+                let batch =
+                    pack_cols.pack_range((start, end), batch_size, max_tracks);
+                if batch_tx.send((start, batch)).is_err() {
+                    return; // consumer bailed
+                }
+                start = end;
             }
-        }
-        let h = pool.histogram(feats, sel_f32)?;
-        if histogram.is_empty() {
-            histogram = h;
-        } else {
-            for (a, b) in histogram.iter_mut().zip(h) {
-                *a += b; // histogram merge is elementwise addition
-            }
-        }
-    }
-    let events_selected = selected_events.len() as u64;
+        })
+        .map_err(|e| anyhow!("spawn pack thread: {e}"))?;
 
-    // 6b. result file: selected events as a brick, GASS'd to the leader
+    let mut state = PipelineState {
+        scratch: filterexpr::VmScratch::new(),
+        mask: Vec::new(),
+        selected: Vec::new(),
+        histogram: Vec::new(),
+        batches: 0,
+    };
+    let run = {
+        let mut inflight: VecDeque<(usize, Receiver<Result<FeatureMatrix>>)> =
+            VecDeque::new();
+        let mut step = || -> Result<()> {
+            for (base, batch) in batch_rx.iter() {
+                if killed.load(Ordering::SeqCst) {
+                    return Err(anyhow!("node crashed"));
+                }
+                inflight.push_back((base, pool.features_async(batch, calib)?));
+                if inflight.len() >= 2 {
+                    drain_one(&mut inflight, &filter, pool, batch_size, &mut state)?;
+                }
+            }
+            while !inflight.is_empty() {
+                if killed.load(Ordering::SeqCst) {
+                    return Err(anyhow!("node crashed"));
+                }
+                drain_one(&mut inflight, &filter, pool, batch_size, &mut state)?;
+            }
+            Ok(())
+        };
+        step()
+    };
+    // unblock + reap the pack thread even on error paths (a send into
+    // the closed channel returns Err and the thread exits)
+    drop(batch_rx);
+    let packer_panicked = packer.join().is_err();
+    run?;
+    if packer_panicked {
+        return Err(anyhow!("pack thread panicked"));
+    }
+    // a packer that died early (or a lost batch) must surface as a
+    // failure, never as a TaskDone over truncated results
+    let expected_batches =
+        (range_b - range_a).div_ceil(batch_size.max(1));
+    if state.batches != expected_batches {
+        return Err(anyhow!(
+            "pipeline incomplete: processed {}/{} batches",
+            state.batches,
+            expected_batches
+        ));
+    }
+    let selected = state.selected;
+    let histogram = state.histogram;
+    let events_selected = selected.len() as u64;
+
+    // 6b. result file: the selected events leave as a v2 columnar brick
+    // (gathered from the columns — still no per-event structs)
     let rpath = result_path(job, task.brick, task.range);
-    let result_brick = BrickFile::encode(
+    let result_brick = BrickFile::encode_columnar(
         task.brick,
-        &selected_events,
+        &cols.select(&selected),
         Codec::Lzss,
         256,
     );
@@ -286,4 +355,59 @@ fn run_task(
         result_bytes,
         histogram: hist_bytes,
     })
+}
+
+/// Per-task mutable state of the filter/histogram pipeline stage. The
+/// scratch + mask buffers are recycled across every batch of the task,
+/// so the steady-state *filter* stage performs zero allocations. (The
+/// histogram submission still allocates one selection vector per batch
+/// — `EnginePool::histogram` takes ownership and moves it to a worker
+/// thread, so that buffer cannot be recycled here.)
+struct PipelineState {
+    scratch: filterexpr::VmScratch,
+    mask: Vec<bool>,
+    /// accepted event indices, global within the brick
+    selected: Vec<u32>,
+    /// merged feature histogram (F x bins, row-major)
+    histogram: Vec<f32>,
+    /// batches fully processed — audited against the expected count so a
+    /// dead packer can never be mistaken for a short task
+    batches: usize,
+}
+
+/// Complete the oldest in-flight kernel execution: receive its feature
+/// matrix, run the filter bytecode over it, and fold its histogram into
+/// the task accumulator. Called strictly in batch order.
+fn drain_one(
+    inflight: &mut VecDeque<(usize, Receiver<Result<FeatureMatrix>>)>,
+    filter: &filterexpr::CompiledFilter,
+    pool: &EnginePool,
+    batch_size: usize,
+    state: &mut PipelineState,
+) -> Result<()> {
+    let (base, rx) = inflight.pop_front().expect("inflight is non-empty");
+    let feats = rx.recv().map_err(|_| anyhow!("engine worker died"))??;
+    filter.accept_batch_into(
+        &feats.data,
+        feats.n_real,
+        &mut state.scratch,
+        &mut state.mask,
+    );
+    let mut sel_f32 = vec![0f32; batch_size];
+    for (i, &keep) in state.mask.iter().enumerate() {
+        if keep {
+            sel_f32[i] = 1.0;
+            state.selected.push((base + i) as u32);
+        }
+    }
+    let h = pool.histogram(feats, sel_f32)?;
+    if state.histogram.is_empty() {
+        state.histogram = h;
+    } else {
+        for (a, b) in state.histogram.iter_mut().zip(h) {
+            *a += b; // histogram merge is elementwise addition
+        }
+    }
+    state.batches += 1;
+    Ok(())
 }

@@ -1,8 +1,13 @@
 //! Node-local brick access: decode brick files from the node's GASS
 //! store, verify integrity, cache decoded events (the ROOT-file read
 //! path of §4.1, with checksums instead of trust).
+//!
+//! Bricks are cached **column-wise** ([`ColumnarEvents`]): v2 bricks
+//! decode straight into the columns, v1 bricks are transposed on the
+//! fly, and either way the executor packs kernel batches from the
+//! cached columns without ever materializing per-event structs.
 
-use crate::brick::{BrickFile, BrickId};
+use crate::brick::{BrickFile, BrickId, ColumnarEvents};
 use crate::events::Event;
 use crate::gass::GassStore;
 use anyhow::{anyhow, Context, Result};
@@ -23,7 +28,7 @@ pub fn result_path(job: u64, id: BrickId, range: (usize, usize)) -> String {
 #[derive(Clone)]
 pub struct BrickStore {
     gass_store: GassStore,
-    cache: Arc<Mutex<HashMap<BrickId, Arc<Vec<Event>>>>>,
+    cache: Arc<Mutex<HashMap<BrickId, Arc<ColumnarEvents>>>>,
 }
 
 impl BrickStore {
@@ -31,8 +36,8 @@ impl BrickStore {
         BrickStore { gass_store, cache: Arc::new(Mutex::new(HashMap::new())) }
     }
 
-    /// Load (and cache) a brick's events, verifying checksums.
-    pub fn load(&self, id: BrickId) -> Result<Arc<Vec<Event>>> {
+    /// Load (and cache) a brick's events as columns, verifying checksums.
+    pub fn load_columnar(&self, id: BrickId) -> Result<Arc<ColumnarEvents>> {
         if let Some(hit) = self.cache.lock().unwrap().get(&id) {
             return Ok(hit.clone());
         }
@@ -41,7 +46,7 @@ impl BrickStore {
             .gass_store
             .get(&path)
             .ok_or_else(|| anyhow!("brick {id} not on this node ({path})"))?;
-        let (meta, events) = BrickFile::decode(&bytes)
+        let (meta, cols) = BrickFile::decode_columnar(&bytes)
             .map_err(|e| anyhow!("brick {id} corrupt: {e}"))?;
         if meta.id != id {
             return Err(anyhow!(
@@ -49,7 +54,7 @@ impl BrickStore {
                 meta.id
             ));
         }
-        let arc = Arc::new(events);
+        let arc = Arc::new(cols);
         self.cache.lock().unwrap().insert(id, arc.clone());
         Ok(arc)
     }
@@ -72,22 +77,36 @@ impl BrickStore {
         &self.gass_store
     }
 
-    /// Slice a task range out of a brick, with bounds checking.
+    /// Load a brick's columns and bounds-check a task range against it —
+    /// the executor hot path (no events are materialized).
+    pub fn slice_columnar(
+        &self,
+        id: BrickId,
+        range: (usize, usize),
+    ) -> Result<Arc<ColumnarEvents>> {
+        let cols = self.load_columnar(id)?;
+        let (a, b) = range;
+        if a > b || b > cols.len() {
+            return Err(anyhow!(
+                "range {a}..{b} out of bounds for brick {id} ({} events)",
+                cols.len()
+            ))
+            .context("task range");
+        }
+        Ok(cols)
+    }
+
+    /// Slice a task range out of a brick as row-wise events, with bounds
+    /// checking (tests/tooling — the executor uses [`slice_columnar`]).
+    ///
+    /// [`slice_columnar`]: BrickStore::slice_columnar
     pub fn slice(
         &self,
         id: BrickId,
         range: (usize, usize),
     ) -> Result<Vec<Event>> {
-        let events = self.load(id)?;
-        let (a, b) = range;
-        if a > b || b > events.len() {
-            return Err(anyhow!(
-                "range {a}..{b} out of bounds for brick {id} ({} events)",
-                events.len()
-            ))
-            .context("task range");
-        }
-        Ok(events[a..b].to_vec())
+        let cols = self.slice_columnar(id, range)?;
+        Ok(cols.events_range(range.0, range.1))
     }
 }
 
@@ -97,30 +116,50 @@ mod tests {
     use crate::brick::format::Codec;
     use crate::events::{EventGenerator, GeneratorConfig};
 
-    fn setup(n: usize) -> (BrickStore, BrickId, Vec<Event>) {
+    fn setup_with(
+        n: usize,
+        columnar: bool,
+    ) -> (BrickStore, BrickId, Vec<Event>) {
         let gs = GassStore::new();
         let events =
             EventGenerator::new(GeneratorConfig::default(), 5).take(n);
         let id = BrickId::new(1, 0);
-        let brick = BrickFile::encode(id, &events, Codec::Lzss, 64);
+        let brick = if columnar {
+            let cols = ColumnarEvents::from_events(&events);
+            BrickFile::encode_columnar(id, &cols, Codec::Lzss, 64)
+        } else {
+            BrickFile::encode(id, &events, Codec::Lzss, 64)
+        };
         gs.put(&brick_path(id), brick.bytes);
         (BrickStore::new(gs), id, events)
+    }
+
+    fn setup(n: usize) -> (BrickStore, BrickId, Vec<Event>) {
+        setup_with(n, true)
     }
 
     #[test]
     fn load_and_cache() {
         let (store, id, events) = setup(100);
-        let a = store.load(id).unwrap();
-        assert_eq!(*a, events);
+        let a = store.load_columnar(id).unwrap();
+        assert_eq!(a.to_events(), events);
         // second load hits the cache (same Arc)
-        let b = store.load(id).unwrap();
+        let b = store.load_columnar(id).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn v1_bricks_remain_readable() {
+        let (store, id, events) = setup_with(80, false);
+        let cols = store.load_columnar(id).unwrap();
+        assert_eq!(cols.to_events(), events);
+        assert_eq!(store.slice(id, (10, 20)).unwrap(), events[10..20]);
     }
 
     #[test]
     fn missing_brick_errors() {
         let (store, _, _) = setup(10);
-        assert!(store.load(BrickId::new(9, 9)).is_err());
+        assert!(store.load_columnar(BrickId::new(9, 9)).is_err());
     }
 
     #[test]
@@ -132,7 +171,7 @@ mod tests {
         bytes[mid] ^= 0x55;
         store.gass().put(&path, bytes);
         store.evict(id);
-        assert!(store.load(id).is_err());
+        assert!(store.load_columnar(id).is_err());
     }
 
     #[test]
@@ -145,7 +184,7 @@ mod tests {
         // stored under the WRONG brick path
         gs.put(&brick_path(BrickId::new(1, 1)), brick.bytes);
         let store = BrickStore::new(gs);
-        assert!(store.load(BrickId::new(1, 1)).is_err());
+        assert!(store.load_columnar(BrickId::new(1, 1)).is_err());
     }
 
     #[test]
@@ -156,6 +195,8 @@ mod tests {
         assert!(store.slice(id, (90, 101)).is_err());
         assert!(store.slice(id, (20, 10)).is_err());
         assert_eq!(store.slice(id, (0, 100)).unwrap().len(), 100);
+        assert!(store.slice_columnar(id, (0, 100)).is_ok());
+        assert!(store.slice_columnar(id, (50, 101)).is_err());
     }
 
     #[test]

@@ -4,6 +4,9 @@
 
 use crate::events::{EventBatch, FeatureId, NUM_FEATURES};
 use crate::runtime::manifest::Manifest;
+// `xla::` resolves to the in-tree stub; point it at the real crate to
+// execute against native PJRT (see runtime/xla.rs)
+use crate::runtime::xla;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;

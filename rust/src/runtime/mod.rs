@@ -11,16 +11,29 @@
 //!   the underlying XLA handles
 //! - [`calibrate`]: measured kernel throughput → DES compute-rate
 //!   calibration (EXPERIMENTS.md §Calibration)
+//! - [`xla`]: API-compatible stand-in for the `xla` crate so the
+//!   coordination plane builds without the native PJRT backend; swap in
+//!   the real bindings to execute (see the module docs)
 
 pub mod calibrate;
 pub mod engine;
 pub mod manifest;
 pub mod pool;
+pub mod xla;
 
 pub use calibrate::CalibrationReport;
 pub use engine::{Engine, FeatureMatrix};
 pub use manifest::Manifest;
 pub use pool::EnginePool;
+
+/// True when the runtime can actually execute: the AOT artifacts are
+/// present in the default directory AND the PJRT backend is linked
+/// (i.e. [`Engine::load`] succeeds). The single gate every
+/// runtime-dependent test suite uses to skip cleanly in hermetic
+/// environments.
+pub fn available() -> bool {
+    Engine::load(&default_artifacts_dir()).is_ok()
+}
 
 /// Default artifacts directory: $GEPS_ARTIFACTS, else ./artifacts, else
 /// the artifacts dir next to the workspace root (so tests work from any

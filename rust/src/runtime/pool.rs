@@ -129,9 +129,23 @@ impl EnginePool {
         batch: EventBatch,
         calib: [f32; 16],
     ) -> Result<FeatureMatrix> {
+        self.features_async(batch, calib)?
+            .recv()
+            .map_err(|_| anyhow!("engine worker died"))?
+    }
+
+    /// Submit a features batch without blocking: returns the reply
+    /// channel immediately so the caller can overlap other work (pack
+    /// the next page, filter the previous one) with kernel execution —
+    /// the node executor's pipelining hook.
+    pub fn features_async(
+        &self,
+        batch: EventBatch,
+        calib: [f32; 16],
+    ) -> Result<mpsc::Receiver<Result<FeatureMatrix>>> {
         let (reply, rx) = mpsc::channel();
         self.send(Request::Features { batch, calib, reply })?;
-        rx.recv().map_err(|_| anyhow!("engine worker died"))?
+        Ok(rx)
     }
 
     pub fn histogram(

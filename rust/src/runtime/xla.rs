@@ -1,0 +1,178 @@
+//! API-compatible stand-in for the `xla` crate (the `xla_extension`
+//! PJRT bindings), so the coordination plane always builds.
+//!
+//! The real backend is a native dependency (libxla_extension.so) that
+//! cannot be vendored into hermetic builds. This module mirrors the
+//! exact subset of the `xla` crate surface that [`crate::runtime::engine`]
+//! uses. Loading artifacts and constructing literals work for real;
+//! [`PjRtClient::compile`] reports the backend as unavailable, which
+//! `Engine::load` surfaces as an error and the artifact-gated tests
+//! treat as a clean "runtime unavailable" skip.
+//!
+//! To run against real XLA: add `xla` (xla_extension 0.5.1) to
+//! `Cargo.toml` and remove the `use crate::runtime::xla;` alias at the
+//! top of `engine.rs` — the module paths line up one to one.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `anyhow`
+/// propagation.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "PJRT backend not linked ({what}): this build carries the \
+         pure-Rust xla stub — see runtime/xla.rs for how to link the \
+         real xla_extension backend"
+    )))
+}
+
+/// A PJRT client handle (CPU platform only, like the engine uses).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".into()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compile")
+    }
+}
+
+/// Parsed HLO module (text form; the stub only validates readability).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { text })
+            .map_err(|e| XlaError(format!("read {path}: {e}")))
+    }
+
+    /// The HLO text this proto was parsed from.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execute")
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("to_literal_sync")
+    }
+}
+
+/// A dense f32 literal with a shape (the only element type the engine
+/// moves across the boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape to {:?} on {} elements",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn to_vec<T: NativeElement>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeElement {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeElement for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn compile_reports_backend_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu");
+        let comp = XlaComputation { _priv: () };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.0.contains("not linked"), "{err}");
+    }
+}

@@ -23,11 +23,9 @@ use std::time::{Duration, Instant};
 /// when they are absent so the suite does not add new hard failures to
 /// artifact-less environments.
 fn artifacts_present() -> bool {
-    let ok = geps::runtime::default_artifacts_dir()
-        .join("manifest.json")
-        .exists();
+    let ok = geps::runtime::available();
     if !ok {
-        eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+        eprintln!("skipping: PJRT runtime unavailable (run `make artifacts`)");
     }
     ok
 }

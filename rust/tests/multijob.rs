@@ -27,11 +27,9 @@ const SPECS: [(&str, &str); 5] = [
 /// when they are absent so the concurrency suite does not add new hard
 /// failures to artifact-less environments.
 fn artifacts_present() -> bool {
-    let ok = geps::runtime::default_artifacts_dir()
-        .join("manifest.json")
-        .exists();
+    let ok = geps::runtime::available();
     if !ok {
-        eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+        eprintln!("skipping: PJRT runtime unavailable (run `make artifacts`)");
     }
     ok
 }

@@ -9,6 +9,15 @@ use geps::util::json::Json;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Skip cleanly when the AOT artifacts or the PJRT backend are missing.
+fn runtime_available() -> bool {
+    let ok = geps::runtime::available();
+    if !ok {
+        eprintln!("skipping: PJRT runtime unavailable");
+    }
+    ok
+}
+
 fn start() -> (Arc<ClusterHandle>, String) {
     let mut cfg = ClusterConfig::default();
     cfg.n_events = 300;
@@ -32,6 +41,9 @@ fn get_json(addr: &str, path: &str) -> (u16, Json) {
 
 #[test]
 fn full_user_journey() {
+    if !runtime_available() {
+        return;
+    }
     let (cluster, addr) = start();
 
     // Fig 3: the main page
@@ -102,6 +114,9 @@ fn full_user_journey() {
 
 #[test]
 fn error_handling() {
+    if !runtime_available() {
+        return;
+    }
     let (cluster, addr) = start();
 
     // unknown route
@@ -150,6 +165,9 @@ fn error_handling() {
 
 #[test]
 fn bricks_and_kill_endpoints() {
+    if !runtime_available() {
+        return;
+    }
     let (cluster, addr) = start();
     let (status, bricks) = get_json(&addr, "/bricks");
     assert_eq!(status, 200);

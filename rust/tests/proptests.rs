@@ -255,12 +255,94 @@ fn prop_brick_roundtrip_arbitrary_events() {
 }
 
 #[test]
+fn prop_columnar_brick_roundtrip_and_v1_equivalence() {
+    use geps::brick::ColumnarEvents;
+    forall("columnar-roundtrip", 40, |rng| {
+        let n = rng.index(300);
+        let events: Vec<Event> =
+            (0..n).map(|i| random_event(rng, i as u64)).collect();
+        let cols = ColumnarEvents::from_events(&events);
+        let codec_kind =
+            if rng.chance(0.5) { Codec::Raw } else { Codec::Lzss };
+        let epp = 1 + rng.index(64);
+        let id = BrickId::new(rng.next_u64() as u32, rng.next_u64() as u32);
+        let v2 = BrickFile::encode_columnar(id, &cols, codec_kind, epp);
+        let (meta, decoded_cols) =
+            BrickFile::decode_columnar(&v2.bytes).unwrap();
+        assert_eq!(meta.id, id);
+        assert_eq!(decoded_cols, cols);
+        assert_eq!(decoded_cols.to_events(), events);
+        // v1 and v2 bricks of the same events must decode to identical
+        // columns AND produce bit-identical kernel batches (the input
+        // the histogram program sees)
+        let v1 = BrickFile::encode(id, &events, codec_kind, epp);
+        let (_, cols_from_v1) =
+            BrickFile::decode_columnar(&v1.bytes).unwrap();
+        assert_eq!(cols_from_v1, decoded_cols);
+        if n > 0 {
+            let batch = 1 + rng.index(64);
+            let max_tracks = 1 + rng.index(48);
+            let a = rng.index(n);
+            let b = a + rng.index(n - a + 1);
+            let from_rows = geps::events::EventBatch::pack(
+                &events[a..b],
+                batch,
+                max_tracks,
+            );
+            let from_cols =
+                decoded_cols.pack_range((a, b), batch, max_tracks);
+            assert_eq!(from_cols, from_rows);
+        }
+    });
+}
+
+#[test]
+fn prop_filter_bytecode_matches_treewalk() {
+    use geps::events::NUM_FEATURES;
+    let sources = [
+        "met > 30",
+        "sum_pt / n_tracks > 5",
+        "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20",
+        "n_tracks >= 4 || (met > 30 && ht_frac < 0.8)",
+        "abs(max_abs_eta - 2.5) < min(1.0, ht_frac)",
+        "!(met > 10) || sqrt(sum_pt) >= 3",
+        "true && met / n_tracks > 1",
+        "max(met, sum_pt) == met || total_mass != 0",
+    ];
+    forall("filter-bytecode-parity", 60, |rng| {
+        let src = sources[rng.index(sources.len())];
+        let filter = geps::filterexpr::compile(src).unwrap();
+        let n = 1 + rng.index(400);
+        let feats: Vec<f32> = (0..n * NUM_FEATURES)
+            .map(|_| {
+                if rng.chance(0.25) {
+                    0.0 // exercise division-by-zero rows
+                } else {
+                    (rng.f32() * 250.0) - 50.0
+                }
+            })
+            .collect();
+        let vectorized = filter.accept_batch(&feats, n);
+        let oracle = filter.accept_batch_treewalk(&feats, n);
+        assert_eq!(vectorized, oracle, "'{src}' diverged");
+    });
+}
+
+#[test]
 fn prop_brick_corruption_always_detected() {
     forall("brick-corruption", 60, |rng| {
         let events: Vec<Event> =
             (0..50).map(|i| random_event(rng, i as u64)).collect();
-        let brick =
-            BrickFile::encode(BrickId::new(1, 1), &events, Codec::Lzss, 16);
+        let brick = if rng.chance(0.5) {
+            BrickFile::encode(BrickId::new(1, 1), &events, Codec::Lzss, 16)
+        } else {
+            BrickFile::encode_columnar(
+                BrickId::new(1, 1),
+                &geps::brick::ColumnarEvents::from_events(&events),
+                Codec::Lzss,
+                16,
+            )
+        };
         let mut bytes = brick.bytes.clone();
         let flip = rng.index(bytes.len());
         let bit = 1u8 << rng.index(8);
@@ -284,15 +366,31 @@ fn prop_brick_corruption_always_detected() {
 fn prop_lzss_roundtrip_adversarial() {
     forall("lzss-roundtrip", 120, |rng| {
         let len = rng.index(40_000);
-        let mode = rng.index(4);
+        let mode = rng.index(6);
         let data: Vec<u8> = match mode {
             0 => (0..len).map(|_| rng.next_u64() as u8).collect(),
             1 => vec![(rng.next_u64() & 0xff) as u8; len],
             2 => {
-                // repeated small motif
+                // repeated small motif (incl. exactly-4-byte periods)
                 let motif: Vec<u8> =
                     (0..1 + rng.index(9)).map(|_| rng.next_u64() as u8).collect();
                 motif.iter().cycle().take(len).copied().collect()
+            }
+            3 => {
+                // all-zero
+                vec![0u8; len]
+            }
+            4 => {
+                // motif ... near-WINDOW gap ... motif: matches at or just
+                // across the 64 KiB window boundary
+                let motif: Vec<u8> = (0..8 + rng.index(24))
+                    .map(|_| rng.next_u64() as u8)
+                    .collect();
+                let gap = (1 << 16) - motif.len() - 8 + rng.index(32);
+                let mut d = motif.clone();
+                d.extend((0..gap).map(|_| rng.next_u64() as u8));
+                d.extend_from_slice(&motif);
+                d
             }
             _ => {
                 // float-like
@@ -303,6 +401,31 @@ fn prop_lzss_roundtrip_adversarial() {
         };
         let c = codec::compress(&data);
         assert_eq!(codec::decompress(&c, data.len()).unwrap(), data);
+    });
+}
+
+#[test]
+fn prop_varint_roundtrip_and_overlong_rejection() {
+    forall("varint-edges", 300, |rng| {
+        // arbitrary values roundtrip with exact byte accounting
+        let v = rng.next_u64() >> rng.index(64);
+        let mut buf = Vec::new();
+        codec::put_varint(&mut buf, v);
+        assert!(buf.len() <= 10);
+        assert_eq!(codec::get_varint(&buf), Some((v, buf.len())));
+        // any truncation of a multi-byte varint is rejected
+        if buf.len() > 1 {
+            let cut = rng.index(buf.len() - 1) + 1;
+            let mut head = buf[..cut].to_vec();
+            let last = head.last_mut().unwrap();
+            *last |= 0x80; // force a dangling continuation bit
+            assert_eq!(codec::get_varint(&head), None);
+        }
+        // overlong encodings (shift past 64 bits) are rejected
+        let extra = 11 + rng.index(6);
+        let mut overlong = vec![0x80u8; extra];
+        overlong.push(0x00);
+        assert_eq!(codec::get_varint(&overlong), None);
     });
 }
 
