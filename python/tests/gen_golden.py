@@ -1,0 +1,293 @@
+"""Generate the golden vectors pinning the pure-Rust reference backend.
+
+Writes ``rust/tests/data/golden_vectors.json``: inputs and expected
+outputs for the three AOT programs as raw f32 bit patterns, which
+``rust/tests/golden.rs`` asserts the Rust reference backend
+(``rust/src/runtime/reference/programs.rs``) reproduces bit-for-bit.
+
+The vectors are computed by a numpy mirror of
+``compile/kernels/ref.py`` + ``compile/model.py`` with two properties
+the jax originals cannot guarantee:
+
+1. **Explicit sequencing**: every reduction accumulates left-to-right in
+   f32, exactly like the Rust loops (XLA may reassociate; the golden
+   contract may not).
+2. **Pinned atanh**: pseudorapidity evaluates ``0.5*ln((1+x)/(1-x))`` in
+   f64 and rounds once to f32 — the same composition the Rust side uses
+   — because platform ``atanhf`` implementations differ in the last ulp.
+   (Residual dependency: f64 ``log`` itself; a last-f64-ulp libm
+   disagreement flips the f32 result only on a ~2^-29 rounding-boundary
+   straddle. See programs.rs docs.)
+
+All other operations are single IEEE f32 primitives (numpy float32
+scalar arithmetic is native f32, identical to Rust), so the mirror and
+the Rust loops are the same computation.
+
+The script also cross-checks the mirror against the real jax reference
+(``compile.kernels.ref``) and prints the max deviation — expected to be
+a handful of ulps (XLA reassociation + libm atanh), NOT zero. Run from
+the repo root:
+
+    python3 python/tests/gen_golden.py
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import struct
+import sys
+
+import numpy as np
+
+f32 = np.float32
+EPS = f32(1e-6)
+FRAC_LO = f32(-1.0 + 1e-6)
+FRAC_HI = f32(1.0 - 1e-6)
+NUM_FEATURES = 8
+HIST_BINS = 64
+# keep in sync with rust/src/events/features.rs::hist_range
+HIST_RANGES = [
+    (0.0, 64.0), (0.0, 500.0), (0.0, 150.0), (0.0, 100.0),
+    (0.0, 600.0), (0.0, 300.0), (0.0, 6.0), (0.0, 1.0),
+]
+
+
+def atanh_f32(x: f32) -> f32:
+    """The pinned atanh composition (see module docs)."""
+    x64 = float(x)
+    return f32(0.5 * math.log((1.0 + x64) / (1.0 - x64)))
+
+
+def calibrate_track(track, calib):
+    """p[j] = sum_k track[k]*calib[j,k], accumulated in k order."""
+    out = []
+    for j in range(4):
+        acc = f32(0.0)
+        for k in range(4):
+            acc = f32(acc + f32(track[k] * calib[j][k]))
+        out.append(acc)
+    return out
+
+
+def event_features(tracks, mask, calib, b, t):
+    """Mirror of programs.rs::event_features: (B,T,4),(B,T),(4,4)->(B,F)."""
+    out = []
+    for bi in range(b):
+        m = mask[bi]
+        e, px, py, pz, pt, pmag = [], [], [], [], [], []
+        for ti in range(t):
+            p = calibrate_track(tracks[bi][ti], calib)
+            e.append(f32(p[0] * m[ti]))
+            px.append(f32(p[1] * m[ti]))
+            py.append(f32(p[2] * m[ti]))
+            pz.append(f32(p[3] * m[ti]))
+            pt.append(np.sqrt(f32(f32(f32(px[ti] * px[ti]) + f32(py[ti] * py[ti])) + EPS)))
+            pmag.append(np.sqrt(f32(f32(f32(f32(px[ti] * px[ti]) + f32(py[ti] * py[ti])) + f32(pz[ti] * pz[ti])) + EPS)))
+        n_tracks = f32(0.0)
+        sum_pt = f32(0.0)
+        max_pt = f32(-np.inf)
+        sum_px = f32(0.0)
+        sum_py = f32(0.0)
+        sum_e = f32(0.0)
+        sum_pz = f32(0.0)
+        sum_abs_pz = f32(0.0)
+        sum_pmag = f32(0.0)
+        max_abs_eta = f32(-np.inf)
+        for ti in range(t):
+            n_tracks = f32(n_tracks + m[ti])
+            sum_pt = f32(sum_pt + f32(pt[ti] * m[ti]))
+            max_pt = max(max_pt, f32(pt[ti] * m[ti]))
+            sum_px = f32(sum_px + px[ti])
+            sum_py = f32(sum_py + py[ti])
+            sum_e = f32(sum_e + e[ti])
+            sum_pz = f32(sum_pz + pz[ti])
+            sum_abs_pz = f32(sum_abs_pz + f32(abs(pz[ti]) * m[ti]))
+            sum_pmag = f32(sum_pmag + f32(pmag[ti] * m[ti]))
+            frac = min(max(f32(pz[ti] / f32(pmag[ti] + EPS)), FRAC_LO), FRAC_HI)
+            max_abs_eta = max(max_abs_eta, f32(abs(atanh_f32(frac)) * m[ti]))
+        met = np.sqrt(f32(f32(f32(sum_px * sum_px) + f32(sum_py * sum_py)) + EPS))
+        m2 = f32(f32(f32(f32(sum_e * sum_e) - f32(sum_px * sum_px)) - f32(sum_py * sum_py)) - f32(sum_pz * sum_pz))
+        total_mass = np.sqrt(f32(max(m2, f32(0.0)) + EPS))
+        pair_max = f32(-np.inf)
+        for i in range(t):
+            for j in range(t):
+                pe = f32(e[i] + e[j])
+                px2 = f32(px[i] + px[j])
+                py2 = f32(py[i] + py[j])
+                pz2 = f32(pz[i] + pz[j])
+                m2ij = f32(f32(f32(f32(pe * pe) - f32(px2 * px2)) - f32(py2 * py2)) - f32(pz2 * pz2))
+                valid = f32(f32(m[i] * m[j]) * (f32(0.0) if i == j else f32(1.0)))
+                pair_max = max(pair_max, f32(max(m2ij, f32(0.0)) * valid))
+        max_pair_mass = np.sqrt(f32(pair_max + EPS))
+        ht_frac = f32(sum_abs_pz / f32(sum_pmag + EPS))
+        out.extend([n_tracks, sum_pt, max_pt, met, total_mass,
+                    max_pair_mass, max_abs_eta, ht_frac])
+    return [f32(v) for v in out]
+
+
+def calibrated_tracks(tracks, mask, calib, b, t):
+    out = []
+    for bi in range(b):
+        for ti in range(t):
+            p = calibrate_track(tracks[bi][ti], calib)
+            for j in range(4):
+                out.append(f32(p[j] * mask[bi][ti]))
+    return out
+
+
+def histogram(feats, selected, ranges, bins):
+    nf = len(ranges) // 2
+    counts = [f32(0.0)] * (nf * bins)
+    for bi in range(len(selected)):
+        w = selected[bi]
+        for fi in range(nf):
+            lo, hi = ranges[fi * 2], ranges[fi * 2 + 1]
+            width = f32(f32(hi - lo) / f32(bins))
+            idx = np.floor(f32(f32(feats[bi * nf + fi] - lo) / max(width, f32(1e-9))))
+            idx = int(min(max(idx, f32(0.0)), f32(bins - 1)))
+            counts[fi * bins + idx] = f32(counts[fi * bins + idx] + w)
+    return counts
+
+
+def bits(values) -> list[int]:
+    return [struct.unpack("<I", struct.pack("<f", float(f32(v))))[0]
+            for v in values]
+
+
+def identity_calib():
+    return [[f32(1.0 if i == j else 0.0) for j in range(4)] for i in range(4)]
+
+
+def make_case_tiny():
+    """Hand-picked shapes: back-to-back pair, single track, negative pz,
+    an all-padding event, and finite garbage in mask-zeroed slots (which
+    must not leak into any output)."""
+    b, t = 4, 3
+    tracks = [
+        # event 0: Z-like pair + garbage in the masked third slot
+        [[50.0, 30.0, 0.0, 12.0], [50.0, -30.0, 0.0, -12.0],
+         [999.0, -888.0, 777.0, -666.0]],
+        # event 1: a single soft track
+        [[10.0, 3.0, 4.0, 1.0], [123.0, 45.0, -6.0, 7.0],
+         [-1.0, -2.0, -3.0, -4.0]],
+        # event 2: three real tracks, one with dominant negative pz
+        [[25.0, 5.0, -5.0, -24.0], [8.0, 2.0, 2.0, 0.5],
+         [30.0, -10.0, 8.0, 26.0]],
+        # event 3: all padding (zeros)
+        [[0.0, 0.0, 0.0, 0.0]] * 3,
+    ]
+    mask = [[1.0, 1.0, 0.0], [1.0, 0.0, 0.0], [1.0, 1.0, 1.0],
+            [0.0, 0.0, 0.0]]
+    tracks = [[[f32(v) for v in tr] for tr in ev] for ev in tracks]
+    mask = [[f32(v) for v in row] for row in mask]
+    selected = [f32(1.0), f32(0.5), f32(1.0), f32(0.0)]
+    return ("tiny", b, t, tracks, mask, identity_calib(), selected)
+
+
+def make_case_batch():
+    """Randomized case at a wider track dimension, with a non-trivial
+    calibration matrix (energy scale + alignment mixing)."""
+    b, t = 8, 32
+    rng = np.random.default_rng(20260730)
+    p3 = rng.normal(0.0, 8.0, size=(b, t, 3)).astype(np.float32)
+    m0 = rng.uniform(0.1, 2.0, size=(b, t)).astype(np.float32)
+    e = np.sqrt((p3 ** 2).sum(-1) + m0 ** 2).astype(np.float32)
+    tracks = [[[f32(e[bi, ti]), f32(p3[bi, ti, 0]), f32(p3[bi, ti, 1]),
+                f32(p3[bi, ti, 2])] for ti in range(t)] for bi in range(b)]
+    # prefix-valid masks with varied counts, incl. an all-padding event
+    counts = [0, 1, 5, 13, 32, 2, 27, 8]
+    mask = [[f32(1.0 if ti < counts[bi] else 0.0) for ti in range(t)]
+            for bi in range(b)]
+    calib = [[f32(1.1 if i == j else 0.0) for j in range(4)]
+             for i in range(4)]
+    calib[1][2] = f32(0.02)  # alignment rotation mixing px <- py
+    calib[2][1] = f32(-0.02)
+    selected = [f32(bi % 2) for bi in range(b)]
+    return ("batch", b, t, tracks, mask, calib, selected)
+
+
+def crosscheck_jax(case, feats_mirror):
+    """Report (not assert) deviation of the mirror from the jax ref."""
+    try:
+        sys.path.insert(
+            0,
+            os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."),
+        )
+        import jax
+        import jax.numpy as jnp
+        from compile.kernels import ref
+    except Exception as e:  # pragma: no cover - informational only
+        print(f"  (jax cross-check unavailable: {e})")
+        return
+    jax.config.update("jax_enable_x64", False)
+    name, b, t, tracks, mask, calib, _ = case
+    jt = jnp.asarray(np.asarray(tracks, dtype=np.float32))
+    jm = jnp.asarray(np.asarray(mask, dtype=np.float32))
+    jc = jnp.asarray(np.asarray(calib, dtype=np.float32))
+    jf = np.asarray(ref.event_features(jt, jm, jc)).reshape(-1)
+    mf = np.asarray(feats_mirror, dtype=np.float32)
+    # ulp distance via the same sign-magnitude trick as rust
+    def key(u):
+        s = u & 0x80000000
+        return np.where(s != 0, -1 - (u & 0x7FFFFFFF).astype(np.int64),
+                        u.astype(np.int64))
+    ulps = np.abs(key(jf.view(np.uint32)) - key(mf.view(np.uint32)))
+    rel = np.max(np.abs(jf - mf) / np.maximum(np.abs(jf), 1e-6))
+    print(f"  jax cross-check [{name}]: max {int(np.max(ulps))} ulps, "
+          f"max rel {rel:.2e} (reassociation + libm atanh; expected small, "
+          f"not zero)")
+
+
+def main():
+    out_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "..", "..", "rust", "tests", "data", "golden_vectors.json",
+    )
+    ranges = []
+    for lo, hi in HIST_RANGES:
+        ranges.extend([f32(lo), f32(hi)])
+
+    cases = []
+    for case in [make_case_tiny(), make_case_batch()]:
+        name, b, t, tracks, mask, calib, selected = case
+        feats = event_features(tracks, mask, calib, b, t)
+        cal = calibrated_tracks(tracks, mask, calib, b, t)
+        hist = histogram(feats, selected, ranges, HIST_BINS)
+        flat_tracks = [v for ev in tracks for tr in ev for v in tr]
+        flat_mask = [v for row in mask for v in row]
+        flat_calib = [v for row in calib for v in row]
+        print(f"case {name}: B={b} T={t}")
+        crosscheck_jax(case, feats)
+        cases.append({
+            "name": name,
+            "batch": b,
+            "max_tracks": t,
+            "tracks_bits": bits(flat_tracks),
+            "mask_bits": bits(flat_mask),
+            "calib_bits": bits(flat_calib),
+            "selected_bits": bits(selected),
+            "features_bits": bits(feats),
+            "calibrated_bits": bits(cal),
+            "histogram_bits": bits(hist),
+        })
+
+    doc = {
+        "generator": "python/tests/gen_golden.py",
+        "note": "f32 bit patterns; see generator docs for the exact "
+                "sequencing contract the rust reference backend mirrors",
+        "hist_bins": HIST_BINS,
+        "num_features": NUM_FEATURES,
+        "ranges_bits": bits(ranges),
+        "cases": cases,
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(out_path)}")
+
+
+if __name__ == "__main__":
+    main()

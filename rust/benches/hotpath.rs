@@ -2,7 +2,13 @@
 //! (DESIGN.md §Perf targets): scheduler decisions, catalogue ops, wire
 //! codec, filter evaluation, brick encode/decode, DES event rate,
 //! histogram merge — plus the columnar-vs-row node hot path (v2 bricks
-//! + filter bytecode vs v1 bricks + tree walk).
+//! + filter bytecode vs v1 bricks + tree walk), and the **full engine
+//! path**: decode → pack → kernel (features) → filter → histogram
+//! through the backend-dispatched [`geps::runtime::Engine`]. The engine
+//! stages are hermetic too — auto backend selection provisions the
+//! pure-Rust reference programs when no native XLA artifacts are
+//! present — so the JSON carries real end-to-end numbers in any
+//! checkout.
 //!
 //! Besides the human-readable table, writes machine-readable results to
 //! `BENCH_hotpath.json` at the repo root so the perf trajectory is
@@ -16,11 +22,14 @@ use geps::events::{
     EventBatch, EventGenerator, GeneratorConfig, NUM_FEATURES,
 };
 use geps::filterexpr;
+use geps::runtime::{Engine, EnginePool, FeatureMatrix};
 use geps::scheduler::{BrickState, NodeState, Policy, SchedCtx};
 use geps::sim::Engine as SimEngine;
 use geps::util::bench::{bench, print_table, Stats};
 use geps::util::json::Json;
 use geps::wire::Message;
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
 
 fn sched_ctx(nodes: usize, bricks: usize) -> SchedCtx {
     SchedCtx {
@@ -305,6 +314,132 @@ fn main() {
         s,
     );
 
+    // ---- the full engine path (backend-dispatched compute) ------------
+    // decode → pack → kernel → filter → histogram, exactly the node
+    // executor's task loop. Loads hermetically: the reference backend
+    // self-provisions when no XLA artifacts are linked.
+    let engine = Engine::load(&geps::runtime::default_artifacts_dir())
+        .expect("engine loads hermetically (reference backend)");
+    let backend = engine.backend_name();
+    assert_eq!(
+        (engine.manifest.batch, engine.manifest.max_tracks),
+        (HOT_BATCH, HOT_TRACKS),
+        "the engine stages are calibrated for the model.py default \
+         shapes; point GEPS_ARTIFACTS away from the non-default \
+         artifacts dir (or regenerate it with `geps gen-artifacts`) \
+         before benching"
+    );
+    let calib = Engine::identity_calib();
+
+    // kernel alone over all pages
+    let s = bench(3, scale(20), || {
+        let mut start = 0;
+        while start < cols.len() {
+            let end = (start + HOT_BATCH).min(cols.len());
+            let batch =
+                cols.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+            std::hint::black_box(engine.features(&batch, &calib).unwrap());
+            start = end;
+        }
+    });
+    push(
+        &format!("engine features kernel 2000 ev ({backend})"),
+        Some("engine_features"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+
+    // single-threaded end-to-end through the engine
+    let mut scratch = filterexpr::VmScratch::new();
+    let mut mask = Vec::new();
+    let s = bench(3, scale(20), || {
+        let (_, c) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+        let mut hist: Vec<f32> = Vec::new();
+        let mut accepted = 0usize;
+        let mut start = 0;
+        while start < c.len() {
+            let end = (start + HOT_BATCH).min(c.len());
+            let batch = c.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+            let feats = engine.features(&batch, &calib).unwrap();
+            filter.accept_batch_into(
+                &feats.data,
+                feats.n_real,
+                &mut scratch,
+                &mut mask,
+            );
+            let mut sel = vec![0f32; HOT_BATCH];
+            for (i, &keep) in mask.iter().enumerate() {
+                if keep {
+                    sel[i] = 1.0;
+                    accepted += 1;
+                }
+            }
+            let h = engine.histogram(&feats, &sel).unwrap();
+            merge_into(&mut hist, h);
+            start = end;
+        }
+        std::hint::black_box((accepted, hist.len()));
+    });
+    push(
+        &format!("engine end-to-end 2000 ev ({backend})"),
+        Some("engine_end_to_end"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+
+    // pipelined through the engine pool (the executor's shape: one
+    // kernel execution in flight while the next page packs)
+    let pool =
+        EnginePool::start(geps::runtime::default_artifacts_dir(), 2)
+            .expect("pool starts hermetically");
+    let mut scratch = filterexpr::VmScratch::new();
+    let mut mask = Vec::new();
+    let s = bench(3, scale(20), || {
+        let (_, c) = BrickFile::decode_columnar(&v2.bytes).unwrap();
+        let mut hist: Vec<f32> = Vec::new();
+        let mut accepted = 0usize;
+        let mut inflight: VecDeque<Receiver<anyhow::Result<FeatureMatrix>>> =
+            VecDeque::new();
+        let mut start = 0;
+        while start < c.len() {
+            let end = (start + HOT_BATCH).min(c.len());
+            let batch = c.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+            inflight.push_back(pool.features_async(batch, calib).unwrap());
+            if inflight.len() >= 2 {
+                accepted += drain_one_bench(
+                    &mut inflight,
+                    &pool,
+                    &filter,
+                    &mut scratch,
+                    &mut mask,
+                    &mut hist,
+                );
+            }
+            start = end;
+        }
+        while !inflight.is_empty() {
+            accepted += drain_one_bench(
+                &mut inflight,
+                &pool,
+                &filter,
+                &mut scratch,
+                &mut mask,
+                &mut hist,
+            );
+        }
+        std::hint::black_box((accepted, hist.len()));
+    });
+    push(
+        &format!("engine pipelined (pool x2) 2000 ev ({backend})"),
+        Some("engine_pipelined"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+    pool.shutdown();
+
     // bit-identity checks backing the JSON claims: v1 and v2 bricks must
     // produce identical kernel batches, and both filter engines must
     // produce identical accept masks
@@ -383,13 +518,53 @@ fn main() {
         &rows,
     );
 
-    write_json(smoke, &results, batches_identical, masks_identical);
+    write_json(smoke, backend, &results, batches_identical, masks_identical);
+}
+
+/// Elementwise histogram merge into an accumulator (first merge adopts).
+fn merge_into(hist: &mut Vec<f32>, h: Vec<f32>) {
+    if hist.is_empty() {
+        *hist = h;
+    } else {
+        for (a, b) in hist.iter_mut().zip(h) {
+            *a += b;
+        }
+    }
+}
+
+/// Complete the oldest in-flight kernel execution — the bench-local
+/// mirror of the node executor's pipeline drain. Returns the number of
+/// accepted events in the drained batch.
+fn drain_one_bench(
+    inflight: &mut VecDeque<Receiver<anyhow::Result<FeatureMatrix>>>,
+    pool: &EnginePool,
+    filter: &filterexpr::CompiledFilter,
+    scratch: &mut filterexpr::VmScratch,
+    mask: &mut Vec<bool>,
+    hist: &mut Vec<f32>,
+) -> usize {
+    let rx = inflight.pop_front().expect("inflight non-empty");
+    let feats = rx.recv().expect("engine worker alive").unwrap();
+    filter.accept_batch_into(&feats.data, feats.n_real, scratch, mask);
+    let mut sel = vec![0f32; feats.batch];
+    let mut accepted = 0usize;
+    for (i, &keep) in mask.iter().enumerate() {
+        if keep {
+            sel[i] = 1.0;
+            accepted += 1;
+        }
+    }
+    let h = pool.histogram(feats, sel).expect("histogram");
+    merge_into(hist, h);
+    accepted
 }
 
 /// Emit `BENCH_hotpath.json` at the repo root: events/sec per stage,
-/// columnar-vs-row speedups, and the bit-identity checks.
+/// columnar-vs-row speedups, the full-engine-path numbers (with which
+/// backend executed them), and the bit-identity checks.
 fn write_json(
     smoke: bool,
+    backend: &str,
     results: &[(String, f64, f64)],
     batches_identical: bool,
     masks_identical: bool,
@@ -443,7 +618,18 @@ fn write_json(
                         "end_to_end_v2_columnar_bytecode",
                         "end_to_end_v1_row_treewalk",
                     ),
+                )
+                .set(
+                    "engine_pipelining",
+                    ratio("engine_pipelined", "engine_end_to_end"),
                 ),
+        )
+        .set(
+            "engine",
+            Json::obj()
+                .set("backend", backend)
+                .set("batch", HOT_BATCH)
+                .set("pool_workers", 2),
         )
         .set(
             "bit_identical",

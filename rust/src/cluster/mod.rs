@@ -81,6 +81,11 @@ impl ClusterHandle {
             GassService::new(topology.clone(), config.time_scale, config.streams);
         // one engine worker per node, min 1
         let pool = EnginePool::start(artifacts, config.nodes.len().max(1))?;
+        // auto backend selection may have cross-checked XLA against the
+        // pure-Rust reference on a canary batch; surface the deviation
+        if let Some(ulps) = crate::runtime::backend_selfcheck_ulps() {
+            metrics.gauge("runtime.backend_selfcheck_ulps").set(ulps);
+        }
 
         // --- dataset generation + brick placement -------------------
         let mut gen = EventGenerator::new(

@@ -51,6 +51,18 @@ impl FeatureId {
         FeatureId::ALL.iter().copied().find(|f| f.name() == name)
     }
 
+    /// All features' histogram ranges as the flat (F, 2) row-major
+    /// `[lo0, hi0, lo1, hi1, ...]` tensor the histogram program takes.
+    pub fn ranges_flat() -> Vec<f32> {
+        FeatureId::ALL
+            .iter()
+            .flat_map(|f| {
+                let (lo, hi) = f.hist_range();
+                [lo, hi]
+            })
+            .collect()
+    }
+
     /// Sensible histogram range [lo, hi) per feature for merge/visualise.
     pub fn hist_range(self) -> (f32, f32) {
         match self {

@@ -85,9 +85,29 @@
 //!   re-replication; node death fails over across *all* jobs),
 //!   [`cluster`] (admission + wiring), [`portal`] (submit / status /
 //!   cancel over HTTP)
-//! - compute: [`runtime`] (PJRT engine over `artifacts/*.hlo.txt`;
-//!   builds against an in-tree `xla` API stub so the coordination plane
-//!   compiles without the native backend — see [`runtime::xla`])
+//! - compute: [`runtime`] (backend-dispatched engine: native PJRT over
+//!   `artifacts/*.hlo.txt` when the real `xla` bindings are linked, the
+//!   **pure-Rust reference backend** otherwise — see below)
+//!
+//! ## The pure-Rust reference compute backend
+//!
+//! The per-event programs (`features`, `calibrate`, `histogram`) exist
+//! twice: as the AOT-lowered JAX/Pallas artifacts executed via PJRT,
+//! and as plain Rust loops ([`runtime::reference`]) that mirror
+//! `python/compile/kernels/ref.py` op-for-op in f32 (pinned by
+//! checked-in golden vectors, bit-exact). `GEPS_BACKEND` selects:
+//! `auto` (default) compiles native XLA when artifacts + bindings are
+//! present and falls back to the reference otherwise — cross-checking
+//! the two on a canary batch when both exist
+//! (`runtime.backend_selfcheck_ulps`); `reference` and `xla` force a
+//! side. The consequence: **the entire live cluster executes
+//! hermetically** — every node runs real compute over its bricks, and
+//! the integration / end-to-end / portal / membership / multijob suites
+//! run to completion in any checkout with zero setup (`geps
+//! gen-artifacts` materialises an artifacts dir when one is wanted; no
+//! python or XLA involved). This is the paper's requirement that the
+//! event application run natively at every grid node, taken as a build
+//! invariant.
 
 pub mod brick;
 pub mod catalog;

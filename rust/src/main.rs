@@ -8,7 +8,8 @@
 //!   cancel     cancel a queued or running job via the portal
 //!   add-node   register a new grid node mid-run (elastic membership)
 //!   node-info  GRIS node query via a running portal
-//!   calibrate  measure PJRT kernel throughput (DES calibration input)
+//!   gen-artifacts  write a reference-backend manifest (no python/XLA)
+//!   calibrate  measure kernel throughput (DES calibration input)
 //!   fig7       run the Fig 7 DES sweep and print the table
 //!
 //! Arg parsing is hand-rolled (no network registry in this sandbox), in
@@ -336,10 +337,49 @@ fn cmd_node_info(flags: BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_gen_artifacts(flags: BTreeMap<String, String>) -> Result<()> {
+    use geps::runtime::manifest::{DEFAULT_BATCH, DEFAULT_MAX_TRACKS};
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let batch: usize = flags
+        .get("batch")
+        .map(|s| s.parse().context("--batch"))
+        .transpose()?
+        .unwrap_or(DEFAULT_BATCH);
+    let max_tracks: usize = flags
+        .get("max-tracks")
+        .map(|s| s.parse().context("--max-tracks"))
+        .transpose()?
+        .unwrap_or(DEFAULT_MAX_TRACKS);
+    let path = geps::runtime::Manifest::write_reference(
+        std::path::Path::new(&out),
+        batch,
+        max_tracks,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "[geps] wrote {} (backend reference, batch {batch}, max_tracks \
+         {max_tracks})",
+        path.display()
+    );
+    println!(
+        "[geps] the runtime loads this dir under GEPS_BACKEND=auto or \
+         =reference with no HLO artifacts; run `make artifacts` with the \
+         native xla_extension linked for the XLA backend"
+    );
+    Ok(())
+}
+
 fn cmd_calibrate(_flags: BTreeMap<String, String>) -> Result<()> {
     let dir = geps::runtime::default_artifacts_dir();
     let engine = geps::runtime::Engine::load(&dir)?;
-    println!("[geps] platform: {}", engine.platform());
+    println!(
+        "[geps] backend: {} (platform {})",
+        engine.backend_name(),
+        engine.platform()
+    );
     let report = geps::runtime::calibrate::calibrate(&engine, 20)?;
     println!("[geps] {}", report.summary());
     Ok(())
@@ -371,7 +411,7 @@ fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: geps <serve|demo|submit|status|cancel|add-node|node-info|kill|histogram|bricks|calibrate|fig7> [--flags]
+        "usage: geps <serve|demo|submit|status|cancel|add-node|node-info|kill|histogram|bricks|gen-artifacts|calibrate|fig7> [--flags]
   serve     --config FILE --listen ADDR --gris-listen ADDR
   demo      --config FILE --events N --policy P --filter EXPR
   submit    --portal ADDR --filter EXPR --policy P
@@ -384,6 +424,11 @@ fn usage() -> ! {
   kill      --portal ADDR --node NAME        (fault injection)
   histogram --portal ADDR --job ID           (visualize merged results)
   bricks    --portal ADDR                    (brick placement view)
+  gen-artifacts [--out DIR] [--batch B] [--max-tracks T]
+                                             (reference-backend manifest:
+                                              no python or XLA needed;
+                                              GEPS_BACKEND=auto|reference|xla
+                                              picks the compute backend)
   calibrate
   fig7      [--reps N]"
     );
@@ -405,6 +450,7 @@ fn main() -> Result<()> {
         "kill" => cmd_kill(flags),
         "histogram" => cmd_histogram(flags),
         "bricks" => cmd_bricks(flags),
+        "gen-artifacts" => cmd_gen_artifacts(flags),
         "calibrate" => cmd_calibrate(flags),
         "fig7" => cmd_fig7(flags),
         _ => usage(),

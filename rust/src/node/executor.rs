@@ -6,6 +6,8 @@
 //! 3. load the brick's columns (cached; v2 bricks decode straight into
 //!    them) and bounds-check the task's event range
 //! 4. run the AOT kernel (features) batch by batch via the engine pool
+//!    (native XLA when linked, the pure-Rust reference backend
+//!    otherwise — the executor is backend-agnostic)
 //! 5. evaluate the user filter bytecode over the features (L3)
 //! 6. histogram selected events (AOT histogram program), build the
 //!    result file, GASS it back to the leader

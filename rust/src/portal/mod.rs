@@ -50,6 +50,19 @@ const INDEX_HTML: &str = r#"<!doctype html>
   <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
   <li>GET /metrics &mdash; coordinator metrics</li>
 </ul>
+<p><b>Compute backend:</b> kernels run on the backend selected by
+<code>GEPS_BACKEND</code> — <code>auto</code> (default) compiles the AOT
+HLO artifacts with native XLA when both artifacts and the
+<code>xla_extension</code> bindings are linked, and otherwise falls back
+to the <b>pure-Rust reference backend</b>, a bit-pinned mirror of the
+python kernels that makes the whole grid run hermetically;
+<code>reference</code> / <code>xla</code> force a side. <code>geps
+gen-artifacts</code> writes a reference manifest when a concrete
+artifacts dir is wanted (no python or XLA needed); <code>make
+artifacts</code> plus the real bindings enable the XLA path, and when
+both backends are present the startup self-check reports their max
+deviation under the <code>runtime.backend_selfcheck_ulps</code> metric
+on <code>GET /metrics</code>.</p>
 <p><b>Membership protocol:</b> a node added via <code>/nodes/add</code> is
 registered in the catalogue (WAL-durable) and GRIS, its executor is
 spawned, and the broker receives a <code>NodeJoin</code> control message:

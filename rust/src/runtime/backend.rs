@@ -1,0 +1,143 @@
+//! The compute-backend seam: one trait the [`crate::runtime::Engine`]
+//! dispatches over, with two implementations — the native PJRT/XLA
+//! backend (when linked) and the pure-Rust reference backend (always
+//! available). Which one `Engine::load` picks is controlled by
+//! `GEPS_BACKEND`:
+//!
+//! - `auto` (default): compile the AOT artifacts with native XLA if both
+//!   are present, otherwise fall back to the reference backend. When XLA
+//!   wins, a canary batch is cross-checked against the reference and the
+//!   max deviation recorded (`runtime.backend_selfcheck_ulps`).
+//! - `reference`: always execute the pure-Rust programs.
+//! - `xla`: require the native backend; fail loudly otherwise.
+
+use crate::events::EventBatch;
+use anyhow::{bail, Result};
+
+/// A compute backend able to execute the three AOT programs. Shape
+/// validation against the manifest happens in `Engine`, above this
+/// trait; implementations may assume coherent inputs.
+pub trait Backend {
+    /// Stable backend identifier (`"reference"` or `"xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Device platform string (mirrors `PjRtClient::platform_name`).
+    fn platform(&self) -> String;
+
+    /// Execute a features-shaped program (`features`, `features_ref`, or
+    /// an ablation variant): (B,T,4),(B,T),(4,4) -> (B,F) flat.
+    fn features(
+        &self,
+        program: &str,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<Vec<f32>>;
+
+    /// Execute the `calibrate` program: (B,T,4),(B,T),(4,4) -> (B,T,4).
+    fn calibrate(&self, batch: &EventBatch, calib: &[f32; 16])
+        -> Result<Vec<f32>>;
+
+    /// Execute the `histogram` program:
+    /// (B,F) feats, (B,) selected, (F,2) ranges -> (F,BINS) flat.
+    fn histogram(
+        &self,
+        feats: &[f32],
+        selected: &[f32],
+        ranges: &[f32],
+    ) -> Result<Vec<f32>>;
+}
+
+/// Which backend `Engine::load` should provision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Native XLA when artifacts + bindings allow, reference otherwise.
+    Auto,
+    /// Pure-Rust reference programs, unconditionally.
+    Reference,
+    /// Native XLA, or fail.
+    Xla,
+}
+
+impl BackendChoice {
+    /// Parse a `GEPS_BACKEND` value.
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "reference" => Ok(BackendChoice::Reference),
+            "xla" => Ok(BackendChoice::Xla),
+            other => bail!(
+                "GEPS_BACKEND='{other}' (expected auto|reference|xla)"
+            ),
+        }
+    }
+
+    /// Read `GEPS_BACKEND` from the environment (unset means `auto`).
+    pub fn from_env() -> Result<BackendChoice> {
+        match std::env::var("GEPS_BACKEND") {
+            Ok(v) => BackendChoice::parse(&v),
+            Err(_) => Ok(BackendChoice::Auto),
+        }
+    }
+}
+
+/// Order-preserving ulp distance between two f32 values: 0 iff the bits
+/// are identical, 1 for adjacent floats, and monotone in between (the
+/// sign-magnitude bit trick). NaN on either side saturates to u64::MAX.
+pub fn ulp_diff(a: f32, b: f32) -> u64 {
+    if a.is_nan() || b.is_nan() {
+        return if a.to_bits() == b.to_bits() { 0 } else { u64::MAX };
+    }
+    fn key(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            // negative floats: bigger magnitude = bigger bits; flip so
+            // the total order descends, with -0.0 adjacent below +0.0
+            -1 - (b & 0x7FFF_FFFF) as i64
+        } else {
+            b as i64
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Max ulp distance over two equal-length slices.
+pub fn max_ulp_diff(a: &[f32], b: &[f32]) -> u64 {
+    assert_eq!(a.len(), b.len(), "slice lengths");
+    a.iter().zip(b).map(|(&x, &y)| ulp_diff(x, y)).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(
+            BackendChoice::parse("reference").unwrap(),
+            BackendChoice::Reference
+        );
+        assert_eq!(BackendChoice::parse("xla").unwrap(), BackendChoice::Xla);
+        assert!(BackendChoice::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0);
+        assert_eq!(ulp_diff(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_diff(0.0, -0.0), 1); // adjacent in the total order
+        assert_eq!(ulp_diff(-1.0, -1.0), 0);
+        assert!(ulp_diff(1.0, 2.0) > 1_000_000);
+        // symmetric and monotone across zero
+        assert_eq!(ulp_diff(-1e-40, 1e-40), ulp_diff(1e-40, -1e-40));
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u64::MAX);
+    }
+
+    #[test]
+    fn max_ulp_over_slices() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, f32::from_bits(3.0f32.to_bits() + 2)];
+        assert_eq!(max_ulp_diff(&a, &b), 2);
+        assert_eq!(max_ulp_diff(&[], &[]), 0);
+    }
+}

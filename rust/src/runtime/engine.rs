@@ -1,15 +1,30 @@
-//! One PJRT engine: CPU client + compiled `features`, `calibrate` and
-//! `histogram` executables (loaded from HLO text — see
-//! /opt/xla-example/README.md for why text, not serialized protos).
+//! One compute engine: a [`Backend`] (native PJRT/XLA or the pure-Rust
+//! reference) plus the manifest whose shape contract it enforces.
+//!
+//! `Engine::load` is where backend selection happens (see
+//! [`crate::runtime::backend::BackendChoice`]): `GEPS_BACKEND=auto`
+//! compiles the AOT HLO artifacts with native XLA when both are present
+//! and falls back to the reference programs otherwise, so the engine
+//! always loads — hermetic checkouts execute for real instead of
+//! skipping. When XLA wins the auto pick, one canary batch is
+//! cross-checked against the reference backend and the max deviation
+//! exported via [`crate::runtime::backend_selfcheck_ulps`].
 
 use crate::events::{EventBatch, FeatureId, NUM_FEATURES};
-use crate::runtime::manifest::Manifest;
+use crate::runtime::backend::{
+    max_ulp_diff, Backend, BackendChoice,
+};
+use crate::runtime::manifest::{
+    Manifest, DEFAULT_BATCH, DEFAULT_MAX_TRACKS,
+};
+use crate::runtime::reference::ReferenceBackend;
 // `xla::` resolves to the in-tree stub; point it at the real crate to
 // execute against native PJRT (see runtime/xla.rs)
 use crate::runtime::xla;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::{Mutex, OnceLock};
 
 /// A (B, F) row-major feature matrix for one executed batch.
 #[derive(Debug, Clone, PartialEq)]
@@ -25,17 +40,19 @@ impl FeatureMatrix {
     }
 }
 
-pub struct Engine {
+/// The native PJRT backend: CPU client + compiled executables (loaded
+/// from HLO text — see /opt/xla-example/README.md for why text, not
+/// serialized protos). Compiles only when the real `xla` crate is
+/// linked; against the in-tree stub, `compile` reports the backend
+/// unavailable and auto selection falls back to the reference.
+pub struct XlaBackend {
     client: xla::PjRtClient,
     exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
-    pub manifest: Manifest,
 }
 
-impl Engine {
-    /// Load and compile all programs from an artifacts directory.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+impl XlaBackend {
+    /// Compile every program in the manifest.
+    pub fn compile(manifest: &Manifest) -> Result<XlaBackend> {
         let client = xla::PjRtClient::cpu()
             .context("creating PJRT CPU client")?;
         let mut exes = BTreeMap::new();
@@ -52,11 +69,7 @@ impl Engine {
                 .with_context(|| format!("compiling '{name}'"))?;
             exes.insert(name.clone(), exe);
         }
-        Ok(Engine { client, exes, manifest })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        Ok(XlaBackend { client, exes })
     }
 
     fn run1(
@@ -80,6 +93,222 @@ impl Engine {
             bail!("literal shape {:?} vs data len {}", dims, data.len());
         }
         Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn features(
+        &self,
+        program: &str,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<Vec<f32>> {
+        let (b, t) = (batch.batch, batch.max_tracks);
+        let out = self.run1(
+            program,
+            &[
+                Self::literal(&batch.tracks, &[b as i64, t as i64, 4])?,
+                Self::literal(&batch.mask, &[b as i64, t as i64])?,
+                Self::literal(calib, &[4, 4])?,
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn calibrate(
+        &self,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<Vec<f32>> {
+        let (b, t) = (batch.batch, batch.max_tracks);
+        let out = self.run1(
+            "calibrate",
+            &[
+                Self::literal(&batch.tracks, &[b as i64, t as i64, 4])?,
+                Self::literal(&batch.mask, &[b as i64, t as i64])?,
+                Self::literal(calib, &[4, 4])?,
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn histogram(
+        &self,
+        feats: &[f32],
+        selected: &[f32],
+        ranges: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = selected.len();
+        let f = ranges.len() / 2;
+        let out = self.run1(
+            "histogram",
+            &[
+                Self::literal(feats, &[b as i64, f as i64])?,
+                Self::literal(selected, &[b as i64])?,
+                Self::literal(ranges, &[f as i64, 2])?,
+            ],
+        )?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Max ulp deviation observed by the most recent auto-mode backend
+/// self-check in this process (None until one has run — i.e. until an
+/// Engine::load actually compiled native XLA).
+static SELFCHECK_ULPS: OnceLock<u64> = OnceLock::new();
+
+pub(crate) fn selfcheck_ulps() -> Option<u64> {
+    SELFCHECK_ULPS.get().copied()
+}
+
+pub struct Engine {
+    backend: Box<dyn Backend>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load an engine from an artifacts directory, with the backend
+    /// chosen by `GEPS_BACKEND` (auto | reference | xla; unset = auto).
+    /// In auto mode a missing manifest is not an error: the reference
+    /// backend provisions itself with the model.py default shapes, so a
+    /// hermetic checkout executes end to end with zero setup.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        Engine::load_with(dir, BackendChoice::from_env()?)
+    }
+
+    /// `load` with an explicit backend choice (tests use this to avoid
+    /// racing on process-global env vars).
+    pub fn load_with(dir: &Path, choice: BackendChoice) -> Result<Engine> {
+        match choice {
+            BackendChoice::Xla => {
+                let manifest =
+                    Manifest::load(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+                let backend = XlaBackend::compile(&manifest)?;
+                Ok(Engine { backend: Box::new(backend), manifest })
+            }
+            BackendChoice::Reference => {
+                Ok(Self::reference_engine(Self::manifest_or_default(dir)?))
+            }
+            BackendChoice::Auto => {
+                let manifest = Self::manifest_or_default(dir)?;
+                if manifest.backend_hint.as_deref() == Some("reference") {
+                    // gen-artifacts manifest (or synthesized default):
+                    // reference by construction, nothing to log
+                    return Ok(Self::reference_engine(manifest));
+                }
+                if !manifest.programs.values().any(|spec| spec.file.exists())
+                {
+                    // an XLA-flavored manifest whose HLO files are gone
+                    // (partial sync, deleted artifacts) — degrading is
+                    // the auto contract, but never silently
+                    eprintln!(
+                        "[runtime] manifest in {} names HLO artifacts \
+                         but none exist; falling back to the reference \
+                         backend",
+                        dir.display()
+                    );
+                    return Ok(Self::reference_engine(manifest));
+                }
+                match XlaBackend::compile(&manifest) {
+                    Ok(x) => {
+                        Self::selfcheck_once(&x, &manifest)?;
+                        Ok(Engine { backend: Box::new(x), manifest })
+                    }
+                    Err(e) => {
+                        // artifacts present but the native backend cannot
+                        // compile them (typically: the in-tree xla stub is
+                        // linked). Say why before degrading, so a real
+                        // compile failure is never silently masked.
+                        eprintln!(
+                            "[runtime] native XLA unavailable, falling \
+                             back to the reference backend: {e:#}"
+                        );
+                        Ok(Self::reference_engine(manifest))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Load the manifest from `dir`; a *missing* manifest file means
+    /// "no artifacts" and yields the synthesized reference default, but
+    /// a manifest that exists and fails to parse or validate is a hard
+    /// error — that is the L1/L3 drift gate, and falling back would
+    /// mask it.
+    fn manifest_or_default(dir: &Path) -> Result<Manifest> {
+        if !dir.join("manifest.json").exists() {
+            return Ok(Manifest::reference(DEFAULT_BATCH, DEFAULT_MAX_TRACKS));
+        }
+        Manifest::load(dir).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    fn reference_engine(manifest: Manifest) -> Engine {
+        let backend = ReferenceBackend::new(manifest.hist_bins);
+        Engine { backend: Box::new(backend), manifest }
+    }
+
+    /// Run the XLA-vs-reference canary cross-check exactly once per
+    /// process (pools load one engine per worker; re-checking is
+    /// waste). The mutex serializes concurrent loads so racing workers
+    /// cannot each run their own canary.
+    fn selfcheck_once(x: &XlaBackend, manifest: &Manifest) -> Result<()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        let _guard = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+        if SELFCHECK_ULPS.get().is_some() {
+            return Ok(());
+        }
+        let reference = ReferenceBackend::new(manifest.hist_bins);
+        let ulps = Self::selfcheck(x, &reference, manifest)?;
+        let _ = SELFCHECK_ULPS.set(ulps);
+        eprintln!(
+            "[runtime] backend=xla (self-check vs reference: max {ulps} \
+             ulps on canary batch)"
+        );
+        Ok(())
+    }
+
+    /// Cross-check two backends on one deterministic canary batch:
+    /// returns the max ulp deviation across the features output. Used by
+    /// auto selection when native XLA compiles (reference is the
+    /// executable spec; XLA may reassociate and use different libm, so
+    /// this reports drift rather than asserting bit equality).
+    pub(crate) fn selfcheck(
+        a: &dyn Backend,
+        b: &dyn Backend,
+        manifest: &Manifest,
+    ) -> Result<u64> {
+        use crate::events::{EventGenerator, GeneratorConfig};
+        let events = EventGenerator::new(GeneratorConfig::default(), 0x5E1F)
+            .take(manifest.batch.min(64));
+        let batch = EventBatch::pack(
+            &events,
+            manifest.batch,
+            manifest.max_tracks,
+        );
+        let calib = Engine::identity_calib();
+        let fa = a.features("features", &batch, &calib)?;
+        let fb = b.features("features", &batch, &calib)?;
+        if fa.len() != fb.len() {
+            bail!("self-check output shapes diverge: {} vs {}", fa.len(), fb.len());
+        }
+        Ok(max_ulp_diff(&fa, &fb))
+    }
+
+    /// Which backend this engine executes on ("reference" or "xla").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
     }
 
     /// Execute the features program over a packed batch.
@@ -109,15 +338,10 @@ impl Engine {
                 batch.max_tracks
             );
         }
-        let out = self.run1(
-            name,
-            &[
-                Self::literal(&batch.tracks, &[b as i64, t as i64, 4])?,
-                Self::literal(&batch.mask, &[b as i64, t as i64])?,
-                Self::literal(calib, &[4, 4])?,
-            ],
-        )?;
-        let data = out.to_vec::<f32>()?;
+        if !self.manifest.programs.contains_key(name) {
+            bail!("no program '{name}' in manifest");
+        }
+        let data = self.backend.features(name, batch, calib)?;
         if data.len() != b * NUM_FEATURES {
             bail!("features output len {}", data.len());
         }
@@ -131,15 +355,14 @@ impl Engine {
         calib: &[f32; 16],
     ) -> Result<Vec<f32>> {
         let (b, t) = (self.manifest.batch, self.manifest.max_tracks);
-        let out = self.run1(
-            "calibrate",
-            &[
-                Self::literal(&batch.tracks, &[b as i64, t as i64, 4])?,
-                Self::literal(&batch.mask, &[b as i64, t as i64])?,
-                Self::literal(calib, &[4, 4])?,
-            ],
-        )?;
-        Ok(out.to_vec::<f32>()?)
+        if batch.batch != b || batch.max_tracks != t {
+            bail!(
+                "batch shape ({}, {}) does not match artifacts ({b}, {t})",
+                batch.batch,
+                batch.max_tracks
+            );
+        }
+        self.backend.calibrate(batch, calib)
     }
 
     /// Execute the histogram program: counts of selected events per
@@ -150,26 +373,14 @@ impl Engine {
         selected: &[f32],
     ) -> Result<Vec<f32>> {
         let b = self.manifest.batch;
-        let f = self.manifest.num_features;
         if selected.len() != b {
             bail!("selected len {} != batch {b}", selected.len());
         }
-        let ranges: Vec<f32> = FeatureId::ALL
-            .iter()
-            .flat_map(|fid| {
-                let (lo, hi) = fid.hist_range();
-                [lo, hi]
-            })
-            .collect();
-        let out = self.run1(
-            "histogram",
-            &[
-                Self::literal(&feats.data, &[b as i64, f as i64])?,
-                Self::literal(selected, &[b as i64])?,
-                Self::literal(&ranges, &[f as i64, 2])?,
-            ],
-        )?;
-        Ok(out.to_vec::<f32>()?)
+        if feats.data.len() != b * self.manifest.num_features {
+            bail!("feature matrix len {}", feats.data.len());
+        }
+        let ranges = FeatureId::ranges_flat();
+        self.backend.histogram(&feats.data, selected, &ranges)
     }
 
     /// Identity calibration matrix.
@@ -182,12 +393,13 @@ impl Engine {
     }
 }
 
-// NOTE: Engine correctness tests live in rust/tests/integration.rs (they
-// need `make artifacts` to have run); unit tests here cover the pure
-// helpers only.
+// NOTE: XLA-path Engine tests live in rust/tests/integration.rs (they
+// need `make artifacts` + the native backend); reference-path coverage
+// is hermetic and lives there too plus rust/tests/golden.rs.
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::events::{EventGenerator, GeneratorConfig};
 
     #[test]
     fn identity_calib_is_identity() {
@@ -207,5 +419,144 @@ mod tests {
             n_real: 2,
         };
         assert_eq!(fm.row(1)[0], NUM_FEATURES as f32);
+    }
+
+    #[test]
+    fn auto_load_without_artifacts_provisions_reference() {
+        let dir = Path::new("/nonexistent/geps-artifacts");
+        let e = Engine::load_with(dir, BackendChoice::Auto).unwrap();
+        assert_eq!(e.backend_name(), "reference");
+        assert_eq!(e.platform(), "cpu");
+        assert_eq!(e.manifest.batch, DEFAULT_BATCH);
+        assert_eq!(e.manifest.max_tracks, DEFAULT_MAX_TRACKS);
+        // and it executes
+        let events =
+            EventGenerator::new(GeneratorConfig::default(), 1).take(5);
+        let batch = EventBatch::pack(
+            &events,
+            e.manifest.batch,
+            e.manifest.max_tracks,
+        );
+        let feats = e.features(&batch, &Engine::identity_calib()).unwrap();
+        assert_eq!(feats.n_real, 5);
+        assert!(feats.row(0)[0] >= 1.0); // n_tracks of a real event
+    }
+
+    #[test]
+    fn explicit_xla_choice_fails_without_native_backend() {
+        // with the in-tree stub, GEPS_BACKEND=xla must fail loudly, not
+        // silently fall back
+        let dir = Path::new("/nonexistent/geps-artifacts");
+        assert!(Engine::load_with(dir, BackendChoice::Xla).is_err());
+    }
+
+    #[test]
+    fn reference_choice_ignores_missing_artifacts() {
+        let dir = Path::new("/nonexistent/geps-artifacts");
+        let e = Engine::load_with(dir, BackendChoice::Reference).unwrap();
+        assert_eq!(e.backend_name(), "reference");
+    }
+
+    #[test]
+    fn corrupt_manifest_is_a_hard_error_not_a_fallback() {
+        // a manifest that EXISTS but fails to parse/validate is the
+        // L1/L3 drift gate firing — auto and reference modes must
+        // refuse to start, not silently self-provision defaults
+        let dir = std::env::temp_dir().join(format!(
+            "geps-engine-drift-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Engine::load_with(&dir, BackendChoice::Auto).is_err());
+        assert!(Engine::load_with(&dir, BackendChoice::Reference).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_batch_shape_rejected() {
+        let e = Engine::load_with(
+            Path::new("/nonexistent"),
+            BackendChoice::Reference,
+        )
+        .unwrap();
+        let bad = EventBatch::pack(&[], 16, 8);
+        assert!(e.features(&bad, &Engine::identity_calib()).is_err());
+        assert!(e.calibrate(&bad, &Engine::identity_calib()).is_err());
+    }
+
+    #[test]
+    fn unknown_program_rejected() {
+        let e = Engine::load_with(
+            Path::new("/nonexistent"),
+            BackendChoice::Reference,
+        )
+        .unwrap();
+        let batch = EventBatch::pack(
+            &[],
+            e.manifest.batch,
+            e.manifest.max_tracks,
+        );
+        assert!(e
+            .features_variant("features_b128", &batch, &Engine::identity_calib())
+            .is_err());
+    }
+
+    #[test]
+    fn selfcheck_identical_backends_is_zero_ulps() {
+        let m = Manifest::reference(32, 8);
+        let a = ReferenceBackend::new(m.hist_bins);
+        let b = ReferenceBackend::new(m.hist_bins);
+        assert_eq!(Engine::selfcheck(&a, &b, &m).unwrap(), 0);
+    }
+
+    /// A backend that perturbs the reference output by one ulp — stands
+    /// in for a native XLA backend with last-ulp drift.
+    struct Perturbed(ReferenceBackend);
+
+    impl Backend for Perturbed {
+        fn name(&self) -> &'static str {
+            "perturbed"
+        }
+        fn platform(&self) -> String {
+            self.0.platform()
+        }
+        fn features(
+            &self,
+            program: &str,
+            batch: &EventBatch,
+            calib: &[f32; 16],
+        ) -> Result<Vec<f32>> {
+            let mut out = self.0.features(program, batch, calib)?;
+            for v in &mut out {
+                if *v > 0.0 {
+                    *v = f32::from_bits(v.to_bits() + 1);
+                }
+            }
+            Ok(out)
+        }
+        fn calibrate(
+            &self,
+            batch: &EventBatch,
+            calib: &[f32; 16],
+        ) -> Result<Vec<f32>> {
+            self.0.calibrate(batch, calib)
+        }
+        fn histogram(
+            &self,
+            feats: &[f32],
+            selected: &[f32],
+            ranges: &[f32],
+        ) -> Result<Vec<f32>> {
+            self.0.histogram(feats, selected, ranges)
+        }
+    }
+
+    #[test]
+    fn selfcheck_detects_ulp_drift() {
+        let m = Manifest::reference(32, 8);
+        let a = Perturbed(ReferenceBackend::new(m.hist_bins));
+        let b = ReferenceBackend::new(m.hist_bins);
+        assert_eq!(Engine::selfcheck(&a, &b, &m).unwrap(), 1);
     }
 }

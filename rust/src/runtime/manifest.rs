@@ -1,12 +1,22 @@
 //! AOT artifact manifest: shapes and program inventory written by
-//! `python/compile/aot.py`. The runtime refuses to start if the manifest
-//! disagrees with the rust-side feature contract — catching L1/L3 drift
-//! at load time instead of as wrong numbers.
+//! `python/compile/aot.py` — or synthesized by
+//! [`Manifest::reference`] / `geps gen-artifacts` for the pure-Rust
+//! reference backend, which needs shapes but no HLO files. The runtime
+//! refuses to start if the manifest disagrees with the rust-side
+//! feature contract — catching L1/L3 drift at load time instead of as
+//! wrong numbers.
 
 use crate::events::FeatureId;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// Default static shapes, mirroring `python/compile/model.py`
+/// (`BATCH` / `MAX_TRACKS` / `HIST_BINS`). Used when no manifest is on
+/// disk and the reference backend provisions itself out of thin air.
+pub const DEFAULT_BATCH: usize = 256;
+pub const DEFAULT_MAX_TRACKS: usize = 32;
+pub const DEFAULT_HIST_BINS: usize = 64;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProgramSpec {
@@ -23,6 +33,10 @@ pub struct Manifest {
     pub hist_bins: usize,
     pub feature_names: Vec<String>,
     pub programs: BTreeMap<String, ProgramSpec>,
+    /// Optional `"backend"` field: `"reference"` in manifests written by
+    /// `geps gen-artifacts`, telling auto backend selection to skip the
+    /// native-XLA compile attempt (there are no HLO files to compile).
+    pub backend_hint: Option<String>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -93,20 +107,146 @@ impl Manifest {
             hist_bins: num("hist_bins")?,
             feature_names,
             programs,
+            backend_hint: j
+                .get("backend")
+                .and_then(Json::as_str)
+                .map(String::from),
         };
         m.validate()?;
         Ok(m)
+    }
+
+    /// A synthetic manifest for the pure-Rust reference backend: the
+    /// shapes of `python/compile/model.py`, the full program inventory,
+    /// and placeholder file entries that are never read. This is what
+    /// makes the runtime available with no `make artifacts` run at all.
+    pub fn reference(batch: usize, max_tracks: usize) -> Manifest {
+        let feat_shape = vec![
+            vec![batch, max_tracks, 4],
+            vec![batch, max_tracks],
+            vec![4, 4],
+        ];
+        let mut programs = BTreeMap::new();
+        for name in ["features", "features_ref", "calibrate"] {
+            programs.insert(
+                name.to_string(),
+                ProgramSpec {
+                    file: PathBuf::from(format!("reference:{name}")),
+                    inputs: feat_shape.clone(),
+                },
+            );
+        }
+        programs.insert(
+            "histogram".to_string(),
+            ProgramSpec {
+                file: PathBuf::from("reference:histogram"),
+                inputs: vec![
+                    vec![batch, crate::events::NUM_FEATURES],
+                    vec![batch],
+                    vec![crate::events::NUM_FEATURES, 2],
+                ],
+            },
+        );
+        Manifest {
+            batch,
+            max_tracks,
+            num_features: crate::events::NUM_FEATURES,
+            hist_bins: DEFAULT_HIST_BINS,
+            feature_names: FeatureId::ALL
+                .iter()
+                .map(|f| f.name().to_string())
+                .collect(),
+            programs,
+            backend_hint: Some("reference".to_string()),
+        }
     }
 
     pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
             ManifestError(format!(
-                "cannot read {} (run `make artifacts`?): {e}",
+                "cannot read {} (run `make artifacts` or `geps \
+                 gen-artifacts`?): {e}",
                 path.display()
             ))
         })?;
         Manifest::parse(dir, &text)
+    }
+
+    /// Serialize this manifest as `manifest.json` text (program file
+    /// entries relative to the artifacts dir). Used by `geps
+    /// gen-artifacts`; `Manifest::parse` round-trips the result.
+    pub fn to_json(&self) -> String {
+        let mut programs = Json::obj();
+        for (name, spec) in &self.programs {
+            let file = spec
+                .file
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_else(|| spec.file.display().to_string());
+            let inputs: Vec<Json> = spec
+                .inputs
+                .iter()
+                .map(|shape| {
+                    Json::obj()
+                        .set(
+                            "shape",
+                            Json::Arr(
+                                shape
+                                    .iter()
+                                    .map(|&d| Json::Num(d as f64))
+                                    .collect(),
+                            ),
+                        )
+                        .set("dtype", "float32")
+                })
+                .collect();
+            programs = programs.set(
+                name,
+                Json::obj().set("file", file.as_str()).set(
+                    "inputs",
+                    Json::Arr(inputs),
+                ),
+            );
+        }
+        let mut doc = Json::obj()
+            .set("batch", self.batch as f64)
+            .set("max_tracks", self.max_tracks as f64)
+            .set("num_features", self.num_features as f64)
+            .set("hist_bins", self.hist_bins as f64)
+            .set(
+                "feature_names",
+                Json::Arr(
+                    self.feature_names
+                        .iter()
+                        .map(|n| Json::Str(n.clone()))
+                        .collect(),
+                ),
+            )
+            .set("programs", programs);
+        if let Some(hint) = &self.backend_hint {
+            doc = doc.set("backend", hint.as_str());
+        }
+        doc.to_string()
+    }
+
+    /// Write a reference-backend manifest into `dir` (creating it),
+    /// making the directory a valid artifacts dir with no python or XLA
+    /// involved. Returns the manifest path.
+    pub fn write_reference(
+        dir: &Path,
+        batch: usize,
+        max_tracks: usize,
+    ) -> Result<PathBuf, ManifestError> {
+        let m = Manifest::reference(batch, max_tracks);
+        std::fs::create_dir_all(dir).map_err(|e| {
+            ManifestError(format!("create {}: {e}", dir.display()))
+        })?;
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, m.to_json()).map_err(|e| {
+            ManifestError(format!("write {}: {e}", path.display()))
+        })?;
+        Ok(path)
     }
 
     /// Cross-check against the rust feature contract.
@@ -196,6 +336,45 @@ mod tests {
     fn missing_program_rejected() {
         let bad = manifest_json().replace("\"histogram\"", "\"histogran\"");
         assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn reference_manifest_validates_and_roundtrips() {
+        let m = Manifest::reference(DEFAULT_BATCH, DEFAULT_MAX_TRACKS);
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.hist_bins, DEFAULT_HIST_BINS);
+        assert_eq!(m.backend_hint.as_deref(), Some("reference"));
+        for p in ["features", "features_ref", "calibrate", "histogram"] {
+            assert!(m.programs.contains_key(p), "{p}");
+        }
+        // serialize -> parse round-trip preserves everything that
+        // matters (file paths get re-rooted at the parse dir)
+        let text = m.to_json();
+        let back = Manifest::parse(Path::new("arts"), &text).unwrap();
+        assert_eq!(back.batch, m.batch);
+        assert_eq!(back.max_tracks, m.max_tracks);
+        assert_eq!(back.hist_bins, m.hist_bins);
+        assert_eq!(back.feature_names, m.feature_names);
+        assert_eq!(back.backend_hint, m.backend_hint);
+        assert_eq!(
+            back.programs["features"].inputs,
+            m.programs["features"].inputs
+        );
+    }
+
+    #[test]
+    fn write_reference_produces_loadable_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "geps-manifest-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = Manifest::write_reference(&dir, 64, 16).unwrap();
+        assert!(path.exists());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!((m.batch, m.max_tracks), (64, 16));
+        assert_eq!(m.backend_hint.as_deref(), Some("reference"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! Engine pool: N worker threads, each owning one compiled [`Engine`],
+//! Engine pool: N worker threads, each owning one loaded [`Engine`],
 //! fed through a channel. XLA handles never cross threads, so no `Send`
-//! bound is needed on them; callers get a cheap cloneable handle whose
-//! calls block until a worker replies. This is the node executor's
-//! compute backend in the live cluster.
+//! bound is needed on them (the pure-Rust reference backend would not
+//! need the indirection, but both backends ride the same pool so the
+//! node executor is backend-agnostic); callers get a cheap cloneable
+//! handle whose calls block until a worker replies. This is the node
+//! executor's compute interface in the live cluster.
 
 use crate::events::EventBatch;
 use crate::runtime::engine::{Engine, FeatureMatrix};

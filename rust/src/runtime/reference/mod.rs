@@ -1,0 +1,125 @@
+//! The pure-Rust reference compute backend.
+//!
+//! Executes the three AOT programs (`features`, `calibrate`,
+//! `histogram`) as plain Rust loops — no HLO artifacts, no native PJRT
+//! library — so the *entire* grid runs hermetically: every node
+//! executor, every test suite, every bench exercises real end-to-end
+//! compute on any machine that can build the crate. This is the paper's
+//! requirement that the event application run natively wherever the
+//! coordination plane does (DIAL makes the same argument), turned into
+//! the default build.
+//!
+//! [`programs`] is the executable specification: it mirrors
+//! `python/compile/kernels/ref.py` + `model.py` arithmetic exactly
+//! (f32 op-for-op, same evaluation order) and is pinned by the
+//! checked-in golden vectors (`rust/tests/golden.rs`). When the native
+//! XLA backend is linked, `Engine::load` in auto mode cross-checks it
+//! against these programs on a canary batch at startup.
+
+pub mod programs;
+
+use crate::events::EventBatch;
+use crate::runtime::backend::Backend;
+use anyhow::{bail, Result};
+
+/// The reference backend. Stateless apart from the histogram bin count
+/// it was provisioned with (from the manifest); shapes ride in with
+/// each call.
+pub struct ReferenceBackend {
+    hist_bins: usize,
+}
+
+impl ReferenceBackend {
+    pub fn new(hist_bins: usize) -> ReferenceBackend {
+        ReferenceBackend { hist_bins }
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn platform(&self) -> String {
+        // the engine always provisions the CPU platform; tooling that
+        // branches on platform_name keeps working unchanged
+        "cpu".into()
+    }
+
+    fn features(
+        &self,
+        program: &str,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<Vec<f32>> {
+        // every features-shaped program IS the reference here; reject
+        // names that are not features-shaped rather than mis-executing
+        if program == "calibrate" || program == "histogram" {
+            bail!("program '{program}' is not features-shaped");
+        }
+        Ok(programs::event_features(
+            &batch.tracks,
+            &batch.mask,
+            calib,
+            batch.batch,
+            batch.max_tracks,
+        ))
+    }
+
+    fn calibrate(
+        &self,
+        batch: &EventBatch,
+        calib: &[f32; 16],
+    ) -> Result<Vec<f32>> {
+        Ok(programs::calibrated_tracks(
+            &batch.tracks,
+            &batch.mask,
+            calib,
+            batch.batch,
+            batch.max_tracks,
+        ))
+    }
+
+    fn histogram(
+        &self,
+        feats: &[f32],
+        selected: &[f32],
+        ranges: &[f32],
+    ) -> Result<Vec<f32>> {
+        Ok(programs::histogram(feats, selected, ranges, self.hist_bins))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{EventBatch, EventGenerator, GeneratorConfig};
+
+    #[test]
+    fn backend_runs_all_three_programs() {
+        let be = ReferenceBackend::new(64);
+        let events =
+            EventGenerator::new(GeneratorConfig::default(), 3).take(10);
+        let batch = EventBatch::pack(&events, 16, 8);
+        let calib = crate::runtime::Engine::identity_calib();
+        let feats = be.features("features", &batch, &calib).unwrap();
+        assert_eq!(feats.len(), 16 * crate::events::NUM_FEATURES);
+        // features_ref is the same program by construction
+        let feats2 = be.features("features_ref", &batch, &calib).unwrap();
+        assert_eq!(feats, feats2);
+        assert!(be.features("histogram", &batch, &calib).is_err());
+
+        let cal = be.calibrate(&batch, &calib).unwrap();
+        assert_eq!(cal.len(), 16 * 8 * 4);
+
+        let ranges = crate::events::FeatureId::ranges_flat();
+        let sel = vec![1.0f32; 16];
+        let h = be.histogram(&feats, &sel, &ranges).unwrap();
+        assert_eq!(h.len(), crate::events::NUM_FEATURES * 64);
+        // every event lands in exactly one bin per feature
+        for f in 0..crate::events::NUM_FEATURES {
+            let total: f32 = h[f * 64..(f + 1) * 64].iter().sum();
+            assert_eq!(total, 16.0, "feature {f}");
+        }
+    }
+}

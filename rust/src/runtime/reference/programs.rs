@@ -1,0 +1,316 @@
+//! The three AOT programs, re-implemented as plain Rust loops.
+//!
+//! These functions are the executable specification of
+//! `python/compile/kernels/ref.py` + `python/compile/model.py`: same
+//! formulas, same f32 arithmetic, same *evaluation order*. Every
+//! reduction accumulates sequentially over the track (or batch) axis and
+//! every compound expression associates exactly as the python source
+//! does, so `python/tests/gen_golden.py` — a numpy mirror with the same
+//! explicit sequencing — produces vectors this module reproduces
+//! bit-for-bit (rust/tests/golden.rs asserts it).
+//!
+//! The only transcendental is `atanh` (pseudorapidity). Platform libm
+//! `atanhf` implementations disagree in the last ulp, so both sides pin
+//! it to the same composition: evaluate `0.5 * ln((1+x)/(1-x))` in f64
+//! and round once to f32. sqrt is IEEE-correctly-rounded everywhere and
+//! all other ops are exact f32 primitives; the residual platform
+//! dependency is f64 `ln` itself (libm `log` is not correctly rounded
+//! everywhere), but a last-f64-ulp `ln` disagreement only changes the
+//! f32 result when it straddles an f32 rounding boundary (~2^-29 per
+//! sample). If a golden mismatch ever localizes to `max_abs_eta` on an
+//! exotic libm, regenerate the fixture there and re-pin.
+//!
+//! Shapes are arguments, not constants: the reference programs execute
+//! any (B, T) the manifest declares, while [`crate::runtime::Engine`]
+//! enforces the manifest contract above this layer.
+
+use crate::events::FeatureId;
+
+/// Mirrors `_EPS` in ref.py (weak-typed to f32 by jnp).
+pub const EPS: f32 = 1e-6;
+
+/// `jnp.clip` bounds for the pseudorapidity fraction: python computes
+/// `-1.0 + 1e-6` / `1.0 - 1e-6` in f64 and jnp casts once to f32.
+const FRAC_LO: f32 = (-1.0 + 1e-6) as f32;
+const FRAC_HI: f32 = (1.0 - 1e-6) as f32;
+
+/// atanh pinned to one composition: f64 `0.5 * ln((1+x)/(1-x))`, rounded
+/// once to f32. See the module docs for why not libm `atanhf`.
+#[inline]
+fn atanh_f32(x: f32) -> f32 {
+    let x = x as f64;
+    (0.5 * ((1.0 + x) / (1.0 - x)).ln()) as f32
+}
+
+/// Apply the 4x4 calibration matrix to one track 4-vector:
+/// `p[j] = sum_k track[k] * calib[j][k]`, accumulated in k order — the
+/// scalar form of ref.py's `einsum("btk,jk->btj")`.
+#[inline]
+fn calibrate_track(track: &[f32], calib: &[f32; 16]) -> [f32; 4] {
+    let mut p = [0f32; 4];
+    for (j, out) in p.iter_mut().enumerate() {
+        let mut acc = 0f32;
+        for k in 0..4 {
+            acc += track[k] * calib[j * 4 + k];
+        }
+        *out = acc;
+    }
+    p
+}
+
+/// The `calibrate` program: calibrated, mask-zeroed tracks.
+/// (B,T,4),(B,T),(4,4) -> (B,T,4) flat row-major.
+pub fn calibrated_tracks(
+    tracks: &[f32],
+    mask: &[f32],
+    calib: &[f32; 16],
+    b: usize,
+    t: usize,
+) -> Vec<f32> {
+    assert_eq!(tracks.len(), b * t * 4, "tracks shape");
+    assert_eq!(mask.len(), b * t, "mask shape");
+    let mut out = vec![0f32; b * t * 4];
+    for bi in 0..b {
+        for ti in 0..t {
+            let base = (bi * t + ti) * 4;
+            let p = calibrate_track(&tracks[base..base + 4], calib);
+            let m = mask[bi * t + ti];
+            for j in 0..4 {
+                out[base + j] = p[j] * m;
+            }
+        }
+    }
+    out
+}
+
+/// The `features` program: per-event physics feature vectors.
+/// (B,T,4),(B,T),(4,4) -> (B,F) flat row-major, F = NUM_FEATURES.
+///
+/// Mask-zeroed tracks contribute nothing to any feature (the exact
+/// padding contract the batch packer relies on); an all-padding event
+/// row yields the canonical empty-event vector
+/// `[0, 0, 0, sqrt(EPS), sqrt(EPS), sqrt(EPS), 0, 0]`.
+pub fn event_features(
+    tracks: &[f32],
+    mask: &[f32],
+    calib: &[f32; 16],
+    b: usize,
+    t: usize,
+) -> Vec<f32> {
+    assert_eq!(tracks.len(), b * t * 4, "tracks shape");
+    assert_eq!(mask.len(), b * t, "mask shape");
+    let nf = crate::events::NUM_FEATURES;
+    let mut out = vec![0f32; b * nf];
+
+    // per-event calibrated component columns, recycled across events
+    let mut e = vec![0f32; t];
+    let mut px = vec![0f32; t];
+    let mut py = vec![0f32; t];
+    let mut pz = vec![0f32; t];
+    let mut pt = vec![0f32; t];
+    let mut pmag = vec![0f32; t];
+
+    for bi in 0..b {
+        let m = &mask[bi * t..(bi + 1) * t];
+        for ti in 0..t {
+            let base = (bi * t + ti) * 4;
+            let p = calibrate_track(&tracks[base..base + 4], calib);
+            e[ti] = p[0] * m[ti];
+            px[ti] = p[1] * m[ti];
+            py[ti] = p[2] * m[ti];
+            pz[ti] = p[3] * m[ti];
+            pt[ti] = (px[ti] * px[ti] + py[ti] * py[ti] + EPS).sqrt();
+            pmag[ti] = (px[ti] * px[ti] + py[ti] * py[ti] + pz[ti] * pz[ti]
+                + EPS)
+                .sqrt();
+        }
+
+        let mut n_tracks = 0f32;
+        let mut sum_pt = 0f32;
+        let mut max_pt = f32::NEG_INFINITY;
+        let mut sum_px = 0f32;
+        let mut sum_py = 0f32;
+        let mut sum_e = 0f32;
+        let mut sum_pz = 0f32;
+        let mut sum_abs_pz = 0f32;
+        let mut sum_pmag = 0f32;
+        let mut max_abs_eta = f32::NEG_INFINITY;
+        for ti in 0..t {
+            n_tracks += m[ti];
+            sum_pt += pt[ti] * m[ti];
+            max_pt = max_pt.max(pt[ti] * m[ti]);
+            sum_px += px[ti];
+            sum_py += py[ti];
+            sum_e += e[ti];
+            sum_pz += pz[ti];
+            sum_abs_pz += pz[ti].abs() * m[ti];
+            sum_pmag += pmag[ti] * m[ti];
+            let frac = (pz[ti] / (pmag[ti] + EPS)).clamp(FRAC_LO, FRAC_HI);
+            max_abs_eta = max_abs_eta.max(atanh_f32(frac).abs() * m[ti]);
+        }
+        let met = (sum_px * sum_px + sum_py * sum_py + EPS).sqrt();
+        let m2 = sum_e * sum_e - sum_px * sum_px - sum_py * sum_py
+            - sum_pz * sum_pz;
+        let total_mass = (m2.max(0.0) + EPS).sqrt();
+
+        // pairwise invariant mass: max over the full TxT matrix with the
+        // diagonal and invalid pairs zeroed, exactly like ref.py
+        let mut pair_max = f32::NEG_INFINITY;
+        for i in 0..t {
+            for j in 0..t {
+                let pe = e[i] + e[j];
+                let px2 = px[i] + px[j];
+                let py2 = py[i] + py[j];
+                let pz2 = pz[i] + pz[j];
+                let m2ij =
+                    pe * pe - px2 * px2 - py2 * py2 - pz2 * pz2;
+                let valid =
+                    m[i] * m[j] * if i == j { 0.0 } else { 1.0 };
+                pair_max = pair_max.max(m2ij.max(0.0) * valid);
+            }
+        }
+        let max_pair_mass = (pair_max + EPS).sqrt();
+        let ht_frac = sum_abs_pz / (sum_pmag + EPS);
+
+        let row = &mut out[bi * nf..(bi + 1) * nf];
+        row[FeatureId::NTracks as usize] = n_tracks;
+        row[FeatureId::SumPt as usize] = sum_pt;
+        row[FeatureId::MaxPt as usize] = max_pt;
+        row[FeatureId::Met as usize] = met;
+        row[FeatureId::TotalMass as usize] = total_mass;
+        row[FeatureId::MaxPairMass as usize] = max_pair_mass;
+        row[FeatureId::MaxAbsEta as usize] = max_abs_eta;
+        row[FeatureId::HtFrac as usize] = ht_frac;
+    }
+    out
+}
+
+/// The `histogram` program: per-feature counts of selected events.
+/// (B,F),(B,),(F,2) -> (F,BINS) flat row-major. `selected` weights each
+/// event's contribution (0/1 in the executor; arbitrary f32 allowed,
+/// matching the einsum in model.py). Bin index is
+/// `floor((x - lo) / max((hi - lo) / bins, 1e-9))` clipped to
+/// `[0, bins)` — `[lo, hi)` ranges with clip-to-edge semantics.
+pub fn histogram(
+    feats: &[f32],
+    selected: &[f32],
+    ranges: &[f32],
+    bins: usize,
+) -> Vec<f32> {
+    let f = ranges.len() / 2;
+    assert_eq!(ranges.len(), f * 2, "ranges shape");
+    let b = selected.len();
+    assert_eq!(feats.len(), b * f, "feats shape");
+    let mut counts = vec![0f32; f * bins];
+    // accumulate in batch order so the f32 sums match the einsum
+    // reduction order of the python reference
+    for bi in 0..b {
+        let w = selected[bi];
+        for fi in 0..f {
+            let lo = ranges[fi * 2];
+            let hi = ranges[fi * 2 + 1];
+            let width = (hi - lo) / bins as f32;
+            let idx = ((feats[bi * f + fi] - lo) / width.max(1e-9)).floor();
+            // clip(0, bins-1) then int cast; non-finite guards to bin 0
+            let idx = if idx.is_finite() {
+                idx.clamp(0.0, (bins - 1) as f32) as usize
+            } else {
+                0
+            };
+            counts[fi * bins + idx] += w;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::NUM_FEATURES;
+
+    fn identity() -> [f32; 16] {
+        let mut c = [0f32; 16];
+        for i in 0..4 {
+            c[i * 4 + i] = 1.0;
+        }
+        c
+    }
+
+    #[test]
+    fn empty_event_canonical_row() {
+        let feats = event_features(&[0.0; 12], &[0.0; 3], &identity(), 1, 3);
+        let s = EPS.sqrt();
+        assert_eq!(feats, vec![0.0, 0.0, 0.0, s, s, s, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn single_track_has_no_pair_mass() {
+        // one real track: pair matrix is all diagonal/invalid -> sqrt(EPS)
+        let tracks = [10.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let mask = [1.0, 0.0];
+        let f = event_features(&tracks, &mask, &identity(), 1, 2);
+        assert_eq!(f[FeatureId::NTracks as usize], 1.0);
+        assert_eq!(f[FeatureId::MaxPairMass as usize], EPS.sqrt());
+        // pt = sqrt(9 + 16 + EPS)
+        assert_eq!(f[FeatureId::MaxPt as usize], (25.0f32 + EPS).sqrt());
+    }
+
+    #[test]
+    fn two_back_to_back_tracks_reconstruct_mass() {
+        // e=50 each, opposite momenta: invariant mass = 100 (up to EPS)
+        let tracks = [50.0, 30.0, 0.0, 0.0, 50.0, -30.0, 0.0, 0.0];
+        let mask = [1.0, 1.0];
+        let f = event_features(&tracks, &mask, &identity(), 1, 2);
+        let m = f[FeatureId::MaxPairMass as usize];
+        assert!((m - 100.0).abs() < 1e-2, "pair mass {m}");
+        // met: momenta cancel -> sqrt(EPS)
+        assert_eq!(f[FeatureId::Met as usize], EPS.sqrt());
+    }
+
+    #[test]
+    fn calibration_scales_energy() {
+        let tracks = [10.0, 3.0, 4.0, 1.0];
+        let mask = [1.0];
+        let mut calib = identity();
+        for i in 0..4 {
+            calib[i * 4 + i] = 2.0;
+        }
+        let out = calibrated_tracks(&tracks, &mask, &calib, 1, 1);
+        assert_eq!(out, vec![20.0, 6.0, 8.0, 2.0]);
+        // masked track zeroes out even with a calibration applied
+        let out = calibrated_tracks(&tracks, &[0.0], &calib, 1, 1);
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn histogram_counts_and_clips() {
+        // 1 feature, 4 bins over [0, 8): width 2
+        let feats = [1.0, 3.0, 100.0, -5.0];
+        let selected = [1.0, 1.0, 1.0, 1.0];
+        let h = histogram(&feats, &selected, &[0.0, 8.0], 4);
+        assert_eq!(h, vec![2.0, 1.0, 0.0, 1.0]); // -5 clips low, 100 high
+    }
+
+    #[test]
+    fn histogram_weights_events() {
+        let feats = [1.0, 1.0];
+        let h = histogram(&feats, &[0.5, 0.25], &[0.0, 8.0], 4);
+        assert_eq!(h, vec![0.75, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn features_shape_is_batch_by_f() {
+        let b = 3;
+        let t = 4;
+        let feats = event_features(
+            &vec![0.5; b * t * 4],
+            &vec![1.0; b * t],
+            &identity(),
+            b,
+            t,
+        );
+        assert_eq!(feats.len(), b * NUM_FEATURES);
+        // identical events -> identical rows
+        assert_eq!(feats[..NUM_FEATURES], feats[NUM_FEATURES..2 * NUM_FEATURES]);
+    }
+}

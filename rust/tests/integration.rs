@@ -9,19 +9,17 @@ fn artifacts() -> std::path::PathBuf {
     geps::runtime::default_artifacts_dir()
 }
 
-/// These tests need the AOT artifacts (`make artifacts`) AND a linked
-/// PJRT backend; skip cleanly when either is missing so `cargo test`
-/// stays green in hermetic environments.
+/// Runtime gate, returning the loaded Engine these tests drive. With
+/// the pure-Rust reference backend this always loads hermetically; it
+/// only skips when `GEPS_BACKEND=xla` demands the missing native
+/// backend, and CI forbids even that (GEPS_REQUIRE_RUNTIME=1 makes the
+/// shared gate panic instead of skipping).
 fn engine() -> Option<Engine> {
-    // same gate as geps::runtime::available(), but these tests need the
-    // loaded Engine value itself
-    match Engine::load(&artifacts()) {
-        Ok(e) => Some(e),
-        Err(e) => {
-            eprintln!("skipping: PJRT runtime unavailable ({e:#})");
-            None
-        }
+    if !geps::runtime::gate("integration") {
+        return None;
     }
+    // the shared gate probed this exact load (cached), so it succeeds
+    Some(Engine::load(&artifacts()).expect("gated Engine::load"))
 }
 
 fn sample_batch(engine: &Engine, n: usize, seed: u64) -> EventBatch {

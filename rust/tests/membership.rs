@@ -1,7 +1,8 @@
 //! Elastic membership scenario suite: live node join on the REAL
-//! cluster (threads, PJRT compute, GASS byte movement) — join while
+//! cluster (threads, kernel compute, GASS byte movement) — join while
 //! idle, join mid-run, kill+join churn, and the portal route.
-//! Requires `make artifacts`.
+//! Hermetic: real compute on the backend `GEPS_BACKEND` selects (the
+//! pure-Rust reference programs by default; native XLA when linked).
 //!
 //! The contract under test: `POST /nodes/add` registers a node mid-run
 //! (catalogue NodeRow + WAL, GRIS entry, executor spawned), the broker
@@ -19,15 +20,12 @@ use geps::util::json::Json;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// These tests need the AOT artifacts (`make artifacts`); skip cleanly
-/// when they are absent so the suite does not add new hard failures to
-/// artifact-less environments.
+/// Runtime gate: with the pure-Rust reference backend this is always
+/// true in a hermetic checkout; it only skips when `GEPS_BACKEND=xla`
+/// demands the native backend and it is missing (and CI forbids even
+/// that via GEPS_REQUIRE_RUNTIME=1 — see `geps::runtime::gate`).
 fn artifacts_present() -> bool {
-    let ok = geps::runtime::available();
-    if !ok {
-        eprintln!("skipping: PJRT runtime unavailable (run `make artifacts`)");
-    }
-    ok
+    geps::runtime::gate("membership")
 }
 
 fn grid3(n_events: usize, replication: usize) -> ClusterConfig {

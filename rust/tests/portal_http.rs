@@ -1,6 +1,7 @@
 //! Portal tests: the paper's §5 user journey over real HTTP — main page,
 //! node information, job submission, job status, histograms, metrics.
-//! Requires `make artifacts`.
+//! Hermetic: real compute on the backend `GEPS_BACKEND` selects (the
+//! pure-Rust reference programs by default; native XLA when linked).
 
 use geps::cluster::ClusterHandle;
 use geps::config::ClusterConfig;
@@ -9,13 +10,11 @@ use geps::util::json::Json;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Skip cleanly when the AOT artifacts or the PJRT backend are missing.
+/// Runtime gate: always true with the reference backend; skips only
+/// under GEPS_BACKEND=xla without the native backend, and panics
+/// instead when CI sets GEPS_REQUIRE_RUNTIME=1 (`geps::runtime::gate`).
 fn runtime_available() -> bool {
-    let ok = geps::runtime::available();
-    if !ok {
-        eprintln!("skipping: PJRT runtime unavailable");
-    }
-    ok
+    geps::runtime::gate("portal_http")
 }
 
 fn start() -> (Arc<ClusterHandle>, String) {
