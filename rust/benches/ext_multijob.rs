@@ -33,6 +33,10 @@ fn main() -> anyhow::Result<()> {
         cfg.replication = 2; // survive even a (jitter-induced) node loss
         cfg.time_scale = 5000.0;
         cfg.max_concurrent_jobs = max_jobs;
+        // the 8-job batch cycles 5 filters; qcache would serve the
+        // repeats for free and skew the depth comparison (the cache
+        // lever has its own bench, ext_qcache)
+        cfg.qcache_enabled = false;
         let slots_total: usize = cfg.nodes.iter().map(|n| n.slots).sum();
         let cluster = ClusterHandle::start(
             cfg,

@@ -1,0 +1,212 @@
+//! Bench: **Ext-H** — the qcache repeated-analysis lever. A zipfian mix
+//! of user queries (interactive-analysis traffic: the same and
+//! near-same selections re-run constantly) flows through the live
+//! cluster twice:
+//!
+//! - **cold**: the cache is flushed before every submission, so every
+//!   job recomputes every brick — the pre-qcache cost of the sequence;
+//! - **warm**: the cache is populated once per distinct selection, then
+//!   the same sequence replays — repeated queries are served from the
+//!   full-result cache at admission, dispatching zero tasks.
+//!
+//! Reported: jobs/sec and events/sec for both passes, the warm/cold
+//! speedup, the warm full-hit rate, and the **bit-identity flag**
+//! (every warm histogram must equal its cold counterpart bit for bit —
+//! a cache that changes physics is worse than no cache). Results land
+//! in `BENCH_qcache.json` at the repo root; CI runs this in smoke mode
+//! (`GEPS_BENCH_SMOKE=1`), uploads the JSON, and gates on bit-identity
+//! plus warm-throughput >= cold-throughput.
+//!
+//! Hermetic: kernels run on the backend `GEPS_BACKEND` selects (the
+//! pure-Rust reference programs by default).
+
+use geps::cluster::ClusterHandle;
+use geps::config::ClusterConfig;
+use geps::util::bench::print_table;
+use geps::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Distinct user selections (the "catalog" of saved analyses users
+/// keep re-running).
+const FILTERS: [&str; 8] = [
+    "max_pair_mass > 80 && max_pair_mass < 100",
+    "met > 10",
+    "n_tracks >= 8",
+    "sum_pt > 50 || max_pt > 25",
+    "ht_frac < 0.5 && max_abs_eta < 2.5",
+    "max_pt > 20 && met > 5",
+    "total_mass > 100",
+    "abs(max_abs_eta - 2.0) < 1.5",
+];
+
+/// Zipf(s) rank sampler over `n` items: p(k) ~ 1/(k+1)^s.
+fn zipf(rng: &mut Rng, n: usize, s: f64) -> usize {
+    let weights: Vec<f64> =
+        (0..n).map(|k| 1.0 / ((k + 1) as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut x = rng.f64() * total;
+    for (k, w) in weights.iter().enumerate() {
+        x -= w;
+        if x <= 0.0 {
+            return k;
+        }
+    }
+    n - 1
+}
+
+fn run_query(cluster: &ClusterHandle, filter: &str) -> Vec<u32> {
+    let job = cluster
+        .try_submit(filter, "locality")
+        .expect("bench filters are valid");
+    let status = cluster
+        .wait(job, Duration::from_secs(300))
+        .expect("job reaches a terminal state");
+    assert_eq!(
+        status,
+        geps::catalog::JobStatus::Done,
+        "query '{filter}' failed"
+    );
+    // the catalogue flips DONE an instant before the broker publishes
+    // the merged histogram; poll the tiny window out
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Some(h) = cluster.histogram(job) {
+            return h.iter().map(|v| v.to_bits()).collect();
+        }
+        assert!(Instant::now() < deadline, "histogram never published");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("GEPS_BENCH_SMOKE").is_ok();
+    let (n_events, n_queries) = if smoke { (600, 10) } else { (2000, 30) };
+    let zipf_s = 1.1;
+
+    let mut cfg = ClusterConfig::default();
+    cfg.n_events = n_events;
+    cfg.events_per_brick = 250;
+    cfg.time_scale = 5000.0;
+    cfg.max_concurrent_jobs = 4;
+    cfg.qcache_enabled = true;
+    let n_bricks = n_events.div_ceil(cfg.events_per_brick);
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )?;
+
+    // the zipfian request sequence, fixed across both passes
+    let mut rng = Rng::new(0x9CAC4E);
+    let seq: Vec<usize> =
+        (0..n_queries).map(|_| zipf(&mut rng, FILTERS.len(), zipf_s)).collect();
+    let distinct: usize = {
+        let mut seen = [false; FILTERS.len()];
+        for &k in &seq {
+            seen[k] = true;
+        }
+        seen.iter().filter(|s| **s).count()
+    };
+
+    // ---- cold pass: flush before every job => full recompute -------
+    let mut cold_hists = Vec::with_capacity(seq.len());
+    let t0 = Instant::now();
+    for &k in &seq {
+        cluster.cache_flush();
+        cold_hists.push(run_query(&cluster, FILTERS[k]));
+    }
+    let cold_wall = t0.elapsed().as_secs_f64();
+
+    // ---- warm pass: populate once per distinct selection, replay ---
+    cluster.cache_flush();
+    for (k, filter) in FILTERS.iter().enumerate() {
+        if seq.contains(&k) {
+            run_query(&cluster, filter);
+        }
+    }
+    let hits_before = cluster.metrics.counter("qcache.hits_full").get();
+    let mut warm_hists = Vec::with_capacity(seq.len());
+    let t1 = Instant::now();
+    for &k in &seq {
+        warm_hists.push(run_query(&cluster, FILTERS[k]));
+    }
+    let warm_wall = t1.elapsed().as_secs_f64();
+    let warm_hits =
+        cluster.metrics.counter("qcache.hits_full").get() - hits_before;
+    let hit_rate = warm_hits as f64 / seq.len() as f64;
+
+    let bit_identical = cold_hists == warm_hists;
+    let stats = cluster.cache_stats();
+    cluster.shutdown();
+
+    let jobs_per_sec = |wall: f64| seq.len() as f64 / wall.max(1e-9);
+    let events_per_sec =
+        |wall: f64| (seq.len() * n_events) as f64 / wall.max(1e-9);
+    let speedup = cold_wall / warm_wall.max(1e-9);
+
+    print_table(
+        "Ext-H qcache: zipfian repeated-analysis mix",
+        &["pass", "wall", "jobs/s", "events/s"],
+        &[
+            vec![
+                "cold (flushed)".into(),
+                format!("{cold_wall:.2} s"),
+                format!("{:.1}", jobs_per_sec(cold_wall)),
+                format!("{:.0}", events_per_sec(cold_wall)),
+            ],
+            vec![
+                "warm (cached)".into(),
+                format!("{warm_wall:.2} s"),
+                format!("{:.1}", jobs_per_sec(warm_wall)),
+                format!("{:.0}", events_per_sec(warm_wall)),
+            ],
+        ],
+    );
+    println!(
+        "\nspeedup {speedup:.1}x, warm full-hit rate {:.0}% \
+         ({warm_hits}/{} queries, {distinct} distinct), bit-identical: \
+         {bit_identical}",
+        hit_rate * 100.0,
+        seq.len(),
+    );
+
+    let doc = geps::util::json::Json::obj()
+        .set("bench", "qcache")
+        .set("generated", true)
+        .set("smoke", smoke)
+        .set(
+            "config",
+            geps::util::json::Json::obj()
+                .set("n_events", n_events)
+                .set("bricks", n_bricks)
+                .set("queries", seq.len())
+                .set("distinct_filters", distinct)
+                .set("zipf_s", zipf_s),
+        )
+        .set(
+            "cold",
+            geps::util::json::Json::obj()
+                .set("wall_s", cold_wall)
+                .set("jobs_per_sec", jobs_per_sec(cold_wall))
+                .set("events_per_sec", events_per_sec(cold_wall)),
+        )
+        .set(
+            "warm",
+            geps::util::json::Json::obj()
+                .set("wall_s", warm_wall)
+                .set("jobs_per_sec", jobs_per_sec(warm_wall))
+                .set("events_per_sec", events_per_sec(warm_wall)),
+        )
+        .set("speedup_warm_over_cold", speedup)
+        .set("hit_rate_full", hit_rate)
+        .set("cache_bytes", stats.bytes)
+        .set("bit_identical", bit_identical);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_qcache.json");
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -51,6 +51,10 @@ fn main() -> anyhow::Result<()> {
     cfg.events_per_brick = 100;
     cfg.time_scale = 2000.0;
     cfg.max_concurrent_jobs = 4;
+    // the batch repeats filters; this bench measures raw recompute
+    // scale-out, so qcache full-result reuse must not short-circuit it
+    // (the cache lever has its own bench, ext_qcache)
+    cfg.qcache_enabled = false;
     let cluster = ClusterHandle::start(
         cfg,
         geps::runtime::default_artifacts_dir(),

@@ -22,6 +22,9 @@ fn main() -> anyhow::Result<()> {
     cfg.replication = 2; // survive even a (jitter-induced) node loss
     cfg.time_scale = 5000.0;
     cfg.max_concurrent_jobs = 1; // the 2003 sequential broker, measured
+    // repeated filters must really recompute: this measures broker
+    // latency, not cache hits (qcache has its own bench, ext_qcache)
+    cfg.qcache_enabled = false;
     let cluster =
         ClusterHandle::start(cfg, geps::runtime::default_artifacts_dir())?;
 

@@ -87,6 +87,12 @@ pub struct BrickRow {
     pub n_events: u64,
     pub bytes: u64,
     pub holders: Vec<String>,
+    /// qcache invalidation epoch: bumped **only when the brick's event
+    /// data changes** (ingest, rewrite). Holder-list rewrites —
+    /// re-replication, join-time rebalancing, membership churn — copy
+    /// the same bytes elsewhere and must NOT touch it, so cached
+    /// results keyed on `(brick, epoch)` survive placement changes.
+    pub content_epoch: u64,
 }
 
 /// Per-task result row.
@@ -110,6 +116,10 @@ const TAG_JOB_UPDATE: u8 = 5;
 /// in-place update — logging these as TAG_BRICK used to insert a
 /// duplicate brick row on every recovery.
 const TAG_BRICK_UPDATE: u8 = 6;
+/// content-epoch bump (brick *data* changed — qcache invalidation).
+/// Replays in place; deliberately separate from TAG_BRICK_UPDATE so a
+/// recovery replay of placement churn can never invalidate caches.
+const TAG_BRICK_EPOCH: u8 = 7;
 
 fn job_to_json(id: RowId, j: &JobRow) -> Json {
     Json::obj()
@@ -231,7 +241,31 @@ impl Catalog {
                             n_events: n,
                             bytes: b,
                             holders,
+                            // pre-epoch WAL records replay at epoch 1
+                            content_epoch: j
+                                .get("epoch")
+                                .and_then(|v| v.as_u64())
+                                .unwrap_or(1),
                         });
+                    }
+                }
+                TAG_BRICK_EPOCH => {
+                    if let (Some(ds), Some(seq), Some(epoch)) = (
+                        j.get("dataset").and_then(|v| v.as_u64()),
+                        j.get("seq").and_then(|v| v.as_u64()),
+                        j.get("epoch").and_then(|v| v.as_u64()),
+                    ) {
+                        let brick = BrickId::new(ds as u32, seq as u32);
+                        let ids: Vec<RowId> = cat
+                            .bricks
+                            .iter()
+                            .filter(|(_, b)| b.brick == brick)
+                            .map(|(id, _)| id)
+                            .collect();
+                        for id in ids {
+                            cat.bricks
+                                .update(id, |b| b.content_epoch = epoch);
+                        }
                     }
                 }
                 TAG_BRICK_UPDATE => {
@@ -365,13 +399,67 @@ impl Catalog {
             .set("seq", brick.seq as u64)
             .set("n_events", n_events)
             .set("bytes", bytes)
+            .set("epoch", 1u64)
             .set(
                 "holders",
                 Json::Arr(holders.iter().map(|h| Json::Str(h.clone())).collect()),
             );
-        let id = self.bricks.insert(BrickRow { brick, n_events, bytes, holders });
+        let id = self.bricks.insert(BrickRow {
+            brick,
+            n_events,
+            bytes,
+            holders,
+            content_epoch: 1,
+        });
         self.log(TAG_BRICK, &j);
         id
+    }
+
+    /// The brick's *data* changed (ingest / rewrite): advance its
+    /// content epoch, WAL-durably, and return the new value. Cached
+    /// query results keyed on the old epoch stop matching — exactly
+    /// this brick, nothing else. Placement changes must use
+    /// [`Catalog::set_brick_holders`] instead, which leaves the epoch
+    /// alone. Returns `None` for unknown bricks.
+    pub fn bump_content_epoch(&mut self, brick: BrickId) -> Option<u64> {
+        let ids: Vec<RowId> = self
+            .bricks
+            .iter()
+            .filter(|(_, b)| b.brick == brick)
+            .map(|(id, _)| id)
+            .collect();
+        if ids.is_empty() {
+            return None;
+        }
+        let next = ids
+            .iter()
+            .filter_map(|id| self.bricks.get(*id))
+            .map(|b| b.content_epoch)
+            .max()
+            .unwrap_or(0)
+            + 1;
+        for id in ids {
+            self.bricks.update(id, |b| b.content_epoch = next);
+        }
+        let j = Json::obj()
+            .set("dataset", brick.dataset as u64)
+            .set("seq", brick.seq as u64)
+            .set("epoch", next);
+        self.log(TAG_BRICK_EPOCH, &j);
+        Some(next)
+    }
+
+    /// `(brick, content_epoch)` pairs for a dataset, sorted by brick id
+    /// — the epoch vector a full-result cache key hashes.
+    pub fn brick_epochs(&self, dataset: u32) -> Vec<(BrickId, u64)> {
+        let mut out: Vec<(BrickId, u64)> = self
+            .bricks
+            .iter()
+            .filter(|(_, b)| b.brick.dataset == dataset)
+            .map(|(_, b)| (b.brick, b.content_epoch))
+            .collect();
+        out.sort();
+        out
     }
 
     pub fn record_result(&mut self, row: ResultRow) -> RowId {
@@ -579,6 +667,36 @@ mod tests {
         let row = cat.bricks.iter().next().map(|(_, b)| b.clone()).unwrap();
         assert_eq!(row.holders, vec!["node3", "node1"]);
         assert_eq!(row.n_events, 100, "metadata survives the rewrite");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn content_epochs_survive_replay_and_ignore_placement_churn() {
+        let dir = std::env::temp_dir().join("geps-catalog-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("epochs-{}.wal", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+
+        let b0 = BrickId::new(4, 0);
+        let b1 = BrickId::new(4, 1);
+        {
+            let mut cat = Catalog::open(&p).unwrap();
+            cat.insert_brick(b0, 100, 1 << 20, vec!["a".into()]);
+            cat.insert_brick(b1, 100, 1 << 20, vec!["a".into()]);
+            assert_eq!(cat.brick_epochs(4), vec![(b0, 1), (b1, 1)]);
+            // data change on b0 only
+            assert_eq!(cat.bump_content_epoch(b0), Some(2));
+            assert_eq!(cat.bump_content_epoch(BrickId::new(9, 9)), None);
+            // placement churn must NOT move epochs
+            assert!(cat.set_brick_holders(b0, vec!["b".into()]));
+            assert!(cat
+                .set_brick_holders(b1, vec!["b".into(), "a".into()]));
+            assert_eq!(cat.brick_epochs(4), vec![(b0, 2), (b1, 1)]);
+        }
+        // replay: epochs durable, exactly one row per brick
+        let cat = Catalog::open(&p).unwrap();
+        assert_eq!(cat.bricks.len(), 2);
+        assert_eq!(cat.brick_epochs(4), vec![(b0, 2), (b1, 1)]);
         std::fs::remove_file(&p).unwrap();
     }
 

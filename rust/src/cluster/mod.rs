@@ -41,6 +41,7 @@ use crate::jse::{Jse, JseConfig};
 use crate::metrics::Registry;
 use crate::node::store::brick_path;
 use crate::node::{spawn_node, NodeConfig, NodeHandle};
+use crate::qcache::{QCache, QCacheConfig, QCacheStats};
 use crate::runtime::EnginePool;
 use crate::wire::Message;
 use crate::util::lock;
@@ -69,6 +70,9 @@ pub struct ClusterHandle {
     /// join handshake: `add_node` parks the new node's channel here and
     /// announces it over `ctl_tx`; the broker picks it up by name
     pending_joins: Arc<Mutex<BTreeMap<String, Sender<Message>>>>,
+    /// query-result cache shared with the JSE event loop (portal reads
+    /// stats / flushes it; the broker's admission path drives it)
+    qcache: Arc<QCache>,
     pool: EnginePool,
 }
 
@@ -203,11 +207,26 @@ impl ClusterHandle {
         let pending_joins: Arc<Mutex<BTreeMap<String, Sender<Message>>>> =
             Arc::new(Mutex::new(BTreeMap::new()));
         let joins2 = pending_joins.clone();
+        // qcache: repeated-analysis traffic stops costing compute. The
+        // budget splits evenly between the full-result and partial LRUs;
+        // `[cache] enabled = false` keeps the struct (portal stats stay
+        // served) but never hands it to the JSE, so every admission
+        // recomputes.
+        let budget = (config.qcache_budget_mb.max(1) << 20) / 2;
+        let qcache = Arc::new(QCache::new(QCacheConfig {
+            full_budget_bytes: budget,
+            partial_budget_bytes: budget,
+        }));
+        qcache.set_metrics(metrics.clone());
+        let qcache2 = config.qcache_enabled.then(|| qcache.clone());
         let broker_join = std::thread::Builder::new()
             .name("geps-broker".into())
             .spawn(move || {
                 let mut jse = Jse::new(jse_cfg, node_txs, out_rx, cat2.clone());
                 jse.set_metrics(met2.clone());
+                if let Some(q) = qcache2 {
+                    jse.set_qcache(q);
+                }
                 let mut cursor = 0u64;
                 // submission wall-clock per job (queue + run latency)
                 let mut started: BTreeMap<u64, Instant> = BTreeMap::new();
@@ -371,6 +390,14 @@ impl ClusterHandle {
                                     detail.join(", ")
                                 );
                                 for job in affected {
+                                    // a parked subscriber has no
+                                    // results of its own: its coverage
+                                    // is its primary's, and it fails
+                                    // (or completes) with the primary
+                                    // at seal time
+                                    if jse.is_shared_subscriber(job) {
+                                        continue;
+                                    }
                                     jse.fail_job(job, &msg);
                                 }
                             }
@@ -393,6 +420,7 @@ impl ClusterHandle {
             ctl_tx,
             node_out_tx: out_tx,
             pending_joins,
+            qcache,
             pool,
         })
     }
@@ -483,14 +511,71 @@ impl ClusterHandle {
         Ok(())
     }
 
-    /// Submit a job (what the portal's submit form does). Returns job id.
-    pub fn submit(&self, filter_expr: &str, policy: &str) -> u64 {
+    /// Validated submission (the portal's `POST /submit` and the `geps`
+    /// CLI): the filter must parse + typecheck and the policy must
+    /// exist **before** the job tuple enters the catalogue — a
+    /// malformed expression is rejected here with a typed error instead
+    /// of being admitted and failing later on the nodes. Returns the
+    /// job id.
+    pub fn try_submit(&self, filter_expr: &str, policy: &str) -> Result<u64> {
+        if crate::scheduler::Policy::by_name(policy).is_none() {
+            self.metrics.counter("portal.submissions_rejected").inc();
+            return Err(anyhow!("unknown policy '{policy}'"));
+        }
+        if let Err(e) = crate::filterexpr::compile(filter_expr) {
+            self.metrics.counter("portal.submissions_rejected").inc();
+            return Err(anyhow!("bad filter: {e}"));
+        }
         self.metrics.counter("portal.submissions").inc();
-        self.catalog.lock().unwrap().submit_job(
+        Ok(self.catalog.lock().unwrap().submit_job(
             self.config.dataset,
             filter_expr,
             policy,
-        )
+        ))
+    }
+
+    /// Submit a job (programmatic API). Validation failures still yield
+    /// a job id, but the row is written already-terminal (`Failed`,
+    /// typed error) inside one catalogue critical section — the broker
+    /// polls only `Submitted` rows, so a malformed filter is never
+    /// admitted, never dispatched, and callers polling the id observe
+    /// the failure immediately.
+    pub fn submit(&self, filter_expr: &str, policy: &str) -> u64 {
+        match self.try_submit(filter_expr, policy) {
+            Ok(id) => id,
+            Err(e) => {
+                let mut cat = self.catalog.lock().unwrap();
+                let id = cat.submit_job(
+                    self.config.dataset,
+                    filter_expr,
+                    policy,
+                );
+                let msg = e.to_string();
+                cat.update_job(id, |j| {
+                    j.status = JobStatus::Failed;
+                    j.error = Some(msg.clone());
+                });
+                id
+            }
+        }
+    }
+
+    /// Query-result cache statistics (the portal's `GET /cache`).
+    pub fn cache_stats(&self) -> QCacheStats {
+        self.qcache.stats()
+    }
+
+    /// Whether admissions actually consult the cache
+    /// (`[cache] enabled`, default true).
+    pub fn cache_enabled(&self) -> bool {
+        self.config.qcache_enabled
+    }
+
+    /// Drop every cached result (`POST /cache/flush`). Running shared
+    /// jobs still settle with their subscribers. Returns entries
+    /// dropped.
+    pub fn cache_flush(&self) -> usize {
+        self.qcache.flush()
     }
 
     /// Block until the job reaches a terminal state (or timeout).

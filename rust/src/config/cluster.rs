@@ -12,6 +12,10 @@
 //! streams = 1
 //! max_concurrent_jobs = 4
 //!
+//! [cache]
+//! enabled = true       # qcache: result reuse + scan sharing
+//! budget_mb = 64
+//!
 //! [data]
 //! dataset = 1
 //! n_events = 4000
@@ -50,6 +54,13 @@ pub struct ClusterConfig {
     /// how many jobs the JSE runs concurrently (1 = the paper's
     /// sequential broker; >1 shares node slots across jobs)
     pub max_concurrent_jobs: usize,
+    /// query-result cache (`qcache`): full-result reuse, in-flight scan
+    /// sharing, per-brick partial memoization. On by default; benches
+    /// that measure raw recompute throughput turn it off.
+    pub qcache_enabled: bool,
+    /// qcache byte budget in MiB, split evenly between the full-result
+    /// and partial-memo LRUs
+    pub qcache_budget_mb: usize,
     pub dataset: u32,
     pub n_events: usize,
     pub events_per_brick: usize,
@@ -67,6 +78,8 @@ impl Default for ClusterConfig {
             replication: 1,
             streams: 1,
             max_concurrent_jobs: 4,
+            qcache_enabled: true,
+            qcache_budget_mb: 64,
             dataset: 1,
             n_events: 2000,
             events_per_brick: 250,
@@ -148,6 +161,17 @@ impl ClusterConfig {
             }
             cfg.max_concurrent_jobs = v as usize;
         }
+        if let Some(v) = doc.get("cache", "enabled").and_then(TomlValue::as_bool)
+        {
+            cfg.qcache_enabled = v;
+        }
+        if let Some(v) = doc.get("cache", "budget_mb").and_then(TomlValue::as_i64)
+        {
+            if v < 1 {
+                return Err(ConfigError("cache budget_mb must be >= 1".into()));
+            }
+            cfg.qcache_budget_mb = v as usize;
+        }
         if let Some(v) = doc.get("data", "dataset").and_then(TomlValue::as_i64) {
             cfg.dataset = v as u32;
         }
@@ -228,6 +252,9 @@ mod tests {
             replication = 2
             streams = 4
             max_concurrent_jobs = 8
+            [cache]
+            enabled = false
+            budget_mb = 8
             [data]
             dataset = 3
             n_events = 10000
@@ -245,6 +272,8 @@ mod tests {
         assert_eq!(cfg.replication, 2);
         assert_eq!(cfg.streams, 4);
         assert_eq!(cfg.max_concurrent_jobs, 8);
+        assert!(!cfg.qcache_enabled);
+        assert_eq!(cfg.qcache_budget_mb, 8);
         assert_eq!(cfg.n_events, 10000);
         assert_eq!(cfg.nodes.len(), 2);
         assert_eq!(cfg.nodes[1].slots, 2);

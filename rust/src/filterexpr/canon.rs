@@ -1,0 +1,484 @@
+//! Filter-expression canonicalizer — the front half of `qcache` query
+//! fingerprinting. Two users submitting the *same selection written
+//! differently* ("met > 30 && n_tracks >= 2" vs "n_tracks >= 2 &&
+//! met>30") must map to one cache key, so [`canonicalize`] rewrites a
+//! **typechecked** AST into a normal form and [`encode`] serialises that
+//! form into the stable byte string the fingerprint hashes.
+//!
+//! The rewrites are strictly semantics-preserving — cached results are
+//! served in place of recomputation, so a canonical form that accepted
+//! a different event set would silently corrupt physics. Every rule
+//! below is justified against both evaluators (the tree walk and the
+//! column bytecode, which are themselves bit-identical):
+//!
+//! - **Constant folding** of all-literal subtrees, using the *same* f64
+//!   operations as evaluation (`+ - * /`, comparisons, `abs`,
+//!   `max(0,·).sqrt()`, `min`/`max`), so a folded constant is the value
+//!   evaluation would have produced.
+//! - **Commutative operand ordering** for `&&`, `||`, `+`, `*`, `==`,
+//!   `!=`: IEEE-754 addition and multiplication are commutative
+//!   (including signed zeros; differing NaN *payloads* cannot leak into
+//!   an accept set because every comparison on NaN is `false`), and the
+//!   logical/equality operators are symmetric over total, effect-free
+//!   operands. `&&`/`||` chains are additionally flattened, deduplicated
+//!   and sorted (boolean AND/OR is associative and idempotent; operands
+//!   are total, so dropping a duplicate or reordering cannot change the
+//!   outcome). `min`/`max`, `-`, `/` and the inequalities are **not**
+//!   reordered: e.g. `1 / min(0.0, -0.0)` genuinely depends on which
+//!   zero wins.
+//! - **Comparison direction**: `a > b` ⇒ `b < a`, `a >= b` ⇒ `b <= a`
+//!   (same f64 comparison, operands are effect-free). `!(a < b)` is NOT
+//!   rewritten to `a >= b` — those differ on NaN.
+//! - **Double-negation elimination**: `!!x` ⇒ `x` and `-(-x)` ⇒ `x`
+//!   (f64 negation is an exact sign-bit flip). Logical identities
+//!   `true && x` ⇒ `x`, `false || x` ⇒ `x` and the absorbing duals also
+//!   apply — safe because operands are total (a division by zero yields
+//!   ±inf/NaN, never a trap).
+//!
+//! [`pretty`] renders an AST back to parseable source (used by tests to
+//! assert fingerprint stability across a pretty-print → re-parse round
+//! trip, and by humans inspecting cache keys). Non-finite literals
+//! print as overflow/0-over-0 forms that re-parse to the same *value*
+//! (NaN payloads are not preserved by `pretty`; [`encode`] preserves
+//! exact bits).
+
+use crate::events::{FeatureId, NUM_FEATURES};
+use crate::filterexpr::ast::{BinOp, Expr, Func, UnOp};
+
+/// Rewrite a **typechecked** expression into canonical form. The result
+/// accepts bit-identically to the input on every feature vector (see
+/// the module docs for the rule-by-rule argument and
+/// `tests/proptests.rs` for the randomized oracle check).
+pub fn canonicalize(expr: &Expr) -> Expr {
+    match expr {
+        Expr::Num(_) | Expr::Bool(_) | Expr::Feature(_) => expr.clone(),
+        Expr::Un(op, a) => {
+            let a = canonicalize(a);
+            match (*op, a) {
+                (UnOp::Not, Expr::Un(UnOp::Not, inner)) => *inner,
+                (UnOp::Neg, Expr::Un(UnOp::Neg, inner)) => *inner,
+                (UnOp::Not, Expr::Bool(b)) => Expr::Bool(!b),
+                (UnOp::Neg, Expr::Num(n)) => Expr::Num(-n),
+                (op, a) => Expr::Un(op, Box::new(a)),
+            }
+        }
+        Expr::Bin(op, a, b) => {
+            canon_bin(*op, canonicalize(a), canonicalize(b))
+        }
+        Expr::Call(f, args) => {
+            let args: Vec<Expr> =
+                args.iter().map(canonicalize).collect();
+            if let Some(ns) = all_nums(&args) {
+                return Expr::Num(match f {
+                    Func::Abs => ns[0].abs(),
+                    Func::Sqrt => ns[0].max(0.0).sqrt(),
+                    Func::Min => ns[0].min(ns[1]),
+                    Func::Max => ns[0].max(ns[1]),
+                });
+            }
+            Expr::Call(*f, args)
+        }
+    }
+}
+
+fn all_nums(args: &[Expr]) -> Option<Vec<f64>> {
+    args.iter()
+        .map(|a| match a {
+            Expr::Num(n) => Some(*n),
+            _ => None,
+        })
+        .collect()
+}
+
+fn canon_bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+    // constant folding with evaluation's own f64 semantics
+    if let (Expr::Num(x), Expr::Num(y)) = (&a, &b) {
+        let (x, y) = (*x, *y);
+        match op {
+            BinOp::Add => return Expr::Num(x + y),
+            BinOp::Sub => return Expr::Num(x - y),
+            BinOp::Mul => return Expr::Num(x * y),
+            BinOp::Div => return Expr::Num(x / y),
+            BinOp::Lt => return Expr::Bool(x < y),
+            BinOp::Le => return Expr::Bool(x <= y),
+            BinOp::Gt => return Expr::Bool(x > y),
+            BinOp::Ge => return Expr::Bool(x >= y),
+            BinOp::Eq => return Expr::Bool(x == y),
+            BinOp::Ne => return Expr::Bool(x != y),
+            BinOp::And | BinOp::Or => {}
+        }
+    }
+    match op {
+        BinOp::And | BinOp::Or => canon_logical(op, a, b),
+        // normalise comparison direction to < / <=
+        BinOp::Gt => Expr::Bin(BinOp::Lt, Box::new(b), Box::new(a)),
+        BinOp::Ge => Expr::Bin(BinOp::Le, Box::new(b), Box::new(a)),
+        BinOp::Add | BinOp::Mul | BinOp::Eq | BinOp::Ne => {
+            let (a, b) = if encode(&b) < encode(&a) { (b, a) } else { (a, b) };
+            Expr::Bin(op, Box::new(a), Box::new(b))
+        }
+        _ => Expr::Bin(op, Box::new(a), Box::new(b)),
+    }
+}
+
+/// Flatten an `&&`/`||` chain, apply identity/absorbing constants,
+/// dedupe, sort by encoding, rebuild left-associated.
+fn canon_logical(op: BinOp, a: Expr, b: Expr) -> Expr {
+    // `absorb`: the constant that decides the whole chain
+    // (`false` for &&, `true` for ||); its negation is the identity.
+    let absorb = op == BinOp::Or;
+    let mut terms = Vec::new();
+    flatten(op, a, &mut terms);
+    flatten(op, b, &mut terms);
+    let mut kept: Vec<(Vec<u8>, Expr)> = Vec::new();
+    for t in terms {
+        match t {
+            Expr::Bool(c) if c == absorb => return Expr::Bool(absorb),
+            Expr::Bool(_) => {} // identity element: drop
+            other => kept.push((encode(&other), other)),
+        }
+    }
+    if kept.is_empty() {
+        return Expr::Bool(!absorb);
+    }
+    kept.sort_by(|(ka, _), (kb, _)| ka.cmp(kb));
+    kept.dedup_by(|(ka, _), (kb, _)| ka == kb);
+    let mut it = kept.into_iter().map(|(_, e)| e);
+    let first = it.next().expect("non-empty");
+    it.fold(first, |acc, t| {
+        Expr::Bin(op, Box::new(acc), Box::new(t))
+    })
+}
+
+fn flatten(op: BinOp, e: Expr, out: &mut Vec<Expr>) {
+    match e {
+        Expr::Bin(o, a, b) if o == op => {
+            flatten(op, *a, out);
+            flatten(op, *b, out);
+        }
+        other => out.push(other),
+    }
+}
+
+// --- stable byte encoding -----------------------------------------------
+
+const TAG_NUM: u8 = 1;
+const TAG_BOOL: u8 = 2;
+const TAG_FEAT: u8 = 3;
+const TAG_UN: u8 = 4;
+const TAG_BIN: u8 = 5;
+const TAG_CALL: u8 = 6;
+
+fn binop_code(op: BinOp) -> u8 {
+    match op {
+        BinOp::Or => 0,
+        BinOp::And => 1,
+        BinOp::Lt => 2,
+        BinOp::Le => 3,
+        BinOp::Gt => 4,
+        BinOp::Ge => 5,
+        BinOp::Eq => 6,
+        BinOp::Ne => 7,
+        BinOp::Add => 8,
+        BinOp::Sub => 9,
+        BinOp::Mul => 10,
+        BinOp::Div => 11,
+    }
+}
+
+fn unop_code(op: UnOp) -> u8 {
+    match op {
+        UnOp::Not => 0,
+        UnOp::Neg => 1,
+    }
+}
+
+fn func_code(f: Func) -> u8 {
+    match f {
+        Func::Abs => 0,
+        Func::Min => 1,
+        Func::Max => 2,
+        Func::Sqrt => 3,
+    }
+}
+
+/// Serialise an expression into a stable, platform-independent byte
+/// string: equal bytes ⇔ structurally equal trees (f64 literals compare
+/// by bit pattern, so `-0.0` and `0.0` — genuinely different values
+/// under division — stay distinct). Canonicalize first if you want
+/// semantically-equal-modulo-rewrites expressions to collide.
+pub fn encode(expr: &Expr) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(expr, &mut out);
+    out
+}
+
+fn encode_into(e: &Expr, out: &mut Vec<u8>) {
+    match e {
+        Expr::Num(n) => {
+            out.push(TAG_NUM);
+            out.extend_from_slice(&n.to_bits().to_le_bytes());
+        }
+        Expr::Bool(b) => {
+            out.push(TAG_BOOL);
+            out.push(*b as u8);
+        }
+        Expr::Feature(f) => {
+            out.push(TAG_FEAT);
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        Expr::Un(op, a) => {
+            out.push(TAG_UN);
+            out.push(unop_code(*op));
+            encode_into(a, out);
+        }
+        Expr::Bin(op, a, b) => {
+            out.push(TAG_BIN);
+            out.push(binop_code(*op));
+            encode_into(a, out);
+            encode_into(b, out);
+        }
+        Expr::Call(f, args) => {
+            out.push(TAG_CALL);
+            out.push(func_code(*f));
+            out.push(args.len() as u8);
+            for a in args {
+                encode_into(a, out);
+            }
+        }
+    }
+}
+
+// --- pretty printing ----------------------------------------------------
+
+fn binop_src(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Or => "||",
+        BinOp::And => "&&",
+        BinOp::Lt => "<",
+        BinOp::Le => "<=",
+        BinOp::Gt => ">",
+        BinOp::Ge => ">=",
+        BinOp::Eq => "==",
+        BinOp::Ne => "!=",
+        BinOp::Add => "+",
+        BinOp::Sub => "-",
+        BinOp::Mul => "*",
+        BinOp::Div => "/",
+    }
+}
+
+fn func_src(f: Func) -> &'static str {
+    match f {
+        Func::Abs => "abs",
+        Func::Sqrt => "sqrt",
+        Func::Min => "min",
+        Func::Max => "max",
+    }
+}
+
+/// Render an expression as parseable filter source (fully
+/// parenthesised). Finite numbers round-trip exactly (Rust's shortest
+/// f64 formatting); `±inf` prints as an overflowing literal (`1e999`)
+/// and NaN as `(0/0)`, both of which re-parse (and, for NaN,
+/// re-canonicalize) to the same *value* though not necessarily the same
+/// NaN payload bits. Feature indices must be in range (true for any
+/// compiled filter).
+pub fn pretty(expr: &Expr) -> String {
+    match expr {
+        Expr::Num(n) => {
+            if n.is_nan() {
+                "(0/0)".to_string()
+            } else if n.is_infinite() {
+                if *n > 0.0 {
+                    "1e999".to_string()
+                } else {
+                    "(-1e999)".to_string()
+                }
+            } else if *n < 0.0 || (*n == 0.0 && n.is_sign_negative()) {
+                format!("(-{})", -n)
+            } else {
+                format!("{n}")
+            }
+        }
+        Expr::Bool(b) => b.to_string(),
+        Expr::Feature(f) => {
+            debug_assert!((*f as usize) < NUM_FEATURES);
+            FeatureId::ALL
+                .get(*f as usize)
+                .map(|id| id.name().to_string())
+                .unwrap_or_else(|| format!("feature_{f}"))
+        }
+        Expr::Un(UnOp::Not, a) => format!("(!{})", pretty(a)),
+        Expr::Un(UnOp::Neg, a) => format!("(-{})", pretty(a)),
+        Expr::Bin(op, a, b) => {
+            format!("({} {} {})", pretty(a), binop_src(*op), pretty(b))
+        }
+        Expr::Call(f, args) => {
+            let inner: Vec<String> = args.iter().map(pretty).collect();
+            format!("{}({})", func_src(*f), inner.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filterexpr::parser::parse;
+    use crate::filterexpr::CompiledFilter;
+
+    fn canon_src(src: &str) -> Expr {
+        canonicalize(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn commuted_conjunctions_collide() {
+        let a = canon_src("met > 30 && n_tracks >= 2");
+        let b = canon_src("n_tracks>=2&&met   >30");
+        assert_eq!(encode(&a), encode(&b));
+    }
+
+    #[test]
+    fn flattened_chains_collide_in_any_order() {
+        let a = canon_src("met > 1 && sum_pt > 2 && max_pt > 3");
+        let b = canon_src("max_pt > 3 && (met > 1 && sum_pt > 2)");
+        let c = canon_src("sum_pt > 2 && max_pt > 3 && met > 1");
+        assert_eq!(encode(&a), encode(&b));
+        assert_eq!(encode(&a), encode(&c));
+    }
+
+    #[test]
+    fn comparison_direction_normalises() {
+        let a = canon_src("met > 30");
+        let b = canon_src("30 < met");
+        assert_eq!(encode(&a), encode(&b));
+        let c = canon_src("met >= 30");
+        let d = canon_src("30 <= met");
+        assert_eq!(encode(&c), encode(&d));
+    }
+
+    #[test]
+    fn constants_fold_with_eval_semantics() {
+        assert_eq!(canon_src("met > 10 + 20"), canon_src("met > 30"));
+        assert_eq!(
+            canon_src("met > 2 * 3 + 1 && true"),
+            canon_src("met > 7")
+        );
+        // absorbing / identity constants
+        assert_eq!(canon_src("false && met > 1"), Expr::Bool(false));
+        assert_eq!(canon_src("true || met > 1"), Expr::Bool(true));
+        assert_eq!(canon_src("true && met > 1"), canon_src("met > 1"));
+        assert_eq!(canon_src("false || met > 1"), canon_src("met > 1"));
+        // all-constant calls fold too
+        assert_eq!(canon_src("met > min(3, 2)"), canon_src("met > 2"));
+        assert_eq!(canon_src("met > abs(-4)"), canon_src("met > 4"));
+    }
+
+    #[test]
+    fn double_negation_eliminated() {
+        assert_eq!(canon_src("!!(met > 1)"), canon_src("met > 1"));
+        assert_eq!(canon_src("--met < 1"), canon_src("met < 1"));
+        // single negation survives
+        assert_eq!(
+            canon_src("!(met > 1)"),
+            Expr::Un(
+                UnOp::Not,
+                Box::new(canon_src("met > 1")),
+            )
+        );
+    }
+
+    #[test]
+    fn duplicate_terms_dedupe() {
+        let a = canon_src("met > 1 && met > 1");
+        assert_eq!(encode(&a), encode(&canon_src("met > 1")));
+        let b = canon_src("met > 1 || met > 1 || sum_pt > 2");
+        assert_eq!(encode(&b), encode(&canon_src("sum_pt > 2 || met > 1")));
+    }
+
+    #[test]
+    fn distinct_selections_stay_distinct() {
+        let pairs = [
+            ("met > 30", "met >= 30"),
+            ("met > 30", "met > 31"),
+            ("met > 30", "sum_pt > 30"),
+            ("met > 1 && sum_pt > 2", "met > 1 || sum_pt > 2"),
+            ("!(met < 1)", "met >= 1"), // differ on NaN: must NOT collide
+        ];
+        for (a, b) in pairs {
+            assert_ne!(
+                encode(&canon_src(a)),
+                encode(&canon_src(b)),
+                "{a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn min_max_sub_div_are_not_reordered() {
+        // 1 / min(0, -0) depends on which zero wins: operand order is
+        // load-bearing and the canonicalizer must leave it alone
+        let a = parse("1 / min(met, sum_pt) > 0").unwrap();
+        let b = parse("1 / min(sum_pt, met) > 0").unwrap();
+        assert_ne!(encode(&canonicalize(&a)), encode(&canonicalize(&b)));
+        assert_ne!(
+            encode(&canon_src("met - sum_pt > 0")),
+            encode(&canon_src("sum_pt - met > 0")),
+        );
+    }
+
+    #[test]
+    fn canonicalization_is_idempotent() {
+        for src in [
+            "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20",
+            "n_tracks >= 4 || (met > 30 && ht_frac < 0.8)",
+            "abs(max_abs_eta - 2.5) < min(1.0, ht_frac)",
+            "!(met > 10) || sqrt(sum_pt) >= 3",
+            "2 + 3 * 4 > 13 && met >= 0",
+            "true && (false || met > 1)",
+        ] {
+            let once = canon_src(src);
+            let twice = canonicalize(&once);
+            assert_eq!(encode(&once), encode(&twice), "{src}");
+        }
+    }
+
+    #[test]
+    fn pretty_reparses_to_the_same_canonical_form() {
+        for src in [
+            "max_pair_mass > 80 && max_pair_mass < 100 && max_pt > 20",
+            "n_tracks >= 4 || (met > 30 && ht_frac < 0.8)",
+            "abs(max_abs_eta - 2.5) < min(1.0, ht_frac)",
+            "!(met > 10) || sqrt(sum_pt) >= 3",
+            "-met < -1.5",
+            "sum_pt > 1.5e2",
+        ] {
+            let canon = canon_src(src);
+            let reparsed = parse(&pretty(&canon))
+                .unwrap_or_else(|e| panic!("pretty({src}) unparseable: {e}"));
+            assert_eq!(
+                encode(&canon),
+                encode(&canonicalize(&reparsed)),
+                "{src} -> {}",
+                pretty(&canon)
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_form_still_compiles_and_accepts_identically() {
+        let src = "max_pair_mass > 80 && max_pair_mass < 100 || met > 50";
+        let orig = parse(src).unwrap();
+        let canon = canonicalize(&orig);
+        let f0 = CompiledFilter::new(orig).unwrap();
+        let f1 = CompiledFilter::new(canon).unwrap();
+        let mut feats = [0f32; NUM_FEATURES];
+        for (mass, met) in
+            [(91.0, 0.0), (120.0, 0.0), (91.0, 60.0), (0.0, 60.0), (0.0, 0.0)]
+        {
+            feats[FeatureId::MaxPairMass as usize] = mass;
+            feats[FeatureId::Met as usize] = met;
+            assert_eq!(f0.accept(&feats), f1.accept(&feats));
+        }
+    }
+}

@@ -188,6 +188,12 @@ impl CompiledFilter {
     pub fn program(&self) -> &Program {
         &self.program
     }
+
+    /// The typechecked source AST (what `qcache` canonicalizes for
+    /// fingerprinting — reusing it avoids re-parsing the source).
+    pub fn expr(&self) -> &Expr {
+        &self.expr
+    }
 }
 
 #[cfg(test)]

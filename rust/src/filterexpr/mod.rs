@@ -20,14 +20,22 @@
 //! matrix (one tight loop per opcode, column buffers recycled across
 //! pages via [`VmScratch`]). The recursive tree walk remains as the
 //! reference oracle; both paths produce bit-identical accept sets.
+//!
+//! For query-result caching ([`crate::qcache`]), [`canon`] rewrites a
+//! typechecked AST into a canonical form (constant folding, commutative
+//! operand ordering, double-negation elimination — all strictly
+//! semantics-preserving) and serialises it into the stable byte string
+//! that query fingerprints hash.
 
 pub mod ast;
 pub mod bytecode;
+pub mod canon;
 pub mod eval;
 pub mod parser;
 
 pub use ast::{BinOp, Expr, Ty, UnOp};
 pub use bytecode::{Op, Program, VmScratch};
+pub use canon::{canonicalize, encode as encode_canonical, pretty};
 pub use eval::{CompiledFilter, EvalError};
 pub use parser::{parse, ParseError};
 

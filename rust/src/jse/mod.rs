@@ -33,6 +33,17 @@
 //!   immediately (the admission-side rebalancing of bricks toward the
 //!   newcomer lives in `cluster`/`ft`).
 //!
+//! **Repeated-analysis traffic.** With a [`crate::qcache::QCache`]
+//! attached ([`Jse::set_qcache`]), admission deduplicates work before
+//! planning it: repeated queries are served from the full-result cache
+//! without dispatching a task, a job identical to a *running* one
+//! attaches as a scan-sharing subscriber and receives the same
+//! bit-identical merge at seal time, and fresh jobs plan tasks only for
+//! bricks without a valid memoized per-brick partial (whole-brick
+//! `TaskDone`s are harvested into the partial store as they arrive).
+//! Invalidation is content-epoch based — membership churn and
+//! rebalancing never evict (see the [`crate::qcache`] module docs).
+//!
 //! **Robustness contract.** The loop must never panic on bad state:
 //! stale wire traffic is dropped ([`Jse::drop_stale`]), a missing
 //! catalogue row fails only that job, a poisoned catalogue mutex is
@@ -42,13 +53,15 @@
 
 pub mod runner;
 
+use crate::brick::BrickId;
 use crate::catalog::{Catalog, JobStatus, ResultRow};
 use crate::ft::HeartbeatMonitor;
 use crate::metrics::Registry;
+use crate::qcache::{self, Attach, CachedResult, PartialResult, QCache};
 use crate::rsl::synthesize_task_rsl;
 use crate::scheduler::{NodeState, Policy, SchedCtx};
 use crate::wire::Message;
-use runner::JobRunner;
+use runner::{CacheInfo, JobRunner};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -141,6 +154,12 @@ pub struct Jse {
     completed: Vec<JobOutcome>,
     /// round-robin cursor for fair slot offers across jobs
     rr: usize,
+    /// query-result cache (None = caching disabled; every admission
+    /// then recomputes, the pre-qcache behaviour)
+    qcache: Option<Arc<QCache>>,
+    /// scan-sharing subscribers parked until their primary seals:
+    /// job id -> the full-result key it follows
+    pending_subscribers: BTreeMap<u64, u64>,
 }
 
 impl Jse {
@@ -168,12 +187,27 @@ impl Jse {
             runners: BTreeMap::new(),
             completed: Vec::new(),
             rr: 0,
+            qcache: None,
+            pending_subscribers: BTreeMap::new(),
         }
     }
 
     /// Attach a metrics registry (coordinator gauges + counters).
     pub fn set_metrics(&mut self, metrics: Arc<Registry>) {
+        if let Some(q) = &self.qcache {
+            q.set_metrics(metrics.clone());
+        }
         self.metrics = Some(metrics);
+    }
+
+    /// Attach the query-result cache ([`crate::qcache`]): admissions
+    /// start deduplicating against cached full results, in-flight
+    /// twins, and memoized per-brick partials.
+    pub fn set_qcache(&mut self, qcache: Arc<QCache>) {
+        if let Some(m) = &self.metrics {
+            qcache.set_metrics(m.clone());
+        }
+        self.qcache = Some(qcache);
     }
 
     /// Lock the catalogue, recovering from poisoning
@@ -201,9 +235,21 @@ impl Jse {
         self.runners.values().map(|r| r.outstanding_count()).sum()
     }
 
-    /// True when no job is queued or in flight.
+    /// True when no job is queued, in flight, or parked as a
+    /// scan-sharing subscriber.
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.runners.is_empty()
+        self.queue.is_empty()
+            && self.runners.is_empty()
+            && self.pending_subscribers.is_empty()
+    }
+
+    /// True if `job` is parked as a scan-sharing subscriber. Sweeps
+    /// that fail jobs by their own result coverage (the broker's
+    /// unrecoverable-brick path) must spare subscribers: a subscriber
+    /// has no results of its own — its coverage is its primary's, and
+    /// its fate follows the primary's at seal time.
+    pub fn is_shared_subscriber(&self, job: u64) -> bool {
+        self.pending_subscribers.contains_key(&job)
     }
 
     /// Admit a discovered job into the queue (idempotent per job id).
@@ -256,6 +302,24 @@ impl Jse {
     /// its queued tasks. In-flight replies arriving afterwards are
     /// dropped as stale. Returns false for unknown/terminal jobs.
     pub fn fail_job(&mut self, job_id: u64, error: &str) -> bool {
+        // a scan-sharing subscriber fails on its own; the primary
+        // computation (and its other subscribers) is unaffected
+        if let Some(key) = self.pending_subscribers.remove(&job_id) {
+            if let Some(q) = &self.qcache {
+                q.detach_subscriber(key, job_id);
+            }
+            let msg = error.to_string();
+            self.cat().update_job(job_id, |j| {
+                j.status = JobStatus::Failed;
+                j.error = Some(msg.clone());
+            });
+            if let Some(m) = &self.metrics {
+                m.counter("jse.jobs_failed_explicitly").inc();
+            }
+            eprintln!("[jse] failing job {job_id}: {error}");
+            self.completed.push(JobOutcome::failed(job_id, msg));
+            return true;
+        }
         let out = if let Some(pos) =
             self.queue.iter().position(|j| *j == job_id)
         {
@@ -264,6 +328,14 @@ impl Jse {
         } else if let Some(runner) = self.runners.remove(&job_id) {
             for tx in self.nodes.values() {
                 let _ = tx.send(Message::JobCancel { job: job_id });
+            }
+            // a failed shared primary takes its subscribers with it:
+            // they asked for the same computation over the same data
+            if let (Some(q), Some(ci)) =
+                (self.qcache.clone(), runner.cache.clone())
+            {
+                let subs = q.take_subscribers(ci.full_key, job_id);
+                self.fail_subscribers(subs, error);
             }
             let mut out = runner.out;
             out.status = JobStatus::Failed;
@@ -287,10 +359,23 @@ impl Jse {
 
     /// Cancel a queued or in-flight job. Tasks already on nodes run to
     /// completion there, but their replies are dropped as stale; every
-    /// node is told via [`Message::JobCancel`]. Returns false if the
-    /// job is unknown or already terminal.
+    /// node is told via [`Message::JobCancel`]. Cancelling a
+    /// scan-sharing *subscriber* just detaches it; cancelling a shared
+    /// *primary* re-queues its subscribers, so the first of them is
+    /// promoted to recompute (and the rest re-attach behind it through
+    /// the normal admission path, re-keyed against current epochs).
+    /// Returns false if the job is unknown or already terminal.
     pub fn cancel(&mut self, job_id: u64) -> bool {
-        let mut out = if let Some(pos) =
+        let mut out = if let Some(key) =
+            self.pending_subscribers.remove(&job_id)
+        {
+            if let Some(q) = &self.qcache {
+                q.detach_subscriber(key, job_id);
+            }
+            let mut out = JobOutcome::pending(job_id);
+            out.error = Some("cancelled".into());
+            out
+        } else if let Some(pos) =
             self.queue.iter().position(|j| *j == job_id)
         {
             let _ = self.queue.remove(pos);
@@ -300,6 +385,22 @@ impl Jse {
         } else if let Some(runner) = self.runners.remove(&job_id) {
             for tx in self.nodes.values() {
                 let _ = tx.send(Message::JobCancel { job: job_id });
+            }
+            if let (Some(q), Some(ci)) =
+                (self.qcache.clone(), runner.cache.clone())
+            {
+                let subs = q.take_subscribers(ci.full_key, job_id);
+                if !subs.is_empty() {
+                    if let Some(m) = &self.metrics {
+                        m.counter("qcache.promotions").inc();
+                    }
+                }
+                // front of the queue, in order: subs[0] is admitted
+                // first and becomes the new primary
+                for s in subs.into_iter().rev() {
+                    self.pending_subscribers.remove(&s);
+                    self.queue.push_front(s);
+                }
             }
             let mut out = runner.out;
             out.error = Some("cancelled".into());
@@ -352,6 +453,15 @@ impl Jse {
     }
 
     /// Move jobs from the queue into runners while concurrency allows.
+    ///
+    /// With a [`QCache`] attached, admission deduplicates before any
+    /// compute is planned: a job whose full-result key hits the cache
+    /// is sealed Done on the spot (no runner, no tasks, no slot); a job
+    /// whose key matches a *running* job parks as a subscriber and is
+    /// sealed when that primary seals; everything else becomes the
+    /// primary for its key, planning tasks only for bricks without a
+    /// valid memoized partial. Cached admissions never consume a
+    /// concurrency slot.
     fn admit(&mut self) {
         let max = self.cfg.max_concurrent_jobs.max(1);
         while self.runners.len() < max {
@@ -373,19 +483,57 @@ impl Jse {
                 Policy::by_name(&policy_name).unwrap_or(Policy::Locality);
 
             // the filter must compile before anything is submitted
-            if let Err(e) = crate::filterexpr::compile(&filter_expr) {
-                let msg = format!("filter rejected: {e}");
-                self.cat().update_job(job_id, |j| {
-                    j.status = JobStatus::Failed;
-                    j.error = Some(msg.clone());
+            // (the compiled form's typechecked AST also feeds the
+            // fingerprint path below — one parse, one typecheck)
+            let compiled = match crate::filterexpr::compile(&filter_expr)
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    let msg = format!("filter rejected: {e}");
+                    self.cat().update_job(job_id, |j| {
+                        j.status = JobStatus::Failed;
+                        j.error = Some(msg.clone());
+                    });
+                    self.completed.push(JobOutcome::failed(job_id, msg));
+                    continue;
+                }
+            };
+
+            // ---- qcache layers 1 + 2: fingerprint, full hit, share --
+            let qc = self.qcache.clone();
+            let mut cache_info: Option<CacheInfo> = None;
+            if let Some(q) = &qc {
+                let canon =
+                    crate::filterexpr::canonicalize(compiled.expr());
+                let qfp = qcache::query_fingerprint(&canon, dataset);
+                let epochs = self.cat().brick_epochs(dataset);
+                let full_key = qcache::full_fingerprint(qfp, &epochs);
+                if let Some(hit) = q.lookup_full(full_key) {
+                    // repeated query: serve the merged result at
+                    // admission — zero tasks dispatched
+                    self.seal_from_cached(job_id, &hit);
+                    continue;
+                }
+                if q.attach(full_key, job_id) == Attach::Subscriber {
+                    // an identical job is running: ride along and
+                    // receive the same bit-identical merge at seal
+                    self.cat().update_job(job_id, |j| {
+                        j.status = JobStatus::Running;
+                    });
+                    self.pending_subscribers.insert(job_id, full_key);
+                    continue;
+                }
+                cache_info = Some(CacheInfo {
+                    qfp,
+                    full_key,
+                    epochs: epochs.into_iter().collect(),
+                    planned_events: 0, // set once planning resolves
                 });
-                self.completed.push(JobOutcome::failed(job_id, msg));
-                continue;
             }
 
             self.cat()
                 .update_job(job_id, |j| j.status = JobStatus::Staging);
-            let ctx = self.build_ctx(dataset);
+            let mut ctx = self.build_ctx(dataset);
             // Seed the liveness monitor with every participating node: a
             // node that never sends a single heartbeat must still be
             // declared dead (otherwise a silent node would hang the job).
@@ -394,16 +542,71 @@ impl Jse {
             for n in ctx.nodes.iter().filter(|n| n.up) {
                 self.monitor.seed(&n.name);
             }
+
+            // ---- qcache layer 3: skip bricks with valid partials ----
+            let mut memoized: Vec<(BrickId, PartialResult)> = Vec::new();
+            if let (Some(q), Some(ci)) = (&qc, &cache_info) {
+                let mut fresh = Vec::with_capacity(ctx.bricks.len());
+                for b in std::mem::take(&mut ctx.bricks) {
+                    let epoch =
+                        ci.epochs.get(&b.id).copied().unwrap_or(1);
+                    match q.lookup_partial(ci.qfp, b.id, epoch) {
+                        Some(p) => memoized.push((b.id, p)),
+                        None => fresh.push(b),
+                    }
+                }
+                // filtering preserves id order, so SchedCtx::brick's
+                // binary search stays valid
+                ctx.bricks = fresh;
+            }
+            if let Some(ci) = cache_info.as_mut() {
+                ci.planned_events = memoized
+                    .iter()
+                    .map(|(_, p)| p.events_in)
+                    .sum::<u64>()
+                    + ctx
+                        .bricks
+                        .iter()
+                        .map(|b| b.n_events as u64)
+                        .sum::<u64>();
+            }
+
             self.cat()
                 .update_job(job_id, |j| j.status = JobStatus::Running);
             if let Some(m) = &self.metrics {
                 m.counter(&format!("jse.jobs_policy.{}", policy.name()))
                     .inc();
             }
-            self.runners.insert(
-                job_id,
-                JobRunner::new(job_id, filter_expr, policy, ctx),
-            );
+            let mut runner =
+                JobRunner::new(job_id, filter_expr, policy, ctx);
+            runner.cache = cache_info;
+            if !memoized.is_empty() {
+                // one catalogue critical section for all preloads
+                let mut cat = self.cat();
+                for (brick, p) in &memoized {
+                    cat.record_result(ResultRow {
+                        job: job_id,
+                        node: "qcache".into(),
+                        brick: *brick,
+                        events_in: p.events_in,
+                        events_selected: p.events_selected,
+                        result_bytes: p.result_bytes,
+                    });
+                    cat.update_job(job_id, |j| {
+                        j.events_processed += p.events_in;
+                        j.events_selected += p.events_selected;
+                    });
+                }
+            }
+            for (_, p) in &memoized {
+                runner.preload_partial(
+                    p.events_in,
+                    p.events_selected,
+                    p.result_bytes,
+                    &p.histogram,
+                );
+            }
+            self.runners.insert(job_id, runner);
         }
     }
 
@@ -539,6 +742,9 @@ impl Jse {
                 result_bytes,
                 histogram,
             } => {
+                // decode the wire payload once; the runner merge and
+                // the qcache harvest share the same bin values
+                let bins = qcache::decode_hist(&histogram);
                 let hit = self.runners.get_mut(&job).and_then(|r| {
                     r.on_task_done(
                         brick,
@@ -546,11 +752,46 @@ impl Jse {
                         events_in,
                         events_selected,
                         result_bytes,
-                        &histogram,
+                        &bins,
                     )
                 });
                 match hit {
                     Some((node, wall)) => {
+                        // qcache layer-3 harvest: a whole-brick
+                        // completion is memoized under the epoch
+                        // snapshotted at admission (an epoch bumped
+                        // mid-job must not relabel in-flight results)
+                        if let Some(q) = self.qcache.clone() {
+                            if let Some(ci) = self
+                                .runners
+                                .get(&job)
+                                .and_then(|r| r.cache.as_ref())
+                            {
+                                let whole = self
+                                    .runners
+                                    .get(&job)
+                                    .and_then(|r| r.ctx.brick(brick))
+                                    .map(|b| range == (0, b.n_events))
+                                    .unwrap_or(false);
+                                if whole {
+                                    if let Some(&epoch) =
+                                        ci.epochs.get(&brick)
+                                    {
+                                        q.insert_partial(
+                                            ci.qfp,
+                                            brick,
+                                            epoch,
+                                            PartialResult {
+                                                histogram: bins,
+                                                events_in,
+                                                events_selected,
+                                                result_bytes,
+                                            },
+                                        );
+                                    }
+                                }
+                            }
+                        }
                         let mut cat = self.cat();
                         cat.record_result(ResultRow {
                             job,
@@ -604,6 +845,10 @@ impl Jse {
 
     /// Seal runner `id`: pull it out, optionally stamp a stall error,
     /// compute the terminal status and record it in the catalogue.
+    /// If the runner was a shared primary, settle the cache: publish
+    /// the merged result under its full key and seal every parked
+    /// subscriber with the same bit-identical outcome (or the same
+    /// failure).
     fn seal(&mut self, id: u64, stall_error: Option<&str>) {
         let Some(mut runner) = self.runners.remove(&id) else { return };
         if let Some(e) = stall_error {
@@ -611,6 +856,7 @@ impl Jse {
                 runner.out.error = Some(e.to_string());
             }
         }
+        let cache = runner.cache.clone();
         let out = runner.finish();
         let done = out.status == JobStatus::Done;
         self.cat().update_job(id, |j| {
@@ -620,7 +866,84 @@ impl Jse {
         if done {
             self.cat().update_job(id, |j| j.status = JobStatus::Done);
         }
+        if let (Some(q), Some(ci)) = (self.qcache.clone(), cache) {
+            let subs = q.take_subscribers(ci.full_key, id);
+            // "complete" = every planned event was merged. Schedulers
+            // count bricks whose every holder died as covered (jobs
+            // must not hang), so Done alone is NOT enough: publishing
+            // a lost-brick merge would serve a silently-truncated
+            // histogram to every future identical query.
+            let complete = done && out.events_in == ci.planned_events;
+            if complete {
+                let cached = CachedResult {
+                    histogram: out.histogram.clone(),
+                    events_in: out.events_in,
+                    events_selected: out.events_selected,
+                    result_bytes: out.result_bytes,
+                    tasks_completed: out.tasks_completed,
+                };
+                for s in subs {
+                    self.pending_subscribers.remove(&s);
+                    self.seal_from_cached(s, &cached);
+                }
+                q.insert_full(ci.full_key, cached);
+            } else if done {
+                // Done but incomplete (bricks lost mid-run): nothing
+                // is cached, and subscribers re-queue to recompute
+                // against the post-recovery placement instead of
+                // inheriting the truncated merge.
+                if let Some(m) = &self.metrics {
+                    m.counter("qcache.uncacheable_results").inc();
+                }
+                for s in subs.into_iter().rev() {
+                    self.pending_subscribers.remove(&s);
+                    self.queue.push_front(s);
+                }
+            } else {
+                let msg = out
+                    .error
+                    .clone()
+                    .unwrap_or_else(|| "job failed".to_string());
+                self.fail_subscribers(subs, &msg);
+            }
+        }
         self.completed.push(out);
+    }
+
+    /// Seal `job` as Done directly from a cached (or just-sealed
+    /// shared) merged result: catalogue counters + a completed outcome,
+    /// no runner involved. The single construction point for both the
+    /// admission-time full hit and the subscriber release at seal, so
+    /// the two can never drift.
+    fn seal_from_cached(&mut self, job: u64, hit: &CachedResult) {
+        self.cat().update_job(job, |j| {
+            j.status = JobStatus::Done;
+            j.events_processed = hit.events_in;
+            j.events_selected = hit.events_selected;
+        });
+        let mut out = JobOutcome::pending(job);
+        out.status = JobStatus::Done;
+        out.events_in = hit.events_in;
+        out.events_selected = hit.events_selected;
+        out.result_bytes = hit.result_bytes;
+        out.tasks_completed = hit.tasks_completed;
+        out.histogram = hit.histogram.clone();
+        self.completed.push(out);
+    }
+
+    /// Seal scan-sharing subscriber jobs as Failed alongside their
+    /// primary: they asked for the same computation over the same data,
+    /// so recomputing would fail the same way.
+    fn fail_subscribers(&mut self, subs: Vec<u64>, error: &str) {
+        for s in subs {
+            self.pending_subscribers.remove(&s);
+            let msg = format!("shared primary failed: {error}");
+            self.cat().update_job(s, |j| {
+                j.status = JobStatus::Failed;
+                j.error = Some(msg.clone());
+            });
+            self.completed.push(JobOutcome::failed(s, msg));
+        }
     }
 
     fn publish_gauges(&self) {
@@ -746,12 +1069,22 @@ impl Jse {
 /// and a length mismatch leaves the accumulator untouched — malformed
 /// node output must never panic the coordinator.
 pub fn merge_histogram(acc: &mut Vec<f32>, raw: &[u8]) {
-    let vals: Vec<f32> = raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
+    let vals = crate::qcache::decode_hist(raw);
     if acc.is_empty() {
-        *acc = vals;
+        *acc = vals; // first merge adopts the buffer, no copy
+    } else if acc.len() == vals.len() {
+        for (a, v) in acc.iter_mut().zip(vals) {
+            *a += v;
+        }
+    }
+}
+
+/// The same merge over already-decoded bin values (memoized qcache
+/// partials skip the wire round-trip). Bins hold integer event counts,
+/// exact in f32, so merge order cannot perturb the result.
+pub fn merge_histogram_f32(acc: &mut Vec<f32>, vals: &[f32]) {
+    if acc.is_empty() {
+        *acc = vals.to_vec();
     } else if acc.len() == vals.len() {
         for (a, v) in acc.iter_mut().zip(vals) {
             *a += v;

@@ -29,6 +29,28 @@ use crate::scheduler::{NodeState, Policy, SchedCtx, Scheduler, Task};
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+/// qcache bookkeeping carried by a runner whose job was admitted as the
+/// *primary* computation for its fingerprint (see [`crate::qcache`]):
+/// the keys its harvested partials file under and the brick
+/// content-epoch snapshot taken at planning time (an epoch bumped
+/// mid-job must not relabel in-flight results).
+#[derive(Debug, Clone)]
+pub struct CacheInfo {
+    /// query fingerprint (filter + histogram spec + dataset)
+    pub qfp: u64,
+    /// full-result key (qfp + the dataset's epoch vector)
+    pub full_key: u64,
+    /// per-brick content epochs as of admission
+    pub epochs: BTreeMap<BrickId, u64>,
+    /// total events the job planned (memoized + fresh bricks). A job
+    /// can seal Done with *less* than this — schedulers count bricks
+    /// whose every holder died as covered so jobs never hang — and
+    /// such an incomplete merge must NEVER be published to the cache
+    /// or handed to subscribers (it would poison every future
+    /// identical query with a silently-truncated histogram).
+    pub planned_events: u64,
+}
+
 /// One job's in-flight state inside the shared event loop.
 pub struct JobRunner {
     pub job: u64,
@@ -39,6 +61,9 @@ pub struct JobRunner {
     /// node -> in-flight tasks with their dispatch timestamps
     outstanding: BTreeMap<String, Vec<(Task, Instant)>>,
     pub out: JobOutcome,
+    /// set when this runner is the primary computation for a qcache
+    /// fingerprint (None when the cache is disabled)
+    pub cache: Option<CacheInfo>,
 }
 
 impl JobRunner {
@@ -57,7 +82,26 @@ impl JobRunner {
             ctx,
             outstanding: BTreeMap::new(),
             out: JobOutcome::pending(job),
+            cache: None,
         }
+    }
+
+    /// Fold a memoized per-brick partial (qcache layer 3) into the
+    /// outcome before any task dispatches — observationally identical
+    /// to receiving that brick's `TaskDone`, minus the dispatch.
+    /// Histogram bins are integer event counts (exact in f32), so the
+    /// merge order against fresh partials cannot perturb the result.
+    pub fn preload_partial(
+        &mut self,
+        events_in: u64,
+        events_selected: u64,
+        result_bytes: u64,
+        histogram: &[f32],
+    ) {
+        self.out.events_in += events_in;
+        self.out.events_selected += events_selected;
+        self.out.result_bytes += result_bytes;
+        super::merge_histogram_f32(&mut self.out.histogram, histogram);
     }
 
     /// Tasks currently in flight on `node` for this job (the runner's
@@ -121,10 +165,12 @@ impl JobRunner {
         Some((node, task, t0))
     }
 
-    /// A `TaskDone` routed to this job. Returns the node that ran the
-    /// task and the task's wall time, or `None` for an unknown task
-    /// (late reply from a declared-dead node, duplicate, …) which is
-    /// dropped without touching the outcome.
+    /// A `TaskDone` routed to this job (histogram already decoded to
+    /// bin values — the loop decodes the wire payload exactly once and
+    /// shares it with the qcache harvest). Returns the node that ran
+    /// the task and the task's wall time, or `None` for an unknown
+    /// task (late reply from a declared-dead node, duplicate, …) which
+    /// is dropped without touching the outcome.
     #[allow(clippy::too_many_arguments)]
     pub fn on_task_done(
         &mut self,
@@ -133,7 +179,7 @@ impl JobRunner {
         events_in: u64,
         events_selected: u64,
         result_bytes: u64,
-        histogram: &[u8],
+        histogram: &[f32],
     ) -> Option<(String, Duration)> {
         let (node, task, t0) = self.take_outstanding(brick, range)?;
         // virtual elapsed of 1.0 keeps the adaptive policies' feedback
@@ -144,7 +190,7 @@ impl JobRunner {
         self.out.events_in += events_in;
         self.out.events_selected += events_selected;
         self.out.result_bytes += result_bytes;
-        super::merge_histogram(&mut self.out.histogram, histogram);
+        super::merge_histogram_f32(&mut self.out.histogram, histogram);
         Some((node, t0.elapsed()))
     }
 

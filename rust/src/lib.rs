@@ -49,6 +49,37 @@
 //! unrecoverable (`ft.bricks_unrecoverable`) and their jobs failed
 //! explicitly rather than left hanging.
 //!
+//! ## Repeated-analysis traffic: the `qcache` subsystem
+//!
+//! Interactive analysis re-runs the same and near-same selections
+//! constantly; [`qcache`] makes repeated work nearly free, in three
+//! layers wired into the JSE admission path:
+//!
+//! 1. **Query fingerprinting** — the typechecked filter AST is
+//!    canonicalized ([`filterexpr::canon`]: constant folding,
+//!    commutative operand ordering, double-negation elimination — all
+//!    strictly semantics-preserving) and hashed with the histogram
+//!    spec, dataset id and the per-brick **content epochs** kept in the
+//!    catalogue. Epochs move only when brick *data* changes;
+//!    re-replication, rebalancing and membership churn rewrite holder
+//!    lists without touching them.
+//! 2. **Full-result cache + scan sharing** — a byte-budgeted LRU of
+//!    merged histograms serves repeated queries at admission with zero
+//!    tasks dispatched, and an in-flight table lets a job identical to
+//!    a *running* one subscribe and receive the same bit-identical
+//!    merge at seal time (cancelling the primary promotes a subscriber
+//!    to recompute).
+//! 3. **Per-brick partial memoization** — whole-brick `TaskDone`s are
+//!    harvested as `(query, brick, epoch) → partial` entries, so an
+//!    epoch bump recomputes exactly the changed bricks and merges the
+//!    rest from memory, still bit-identical to a cold run.
+//!
+//! Surfaces: `GET /cache` + `POST /cache/flush` (portal), `geps
+//! cache-stats` / `cache-flush` (CLI), `qcache.*` counters on
+//! `/metrics`, and submission-time filter validation
+//! ([`cluster::ClusterHandle::try_submit`]) so malformed expressions
+//! never enter the catalogue.
+//!
 //! ## The columnar node hot path
 //!
 //! Per-node throughput is the whole ball game (§4.1: bricks exist "to
@@ -81,7 +112,8 @@
 //!   (counters, gauges, histograms)
 //! - coordination: [`gass`], [`node`], [`scheduler`] (pull policies fed
 //!   per-job from shared slot state), [`jse`] (event loop +
-//!   [`jse::runner`] state machines), [`ft`] (heartbeat liveness +
+//!   [`jse::runner`] state machines), [`qcache`] (query-result cache,
+//!   scan sharing, partial memoization), [`ft`] (heartbeat liveness +
 //!   re-replication; node death fails over across *all* jobs),
 //!   [`cluster`] (admission + wiring), [`portal`] (submit / status /
 //!   cancel over HTTP)
@@ -123,6 +155,7 @@ pub mod metrics;
 pub mod netsim;
 pub mod node;
 pub mod portal;
+pub mod qcache;
 pub mod rsl;
 pub mod runtime;
 pub mod scheduler;

@@ -8,6 +8,8 @@
 //!   cancel     cancel a queued or running job via the portal
 //!   add-node   register a new grid node mid-run (elastic membership)
 //!   node-info  GRIS node query via a running portal
+//!   cache-stats  query-result cache (qcache) statistics
+//!   cache-flush  drop all cached query results
 //!   gen-artifacts  write a reference-backend manifest (no python/XLA)
 //!   calibrate  measure kernel throughput (DES calibration input)
 //!   fig7       run the Fig 7 DES sweep and print the table
@@ -108,7 +110,9 @@ fn cmd_demo(flags: BTreeMap<String, String>) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "locality".into());
     println!("[geps] submitting filter: {filter} (policy {policy})");
-    let job = cluster.submit(&filter, &policy);
+    let job = cluster
+        .try_submit(&filter, &policy)
+        .map_err(|e| anyhow!("submission rejected: {e}"))?;
     let status =
         cluster.wait(job, std::time::Duration::from_secs(300))?;
     let (processed, selected) = {
@@ -158,6 +162,12 @@ fn cmd_submit(flags: BTreeMap<String, String>) -> Result<()> {
         .get("policy")
         .cloned()
         .unwrap_or_else(|| "locality".into());
+    // validate client-side too: a malformed expression earns a typed
+    // error before anything reaches the portal (which enforces the
+    // same check server-side on POST /submit)
+    if let Err(e) = geps::filterexpr::compile(&filter) {
+        bail!("invalid --filter: {e}");
+    }
     let body = Json::obj()
         .set("filter", filter.as_str())
         .set("policy", policy.as_str())
@@ -280,6 +290,34 @@ fn cmd_histogram(flags: BTreeMap<String, String>) -> Result<()> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+fn cmd_cache_stats(flags: BTreeMap<String, String>) -> Result<()> {
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        "/cache",
+        None,
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    if status >= 300 {
+        bail!("cache-stats failed with HTTP {status}");
+    }
+    Ok(())
+}
+
+fn cmd_cache_flush(flags: BTreeMap<String, String>) -> Result<()> {
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "POST",
+        "/cache/flush",
+        None,
+    )?;
+    println!("{}", String::from_utf8_lossy(&resp));
+    if status >= 300 {
+        bail!("cache-flush failed with HTTP {status}");
     }
     Ok(())
 }
@@ -411,7 +449,7 @@ fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: geps <serve|demo|submit|status|cancel|add-node|node-info|kill|histogram|bricks|gen-artifacts|calibrate|fig7> [--flags]
+        "usage: geps <serve|demo|submit|status|cancel|add-node|node-info|kill|histogram|bricks|cache-stats|cache-flush|gen-artifacts|calibrate|fig7> [--flags]
   serve     --config FILE --listen ADDR --gris-listen ADDR
   demo      --config FILE --events N --policy P --filter EXPR
   submit    --portal ADDR --filter EXPR --policy P
@@ -424,6 +462,8 @@ fn usage() -> ! {
   kill      --portal ADDR --node NAME        (fault injection)
   histogram --portal ADDR --job ID           (visualize merged results)
   bricks    --portal ADDR                    (brick placement view)
+  cache-stats --portal ADDR                  (qcache statistics)
+  cache-flush --portal ADDR                  (drop all cached results)
   gen-artifacts [--out DIR] [--batch B] [--max-tracks T]
                                              (reference-backend manifest:
                                               no python or XLA needed;
@@ -450,6 +490,8 @@ fn main() -> Result<()> {
         "kill" => cmd_kill(flags),
         "histogram" => cmd_histogram(flags),
         "bricks" => cmd_bricks(flags),
+        "cache-stats" => cmd_cache_stats(flags),
+        "cache-flush" => cmd_cache_flush(flags),
         "gen-artifacts" => cmd_gen_artifacts(flags),
         "calibrate" => cmd_calibrate(flags),
         "fig7" => cmd_fig7(flags),

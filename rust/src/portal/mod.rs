@@ -17,6 +17,9 @@
 //!   in catalogue + WAL) so subsequent tasks schedule there.
 //! - `POST /kill/<node>` — fault injection (operations/testing surface)
 //! - `GET /bricks` — brick placement view
+//! - `GET /cache` / `POST /cache/flush` — qcache statistics and flush
+//!   (full-result reuse, in-flight scan sharing, per-brick partials;
+//!   see [`crate::qcache`])
 //! - `GET /metrics` — coordinator metrics (jobs_queued, jobs_in_flight,
 //!   tasks_outstanding, per-policy job counters, nodes_joined,
 //!   bricks_rebalanced, …)
@@ -48,8 +51,26 @@ const INDEX_HTML: &str = r#"<!doctype html>
   <li>GET /nodes?filter=(&amp;(cpus&gt;=1)(status=up)) &mdash; GRIS node information</li>
   <li>POST /nodes/add {"name": "node3", "speed": 1.0, "slots": 1} &mdash; join a node mid-run</li>
   <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
+  <li>GET /cache &mdash; qcache statistics (entries, bytes, hit/share counters)</li>
+  <li>POST /cache/flush &mdash; drop all cached query results</li>
   <li>GET /metrics &mdash; coordinator metrics</li>
 </ul>
+<p><b>Query-result cache (qcache):</b> submissions are canonicalized
+(constant folding, commutative operand ordering, double-negation
+elimination) and fingerprinted together with the histogram spec, the
+dataset id and the per-brick <i>content epochs</i>. A repeated query is
+served from the full-result cache without dispatching a single task; a
+query identical to a <i>running</i> job attaches as a subscriber and
+receives the same bit-identical merged result when it completes
+(cancelling the primary promotes a subscriber to recompute); and a
+fresh query plans tasks only for bricks without a valid memoized
+per-brick partial. Invalidation is content-epoch based: entries die
+only when a brick's <i>data</i> changes or the byte-budgeted LRU evicts
+them &mdash; re-replication, rebalancing and membership churn never
+invalidate. Counters <code>qcache.hits_full</code>,
+<code>qcache.hits_partial</code>, <code>qcache.shared_jobs</code>,
+<code>qcache.evictions</code> and the <code>qcache.bytes</code> gauge
+appear on <code>GET /metrics</code>.</p>
 <p><b>Compute backend:</b> kernels run on the backend selected by
 <code>GEPS_BACKEND</code> — <code>auto</code> (default) compiles the AOT
 HLO artifacts with native XLA when both artifacts and the
@@ -158,20 +179,15 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                 .get("policy")
                 .and_then(Json::as_str)
                 .unwrap_or("locality");
-            if crate::scheduler::Policy::by_name(policy).is_none() {
-                return Response::json(
+            // validated submission: parse + typecheck (and policy
+            // lookup) happen before the tuple enters the catalogue
+            match cluster.try_submit(filter, policy) {
+                Ok(id) => Response::json(201, Json::obj().set("job", id)),
+                Err(e) => Response::json(
                     400,
-                    Json::obj().set("error", format!("unknown policy '{policy}'")),
-                );
+                    Json::obj().set("error", e.to_string()),
+                ),
             }
-            if let Err(e) = crate::filterexpr::compile(filter) {
-                return Response::json(
-                    400,
-                    Json::obj().set("error", format!("bad filter: {e}")),
-                );
-            }
-            let id = cluster.submit(filter, policy);
-            Response::json(201, Json::obj().set("job", id))
         }
         ("GET", "/jobs") => {
             let cat = cluster.catalog.lock().unwrap();
@@ -355,6 +371,30 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                     Json::obj().set("error", format!("no such node '{node}'")),
                 )
             }
+        }
+        ("GET", "/cache") => {
+            let s = cluster.cache_stats();
+            Response::json(
+                200,
+                Json::obj()
+                    .set("enabled", cluster.cache_enabled())
+                    .set("full_entries", s.full_entries)
+                    .set("partial_entries", s.partial_entries)
+                    .set("inflight", s.inflight)
+                    .set("bytes", s.bytes)
+                    .set("budget_bytes", s.budget_bytes)
+                    .set("hits_full", s.hits_full)
+                    .set("misses_full", s.misses_full)
+                    .set("hits_partial", s.hits_partial)
+                    .set("misses_partial", s.misses_partial)
+                    .set("shared_jobs", s.shared_jobs)
+                    .set("evictions", s.evictions)
+                    .set("flushes", s.flushes),
+            )
+        }
+        ("POST", "/cache/flush") => {
+            let n = cluster.cache_flush();
+            Response::json(200, Json::obj().set("flushed", n))
         }
         ("GET", "/metrics") => {
             Response::text(200, cluster.metrics.render())

@@ -1,0 +1,694 @@
+//! `qcache` — the repeated-analysis subsystem: query-result caching,
+//! in-flight scan sharing, and per-brick partial memoization.
+//!
+//! The paper's operating model is many users submitting selections whose
+//! per-node results the JSE merges centrally; interactive-analysis
+//! traffic (DIAL-style) re-runs the same and near-same selections
+//! constantly. Without this subsystem every submission recomputes every
+//! brick. With it, repeated and overlapping queries stop costing compute
+//! at all, in three layers:
+//!
+//! 1. **Query fingerprinting.** The submitted filter is parsed,
+//!    typechecked and rewritten into canonical form
+//!    ([`crate::filterexpr::canon`] — constant folding, commutative
+//!    operand ordering, double-negation elimination; all strictly
+//!    semantics-preserving), then hashed together with the histogram
+//!    spec (feature count, bin count, per-feature ranges) and the
+//!    dataset id into a *query fingerprint* ([`query_fingerprint`]).
+//!    Hashing the brick **content-epoch vector** on top yields the
+//!    *full-result key* ([`full_fingerprint`]). Epochs live in the
+//!    catalogue ([`crate::catalog::Catalog::bump_content_epoch`]) and
+//!    move **only when brick data changes** — re-replication,
+//!    rebalancing and membership churn rewrite holder lists without
+//!    touching them, so placement churn can never invalidate a cache
+//!    entry.
+//! 2. **Full-result cache + scan sharing.** A byte-budgeted LRU maps
+//!    full-result keys to merged histograms (plus the job counters
+//!    needed to reconstitute an outcome): a repeated query is served at
+//!    admission without dispatching a single task. An **in-flight
+//!    table** handles the window before a result exists: a job whose
+//!    key matches a *running* job attaches as a subscriber and receives
+//!    the same bit-identical merged result when the primary's runner
+//!    seals. Cancelling the primary promotes a subscriber to recompute;
+//!    node death and failover happen inside the primary's runner, so
+//!    subscribers simply stay attached.
+//! 3. **Per-brick partial memoization.** Whole-brick `TaskDone` replies
+//!    are harvested as `(query fingerprint, brick, epoch) → partial
+//!    histogram` entries. An incoming job whose full key misses plans
+//!    tasks **only for bricks without a valid partial**; memoized
+//!    partials are pre-merged into the runner's outcome. Because
+//!    histogram bins are integer event counts (exact in f32), the
+//!    memoized-plus-fresh merge is bit-identical to a cold recompute
+//!    regardless of merge order.
+//!
+//! The invalidation contract, in one line: **a cache entry dies only
+//! when a brick it covers changes content (epoch bump) or the LRU
+//! evicts it under byte pressure — never because data moved between
+//! nodes.**
+//!
+//! Surfaces: `GET /cache` (stats) and `POST /cache/flush` on the portal,
+//! `geps cache-stats` / `geps cache-flush` on the CLI, and the
+//! `qcache.hits_full` / `qcache.hits_partial` / `qcache.shared_jobs` /
+//! `qcache.evictions` counters plus the `qcache.bytes` gauge on
+//! `GET /metrics`. The JSE admission path drives the cache (see
+//! [`crate::jse`]); this module is pure bookkeeping and is safe to call
+//! from any thread.
+
+use crate::brick::BrickId;
+use crate::events::{FeatureId, NUM_FEATURES};
+use crate::filterexpr::ast::Expr;
+use crate::filterexpr::canon;
+use crate::metrics::Registry;
+use crate::util::hash::xxhash64;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Fingerprint hash seeds (distinct per layer so a query fingerprint can
+/// never collide with a full key built from it by construction).
+const SEED_QUERY: u64 = 0x9E75_0000_C0DE_0001;
+const SEED_FULL: u64 = 0x9E75_0000_C0DE_0002;
+
+/// Hash a **canonicalized** filter AST together with the histogram spec
+/// and dataset id into the query fingerprint (layer 1). Two submissions
+/// share a fingerprint iff they request the same selection over the
+/// same dataset under the same histogram layout.
+pub fn query_fingerprint(canonical: &Expr, dataset: u32) -> u64 {
+    let mut bytes = canon::encode(canonical);
+    // Histogram spec: feature count, bin count, per-feature [lo, hi) —
+    // any change to the layout changes the result, so it keys the
+    // cache. NOTE: the bin count hashed here is the build-time default
+    // (what reference manifests are written with), not the live
+    // engine manifest's — adequate for this in-process cache because
+    // one process runs one manifest, but cross-restart persistence
+    // (ROADMAP follow-on) must re-key on the loaded manifest's
+    // hist_bins before entries may outlive the process.
+    bytes.push(0xFE);
+    bytes.extend_from_slice(&(NUM_FEATURES as u32).to_le_bytes());
+    bytes.extend_from_slice(
+        &(crate::runtime::manifest::DEFAULT_HIST_BINS as u32).to_le_bytes(),
+    );
+    for r in FeatureId::ranges_flat() {
+        bytes.extend_from_slice(&r.to_bits().to_le_bytes());
+    }
+    bytes.push(0xFD);
+    bytes.extend_from_slice(&dataset.to_le_bytes());
+    xxhash64(&bytes, SEED_QUERY)
+}
+
+/// Hash a query fingerprint together with the dataset's brick
+/// content-epoch vector into the full-result key (layer 2). Bumping any
+/// brick's epoch changes the key; holder rewrites do not.
+pub fn full_fingerprint(qfp: u64, epochs: &[(BrickId, u64)]) -> u64 {
+    let mut es: Vec<(BrickId, u64)> = epochs.to_vec();
+    es.sort();
+    let mut bytes = Vec::with_capacity(8 + es.len() * 16);
+    bytes.extend_from_slice(&qfp.to_le_bytes());
+    for (b, e) in es {
+        bytes.extend_from_slice(&b.dataset.to_le_bytes());
+        bytes.extend_from_slice(&b.seq.to_le_bytes());
+        bytes.extend_from_slice(&e.to_le_bytes());
+    }
+    xxhash64(&bytes, SEED_FULL)
+}
+
+/// Decode a wire histogram payload (LE f32 bytes) into bin values.
+/// Trailing ragged bytes are ignored, mirroring the JSE merge.
+pub fn decode_hist(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// A cached merged job result (layer 2 value).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedResult {
+    /// merged (F * bins) histogram of selected events
+    pub histogram: Vec<f32>,
+    pub events_in: u64,
+    pub events_selected: u64,
+    pub result_bytes: u64,
+    pub tasks_completed: usize,
+}
+
+impl CachedResult {
+    fn cost(&self) -> usize {
+        self.histogram.len() * 4 + 64
+    }
+}
+
+/// A memoized per-brick partial (layer 3 value): exactly what the
+/// brick's whole-range `TaskDone` carried.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialResult {
+    pub histogram: Vec<f32>,
+    pub events_in: u64,
+    pub events_selected: u64,
+    pub result_bytes: u64,
+}
+
+impl PartialResult {
+    fn cost(&self) -> usize {
+        self.histogram.len() * 4 + 64
+    }
+}
+
+/// Outcome of [`QCache::attach`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attach {
+    /// No identical job is running: the caller owns the computation
+    /// (and must later settle via [`QCache::take_subscribers`]).
+    Primary,
+    /// An identical job is already running: the caller was registered
+    /// as a subscriber and will be handed the primary's result.
+    Subscriber,
+}
+
+/// Byte-budgeted LRU keyed by `K`. Hand-rolled over two BTreeMaps (no
+/// external deps): `map` holds the values, `order` is the
+/// access-tick → key recency index eviction walks from the front.
+struct Lru<K: Ord + Clone, V> {
+    map: BTreeMap<K, Slot<V>>,
+    order: BTreeMap<u64, K>,
+    bytes: usize,
+    budget: usize,
+    next_tick: u64,
+}
+
+struct Slot<V> {
+    value: V,
+    tick: u64,
+    cost: usize,
+}
+
+impl<K: Ord + Clone, V> Lru<K, V> {
+    fn new(budget: usize) -> Self {
+        Lru {
+            map: BTreeMap::new(),
+            order: BTreeMap::new(),
+            bytes: 0,
+            budget,
+            next_tick: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Lookup + touch (moves the entry to most-recently-used).
+    fn get(&mut self, k: &K) -> Option<&V> {
+        let tick = self.next_tick;
+        let slot = self.map.get_mut(k)?;
+        self.order.remove(&slot.tick);
+        slot.tick = tick;
+        self.order.insert(tick, k.clone());
+        self.next_tick += 1;
+        Some(&slot.value)
+    }
+
+    /// Insert (replacing any previous value) and evict least-recently
+    /// used entries until the byte budget holds. Returns how many
+    /// entries were evicted. The entry just inserted is never evicted —
+    /// a single oversized result simply occupies the whole budget.
+    fn insert(&mut self, k: K, value: V, cost: usize) -> usize {
+        if let Some(old) = self.map.remove(&k) {
+            self.order.remove(&old.tick);
+            self.bytes -= old.cost;
+        }
+        let tick = self.next_tick;
+        self.next_tick += 1;
+        self.bytes += cost;
+        self.map.insert(k.clone(), Slot { value, tick, cost });
+        self.order.insert(tick, k);
+        let mut evicted = 0;
+        while self.bytes > self.budget && self.map.len() > 1 {
+            let Some((&oldest, _)) = self.order.first_key_value() else {
+                break;
+            };
+            if oldest == tick {
+                break; // only the newcomer left over budget
+            }
+            let key = self.order.remove(&oldest).expect("index entry");
+            if let Some(slot) = self.map.remove(&key) {
+                self.bytes -= slot.cost;
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+
+    fn clear(&mut self) -> usize {
+        let n = self.map.len();
+        self.map.clear();
+        self.order.clear();
+        self.bytes = 0;
+        n
+    }
+}
+
+/// One running computation and the jobs sharing it.
+#[derive(Debug, Clone)]
+struct Inflight {
+    primary: u64,
+    subscribers: Vec<u64>,
+}
+
+struct Inner {
+    full: Lru<u64, CachedResult>,
+    partial: Lru<(u64, BrickId, u64), PartialResult>,
+    inflight: BTreeMap<u64, Inflight>,
+    // cumulative counters (mirrored to the metrics registry when set)
+    hits_full: u64,
+    misses_full: u64,
+    hits_partial: u64,
+    misses_partial: u64,
+    shared_jobs: u64,
+    evictions: u64,
+    flushes: u64,
+}
+
+/// Point-in-time cache statistics (the portal's `GET /cache`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QCacheStats {
+    pub full_entries: usize,
+    pub partial_entries: usize,
+    pub inflight: usize,
+    pub bytes: u64,
+    pub budget_bytes: u64,
+    pub hits_full: u64,
+    pub misses_full: u64,
+    pub hits_partial: u64,
+    pub misses_partial: u64,
+    pub shared_jobs: u64,
+    pub evictions: u64,
+    pub flushes: u64,
+}
+
+/// Cache sizing knobs.
+#[derive(Debug, Clone)]
+pub struct QCacheConfig {
+    /// byte budget of the full-result LRU (layer 2)
+    pub full_budget_bytes: usize,
+    /// byte budget of the per-brick partial LRU (layer 3)
+    pub partial_budget_bytes: usize,
+}
+
+impl Default for QCacheConfig {
+    fn default() -> Self {
+        QCacheConfig {
+            full_budget_bytes: 32 << 20,
+            partial_budget_bytes: 32 << 20,
+        }
+    }
+}
+
+/// The query-result cache. Thread-safe (one mutex around the
+/// bookkeeping; values are cloned out), shared as an `Arc` between the
+/// JSE event loop (admission, harvest, settlement) and the portal
+/// (stats, flush).
+pub struct QCache {
+    inner: Mutex<Inner>,
+    cfg: QCacheConfig,
+    metrics: OnceLock<Arc<Registry>>,
+}
+
+impl Default for QCache {
+    fn default() -> Self {
+        QCache::new(QCacheConfig::default())
+    }
+}
+
+impl QCache {
+    pub fn new(cfg: QCacheConfig) -> Self {
+        QCache {
+            inner: Mutex::new(Inner {
+                full: Lru::new(cfg.full_budget_bytes.max(1)),
+                partial: Lru::new(cfg.partial_budget_bytes.max(1)),
+                inflight: BTreeMap::new(),
+                hits_full: 0,
+                misses_full: 0,
+                hits_partial: 0,
+                misses_partial: 0,
+                shared_jobs: 0,
+                evictions: 0,
+                flushes: 0,
+            }),
+            cfg,
+            metrics: OnceLock::new(),
+        }
+    }
+
+    /// Attach a metrics registry; counters/gauge mirror every mutation.
+    pub fn set_metrics(&self, metrics: Arc<Registry>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a panic while holding this lock leaves only LRU bookkeeping
+        // behind; the cache stays usable (worst case: a stale entry is
+        // later overwritten by an identical recompute)
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    fn publish_bytes(&self, inner: &Inner) {
+        if let Some(m) = self.metrics.get() {
+            m.gauge("qcache.bytes")
+                .set((inner.full.bytes + inner.partial.bytes) as u64);
+        }
+    }
+
+    fn bump(&self, name: &str, n: u64) {
+        if n > 0 {
+            if let Some(m) = self.metrics.get() {
+                m.counter(name).add(n);
+            }
+        }
+    }
+
+    /// Layer 2 lookup: a hit returns the merged result to serve at
+    /// admission time (and counts toward `qcache.hits_full`).
+    pub fn lookup_full(&self, key: u64) -> Option<CachedResult> {
+        let mut inner = self.lock();
+        let hit = inner.full.get(&key).cloned();
+        match &hit {
+            Some(_) => inner.hits_full += 1,
+            None => inner.misses_full += 1,
+        }
+        drop(inner);
+        if hit.is_some() {
+            self.bump("qcache.hits_full", 1);
+        }
+        hit
+    }
+
+    /// Publish a sealed job's merged result under its full key.
+    pub fn insert_full(&self, key: u64, result: CachedResult) {
+        let cost = result.cost();
+        let mut inner = self.lock();
+        let evicted = inner.full.insert(key, result, cost);
+        inner.evictions += evicted as u64;
+        self.publish_bytes(&inner);
+        drop(inner);
+        self.bump("qcache.evictions", evicted as u64);
+    }
+
+    /// Scan sharing: register `job` against `key`. If nothing identical
+    /// is running (or `job` is already the designated primary, as after
+    /// a promotion) the caller computes; otherwise it subscribes.
+    pub fn attach(&self, key: u64, job: u64) -> Attach {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let mut newly_shared = false;
+        let out = match inner.inflight.entry(key) {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(Inflight {
+                    primary: job,
+                    subscribers: Vec::new(),
+                });
+                Attach::Primary
+            }
+            std::collections::btree_map::Entry::Occupied(mut o) => {
+                let e = o.get_mut();
+                if e.primary == job {
+                    Attach::Primary
+                } else {
+                    if !e.subscribers.contains(&job) {
+                        e.subscribers.push(job);
+                        newly_shared = true;
+                    }
+                    Attach::Subscriber
+                }
+            }
+        };
+        if newly_shared {
+            inner.shared_jobs += 1;
+        }
+        drop(guard);
+        if newly_shared {
+            self.bump("qcache.shared_jobs", 1);
+        }
+        out
+    }
+
+    /// Settlement: the primary sealed (Done, Failed, or is being
+    /// cancelled). Removes the in-flight entry and returns the
+    /// subscribers awaiting its result. Guarded on the primary id so a
+    /// stale caller can never steal a promoted entry's subscribers.
+    pub fn take_subscribers(&self, key: u64, primary: u64) -> Vec<u64> {
+        let mut inner = self.lock();
+        let owned = inner
+            .inflight
+            .get(&key)
+            .map(|e| e.primary == primary)
+            .unwrap_or(false);
+        if !owned {
+            return Vec::new();
+        }
+        inner
+            .inflight
+            .remove(&key)
+            .map(|e| e.subscribers)
+            .unwrap_or_default()
+    }
+
+    /// A subscriber left on its own (portal cancel / explicit failure):
+    /// detach it from the key it follows. Returns true if it was
+    /// subscribed there.
+    pub fn detach_subscriber(&self, key: u64, job: u64) -> bool {
+        let mut inner = self.lock();
+        if let Some(e) = inner.inflight.get_mut(&key) {
+            if let Some(pos) = e.subscribers.iter().position(|j| *j == job)
+            {
+                e.subscribers.remove(pos);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Layer 3 lookup (counts toward `qcache.hits_partial` on hit).
+    pub fn lookup_partial(
+        &self,
+        qfp: u64,
+        brick: BrickId,
+        epoch: u64,
+    ) -> Option<PartialResult> {
+        let mut inner = self.lock();
+        let hit = inner.partial.get(&(qfp, brick, epoch)).cloned();
+        match &hit {
+            Some(_) => inner.hits_partial += 1,
+            None => inner.misses_partial += 1,
+        }
+        drop(inner);
+        if hit.is_some() {
+            self.bump("qcache.hits_partial", 1);
+        }
+        hit
+    }
+
+    /// Harvest a whole-brick `TaskDone` into the partial store.
+    pub fn insert_partial(
+        &self,
+        qfp: u64,
+        brick: BrickId,
+        epoch: u64,
+        result: PartialResult,
+    ) {
+        let cost = result.cost();
+        let mut inner = self.lock();
+        let evicted =
+            inner.partial.insert((qfp, brick, epoch), result, cost);
+        inner.evictions += evicted as u64;
+        self.publish_bytes(&inner);
+        drop(inner);
+        self.bump("qcache.evictions", evicted as u64);
+    }
+
+    /// Drop every cached result (full + partial). In-flight sharing
+    /// state is *not* touched: running jobs still settle with their
+    /// subscribers. Returns the number of entries dropped.
+    pub fn flush(&self) -> usize {
+        let mut inner = self.lock();
+        let n = inner.full.clear() + inner.partial.clear();
+        inner.flushes += 1;
+        self.publish_bytes(&inner);
+        n
+    }
+
+    pub fn stats(&self) -> QCacheStats {
+        let inner = self.lock();
+        QCacheStats {
+            full_entries: inner.full.len(),
+            partial_entries: inner.partial.len(),
+            inflight: inner.inflight.len(),
+            bytes: (inner.full.bytes + inner.partial.bytes) as u64,
+            budget_bytes: (self.cfg.full_budget_bytes
+                + self.cfg.partial_budget_bytes)
+                as u64,
+            hits_full: inner.hits_full,
+            misses_full: inner.misses_full,
+            hits_partial: inner.hits_partial,
+            misses_partial: inner.misses_partial,
+            shared_jobs: inner.shared_jobs,
+            evictions: inner.evictions,
+            flushes: inner.flushes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filterexpr::{canonicalize, parse};
+
+    fn fp(src: &str, dataset: u32) -> u64 {
+        query_fingerprint(&canonicalize(&parse(src).unwrap()), dataset)
+    }
+
+    #[test]
+    fn fingerprints_collapse_rewrites_and_separate_selections() {
+        assert_eq!(
+            fp("met > 30 && n_tracks >= 2", 1),
+            fp("n_tracks>=2 && met>30", 1)
+        );
+        assert_ne!(fp("met > 30", 1), fp("met > 31", 1));
+        assert_ne!(fp("met > 30", 1), fp("met > 30", 2), "dataset keyed");
+    }
+
+    #[test]
+    fn full_key_tracks_epochs_not_order() {
+        let q = fp("met > 1", 1);
+        let b0 = BrickId::new(1, 0);
+        let b1 = BrickId::new(1, 1);
+        let k = full_fingerprint(q, &[(b0, 1), (b1, 1)]);
+        assert_eq!(
+            k,
+            full_fingerprint(q, &[(b1, 1), (b0, 1)]),
+            "row order must not matter"
+        );
+        assert_ne!(k, full_fingerprint(q, &[(b0, 2), (b1, 1)]));
+        assert_ne!(k, full_fingerprint(q, &[(b0, 1)]));
+    }
+
+    fn result(bins: usize, fill: f32) -> CachedResult {
+        CachedResult {
+            histogram: vec![fill; bins],
+            events_in: 100,
+            events_selected: 10,
+            result_bytes: 1000,
+            tasks_completed: 4,
+        }
+    }
+
+    #[test]
+    fn full_cache_hits_and_counts() {
+        let q = QCache::new(QCacheConfig::default());
+        assert_eq!(q.lookup_full(7), None);
+        q.insert_full(7, result(8, 1.0));
+        assert_eq!(q.lookup_full(7), Some(result(8, 1.0)));
+        let s = q.stats();
+        assert_eq!((s.hits_full, s.misses_full), (1, 1));
+        assert_eq!(s.full_entries, 1);
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_under_byte_pressure() {
+        // each entry costs 64*4 + 64 = 320 bytes; budget fits 2
+        let q = QCache::new(QCacheConfig {
+            full_budget_bytes: 700,
+            partial_budget_bytes: 1,
+        });
+        q.insert_full(1, result(64, 1.0));
+        q.insert_full(2, result(64, 2.0));
+        assert!(q.lookup_full(1).is_some(), "touch 1: now MRU");
+        q.insert_full(3, result(64, 3.0));
+        assert_eq!(q.stats().evictions, 1);
+        assert!(q.lookup_full(2).is_none(), "2 was LRU");
+        assert!(q.lookup_full(1).is_some());
+        assert!(q.lookup_full(3).is_some());
+        // an oversized single entry still lands (occupying the budget)
+        q.insert_full(9, result(4096, 9.0));
+        assert!(q.lookup_full(9).is_some());
+    }
+
+    #[test]
+    fn inflight_attach_subscribe_settle() {
+        let q = QCache::new(QCacheConfig::default());
+        assert_eq!(q.attach(5, 100), Attach::Primary);
+        assert_eq!(q.attach(5, 101), Attach::Subscriber);
+        assert_eq!(q.attach(5, 102), Attach::Subscriber);
+        assert_eq!(q.attach(5, 101), Attach::Subscriber, "idempotent");
+        assert_eq!(q.stats().shared_jobs, 2);
+        // wrong primary cannot steal the entry
+        assert!(q.take_subscribers(5, 101).is_empty());
+        assert_eq!(q.take_subscribers(5, 100), vec![101, 102]);
+        assert_eq!(q.stats().inflight, 0);
+        // promotion flow: re-register with a new primary
+        assert_eq!(q.attach(5, 101), Attach::Primary);
+        assert_eq!(q.attach(5, 102), Attach::Subscriber);
+        assert_eq!(q.attach(5, 101), Attach::Primary, "still the owner");
+        assert!(q.detach_subscriber(5, 102));
+        assert!(!q.detach_subscriber(5, 102));
+        assert!(!q.detach_subscriber(99, 102), "unknown key");
+        assert_eq!(q.take_subscribers(5, 101), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn partial_entries_key_on_epoch() {
+        let q = QCache::new(QCacheConfig::default());
+        let b = BrickId::new(1, 3);
+        let p = PartialResult {
+            histogram: vec![1.0; 8],
+            events_in: 50,
+            events_selected: 5,
+            result_bytes: 500,
+        };
+        q.insert_partial(42, b, 1, p.clone());
+        assert_eq!(q.lookup_partial(42, b, 1), Some(p));
+        assert_eq!(q.lookup_partial(42, b, 2), None, "epoch bump misses");
+        assert_eq!(q.lookup_partial(43, b, 1), None, "other query misses");
+        assert_eq!(q.stats().hits_partial, 1);
+    }
+
+    #[test]
+    fn flush_clears_results_but_not_inflight() {
+        let q = QCache::new(QCacheConfig::default());
+        q.insert_full(1, result(8, 1.0));
+        q.insert_partial(
+            2,
+            BrickId::new(1, 0),
+            1,
+            PartialResult {
+                histogram: vec![0.0; 8],
+                events_in: 1,
+                events_selected: 0,
+                result_bytes: 0,
+            },
+        );
+        assert_eq!(q.attach(9, 500), Attach::Primary);
+        assert_eq!(q.flush(), 2);
+        let s = q.stats();
+        assert_eq!((s.full_entries, s.partial_entries), (0, 0));
+        assert_eq!(s.bytes, 0);
+        assert_eq!(s.inflight, 1, "running jobs still settle");
+        assert_eq!(q.take_subscribers(9, 500), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn metrics_mirror() {
+        let q = QCache::new(QCacheConfig::default());
+        let m = Arc::new(Registry::new());
+        q.set_metrics(m.clone());
+        q.insert_full(1, result(8, 1.0));
+        let _ = q.lookup_full(1);
+        let _ = q.attach(1, 10);
+        let _ = q.attach(1, 11);
+        assert_eq!(m.counter("qcache.hits_full").get(), 1);
+        assert_eq!(m.counter("qcache.shared_jobs").get(), 1);
+        assert!(m.gauge("qcache.bytes").get() > 0);
+    }
+}

@@ -108,6 +108,33 @@ fn full_user_journey() {
     let text = String::from_utf8(body).unwrap();
     assert!(text.contains("jse.jobs_done"), "{text}");
 
+    // qcache surfaces: the finished job leaves a full-result entry
+    // (poll briefly — the catalogue flips DONE an instant before the
+    // broker publishes the entry); flushing then drops it
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let cache = loop {
+        let (status, cache) = get_json(&addr, "/cache");
+        assert_eq!(status, 200);
+        if cache.get("full_entries").unwrap().as_u64().unwrap() >= 1 {
+            break cache;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "full-result entry never published: {cache}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(cache.get("enabled").unwrap().as_bool(), Some(true));
+    let (status, flushed) = {
+        let (s, b) =
+            http::request(&addr, "POST", "/cache/flush", None).unwrap();
+        (s, Json::parse(std::str::from_utf8(&b).unwrap()).unwrap())
+    };
+    assert_eq!(status, 200);
+    assert!(flushed.get("flushed").unwrap().as_u64().unwrap() >= 1);
+    let (_, cache) = get_json(&addr, "/cache");
+    assert_eq!(cache.get("full_entries").unwrap().as_u64(), Some(0));
+
     Arc::try_unwrap(cluster).ok().map(|c| c.shutdown());
 }
 

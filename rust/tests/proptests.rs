@@ -579,3 +579,190 @@ fn prop_placement_is_stable_and_balanced() {
         assert!(seen.len() * 2 >= n_nodes, "{}/{n_nodes}", seen.len());
     });
 }
+
+// ---- qcache canonicalizer ----------------------------------------------
+
+/// Random well-typed numeric expression over the real feature set.
+fn random_num_expr(rng: &mut Rng, depth: usize) -> geps::filterexpr::Expr {
+    use geps::filterexpr::ast::Func;
+    use geps::filterexpr::{BinOp, Expr, UnOp};
+    if depth == 0 || rng.chance(0.3) {
+        return if rng.chance(0.5) {
+            Expr::Feature(
+                rng.index(geps::events::NUM_FEATURES) as u16,
+            )
+        } else {
+            // mostly small integers (realistic cuts), some fractions
+            let v = if rng.chance(0.7) {
+                rng.range_u64(0, 200) as f64
+            } else {
+                rng.range_f64(-50.0, 150.0)
+            };
+            Expr::Num(v)
+        };
+    }
+    match rng.index(4) {
+        0 => Expr::Un(
+            UnOp::Neg,
+            Box::new(random_num_expr(rng, depth - 1)),
+        ),
+        1 => {
+            let op = [
+                BinOp::Add,
+                BinOp::Sub,
+                BinOp::Mul,
+                BinOp::Div,
+            ][rng.index(4)];
+            Expr::Bin(
+                op,
+                Box::new(random_num_expr(rng, depth - 1)),
+                Box::new(random_num_expr(rng, depth - 1)),
+            )
+        }
+        2 => {
+            let f = [Func::Abs, Func::Sqrt][rng.index(2)];
+            Expr::Call(f, vec![random_num_expr(rng, depth - 1)])
+        }
+        _ => {
+            let f = [Func::Min, Func::Max][rng.index(2)];
+            Expr::Call(
+                f,
+                vec![
+                    random_num_expr(rng, depth - 1),
+                    random_num_expr(rng, depth - 1),
+                ],
+            )
+        }
+    }
+}
+
+/// Random well-typed boolean expression (a valid filter).
+fn random_bool_expr(rng: &mut Rng, depth: usize) -> geps::filterexpr::Expr {
+    use geps::filterexpr::{BinOp, Expr, UnOp};
+    if depth == 0 || rng.chance(0.25) {
+        if rng.chance(0.1) {
+            return Expr::Bool(rng.chance(0.5));
+        }
+        let op = [
+            BinOp::Lt,
+            BinOp::Le,
+            BinOp::Gt,
+            BinOp::Ge,
+            BinOp::Eq,
+            BinOp::Ne,
+        ][rng.index(6)];
+        return Expr::Bin(
+            op,
+            Box::new(random_num_expr(rng, 2)),
+            Box::new(random_num_expr(rng, 2)),
+        );
+    }
+    match rng.index(3) {
+        0 => Expr::Un(
+            UnOp::Not,
+            Box::new(random_bool_expr(rng, depth - 1)),
+        ),
+        _ => {
+            let op =
+                if rng.chance(0.5) { BinOp::And } else { BinOp::Or };
+            Expr::Bin(
+                op,
+                Box::new(random_bool_expr(rng, depth - 1)),
+                Box::new(random_bool_expr(rng, depth - 1)),
+            )
+        }
+    }
+}
+
+fn expr_has_nonfinite_literal(e: &geps::filterexpr::Expr) -> bool {
+    use geps::filterexpr::Expr;
+    match e {
+        Expr::Num(n) => !n.is_finite(),
+        Expr::Bool(_) | Expr::Feature(_) => false,
+        Expr::Un(_, a) => expr_has_nonfinite_literal(a),
+        Expr::Bin(_, a, b) => {
+            expr_has_nonfinite_literal(a) || expr_has_nonfinite_literal(b)
+        }
+        Expr::Call(_, args) => {
+            args.iter().any(expr_has_nonfinite_literal)
+        }
+    }
+}
+
+/// The qcache canonicalizer must never change semantics: canonical and
+/// original forms produce bit-identical accept sets over random
+/// columnar feature pages, under BOTH evaluators (tree walk and
+/// vectorized bytecode).
+#[test]
+fn prop_canonicalizer_preserves_accept_sets() {
+    use geps::events::NUM_FEATURES;
+    use geps::filterexpr::{canonicalize, CompiledFilter};
+    forall("canonicalizer-semantics", 150, |rng| {
+        let orig = random_bool_expr(rng, 4);
+        let canon = canonicalize(&orig);
+        let f0 = CompiledFilter::new(orig.clone())
+            .expect("generated expr typechecks");
+        let f1 = CompiledFilter::new(canon.clone())
+            .expect("canonical form still typechecks");
+        let n = 1 + rng.index(200);
+        let feats: Vec<f32> = (0..n * NUM_FEATURES)
+            .map(|_| {
+                if rng.chance(0.2) {
+                    0.0 // division-by-zero rows
+                } else if rng.chance(0.05) {
+                    -0.0 // signed-zero rows
+                } else {
+                    (rng.f32() * 250.0) - 50.0
+                }
+            })
+            .collect();
+        // bytecode path (what nodes run)
+        assert_eq!(
+            f0.accept_batch(&feats, n),
+            f1.accept_batch(&feats, n),
+            "bytecode accept sets diverged",
+        );
+        // tree-walk oracle
+        assert_eq!(
+            f0.accept_batch_treewalk(&feats, n),
+            f1.accept_batch_treewalk(&feats, n),
+            "tree-walk accept sets diverged",
+        );
+    });
+}
+
+/// Fingerprint stability: canonicalization is idempotent, and the
+/// pretty-printed canonical form re-parses + re-canonicalizes to the
+/// same byte encoding (hence the same query fingerprint).
+#[test]
+fn prop_canonical_fingerprints_stable_across_reparse() {
+    use geps::filterexpr::{
+        canonicalize, encode_canonical, parse, pretty,
+    };
+    forall("canonicalizer-fingerprint-stability", 150, |rng| {
+        let orig = random_bool_expr(rng, 4);
+        let canon = canonicalize(&orig);
+        // idempotent
+        assert_eq!(
+            encode_canonical(&canon),
+            encode_canonical(&canonicalize(&canon)),
+            "canonicalization not idempotent",
+        );
+        // pretty -> parse -> canonicalize round trip. Non-finite
+        // literals (a folded 1/0) have no exact-bit source form; the
+        // round trip guarantees values, not NaN payloads, so skip those
+        // rare cases here (encode() distinguishes them on purpose).
+        if expr_has_nonfinite_literal(&canon) {
+            return;
+        }
+        let src = pretty(&canon);
+        let reparsed = parse(&src).unwrap_or_else(|e| {
+            panic!("pretty output failed to parse: {e}\n  src: {src}")
+        });
+        assert_eq!(
+            encode_canonical(&canon),
+            encode_canonical(&canonicalize(&reparsed)),
+            "fingerprint drifted across pretty/reparse: {src}",
+        );
+    });
+}

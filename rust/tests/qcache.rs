@@ -1,0 +1,468 @@
+//! qcache correctness suite — the invalidation and bit-identity
+//! contract of the query-result cache (see `geps::qcache`):
+//!
+//! - a warm full-result hit is served at admission, dispatches zero
+//!   tasks, and is bit-identical to the cold recompute (canonically
+//!   equal filters written differently share one entry);
+//! - an in-flight twin attaches as a subscriber and receives the same
+//!   bit-identical merge; cancelling the primary promotes a subscriber
+//!   to recompute; failing the primary fails its subscribers;
+//! - a content-epoch bump invalidates exactly the affected brick:
+//!   partial memoization recomputes that brick only, still
+//!   bit-identical to cold;
+//! - on the LIVE cluster: membership churn (kill + join + rebalance)
+//!   leaves entries valid — a resubmission after the churn is a full
+//!   hit with no tasks dispatched.
+//!
+//! The JSE-level tests drive `Jse` directly over deterministic fake
+//! nodes (no kernel runtime needed); the churn test runs the real
+//! cluster behind the usual runtime gate.
+
+use geps::brick::BrickId;
+use geps::catalog::{Catalog, JobStatus};
+use geps::jse::{Jse, JseConfig};
+use geps::metrics::Registry;
+use geps::qcache::{QCache, QCacheConfig};
+use geps::wire::Message;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+struct StopOnExit(Arc<std::sync::atomic::AtomicBool>);
+impl Drop for StopOnExit {
+    fn drop(&mut self) {
+        self.0.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+/// A deterministic fake node: heartbeat beacon + task executor that
+/// waits `delay` and answers TaskDone with 10% selectivity and a
+/// brick-dependent 8-bin histogram, so merged results are meaningful
+/// to compare bit-for-bit across runs.
+fn fake_node(
+    name: &str,
+    out: Sender<Message>,
+    delay: Duration,
+) -> (Sender<Message>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<Message>();
+    let beat_name = name.to_string();
+    let beat_out = out.clone();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = stop.clone();
+    std::thread::spawn(move || {
+        while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+            if beat_out
+                .send(Message::Heartbeat {
+                    node: beat_name.clone(),
+                    free_slots: 1,
+                })
+                .is_err()
+            {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+    let j = std::thread::spawn(move || {
+        let _stop_on_exit = StopOnExit(stop);
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                Message::SubmitTask { job, task, .. } => {
+                    std::thread::sleep(delay);
+                    let n = task.n_events() as u64;
+                    let hist: Vec<u8> = (0..8)
+                        .flat_map(|i| {
+                            // brick- and bin-dependent integer counts
+                            ((task.brick.seq + i + 1) as f32).to_le_bytes()
+                        })
+                        .collect();
+                    let _ = out.send(Message::TaskDone {
+                        job,
+                        brick: task.brick,
+                        range: task.range,
+                        events_in: n,
+                        events_selected: n / 10,
+                        result_bytes: n * 100,
+                        histogram: hist,
+                    });
+                }
+                Message::Shutdown => return,
+                _ => {}
+            }
+        }
+    });
+    (tx, j)
+}
+
+fn catalog_with(dataset: u32, bricks: u32, node: &str) -> Catalog {
+    let mut cat = Catalog::new();
+    cat.register_node(node, 1.0, 1);
+    for i in 0..bricks {
+        cat.insert_brick(
+            BrickId::new(dataset, i),
+            100,
+            100 << 20,
+            vec![node.to_string()],
+        );
+    }
+    cat
+}
+
+struct Rig {
+    jse: Jse,
+    catalog: Arc<Mutex<Catalog>>,
+    metrics: Arc<Registry>,
+    qcache: Arc<QCache>,
+    node_tx: Sender<Message>,
+    node_join: std::thread::JoinHandle<()>,
+}
+
+/// One fake node "a" + a cache-enabled JSE over `bricks` bricks.
+fn rig(bricks: u32, max_jobs: usize, delay: Duration) -> Rig {
+    let (out_tx, out_rx) = mpsc::channel();
+    let (node_tx, node_join) = fake_node("a", out_tx, delay);
+    let catalog =
+        Arc::new(Mutex::new(catalog_with(1, bricks, "a")));
+    let nodes: BTreeMap<String, Sender<Message>> =
+        [("a".to_string(), node_tx.clone())].into();
+    let cfg = JseConfig {
+        max_concurrent_jobs: max_jobs,
+        ..Default::default()
+    };
+    let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
+    let metrics = Arc::new(Registry::new());
+    jse.set_metrics(metrics.clone());
+    let qcache = Arc::new(QCache::new(QCacheConfig::default()));
+    jse.set_qcache(qcache.clone());
+    Rig { jse, catalog, metrics, qcache, node_tx, node_join }
+}
+
+impl Rig {
+    fn submit(&self, filter: &str) -> u64 {
+        self.catalog
+            .lock()
+            .unwrap()
+            .submit_job(1, filter, "locality")
+    }
+
+    fn results_by_node(&self, job: u64) -> BTreeMap<String, usize> {
+        let cat = self.catalog.lock().unwrap();
+        let mut by: BTreeMap<String, usize> = BTreeMap::new();
+        for r in cat.job_results(job) {
+            *by.entry(r.node.clone()).or_insert(0) += 1;
+        }
+        by
+    }
+
+    fn shutdown(self) {
+        let _ = self.node_tx.send(Message::Shutdown);
+        self.node_join.join().unwrap();
+    }
+}
+
+fn bits(h: &[f32]) -> Vec<u32> {
+    h.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn warm_full_hit_is_bit_identical_and_task_free() {
+    let mut r = rig(4, 1, Duration::from_millis(0));
+
+    let j1 = r.submit("met > 30 && n_tracks >= 2");
+    let cold = r.jse.run_job(j1);
+    assert_eq!(cold.status, JobStatus::Done, "{:?}", cold.error);
+    assert_eq!(cold.events_in, 400);
+    assert_eq!(r.results_by_node(j1).get("a"), Some(&4));
+
+    // same selection, written differently: canonicalization must land
+    // on the same fingerprint and serve the cached merge
+    let j2 = r.submit("n_tracks>=2 && met   > 30");
+    let warm = r.jse.run_job(j2);
+    assert_eq!(warm.status, JobStatus::Done, "{:?}", warm.error);
+    assert_eq!(warm.events_in, cold.events_in);
+    assert_eq!(warm.events_selected, cold.events_selected);
+    assert_eq!(bits(&warm.histogram), bits(&cold.histogram));
+    assert!(
+        r.results_by_node(j2).is_empty(),
+        "a full hit must dispatch zero tasks"
+    );
+    assert_eq!(r.metrics.counter("qcache.hits_full").get(), 1);
+    {
+        let cat = r.catalog.lock().unwrap();
+        let row = cat.jobs.get(j2).unwrap();
+        assert_eq!(row.status, JobStatus::Done);
+        assert_eq!(row.events_processed, 400);
+    }
+
+    // a DIFFERENT selection must miss and recompute
+    let j3 = r.submit("met > 31");
+    let other = r.jse.run_job(j3);
+    assert_eq!(other.status, JobStatus::Done);
+    assert_eq!(r.results_by_node(j3).get("a"), Some(&4));
+
+    let s = r.qcache.stats();
+    assert!(s.full_entries >= 2);
+    assert!(s.bytes > 0);
+    r.shutdown();
+}
+
+#[test]
+fn epoch_bump_invalidates_exactly_the_affected_brick() {
+    let mut r = rig(4, 1, Duration::from_millis(0));
+
+    let j1 = r.submit("max_pt > 15");
+    let cold = r.jse.run_job(j1);
+    assert_eq!(cold.status, JobStatus::Done, "{:?}", cold.error);
+
+    // brick (1,1)'s DATA changes; the other three epochs are untouched
+    r.catalog
+        .lock()
+        .unwrap()
+        .bump_content_epoch(BrickId::new(1, 1))
+        .expect("brick exists");
+
+    let j2 = r.submit("max_pt > 15");
+    let warm = r.jse.run_job(j2);
+    assert_eq!(warm.status, JobStatus::Done, "{:?}", warm.error);
+    // bit-identical to cold even though 3 of 4 bricks were memoized
+    // (the fake node's histograms are integer counts, and the real
+    // cluster's are too — merge order cannot perturb them)
+    assert_eq!(bits(&warm.histogram), bits(&cold.histogram));
+    assert_eq!(warm.events_in, cold.events_in);
+    let by = r.results_by_node(j2);
+    assert_eq!(by.get("qcache"), Some(&3), "3 bricks memoized: {by:?}");
+    assert_eq!(by.get("a"), Some(&1), "exactly the bumped brick reran");
+    assert_eq!(r.metrics.counter("qcache.hits_partial").get(), 3);
+    assert_eq!(
+        r.metrics.counter("qcache.hits_full").get(),
+        0,
+        "full key changed with the epoch"
+    );
+
+    // the repeat of the repeat is a full hit again
+    let j3 = r.submit("max_pt > 15");
+    let hot = r.jse.run_job(j3);
+    assert_eq!(bits(&hot.histogram), bits(&cold.histogram));
+    assert_eq!(r.metrics.counter("qcache.hits_full").get(), 1);
+    r.shutdown();
+}
+
+#[test]
+fn inflight_twin_attaches_and_gets_the_same_merge() {
+    let mut r = rig(4, 4, Duration::from_millis(10));
+
+    let j1 = r.submit("sum_pt > 50");
+    let j2 = r.submit("sum_pt   > 50"); // same selection, same window
+    r.jse.enqueue(j1);
+    r.jse.enqueue(j2);
+    let outcomes = r.jse.run_until_idle();
+    assert_eq!(outcomes.len(), 2);
+    let o1 = outcomes.iter().find(|o| o.job == j1).unwrap();
+    let o2 = outcomes.iter().find(|o| o.job == j2).unwrap();
+    assert_eq!(o1.status, JobStatus::Done, "{:?}", o1.error);
+    assert_eq!(o2.status, JobStatus::Done, "{:?}", o2.error);
+    assert_eq!(bits(&o1.histogram), bits(&o2.histogram));
+    assert_eq!(o2.events_in, 400);
+    assert!(
+        r.results_by_node(j2).is_empty(),
+        "the subscriber must not dispatch tasks"
+    );
+    assert_eq!(r.metrics.counter("qcache.shared_jobs").get(), 1);
+    {
+        let cat = r.catalog.lock().unwrap();
+        assert_eq!(cat.jobs.get(j2).unwrap().status, JobStatus::Done);
+        assert_eq!(cat.jobs.get(j2).unwrap().events_processed, 400);
+    }
+    r.shutdown();
+}
+
+#[test]
+fn cancelling_the_primary_promotes_a_subscriber() {
+    let mut r = rig(4, 4, Duration::from_millis(15));
+
+    let j1 = r.submit("ht_frac < 0.5");
+    let j2 = r.submit("ht_frac < 0.5");
+    r.jse.enqueue(j1);
+    r.jse.enqueue(j2);
+    // one iteration: j1 becomes primary (tasks dispatched), j2 attaches
+    r.jse.step();
+    assert_eq!(r.jse.active_jobs(), 1, "only the primary holds a runner");
+    assert!(r.jse.cancel(j1), "primary cancels");
+
+    let outcomes = r.jse.run_until_idle();
+    let o1 = outcomes.iter().find(|o| o.job == j1).unwrap();
+    let o2 = outcomes.iter().find(|o| o.job == j2).unwrap();
+    assert_eq!(o1.status, JobStatus::Cancelled);
+    assert_eq!(o2.status, JobStatus::Done, "{:?}", o2.error);
+    assert_eq!(o2.events_in, 400, "promoted subscriber recomputed fully");
+    assert_eq!(r.metrics.counter("qcache.promotions").get(), 1);
+    {
+        let cat = r.catalog.lock().unwrap();
+        assert_eq!(cat.jobs.get(j1).unwrap().status, JobStatus::Cancelled);
+        assert_eq!(cat.jobs.get(j2).unwrap().status, JobStatus::Done);
+    }
+    r.shutdown();
+}
+
+#[test]
+fn failing_the_primary_fails_its_subscribers() {
+    let mut r = rig(4, 4, Duration::from_millis(15));
+
+    let j1 = r.submit("met > 5");
+    let j2 = r.submit("met > 5");
+    r.jse.enqueue(j1);
+    r.jse.enqueue(j2);
+    r.jse.step();
+    assert!(r.jse.fail_job(j1, "brick d1.b0 unrecoverable"));
+
+    let outcomes = r.jse.run_until_idle();
+    let o1 = outcomes.iter().find(|o| o.job == j1).unwrap();
+    let o2 = outcomes.iter().find(|o| o.job == j2).unwrap();
+    assert_eq!(o1.status, JobStatus::Failed);
+    assert_eq!(o2.status, JobStatus::Failed);
+    assert!(
+        o2.error.as_deref().unwrap().contains("shared primary failed"),
+        "{:?}",
+        o2.error
+    );
+    {
+        let cat = r.catalog.lock().unwrap();
+        assert!(cat
+            .jobs
+            .get(j2)
+            .unwrap()
+            .error
+            .as_deref()
+            .unwrap()
+            .contains("unrecoverable"));
+    }
+    r.shutdown();
+}
+
+#[test]
+fn flush_forces_recompute() {
+    let mut r = rig(2, 1, Duration::from_millis(0));
+    let j1 = r.submit("met > 9");
+    let cold = r.jse.run_job(j1);
+    assert_eq!(cold.status, JobStatus::Done);
+    assert!(r.qcache.flush() >= 1);
+    let j2 = r.submit("met > 9");
+    let warm = r.jse.run_job(j2);
+    assert_eq!(warm.status, JobStatus::Done);
+    assert_eq!(bits(&warm.histogram), bits(&cold.histogram));
+    assert_eq!(
+        r.results_by_node(j2).get("a"),
+        Some(&2),
+        "flushed cache must recompute"
+    );
+    r.shutdown();
+}
+
+// ---- live-cluster churn test (runtime-gated) ---------------------------
+
+#[test]
+fn membership_churn_preserves_cache_entries() {
+    if !geps::runtime::gate("qcache") {
+        return;
+    }
+    use geps::cluster::ClusterHandle;
+    use geps::config::{ClusterConfig, NodeSpec};
+
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = (0..3)
+        .map(|i| NodeSpec {
+            name: format!("node{i}"),
+            speed: 1.0,
+            slots: 1,
+        })
+        .collect();
+    cfg.replication = 2;
+    cfg.n_events = 600;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 1000.0;
+    cfg.max_concurrent_jobs = 4;
+    let cluster = ClusterHandle::start(
+        cfg,
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+
+    // the catalogue flips DONE an instant before the broker publishes
+    // the merged histogram; poll the tiny window out
+    let histogram_of = |cluster: &ClusterHandle, job: u64| -> Vec<f32> {
+        let deadline =
+            std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(h) = cluster.histogram(job) {
+                return h;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "histogram never published for job {job}"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+
+    let filter = "max_pair_mass > 80 && max_pair_mass < 100";
+    let j1 = cluster.try_submit(filter, "locality").unwrap();
+    assert_eq!(
+        cluster.wait(j1, Duration::from_secs(180)).unwrap(),
+        JobStatus::Done
+    );
+    let cold = histogram_of(&cluster, j1);
+
+    // churn: lose a node (failover + re-replication rewrite holder
+    // lists), then join a replacement (rebalancer rewrites them again).
+    // None of that touches brick CONTENT epochs.
+    assert!(cluster.kill_node("node2"));
+    cluster.add_node("node3", 1.0, 1).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let moved = cluster
+            .metrics
+            .counter("ft.bricks_rebalanced")
+            .get();
+        if moved >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rebalancer never moved a brick to node3"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let hits_before = cluster.metrics.counter("qcache.hits_full").get();
+    let j2 = cluster.try_submit(filter, "locality").unwrap();
+    assert_eq!(
+        cluster.wait(j2, Duration::from_secs(180)).unwrap(),
+        JobStatus::Done
+    );
+    let warm = histogram_of(&cluster, j2);
+    assert_eq!(
+        cluster.metrics.counter("qcache.hits_full").get(),
+        hits_before + 1,
+        "churn must not evict entries whose content epochs are unchanged"
+    );
+    assert_eq!(
+        warm.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        cold.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "cached result must be bit-identical to the cold merge"
+    );
+    {
+        let cat = cluster.catalog.lock().unwrap();
+        assert!(
+            cat.job_results(j2).is_empty(),
+            "the warm hit must not have dispatched tasks"
+        );
+        assert_eq!(cat.jobs.get(j2).unwrap().events_processed, 600);
+    }
+
+    // the validated submission path rejects junk with a typed error
+    assert!(cluster.try_submit("met >>> oops", "locality").is_err());
+    assert!(cluster.try_submit("met > 1", "bogus-policy").is_err());
+
+    cluster.shutdown();
+}
