@@ -11,6 +11,7 @@
 use geps::cluster::ClusterHandle;
 use geps::config::ClusterConfig;
 use geps::util::bench::print_table;
+use geps::util::json::Json;
 use std::time::{Duration, Instant};
 
 const JOBS: usize = 8;
@@ -24,8 +25,12 @@ const FILTERS: [&str; 5] = [
 ];
 
 fn main() -> anyhow::Result<()> {
+    // every node executor in this bench runs this many pipelines per
+    // task (the `[node] pipelines` knob at its auto default)
+    let pipelines = ClusterConfig::default().effective_pipelines();
     let mut rows = Vec::new();
     let mut walls = Vec::new();
+    let mut depths = Vec::new();
     for max_jobs in [1usize, 2, 4, 8] {
         let mut cfg = ClusterConfig::default();
         cfg.n_events = 512;
@@ -83,6 +88,13 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}%", idle_frac * 100.0),
         ]);
         walls.push(wall);
+        depths.push(
+            Json::obj()
+                .set("max_concurrent_jobs", max_jobs)
+                .set("wall_s", wall)
+                .set("jobs_per_sec", JOBS as f64 / wall)
+                .set("node_idle_frac", idle_frac),
+        );
     }
     print_table(
         "Ext-F: 8-job batch vs JSE concurrency (512-event jobs, mixed filters)",
@@ -100,5 +112,20 @@ fn main() -> anyhow::Result<()> {
         "speedup at depth 4: {:.2}x over the sequential broker",
         walls[0] / walls[2]
     );
+
+    let doc = Json::obj()
+        .set("bench", "ext_multijob")
+        .set("generated", true)
+        .set("jobs", JOBS)
+        .set("node_pipelines", pipelines)
+        .set("depths", Json::Arr(depths))
+        .set("speedup_depth4_over_sequential", walls[0] / walls[2]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_ext_multijob.json");
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
     Ok(())
 }

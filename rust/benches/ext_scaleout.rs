@@ -10,6 +10,7 @@
 use geps::cluster::ClusterHandle;
 use geps::config::{ClusterConfig, NodeSpec};
 use geps::util::bench::print_table;
+use geps::util::json::Json;
 use std::time::{Duration, Instant};
 
 const JOBS: usize = 6;
@@ -55,6 +56,9 @@ fn main() -> anyhow::Result<()> {
     // scale-out, so qcache full-result reuse must not short-circuit it
     // (the cache lever has its own bench, ext_qcache)
     cfg.qcache_enabled = false;
+    // every node executor (including the live-joined one) runs this
+    // many pipelines per task (the `[node] pipelines` knob, auto here)
+    let pipelines = cfg.effective_pipelines();
     let cluster = ClusterHandle::start(
         cfg,
         geps::runtime::default_artifacts_dir(),
@@ -121,5 +125,35 @@ fn main() -> anyhow::Result<()> {
         "scale-out speedup: {:.2}x from one joined node",
         wall_before / wall_after
     );
+
+    let doc = Json::obj()
+        .set("bench", "ext_scaleout")
+        .set("generated", true)
+        .set("jobs", JOBS)
+        .set("node_pipelines", pipelines)
+        .set(
+            "before",
+            Json::obj()
+                .set("nodes", 3)
+                .set("wall_s", wall_before)
+                .set("jobs_per_sec", JOBS as f64 / wall_before),
+        )
+        .set(
+            "after",
+            Json::obj()
+                .set("nodes", 4)
+                .set("wall_s", wall_after)
+                .set("jobs_per_sec", JOBS as f64 / wall_after),
+        )
+        .set("join_to_rebalanced_s", join_s)
+        .set("bricks_rebalanced", rebalanced)
+        .set("speedup", wall_before / wall_after);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_ext_scaleout.json");
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -13,6 +13,7 @@
 use geps::cluster::ClusterHandle;
 use geps::config::ClusterConfig;
 use geps::util::bench::print_table;
+use geps::util::json::Json;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
@@ -25,6 +26,9 @@ fn main() -> anyhow::Result<()> {
     // repeated filters must really recompute: this measures broker
     // latency, not cache hits (qcache has its own bench, ext_qcache)
     cfg.qcache_enabled = false;
+    // every node executor runs this many pipelines per task (the
+    // `[node] pipelines` knob at its auto default)
+    let pipelines = cfg.effective_pipelines();
     let cluster =
         ClusterHandle::start(cfg, geps::runtime::default_artifacts_dir())?;
 
@@ -37,6 +41,7 @@ fn main() -> anyhow::Result<()> {
     ];
 
     let mut rows = Vec::new();
+    let mut depths = Vec::new();
     for depth in [1usize, 4, 8, 16] {
         let t0 = Instant::now();
         let jobs: Vec<(u64, Instant)> = (0..depth)
@@ -64,6 +69,14 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", p(0.5)),
             format!("{:.2}", p(0.99)),
         ]);
+        depths.push(
+            Json::obj()
+                .set("queue_depth", depth)
+                .set("wall_s", wall)
+                .set("jobs_per_sec", depth as f64 / wall)
+                .set("p50_latency_s", p(0.5))
+                .set("p99_latency_s", p(0.99)),
+        );
     }
     print_table(
         "Ext-E: live cluster, 512-event jobs, mixed filters (sequential 2003 broker)",
@@ -81,5 +94,18 @@ fn main() -> anyhow::Result<()> {
     }
     drop(cat);
     cluster.shutdown();
+
+    let doc = Json::obj()
+        .set("bench", "ext_workload")
+        .set("generated", true)
+        .set("node_pipelines", pipelines)
+        .set("depths", Json::Arr(depths));
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_ext_workload.json");
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -241,7 +241,7 @@ fn main() {
         s,
     );
 
-    // filter: recursive tree walk vs postfix bytecode
+    // filter: recursive tree walk vs scalar bytecode vs SIMD bitmask VM
     let s = bench(100, scale(5000), || {
         std::hint::black_box(
             filter.accept_batch_treewalk(&feats, HOT_BATCH).len(),
@@ -257,12 +257,35 @@ fn main() {
     let mut scratch = filterexpr::VmScratch::new();
     let mut mask = Vec::new();
     let s = bench(100, scale(5000), || {
-        filter.accept_batch_into(&feats, HOT_BATCH, &mut scratch, &mut mask);
+        filter.accept_batch_into_scalar(
+            &feats,
+            HOT_BATCH,
+            &mut scratch,
+            &mut mask,
+        );
         std::hint::black_box(mask.len());
     });
     push(
-        "filter bytecode, 256-event batch",
+        "filter scalar bytecode, 256-event batch",
         Some("filter_bytecode"),
+        "events",
+        HOT_BATCH as f64,
+        s,
+    );
+    let mut scratch = filterexpr::VmScratch::new();
+    let mut bits: Vec<u64> = Vec::new();
+    let s = bench(100, scale(5000), || {
+        filter.accept_batch_bits_into(
+            &feats,
+            HOT_BATCH,
+            &mut scratch,
+            &mut bits,
+        );
+        std::hint::black_box(bits.len());
+    });
+    push(
+        "filter SIMD bitmask VM, 256-event batch",
+        Some("filter_simd"),
         "events",
         HOT_BATCH as f64,
         s,
@@ -440,9 +463,37 @@ fn main() {
     );
     pool.shutdown();
 
+    // multi-pipeline executor shape: N workers steal pages from a shared
+    // cursor, each with one kernel in flight, drained strictly in page
+    // order — exactly what `node/executor.rs` runs per task
+    let pipelines = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .max(2);
+    let mpool = EnginePool::start(
+        geps::runtime::default_artifacts_dir(),
+        pipelines,
+    )
+    .expect("pool starts hermetically");
+    let s = bench(3, scale(20), || {
+        let (accepted, hist) =
+            multipipeline_pass(&v2.bytes, &mpool, &filter, calib, pipelines);
+        std::hint::black_box((accepted, hist.len()));
+    });
+    push(
+        &format!(
+            "engine multi-pipeline (x{pipelines}) 2000 ev ({backend})"
+        ),
+        Some("engine_multipipeline"),
+        "events",
+        HOT_EVENTS as f64,
+        s,
+    );
+
     // bit-identity checks backing the JSON claims: v1 and v2 bricks must
-    // produce identical kernel batches, and both filter engines must
-    // produce identical accept masks
+    // produce identical kernel batches, all three filter evaluators must
+    // produce identical accept masks, and the multi-pipeline merge must
+    // reproduce the sequential histogram bit for bit
     let (_, rows_v1) = BrickFile::decode(&v1.bytes).unwrap();
     let (_, cols_v2) = BrickFile::decode_columnar(&v2.bytes).unwrap();
     let mut batches_identical = true;
@@ -454,10 +505,43 @@ fn main() {
         batches_identical &= a == b;
         start = end;
     }
-    let masks_identical = filter.accept_batch(&feats, HOT_BATCH)
-        == filter.accept_batch_treewalk(&feats, HOT_BATCH);
+    let vec_mask = filter.accept_batch(&feats, HOT_BATCH);
+    let masks_identical =
+        vec_mask == filter.accept_batch_treewalk(&feats, HOT_BATCH);
+    let simd_masks_identical = {
+        let mut scr = filterexpr::VmScratch::new();
+        let mut scalar = Vec::new();
+        filter.accept_batch_into_scalar(
+            &feats,
+            HOT_BATCH,
+            &mut scr,
+            &mut scalar,
+        );
+        let mut bits: Vec<u64> = Vec::new();
+        filter.accept_batch_bits_into(&feats, HOT_BATCH, &mut scr, &mut bits);
+        let expanded: Vec<bool> = (0..HOT_BATCH)
+            .map(|i| bits[i / 64] >> (i % 64) & 1 == 1)
+            .collect();
+        vec_mask == scalar && vec_mask == expanded
+    };
+    let (seq_accepted, seq_hist) =
+        sequential_pass(&v2.bytes, &engine, &filter, calib);
+    let (mp_accepted, mp_hist) =
+        multipipeline_pass(&v2.bytes, &mpool, &filter, calib, pipelines);
+    let mp_hist_identical = seq_accepted == mp_accepted
+        && seq_hist.len() == mp_hist.len()
+        && seq_hist
+            .iter()
+            .zip(&mp_hist)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    mpool.shutdown();
     assert!(batches_identical, "v1 and v2 kernel batches diverged");
     assert!(masks_identical, "bytecode and tree-walk masks diverged");
+    assert!(simd_masks_identical, "SIMD/scalar/tree-walk masks diverged");
+    assert!(
+        mp_hist_identical,
+        "multi-pipeline histogram diverged from the sequential merge"
+    );
 
     // brick encode/decode (LZSS) of 500 events
     let ev500 = &events[..500];
@@ -518,7 +602,166 @@ fn main() {
         &rows,
     );
 
-    write_json(smoke, backend, &results, batches_identical, masks_identical);
+    write_json(
+        smoke,
+        backend,
+        &results,
+        pipelines,
+        BitIdentity {
+            v1_v2_kernel_batches: batches_identical,
+            treewalk_bytecode_masks: masks_identical,
+            simd_scalar_treewalk_masks: simd_masks_identical,
+            multipipeline_histogram: mp_hist_identical,
+        },
+    );
+}
+
+/// One sequential decode→pack→kernel→filter→histogram pass over the v2
+/// brick — the baseline the multi-pipeline merge must reproduce bit for
+/// bit.
+fn sequential_pass(
+    bytes: &[u8],
+    engine: &Engine,
+    filter: &filterexpr::CompiledFilter,
+    calib: [f32; 16],
+) -> (usize, Vec<f32>) {
+    let (_, c) = BrickFile::decode_columnar(bytes).unwrap();
+    let mut scratch = filterexpr::VmScratch::new();
+    let mut mask = Vec::new();
+    let mut hist: Vec<f32> = Vec::new();
+    let mut accepted = 0usize;
+    let mut start = 0;
+    while start < c.len() {
+        let end = (start + HOT_BATCH).min(c.len());
+        let batch = c.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+        let feats = engine.features(&batch, &calib).unwrap();
+        filter.accept_batch_into(
+            &feats.data,
+            feats.n_real,
+            &mut scratch,
+            &mut mask,
+        );
+        let mut sel = vec![0f32; HOT_BATCH];
+        for (i, &keep) in mask.iter().enumerate() {
+            if keep {
+                sel[i] = 1.0;
+                accepted += 1;
+            }
+        }
+        let h = engine.histogram(&feats, &sel).unwrap();
+        merge_into(&mut hist, h);
+        start = end;
+    }
+    (accepted, hist)
+}
+
+/// One multi-pipeline pass over the v2 brick: `pipelines` scoped workers
+/// steal page indices from a shared cursor (one kernel in flight each);
+/// a strict-ordered drain merges histograms in exact page order — the
+/// bench-local mirror of the node executor's task loop.
+fn multipipeline_pass(
+    bytes: &[u8],
+    pool: &EnginePool,
+    filter: &filterexpr::CompiledFilter,
+    calib: [f32; 16],
+    pipelines: usize,
+) -> (usize, Vec<f32>) {
+    let (_, c) = BrickFile::decode_columnar(bytes).unwrap();
+    let n = c.len();
+    let n_pages = n.div_ceil(HOT_BATCH);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, usize, Vec<f32>)>();
+    let mut accepted = 0usize;
+    let mut hist: Vec<f32> = Vec::new();
+    std::thread::scope(|s| {
+        let next = &next;
+        let c = &c;
+        for _ in 0..pipelines {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut scratch = filterexpr::VmScratch::new();
+                let mut bits: Vec<u64> = Vec::new();
+                let mut pending: Option<(
+                    usize,
+                    Receiver<anyhow::Result<FeatureMatrix>>,
+                )> = None;
+                loop {
+                    let p = next
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if p >= n_pages {
+                        break;
+                    }
+                    let start = p * HOT_BATCH;
+                    let end = (start + HOT_BATCH).min(n);
+                    let batch =
+                        c.pack_range((start, end), HOT_BATCH, HOT_TRACKS);
+                    let rxf = pool.features_async(batch, calib).unwrap();
+                    if let Some((prev, prx)) = pending.replace((p, rxf)) {
+                        let (a, h) =
+                            finish_page(prx, pool, filter, &mut scratch, &mut bits);
+                        tx.send((prev, a, h)).unwrap();
+                    }
+                }
+                if let Some((prev, prx)) = pending.take() {
+                    let (a, h) =
+                        finish_page(prx, pool, filter, &mut scratch, &mut bits);
+                    tx.send((prev, a, h)).unwrap();
+                }
+            });
+        }
+        drop(tx);
+        let mut buffer: std::collections::BTreeMap<usize, (usize, Vec<f32>)> =
+            std::collections::BTreeMap::new();
+        for expect in 0..n_pages {
+            let (a, h) = loop {
+                if let Some(page) = buffer.remove(&expect) {
+                    break page;
+                }
+                let (idx, a, h) = rx.recv().expect("pipeline alive");
+                if idx == expect {
+                    break (a, h);
+                }
+                buffer.insert(idx, (a, h));
+            };
+            accepted += a;
+            merge_into(&mut hist, h);
+        }
+    });
+    (accepted, hist)
+}
+
+/// Complete one in-flight page on a bench pipeline: bitmask filter +
+/// histogram. Returns (accepted count, page histogram).
+fn finish_page(
+    rx: Receiver<anyhow::Result<FeatureMatrix>>,
+    pool: &EnginePool,
+    filter: &filterexpr::CompiledFilter,
+    scratch: &mut filterexpr::VmScratch,
+    bits: &mut Vec<u64>,
+) -> (usize, Vec<f32>) {
+    let feats = rx.recv().expect("engine worker alive").unwrap();
+    filter.accept_batch_bits_into(&feats.data, feats.n_real, scratch, bits);
+    let mut sel = vec![0f32; feats.batch];
+    let mut accepted = 0usize;
+    for (w, &word) in bits.iter().enumerate() {
+        let mut m = word;
+        while m != 0 {
+            let i = w * 64 + m.trailing_zeros() as usize;
+            sel[i] = 1.0;
+            accepted += 1;
+            m &= m - 1;
+        }
+    }
+    let h = pool.histogram(feats, sel).expect("histogram");
+    (accepted, h)
+}
+
+/// The bit-identity verdicts recorded in the JSON (CI gates on these).
+struct BitIdentity {
+    v1_v2_kernel_batches: bool,
+    treewalk_bytecode_masks: bool,
+    simd_scalar_treewalk_masks: bool,
+    multipipeline_histogram: bool,
 }
 
 /// Elementwise histogram merge into an accumulator (first merge adopts).
@@ -566,8 +809,8 @@ fn write_json(
     smoke: bool,
     backend: &str,
     results: &[(String, f64, f64)],
-    batches_identical: bool,
-    masks_identical: bool,
+    pipelines: usize,
+    identity: BitIdentity,
 ) {
     // speedups compare MEDIAN iteration times (robust against a single
     // noisy-neighbor spike in smoke mode, where iteration counts are low)
@@ -620,8 +863,16 @@ fn write_json(
                     ),
                 )
                 .set(
+                    "filter_simd",
+                    ratio("filter_simd", "filter_bytecode"),
+                )
+                .set(
                     "engine_pipelining",
                     ratio("engine_pipelined", "engine_end_to_end"),
+                )
+                .set(
+                    "engine_multipipeline",
+                    ratio("engine_multipipeline", "engine_end_to_end"),
                 ),
         )
         .set(
@@ -629,13 +880,25 @@ fn write_json(
             Json::obj()
                 .set("backend", backend)
                 .set("batch", HOT_BATCH)
-                .set("pool_workers", 2),
+                .set("pool_workers", 2)
+                .set("node_pipelines", pipelines),
         )
         .set(
             "bit_identical",
             Json::obj()
-                .set("v1_v2_kernel_batches", batches_identical)
-                .set("treewalk_bytecode_masks", masks_identical),
+                .set("v1_v2_kernel_batches", identity.v1_v2_kernel_batches)
+                .set(
+                    "treewalk_bytecode_masks",
+                    identity.treewalk_bytecode_masks,
+                )
+                .set(
+                    "simd_scalar_treewalk_masks",
+                    identity.simd_scalar_treewalk_masks,
+                )
+                .set(
+                    "multipipeline_histogram",
+                    identity.multipipeline_histogram,
+                ),
         );
 
     // repo root = parent of the crate dir (rust/)

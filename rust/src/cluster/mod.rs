@@ -83,8 +83,15 @@ impl ClusterHandle {
         let topology = config.topology();
         let gass =
             GassService::new(topology.clone(), config.time_scale, config.streams);
-        // one engine worker per node, min 1
-        let pool = EnginePool::start(artifacts, config.nodes.len().max(1))?;
+        // one engine worker per node pipeline, min 1 — the multi-pipeline
+        // executors submit kernel work concurrently, so the pool must be
+        // able to absorb it (capped so a large auto-detected core count
+        // cannot explode the thread count)
+        let pipelines = config.effective_pipelines();
+        let pool = EnginePool::start(
+            artifacts,
+            (config.nodes.len().max(1) * pipelines).min(32),
+        )?;
         // auto backend selection may have cross-checked XLA against the
         // pure-Rust reference on a canary batch; surface the deviation
         if let Some(ulps) = crate::runtime::backend_selfcheck_ulps() {
@@ -176,10 +183,12 @@ impl ClusterHandle {
                     speed: spec.speed,
                     heartbeat_s: 2.0,
                     time_scale: config.time_scale,
+                    pipelines,
                 },
                 gass.clone(),
                 pool.clone(),
                 out_tx.clone(),
+                metrics.clone(),
             );
             node_txs.insert(spec.name.clone(), handle.tx.clone());
             handles.insert(spec.name.clone(), handle);
@@ -475,10 +484,12 @@ impl ClusterHandle {
                 speed,
                 heartbeat_s: 2.0,
                 time_scale: self.config.time_scale,
+                pipelines: self.config.effective_pipelines(),
             },
             self.gass.clone(),
             self.pool.clone(),
             self.node_out_tx.clone(),
+            self.metrics.clone(),
         );
         let tx = handle.tx.clone();
         lock(&self.nodes).insert(name.to_string(), handle);

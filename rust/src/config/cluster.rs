@@ -22,6 +22,9 @@
 //! events_per_brick = 250
 //! seed = 42
 //!
+//! [node]
+//! pipelines = 0    # worker pipelines per node task; 0 = one per core
+//!
 //! [node.gandalf]
 //! speed = 0.8
 //! slots = 1
@@ -65,6 +68,13 @@ pub struct ClusterConfig {
     pub n_events: usize,
     pub events_per_brick: usize,
     pub seed: u64,
+    /// worker pipelines per node task (`[node] pipelines`): each node's
+    /// executor runs this many parallel pack→kernel→filter pipelines
+    /// over a shared page queue. `0` (the default) means "auto" — one
+    /// per available core, resolved by [`effective_pipelines`].
+    ///
+    /// [`effective_pipelines`]: ClusterConfig::effective_pipelines
+    pub pipelines: usize,
     pub nodes: Vec<NodeSpec>,
 }
 
@@ -84,6 +94,7 @@ impl Default for ClusterConfig {
             n_events: 2000,
             events_per_brick: 250,
             seed: 42,
+            pipelines: 0,
             nodes: vec![
                 NodeSpec { name: "gandalf".into(), speed: 0.8, slots: 1 },
                 NodeSpec { name: "hobbit".into(), speed: 1.0, slots: 1 },
@@ -191,6 +202,17 @@ impl ClusterConfig {
         if let Some(v) = doc.get("data", "seed").and_then(TomlValue::as_i64) {
             cfg.seed = v as u64;
         }
+        // the bare [node] section holds per-node runtime knobs; it is
+        // distinct from the [node.<name>] spec sections below
+        if let Some(v) = doc.get("node", "pipelines").and_then(TomlValue::as_i64)
+        {
+            if !(0..=256).contains(&v) {
+                return Err(ConfigError(
+                    "node pipelines must be in 0..=256 (0 = auto)".into(),
+                ));
+            }
+            cfg.pipelines = v as usize;
+        }
 
         for (name, kv) in doc.sections_under("node") {
             let node_name = name.strip_prefix("node.").unwrap().to_string();
@@ -223,6 +245,19 @@ impl ClusterConfig {
             ));
         }
         Ok(cfg)
+    }
+
+    /// Resolve `[node] pipelines` to the count the executors actually
+    /// run: the configured value, or one pipeline per available core
+    /// when set to `0` ("auto"). Always ≥ 1.
+    pub fn effective_pipelines(&self) -> usize {
+        if self.pipelines == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.pipelines
+        }
     }
 
     /// Build the netsim topology for this cluster.
@@ -285,6 +320,27 @@ mod tests {
     fn defaults_for_empty_config() {
         let cfg = ClusterConfig::parse("").unwrap();
         assert_eq!(cfg, ClusterConfig::default());
+    }
+
+    #[test]
+    fn node_pipelines_knob() {
+        // a bare [node] section carries runtime knobs and must not be
+        // mistaken for a [node.<name>] spec
+        let cfg = ClusterConfig::parse(
+            "[node]\npipelines = 3\n[node.a]\nspeed = 1.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.pipelines, 3);
+        assert_eq!(cfg.effective_pipelines(), 3);
+        assert_eq!(cfg.nodes.len(), 1);
+        assert_eq!(cfg.nodes[0].name, "a");
+        // 0 = auto: resolves to at least one pipeline
+        let auto = ClusterConfig::parse("[node]\npipelines = 0").unwrap();
+        assert_eq!(auto.pipelines, 0);
+        assert!(auto.effective_pipelines() >= 1);
+        // out of range rejected
+        assert!(ClusterConfig::parse("[node]\npipelines = -1").is_err());
+        assert!(ClusterConfig::parse("[node]\npipelines = 1000").is_err());
     }
 
     #[test]

@@ -1,29 +1,48 @@
-//! Flat postfix bytecode + column-at-a-time evaluation — the vectorized
-//! replacement for the per-event recursive AST walk on the node hot
-//! path.
+//! Flat postfix bytecode + vectorized evaluation — the SIMD filter VM
+//! on the node hot path.
 //!
 //! [`compile`] flattens a type-checked [`Expr`] into postfix [`Op`]s.
-//! [`Program::eval_into`] then evaluates the whole feature matrix
-//! column-at-a-time: every opcode runs **one tight loop** over its
-//! operand columns, and the value stack holds whole columns (`Vec<f64>`
-//! / `Vec<bool>`) that are recycled through [`VmScratch`] pools, so a
-//! steady-state page evaluates with **zero allocations**.
+//! Evaluation comes in three tiers, all required to produce
+//! **bit-identical accept sets**:
 //!
-//! Two deliberate semantics choices keep the accept set **bit-identical**
-//! to the tree-walk oracle (`CompiledFilter::accept`):
+//! 1. [`Program::eval_bits_into`] — the production path. Every opcode
+//!    runs one tight loop over fixed-width chunks of its operand
+//!    columns (explicit `std::simd` under `--features simd`, an
+//!    autovectorizable chunked scalar build on stable — see
+//!    [`lanes`]), and comparisons emit **bitmask words** (`u64`, one
+//!    bit per row) instead of `Vec<bool>`, so `&& || !` above them
+//!    collapse to word ops at 64 rows per instruction. Buffers are
+//!    recycled through [`VmScratch`] pools: a steady-state page
+//!    evaluates with zero allocations.
+//! 2. [`Program::eval_into_scalar`] — the PR-3 scalar column VM
+//!    (column-at-a-time loops, `Vec<bool>` booleans), retained
+//!    verbatim as the differential reference for the SIMD path.
+//! 3. The recursive tree walk (`CompiledFilter::accept`) — the
+//!    original per-event oracle both VMs are tested against.
 //!
-//! - Arithmetic runs in `f64`, exactly like the tree walk (constants are
-//!   `f64` literals; features are widened `f32 → f64`). An `f32` stack
-//!   would round differently against fractional cut constants.
-//! - `&&` / `||` are evaluated eagerly instead of short-circuited. That
-//!   is safe because operands are effect-free and every comparison
-//!   yields a plain `bool` even for NaN/∞ inputs (e.g. a division the
-//!   tree walk would have skipped), so the boolean AND/OR of both sides
-//!   equals the short-circuit result. Constant operands still fold:
-//!   `false && …` collapses without touching the column.
+//! Deliberate semantics choices keep all three bit-identical:
+//!
+//! - Arithmetic runs in `f64`, exactly like the tree walk (constants
+//!   are `f64` literals; features are widened `f32 → f64`), lane-wise
+//!   with no reassociation, FMA contraction, or fast-math.
+//! - `min`/`max`/`sqrt` always execute the exact scalar std calls per
+//!   lane, even under the `simd` feature: a SIMD min/max intrinsic may
+//!   resolve `min(-0.0, +0.0)` to the other zero than the scalar op,
+//!   and that sign flips `1 / min(a, b)` between infinities (see
+//!   [`lanes`] for the full argument).
+//! - `&&` / `||` are evaluated eagerly instead of short-circuited.
+//!   That is safe because operands are effect-free and every
+//!   comparison yields a plain `bool` even for NaN/∞ inputs (e.g. a
+//!   division the tree walk would have skipped), so the boolean
+//!   AND/OR of both sides equals the short-circuit result. Constant
+//!   operands still fold: `false && …` collapses without touching the
+//!   column.
+//!
+//! [`lanes`]: crate::filterexpr::lanes
 
 use crate::events::NUM_FEATURES;
 use crate::filterexpr::ast::{BinOp, Expr, Func, UnOp};
+use crate::filterexpr::lanes::{self, ArithOp, CmpOp};
 
 /// One postfix opcode. Operand types are fixed per opcode (the AST is
 /// type-checked before compilation), so numeric and boolean slots can
@@ -156,22 +175,33 @@ enum NumSlot {
     Col(Vec<f64>),
 }
 
-/// A boolean stack slot.
+/// A boolean stack slot of the scalar reference VM.
 enum BoolSlot {
     Const(bool),
     Col(Vec<bool>),
 }
 
+/// A boolean stack slot of the vectorized VM: a broadcast constant or a
+/// bitmask (bit `i` of word `w` = row `64*w + i`). Intermediate masks
+/// may carry garbage in the bits past the row count (a `Not` flips
+/// them); the final mask is trimmed before it leaves the VM.
+enum MaskSlot {
+    Const(bool),
+    Bits(Vec<u64>),
+}
+
 /// Reusable evaluation state: the typed value stacks plus buffer pools.
-/// Keep one per worker and feed it every page — after the first page no
-/// evaluation allocates.
+/// Keep one per worker pipeline and feed it every page — after the
+/// first page no evaluation allocates.
 #[derive(Default)]
 pub struct VmScratch {
     nums: Vec<NumSlot>,
     bools: Vec<BoolSlot>,
+    masks: Vec<MaskSlot>,
     num_pool: Vec<Vec<f64>>,
     bool_pool: Vec<Vec<bool>>,
-    /// per-`eval_into` gather cache for `Op::PushFeatCached`, indexed by
+    mask_pool: Vec<Vec<u64>>,
+    /// per-`eval` gather cache for `Op::PushFeatCached`, indexed by
     /// feature id; entries are invalidated (returned to the pool) at the
     /// start of every evaluation
     feat_cache: Vec<Option<Vec<f64>>>,
@@ -194,12 +224,22 @@ impl VmScratch {
         v
     }
 
+    fn take_mask(&mut self) -> Vec<u64> {
+        let mut v = self.mask_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
     fn retire_num(&mut self, v: Vec<f64>) {
         self.num_pool.push(v);
     }
 
     fn retire_bool(&mut self, v: Vec<bool>) {
         self.bool_pool.push(v);
+    }
+
+    fn retire_mask(&mut self, v: Vec<u64>) {
+        self.mask_pool.push(v);
     }
 
     fn pop_num(&mut self) -> NumSlot {
@@ -209,6 +249,51 @@ impl VmScratch {
     fn pop_bool(&mut self) -> BoolSlot {
         self.bools.pop().expect("typechecked: boolean operand")
     }
+
+    fn pop_mask(&mut self) -> MaskSlot {
+        self.masks.pop().expect("typechecked: boolean operand")
+    }
+
+    /// Invalidate the gather cache and gather feature `f` into a fresh
+    /// working column (contiguous copy when cached).
+    fn push_feat(&mut self, feats: &[f32], n: usize, f: usize, cached: bool) {
+        if cached {
+            if self.feat_cache.len() <= f {
+                self.feat_cache.resize_with(f + 1, || None);
+            }
+            if self.feat_cache[f].is_none() {
+                let mut col = self.take_num();
+                gather(feats, n, f, &mut col);
+                self.feat_cache[f] = Some(col);
+            }
+            let mut col = self.take_num();
+            col.extend_from_slice(
+                self.feat_cache[f].as_deref().expect("just filled"),
+            );
+            self.nums.push(NumSlot::Col(col));
+        } else {
+            let mut col = self.take_num();
+            gather(feats, n, f, &mut col);
+            self.nums.push(NumSlot::Col(col));
+        }
+    }
+
+    /// Return last page's gather cache entries to the pool.
+    fn reset_feat_cache(&mut self) {
+        for slot in self.feat_cache.iter_mut() {
+            if let Some(v) = slot.take() {
+                self.num_pool.push(v);
+            }
+        }
+    }
+}
+
+/// Strided gather of one feature column out of the row-major matrix.
+fn gather(feats: &[f32], n: usize, f: usize, col: &mut Vec<f64>) {
+    col.reserve(n);
+    for i in 0..n {
+        col.push(feats[i * NUM_FEATURES + f] as f64);
+    }
 }
 
 impl Program {
@@ -216,10 +301,112 @@ impl Program {
         &self.ops
     }
 
-    /// Evaluate over the first `n` rows of a row-major `(B, NUM_FEATURES)`
-    /// feature matrix, writing the accept mask into `out` (cleared
-    /// first). `scratch` carries the reusable column buffers.
+    /// Vectorized evaluation over the first `n` rows of a row-major
+    /// `(B, NUM_FEATURES)` feature matrix, writing the accept mask as
+    /// bitmask words into `out` (bit `i` of word `w` = row `64*w + i`;
+    /// bits at and past row `n` are zero). This is the production path:
+    /// chunked/SIMD arithmetic, masked compares, word-wise boolean
+    /// algebra. `scratch` carries the reusable buffers.
+    pub fn eval_bits_into(
+        &self,
+        feats: &[f32],
+        n: usize,
+        scratch: &mut VmScratch,
+        out: &mut Vec<u64>,
+    ) {
+        debug_assert!(n * NUM_FEATURES <= feats.len());
+        debug_assert!(scratch.nums.is_empty() && scratch.masks.is_empty());
+        scratch.reset_feat_cache();
+        for op in &self.ops {
+            match *op {
+                Op::PushNum(c) => scratch.nums.push(NumSlot::Const(c)),
+                Op::PushBool(c) => scratch.masks.push(MaskSlot::Const(c)),
+                Op::PushFeat(f) => {
+                    scratch.push_feat(feats, n, f as usize, false)
+                }
+                Op::PushFeatCached(f) => {
+                    scratch.push_feat(feats, n, f as usize, true)
+                }
+                Op::Neg => un_num(scratch, |x| -x),
+                Op::Abs => un_num(scratch, f64::abs),
+                // identical guard to the tree walk: sqrt of a negative
+                // intermediate clamps to 0 instead of NaN
+                Op::Sqrt => un_num(scratch, |x| x.max(0.0).sqrt()),
+                Op::Add => bin_num_vec(scratch, ArithOp::Add),
+                Op::Sub => bin_num_vec(scratch, ArithOp::Sub),
+                Op::Mul => bin_num_vec(scratch, ArithOp::Mul),
+                Op::Div => bin_num_vec(scratch, ArithOp::Div),
+                // scalar std semantics per lane on purpose — see the
+                // module docs on min/max signed zeros
+                Op::Min => bin_num(scratch, f64::min),
+                Op::Max => bin_num(scratch, f64::max),
+                Op::Lt => cmp_vec(scratch, CmpOp::Lt),
+                Op::Le => cmp_vec(scratch, CmpOp::Le),
+                Op::Gt => cmp_vec(scratch, CmpOp::Gt),
+                Op::Ge => cmp_vec(scratch, CmpOp::Ge),
+                Op::Eq => cmp_vec(scratch, CmpOp::Eq),
+                Op::Ne => cmp_vec(scratch, CmpOp::Ne),
+                Op::Not => {
+                    let r = match scratch.pop_mask() {
+                        MaskSlot::Const(c) => MaskSlot::Const(!c),
+                        MaskSlot::Bits(mut v) => {
+                            for w in v.iter_mut() {
+                                *w = !*w;
+                            }
+                            MaskSlot::Bits(v)
+                        }
+                    };
+                    scratch.masks.push(r);
+                }
+                Op::And => bin_mask(scratch, true),
+                Op::Or => bin_mask(scratch, false),
+            }
+        }
+        out.clear();
+        match scratch.pop_mask() {
+            MaskSlot::Const(c) => {
+                out.resize(lanes::mask_words(n), if c { !0u64 } else { 0 });
+            }
+            MaskSlot::Bits(v) => {
+                out.extend_from_slice(&v);
+                scratch.retire_mask(v);
+            }
+        }
+        lanes::trim_mask(out, n);
+        debug_assert!(scratch.nums.is_empty() && scratch.masks.is_empty());
+    }
+
+    /// Vectorized evaluation with a `Vec<bool>` mask (cleared first) —
+    /// a compatibility wrapper over [`eval_bits_into`]; bit-consumers
+    /// (the node executor) use the bitmask form directly.
+    ///
+    /// [`eval_bits_into`]: Program::eval_bits_into
     pub fn eval_into(
+        &self,
+        feats: &[f32],
+        n: usize,
+        scratch: &mut VmScratch,
+        out: &mut Vec<bool>,
+    ) {
+        let mut bits = scratch.take_mask();
+        self.eval_bits_into(feats, n, scratch, &mut bits);
+        out.clear();
+        out.reserve(n);
+        for i in 0..n {
+            out.push(bits[i / 64] >> (i % 64) & 1 == 1);
+        }
+        scratch.retire_mask(bits);
+    }
+
+    /// The PR-3 **scalar column VM**, retained as the differential
+    /// reference for the vectorized path (and the bench baseline):
+    /// column-at-a-time per-element loops, `Vec<bool>` booleans. Writes
+    /// the accept mask for the first `n` rows into `out` (cleared
+    /// first). Must stay bit-identical to both [`eval_bits_into`] and
+    /// the tree-walk oracle.
+    ///
+    /// [`eval_bits_into`]: Program::eval_bits_into
+    pub fn eval_into_scalar(
         &self,
         feats: &[f32],
         n: usize,
@@ -228,48 +415,19 @@ impl Program {
     ) {
         debug_assert!(n * NUM_FEATURES <= feats.len());
         debug_assert!(scratch.nums.is_empty() && scratch.bools.is_empty());
-        // stale gather cache from the previous page goes back to the pool
-        for slot in scratch.feat_cache.iter_mut() {
-            if let Some(v) = slot.take() {
-                scratch.num_pool.push(v);
-            }
-        }
+        scratch.reset_feat_cache();
         for op in &self.ops {
             match *op {
                 Op::PushNum(c) => scratch.nums.push(NumSlot::Const(c)),
                 Op::PushBool(c) => scratch.bools.push(BoolSlot::Const(c)),
                 Op::PushFeat(f) => {
-                    let f = f as usize;
-                    let mut col = scratch.take_num();
-                    col.reserve(n);
-                    for i in 0..n {
-                        col.push(feats[i * NUM_FEATURES + f] as f64);
-                    }
-                    scratch.nums.push(NumSlot::Col(col));
+                    scratch.push_feat(feats, n, f as usize, false)
                 }
                 Op::PushFeatCached(f) => {
-                    let f = f as usize;
-                    if scratch.feat_cache.len() <= f {
-                        scratch.feat_cache.resize_with(f + 1, || None);
-                    }
-                    if scratch.feat_cache[f].is_none() {
-                        let mut col = scratch.take_num();
-                        col.reserve(n);
-                        for i in 0..n {
-                            col.push(feats[i * NUM_FEATURES + f] as f64);
-                        }
-                        scratch.feat_cache[f] = Some(col);
-                    }
-                    let mut col = scratch.take_num();
-                    col.extend_from_slice(
-                        scratch.feat_cache[f].as_deref().expect("just filled"),
-                    );
-                    scratch.nums.push(NumSlot::Col(col));
+                    scratch.push_feat(feats, n, f as usize, true)
                 }
                 Op::Neg => un_num(scratch, |x| -x),
                 Op::Abs => un_num(scratch, f64::abs),
-                // identical guard to the tree walk: sqrt of a negative
-                // intermediate clamps to 0 instead of NaN
                 Op::Sqrt => un_num(scratch, |x| x.max(0.0).sqrt()),
                 Op::Add => bin_num(scratch, |x, y| x + y),
                 Op::Sub => bin_num(scratch, |x, y| x - y),
@@ -325,6 +483,8 @@ fn un_num(scratch: &mut VmScratch, f: impl Fn(f64) -> f64) {
     scratch.nums.push(r);
 }
 
+/// Scalar binary numeric op (the reference VM, and min/max on both
+/// paths — elementwise std-call semantics).
 fn bin_num(scratch: &mut VmScratch, f: impl Fn(f64, f64) -> f64) {
     let b = scratch.pop_num();
     let a = scratch.pop_num();
@@ -353,6 +513,100 @@ fn bin_num(scratch: &mut VmScratch, f: impl Fn(f64, f64) -> f64) {
     scratch.nums.push(r);
 }
 
+/// Chunked/SIMD binary arithmetic (`+ - * /`) for the vectorized VM.
+fn bin_num_vec(scratch: &mut VmScratch, op: ArithOp) {
+    let b = scratch.pop_num();
+    let a = scratch.pop_num();
+    let r = match (a, b) {
+        (NumSlot::Const(x), NumSlot::Const(y)) => NumSlot::Const(op.apply(x, y)),
+        (NumSlot::Const(x), NumSlot::Col(mut v)) => {
+            lanes::arith_const_col(op, x, &mut v);
+            NumSlot::Col(v)
+        }
+        (NumSlot::Col(mut v), NumSlot::Const(y)) => {
+            lanes::arith_col_const(op, &mut v, y);
+            NumSlot::Col(v)
+        }
+        (NumSlot::Col(mut va), NumSlot::Col(vb)) => {
+            lanes::arith_col_col(op, &mut va, &vb);
+            scratch.retire_num(vb);
+            NumSlot::Col(va)
+        }
+    };
+    scratch.nums.push(r);
+}
+
+/// Masked compare for the vectorized VM: numeric operands in, bitmask
+/// out.
+fn cmp_vec(scratch: &mut VmScratch, op: CmpOp) {
+    let b = scratch.pop_num();
+    let a = scratch.pop_num();
+    let r = match (a, b) {
+        (NumSlot::Const(x), NumSlot::Const(y)) => {
+            MaskSlot::Const(op.apply(x, y))
+        }
+        (NumSlot::Const(x), NumSlot::Col(v)) => {
+            let mut out = scratch.take_mask();
+            lanes::cmp_const_col(op, x, &v, &mut out);
+            scratch.retire_num(v);
+            MaskSlot::Bits(out)
+        }
+        (NumSlot::Col(v), NumSlot::Const(y)) => {
+            let mut out = scratch.take_mask();
+            lanes::cmp_col_const(op, &v, y, &mut out);
+            scratch.retire_num(v);
+            MaskSlot::Bits(out)
+        }
+        (NumSlot::Col(va), NumSlot::Col(vb)) => {
+            let mut out = scratch.take_mask();
+            lanes::cmp_col_col(op, &va, &vb, &mut out);
+            scratch.retire_num(va);
+            scratch.retire_num(vb);
+            MaskSlot::Bits(out)
+        }
+    };
+    scratch.masks.push(r);
+}
+
+/// Word-wise eager boolean AND (`and = true`) or OR (`and = false`)
+/// with constant folding — a constant absorbing element drops the other
+/// mask. 64 rows per instruction.
+fn bin_mask(scratch: &mut VmScratch, and: bool) {
+    let b = scratch.pop_mask();
+    let a = scratch.pop_mask();
+    let r = match (a, b) {
+        (MaskSlot::Const(x), MaskSlot::Const(y)) => {
+            MaskSlot::Const(if and { x && y } else { x || y })
+        }
+        (MaskSlot::Const(c), MaskSlot::Bits(v))
+        | (MaskSlot::Bits(v), MaskSlot::Const(c)) => {
+            if c == and {
+                // true && v == v; false || v == v
+                MaskSlot::Bits(v)
+            } else {
+                // false && v == false; true || v == true
+                scratch.retire_mask(v);
+                MaskSlot::Const(c)
+            }
+        }
+        (MaskSlot::Bits(mut va), MaskSlot::Bits(vb)) => {
+            if and {
+                for (x, &y) in va.iter_mut().zip(&vb) {
+                    *x &= y;
+                }
+            } else {
+                for (x, &y) in va.iter_mut().zip(&vb) {
+                    *x |= y;
+                }
+            }
+            scratch.retire_mask(vb);
+            MaskSlot::Bits(va)
+        }
+    };
+    scratch.masks.push(r);
+}
+
+/// Scalar compare (the reference VM).
 fn cmp(scratch: &mut VmScratch, n: usize, f: impl Fn(f64, f64) -> bool) {
     let b = scratch.pop_num();
     let a = scratch.pop_num();
@@ -384,8 +638,7 @@ fn cmp(scratch: &mut VmScratch, n: usize, f: impl Fn(f64, f64) -> bool) {
     scratch.bools.push(r);
 }
 
-/// Eager boolean AND (`and = true`) or OR (`and = false`) with constant
-/// folding — a constant absorbing element drops the other column.
+/// Eager boolean AND/OR with constant folding (the reference VM).
 fn bin_bool(scratch: &mut VmScratch, and: bool) {
     let b = scratch.pop_bool();
     let a = scratch.pop_bool();
@@ -427,10 +680,16 @@ mod tests {
     use crate::filterexpr::parser::parse;
     use crate::util::Rng;
 
-    /// Tree-walk oracle vs bytecode over random matrices: bit-identical
-    /// masks, for every expression shape we support.
+    /// Expand bitmask words into a bool mask over n rows.
+    fn bits_to_bools(bits: &[u64], n: usize) -> Vec<bool> {
+        (0..n).map(|i| bits[i / 64] >> (i % 64) & 1 == 1).collect()
+    }
+
+    /// Tree-walk oracle vs SIMD VM vs scalar column VM over random
+    /// matrices: bit-identical masks, for every expression shape we
+    /// support, at page sizes that exercise chunk and word tails.
     #[test]
-    fn bytecode_matches_treewalk_oracle() {
+    fn all_three_evaluators_agree() {
         let exprs = [
             "met > 30",
             "sum_pt / n_tracks > 5",
@@ -453,6 +712,8 @@ mod tests {
             let prog = compile(&expr);
             let mut scratch = VmScratch::new();
             let mut mask = Vec::new();
+            let mut mask_scalar = Vec::new();
+            let mut bits = Vec::new();
             for trial in 0..20 {
                 let n = 1 + rng.index(300);
                 let feats: Vec<f32> = (0..n * NUM_FEATURES)
@@ -466,6 +727,8 @@ mod tests {
                     })
                     .collect();
                 prog.eval_into(&feats, n, &mut scratch, &mut mask);
+                prog.eval_into_scalar(&feats, n, &mut scratch, &mut mask_scalar);
+                prog.eval_bits_into(&feats, n, &mut scratch, &mut bits);
                 let oracle: Vec<bool> = (0..n)
                     .map(|i| {
                         filter.accept(
@@ -473,7 +736,16 @@ mod tests {
                         )
                     })
                     .collect();
-                assert_eq!(mask, oracle, "'{src}' trial {trial} n {n}");
+                assert_eq!(mask, oracle, "simd '{src}' trial {trial} n {n}");
+                assert_eq!(
+                    mask_scalar, oracle,
+                    "scalar '{src}' trial {trial} n {n}"
+                );
+                assert_eq!(
+                    bits_to_bools(&bits, n),
+                    oracle,
+                    "bits '{src}' trial {trial} n {n}"
+                );
             }
         }
     }
@@ -487,6 +759,27 @@ mod tests {
         let feats = vec![0f32; 4 * NUM_FEATURES];
         prog.eval_into(&feats, 4, &mut scratch, &mut mask);
         assert_eq!(mask, vec![true; 4]);
+        let mut bits = Vec::new();
+        prog.eval_bits_into(&feats, 4, &mut scratch, &mut bits);
+        assert_eq!(bits, vec![0b1111u64], "broadcast trims past row n");
+    }
+
+    #[test]
+    fn bitmask_tails_are_trimmed() {
+        // `!(met > 10)` flips intermediate tail bits to 1; the final
+        // mask must still be clean past row n for every tail shape
+        // (word-aligned, chunk-aligned, ragged)
+        let expr = parse("!(met > 10)").unwrap();
+        let prog = compile(&expr);
+        let mut scratch = VmScratch::new();
+        let mut bits = Vec::new();
+        for n in [1usize, 7, 8, 63, 64, 65, 100, 128, 130] {
+            let feats = vec![0f32; n * NUM_FEATURES]; // met=0: all accept
+            prog.eval_bits_into(&feats, n, &mut scratch, &mut bits);
+            assert_eq!(bits.len(), n.div_ceil(64), "n={n}");
+            let ones: u32 = bits.iter().map(|w| w.count_ones()).sum();
+            assert_eq!(ones as usize, n, "tail bits leaked at n={n}");
+        }
     }
 
     #[test]
@@ -498,11 +791,18 @@ mod tests {
         let feats = vec![1f32; 64 * NUM_FEATURES];
         prog.eval_into(&feats, 64, &mut scratch, &mut mask);
         let pooled_nums = scratch.num_pool.len();
-        let pooled_bools = scratch.bool_pool.len();
+        let pooled_masks = scratch.mask_pool.len();
         assert!(pooled_nums > 0);
+        assert!(pooled_masks > 0);
         // a second evaluation reuses the pools instead of growing them
         prog.eval_into(&feats, 64, &mut scratch, &mut mask);
         assert_eq!(scratch.num_pool.len(), pooled_nums);
+        assert_eq!(scratch.mask_pool.len(), pooled_masks);
+        // the scalar reference path recycles its own pools too
+        prog.eval_into_scalar(&feats, 64, &mut scratch, &mut mask);
+        let pooled_bools = scratch.bool_pool.len();
+        assert!(pooled_bools > 0);
+        prog.eval_into_scalar(&feats, 64, &mut scratch, &mut mask);
         assert_eq!(scratch.bool_pool.len(), pooled_bools);
     }
 
@@ -556,5 +856,8 @@ mod tests {
         let mut mask = vec![true; 3];
         prog.eval_into(&[], 0, &mut scratch, &mut mask);
         assert!(mask.is_empty());
+        let mut bits = vec![7u64];
+        prog.eval_bits_into(&[], 0, &mut scratch, &mut bits);
+        assert!(bits.is_empty());
     }
 }

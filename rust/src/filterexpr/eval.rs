@@ -159,7 +159,7 @@ impl CompiledFilter {
 
     /// Allocation-free batch evaluation: write the accept mask for the
     /// first `n_real` rows into `out`, recycling `scratch`'s column
-    /// buffers across calls.
+    /// buffers across calls. Runs the vectorized (SIMD/chunked) VM.
     pub fn accept_batch_into(
         &self,
         feats: &[f32],
@@ -169,6 +169,38 @@ impl CompiledFilter {
     ) {
         let rows = feats.len() / NUM_FEATURES;
         self.program.eval_into(feats, n_real.min(rows), scratch, out);
+    }
+
+    /// Allocation-free batch evaluation in bitmask form: bit `i` of word
+    /// `w` in `out` is row `64*w + i`'s accept decision (bits past
+    /// `n_real` are zero). This is the node executor's hot path — the
+    /// `Vec<bool>` expansion of [`accept_batch_into`] is skipped
+    /// entirely.
+    ///
+    /// [`accept_batch_into`]: CompiledFilter::accept_batch_into
+    pub fn accept_batch_bits_into(
+        &self,
+        feats: &[f32],
+        n_real: usize,
+        scratch: &mut VmScratch,
+        out: &mut Vec<u64>,
+    ) {
+        let rows = feats.len() / NUM_FEATURES;
+        self.program.eval_bits_into(feats, n_real.min(rows), scratch, out);
+    }
+
+    /// Batch evaluation via the retained PR-3 scalar column VM — the
+    /// differential reference the vectorized path is tested against
+    /// (and the bench's "scalar bytecode" baseline).
+    pub fn accept_batch_into_scalar(
+        &self,
+        feats: &[f32],
+        n_real: usize,
+        scratch: &mut VmScratch,
+        out: &mut Vec<bool>,
+    ) {
+        let rows = feats.len() / NUM_FEATURES;
+        self.program.eval_into_scalar(feats, n_real.min(rows), scratch, out);
     }
 
     /// Batch evaluation via the per-event tree walk — kept as the

@@ -1,0 +1,331 @@
+//! Fixed-width chunk kernels for the vectorized filter VM — the one
+//! place per-opcode inner loops live, in two interchangeable builds:
+//!
+//! - **`--features simd`** (nightly): explicit `std::simd` `f64x8`
+//!   arithmetic and masked compares, each compare emitting its lane
+//!   bitmask directly via `Mask::to_bitmask`.
+//! - **default** (stable): the same loops written over fixed `[f64; 8]`
+//!   chunks so LLVM's autovectorizer produces equivalent code — no
+//!   nightly feature, no intrinsics.
+//!
+//! Either way the semantics contract is identical and deliberately
+//! conservative, because the accept set must stay **bit-identical** to
+//! the scalar VM and the tree-walk oracle:
+//!
+//! - `+ - * /` and the six comparisons are lane-wise IEEE-754 f64 ops —
+//!   exactly what the scalar paths compute, in the same order, with no
+//!   reassociation, FMA contraction, or fast-math.
+//! - `min`/`max`/`sqrt` are NOT given explicit SIMD forms even under
+//!   the feature flag: `f64::min`/`f64::max` leave the sign of a
+//!   `min(-0.0, +0.0)` result platform-defined, and a SIMD intrinsic is
+//!   allowed to pick the other zero than the scalar op on the same
+//!   machine. A signed zero escaping through `1 / min(a, b)` flips the
+//!   infinity it produces, so those opcodes always run the exact scalar
+//!   std calls per lane (see [`super::bytecode`]); LLVM may still
+//!   vectorize them when that preserves semantics.
+//!
+//! Comparisons write **bitmasks** (`u64` words, bit `i` of word `w` =
+//! row `64*w + i`), not `Vec<bool>`: one word carries 64 rows, so the
+//! boolean algebra above the compares (`&& || !`) collapses to word
+//! ops at 64 rows per instruction.
+
+/// Lane width of one chunk. Compares assemble 8 chunk masks into each
+/// 64-row output word; page tails shorter than a chunk fall back to
+/// per-row loops.
+pub const LANES: usize = 8;
+
+/// Number of `u64` mask words covering `n` rows.
+#[inline]
+pub fn mask_words(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+/// Clear the unused high bits of the last mask word so popcounts and
+/// drains never see garbage past row `n`. Intermediate words are allowed
+/// dirty tails (a `Not` flips them to 1); only the final mask is washed.
+#[inline]
+pub fn trim_mask(words: &mut [u64], n: usize) {
+    if let Some(last) = words.last_mut() {
+        let used = n - (words.len() - 1) * 64;
+        if used < 64 {
+            *last &= (1u64 << used) - 1;
+        }
+    }
+}
+
+/// Binary arithmetic opcodes with explicit chunk kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl ArithOp {
+    #[inline(always)]
+    pub fn apply(self, x: f64, y: f64) -> f64 {
+        match self {
+            ArithOp::Add => x + y,
+            ArithOp::Sub => x - y,
+            ArithOp::Mul => x * y,
+            ArithOp::Div => x / y,
+        }
+    }
+}
+
+/// Comparison opcodes; every one produces a bitmask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl CmpOp {
+    #[inline(always)]
+    pub fn apply(self, x: f64, y: f64) -> bool {
+        match self {
+            CmpOp::Lt => x < y,
+            CmpOp::Le => x <= y,
+            CmpOp::Gt => x > y,
+            CmpOp::Ge => x >= y,
+            CmpOp::Eq => x == y,
+            CmpOp::Ne => x != y,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// explicit std::simd build
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "simd")]
+mod imp {
+    use super::{ArithOp, CmpOp, LANES};
+    use std::simd::cmp::{SimdPartialEq, SimdPartialOrd};
+    use std::simd::f64x8;
+
+    #[inline(always)]
+    fn arith8(op: ArithOp, x: f64x8, y: f64x8) -> f64x8 {
+        match op {
+            ArithOp::Add => x + y,
+            ArithOp::Sub => x - y,
+            ArithOp::Mul => x * y,
+            ArithOp::Div => x / y,
+        }
+    }
+
+    #[inline(always)]
+    fn cmp8(op: CmpOp, x: f64x8, y: f64x8) -> u64 {
+        let m = match op {
+            CmpOp::Lt => x.simd_lt(y),
+            CmpOp::Le => x.simd_le(y),
+            CmpOp::Gt => x.simd_gt(y),
+            CmpOp::Ge => x.simd_ge(y),
+            CmpOp::Eq => x.simd_eq(y),
+            CmpOp::Ne => x.simd_ne(y),
+        };
+        m.to_bitmask()
+    }
+
+    /// `a[i] = op(a[i], b[i])`.
+    pub fn arith_col_col(op: ArithOp, a: &mut [f64], b: &[f64]) {
+        let n = a.len().min(b.len());
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let at = c * LANES;
+            let x = f64x8::from_slice(&a[at..at + LANES]);
+            let y = f64x8::from_slice(&b[at..at + LANES]);
+            arith8(op, x, y).copy_to_slice(&mut a[at..at + LANES]);
+        }
+        for i in chunks * LANES..n {
+            a[i] = op.apply(a[i], b[i]);
+        }
+    }
+
+    /// `a[i] = op(a[i], k)`.
+    pub fn arith_col_const(op: ArithOp, a: &mut [f64], k: f64) {
+        let y = f64x8::splat(k);
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let at = c * LANES;
+            let x = f64x8::from_slice(&a[at..at + LANES]);
+            arith8(op, x, y).copy_to_slice(&mut a[at..at + LANES]);
+        }
+        for x in &mut a[chunks * LANES..] {
+            *x = op.apply(*x, k);
+        }
+    }
+
+    /// `a[i] = op(k, a[i])` (non-commutative ops need this side too).
+    pub fn arith_const_col(op: ArithOp, k: f64, a: &mut [f64]) {
+        let x = f64x8::splat(k);
+        let chunks = a.len() / LANES;
+        for c in 0..chunks {
+            let at = c * LANES;
+            let y = f64x8::from_slice(&a[at..at + LANES]);
+            arith8(op, x, y).copy_to_slice(&mut a[at..at + LANES]);
+        }
+        for y in &mut a[chunks * LANES..] {
+            *y = op.apply(k, *y);
+        }
+    }
+
+    #[inline(always)]
+    fn load8(v: &[f64], at: usize) -> f64x8 {
+        f64x8::from_slice(&v[at..at + LANES])
+    }
+
+    /// Compare two columns into bitmask words (`out` is overwritten; its
+    /// tail bits past `a.len()` are zero).
+    pub fn cmp_col_col(op: CmpOp, a: &[f64], b: &[f64], out: &mut Vec<u64>) {
+        let n = a.len().min(b.len());
+        cmp_words(
+            n,
+            out,
+            |at| cmp8(op, load8(a, at), load8(b, at)),
+            |i| op.apply(a[i], b[i]),
+        );
+    }
+
+    /// Compare a column against a broadcast constant.
+    pub fn cmp_col_const(op: CmpOp, a: &[f64], k: f64, out: &mut Vec<u64>) {
+        let y = f64x8::splat(k);
+        cmp_words(
+            a.len(),
+            out,
+            |at| cmp8(op, load8(a, at), y),
+            |i| op.apply(a[i], k),
+        );
+    }
+
+    /// Compare a broadcast constant against a column.
+    pub fn cmp_const_col(op: CmpOp, k: f64, a: &[f64], out: &mut Vec<u64>) {
+        let x = f64x8::splat(k);
+        cmp_words(
+            a.len(),
+            out,
+            |at| cmp8(op, x, load8(a, at)),
+            |i| op.apply(k, a[i]),
+        );
+    }
+
+    /// Assemble n rows of compare results into 64-bit words: eight
+    /// 8-lane chunk masks per word, per-row at the tail.
+    #[inline(always)]
+    fn cmp_words(
+        n: usize,
+        out: &mut Vec<u64>,
+        chunk_bits: impl Fn(usize) -> u64,
+        row_bit: impl Fn(usize) -> bool,
+    ) {
+        out.clear();
+        out.resize(super::mask_words(n), 0);
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            out[c * LANES / 64] |= chunk_bits(c * LANES) << (c * LANES % 64);
+        }
+        for i in chunks * LANES..n {
+            out[i / 64] |= (row_bit(i) as u64) << (i % 64);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// stable build: fixed-width chunks, written for the autovectorizer
+// ---------------------------------------------------------------------
+
+#[cfg(not(feature = "simd"))]
+mod imp {
+    use super::{ArithOp, CmpOp, LANES};
+
+    /// `a[i] = op(a[i], b[i])`. Plain zip loops with the operator
+    /// hoisted out of the loop: each arm is a single IEEE op per
+    /// element with no calls, the shape LLVM's autovectorizer turns
+    /// into packed f64 arithmetic.
+    pub fn arith_col_col(op: ArithOp, a: &mut [f64], b: &[f64]) {
+        match op {
+            ArithOp::Add => a.iter_mut().zip(b).for_each(|(x, &y)| *x += y),
+            ArithOp::Sub => a.iter_mut().zip(b).for_each(|(x, &y)| *x -= y),
+            ArithOp::Mul => a.iter_mut().zip(b).for_each(|(x, &y)| *x *= y),
+            ArithOp::Div => a.iter_mut().zip(b).for_each(|(x, &y)| *x /= y),
+        }
+    }
+
+    /// `a[i] = op(a[i], k)`.
+    pub fn arith_col_const(op: ArithOp, a: &mut [f64], k: f64) {
+        match op {
+            ArithOp::Add => a.iter_mut().for_each(|x| *x += k),
+            ArithOp::Sub => a.iter_mut().for_each(|x| *x -= k),
+            ArithOp::Mul => a.iter_mut().for_each(|x| *x *= k),
+            ArithOp::Div => a.iter_mut().for_each(|x| *x /= k),
+        }
+    }
+
+    /// `a[i] = op(k, a[i])` (non-commutative ops need this side too).
+    pub fn arith_const_col(op: ArithOp, k: f64, a: &mut [f64]) {
+        match op {
+            ArithOp::Add => a.iter_mut().for_each(|y| *y = k + *y),
+            ArithOp::Sub => a.iter_mut().for_each(|y| *y = k - *y),
+            ArithOp::Mul => a.iter_mut().for_each(|y| *y = k * *y),
+            ArithOp::Div => a.iter_mut().for_each(|y| *y = k / *y),
+        }
+    }
+
+    /// One 8-row chunk of compare bits; `f` is monomorphized per
+    /// comparison so the inner loop is branch-free.
+    #[inline(always)]
+    fn bits8(f: impl Fn(usize) -> bool, at: usize) -> u64 {
+        let mut bits = 0u64;
+        for l in 0..LANES {
+            bits |= (f(at + l) as u64) << l;
+        }
+        bits
+    }
+
+    /// Compare two columns into bitmask words (`out` is overwritten; its
+    /// tail bits past `a.len()` are zero).
+    pub fn cmp_col_col(op: CmpOp, a: &[f64], b: &[f64], out: &mut Vec<u64>) {
+        let n = a.len().min(b.len());
+        cmp_words(n, out, |i| op.apply(a[i], b[i]));
+    }
+
+    /// Compare a column against a broadcast constant.
+    pub fn cmp_col_const(op: CmpOp, a: &[f64], k: f64, out: &mut Vec<u64>) {
+        cmp_words(a.len(), out, |i| op.apply(a[i], k));
+    }
+
+    /// Compare a broadcast constant against a column.
+    pub fn cmp_const_col(op: CmpOp, k: f64, a: &[f64], out: &mut Vec<u64>) {
+        cmp_words(a.len(), out, |i| op.apply(k, a[i]));
+    }
+
+    /// Assemble n rows of compare results into 64-bit words: eight
+    /// 8-row chunks per word, per-row at the tail.
+    #[inline(always)]
+    fn cmp_words(
+        n: usize,
+        out: &mut Vec<u64>,
+        row_bit: impl Fn(usize) -> bool,
+    ) {
+        out.clear();
+        out.resize(super::mask_words(n), 0);
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let at = c * LANES;
+            out[at / 64] |= bits8(&row_bit, at) << (at % 64);
+        }
+        for i in chunks * LANES..n {
+            out[i / 64] |= (row_bit(i) as u64) << (i % 64);
+        }
+    }
+}
+
+pub use imp::{
+    arith_col_col, arith_col_const, arith_const_col, cmp_col_col,
+    cmp_col_const, cmp_const_col,
+};

@@ -16,10 +16,14 @@
 //! feature indices outside the kernel's `NUM_FEATURES`-wide rows.
 //!
 //! Execution is vectorized: compilation flattens the AST into a postfix
-//! [`bytecode`] program evaluated column-at-a-time over the feature
-//! matrix (one tight loop per opcode, column buffers recycled across
-//! pages via [`VmScratch`]). The recursive tree walk remains as the
-//! reference oracle; both paths produce bit-identical accept sets.
+//! [`bytecode`] program whose opcodes each run one tight loop over
+//! fixed-width chunks of their operand columns (explicit `std::simd`
+//! under `--features simd`, an autovectorizable chunked build on stable
+//! — see [`lanes`]), with comparisons producing **bitmask** words so
+//! boolean combinators process 64 rows per instruction. Buffers are
+//! recycled across pages via [`VmScratch`]. Two reference evaluators
+//! are retained and tested bit-identical against the SIMD path: the
+//! PR-3 scalar column VM and the recursive tree walk.
 //!
 //! For query-result caching ([`crate::qcache`]), [`canon`] rewrites a
 //! typechecked AST into a canonical form (constant folding, commutative
@@ -31,6 +35,7 @@ pub mod ast;
 pub mod bytecode;
 pub mod canon;
 pub mod eval;
+pub mod lanes;
 pub mod parser;
 
 pub use ast::{BinOp, Expr, Ty, UnOp};

@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # GEPS — Grid-Brick Event Processing System
 //!
 //! A reproduction of *"Grid-Brick Event Processing Framework in GEPS"*
@@ -95,14 +96,22 @@
 //!    `ColumnarEvents::pack_range` fills the `(B, T, 4)` tensors the
 //!    AOT kernel expects directly from the columns, byte-identical to
 //!    the old `Vec<Event>` → `EventBatch::pack` round-trip it replaced.
-//! 3. **Filters compile to postfix bytecode** ([`filterexpr::bytecode`])
+//! 3. **Filters compile to a SIMD bitmask VM** ([`filterexpr::bytecode`])
 //!    evaluated column-at-a-time over the kernel's feature matrix — one
-//!    tight loop per opcode, value-stack buffers recycled across pages,
-//!    bit-identical accept sets to the tree-walk reference.
-//! 4. **The executor pipelines** ([`node`]): a pack thread prepares page
-//!    N+1 while the kernel runs page N and the filter/histogram stage
-//!    drains page N−1; batches complete strictly in order so merged
-//!    histograms stay bit-identical to the sequential loop.
+//!    tight fixed-width-chunk loop per opcode (explicit `std::simd`
+//!    under `--features simd`, autovectorizable chunked loops on
+//!    stable — [`filterexpr::lanes`]), comparisons producing 64-row
+//!    **bitmask words** instead of `Vec<bool>`, value-stack buffers
+//!    recycled across pages, bit-identical accept sets to both the
+//!    retained scalar VM and the tree-walk oracle.
+//! 4. **The executor runs N pipelines per task** ([`node`]): worker
+//!    pipelines (the `[node] pipelines` knob, default one per core)
+//!    steal brick pages from a shared cursor, each overlapping page
+//!    packing with one in-flight kernel execution on the shared
+//!    [`runtime::EnginePool`]; a strict-ordered drain merges per-page
+//!    histograms in exact page order, so results stay bit-identical to
+//!    the sequential loop at any pipeline count, and a processed-page
+//!    audit turns any truncated run into a hard task failure.
 //!
 //! Module map (see DESIGN.md for the paper-section cross-reference):
 //!

@@ -13,13 +13,39 @@
 //!    result file, GASS it back to the leader
 //! 7. report TaskDone / TaskFailed on the wire
 //!
-//! Steps 4–6 run as a **two-stage pipeline**: a pack thread slices
-//! kernel-ready batches out of the brick columns (zero per-event
-//! allocation) while this thread keeps one kernel execution in flight
-//! and filters/histograms the previous batch — page N+1 decodes/packs
-//! while page N runs the kernel. Batches are processed strictly in
-//! order, so histogram merges (f32 adds) are bit-identical to the old
-//! sequential loop.
+//! ## The multi-pipeline executor
+//!
+//! Steps 4–6 run as **N parallel worker pipelines** (`[node] pipelines`
+//! in the cluster config; `0` = one per available core). The task's
+//! event range is cut into kernel-sized *pages*; workers steal the next
+//! page index from a shared atomic cursor, and each runs the full
+//! pack → kernel → filter → histogram chain for its page:
+//!
+//! - **pack**: `ColumnarEvents::pack_range` slices the brick columns
+//!   into the kernel's `(B, T, 4)` tensors — zero per-event allocation;
+//! - **kernel**: submitted through the shared [`EnginePool`] with one
+//!   execution kept in flight per pipeline, so a worker packs page
+//!   `p+1` while its kernel still runs page `p` (the PR-3 depth-1
+//!   overlap, now per pipeline);
+//! - **filter**: the vectorized bytecode VM produces the accept set as
+//!   a **bitmask** (`accept_batch_bits_into`), and the selected-index
+//!   walk iterates set bits word-at-a-time;
+//! - **histogram**: the AOT histogram program runs on the pool and the
+//!   per-page partial is shipped to the drain stage.
+//!
+//! A single **strict-ordered drain** on the task thread buffers
+//! out-of-order pages and folds histograms (f32 adds) and selected
+//! indices in exact page order, so the merged result is bit-identical
+//! to the old sequential loop no matter how pages race. The
+//! processed-page audit still refuses to report `TaskDone` unless every
+//! page was drained — a truncated pipeline (dead worker, lost page)
+//! surfaces as a task failure, never as silently short results.
+//!
+//! Observability: `node.pipelines` (gauge),
+//! `node.pack_stall_ns` (cumulative ns the drain waited for its next
+//! in-order page), `node.drain_reorder_depth` (cumulative pages
+//! buffered out of order) and per-pipeline
+//! `node.pipeline.<i>.task_busy_ns` histograms.
 //!
 //! A fault-injection switch makes the thread die silently mid-task (a
 //! crash, not an error): the JSE only learns via missed heartbeats.
@@ -27,17 +53,18 @@
 use crate::brick::{BrickFile, Codec};
 use crate::filterexpr;
 use crate::gass::GassService;
+use crate::metrics::{Counter, Histogram, Registry};
 use crate::node::store::{brick_path, result_path, BrickStore};
 use crate::rsl;
 use crate::runtime::{EnginePool, FeatureMatrix};
 use crate::scheduler::Task;
 use crate::wire::Message;
 use anyhow::{anyhow, Context, Result};
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Node runtime configuration.
 #[derive(Debug, Clone)]
@@ -48,6 +75,36 @@ pub struct NodeConfig {
     /// virtual heartbeat period (seconds) and cluster time scale
     pub heartbeat_s: f64,
     pub time_scale: f64,
+    /// worker pipelines per task (already resolved: `0 = auto` is
+    /// expanded by `ClusterConfig::effective_pipelines` before it gets
+    /// here; clamped to ≥ 1)
+    pub pipelines: usize,
+}
+
+/// The executor's metric handles, resolved once per node so the hot
+/// path never touches the registry's name map.
+struct NodeMetrics {
+    pack_stall_ns: Arc<Counter>,
+    drain_reorder_depth: Arc<Counter>,
+    /// per-pipeline busy time, indexed by pipeline id
+    pipeline_busy_ns: Vec<Arc<Histogram>>,
+}
+
+impl NodeMetrics {
+    fn new(registry: &Registry, pipelines: usize) -> NodeMetrics {
+        registry.gauge("node.pipelines").set(pipelines as u64);
+        NodeMetrics {
+            pack_stall_ns: registry.counter("node.pack_stall_ns"),
+            drain_reorder_depth: registry
+                .counter("node.drain_reorder_depth"),
+            pipeline_busy_ns: (0..pipelines)
+                .map(|i| {
+                    registry
+                        .histogram(&format!("node.pipeline.{i}.task_busy_ns"))
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Handle the cluster keeps per node.
@@ -93,12 +150,14 @@ impl Drop for NodeHandle {
 }
 
 /// Spawn a node actor. The returned handle's `tx` is the node's inbox
-/// (leader->node); `outbox` carries node->leader messages.
+/// (leader->node); `outbox` carries node->leader messages. `metrics`
+/// receives the executor's pipeline instrumentation.
 pub fn spawn_node(
     cfg: NodeConfig,
     gass: GassService,
     pool: EnginePool,
     outbox: Sender<Message>,
+    metrics: Arc<Registry>,
 ) -> NodeHandle {
     let killed = Arc::new(AtomicBool::new(false));
     let tasks_done = Arc::new(AtomicUsize::new(0));
@@ -133,12 +192,14 @@ pub fn spawn_node(
     let ex_killed = killed.clone();
     let ex_done = tasks_done.clone();
     let name = cfg.name.clone();
+    let pipelines = cfg.pipelines.max(1);
     let join = std::thread::Builder::new()
         .name(format!("geps-node-{}", cfg.name))
         .spawn(move || {
             let store = BrickStore::new(
                 gass.store(&name).expect("node has no gass store"),
             );
+            let node_metrics = NodeMetrics::new(&metrics, pipelines);
             // jobs cancelled by the leader: inbox-queued tasks for them
             // are dropped without running (a task already mid-execution
             // completes; the leader discards its reply as stale)
@@ -161,8 +222,17 @@ pub fn spawn_node(
                             continue;
                         }
                         let outcome = run_task(
-                            &name, &store, &gass, &pool, job, &task,
-                            &filter, &rsl, &ex_killed,
+                            &name,
+                            &store,
+                            &gass,
+                            &pool,
+                            job,
+                            &task,
+                            &filter,
+                            &rsl,
+                            &ex_killed,
+                            pipelines,
+                            &node_metrics,
                         );
                         if ex_killed.load(Ordering::SeqCst) {
                             return; // died mid-task: no report
@@ -200,6 +270,26 @@ pub fn spawn_node(
     }
 }
 
+/// One drained page: the accepted event indices (global within the
+/// brick) and the page's partial feature histogram.
+struct PageOut {
+    selected: Vec<u32>,
+    histogram: Vec<f32>,
+}
+
+/// What the pipeline scope hands back to `run_task`.
+struct Drained {
+    selected: Vec<u32>,
+    histogram: Vec<f32>,
+    /// pages fully drained — audited against the expected count so a
+    /// dead pipeline can never be mistaken for a short task
+    pages: usize,
+    /// ns the drain spent blocked waiting for its next in-order page
+    stall_ns: u64,
+    /// cumulative count of pages buffered out of order
+    reorder_depth: u64,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_task(
     name: &str,
@@ -211,6 +301,8 @@ fn run_task(
     filter_src: &str,
     rsl_text: &str,
     killed: &Arc<AtomicBool>,
+    pipelines: usize,
+    node_metrics: &NodeMetrics,
 ) -> Result<Message> {
     // 1. the RSL sentence must parse and agree with the wire task —
     //    (the paper's JSE/GRAM contract; catching drift loudly)
@@ -243,90 +335,202 @@ fn run_task(
     let (range_a, range_b) = task.range;
     let events_in = (range_b - range_a) as u64;
 
-    // 4-6. pipelined: a pack thread fills kernel-ready batches from the
-    // columns (page N+1) while this thread keeps one kernel execution in
-    // flight and filters/histograms page N. Strict batch order is
-    // preserved end to end, so the merged histogram is bit-identical to
-    // the sequential loop this replaces.
+    // 4-6. multi-pipeline execution: cut the range into kernel-sized
+    // pages, let `pipelines` workers steal page indices from a shared
+    // cursor and run pack→kernel→filter→histogram per page (one kernel
+    // in flight per pipeline), then drain strictly in page order so the
+    // merged histogram and selected-index list are bit-identical to the
+    // sequential loop.
     let calib = crate::runtime::Engine::identity_calib();
-    let batch_size = pool.batch;
+    let batch_size = pool.batch.max(1);
     let max_tracks = pool.max_tracks;
-    let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<(
-        usize,
-        crate::events::EventBatch,
-    )>(2);
-    let pack_cols = cols.clone();
-    let pack_killed = killed.clone();
-    let packer = std::thread::Builder::new()
-        .name(format!("geps-pack-{name}"))
-        .spawn(move || {
-            let mut start = range_a;
-            while start < range_b {
-                if pack_killed.load(Ordering::SeqCst) {
-                    return;
-                }
-                let end = (start + batch_size).min(range_b);
-                let batch =
-                    pack_cols.pack_range((start, end), batch_size, max_tracks);
-                if batch_tx.send((start, batch)).is_err() {
-                    return; // consumer bailed
-                }
-                start = end;
-            }
-        })
-        .map_err(|e| anyhow!("spawn pack thread: {e}"))?;
+    let n_pages = (range_b - range_a).div_ceil(batch_size);
+    let lanes = pipelines.clamp(1, n_pages.max(1));
 
-    let mut state = PipelineState {
-        scratch: filterexpr::VmScratch::new(),
-        mask: Vec::new(),
+    let next = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let (out_tx, out_rx) =
+        std::sync::mpsc::channel::<(usize, Result<PageOut>)>();
+
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut drained = Drained {
         selected: Vec::new(),
         histogram: Vec::new(),
-        batches: 0,
+        pages: 0,
+        stall_ns: 0,
+        reorder_depth: 0,
     };
-    let run = {
-        let mut inflight: VecDeque<(usize, Receiver<Result<FeatureMatrix>>)> =
-            VecDeque::new();
-        let mut step = || -> Result<()> {
-            for (base, batch) in batch_rx.iter() {
-                if killed.load(Ordering::SeqCst) {
-                    return Err(anyhow!("node crashed"));
+    let busy_ns = std::thread::scope(|s| {
+        let next = &next;
+        let abort = &abort;
+        let killed = killed.as_ref();
+        let cols = &*cols;
+        let filter = &filter;
+        let mut workers = Vec::with_capacity(lanes);
+        for w in 0..lanes {
+            let out = out_tx.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("geps-pipe-{name}-{w}"))
+                .spawn_scoped(s, move || {
+                    let t0 = Instant::now();
+                    let mut scratch = filterexpr::VmScratch::new();
+                    let mut bits: Vec<u64> = Vec::new();
+                    let mut pending: Option<(
+                        usize,
+                        Receiver<Result<FeatureMatrix>>,
+                    )> = None;
+                    loop {
+                        if killed.load(Ordering::SeqCst)
+                            || abort.load(Ordering::SeqCst)
+                        {
+                            pending = None; // kernel reply is dropped
+                            break;
+                        }
+                        let p = next.fetch_add(1, Ordering::Relaxed);
+                        if p >= n_pages {
+                            break;
+                        }
+                        // pack page p while this pipeline's previous
+                        // kernel execution is still in flight
+                        let start = range_a + p * batch_size;
+                        let end = (start + batch_size).min(range_b);
+                        let batch = cols.pack_range(
+                            (start, end),
+                            batch_size,
+                            max_tracks,
+                        );
+                        let rx = match pool.features_async(batch, calib) {
+                            Ok(rx) => rx,
+                            Err(e) => {
+                                abort.store(true, Ordering::SeqCst);
+                                let _ = out.send((p, Err(e)));
+                                break;
+                            }
+                        };
+                        if let Some((prev, prev_rx)) =
+                            pending.replace((p, rx))
+                        {
+                            let done = complete_page(
+                                range_a + prev * batch_size,
+                                prev_rx,
+                                filter,
+                                pool,
+                                batch_size,
+                                &mut scratch,
+                                &mut bits,
+                            );
+                            if done.is_err() {
+                                abort.store(true, Ordering::SeqCst);
+                            }
+                            if out.send((prev, done)).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                    if let Some((prev, prev_rx)) = pending.take() {
+                        let done = complete_page(
+                            range_a + prev * batch_size,
+                            prev_rx,
+                            filter,
+                            pool,
+                            batch_size,
+                            &mut scratch,
+                            &mut bits,
+                        );
+                        if done.is_err() {
+                            abort.store(true, Ordering::SeqCst);
+                        }
+                        let _ = out.send((prev, done));
+                    }
+                    t0.elapsed().as_nanos() as u64
+                })
+                .expect("spawn pipeline worker");
+            workers.push(worker);
+        }
+        drop(out_tx);
+
+        // strict-ordered drain: pages may arrive in any order; they are
+        // buffered and folded in exact page order (f32 histogram adds
+        // are order-sensitive — this is what keeps the merge
+        // bit-identical to the sequential loop)
+        let mut buffer: BTreeMap<usize, PageOut> = BTreeMap::new();
+        let mut expect = 0usize;
+        while expect < n_pages {
+            if let Some(page) = buffer.remove(&expect) {
+                fold_page(&mut drained, page);
+                expect += 1;
+                continue;
+            }
+            let wait = Instant::now();
+            match out_rx.recv() {
+                Ok((idx, Ok(page))) => {
+                    drained.stall_ns += wait.elapsed().as_nanos() as u64;
+                    if idx == expect {
+                        fold_page(&mut drained, page);
+                        expect += 1;
+                    } else {
+                        buffer.insert(idx, page);
+                        drained.reorder_depth += buffer.len() as u64;
+                    }
                 }
-                inflight.push_back((base, pool.features_async(batch, calib)?));
-                if inflight.len() >= 2 {
-                    drain_one(&mut inflight, &filter, pool, batch_size, &mut state)?;
+                Ok((_, Err(e))) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    abort.store(true, Ordering::SeqCst);
+                    break;
+                }
+                // all workers gone without delivering every page
+                // (killed mid-task, or a worker bailed): the audit
+                // below turns this into a failure
+                Err(_) => break,
+            }
+        }
+
+        // reap the pipelines even on error paths; a panicked worker
+        // becomes a task failure, never a truncated TaskDone
+        let mut busy = Vec::with_capacity(lanes);
+        for worker in workers {
+            match worker.join() {
+                Ok(ns) => busy.push(ns),
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(anyhow!("pipeline worker panicked"));
+                    }
                 }
             }
-            while !inflight.is_empty() {
-                if killed.load(Ordering::SeqCst) {
-                    return Err(anyhow!("node crashed"));
-                }
-                drain_one(&mut inflight, &filter, pool, batch_size, &mut state)?;
-            }
-            Ok(())
-        };
-        step()
-    };
-    // unblock + reap the pack thread even on error paths (a send into
-    // the closed channel returns Err and the thread exits)
-    drop(batch_rx);
-    let packer_panicked = packer.join().is_err();
-    run?;
-    if packer_panicked {
-        return Err(anyhow!("pack thread panicked"));
+        }
+        busy
+    });
+
+    // telemetry (recorded even for failed tasks — stalls and busy time
+    // are still real work)
+    node_metrics.pack_stall_ns.add(drained.stall_ns);
+    node_metrics.drain_reorder_depth.add(drained.reorder_depth);
+    for (w, ns) in busy_ns.iter().enumerate() {
+        if let Some(h) = node_metrics.pipeline_busy_ns.get(w) {
+            h.record(*ns);
+        }
     }
-    // a packer that died early (or a lost batch) must surface as a
+
+    if killed.load(Ordering::SeqCst) {
+        return Err(anyhow!("node crashed"));
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    // a pipeline that died early (or a lost page) must surface as a
     // failure, never as a TaskDone over truncated results
-    let expected_batches =
-        (range_b - range_a).div_ceil(batch_size.max(1));
-    if state.batches != expected_batches {
+    if drained.pages != n_pages {
         return Err(anyhow!(
-            "pipeline incomplete: processed {}/{} batches",
-            state.batches,
-            expected_batches
+            "pipeline incomplete: processed {}/{} pages",
+            drained.pages,
+            n_pages
         ));
     }
-    let selected = state.selected;
-    let histogram = state.histogram;
+    let selected = drained.selected;
+    let histogram = drained.histogram;
     let events_selected = selected.len() as u64;
 
     // 6b. result file: the selected events leave as a v2 columnar brick
@@ -359,57 +563,47 @@ fn run_task(
     })
 }
 
-/// Per-task mutable state of the filter/histogram pipeline stage. The
-/// scratch + mask buffers are recycled across every batch of the task,
-/// so the steady-state *filter* stage performs zero allocations. (The
-/// histogram submission still allocates one selection vector per batch
-/// — `EnginePool::histogram` takes ownership and moves it to a worker
-/// thread, so that buffer cannot be recycled here.)
-struct PipelineState {
-    scratch: filterexpr::VmScratch,
-    mask: Vec<bool>,
-    /// accepted event indices, global within the brick
-    selected: Vec<u32>,
-    /// merged feature histogram (F x bins, row-major)
-    histogram: Vec<f32>,
-    /// batches fully processed — audited against the expected count so a
-    /// dead packer can never be mistaken for a short task
-    batches: usize,
-}
-
-/// Complete the oldest in-flight kernel execution: receive its feature
-/// matrix, run the filter bytecode over it, and fold its histogram into
-/// the task accumulator. Called strictly in batch order.
-fn drain_one(
-    inflight: &mut VecDeque<(usize, Receiver<Result<FeatureMatrix>>)>,
-    filter: &filterexpr::CompiledFilter,
-    pool: &EnginePool,
-    batch_size: usize,
-    state: &mut PipelineState,
-) -> Result<()> {
-    let (base, rx) = inflight.pop_front().expect("inflight is non-empty");
-    let feats = rx.recv().map_err(|_| anyhow!("engine worker died"))??;
-    filter.accept_batch_into(
-        &feats.data,
-        feats.n_real,
-        &mut state.scratch,
-        &mut state.mask,
-    );
-    let mut sel_f32 = vec![0f32; batch_size];
-    for (i, &keep) in state.mask.iter().enumerate() {
-        if keep {
-            sel_f32[i] = 1.0;
-            state.selected.push((base + i) as u32);
-        }
-    }
-    let h = pool.histogram(feats, sel_f32)?;
-    if state.histogram.is_empty() {
-        state.histogram = h;
+/// Fold one in-order page into the task accumulator. Called strictly in
+/// page order by the drain stage.
+fn fold_page(drained: &mut Drained, page: PageOut) {
+    drained.selected.extend_from_slice(&page.selected);
+    if drained.histogram.is_empty() {
+        drained.histogram = page.histogram;
     } else {
-        for (a, b) in state.histogram.iter_mut().zip(h) {
+        for (a, b) in drained.histogram.iter_mut().zip(page.histogram) {
             *a += b; // histogram merge is elementwise addition
         }
     }
-    state.batches += 1;
-    Ok(())
+    drained.pages += 1;
+}
+
+/// Complete one in-flight page on a worker pipeline: receive its
+/// feature matrix, evaluate the filter bytecode into a bitmask, walk
+/// the set bits into the selection, and run the histogram program.
+/// `base` is the page's first global event index.
+fn complete_page(
+    base: usize,
+    rx: Receiver<Result<FeatureMatrix>>,
+    filter: &filterexpr::CompiledFilter,
+    pool: &EnginePool,
+    batch_size: usize,
+    scratch: &mut filterexpr::VmScratch,
+    bits: &mut Vec<u64>,
+) -> Result<PageOut> {
+    let feats = rx.recv().map_err(|_| anyhow!("engine worker died"))??;
+    filter.accept_batch_bits_into(&feats.data, feats.n_real, scratch, bits);
+    let mut sel_f32 = vec![0f32; batch_size];
+    let mut selected = Vec::new();
+    // the final mask is trimmed past n_real, so every set bit is a row
+    for (w, &word) in bits.iter().enumerate() {
+        let mut m = word;
+        while m != 0 {
+            let i = w * 64 + m.trailing_zeros() as usize;
+            sel_f32[i] = 1.0;
+            selected.push((base + i) as u32);
+            m &= m - 1;
+        }
+    }
+    let histogram = pool.histogram(feats, sel_f32)?;
+    Ok(PageOut { selected, histogram })
 }

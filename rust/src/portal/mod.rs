@@ -84,6 +84,18 @@ artifacts</code> plus the real bindings enable the XLA path, and when
 both backends are present the startup self-check reports their max
 deviation under the <code>runtime.backend_selfcheck_ulps</code> metric
 on <code>GET /metrics</code>.</p>
+<p><b>Node hot path:</b> each node executor runs a task as N
+<b>pipelines</b> (the <code>[node] pipelines</code> config knob; 0 =
+auto = one per core) that steal brick pages from a shared cursor, each
+overlapping page packing with one in-flight kernel execution; filters
+run on a SIMD/chunked bitmask VM (64 accept decisions per word,
+bit-identical to the scalar VM and the tree-walk oracle), and a
+strict-ordered drain merges per-page histograms in page order so the
+result is bit-identical at any pipeline count. Gauges and counters
+<code>node.pipelines</code>, <code>node.pack_stall_ns</code>,
+<code>node.drain_reorder_depth</code> and per-pipeline
+<code>node.pipeline.&lt;i&gt;.task_busy_ns</code> appear on
+<code>GET /metrics</code>.</p>
 <p><b>Membership protocol:</b> a node added via <code>/nodes/add</code> is
 registered in the catalogue (WAL-durable) and GRIS, its executor is
 spawned, and the broker receives a <code>NodeJoin</code> control message:

@@ -13,6 +13,13 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
+// NOTE: the request sender is a plain `mpsc::Sender` (clonable, `Sync`),
+// NOT `Arc<Mutex<Sender>>`: the multi-pipeline node executor submits
+// from N scoped worker threads through one shared `&EnginePool`, and a
+// mutex around the sender would serialize every submission for no
+// benefit. The `Mutex` stays only on the *receiver* side, where the
+// workers contend for requests by design.
+
 enum Request {
     Features {
         batch: EventBatch,
@@ -32,10 +39,11 @@ enum Request {
     Shutdown,
 }
 
-/// Cloneable handle to the pool.
+/// Cloneable handle to the pool (`Sync`: shared by reference across the
+/// node executor's pipeline workers).
 #[derive(Clone)]
 pub struct EnginePool {
-    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    tx: mpsc::Sender<Request>,
     pub batch: usize,
     pub max_tracks: usize,
     workers: usize,
@@ -106,12 +114,7 @@ impl EnginePool {
         for _ in 0..workers {
             ready_rx.recv().map_err(|_| anyhow!("worker died"))??;
         }
-        Ok(EnginePool {
-            tx: Arc::new(Mutex::new(tx)),
-            batch,
-            max_tracks,
-            workers,
-        })
+        Ok(EnginePool { tx, batch, max_tracks, workers })
     }
 
     pub fn workers(&self) -> usize {
@@ -119,11 +122,7 @@ impl EnginePool {
     }
 
     fn send(&self, req: Request) -> Result<()> {
-        self.tx
-            .lock()
-            .unwrap()
-            .send(req)
-            .map_err(|_| anyhow!("engine pool is down"))
+        self.tx.send(req).map_err(|_| anyhow!("engine pool is down"))
     }
 
     pub fn features(

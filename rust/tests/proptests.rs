@@ -328,6 +328,61 @@ fn prop_filter_bytecode_matches_treewalk() {
     });
 }
 
+/// The three filter evaluators — SIMD/chunked bitmask VM, retained
+/// scalar column VM, recursive tree walk — must produce bit-identical
+/// accept sets on random well-typed ASTs over random pages, including
+/// NaN and ±0 feature values and row counts whose tails divide neither
+/// the 8-wide SIMD chunk nor the 64-bit mask word.
+#[test]
+fn prop_simd_scalar_treewalk_triple_agreement() {
+    use geps::events::NUM_FEATURES;
+    use geps::filterexpr::{CompiledFilter, VmScratch};
+    forall("filter-simd-triple-agreement", 120, |rng| {
+        let expr = random_bool_expr(rng, 4);
+        let filter = CompiledFilter::new(expr).expect("well-typed");
+        let n = 1 + rng.index(200);
+        let feats: Vec<f32> = (0..n * NUM_FEATURES)
+            .map(|_| {
+                if rng.chance(0.05) {
+                    f32::NAN
+                } else if rng.chance(0.1) {
+                    // signed zeros: min/max and division care
+                    if rng.chance(0.5) {
+                        0.0
+                    } else {
+                        -0.0
+                    }
+                } else {
+                    (rng.f32() * 250.0) - 50.0
+                }
+            })
+            .collect();
+        let oracle = filter.accept_batch_treewalk(&feats, n);
+        let mut scratch = VmScratch::new();
+        let mut scalar = Vec::new();
+        filter.accept_batch_into_scalar(
+            &feats,
+            n,
+            &mut scratch,
+            &mut scalar,
+        );
+        let mut bits: Vec<u64> = Vec::new();
+        filter.accept_batch_bits_into(&feats, n, &mut scratch, &mut bits);
+        let expanded: Vec<bool> =
+            (0..n).map(|i| bits[i / 64] >> (i % 64) & 1 == 1).collect();
+        assert_eq!(scalar, oracle, "scalar VM diverged from tree walk");
+        assert_eq!(
+            expanded, oracle,
+            "SIMD bitmask VM diverged from tree walk"
+        );
+        // bits past n_real must be zero (downstream popcounts and
+        // selected-index walks trust the tail)
+        let popcount: u32 = bits.iter().map(|w| w.count_ones()).sum();
+        let accepted = oracle.iter().filter(|&&b| b).count() as u32;
+        assert_eq!(popcount, accepted, "dirty tail bits past n_real");
+    });
+}
+
 #[test]
 fn prop_brick_corruption_always_detected() {
     forall("brick-corruption", 60, |rng| {
