@@ -121,6 +121,21 @@ const TAG_BRICK_UPDATE: u8 = 6;
 /// recovery replay of placement churn can never invalidate caches.
 const TAG_BRICK_EPOCH: u8 = 7;
 
+/// The single declared registry of WAL record tags. `gepslint`'s
+/// `wal-tag-registry` pass cross-checks it against the `TAG_*` consts
+/// above (every const listed exactly once, all bytes unique, no tag
+/// declared outside this file) — WAL replay dispatches on these bytes,
+/// so a collision or skew silently corrupts recovery.
+pub const WAL_TAGS: &[(u8, &str)] = &[
+    (TAG_JOB, "job"),
+    (TAG_NODE, "node"),
+    (TAG_BRICK, "brick"),
+    (TAG_RESULT, "result"),
+    (TAG_JOB_UPDATE, "job_update"),
+    (TAG_BRICK_UPDATE, "brick_update"),
+    (TAG_BRICK_EPOCH, "brick_epoch"),
+];
+
 fn job_to_json(id: RowId, j: &JobRow) -> Json {
     Json::obj()
         .set("id", id)
@@ -554,6 +569,33 @@ impl Catalog {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wal_tags_registry_is_complete_and_unique() {
+        let mut bytes: Vec<u8> = WAL_TAGS.iter().map(|(b, _)| *b).collect();
+        bytes.sort_unstable();
+        bytes.dedup();
+        assert_eq!(bytes.len(), WAL_TAGS.len(), "duplicate WAL tag byte");
+        let mut names: Vec<&str> = WAL_TAGS.iter().map(|(_, n)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), WAL_TAGS.len(), "duplicate WAL tag name");
+        // every TAG_* const appears in the registry
+        for tag in [
+            TAG_JOB,
+            TAG_NODE,
+            TAG_BRICK,
+            TAG_RESULT,
+            TAG_JOB_UPDATE,
+            TAG_BRICK_UPDATE,
+            TAG_BRICK_EPOCH,
+        ] {
+            assert!(
+                WAL_TAGS.iter().any(|(b, _)| *b == tag),
+                "tag byte {tag} missing from WAL_TAGS"
+            );
+        }
+    }
 
     #[test]
     fn submit_and_poll() {

@@ -136,7 +136,9 @@ impl ClusterHandle {
             }
             // full copy at the leader: the `central` baseline stages from
             // here, and recovery can re-replicate from it
-            gass.store(&leader).unwrap().put(&path, brick.bytes.clone());
+            gass.store(&leader)
+                .ok_or_else(|| anyhow!("no store for leader '{leader}'"))?
+                .put(&path, brick.bytes.clone());
             catalog.insert_brick(
                 p.id,
                 (p.range.1 - p.range.0) as u64,
@@ -149,7 +151,7 @@ impl ClusterHandle {
         // --- GRIS ----------------------------------------------------
         let gris = Arc::new(Mutex::new(Directory::new()));
         {
-            let mut dir = gris.lock().unwrap();
+            let mut dir = lock(&gris);
             for spec in &config.nodes {
                 let bricks: Vec<(String, u64)> = placements
                     .iter()
@@ -538,7 +540,7 @@ impl ClusterHandle {
             return Err(anyhow!("bad filter: {e}"));
         }
         self.metrics.counter("portal.submissions").inc();
-        Ok(self.catalog.lock().unwrap().submit_job(
+        Ok(lock(&self.catalog).submit_job(
             self.config.dataset,
             filter_expr,
             policy,
@@ -555,7 +557,7 @@ impl ClusterHandle {
         match self.try_submit(filter_expr, policy) {
             Ok(id) => id,
             Err(e) => {
-                let mut cat = self.catalog.lock().unwrap();
+                let mut cat = lock(&self.catalog);
                 let id = cat.submit_job(
                     self.config.dataset,
                     filter_expr,
@@ -593,10 +595,7 @@ impl ClusterHandle {
     pub fn wait(&self, job: u64, timeout: Duration) -> Result<JobStatus> {
         let start = Instant::now();
         loop {
-            let status = self
-                .catalog
-                .lock()
-                .unwrap()
+            let status = lock(&self.catalog)
                 .jobs
                 .get(job)
                 .map(|j| j.status)
@@ -613,7 +612,7 @@ impl ClusterHandle {
 
     /// Merged histogram of a finished job (F x bins, row-major).
     pub fn histogram(&self, job: u64) -> Option<Vec<f32>> {
-        self.histograms.lock().unwrap().get(&job).cloned()
+        lock(&self.histograms).get(&job).cloned()
     }
 
     /// Request cancellation of a queued or running job (the portal's
@@ -623,7 +622,7 @@ impl ClusterHandle {
     /// flight simply stays completed.
     pub fn cancel(&self, job: u64) -> bool {
         let cancellable = {
-            let cat = self.catalog.lock().unwrap();
+            let cat = lock(&self.catalog);
             cat.jobs
                 .get(job)
                 .map(|j| !j.status.is_terminal())
@@ -638,7 +637,7 @@ impl ClusterHandle {
 
     /// Kill a node (fault injection): its thread dies silently.
     pub fn kill_node(&self, name: &str) -> bool {
-        let nodes = self.nodes.lock().unwrap();
+        let nodes = lock(&self.nodes);
         match nodes.get(name) {
             Some(h) => {
                 h.kill();
@@ -653,10 +652,7 @@ impl ClusterHandle {
     pub fn gris_search(&self, base: &str, filter: &str) -> Result<Vec<(String, BTreeMap<String, String>)>> {
         let f = crate::gris::parse_filter(filter)
             .map_err(|e| anyhow!("{e}"))?;
-        Ok(self
-            .gris
-            .lock()
-            .unwrap()
+        Ok(lock(&self.gris)
             .search(base, &f)
             .into_iter()
             .map(|e| (e.dn.clone(), e.attrs.clone()))
@@ -673,7 +669,7 @@ impl ClusterHandle {
         if let Some(j) = self.broker_join.take() {
             let _ = j.join();
         }
-        for (_, h) in self.nodes.lock().unwrap().iter_mut() {
+        for (_, h) in lock(&self.nodes).iter_mut() {
             h.shutdown();
         }
         self.pool.shutdown();

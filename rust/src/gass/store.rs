@@ -1,6 +1,6 @@
 //! Per-host GASS object store: named blobs with integrity hashes.
 
-use crate::util::xxhash64;
+use crate::util::{lock, xxhash64};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -44,22 +44,19 @@ impl GassStore {
     }
 
     pub fn put(&self, path: &str, data: Vec<u8>) {
-        self.inner
-            .lock()
-            .unwrap()
-            .insert(path.to_string(), Arc::new(data));
+        lock(&self.inner).insert(path.to_string(), Arc::new(data));
     }
 
     pub fn get(&self, path: &str) -> Option<Arc<Vec<u8>>> {
-        self.inner.lock().unwrap().get(path).cloned()
+        lock(&self.inner).get(path).cloned()
     }
 
     pub fn remove(&self, path: &str) -> bool {
-        self.inner.lock().unwrap().remove(path).is_some()
+        lock(&self.inner).remove(path).is_some()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -67,12 +64,7 @@ impl GassStore {
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .values()
-            .map(|v| v.len() as u64)
-            .sum()
+        lock(&self.inner).values().map(|v| v.len() as u64).sum()
     }
 
     pub fn checksum(&self, path: &str) -> Option<u64> {
@@ -80,8 +72,7 @@ impl GassStore {
     }
 
     pub fn list(&self) -> Vec<String> {
-        let mut v: Vec<String> =
-            self.inner.lock().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = lock(&self.inner).keys().cloned().collect();
         v.sort();
         v
     }

@@ -9,7 +9,7 @@
 
 use crate::gass::store::GassStore;
 use crate::netsim::{transfer_time, Topology, TransferSpec};
-use crate::util::{xxhash64, ByteSize};
+use crate::util::{lock, xxhash64, ByteSize};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -71,7 +71,7 @@ impl GassService {
     }
 
     pub fn store(&self, host: &str) -> Option<GassStore> {
-        self.stores.lock().unwrap().get(host).cloned()
+        lock(&self.stores).get(host).cloned()
     }
 
     /// Elastic membership: provision a store for a host that joined
@@ -79,12 +79,7 @@ impl GassService {
     /// its blobs) is left untouched. Transfers to/from hosts without a
     /// topology entry are shaped by the default link.
     pub fn add_host(&self, host: &str) -> GassStore {
-        self.stores
-            .lock()
-            .unwrap()
-            .entry(host.to_string())
-            .or_default()
-            .clone()
+        lock(&self.stores).entry(host.to_string()).or_default().clone()
     }
 
     pub fn topology(&self) -> &Topology {

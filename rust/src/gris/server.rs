@@ -61,7 +61,7 @@ fn handle(stream: &mut TcpStream, dir: &Arc<Mutex<Directory>>) -> Result<()> {
         match parse_filter(filter_src) {
             Err(e) => writeln!(stream, "ERR {e}")?,
             Ok(filter) => {
-                let dir = dir.lock().unwrap();
+                let dir = crate::util::lock(dir);
                 let hits = dir.search(base, &filter);
                 for e in &hits {
                     writeln!(stream, "ENTRY {}", e.dn)?;

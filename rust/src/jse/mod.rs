@@ -651,6 +651,9 @@ impl Jse {
                 let n = ids.len();
                 let mut assigned = false;
                 for k in 0..n {
+                    // gepslint:allow(panic-path): k < n and
+                    // n == ids.len(), so the modulo keeps the index in
+                    // bounds by construction
                     let id = ids[(self.rr + k) % n];
                     let task = match self
                         .runners

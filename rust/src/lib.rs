@@ -149,6 +149,43 @@
 //! python or XLA involved). This is the paper's requirement that the
 //! event application run natively at every grid node, taken as a build
 //! invariant.
+//!
+//! ## Checked invariants (gepslint)
+//!
+//! `cargo xlint` runs **gepslint** (the `xtask` crate), a repo-specific
+//! static-analysis pass that CI enforces on every PR. It pins the
+//! invariants this crate's correctness arguments lean on:
+//!
+//! - **Determinism.** The modules whose outputs are part of the repo's
+//!   bit-identity surface (brick codec, catalog/WAL, filter VM, JSE,
+//!   metrics rendering, netsim, qcache, scheduler, sim, wire) must not
+//!   iterate `HashMap`/`HashSet` into anything order-sensitive — merges,
+//!   encodings, fingerprints, WAL records, rendered metrics — and the
+//!   simulation/scheduling modules must not read `SystemTime`/`Instant`
+//!   or OS randomness (virtual DES time only). Ordered state lives in
+//!   `BTreeMap`/`Vec`; [`metrics::Registry::render`] is the canonical
+//!   example (sorted names, identical output for identical state).
+//! - **Registries.** Three identifier spaces are protocol surface and
+//!   each is declared in exactly one place, cross-checked against every
+//!   use site: [`wire::WIRE_KINDS`] (vs `Message::kind()`/`decode()`),
+//!   `catalog::schema::WAL_TAGS` (vs the `TAG_*` consts WAL replay
+//!   dispatches on), and [`metrics::names::REGISTERED`] (vs every
+//!   `.counter()/.gauge()/.histogram()` call site, wildcards covering
+//!   formatted families).
+//! - **Panic paths.** No `unwrap`/`expect`/slice-indexing/`panic!` in
+//!   the always-on service loops (`jse`, `node::executor`, `portal`);
+//!   a poisoned-lock recovery helper ([`util::lock`]) replaces bare
+//!   `.lock().unwrap()` crate-wide. Justified exceptions carry a
+//!   `// gepslint:allow(<lint>): <why>` annotation.
+//! - **Lock order.** Multi-lock paths acquire in the declared order
+//!   (catalog < nodes < gris < histograms < pending_joins), so the
+//!   cluster control plane cannot deadlock.
+//!
+//! The concurrency structures the executor's bit-identity rests on —
+//! the work-stealing page cursor, the strict-ordered drain, the engine
+//! pool's shared-receiver handoff — additionally have loom model checks
+//! (`RUSTFLAGS="--cfg loom" cargo test --lib loom_models`, a CI lane)
+//! and always-run interleaving stress tests next to the code they pin.
 
 pub mod brick;
 pub mod catalog;

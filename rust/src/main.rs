@@ -116,7 +116,7 @@ fn cmd_demo(flags: BTreeMap<String, String>) -> Result<()> {
     let status =
         cluster.wait(job, std::time::Duration::from_secs(300))?;
     let (processed, selected) = {
-        let cat = cluster.catalog.lock().unwrap();
+        let cat = geps::util::lock(&cluster.catalog);
         let j = cat.jobs.get(job).unwrap();
         (j.events_processed, j.events_selected)
     };

@@ -3,9 +3,58 @@
 //! (atomics); histograms use fixed log2 buckets so recording is O(1) with
 //! no allocation.
 
+use crate::util::lock;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// The single declared registry of every metric name this crate emits.
+///
+/// `gepslint`'s `metric-name-registry` pass cross-checks each
+/// `.counter()/.gauge()/.histogram()` call site against this list (and
+/// flags registered names that are never emitted), so dashboards and
+/// scrapers can treat it as the complete, authoritative metric
+/// catalogue. Formatted families use a `*` wildcard segment.
+pub mod names {
+    pub const REGISTERED: &[&str] = &[
+        "cluster.nodes_joined",
+        "cluster.nodes_killed",
+        "ft.bricks_rebalanced",
+        "ft.bricks_rereplicated",
+        "ft.bricks_unrecoverable",
+        "jse.job_wall_ns",
+        "jse.jobs_cancelled",
+        "jse.jobs_discovered",
+        "jse.jobs_done",
+        "jse.jobs_failed",
+        "jse.jobs_failed_explicitly",
+        "jse.jobs_in_flight",
+        "jse.jobs_policy.*",
+        "jse.jobs_queued",
+        "jse.nodes_joined",
+        "jse.nodes_lost",
+        "jse.stale_messages",
+        "jse.task_busy_ns",
+        "jse.tasks_dispatched",
+        "jse.tasks_failed_over",
+        "jse.tasks_outstanding",
+        "node.drain_reorder_depth",
+        "node.pack_stall_ns",
+        "node.pipeline.*.task_busy_ns",
+        "node.pipelines",
+        "portal.cancels",
+        "portal.submissions",
+        "portal.submissions_rejected",
+        "qcache.bytes",
+        "qcache.evictions",
+        "qcache.hits_full",
+        "qcache.hits_partial",
+        "qcache.promotions",
+        "qcache.shared_jobs",
+        "qcache.uncacheable_results",
+        "runtime.backend_selfcheck_ulps",
+    ];
+}
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -116,42 +165,33 @@ impl Registry {
     }
 
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
-        self.counters
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        lock(&self.counters).entry(name.to_string()).or_default().clone()
     }
 
     pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
-        self.gauges
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        lock(&self.gauges).entry(name.to_string()).or_default().clone()
     }
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
-        self.histograms
-            .lock()
-            .unwrap()
+        lock(&self.histograms)
             .entry(name.to_string())
             .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
             .clone()
     }
 
-    /// Text dump (portal /metrics endpoint).
+    /// Text dump (portal /metrics endpoint). Deterministic: the maps
+    /// are BTreeMaps, so names render in sorted order regardless of
+    /// registration order (snapshot ordering is part of the repo's
+    /// bit-identity surface — scrapers diff these dumps).
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (name, c) in self.counters.lock().unwrap().iter() {
+        for (name, c) in lock(&self.counters).iter() {
             out.push_str(&format!("counter {name} {}\n", c.get()));
         }
-        for (name, g) in self.gauges.lock().unwrap().iter() {
+        for (name, g) in lock(&self.gauges).iter() {
             out.push_str(&format!("gauge {name} {}\n", g.get()));
         }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
+        for (name, h) in lock(&self.histograms).iter() {
             out.push_str(&format!(
                 "hist {name} count={} mean={:.1} p50<={} p99<={}\n",
                 h.count(),
@@ -219,6 +259,36 @@ mod tests {
         let text = r.render();
         assert!(text.contains("gauge jse.jobs_in_flight 7"), "{text}");
         assert!(text.contains("gauge jse.jobs_queued 0"), "{text}");
+    }
+
+    #[test]
+    fn render_order_is_deterministic_and_sorted() {
+        // regression test for snapshot ordering: names must come out
+        // sorted (BTreeMap order) no matter the registration order
+        let r = Registry::new();
+        for name in ["z.last", "a.first", "m.middle"] {
+            r.counter(name).inc();
+        }
+        r.gauge("g.two").set(2);
+        r.gauge("g.one").set(1);
+        let text = r.render();
+        let names: Vec<&str> = text
+            .lines()
+            .filter_map(|l| l.split_whitespace().nth(1))
+            .collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "render must list names sorted: {text}");
+        assert_eq!(text, r.render(), "repeat renders must be identical");
+    }
+
+    #[test]
+    fn registered_names_are_sorted_and_unique() {
+        let names = super::names::REGISTERED;
+        let mut sorted: Vec<&str> = names.to_vec();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(names, sorted.as_slice(), "REGISTERED must be sorted+unique");
     }
 
     #[test]

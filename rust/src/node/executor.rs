@@ -186,6 +186,8 @@ pub fn spawn_node(
                 std::thread::sleep(hb_period);
             }
         })
+        // gepslint:allow(panic-path): thread spawn fails only on OS
+        // resource exhaustion at node bring-up — fatal by design
         .expect("spawn heartbeat");
 
     // executor thread
@@ -197,6 +199,9 @@ pub fn spawn_node(
         .name(format!("geps-node-{}", cfg.name))
         .spawn(move || {
             let store = BrickStore::new(
+                // gepslint:allow(panic-path): the cluster provisions
+                // every node's GASS store before spawning its executor;
+                // a miss is a wiring bug, not a runtime condition
                 gass.store(&name).expect("node has no gass store"),
             );
             let node_metrics = NodeMetrics::new(&metrics, pipelines);
@@ -258,6 +263,8 @@ pub fn spawn_node(
                 }
             }
         })
+        // gepslint:allow(panic-path): thread spawn fails only on OS
+        // resource exhaustion at node bring-up — fatal by design
         .expect("spawn node executor");
 
     NodeHandle {
@@ -444,6 +451,8 @@ fn run_task(
                     }
                     t0.elapsed().as_nanos() as u64
                 })
+                // gepslint:allow(panic-path): thread spawn fails only
+                // on OS resource exhaustion — fatal by design
                 .expect("spawn pipeline worker");
             workers.push(worker);
         }
@@ -599,11 +608,255 @@ fn complete_page(
         let mut m = word;
         while m != 0 {
             let i = w * 64 + m.trailing_zeros() as usize;
-            sel_f32[i] = 1.0;
+            let slot = sel_f32.get_mut(i).ok_or_else(|| {
+                anyhow!("filter bitmask bit {i} out of page range {batch_size}")
+            })?;
+            *slot = 1.0;
             selected.push((base + i) as u32);
             m &= m - 1;
         }
     }
     let histogram = pool.histogram(feats, sel_f32)?;
     Ok(PageOut { selected, histogram })
+}
+
+/// Always-run interleaving stress tests over the executor's two
+/// concurrency mechanisms — the work-stealing page cursor and the
+/// strict-ordered drain — plus the dead-worker audit. The
+/// `loom_models` module below checks the same invariants exhaustively
+/// at small scale under the loom scheduler.
+#[cfg(all(test, not(loom)))]
+mod interleave_tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn empty_drained() -> Drained {
+        Drained {
+            selected: Vec::new(),
+            histogram: Vec::new(),
+            pages: 0,
+            stall_ns: 0,
+            reorder_depth: 0,
+        }
+    }
+
+    /// Page histograms whose f32 fold is order-sensitive: the repeating
+    /// pattern [1e8, -1e8, 1.0] sums to k under page-order folding but
+    /// the 1.0 is absorbed (1e8 + 1.0 == 1e8 in f32) under most other
+    /// orders — so bit-identity with the sequential fold proves the
+    /// drain really reordered.
+    fn order_sensitive_pages(n: usize) -> Vec<PageOut> {
+        (0..n)
+            .map(|p| PageOut {
+                selected: vec![p as u32],
+                histogram: vec![match p % 3 {
+                    0 => 1.0e8,
+                    1 => -1.0e8,
+                    _ => 1.0,
+                }],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cursor_claims_each_page_exactly_once() {
+        let n_pages = 64usize;
+        let next = AtomicUsize::new(0);
+        let claims: Vec<AtomicUsize> =
+            (0..n_pages).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| loop {
+                    // the exact claim protocol the worker loop uses
+                    let p = next.fetch_add(1, Ordering::Relaxed);
+                    if p >= n_pages {
+                        break;
+                    }
+                    claims[p].fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        for (p, c) in claims.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "page {p} claim count");
+        }
+    }
+
+    #[test]
+    fn strict_drain_is_bit_identical_to_sequential_fold() {
+        let n_pages = 9usize;
+
+        // sequential reference fold, and proof the values are actually
+        // order-sensitive (reversed fold produces different bits)
+        let mut seq = empty_drained();
+        for page in order_sensitive_pages(n_pages) {
+            fold_page(&mut seq, page);
+        }
+        let mut rev = empty_drained();
+        for page in order_sensitive_pages(n_pages).into_iter().rev() {
+            fold_page(&mut rev, page);
+        }
+        assert_ne!(
+            seq.histogram[0].to_bits(),
+            rev.histogram[0].to_bits(),
+            "fixture must be fold-order-sensitive"
+        );
+
+        // three workers deliver their pages in reverse page order, so
+        // the drain's BTreeMap buffer is exercised on every run
+        let (tx, rx) = mpsc::channel::<(usize, PageOut)>();
+        let mut drained = empty_drained();
+        std::thread::scope(|s| {
+            for t in 0..3usize {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let pages = order_sensitive_pages(n_pages);
+                    for (p, page) in pages.into_iter().enumerate().rev() {
+                        if p % 3 == t {
+                            tx.send((p, page)).unwrap();
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            let mut buffer: BTreeMap<usize, PageOut> = BTreeMap::new();
+            let mut expect = 0usize;
+            while expect < n_pages {
+                if let Some(page) = buffer.remove(&expect) {
+                    fold_page(&mut drained, page);
+                    expect += 1;
+                    continue;
+                }
+                match rx.recv() {
+                    Ok((idx, page)) if idx == expect => {
+                        fold_page(&mut drained, page);
+                        expect += 1;
+                    }
+                    Ok((idx, page)) => {
+                        buffer.insert(idx, page);
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        assert_eq!(drained.pages, n_pages);
+        assert_eq!(
+            drained.histogram[0].to_bits(),
+            seq.histogram[0].to_bits(),
+            "strict drain must be bit-identical to the sequential fold"
+        );
+        assert_eq!(drained.selected, seq.selected);
+    }
+
+    #[test]
+    fn dead_worker_fails_the_page_audit_not_the_results() {
+        let n_pages = 8usize;
+        let delivered = 5usize;
+        let (tx, rx) = mpsc::channel::<(usize, PageOut)>();
+        let mut drained = empty_drained();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for (p, page) in
+                    order_sensitive_pages(delivered).into_iter().enumerate()
+                {
+                    tx.send((p, page)).unwrap();
+                }
+                // the worker dies here: pages 5..8 are never delivered
+            });
+            let mut expect = 0usize;
+            while expect < n_pages {
+                match rx.recv() {
+                    Ok((_, page)) => {
+                        fold_page(&mut drained, page);
+                        expect += 1;
+                    }
+                    Err(_) => break, // hangup: all workers gone
+                }
+            }
+        });
+        // run_task refuses TaskDone unless pages == n_pages; a dead
+        // pipeline therefore surfaces as a failure, never short results
+        assert_eq!(drained.pages, delivered);
+        assert_ne!(drained.pages, n_pages, "audit must flag the truncation");
+    }
+
+    #[test]
+    fn panicked_worker_is_reaped_as_join_error() {
+        let h = std::thread::Builder::new()
+            .name("geps-test-panic".into())
+            .spawn(|| panic!("injected worker panic (expected in test log)"))
+            .unwrap();
+        // run_task maps this Err into `first_err` -> TaskFailed
+        assert!(h.join().is_err());
+    }
+}
+
+/// Exhaustive model checks of the cursor and drain under the loom
+/// scheduler. Not compiled by plain `cargo test`: the CI loom lane adds
+/// the `loom` dev-dependency and runs
+/// `RUSTFLAGS="--cfg loom" cargo test --lib loom_models`.
+#[cfg(all(test, loom))]
+mod loom_models {
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+    use loom::sync::{Arc, Condvar, Mutex};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn loom_cursor_claims_each_page_exactly_once() {
+        loom::model(|| {
+            const PAGES: usize = 3;
+            let next = Arc::new(AtomicUsize::new(0));
+            let claims = Arc::new(Mutex::new(vec![0u8; PAGES]));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let next = Arc::clone(&next);
+                let claims = Arc::clone(&claims);
+                handles.push(loom::thread::spawn(move || loop {
+                    let p = next.fetch_add(1, Ordering::Relaxed);
+                    if p >= PAGES {
+                        break;
+                    }
+                    claims.lock().unwrap()[p] += 1;
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(*claims.lock().unwrap(), vec![1u8; PAGES]);
+        });
+    }
+
+    #[test]
+    fn loom_strict_drain_folds_in_page_order() {
+        loom::model(|| {
+            // two producers deliver pages 0 and 1 under any schedule;
+            // the drain must still fold page 0 before page 1
+            let slot: Arc<(Mutex<BTreeMap<usize, u32>>, Condvar)> =
+                Arc::new((Mutex::new(BTreeMap::new()), Condvar::new()));
+            let mut handles = Vec::new();
+            for idx in 0..2usize {
+                let slot = Arc::clone(&slot);
+                handles.push(loom::thread::spawn(move || {
+                    let (m, cv) = &*slot;
+                    m.lock().unwrap().insert(idx, idx as u32 + 10);
+                    cv.notify_all();
+                }));
+            }
+            let (m, cv) = &*slot;
+            let mut folded = Vec::new();
+            for expect in 0..2usize {
+                let mut buf = m.lock().unwrap();
+                loop {
+                    if let Some(v) = buf.remove(&expect) {
+                        folded.push(v);
+                        break;
+                    }
+                    buf = cv.wait(buf).unwrap();
+                }
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(folded, vec![10, 11]);
+        });
+    }
 }

@@ -10,6 +10,7 @@
 use crate::brick::{BrickFile, BrickId, ColumnarEvents};
 use crate::events::Event;
 use crate::gass::GassStore;
+use crate::util::lock;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -38,7 +39,7 @@ impl BrickStore {
 
     /// Load (and cache) a brick's events as columns, verifying checksums.
     pub fn load_columnar(&self, id: BrickId) -> Result<Arc<ColumnarEvents>> {
-        if let Some(hit) = self.cache.lock().unwrap().get(&id) {
+        if let Some(hit) = lock(&self.cache).get(&id) {
             return Ok(hit.clone());
         }
         let path = brick_path(id);
@@ -55,13 +56,13 @@ impl BrickStore {
             ));
         }
         let arc = Arc::new(cols);
-        self.cache.lock().unwrap().insert(id, arc.clone());
+        lock(&self.cache).insert(id, arc.clone());
         Ok(arc)
     }
 
     /// Drop a cached brick (e.g. after corruption-triggered refetch).
     pub fn evict(&self, id: BrickId) {
-        self.cache.lock().unwrap().remove(&id);
+        lock(&self.cache).remove(&id);
     }
 
     /// Bricks physically present in the GASS store.

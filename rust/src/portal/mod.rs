@@ -33,6 +33,7 @@ pub mod http;
 
 use crate::cluster::ClusterHandle;
 use crate::util::json::Json;
+use crate::util::lock;
 use anyhow::Result;
 use http::{Request, Response};
 use std::net::TcpListener;
@@ -133,25 +134,27 @@ fn url_decode(s: &str) -> String {
     let b = s.as_bytes();
     let mut out = Vec::with_capacity(b.len());
     let mut i = 0;
-    while i < b.len() {
-        match b[i] {
+    while let Some(&c) = b.get(i) {
+        match c {
             b'+' => {
                 out.push(b' ');
                 i += 1;
             }
-            b'%' if i + 2 < b.len() + 1 && i + 2 < b.len() + 1 => {
-                if i + 2 < b.len() {
-                    if let Ok(v) = u8::from_str_radix(
-                        std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("zz"),
-                        16,
-                    ) {
+            b'%' => {
+                let hex = b
+                    .get(i + 1..i + 3)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok());
+                match hex {
+                    Some(v) => {
                         out.push(v);
                         i += 3;
-                        continue;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
                     }
                 }
-                out.push(b'%');
-                i += 1;
             }
             c => {
                 out.push(c);
@@ -202,7 +205,7 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             }
         }
         ("GET", "/jobs") => {
-            let cat = cluster.catalog.lock().unwrap();
+            let cat = lock(&cluster.catalog);
             let list: Vec<Json> = cat
                 .jobs
                 .iter()
@@ -211,16 +214,19 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             Response::json(200, Json::Arr(list))
         }
         ("GET", p) if p.starts_with("/jobs/") => {
-            let id: u64 = match p["/jobs/".len()..].parse() {
-                Ok(v) => v,
-                Err(_) => {
+            let id: u64 = match p
+                .strip_prefix("/jobs/")
+                .and_then(|s| s.parse().ok())
+            {
+                Some(v) => v,
+                None => {
                     return Response::json(
                         400,
                         Json::obj().set("error", "bad job id"),
                     )
                 }
             };
-            let cat = cluster.catalog.lock().unwrap();
+            let cat = lock(&cluster.catalog);
             match job_json(&cat, id) {
                 Some(j) => Response::json(200, j),
                 None => Response::json(
@@ -258,9 +264,12 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             }
         }
         ("GET", p) if p.starts_with("/histogram/") => {
-            let id: u64 = match p["/histogram/".len()..].parse() {
-                Ok(v) => v,
-                Err(_) => {
+            let id: u64 = match p
+                .strip_prefix("/histogram/")
+                .and_then(|s| s.parse().ok())
+            {
+                Some(v) => v,
+                None => {
                     return Response::json(
                         400,
                         Json::obj().set("error", "bad job id"),
@@ -275,7 +284,8 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                         crate::events::FeatureId::ALL.iter().enumerate()
                     {
                         let row: Vec<Json> = h
-                            [i * bins..(i + 1) * bins]
+                            .get(i * bins..(i + 1) * bins)
+                            .unwrap_or(&[])
                             .iter()
                             .map(|v| Json::Num(*v as f64))
                             .collect();
@@ -290,7 +300,7 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             }
         }
         ("GET", "/bricks") => {
-            let cat = cluster.catalog.lock().unwrap();
+            let cat = lock(&cluster.catalog);
             let list: Vec<Json> = cat
                 .bricks
                 .iter()
@@ -313,9 +323,12 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             Response::json(200, Json::Arr(list))
         }
         ("POST", p) if p.starts_with("/cancel/") => {
-            let id: u64 = match p["/cancel/".len()..].parse() {
-                Ok(v) => v,
-                Err(_) => {
+            let id: u64 = match p
+                .strip_prefix("/cancel/")
+                .and_then(|s| s.parse().ok())
+            {
+                Some(v) => v,
+                None => {
                     return Response::json(
                         400,
                         Json::obj().set("error", "bad job id"),
@@ -374,7 +387,7 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             }
         }
         ("POST", p) if p.starts_with("/kill/") => {
-            let node = &p["/kill/".len()..];
+            let node = p.strip_prefix("/kill/").unwrap_or("");
             if cluster.kill_node(node) {
                 Response::json(200, Json::obj().set("killed", node))
             } else {

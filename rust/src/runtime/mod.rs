@@ -74,7 +74,7 @@ pub fn available() -> bool {
 pub fn available_in(dir: &Path) -> bool {
     static PROBES: OnceLock<Mutex<BTreeMap<PathBuf, bool>>> = OnceLock::new();
     let cache = PROBES.get_or_init(|| Mutex::new(BTreeMap::new()));
-    let mut cache = cache.lock().unwrap();
+    let mut cache = crate::util::lock(cache);
     if let Some(&ok) = cache.get(dir) {
         return ok;
     }

@@ -55,6 +55,21 @@ pub enum Message {
     NodeJoin { name: String, speed: f64, slots: u32 },
 }
 
+/// The single declared registry of wire kind bytes. `gepslint`'s
+/// `wire-kind-registry` pass cross-checks [`Message::kind`] and
+/// [`Message::decode`] against this table (and rejects duplicate
+/// bytes), so a skewed or reused kind can never ship: both ends of the
+/// protocol dispatch on these bytes.
+pub const WIRE_KINDS: &[(u8, &str)] = &[
+    (1, "SubmitTask"),
+    (2, "TaskDone"),
+    (3, "TaskFailed"),
+    (4, "Heartbeat"),
+    (5, "Shutdown"),
+    (6, "JobCancel"),
+    (7, "NodeJoin"),
+];
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireError(pub String);
 
@@ -332,6 +347,66 @@ mod tests {
             speed: 0.0,
             slots: 0,
         });
+    }
+
+    #[test]
+    fn wire_kinds_registry_agrees_with_kind() {
+        let samples: Vec<Message> = vec![
+            Message::SubmitTask {
+                job: 1,
+                task: Task {
+                    brick: BrickId::new(0, 0),
+                    range: (0, 1),
+                    source: None,
+                },
+                filter: "true".into(),
+                rsl: String::new(),
+            },
+            Message::TaskDone {
+                job: 1,
+                brick: BrickId::new(0, 0),
+                range: (0, 1),
+                events_in: 1,
+                events_selected: 0,
+                result_bytes: 0,
+                histogram: Vec::new(),
+            },
+            Message::TaskFailed {
+                job: 1,
+                brick: BrickId::new(0, 0),
+                range: (0, 1),
+                error: "e".into(),
+            },
+            Message::Heartbeat { node: "n".into(), free_slots: 1 },
+            Message::Shutdown,
+            Message::JobCancel { job: 1 },
+            Message::NodeJoin { name: "n".into(), speed: 1.0, slots: 1 },
+        ];
+        assert_eq!(
+            samples.len(),
+            WIRE_KINDS.len(),
+            "one sample per registered kind"
+        );
+        for m in &samples {
+            let variant = match m {
+                Message::SubmitTask { .. } => "SubmitTask",
+                Message::TaskDone { .. } => "TaskDone",
+                Message::TaskFailed { .. } => "TaskFailed",
+                Message::Heartbeat { .. } => "Heartbeat",
+                Message::Shutdown => "Shutdown",
+                Message::JobCancel { .. } => "JobCancel",
+                Message::NodeJoin { .. } => "NodeJoin",
+            };
+            let reg = WIRE_KINDS
+                .iter()
+                .find(|(_, n)| *n == variant)
+                .unwrap_or_else(|| panic!("{variant} missing from WIRE_KINDS"));
+            assert_eq!(reg.0, m.kind(), "kind byte skew for {variant}");
+        }
+        let mut bytes: Vec<u8> = WIRE_KINDS.iter().map(|(b, _)| *b).collect();
+        bytes.sort_unstable();
+        bytes.dedup();
+        assert_eq!(bytes.len(), WIRE_KINDS.len(), "duplicate kind byte");
     }
 
     #[test]

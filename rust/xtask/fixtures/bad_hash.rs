@@ -1,0 +1,21 @@
+// gepslint fixture — one unordered-iteration violation plus two legal
+// escapes (linted under the fake path src/node/bad.rs; never compiled).
+use std::collections::HashMap;
+
+pub fn snapshot(map: &HashMap<String, u64>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (k, _) in map.iter() {
+        out.push(k.clone());
+    }
+    out
+}
+
+pub fn total(map: &HashMap<String, u64>) -> u64 {
+    map.values().sum()
+}
+
+pub fn sorted_keys(map: &HashMap<String, u64>) -> Vec<String> {
+    let mut keys: Vec<String> = map.keys().cloned().collect();
+    keys.sort();
+    keys
+}

@@ -1,0 +1,14 @@
+// gepslint fixture — lock-order inversion and a poison-unsafe lock
+// (linted under the fake path src/cluster/bad.rs; never compiled).
+use crate::util::lock;
+
+pub fn inverted(c: &Cluster) {
+    let nodes = lock(&c.nodes);
+    let cat = lock(&c.catalog);
+    drop(cat);
+    drop(nodes);
+}
+
+pub fn poisoned(c: &Cluster) -> usize {
+    c.catalog.lock().unwrap().len()
+}

@@ -1,0 +1,15 @@
+// gepslint fixture — seeded panic-path violations (linted under the
+// fake path src/jse/bad.rs; never compiled).
+pub fn handle(v: Vec<u32>, r: Result<u32, ()>) -> u32 {
+    let a = r.unwrap();
+    let b = r.expect("boom");
+    let c = v[0];
+    if a + b + c > 3 {
+        panic!("nope");
+    }
+    // gepslint:allow(panic-path): index bounded by caller contract
+    let d = v[1];
+    // gepslint:allow(panic-path)
+    let e = v[2];
+    a + d + e
+}

@@ -1,0 +1,7 @@
+// gepslint fixture — HashMap inside a strict deterministic module
+// (linted under the fake path src/jse/bad_strict.rs; never compiled).
+use std::collections::HashMap;
+
+pub struct Tracker {
+    pub seen: Vec<String>,
+}

@@ -1,0 +1,10 @@
+// gepslint fixture — wall-clock use inside a simulator module
+// (linted under the fake path src/sim/bad.rs; never compiled).
+use std::time::SystemTime;
+
+pub fn now_ms() -> u128 {
+    SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0)
+}

@@ -1,0 +1,9 @@
+// gepslint fixture — metric registry with one never-used entry
+// (linted under the fake path src/metrics/mod.rs; never compiled).
+pub mod names {
+    pub const REGISTERED: &[&str] = &[
+        "jse.jobs_policy.*",
+        "node.pipelines",
+        "portal.unused_metric",
+    ];
+}

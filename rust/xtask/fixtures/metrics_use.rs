@@ -1,0 +1,7 @@
+// gepslint fixture — one rogue metric name next to two legal emits
+// (linted under the fake path src/node/bad_metrics.rs; never compiled).
+pub fn emit(m: &Metrics, policy: &str) {
+    m.counter("node.pipelines", 1);
+    m.counter("node.rogue", 1);
+    m.bump(&format!("jse.jobs_policy.{policy}"), 1);
+}

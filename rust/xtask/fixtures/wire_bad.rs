@@ -1,0 +1,32 @@
+// gepslint fixture — wire-kind registry skew: duplicate byte, kind()
+// arm missing from the registry, decode() disagreeing (linted under
+// the fake path src/wire/mod.rs; never compiled).
+pub const WIRE_KINDS: &[(u8, &str)] = &[
+    (1, "SubmitTask"),
+    (2, "TaskDone"),
+    (2, "Heartbeat"),
+];
+
+pub enum Message {
+    SubmitTask,
+    TaskDone,
+    Heartbeat,
+}
+
+impl Message {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Message::SubmitTask => 1,
+            Message::TaskDone => 2,
+            Message::Heartbeat => 3,
+        }
+    }
+
+    pub fn decode(k: u8) -> Option<Message> {
+        match k {
+            1 => Some(Message::SubmitTask),
+            3 => Some(Message::TaskDone),
+            _ => None,
+        }
+    }
+}

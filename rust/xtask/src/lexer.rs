@@ -1,0 +1,528 @@
+//! A minimal Rust lexer for gepslint.
+//!
+//! gepslint deliberately does NOT parse Rust: a token stream with line
+//! numbers is enough for every invariant it checks, and a hand-rolled
+//! lexer keeps the tool dependency-free (no syn/proc-macro2, so it
+//! builds offline). The lexer understands exactly the constructs that
+//! would otherwise produce false matches:
+//!
+//! - line and (nested) block comments — and it harvests
+//!   `gepslint:allow(...)` annotations from line comments;
+//! - string literals (plain, raw `r#"…"#`, byte, byte-raw), whose
+//!   *contents* are kept because the registry lints match metric-name
+//!   literals;
+//! - char literals vs lifetimes (`'a'` vs `'a`);
+//! - identifiers, numbers, and single-char punctuation.
+//!
+//! A post-pass ([`excluded_ranges`]) brace-matches every item annotated
+//! `#[test]`, `#[cfg(test)]`, or `#[cfg(loom)]` (incl. `cfg(all(test,
+//! …))`) so lints only fire on code that ships.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    /// String literal; `text` holds the contents without quotes.
+    Str,
+    /// Char literal (contents unimportant to any lint).
+    Char,
+    Lifetime,
+    /// Single punctuation character.
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub kind: Kind,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, kind: Kind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.is(Kind::Ident, text)
+    }
+
+    pub fn is_punct(&self, text: &str) -> bool {
+        self.is(Kind::Punct, text)
+    }
+}
+
+/// One `// gepslint:allow(<lint>): <justification>` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the comment sits on (not yet resolved to a code line).
+    pub line: u32,
+    pub lint: String,
+    /// False when the justification after the `):` is missing/empty —
+    /// itself a lint error (`allow-missing-justification`).
+    pub justified: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+}
+
+fn parse_allow(comment: &str, line: u32) -> Option<Allow> {
+    let at = comment.find("gepslint:allow")?;
+    let rest = &comment[at + "gepslint:allow".len()..];
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let lint = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let justified = match after.strip_prefix(':') {
+        Some(j) => !j.trim().is_empty(),
+        None => false,
+    };
+    Some(Allow { line, lint, justified })
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into tokens + allow annotations. Never fails: bytes it
+/// does not understand are skipped (they can only appear inside the
+/// comments/strings already handled, or in code the lints ignore).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = Lexed::default();
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ if c.is_ascii_whitespace() => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                if let Some(a) = parse_allow(&src[start..i], line) {
+                    out.allows.push(a);
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1u32;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let (tok, ni, nl) = lex_plain_string(src, i, line);
+                out.toks.push(tok);
+                i = ni;
+                line = nl;
+            }
+            b'\'' => {
+                // escaped char literal: scan to the closing quote
+                if b.get(i + 1) == Some(&b'\\') {
+                    let mut j = i + 2;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    out.toks.push(Tok {
+                        text: String::new(),
+                        kind: Kind::Char,
+                        line,
+                    });
+                    i = j + 1;
+                } else {
+                    // one char (any width) then a quote => char literal;
+                    // otherwise a lifetime
+                    let mut j = i + 2;
+                    while j < b.len() && (b[j] & 0xC0) == 0x80 {
+                        j += 1;
+                    }
+                    if i + 1 < b.len() && b.get(j) == Some(&b'\'') {
+                        out.toks.push(Tok {
+                            text: String::new(),
+                            kind: Kind::Char,
+                            line,
+                        });
+                        i = j + 1;
+                    } else {
+                        let mut j = i + 1;
+                        while j < b.len() && is_ident_cont(b[j]) {
+                            j += 1;
+                        }
+                        out.toks.push(Tok {
+                            text: src[i + 1..j].to_string(),
+                            kind: Kind::Lifetime,
+                            line,
+                        });
+                        i = j;
+                    }
+                }
+            }
+            b'r' | b'b' => {
+                // raw/byte string forms: r"…", r#"…"#, b"…", br#"…"#,
+                // b'…'; raw idents r#name; otherwise a plain ident
+                let mut j = i + 1;
+                if c == b'b' && b.get(j) == Some(&b'r') {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while b.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if b.get(j) == Some(&b'"') {
+                    let (tok, ni, nl) = lex_raw_string(src, j, hashes, line);
+                    out.toks.push(tok);
+                    i = ni;
+                    line = nl;
+                } else if c == b'b' && b.get(i + 1) == Some(&b'\'') {
+                    // byte char literal b'x' / b'\n'
+                    let mut j = i + 2;
+                    if b.get(j) == Some(&b'\\') {
+                        j += 1;
+                    }
+                    j += 1;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    out.toks.push(Tok {
+                        text: String::new(),
+                        kind: Kind::Char,
+                        line,
+                    });
+                    i = j + 1;
+                } else if c == b'r' && hashes > 0 && b.get(j).copied().is_some_and(is_ident_start) {
+                    // raw identifier r#type
+                    let start = j;
+                    while j < b.len() && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    out.toks.push(Tok {
+                        text: src[start..j].to_string(),
+                        kind: Kind::Ident,
+                        line,
+                    });
+                    i = j;
+                } else {
+                    let start = i;
+                    let mut j = i + 1;
+                    while j < b.len() && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    out.toks.push(Tok {
+                        text: src[start..j].to_string(),
+                        kind: Kind::Ident,
+                        line,
+                    });
+                    i = j;
+                }
+            }
+            _ if is_ident_start(c) => {
+                let start = i;
+                let mut j = i + 1;
+                while j < b.len() && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    text: src[start..j].to_string(),
+                    kind: Kind::Ident,
+                    line,
+                });
+                i = j;
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                let mut j = i + 1;
+                while j < b.len() {
+                    let d = b[j];
+                    if is_ident_cont(d) {
+                        j += 1;
+                    } else if d == b'.'
+                        && b.get(j + 1).is_some_and(|n| n.is_ascii_digit())
+                        && !src[start..j].contains('.')
+                    {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.toks.push(Tok {
+                    text: src[start..j].to_string(),
+                    kind: Kind::Num,
+                    line,
+                });
+                i = j;
+            }
+            _ if c.is_ascii() => {
+                out.toks.push(Tok {
+                    text: (c as char).to_string(),
+                    kind: Kind::Punct,
+                    line,
+                });
+                i += 1;
+            }
+            _ => i += 1, // stray non-ASCII outside strings/comments
+        }
+    }
+    out
+}
+
+fn lex_plain_string(src: &str, start: usize, mut line: u32) -> (Tok, usize, u32) {
+    let b = src.as_bytes();
+    let open_line = line;
+    let mut i = start + 1;
+    let content_start = i;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => {
+                return (
+                    Tok {
+                        text: src[content_start..i].to_string(),
+                        kind: Kind::Str,
+                        line: open_line,
+                    },
+                    i + 1,
+                    line,
+                );
+            }
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (
+        Tok { text: src[content_start..].to_string(), kind: Kind::Str, line: open_line },
+        i,
+        line,
+    )
+}
+
+fn lex_raw_string(
+    src: &str,
+    quote: usize,
+    hashes: usize,
+    mut line: u32,
+) -> (Tok, usize, u32) {
+    let b = src.as_bytes();
+    let open_line = line;
+    let mut i = quote + 1;
+    let content_start = i;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == b'"' {
+            let mut ok = true;
+            for k in 0..hashes {
+                if b.get(i + 1 + k) != Some(&b'#') {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return (
+                    Tok {
+                        text: src[content_start..i].to_string(),
+                        kind: Kind::Str,
+                        line: open_line,
+                    },
+                    i + 1 + hashes,
+                    line,
+                );
+            }
+        }
+        i += 1;
+    }
+    (
+        Tok { text: src[content_start..].to_string(), kind: Kind::Str, line: open_line },
+        i,
+        line,
+    )
+}
+
+/// Token-index ranges (inclusive) covered by `#[test]`, `#[cfg(test)]`
+/// or `#[cfg(loom)]` items — lints skip these.
+pub fn excluded_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_punct("#") && toks.get(i + 1).is_some_and(|t| t.is_punct("["))) {
+            i += 1;
+            continue;
+        }
+        // matching `]` + idents inside the attribute
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut gated = false;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct("[") {
+                depth += 1;
+            } else if t.is_punct("]") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.kind == Kind::Ident && (t.text == "test" || t.text == "loom") {
+                gated = true;
+            }
+            j += 1;
+        }
+        if !gated {
+            i = j + 1;
+            continue;
+        }
+        // skip any further attributes, then brace-match the item
+        let start = i;
+        let mut k = j + 1;
+        while k + 1 < toks.len() && toks[k].is_punct("#") && toks[k + 1].is_punct("[") {
+            let mut d = 0i32;
+            let mut m = k + 1;
+            while m < toks.len() {
+                if toks[m].is_punct("[") {
+                    d += 1;
+                } else if toks[m].is_punct("]") {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                m += 1;
+            }
+            k = m + 1;
+        }
+        // item body: first `{ … }` block, or a `;` before any brace
+        let mut d = 0i32;
+        let mut saw_brace = false;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct("{") {
+                d += 1;
+                saw_brace = true;
+            } else if t.is_punct("}") {
+                d -= 1;
+                if saw_brace && d == 0 {
+                    break;
+                }
+            } else if t.is_punct(";") && !saw_brace && d == 0 {
+                break;
+            } else if (t.is_punct("(") || t.is_punct("[")) && !saw_brace {
+                d += 1;
+            } else if (t.is_punct(")") || t.is_punct("]")) && !saw_brace {
+                d -= 1;
+            }
+            k += 1;
+        }
+        out.push((start, k.min(toks.len().saturating_sub(1))));
+        i = k + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_chars_lifetimes() {
+        let l = lex(r#"let s = "a\"b"; let c = 'x'; fn f<'a>(v: &'a str) {}"#);
+        let strs: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == Kind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].text, "a\\\"b");
+        assert_eq!(l.toks.iter().filter(|t| t.kind == Kind::Char).count(), 1);
+        assert_eq!(
+            l.toks.iter().filter(|t| t.kind == Kind::Lifetime).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_comments() {
+        let src = "let x = r#\"quote \" inside\"#; // trailing\n/* block /* nested */ end */ let y = 1;";
+        let l = lex(src);
+        let strs: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == Kind::Str).collect();
+        assert_eq!(strs[0].text, "quote \" inside");
+        assert!(l.toks.iter().any(|t| t.is_ident("y")));
+    }
+
+    #[test]
+    fn allow_annotations() {
+        let src = "// gepslint:allow(panic-path): index bounded by modulo\nlet x = v[0];\n// gepslint:allow(lock-order)\nlet y = 1;";
+        let l = lex(src);
+        assert_eq!(l.allows.len(), 2);
+        assert_eq!(l.allows[0].lint, "panic-path");
+        assert!(l.allows[0].justified);
+        assert!(!l.allows[1].justified);
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let l = lex("for i in 0..16 { let f = 1.5f32 + 0xFF as f32; }");
+        let nums: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "16", "1.5f32", "0xFF"]);
+    }
+
+    #[test]
+    fn excluded_ranges_cover_test_mods() {
+        let src = "fn live() { a.unwrap(); }\n#[cfg(test)]\nmod tests { fn t() { b.unwrap(); } }\nfn live2() {}";
+        let l = lex(src);
+        let ranges = excluded_ranges(&l.toks);
+        assert_eq!(ranges.len(), 1);
+        let in_range = |name: &str| {
+            let idx =
+                l.toks.iter().position(|t| t.is_ident(name)).unwrap();
+            ranges.iter().any(|&(a, b)| idx >= a && idx <= b)
+        };
+        assert!(!in_range("live"));
+        assert!(in_range("tests"));
+        assert!(in_range("b"));
+        assert!(!in_range("live2"));
+    }
+
+    #[test]
+    fn excluded_ranges_cover_loom_and_gated_fns() {
+        let src = "#[cfg(all(test, loom))]\nmod loom_models { fn m() {} }\n#[test]\nfn unit() { x.unwrap(); }\nfn live() {}";
+        let l = lex(src);
+        let ranges = excluded_ranges(&l.toks);
+        assert_eq!(ranges.len(), 2);
+        let live =
+            l.toks.iter().position(|t| t.is_ident("live")).unwrap();
+        assert!(!ranges.iter().any(|&(a, b)| live >= a && live <= b));
+    }
+}

@@ -1,0 +1,239 @@
+//! Determinism lints.
+//!
+//! The repo's core invariant is bit-identity: partial histograms merged
+//! at the JSE must equal a central-server run no matter how bricks are
+//! scattered, cached, or pipelined. Unordered `HashMap`/`HashSet`
+//! iteration feeding a merge, an encoder, a fingerprint, a WAL record,
+//! or a metrics snapshot silently breaks that, and wall-clock or OS
+//! randomness inside the simulators breaks replayability.
+//!
+//! - `hash-in-deterministic-module`: modules on the strict list may
+//!   not mention `HashMap`/`HashSet` at all — use `BTreeMap`/`BTreeSet`.
+//! - `unordered-hash-iteration`: elsewhere, iterating a hash container
+//!   is flagged unless the statement reduces order away (`sum`, `len`,
+//!   `fold`, …) or the collected result is sorted immediately after.
+//! - `time-in-deterministic-module`: no `SystemTime`/`Instant`/OS
+//!   randomness inside `sim`/`netsim`/`scheduler` — virtual time and
+//!   seeded PRNGs only.
+
+use super::{span_has_ident, statement_span, SourceFile, Violation};
+use crate::lexer::Kind;
+
+/// Modules where hash containers are banned outright: everything on a
+/// merge/encode/fingerprint/WAL/metrics path.
+const STRICT_MODULES: &[&str] = &[
+    "brick",
+    "catalog",
+    "filterexpr",
+    "jse",
+    "metrics",
+    "netsim",
+    "qcache",
+    "scheduler",
+    "sim",
+    "wire",
+];
+
+/// Modules that must run on virtual time + seeded randomness.
+const TIME_MODULES: &[&str] = &["netsim", "scheduler", "sim"];
+
+const TIME_IDENTS: &[&str] =
+    &["SystemTime", "Instant", "thread_rng", "getrandom", "RandomState"];
+
+/// Iterator adapters whose results are order-insensitive, and
+/// order-erasing terminal ops — their presence in the statement
+/// neutralises an unordered-iteration flag.
+const REDUCERS: &[&str] =
+    &["sum", "count", "fold", "any", "all", "min", "max", "len", "is_empty"];
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "retain",
+];
+
+pub fn check(file: &SourceFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let module = file.module().to_string();
+    let toks = file.toks();
+
+    let strict = STRICT_MODULES.contains(&module.as_str());
+    for (i, t) in toks.iter().enumerate() {
+        if file.is_excluded(i) || t.kind != Kind::Ident {
+            continue;
+        }
+        if strict && (t.text == "HashMap" || t.text == "HashSet") {
+            out.push(Violation {
+                file: file.path.clone(),
+                line: t.line,
+                lint: "hash-in-deterministic-module",
+                msg: format!(
+                    "{} in deterministic module `{}` — iteration order feeds \
+                     merges/encoding here; use BTreeMap/BTreeSet",
+                    t.text, module
+                ),
+            });
+        }
+        if TIME_MODULES.contains(&module.as_str())
+            && (TIME_IDENTS.contains(&t.text.as_str())
+                || (t.text == "rand" && toks.get(i + 1).is_some_and(|n| n.is_punct(":"))))
+        {
+            out.push(Violation {
+                file: file.path.clone(),
+                line: t.line,
+                lint: "time-in-deterministic-module",
+                msg: format!(
+                    "`{}` in `{}` — simulators must use virtual time and \
+                     seeded PRNGs so runs replay bit-identically",
+                    t.text, module
+                ),
+            });
+        }
+    }
+
+    if !strict {
+        out.extend(unordered_iteration(file));
+    }
+    out
+}
+
+/// Names bound to hash containers in this file: `name: HashMap<…>`
+/// fields/params, and `let name = HashMap::new()`-style bindings.
+fn hash_vars(file: &SourceFile) -> Vec<String> {
+    let toks = file.toks();
+    let mut vars = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        let lo = i.saturating_sub(12);
+        let mut j = i;
+        while j > lo {
+            j -= 1;
+            if toks[j].is_ident("let") {
+                let mut k = j + 1;
+                if toks.get(k).is_some_and(|t| t.is_ident("mut")) {
+                    k += 1;
+                }
+                if let Some(v) = toks.get(k) {
+                    if v.kind == Kind::Ident {
+                        vars.push(v.text.clone());
+                    }
+                }
+                break;
+            }
+            if toks[j].is_punct(":")
+                && j > 0
+                && toks[j - 1].kind == Kind::Ident
+                && !toks.get(j + 1).is_some_and(|n| n.is_punct(":"))
+                && !toks[j - 1].is_ident("HashMap")
+                && !toks[j - 1].is_ident("HashSet")
+            {
+                vars.push(toks[j - 1].text.clone());
+                break;
+            }
+        }
+    }
+    vars.sort();
+    vars.dedup();
+    vars
+}
+
+fn unordered_iteration(file: &SourceFile) -> Vec<Violation> {
+    let vars = hash_vars(file);
+    if vars.is_empty() {
+        return Vec::new();
+    }
+    let toks = file.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if file.is_excluded(i) {
+            continue;
+        }
+        let t = &toks[i];
+        // `<expr with hash var> .iter() …` chains
+        let method_hit = t.is_punct(".")
+            && toks
+                .get(i + 1)
+                .is_some_and(|m| m.kind == Kind::Ident && ITER_METHODS.contains(&m.text.as_str()))
+            && toks.get(i + 2).is_some_and(|p| p.is_punct("("));
+        // `for … in <hash var> { … }`
+        let for_hit = t.is_ident("for");
+        if !method_hit && !for_hit {
+            continue;
+        }
+        let span = statement_span(toks, i);
+        if !vars.iter().any(|v| span_has_ident(toks, span, v)) {
+            continue;
+        }
+        if for_hit {
+            // the loop *variable* might shadow; require the hash var
+            // after `in`, not in the pattern
+            let in_pos = (span.0..=span.1).find(|&k| toks[k].is_ident("in"));
+            let ok = match in_pos {
+                Some(p) => vars.iter().any(|v| span_has_ident(toks, (p, span.1), v)),
+                None => false,
+            };
+            if !ok {
+                continue;
+            }
+        }
+        if REDUCERS.iter().any(|r| span_has_ident(toks, span, r)) {
+            continue;
+        }
+        if sorted_after(file, span) {
+            continue;
+        }
+        let what = if for_hit { "for-loop over" } else { "iteration of" };
+        out.push(Violation {
+            file: file.path.clone(),
+            line: t.line,
+            lint: "unordered-hash-iteration",
+            msg: format!(
+                "{what} a HashMap/HashSet — order is nondeterministic; \
+                 use a BTree container, sort the collected result, or \
+                 reduce with an order-insensitive fold"
+            ),
+        });
+    }
+    // `for … in map.iter()` trips both the for-loop and the method
+    // pattern on the same line; report it once
+    out.dedup_by(|a, b| a.line == b.line);
+    out
+}
+
+/// `let v = map.keys().collect(); v.sort();` is fine: if the statement
+/// is a let-binding, accept when the bound name is sorted later.
+fn sorted_after(file: &SourceFile, span: (usize, usize)) -> bool {
+    let toks = file.toks();
+    if !toks[span.0].is_ident("let") {
+        return false;
+    }
+    let mut k = span.0 + 1;
+    if toks.get(k).is_some_and(|t| t.is_ident("mut")) {
+        k += 1;
+    }
+    let name = match toks.get(k) {
+        Some(t) if t.kind == Kind::Ident => t.text.clone(),
+        _ => return false,
+    };
+    let mut j = span.1;
+    while j + 2 < toks.len() {
+        j += 1;
+        if toks[j].kind == Kind::Ident
+            && toks[j].text == name
+            && toks[j + 1].is_punct(".")
+            && toks
+                .get(j + 2)
+                .is_some_and(|m| m.kind == Kind::Ident && m.text.starts_with("sort"))
+        {
+            return true;
+        }
+    }
+    false
+}

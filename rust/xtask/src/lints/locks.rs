@@ -1,0 +1,187 @@
+//! Lock-hygiene lints.
+//!
+//! - `bare-lock-unwrap`: `.lock().unwrap()` propagates mutex poisoning
+//!   into a panic cascade across the whole service. The repo standard
+//!   is the poison-recovering helper `crate::util::lock(&m)`.
+//! - `lock-order`: functions that hold more than one of the cluster's
+//!   shared locks must acquire them in the declared global order
+//!   (`catalog < nodes < gris < histograms < pending_joins`); an
+//!   out-of-order or repeated acquisition while an earlier guard is
+//!   live is a deadlock waiting for the right interleaving.
+
+use super::{SourceFile, Violation};
+use crate::lexer::Kind;
+
+/// Declared global acquisition order. The index IS the rank.
+const ORDER: &[&str] = &["catalog", "nodes", "gris", "histograms", "pending_joins"];
+
+/// Map a guard/field identifier to its canonical lock name. Trailing
+/// digits are stripped first, so `cat2`/`joins2` resolve too.
+fn canonical(ident: &str) -> Option<&'static str> {
+    let base = ident.trim_end_matches(|c: char| c.is_ascii_digit());
+    match base {
+        "catalog" | "cat" => Some("catalog"),
+        "nodes" => Some("nodes"),
+        "gris" | "dir" => Some("gris"),
+        "histograms" | "hist" => Some("histograms"),
+        "pending_joins" | "joins" => Some("pending_joins"),
+        _ => None,
+    }
+}
+
+fn rank(name: &str) -> usize {
+    ORDER.iter().position(|&o| o == name).unwrap_or(usize::MAX)
+}
+
+struct Guard {
+    name: &'static str,
+    binding: String,
+    depth: i32,
+}
+
+pub fn check(file: &SourceFile) -> Vec<Violation> {
+    if !file.path.starts_with("src/") {
+        return Vec::new();
+    }
+    let toks = file.toks();
+    let mut out = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.is_punct("{") {
+            depth += 1;
+            continue;
+        }
+        if t.is_punct("}") {
+            depth -= 1;
+            guards.retain(|g| g.depth <= depth);
+            continue;
+        }
+        if file.is_excluded(i) {
+            continue;
+        }
+
+        // bare `.lock().unwrap()`
+        if t.is_punct(".")
+            && toks.get(i + 1).is_some_and(|m| m.is_ident("lock"))
+            && toks.get(i + 2).is_some_and(|p| p.is_punct("("))
+            && toks.get(i + 3).is_some_and(|p| p.is_punct(")"))
+            && toks.get(i + 4).is_some_and(|p| p.is_punct("."))
+            && toks.get(i + 5).is_some_and(|m| m.is_ident("unwrap"))
+        {
+            out.push(Violation {
+                file: file.path.clone(),
+                line: toks[i + 1].line,
+                lint: "bare-lock-unwrap",
+                msg: "`.lock().unwrap()` panics forever once poisoned — use \
+                      the poison-recovering `crate::util::lock(&m)` helper"
+                    .to_string(),
+            });
+        }
+
+        // `drop(guard)` releases a tracked guard early
+        if t.is_ident("drop") && toks.get(i + 1).is_some_and(|p| p.is_punct("(")) {
+            if let Some(g) = toks.get(i + 2) {
+                if g.kind == Kind::Ident {
+                    guards.retain(|x| x.binding != g.text);
+                }
+            }
+        }
+
+        // lock acquisitions, three shapes:
+        //   (A) `<ident>.lock()`            — direct mutex field
+        //   (B) `lock(&…<ident>)`           — the util helper
+        //   (C) `.cat()`                    — JSE catalog-lock helper
+        let acquired: Option<&'static str> = if t.is_punct(".")
+            && toks.get(i + 1).is_some_and(|m| m.is_ident("lock"))
+            && toks.get(i + 2).is_some_and(|p| p.is_punct("("))
+            && i > 0
+            && toks[i - 1].kind == Kind::Ident
+        {
+            canonical(&toks[i - 1].text)
+        } else if t.is_ident("lock")
+            && toks.get(i + 1).is_some_and(|p| p.is_punct("("))
+            && !(i > 0 && (toks[i - 1].is_punct(".") || toks[i - 1].is_ident("fn")))
+        {
+            last_ident_in_args(toks, i + 1).and_then(canonical)
+        } else if t.is_punct(".")
+            && toks.get(i + 1).is_some_and(|m| m.is_ident("cat"))
+            && toks.get(i + 2).is_some_and(|p| p.is_punct("("))
+            && toks.get(i + 3).is_some_and(|p| p.is_punct(")"))
+        {
+            Some("catalog")
+        } else {
+            None
+        };
+
+        let Some(name) = acquired else { continue };
+        let line = t.line.max(toks.get(i + 1).map_or(0, |x| x.line));
+        for g in &guards {
+            if rank(name) <= rank(g.name) {
+                out.push(Violation {
+                    file: file.path.clone(),
+                    line,
+                    lint: "lock-order",
+                    msg: format!(
+                        "acquiring `{}` while `{}` guard `{}` is live violates \
+                         the declared order {} — acquire in order or drop first",
+                        name,
+                        g.name,
+                        g.binding,
+                        ORDER.join(" < ")
+                    ),
+                });
+            }
+        }
+        // only let-bound guards stay live past the statement
+        if let Some(binding) = guard_binding(toks, i) {
+            guards.push(Guard { name, binding, depth });
+        }
+    }
+    out
+}
+
+/// Last identifier inside the parenthesised argument list opening at
+/// `open` — for `lock(&self.cluster.catalog)` that is `catalog`.
+fn last_ident_in_args(toks: &[crate::lexer::Tok], open: usize) -> Option<String> {
+    let mut depth = 0i32;
+    let mut last = None;
+    for t in &toks[open..] {
+        if t.is_punct("(") {
+            depth += 1;
+        } else if t.is_punct(")") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.kind == Kind::Ident {
+            last = Some(t.text.clone());
+        }
+    }
+    last
+}
+
+/// If the statement containing the acquisition at `i` is
+/// `let [mut] g = <acquisition-chain>;`, return `g`. Chained
+/// temporaries (`lock(&x).field`) die at the `;` and are not tracked.
+fn guard_binding(toks: &[crate::lexer::Tok], i: usize) -> Option<String> {
+    let (start, end) = super::statement_span(toks, i);
+    if !toks[start].is_ident("let") {
+        return None;
+    }
+    if !toks.get(end).is_some_and(|t| t.is_punct(";")) {
+        return None;
+    }
+    let mut k = start + 1;
+    if toks.get(k).is_some_and(|t| t.is_ident("mut")) {
+        k += 1;
+    }
+    let name = toks.get(k)?;
+    if name.kind == Kind::Ident && toks.get(k + 1).is_some_and(|t| t.is_punct("=")) {
+        Some(name.text.clone())
+    } else {
+        None
+    }
+}

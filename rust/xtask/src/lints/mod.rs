@@ -1,0 +1,157 @@
+//! Lint driver: file model, violation type, allow resolution.
+
+pub mod determinism;
+pub mod locks;
+pub mod panicpath;
+pub mod registry;
+
+use crate::lexer::{self, Kind, Lexed, Tok};
+
+/// A lexed source file plus the token ranges lints must skip
+/// (`#[test]` / `#[cfg(test)]` / `#[cfg(loom)]` items).
+pub struct SourceFile {
+    /// Repo-relative path, e.g. `src/jse/mod.rs` — lint scoping keys
+    /// off this, so fixtures fake it.
+    pub path: String,
+    pub lexed: Lexed,
+    pub excluded: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, content: &str) -> Self {
+        let lexed = lexer::lex(content);
+        let excluded = lexer::excluded_ranges(&lexed.toks);
+        SourceFile { path: path.to_string(), lexed, excluded }
+    }
+
+    pub fn toks(&self) -> &[Tok] {
+        &self.lexed.toks
+    }
+
+    pub fn is_excluded(&self, idx: usize) -> bool {
+        self.excluded.iter().any(|&(a, b)| idx >= a && idx <= b)
+    }
+
+    /// First path component under `src/` ("jse" for `src/jse/mod.rs`),
+    /// or the bare file stem for `src/main.rs`-style paths.
+    pub fn module(&self) -> &str {
+        let rel = self.path.strip_prefix("src/").unwrap_or(&self.path);
+        match rel.find('/') {
+            Some(i) => &rel[..i],
+            None => rel.strip_suffix(".rs").unwrap_or(rel),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// Resolve each `gepslint:allow` comment to the code line it covers:
+/// its own line when code shares the line (trailing comment), else the
+/// first token line below it (so a run of comment lines above the
+/// statement still lands on the statement).
+fn allow_targets(file: &SourceFile) -> Vec<(String, u32, bool)> {
+    let mut out = Vec::new();
+    for a in &file.lexed.allows {
+        let trailing = file.toks().iter().any(|t| t.line == a.line);
+        let line = if trailing {
+            a.line
+        } else {
+            file.toks()
+                .iter()
+                .map(|t| t.line)
+                .filter(|&l| l > a.line)
+                .min()
+                .unwrap_or(a.line)
+        };
+        out.push((a.lint.clone(), line, a.justified));
+    }
+    out
+}
+
+/// Run every lint over every file, apply allow suppression, and
+/// report unjustified allows. Output is sorted by (file, line).
+pub fn run_all(files: &[SourceFile]) -> Vec<Violation> {
+    let mut raw = Vec::new();
+    for f in files {
+        raw.extend(determinism::check(f));
+        raw.extend(panicpath::check(f));
+        raw.extend(locks::check(f));
+    }
+    raw.extend(registry::check(files));
+
+    let mut out = Vec::new();
+    for f in files {
+        for (lint, line, justified) in allow_targets(f) {
+            if !justified {
+                out.push(Violation {
+                    file: f.path.clone(),
+                    line,
+                    lint: "allow-missing-justification",
+                    msg: format!(
+                        "gepslint:allow({lint}) needs a justification: \
+                         `// gepslint:allow({lint}): <why this is safe>`"
+                    ),
+                });
+            }
+        }
+    }
+    for v in raw {
+        let suppressed = files.iter().any(|f| {
+            f.path == v.file
+                && allow_targets(f)
+                    .iter()
+                    .any(|(l, ln, just)| *just && l == v.lint && *ln == v.line)
+        });
+        if !suppressed {
+            out.push(v);
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+/// Shared helper: span of the statement containing token `idx` —
+/// from just after the previous `;`/`{`/`}` to the next `;` or the
+/// `{` that opens a block (for/if headers), clamped to file bounds.
+pub(crate) fn statement_span(toks: &[Tok], idx: usize) -> (usize, usize) {
+    let mut start = idx;
+    while start > 0 {
+        let t = &toks[start - 1];
+        if t.is_punct(";") || t.is_punct("{") || t.is_punct("}") {
+            break;
+        }
+        start -= 1;
+    }
+    let mut end = idx;
+    let mut depth = 0i32;
+    while end + 1 < toks.len() {
+        let t = &toks[end];
+        if t.is_punct("(") || t.is_punct("[") {
+            depth += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            depth -= 1;
+        } else if depth <= 0 && (t.is_punct(";") || t.is_punct("{") || t.is_punct("}")) {
+            break;
+        }
+        end += 1;
+    }
+    (start, end)
+}
+
+pub(crate) fn span_has_ident(toks: &[Tok], span: (usize, usize), name: &str) -> bool {
+    toks[span.0..=span.1.min(toks.len() - 1)]
+        .iter()
+        .any(|t| t.kind == Kind::Ident && t.text == name)
+}

@@ -1,0 +1,94 @@
+//! Panic-path lint.
+//!
+//! The JSE event loop, the node executor's worker pipelines, and the
+//! portal's request handlers are long-running services: one panic
+//! takes down every in-flight job on the node (PR-2's "panic-proof
+//! event loop" guarantee). In these files `unwrap()`, `expect()`,
+//! panicking macros, and bare slice indexing are lint errors — return
+//! a typed error instead, or justify a genuine logic-error assert with
+//! `// gepslint:allow(panic-path): <why it cannot fire>`.
+
+use super::{SourceFile, Violation};
+use crate::lexer::Kind;
+
+/// Files covered by the guarantee.
+fn in_scope(path: &str) -> bool {
+    path.starts_with("src/jse/")
+        || path.starts_with("src/portal/")
+        || path == "src/node/executor.rs"
+}
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that make a following `[` a pattern/type/literal position
+/// rather than an indexing expression.
+const NON_EXPR_BEFORE_BRACKET: &[&str] = &[
+    "let", "mut", "ref", "in", "if", "else", "match", "return", "as", "move", "for", "while",
+    "loop", "break", "continue", "fn", "pub", "use", "mod", "struct", "enum", "impl", "trait",
+    "where", "type", "const", "static", "dyn", "box", "await", "async", "unsafe",
+];
+
+pub fn check(file: &SourceFile) -> Vec<Violation> {
+    if !in_scope(&file.path) {
+        return Vec::new();
+    }
+    let toks = file.toks();
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if file.is_excluded(i) {
+            continue;
+        }
+        let t = &toks[i];
+        // .unwrap( / .expect(
+        if t.is_punct(".")
+            && toks
+                .get(i + 1)
+                .is_some_and(|m| m.is_ident("unwrap") || m.is_ident("expect"))
+            && toks.get(i + 2).is_some_and(|p| p.is_punct("("))
+        {
+            out.push(violation(
+                file,
+                toks[i + 1].line,
+                format!(
+                    ".{}() on a service path — convert to a typed error \
+                     (`ok_or_else`/`?`) or justify with an allow",
+                    toks[i + 1].text
+                ),
+            ));
+        }
+        // panic!/unreachable!/todo!/unimplemented!/assert!…
+        if t.kind == Kind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(i + 1).is_some_and(|p| p.is_punct("!"))
+        {
+            out.push(violation(
+                file,
+                t.line,
+                format!("`{}!` on a service path — return an error instead", t.text),
+            ));
+        }
+        // slice/array indexing: `[` whose previous token is an
+        // expression tail (identifier, `)`, or `]`)
+        if t.is_punct("[") && i > 0 {
+            let p = &toks[i - 1];
+            let expr_tail = p.is_punct(")")
+                || p.is_punct("]")
+                || (p.kind == Kind::Ident && !NON_EXPR_BEFORE_BRACKET.contains(&p.text.as_str()));
+            if expr_tail {
+                out.push(violation(
+                    file,
+                    t.line,
+                    "slice indexing can panic on a service path — use \
+                     `.get()`/`.get_mut()` with a typed error, or justify \
+                     with an allow"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn violation(file: &SourceFile, line: u32, msg: String) -> Violation {
+    Violation { file: file.path.clone(), line, lint: "panic-path", msg }
+}

@@ -1,0 +1,476 @@
+//! Registry lints: single-source-of-truth cross-checks.
+//!
+//! Three identifier spaces in this repo are protocol surface — wire
+//! message kinds, WAL record tags, and metric names. Each must be
+//! declared in exactly one registry, and every use site must agree
+//! with it:
+//!
+//! - `wire-kind-registry`: `wire::WIRE_KINDS` vs `Message::kind()` vs
+//!   the `decode()` dispatch — a duplicated or skewed kind byte turns
+//!   into silent cross-version misparses.
+//! - `wal-tag-registry`: `catalog::schema::WAL_TAGS` vs the `TAG_*`
+//!   consts — WAL replay dispatches on these bytes.
+//! - `metric-name-registry`: every string passed to
+//!   `.counter()/.gauge()/.histogram()/.bump()` must appear in
+//!   `metrics::names::REGISTERED` (wildcard entries like
+//!   `jse.jobs_policy.*` cover formatted families), and every
+//!   registered name must be used — so dashboards can trust the list.
+
+use super::{SourceFile, Violation};
+use crate::lexer::{Kind, Tok};
+
+pub fn check(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    out.extend(wire(files));
+    out.extend(wal(files));
+    out.extend(metrics(files));
+    out.extend(single_declaration(files));
+    out
+}
+
+fn v(file: &str, line: u32, lint: &'static str, msg: String) -> Violation {
+    Violation { file: file.to_string(), line, lint, msg }
+}
+
+/// Each registry const must be declared in exactly one place.
+fn single_declaration(files: &[SourceFile]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (name, lint) in [
+        ("WIRE_KINDS", "wire-kind-registry"),
+        ("WAL_TAGS", "wal-tag-registry"),
+        ("REGISTERED", "metric-name-registry"),
+    ] {
+        let mut decls: Vec<(String, u32)> = Vec::new();
+        for f in files {
+            for (i, t) in f.toks().iter().enumerate() {
+                if t.is_ident(name)
+                    && i > 0
+                    && f.toks()[i - 1].is_ident("const")
+                    && !f.is_excluded(i)
+                {
+                    decls.push((f.path.clone(), t.line));
+                }
+            }
+        }
+        if decls.is_empty() {
+            out.push(v(
+                "src",
+                0,
+                lint,
+                format!("registry `{name}` is not declared anywhere"),
+            ));
+        }
+        for (path, line) in decls.iter().skip(1) {
+            out.push(v(
+                path,
+                *line,
+                lint,
+                format!(
+                    "duplicate declaration of registry `{name}` — it must \
+                     live in exactly one place ({} already declares it)",
+                    decls[0].0
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Find `const <name>: … = &[…]` and return the token index just past
+/// the initializer's `[` (the type annotation's own `[` is skipped by
+/// seeking the `=` first).
+fn registry_body(file: &SourceFile, name: &str) -> Option<usize> {
+    let toks = file.toks();
+    for i in 0..toks.len() {
+        if toks[i].is_ident(name) && i > 0 && toks[i - 1].is_ident("const") {
+            let mut j = i;
+            while j < toks.len() && !toks[j].is_punct("=") {
+                if toks[j].is_punct(";") {
+                    return None;
+                }
+                j += 1;
+            }
+            for (k, t) in toks.iter().enumerate().skip(j) {
+                if t.is_punct("[") {
+                    return Some(k + 1);
+                }
+                if t.is_punct(";") {
+                    return None;
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Token range of the brace-matched body of `fn <name>`.
+fn fn_body(toks: &[Tok], name: &str) -> Option<(usize, usize)> {
+    for i in 0..toks.len() {
+        if toks[i].is_ident("fn") && toks.get(i + 1).is_some_and(|t| t.is_ident(name)) {
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is_punct("{") {
+                j += 1;
+            }
+            let start = j;
+            let mut depth = 0i32;
+            while j < toks.len() {
+                if toks[j].is_punct("{") {
+                    depth += 1;
+                } else if toks[j].is_punct("}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((start, j));
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+    None
+}
+
+fn wire(files: &[SourceFile]) -> Vec<Violation> {
+    const LINT: &str = "wire-kind-registry";
+    let Some(f) = files.iter().find(|f| f.path == "src/wire/mod.rs") else {
+        return Vec::new();
+    };
+    let toks = f.toks();
+    let mut out = Vec::new();
+
+    // registry: (kind byte, variant name) pairs
+    let mut reg: Vec<(String, String, u32)> = Vec::new();
+    if let Some(mut i) = registry_body(f, "WIRE_KINDS") {
+        while i < toks.len() && !toks[i].is_punct("]") {
+            if toks[i].kind == Kind::Num {
+                if let Some(s) = toks[i + 1..]
+                    .iter()
+                    .take(3)
+                    .find(|t| t.kind == Kind::Str)
+                {
+                    reg.push((toks[i].text.clone(), s.text.clone(), toks[i].line));
+                }
+            }
+            i += 1;
+        }
+    } else {
+        out.push(v(&f.path, 0, LINT, "WIRE_KINDS registry missing".into()));
+        return out;
+    }
+    for (n, (num, _, line)) in reg.iter().enumerate() {
+        if reg[..n].iter().any(|(m, _, _)| m == num) {
+            out.push(v(&f.path, *line, LINT, format!("duplicate wire kind byte {num}")));
+        }
+    }
+
+    // Message::kind(): `Message::Variant { .. } => <num>`
+    let mut kind_pairs: Vec<(String, String)> = Vec::new();
+    if let Some((a, b)) = fn_body(toks, "kind") {
+        let mut i = a;
+        while i + 3 < b {
+            if toks[i].is_ident("Message")
+                && toks[i + 1].is_punct(":")
+                && toks[i + 2].is_punct(":")
+                && toks[i + 3].kind == Kind::Ident
+            {
+                let variant = toks[i + 3].text.clone();
+                let mut j = i + 4;
+                while j + 2 < b {
+                    if toks[j].is_punct("=") && toks[j + 1].is_punct(">") {
+                        if toks[j + 2].kind == Kind::Num {
+                            kind_pairs.push((variant.clone(), toks[j + 2].text.clone()));
+                        }
+                        break;
+                    }
+                    j += 1;
+                }
+                i = j;
+            }
+            i += 1;
+        }
+    }
+    for (variant, num) in &kind_pairs {
+        if !reg.iter().any(|(n, s, _)| n == num && s == variant) {
+            out.push(v(
+                &f.path,
+                0,
+                LINT,
+                format!("Message::kind() maps {variant} => {num}, absent from WIRE_KINDS"),
+            ));
+        }
+    }
+    for (num, name, line) in &reg {
+        if !kind_pairs.iter().any(|(s, n)| s == name && n == num) {
+            out.push(v(
+                &f.path,
+                *line,
+                LINT,
+                format!("WIRE_KINDS entry ({num}, {name}) not produced by Message::kind()"),
+            ));
+        }
+    }
+
+    // decode(): `<num> => … Message::Variant`
+    if let Some((a, b)) = fn_body(toks, "decode") {
+        let mut i = a;
+        while i + 2 < b {
+            if toks[i].kind == Kind::Num
+                && toks[i + 1].is_punct("=")
+                && toks[i + 2].is_punct(">")
+            {
+                let num = toks[i].text.clone();
+                let mut j = i + 3;
+                while j + 3 < b {
+                    if toks[j].is_ident("Message")
+                        && toks[j + 1].is_punct(":")
+                        && toks[j + 2].is_punct(":")
+                    {
+                        let variant = &toks[j + 3].text;
+                        if !reg.iter().any(|(n, s, _)| *n == num && s == variant) {
+                            out.push(v(
+                                &f.path,
+                                toks[i].line,
+                                LINT,
+                                format!(
+                                    "decode() maps {num} => Message::{variant}, \
+                                     disagreeing with WIRE_KINDS"
+                                ),
+                            ));
+                        }
+                        break;
+                    }
+                    j += 1;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+fn wal(files: &[SourceFile]) -> Vec<Violation> {
+    const LINT: &str = "wal-tag-registry";
+    let mut out = Vec::new();
+
+    // every `const TAG_*: u8 = <num>;` under src/catalog — that
+    // namespace is WAL surface (filterexpr's fingerprint TAG_* consts
+    // are a separate, non-persisted namespace)
+    let mut tags: Vec<(String, String, String, u32)> = Vec::new(); // (file, name, value, line)
+    for f in files.iter().filter(|f| f.path.starts_with("src/catalog/")) {
+        let toks = f.toks();
+        for i in 0..toks.len() {
+            if toks[i].is_ident("const")
+                && toks.get(i + 1).is_some_and(|t| t.text.starts_with("TAG_"))
+                && !f.is_excluded(i)
+            {
+                let name = toks[i + 1].text.clone();
+                if let Some(n) = toks[i + 2..]
+                    .iter()
+                    .take(6)
+                    .find(|t| t.kind == Kind::Num)
+                {
+                    tags.push((f.path.clone(), name, n.text.clone(), toks[i + 1].line));
+                }
+            }
+        }
+    }
+    for (path, name, _, line) in &tags {
+        if path != "src/catalog/schema.rs" {
+            out.push(v(
+                path,
+                *line,
+                LINT,
+                format!("WAL tag `{name}` declared outside catalog/schema.rs"),
+            ));
+        }
+    }
+    for (n, (_, name, val, line)) in tags.iter().enumerate() {
+        if tags[..n].iter().any(|(_, m, w, _)| m == name || w == val) {
+            out.push(v(
+                &tags[n].0,
+                *line,
+                LINT,
+                format!("WAL tag `{name}` = {val} collides with an earlier tag"),
+            ));
+        }
+    }
+
+    // WAL_TAGS entries: `(TAG_IDENT, "name")`
+    let Some(f) = files.iter().find(|f| f.path == "src/catalog/schema.rs") else {
+        return out;
+    };
+    let toks = f.toks();
+    let mut reg: Vec<(String, u32)> = Vec::new();
+    if let Some(mut i) = registry_body(f, "WAL_TAGS") {
+        while i < toks.len() && !toks[i].is_punct("]") {
+            if toks[i].text.starts_with("TAG_") && toks[i].kind == Kind::Ident {
+                reg.push((toks[i].text.clone(), toks[i].line));
+            }
+            i += 1;
+        }
+    } else {
+        out.push(v(&f.path, 0, LINT, "WAL_TAGS registry missing".into()));
+        return out;
+    }
+    for (name, line) in &reg {
+        if !tags.iter().any(|(_, t, _, _)| t == name) {
+            out.push(v(
+                &f.path,
+                *line,
+                LINT,
+                format!("WAL_TAGS references `{name}` but no such const exists"),
+            ));
+        }
+    }
+    for (path, name, _, line) in &tags {
+        if path == "src/catalog/schema.rs" && !reg.iter().any(|(r, _)| r == name) {
+            out.push(v(path, *line, LINT, format!("`{name}` missing from WAL_TAGS")));
+        }
+    }
+    out
+}
+
+/// Does declared pattern `pat` (may end each segment run with `*`,
+/// which matches any suffix) cover `used`?
+fn name_matches(pat: &str, used: &str) -> bool {
+    if pat == used {
+        return true;
+    }
+    if used.contains('*') {
+        // a formatted template only matches an identical wildcard entry
+        return false;
+    }
+    match pat.split_once('*') {
+        Some((pre, post)) => {
+            used.starts_with(pre) && used.ends_with(post) && used.len() >= pre.len() + post.len()
+        }
+        None => false,
+    }
+}
+
+fn metrics(files: &[SourceFile]) -> Vec<Violation> {
+    const LINT: &str = "metric-name-registry";
+    let mut out = Vec::new();
+
+    let mut reg: Vec<(String, u32)> = Vec::new();
+    let Some(mf) = files.iter().find(|f| f.path == "src/metrics/mod.rs") else {
+        return out;
+    };
+    if let Some(mut i) = registry_body(mf, "REGISTERED") {
+        let toks = mf.toks();
+        while i < toks.len() && !toks[i].is_punct("]") {
+            if toks[i].kind == Kind::Str {
+                reg.push((toks[i].text.clone(), toks[i].line));
+            }
+            i += 1;
+        }
+    } else {
+        out.push(v(&mf.path, 0, LINT, "metrics::names::REGISTERED registry missing".into()));
+        return out;
+    }
+    for (n, (name, line)) in reg.iter().enumerate() {
+        if reg[..n].iter().any(|(m, _)| m == name) {
+            out.push(v(&mf.path, *line, LINT, format!("duplicate registered metric `{name}`")));
+        }
+    }
+
+    // use sites: `.counter("…") / .gauge / .histogram / .bump`
+    let mut used: Vec<(String, String, u32)> = Vec::new(); // (file, name, line)
+    for f in files {
+        let toks = f.toks();
+        for i in 0..toks.len() {
+            if f.is_excluded(i) {
+                continue;
+            }
+            let hit = toks[i].is_punct(".")
+                && toks.get(i + 1).is_some_and(|m| {
+                    m.is_ident("counter")
+                        || m.is_ident("gauge")
+                        || m.is_ident("histogram")
+                        || m.is_ident("bump")
+                })
+                && toks.get(i + 2).is_some_and(|p| p.is_punct("("));
+            if !hit {
+                continue;
+            }
+            // span of the argument list
+            let mut depth = 0i32;
+            let mut j = i + 2;
+            let mut end = toks.len();
+            while j < toks.len() {
+                if toks[j].is_punct("(") {
+                    depth += 1;
+                } else if toks[j].is_punct(")") {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = j;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            let args = &toks[i + 3..end.min(toks.len())];
+            let fmt = args
+                .iter()
+                .position(|t| t.is_ident("format"))
+                .and_then(|p| args[p..].iter().find(|t| t.kind == Kind::Str));
+            match fmt {
+                Some(tpl) => used.push((
+                    f.path.clone(),
+                    wildcard_template(&tpl.text),
+                    toks[i + 1].line,
+                )),
+                // every bare string literal in the argument is a name: a
+                // `.counter(match status { A => "x", B => "y" })` emits
+                // either, so all arms must be registered. Calls whose
+                // name is not a literal here (compute-kernel
+                // `.histogram(feats)`) have no Str and are skipped.
+                None => {
+                    for t in args.iter().filter(|t| t.kind == Kind::Str) {
+                        used.push((f.path.clone(), t.text.clone(), t.line));
+                    }
+                }
+            }
+        }
+    }
+    for (path, name, line) in &used {
+        if !reg.iter().any(|(pat, _)| name_matches(pat, name)) {
+            out.push(v(
+                path,
+                *line,
+                LINT,
+                format!("metric `{name}` is not in metrics::names::REGISTERED"),
+            ));
+        }
+    }
+    for (pat, line) in &reg {
+        if !used.iter().any(|(_, name, _)| name_matches(pat, name)) {
+            out.push(v(
+                &mf.path,
+                *line,
+                LINT,
+                format!("registered metric `{pat}` is never emitted"),
+            ));
+        }
+    }
+    out
+}
+
+/// `"jse.jobs_policy.{policy}"` → `"jse.jobs_policy.*"`.
+fn wildcard_template(tpl: &str) -> String {
+    let mut out = String::new();
+    let mut depth = 0u32;
+    for c in tpl.chars() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    out.push('*');
+                }
+                depth += 1;
+            }
+            '}' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}

@@ -1,0 +1,95 @@
+//! gepslint — repo-specific determinism & concurrency lints.
+//!
+//! Run as `cargo xlint` (alias in `.cargo/config.toml`). Walks every
+//! `.rs` file under the crate's `src/`, runs the lint families in
+//! [`lints`], prints `file:line: [lint] message` per violation, and
+//! exits non-zero if any remain unsuppressed. See `rust/xtask/README.md`
+//! for the lint catalogue and the allow-annotation syntax.
+
+mod lexer;
+mod lints;
+#[cfg(test)]
+mod selftest;
+
+use std::path::{Path, PathBuf};
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn default_root() -> PathBuf {
+    // xtask lives at rust/xtask; the linted crate at rust/src
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let mut root = default_root();
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(dir) = args.next() else {
+                    eprintln!("--root requires a directory argument");
+                    std::process::exit(2);
+                };
+                root = PathBuf::from(dir);
+            }
+            "--help" | "-h" => {
+                println!(
+                    "gepslint: determinism & concurrency lints for the geps crate\n\
+                     usage: cargo xlint [--root <src-dir>]"
+                );
+                return;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let mut paths = Vec::new();
+    if let Err(e) = collect_rs(&root, &mut paths) {
+        eprintln!("gepslint: cannot walk {}: {e}", root.display());
+        std::process::exit(2);
+    }
+
+    let mut files = Vec::new();
+    for p in &paths {
+        let content = match std::fs::read_to_string(p) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("gepslint: cannot read {}: {e}", p.display());
+                std::process::exit(2);
+            }
+        };
+        let rel = p
+            .strip_prefix(&root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(lints::SourceFile::new(&format!("src/{rel}"), &content));
+    }
+
+    let violations = lints::run_all(&files);
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("gepslint: {} files clean", files.len());
+    } else {
+        println!("gepslint: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,163 @@
+//! gepslint's own test suite: seeded-violation fixtures (each bad file
+//! must be caught, each escape hatch respected) plus the meta-check
+//! that the real crate under `rust/src` is lint-clean.
+
+use crate::lints::{self, SourceFile};
+
+fn file(path: &str, content: &str) -> SourceFile {
+    SourceFile::new(path, content)
+}
+
+fn count(vs: &[lints::Violation], lint: &str) -> usize {
+    vs.iter().filter(|v| v.lint == lint).count()
+}
+
+#[test]
+fn panic_path_fixture() {
+    let f = file("src/jse/bad.rs", include_str!("../fixtures/bad_panic.rs"));
+    let vs = lints::run_all(std::slice::from_ref(&f));
+    // unwrap, expect, v[0], panic!, and the unjustified-allow index —
+    // while the justified allow suppresses its own line
+    assert_eq!(count(&vs, "panic-path"), 5, "got: {vs:?}");
+    assert_eq!(count(&vs, "allow-missing-justification"), 1, "got: {vs:?}");
+    assert!(
+        !vs.iter().any(|v| v.lint == "panic-path" && v.line == 11),
+        "justified allow must suppress line 11: {vs:?}"
+    );
+}
+
+#[test]
+fn panic_path_ignores_out_of_scope_and_tests() {
+    let f = file("src/brick/codec.rs", include_str!("../fixtures/bad_panic.rs"));
+    assert_eq!(lints::panicpath::check(&f).len(), 0);
+    let gated = "#[cfg(test)]\nmod tests {\n    fn t(v: Vec<u32>) -> u32 { v[0] }\n}\n";
+    let f = file("src/jse/mod.rs", gated);
+    assert_eq!(lints::panicpath::check(&f).len(), 0);
+}
+
+#[test]
+fn hash_iteration_fixture() {
+    let f = file("src/node/bad.rs", include_str!("../fixtures/bad_hash.rs"));
+    let vs = lints::determinism::check(&f);
+    // only the bare for-loop trips; `.sum()` and sort-after-collect
+    // are the sanctioned escapes
+    assert_eq!(count(&vs, "unordered-hash-iteration"), 1, "got: {vs:?}");
+    assert_eq!(vs[0].line, 7);
+}
+
+#[test]
+fn strict_module_fixture() {
+    let f = file("src/jse/bad_strict.rs", include_str!("../fixtures/bad_strict.rs"));
+    let vs = lints::determinism::check(&f);
+    assert_eq!(count(&vs, "hash-in-deterministic-module"), 1, "got: {vs:?}");
+}
+
+#[test]
+fn time_fixture() {
+    let f = file("src/sim/bad.rs", include_str!("../fixtures/bad_time.rs"));
+    let vs = lints::determinism::check(&f);
+    assert_eq!(count(&vs, "time-in-deterministic-module"), 2, "got: {vs:?}");
+    // same file outside a simulator module is fine
+    let f = file("src/portal/clock.rs", include_str!("../fixtures/bad_time.rs"));
+    assert_eq!(count(&lints::determinism::check(&f), "time-in-deterministic-module"), 0);
+}
+
+#[test]
+fn locks_fixture() {
+    let f = file("src/cluster/bad.rs", include_str!("../fixtures/bad_locks.rs"));
+    let vs = lints::locks::check(&f);
+    assert_eq!(count(&vs, "lock-order"), 1, "got: {vs:?}");
+    assert_eq!(count(&vs, "bare-lock-unwrap"), 1, "got: {vs:?}");
+}
+
+#[test]
+fn locks_in_order_is_clean() {
+    let src = "pub fn fine(c: &C) {\n    let cat = lock(&c.catalog);\n    let nodes = lock(&c.nodes);\n    drop(nodes);\n    drop(cat);\n}\n";
+    let f = file("src/cluster/ok.rs", src);
+    assert_eq!(lints::locks::check(&f).len(), 0);
+}
+
+#[test]
+fn wire_registry_fixture() {
+    let f = file("src/wire/mod.rs", include_str!("../fixtures/wire_bad.rs"));
+    let vs = lints::registry::check(std::slice::from_ref(&f));
+    // duplicate byte 2, kind() arm Heartbeat=>3 unregistered,
+    // registry entry (2, Heartbeat) unproduced, decode 3=>TaskDone skew
+    assert_eq!(count(&vs, "wire-kind-registry"), 4, "got: {vs:?}");
+}
+
+#[test]
+fn metrics_registry_fixture() {
+    let files = [
+        file("src/metrics/mod.rs", include_str!("../fixtures/metrics_decl.rs")),
+        file("src/node/bad_metrics.rs", include_str!("../fixtures/metrics_use.rs")),
+    ];
+    let vs = lints::registry::check(&files);
+    let ms: Vec<_> = vs.iter().filter(|v| v.lint == "metric-name-registry").collect();
+    // `node.rogue` unregistered + `portal.unused_metric` never emitted;
+    // the format!() template matches the `jse.jobs_policy.*` wildcard
+    assert_eq!(ms.len(), 2, "got: {ms:?}");
+    assert!(ms.iter().any(|v| v.msg.contains("node.rogue")));
+    assert!(ms.iter().any(|v| v.msg.contains("portal.unused_metric")));
+}
+
+#[test]
+fn run_all_catches_every_seeded_fixture() {
+    let files = [
+        file("src/jse/bad.rs", include_str!("../fixtures/bad_panic.rs")),
+        file("src/node/bad.rs", include_str!("../fixtures/bad_hash.rs")),
+        file("src/jse/bad_strict.rs", include_str!("../fixtures/bad_strict.rs")),
+        file("src/sim/bad.rs", include_str!("../fixtures/bad_time.rs")),
+        file("src/cluster/bad.rs", include_str!("../fixtures/bad_locks.rs")),
+        file("src/wire/mod.rs", include_str!("../fixtures/wire_bad.rs")),
+        file("src/metrics/mod.rs", include_str!("../fixtures/metrics_decl.rs")),
+        file("src/node/bad_metrics.rs", include_str!("../fixtures/metrics_use.rs")),
+    ];
+    let vs = lints::run_all(&files);
+    for lint in [
+        "panic-path",
+        "unordered-hash-iteration",
+        "hash-in-deterministic-module",
+        "time-in-deterministic-module",
+        "lock-order",
+        "bare-lock-unwrap",
+        "wire-kind-registry",
+        "metric-name-registry",
+        "allow-missing-justification",
+    ] {
+        assert!(count(&vs, lint) > 0, "lint `{lint}` caught nothing: {vs:?}");
+    }
+}
+
+/// The meta-check: the real crate must be clean. This is the same walk
+/// `cargo xlint` does, so a red test here means a red CI lint step.
+#[test]
+fn real_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    let mut paths = Vec::new();
+    collect(&root, &mut paths);
+    assert!(!paths.is_empty(), "no sources under {}", root.display());
+    let mut files = Vec::new();
+    for p in &paths {
+        let content = std::fs::read_to_string(p).unwrap();
+        let rel = p.strip_prefix(&root).unwrap().to_string_lossy().replace('\\', "/");
+        files.push(SourceFile::new(&format!("src/{rel}"), &content));
+    }
+    let vs = lints::run_all(&files);
+    let report: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+    assert!(vs.is_empty(), "real tree has violations:\n{}", report.join("\n"));
+}
+
+fn collect(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir).unwrap().collect::<Result<Vec<_>, _>>().unwrap();
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
