@@ -1,0 +1,373 @@
+//! Bench: **Ext-C** — the faultline chaos matrix as a measured verdict
+//! run. A seeded scenario matrix (each fault class alone, then
+//! combined, under multi-job traffic and node churn) flows through the
+//! live cluster, and every job is scored against the faultline
+//! contract:
+//!
+//! - sealed `Done` with a histogram bit-identical to the fault-free
+//!   baseline, or
+//! - sealed `Failed` with a typed, non-empty catalogue error, and
+//! - terminal within the timeout — a hang is a scored failure, never a
+//!   stuck bench.
+//!
+//! The same seed is replayed once more to score trace determinism
+//! (identical injected-fault traces and identical verdicts). Results
+//! land in `BENCH_ext_chaos.json` at the repo root; CI runs this in
+//! smoke mode (`GEPS_BENCH_SMOKE=1`), uploads the JSON, and gates on
+//! the verdict booleans.
+//!
+//! Hermetic: kernels run on the backend `GEPS_BACKEND` selects (the
+//! pure-Rust reference programs by default).
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use geps::faultline::FaultConfig;
+use geps::util::bench::print_table;
+use std::time::{Duration, Instant};
+
+const FILTERS: [&str; 2] = ["n_tracks >= 0", "met > 10"];
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn chaos_config(n_events: usize, fault: FaultConfig) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 2;
+    cfg.n_events = n_events;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0;
+    cfg.qcache_enabled = false;
+    cfg.fault = fault;
+    cfg
+}
+
+fn histogram_bits(cluster: &ClusterHandle, job: u64) -> Option<Vec<u32>> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if let Some(h) = cluster.histogram(job) {
+            return Some(h.iter().map(|v| v.to_bits()).collect());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    None
+}
+
+/// Per-scenario score sheet.
+struct Score {
+    name: &'static str,
+    jobs: usize,
+    done: usize,
+    failed_typed: usize,
+    hangs: usize,
+    bit_mismatches: usize,
+    untyped_failures: usize,
+    injected: usize,
+    wall_s: f64,
+}
+
+impl Score {
+    fn ok(&self) -> bool {
+        self.hangs == 0
+            && self.bit_mismatches == 0
+            && self.untyped_failures == 0
+            && self.done + self.failed_typed == self.jobs
+    }
+}
+
+/// Run one scenario: submit the job mix, optionally churn a node, and
+/// score every job against the contract. Returns the score plus the
+/// (status, histogram-bits) verdict list for determinism replays.
+#[allow(clippy::type_complexity)]
+fn run_scenario(
+    name: &'static str,
+    n_events: usize,
+    fault: FaultConfig,
+    baseline: &[Vec<u32>],
+    churn: bool,
+) -> (Score, Vec<(String, Option<Vec<u32>>)>) {
+    let cluster = ClusterHandle::start(
+        chaos_config(n_events, fault),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .expect("cluster start");
+    let jobs: Vec<(u64, usize)> = vec![
+        (cluster.submit(FILTERS[0], "locality"), 0),
+        (cluster.submit(FILTERS[1], "central"), 1),
+    ];
+    if churn {
+        std::thread::sleep(Duration::from_millis(50));
+        cluster.kill_node("node2");
+    }
+    let mut score = Score {
+        name,
+        jobs: jobs.len(),
+        done: 0,
+        failed_typed: 0,
+        hangs: 0,
+        bit_mismatches: 0,
+        untyped_failures: 0,
+        injected: 0,
+        wall_s: 0.0,
+    };
+    let mut verdicts = Vec::new();
+    let t0 = Instant::now();
+    for (job, fi) in jobs {
+        match cluster.wait(job, TIMEOUT) {
+            Ok(JobStatus::Done) => {
+                let bits = histogram_bits(&cluster, job);
+                if bits.as_deref() == Some(baseline[fi].as_slice()) {
+                    score.done += 1;
+                } else {
+                    score.bit_mismatches += 1;
+                }
+                verdicts.push(("done".to_string(), bits));
+            }
+            Ok(JobStatus::Failed) => {
+                let err = cluster
+                    .catalog
+                    .lock()
+                    .unwrap()
+                    .jobs
+                    .get(job)
+                    .and_then(|j| j.error.clone());
+                if err.map(|e| !e.is_empty()).unwrap_or(false) {
+                    score.failed_typed += 1;
+                } else {
+                    score.untyped_failures += 1;
+                }
+                verdicts.push(("failed".to_string(), None));
+            }
+            Ok(other) => {
+                // cancelled/queued can't happen here; score as untyped
+                score.untyped_failures += 1;
+                verdicts.push((format!("{other:?}"), None));
+            }
+            Err(_) => {
+                score.hangs += 1;
+                verdicts.push(("hang".to_string(), None));
+            }
+        }
+    }
+    score.wall_s = t0.elapsed().as_secs_f64();
+    score.injected = cluster.fault_trace().len();
+    cluster.shutdown();
+    (score, verdicts)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("GEPS_BENCH_SMOKE").is_ok();
+    let n_events = if smoke { 400 } else { 1000 };
+    let n_bricks = n_events.div_ceil(100);
+
+    // fault-free baseline histograms, one per filter
+    let baseline: Vec<Vec<u32>> = {
+        let cluster = ClusterHandle::start(
+            chaos_config(n_events, FaultConfig::default()),
+            geps::runtime::default_artifacts_dir(),
+        )?;
+        let out = FILTERS
+            .iter()
+            .map(|f| {
+                let job = cluster.submit(f, "locality");
+                assert_eq!(
+                    cluster.wait(job, TIMEOUT).expect("baseline"),
+                    JobStatus::Done
+                );
+                histogram_bits(&cluster, job).expect("baseline histogram")
+            })
+            .collect();
+        cluster.shutdown();
+        out
+    };
+
+    let single = |name: &'static str, f: FaultConfig| (name, f, false);
+    let mut scenarios: Vec<(&'static str, FaultConfig, bool)> = vec![
+        single(
+            "stall+slow",
+            FaultConfig {
+                seed: 21,
+                stall_p: 0.4,
+                stall_s: 1.0,
+                slow_p: 0.4,
+                slow_factor: 2.0,
+                ..FaultConfig::default()
+            },
+        ),
+        single(
+            "drop+corrupt",
+            FaultConfig {
+                seed: 22,
+                drop_p: 0.2,
+                corrupt_p: 0.2,
+                ..FaultConfig::default()
+            },
+        ),
+        single(
+            "crash",
+            FaultConfig { seed: 23, crash_p: 0.3, ..FaultConfig::default() },
+        ),
+        (
+            "combined+churn",
+            FaultConfig {
+                seed: 24,
+                drop_p: 0.1,
+                dup_p: 0.2,
+                delay_p: 0.2,
+                corrupt_p: 0.1,
+                stall_p: 0.2,
+                stall_s: 1.0,
+                slow_p: 0.2,
+                slow_factor: 2.0,
+                crash_p: 0.05,
+                ..FaultConfig::default()
+            },
+            true,
+        ),
+    ];
+    if !smoke {
+        scenarios.extend([
+            single(
+                "delay",
+                FaultConfig {
+                    seed: 25,
+                    delay_p: 0.5,
+                    delay_factor: 4.0,
+                    ..FaultConfig::default()
+                },
+            ),
+            single(
+                "dup",
+                FaultConfig { seed: 26, dup_p: 0.5, ..FaultConfig::default() },
+            ),
+            single(
+                "partition",
+                FaultConfig {
+                    seed: 27,
+                    partition_p: 0.3,
+                    ..FaultConfig::default()
+                },
+            ),
+        ]);
+    }
+
+    let mut scores = Vec::new();
+    for (name, fault, churn) in &scenarios {
+        let (score, _) =
+            run_scenario(name, n_events, fault.clone(), &baseline, *churn);
+        scores.push(score);
+    }
+
+    // determinism replay: the delay-only classes query the fault plan
+    // on a timing-independent key set, so two same-seed runs must
+    // produce identical traces and verdicts
+    let det_fault = FaultConfig {
+        seed: 31,
+        stall_p: 0.5,
+        stall_s: 1.0,
+        slow_p: 0.5,
+        slow_factor: 2.0,
+        speculate: false,
+        ..FaultConfig::default()
+    };
+    let det = |f: &FaultConfig| {
+        let cluster = ClusterHandle::start(
+            chaos_config(n_events, f.clone()),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .expect("cluster start");
+        let mut verdicts = Vec::new();
+        for filter in FILTERS {
+            let job = cluster.submit(filter, "locality");
+            let status = cluster.wait(job, TIMEOUT);
+            verdicts.push((
+                format!("{status:?}"),
+                histogram_bits(&cluster, job),
+            ));
+        }
+        let trace = cluster.fault_trace();
+        cluster.shutdown();
+        (trace, verdicts)
+    };
+    let (trace_a, verdicts_a) = det(&det_fault);
+    let (trace_b, verdicts_b) = det(&det_fault);
+    let trace_deterministic = !trace_a.is_empty()
+        && trace_a == trace_b
+        && verdicts_a == verdicts_b;
+
+    let no_hangs = scores.iter().all(|s| s.hangs == 0);
+    let all_bit_identical = scores.iter().all(|s| s.bit_mismatches == 0);
+    let all_failures_typed =
+        scores.iter().all(|s| s.untyped_failures == 0);
+    let all_scenarios_ok = scores.iter().all(Score::ok);
+
+    print_table(
+        "Ext-C chaos: seeded fault matrix verdicts",
+        &["scenario", "done", "failed(typed)", "hangs", "injected", "wall"],
+        &scores
+            .iter()
+            .map(|s| {
+                vec![
+                    s.name.to_string(),
+                    format!("{}/{}", s.done, s.jobs),
+                    s.failed_typed.to_string(),
+                    s.hangs.to_string(),
+                    s.injected.to_string(),
+                    format!("{:.2} s", s.wall_s),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "\nno hangs: {no_hangs}, bit-identical: {all_bit_identical}, \
+         typed failures: {all_failures_typed}, trace deterministic: \
+         {trace_deterministic}"
+    );
+
+    let mut scen_json = Vec::new();
+    for s in &scores {
+        scen_json.push(
+            geps::util::json::Json::obj()
+                .set("name", s.name)
+                .set("jobs", s.jobs)
+                .set("done", s.done)
+                .set("failed_typed", s.failed_typed)
+                .set("hangs", s.hangs)
+                .set("bit_mismatches", s.bit_mismatches)
+                .set("untyped_failures", s.untyped_failures)
+                .set("injected", s.injected)
+                .set("wall_s", s.wall_s)
+                .set("ok", s.ok()),
+        );
+    }
+    let doc = geps::util::json::Json::obj()
+        .set("bench", "ext_chaos")
+        .set("generated", true)
+        .set("smoke", smoke)
+        .set(
+            "config",
+            geps::util::json::Json::obj()
+                .set("n_events", n_events)
+                .set("bricks", n_bricks)
+                .set("scenarios", scores.len())
+                .set("jobs_per_scenario", FILTERS.len()),
+        )
+        .set("scenarios", scen_json)
+        .set("no_hangs", no_hangs)
+        .set("all_bit_identical", all_bit_identical)
+        .set("all_failures_typed", all_failures_typed)
+        .set("trace_deterministic", trace_deterministic)
+        .set("all_scenarios_ok", all_scenarios_ok);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_ext_chaos.json");
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

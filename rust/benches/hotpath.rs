@@ -153,6 +153,7 @@ fn main() {
         job: 7,
         brick: BrickId::new(2, 9),
         range: (0, 512),
+        attempt: 0,
         events_in: 512,
         events_selected: 48,
         result_bytes: 4800,

@@ -34,6 +34,7 @@ use crate::brick::{split_events, BrickFile, BrickId, Codec, SplitConfig};
 use crate::catalog::{Catalog, JobStatus};
 use crate::config::ClusterConfig;
 use crate::events::{EventGenerator, GeneratorConfig};
+use crate::faultline::{FaultEvent, FaultPlan};
 use crate::ft::{CopyPlan, Rebalancer, Rereplicator};
 use crate::gass::GassService;
 use crate::gris::{Directory, Entry, NodeInfoProvider};
@@ -73,6 +74,9 @@ pub struct ClusterHandle {
     /// query-result cache shared with the JSE event loop (portal reads
     /// stats / flushes it; the broker's admission path drives it)
     qcache: Arc<QCache>,
+    /// seeded fault plan shared by GASS, every node executor and the
+    /// JSE; `fault_trace()` exposes its reproducibility trace
+    faults: Arc<FaultPlan>,
     pool: EnginePool,
 }
 
@@ -81,8 +85,16 @@ impl ClusterHandle {
     pub fn start(config: ClusterConfig, artifacts: std::path::PathBuf) -> Result<Self> {
         let metrics = Arc::new(Registry::new());
         let topology = config.topology();
+        // one seeded fault plan for the whole cluster: GASS consults it
+        // per transfer attempt, node executors per task attempt — same
+        // seed, same injected trace, regardless of placement
+        let faults = Arc::new(
+            FaultPlan::new(config.fault.clone()).with_metrics(metrics.clone()),
+        );
         let gass =
-            GassService::new(topology.clone(), config.time_scale, config.streams);
+            GassService::new(topology.clone(), config.time_scale, config.streams)
+                .with_faults(faults.clone())
+                .with_metrics(metrics.clone());
         // one engine worker per node pipeline, min 1 — the multi-pipeline
         // executors submit kernel work concurrently, so the pool must be
         // able to absorb it (capped so a large auto-detected core count
@@ -191,7 +203,8 @@ impl ClusterHandle {
                 pool.clone(),
                 out_tx.clone(),
                 metrics.clone(),
-            );
+                faults.clone(),
+            )?;
             node_txs.insert(spec.name.clone(), handle.tx.clone());
             handles.insert(spec.name.clone(), handle);
         }
@@ -209,6 +222,11 @@ impl ClusterHandle {
             time_scale: config.time_scale,
             streams: config.streams,
             max_concurrent_jobs: config.max_concurrent_jobs.max(1),
+            task_retry_budget: config.fault.task_retry_budget,
+            speculate: config.fault.speculate,
+            deadline_quantile: config.fault.deadline_quantile,
+            deadline_factor: config.fault.deadline_factor,
+            quarantine_threshold: config.fault.quarantine_threshold,
             ..Default::default()
         };
         let gass2 = gass.clone();
@@ -432,6 +450,7 @@ impl ClusterHandle {
             node_out_tx: out_tx,
             pending_joins,
             qcache,
+            faults,
             pool,
         })
     }
@@ -492,7 +511,8 @@ impl ClusterHandle {
             self.pool.clone(),
             self.node_out_tx.clone(),
             self.metrics.clone(),
-        );
+            self.faults.clone(),
+        )?;
         let tx = handle.tx.clone();
         lock(&self.nodes).insert(name.to_string(), handle);
         // GRIS entry BEFORE the broker announcement: the broker's
@@ -661,6 +681,14 @@ impl ClusterHandle {
 
     pub fn gass(&self) -> &GassService {
         &self.gass
+    }
+
+    /// Sorted snapshot of every fault injected so far (the faultline
+    /// reproducibility trace): two clusters started from the same
+    /// config — same `[fault] seed` — that ran the same jobs produce
+    /// traces that compare equal with `==`.
+    pub fn fault_trace(&self) -> Vec<FaultEvent> {
+        self.faults.trace()
     }
 
     /// Orderly shutdown: stop broker, then nodes, then engines.

@@ -32,9 +32,17 @@
 //! [node.hobbit]
 //! speed = 1.0
 //! slots = 1
+//!
+//! [fault]
+//! seed = 7             # same seed => same injected fault trace
+//! drop_p = 0.05        # transfer attempt dropped mid-flight
+//! crash_p = 0.01       # node dies silently mid-task
+//! task_retry_budget = 3
+//! speculate = true     # deadline-driven straggler re-dispatch
 //! ```
 
 use crate::config::toml::{TomlDoc, TomlValue};
+use crate::faultline::FaultConfig;
 use crate::netsim::{Link, Topology};
 use crate::scheduler::Policy;
 
@@ -75,6 +83,11 @@ pub struct ClusterConfig {
     ///
     /// [`effective_pipelines`]: ClusterConfig::effective_pipelines
     pub pipelines: usize,
+    /// `[fault]` — deterministic fault injection probabilities plus
+    /// the recovery knobs (retry budgets, soft deadlines, quarantine)
+    /// that let the grid survive them. The default injects nothing
+    /// but leaves every recovery mechanism armed.
+    pub fault: FaultConfig,
     pub nodes: Vec<NodeSpec>,
 }
 
@@ -95,6 +108,7 @@ impl Default for ClusterConfig {
             events_per_brick: 250,
             seed: 42,
             pipelines: 0,
+            fault: FaultConfig::default(),
             nodes: vec![
                 NodeSpec { name: "gandalf".into(), speed: 0.8, slots: 1 },
                 NodeSpec { name: "hobbit".into(), speed: 1.0, slots: 1 },
@@ -212,6 +226,98 @@ impl ClusterConfig {
                 ));
             }
             cfg.pipelines = v as usize;
+        }
+
+        // [fault] — injection probabilities and recovery knobs
+        if let Some(v) = doc.get("fault", "seed").and_then(TomlValue::as_i64) {
+            cfg.fault.seed = v as u64;
+        }
+        for (key, slot) in [
+            ("drop_p", &mut cfg.fault.drop_p),
+            ("dup_p", &mut cfg.fault.dup_p),
+            ("delay_p", &mut cfg.fault.delay_p),
+            ("partition_p", &mut cfg.fault.partition_p),
+            ("corrupt_p", &mut cfg.fault.corrupt_p),
+            ("crash_p", &mut cfg.fault.crash_p),
+            ("stall_p", &mut cfg.fault.stall_p),
+            ("slow_p", &mut cfg.fault.slow_p),
+        ] {
+            if let Some(v) = doc.get("fault", key).and_then(TomlValue::as_f64) {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(ConfigError(format!(
+                        "fault {key} must be in 0.0..=1.0"
+                    )));
+                }
+                *slot = v;
+            }
+        }
+        for (key, slot) in [
+            ("delay_factor", &mut cfg.fault.delay_factor),
+            ("slow_factor", &mut cfg.fault.slow_factor),
+            ("deadline_factor", &mut cfg.fault.deadline_factor),
+        ] {
+            if let Some(v) = doc.get("fault", key).and_then(TomlValue::as_f64) {
+                if v < 1.0 {
+                    return Err(ConfigError(format!(
+                        "fault {key} must be >= 1.0"
+                    )));
+                }
+                *slot = v;
+            }
+        }
+        if let Some(v) = doc.get("fault", "stall_s").and_then(TomlValue::as_f64) {
+            if v < 0.0 {
+                return Err(ConfigError("fault stall_s must be >= 0".into()));
+            }
+            cfg.fault.stall_s = v;
+        }
+        if let Some(v) = doc
+            .get("fault", "deadline_quantile")
+            .and_then(TomlValue::as_f64)
+        {
+            if !(v > 0.0 && v < 1.0) {
+                return Err(ConfigError(
+                    "fault deadline_quantile must be in (0.0, 1.0)".into(),
+                ));
+            }
+            cfg.fault.deadline_quantile = v;
+        }
+        if let Some(v) = doc
+            .get("fault", "task_retry_budget")
+            .and_then(TomlValue::as_i64)
+        {
+            if !(0..=1000).contains(&v) {
+                return Err(ConfigError(
+                    "fault task_retry_budget must be in 0..=1000".into(),
+                ));
+            }
+            cfg.fault.task_retry_budget = v as u32;
+        }
+        if let Some(v) = doc
+            .get("fault", "quarantine_threshold")
+            .and_then(TomlValue::as_i64)
+        {
+            if !(1..=1000).contains(&v) {
+                return Err(ConfigError(
+                    "fault quarantine_threshold must be in 1..=1000".into(),
+                ));
+            }
+            cfg.fault.quarantine_threshold = v as u32;
+        }
+        if let Some(v) = doc
+            .get("fault", "gass_retry_limit")
+            .and_then(TomlValue::as_i64)
+        {
+            if !(1..=100).contains(&v) {
+                return Err(ConfigError(
+                    "fault gass_retry_limit must be in 1..=100".into(),
+                ));
+            }
+            cfg.fault.gass_retry_limit = v as u32;
+        }
+        if let Some(v) = doc.get("fault", "speculate").and_then(TomlValue::as_bool)
+        {
+            cfg.fault.speculate = v;
         }
 
         for (name, kv) in doc.sections_under("node") {
@@ -341,6 +447,56 @@ mod tests {
         // out of range rejected
         assert!(ClusterConfig::parse("[node]\npipelines = -1").is_err());
         assert!(ClusterConfig::parse("[node]\npipelines = 1000").is_err());
+    }
+
+    #[test]
+    fn fault_section_knobs() {
+        let cfg = ClusterConfig::parse(
+            r#"
+            [fault]
+            seed = 9
+            drop_p = 0.1
+            crash_p = 0.05
+            delay_factor = 6.0
+            stall_s = 1.5
+            deadline_quantile = 0.9
+            task_retry_budget = 5
+            quarantine_threshold = 2
+            gass_retry_limit = 4
+            speculate = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fault.seed, 9);
+        assert!((cfg.fault.drop_p - 0.1).abs() < 1e-12);
+        assert!((cfg.fault.crash_p - 0.05).abs() < 1e-12);
+        assert!((cfg.fault.delay_factor - 6.0).abs() < 1e-12);
+        assert!((cfg.fault.stall_s - 1.5).abs() < 1e-12);
+        assert!((cfg.fault.deadline_quantile - 0.9).abs() < 1e-12);
+        assert_eq!(cfg.fault.task_retry_budget, 5);
+        assert_eq!(cfg.fault.quarantine_threshold, 2);
+        assert_eq!(cfg.fault.gass_retry_limit, 4);
+        assert!(!cfg.fault.speculate);
+        assert!(cfg.fault.injects());
+        // untouched knobs keep their defaults
+        assert!((cfg.fault.dup_p - 0.0).abs() < 1e-12);
+        assert_eq!(cfg.fault.task_retry_budget, 5);
+    }
+
+    #[test]
+    fn fault_section_validation() {
+        assert!(ClusterConfig::parse("[fault]\ndrop_p = 1.5").is_err());
+        assert!(ClusterConfig::parse("[fault]\ncrash_p = -0.1").is_err());
+        assert!(ClusterConfig::parse("[fault]\ndelay_factor = 0.5").is_err());
+        assert!(ClusterConfig::parse("[fault]\nstall_s = -1.0").is_err());
+        assert!(ClusterConfig::parse("[fault]\ndeadline_quantile = 1.0").is_err());
+        assert!(ClusterConfig::parse("[fault]\ntask_retry_budget = -1").is_err());
+        assert!(ClusterConfig::parse("[fault]\nquarantine_threshold = 0").is_err());
+        assert!(ClusterConfig::parse("[fault]\ngass_retry_limit = 0").is_err());
+        // an empty [fault] section is the do-nothing default plan
+        let cfg = ClusterConfig::parse("[fault]\n").unwrap();
+        assert!(!cfg.fault.injects());
+        assert_eq!(cfg.fault, crate::faultline::FaultConfig::default());
     }
 
     #[test]

@@ -1,0 +1,451 @@
+//! faultline — deterministic, seed-driven fault injection.
+//!
+//! The paper names node failure the Grid-Brick system's "biggest
+//! disadvantage" and prescribes replication; this module supplies the
+//! *other half* of that argument: a reproducible way to make the grid
+//! actually fail. A [`FaultPlan`] is built from the `[fault]` config
+//! section and threaded through four layers:
+//!
+//! - **netsim/gass** — per-transfer drop, delay-spike and partition
+//!   decisions consulted by [`GassService`](crate::gass::GassService)
+//!   before each attempt, plus injected payload corruption caught by
+//!   the checksum-verified retry loop;
+//! - **node executor** — per-task crash (silent death), stall and
+//!   slowdown faults;
+//! - **JSE** — duplicate-reply injection exercising the stale-duplicate
+//!   suppression keyed by `(job, task, attempt)`.
+//!
+//! ## Determinism
+//!
+//! Every decision is a *stateless keyed hash*, not a draw from a shared
+//! mutable RNG stream: `hash_str(key, seed ^ DOMAIN_TAG)` mapped to
+//! [0, 1) and compared against the configured probability. Keys
+//! deliberately exclude node and host names — a task fault is keyed by
+//! `(job, brick, range, attempt)` and a transfer fault by
+//! `(object path, attempt)` — so the same seed produces the **same
+//! injected fault trace** no matter how the scheduler happens to place
+//! tasks or how threads interleave. `tests/chaos.rs` runs every
+//! scenario twice and asserts the traces are identical.
+//!
+//! Injected faults are recorded in an ordered trace
+//! ([`FaultPlan::trace`]) and counted under the
+//! `faultline.injected.*` metric family.
+
+use crate::metrics::Registry;
+use crate::netsim::LinkDisruption;
+use crate::util::hash::hash_str;
+use crate::util::lock;
+use std::sync::{Arc, Mutex};
+
+/// Knobs from the `[fault]` config section. All probabilities default
+/// to 0.0 — a default plan injects nothing — while the *recovery*
+/// knobs (retry budgets, deadlines, quarantine) default on, so the
+/// machinery that survives real faults is always armed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// seed for every keyed-hash decision; same seed → same trace
+    pub seed: u64,
+    /// P(transfer attempt dropped mid-flight)
+    pub drop_p: f64,
+    /// P(node delivers a duplicate TaskDone reply)
+    pub dup_p: f64,
+    /// P(transfer attempt hits a delay spike)
+    pub delay_p: f64,
+    /// delay-spike multiplier on the modelled transfer time
+    pub delay_factor: f64,
+    /// P(object path is partitioned — *every* attempt fails)
+    pub partition_p: f64,
+    /// P(transfer payload corrupted in flight)
+    pub corrupt_p: f64,
+    /// P(node crashes silently while running a task)
+    pub crash_p: f64,
+    /// P(task stalls before compute)
+    pub stall_p: f64,
+    /// stall duration in virtual seconds (scaled by `time_scale`)
+    pub stall_s: f64,
+    /// P(task runs slowed down)
+    pub slow_p: f64,
+    /// slowdown multiplier on task compute time
+    pub slow_factor: f64,
+    /// per-task failure budget before the job fails explicitly
+    pub task_retry_budget: u32,
+    /// enable straggler speculation (deadline-driven re-dispatch)
+    pub speculate: bool,
+    /// task-duration quantile the soft deadline is derived from
+    pub deadline_quantile: f64,
+    /// deadline = quantile(deadline_quantile) * deadline_factor
+    pub deadline_factor: f64,
+    /// task failures from one node before it is quarantined
+    pub quarantine_threshold: u32,
+    /// bounded GASS transfer retry attempts (checksum-verified)
+    pub gass_retry_limit: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            drop_p: 0.0,
+            dup_p: 0.0,
+            delay_p: 0.0,
+            delay_factor: 4.0,
+            partition_p: 0.0,
+            corrupt_p: 0.0,
+            crash_p: 0.0,
+            stall_p: 0.0,
+            stall_s: 2.0,
+            slow_p: 0.0,
+            slow_factor: 3.0,
+            task_retry_budget: 3,
+            speculate: true,
+            deadline_quantile: 0.95,
+            deadline_factor: 3.0,
+            quarantine_threshold: 3,
+            gass_retry_limit: 3,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does this config inject anything at all? (Recovery knobs alone
+    /// do not make a plan "active".)
+    pub fn injects(&self) -> bool {
+        self.drop_p > 0.0
+            || self.dup_p > 0.0
+            || self.delay_p > 0.0
+            || self.partition_p > 0.0
+            || self.corrupt_p > 0.0
+            || self.crash_p > 0.0
+            || self.stall_p > 0.0
+            || self.slow_p > 0.0
+    }
+}
+
+/// Per-task injected fault, decided once per `(job, brick, range,
+/// attempt)` — re-dispatches and speculative attempts roll fresh.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TaskFault {
+    None,
+    /// node dies silently mid-task: no reply, heartbeats stop
+    Crash,
+    /// task sleeps this many virtual seconds before computing
+    Stall(f64),
+    /// task compute takes `factor` times as long
+    Slow(f64),
+}
+
+/// One injected fault, as recorded in the reproducibility trace.
+/// Ordered so two same-seed traces compare with `==` after sorting.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FaultEvent {
+    /// fault class: drop / delay / partition / corrupt / crash /
+    /// stall / slow / dup
+    pub domain: &'static str,
+    /// the decision key (excludes hosts, so it is placement-invariant)
+    pub key: String,
+}
+
+// Domain tags keep the per-class hash streams independent: the same
+// key never correlates across fault classes.
+const TAG_DROP: u64 = 0xFA01;
+const TAG_DUP: u64 = 0xFA02;
+const TAG_DELAY: u64 = 0xFA03;
+const TAG_PARTITION: u64 = 0xFA04;
+const TAG_CORRUPT: u64 = 0xFA05;
+const TAG_CRASH: u64 = 0xFA06;
+const TAG_STALL: u64 = 0xFA07;
+const TAG_SLOW: u64 = 0xFA08;
+const TAG_JITTER: u64 = 0xFA09;
+
+/// A seeded fault plan: pure decision functions plus an ordered trace
+/// of everything actually injected. Cheap to share (`Arc`); a
+/// `FaultPlan::default()` injects nothing and is what every layer
+/// holds when no `[fault]` section is configured.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    trace: Mutex<Vec<FaultEvent>>,
+    metrics: Option<Arc<Registry>>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultPlan { cfg, trace: Mutex::new(Vec::new()), metrics: None }
+    }
+
+    /// Count injections under `faultline.injected.*`.
+    pub fn with_metrics(mut self, metrics: Arc<Registry>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Keyed-hash coin flip: uniform in [0, 1) from the top 53 bits.
+    fn roll(&self, tag: u64, key: &str, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let h = hash_str(key, self.cfg.seed ^ tag);
+        ((h >> 11) as f64 / (1u64 << 53) as f64) < p
+    }
+
+    fn record(&self, domain: &'static str, key: String) {
+        if let Some(m) = &self.metrics {
+            m.counter(&format!("faultline.injected.{domain}")).inc();
+        }
+        lock(&self.trace).push(FaultEvent { domain, key });
+    }
+
+    /// Disruption for one transfer attempt of `path`. Partition is
+    /// keyed by path alone (every retry hits it — the caller must fail
+    /// with a typed error); drop and delay are keyed by
+    /// `(path, attempt)` so a bounded retry can survive them.
+    pub fn link_disruption(&self, path: &str, attempt: u32) -> LinkDisruption {
+        if self.roll(TAG_PARTITION, path, self.cfg.partition_p) {
+            self.record("partition", path.to_string());
+            return LinkDisruption::Partitioned;
+        }
+        let key = format!("{path}#{attempt}");
+        if self.roll(TAG_DROP, &key, self.cfg.drop_p) {
+            self.record("drop", key);
+            return LinkDisruption::Drop;
+        }
+        if self.roll(TAG_DELAY, &key, self.cfg.delay_p) {
+            self.record("delay", key.clone());
+            return LinkDisruption::DelaySpike(self.cfg.delay_factor.max(1.0));
+        }
+        LinkDisruption::None
+    }
+
+    /// Should this transfer attempt's payload arrive corrupted?
+    pub fn corrupt(&self, path: &str, attempt: u32) -> bool {
+        let key = format!("{path}#{attempt}");
+        let hit = self.roll(TAG_CORRUPT, &key, self.cfg.corrupt_p);
+        if hit {
+            self.record("corrupt", key);
+        }
+        hit
+    }
+
+    /// Per-task fault, keyed by `(job, brick, range, attempt)` — never
+    /// by node name, so the trace is identical across placements.
+    /// First match wins: crash > stall > slow.
+    pub fn task_fault(
+        &self,
+        job: u64,
+        brick: &str,
+        range: (usize, usize),
+        attempt: u32,
+    ) -> TaskFault {
+        let key = format!("{job}/{brick}/{}..{}#{attempt}", range.0, range.1);
+        if self.roll(TAG_CRASH, &key, self.cfg.crash_p) {
+            self.record("crash", key);
+            return TaskFault::Crash;
+        }
+        if self.roll(TAG_STALL, &key, self.cfg.stall_p) {
+            self.record("stall", key);
+            return TaskFault::Stall(self.cfg.stall_s.max(0.0));
+        }
+        if self.roll(TAG_SLOW, &key, self.cfg.slow_p) {
+            self.record("slow", key);
+            return TaskFault::Slow(self.cfg.slow_factor.max(1.0));
+        }
+        TaskFault::None
+    }
+
+    /// Should the node send its TaskDone reply twice? (Exercises the
+    /// JSE's stale-duplicate suppression.)
+    pub fn duplicate_reply(
+        &self,
+        job: u64,
+        brick: &str,
+        range: (usize, usize),
+        attempt: u32,
+    ) -> bool {
+        let key = format!("{job}/{brick}/{}..{}#{attempt}", range.0, range.1);
+        let hit = self.roll(TAG_DUP, &key, self.cfg.dup_p);
+        if hit {
+            self.record("dup", key);
+        }
+        hit
+    }
+
+    /// Exponential backoff with deterministic jitter for GASS transfer
+    /// retry `attempt` (0-based): `base * 2^attempt * (1 + jitter)`,
+    /// jitter in [0, 0.5) derived from the same keyed hash — no OS
+    /// randomness, so retry timing is reproducible too.
+    pub fn retry_backoff_s(&self, path: &str, attempt: u32) -> f64 {
+        const BASE_S: f64 = 0.05;
+        let key = format!("{path}#{attempt}");
+        let h = hash_str(&key, self.cfg.seed ^ TAG_JITTER);
+        let jitter = (h >> 11) as f64 / (1u64 << 53) as f64 * 0.5;
+        BASE_S * (1u64 << attempt.min(10)) as f64 * (1.0 + jitter)
+    }
+
+    /// Sorted snapshot of every fault injected so far. Sorting makes
+    /// the trace independent of the wall-clock order concurrent layers
+    /// recorded in — two same-seed runs compare with `==`.
+    pub fn trace(&self) -> Vec<FaultEvent> {
+        let mut t = lock(&self.trace).clone();
+        t.sort();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaos_cfg() -> FaultConfig {
+        FaultConfig {
+            seed: 7,
+            drop_p: 0.3,
+            dup_p: 0.3,
+            delay_p: 0.3,
+            partition_p: 0.2,
+            corrupt_p: 0.3,
+            crash_p: 0.3,
+            stall_p: 0.3,
+            slow_p: 0.3,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let p = FaultPlan::default();
+        assert!(!p.config().injects());
+        for i in 0..100u32 {
+            assert_eq!(p.link_disruption("gass://x/b", i), LinkDisruption::None);
+            assert!(!p.corrupt("gass://x/b", i));
+            assert_eq!(p.task_fault(1, "ds/0", (0, 10), i), TaskFault::None);
+            assert!(!p.duplicate_reply(1, "ds/0", (0, 10), i));
+        }
+        assert!(p.trace().is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_decisions_and_trace() {
+        let a = FaultPlan::new(chaos_cfg());
+        let b = FaultPlan::new(chaos_cfg());
+        for i in 0..200u32 {
+            let path = format!("gass://bricks/ds/{i}");
+            assert_eq!(a.link_disruption(&path, 0), b.link_disruption(&path, 0));
+            assert_eq!(a.corrupt(&path, 1), b.corrupt(&path, 1));
+            assert_eq!(
+                a.task_fault(3, "ds/7", (0, 100), i),
+                b.task_fault(3, "ds/7", (0, 100), i)
+            );
+            assert!(
+                (a.retry_backoff_s(&path, 2) - b.retry_backoff_s(&path, 2)).abs()
+                    < 1e-12
+            );
+        }
+        assert_eq!(a.trace(), b.trace());
+        assert!(!a.trace().is_empty(), "chaos config must inject something");
+    }
+
+    #[test]
+    fn different_seed_diverges() {
+        let a = FaultPlan::new(chaos_cfg());
+        let b = FaultPlan::new(FaultConfig { seed: 8, ..chaos_cfg() });
+        let mut differs = false;
+        for i in 0..200u32 {
+            let path = format!("gass://bricks/ds/{i}");
+            if a.link_disruption(&path, 0) != b.link_disruption(&path, 0)
+                || a.task_fault(1, "ds/0", (0, 10), i)
+                    != b.task_fault(1, "ds/0", (0, 10), i)
+            {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "seeds 7 and 8 should not produce identical decisions");
+    }
+
+    #[test]
+    fn partition_is_sticky_across_attempts() {
+        let p = FaultPlan::new(FaultConfig {
+            seed: 1,
+            partition_p: 0.5,
+            ..FaultConfig::default()
+        });
+        // find a partitioned path, then confirm every retry sees it
+        let path = (0..100)
+            .map(|i| format!("gass://bricks/ds/{i}"))
+            .find(|pa| p.link_disruption(pa, 0) == LinkDisruption::Partitioned)
+            .expect("p=0.5 over 100 paths must partition at least one");
+        for attempt in 1..10u32 {
+            assert_eq!(
+                p.link_disruption(&path, attempt),
+                LinkDisruption::Partitioned
+            );
+        }
+    }
+
+    #[test]
+    fn drop_can_clear_on_retry() {
+        let p = FaultPlan::new(FaultConfig {
+            seed: 2,
+            drop_p: 0.5,
+            ..FaultConfig::default()
+        });
+        // some path dropped at attempt 0 must eventually clear: keyed
+        // by (path, attempt), ten p=0.5 rolls clearing nowhere for any
+        // of 100 paths would be astronomically unlikely
+        let dropped: Vec<String> = (0..100)
+            .map(|i| format!("gass://bricks/ds/{i}"))
+            .filter(|pa| p.link_disruption(pa, 0) == LinkDisruption::Drop)
+            .collect();
+        assert!(!dropped.is_empty());
+        let cleared = dropped.iter().any(|pa| {
+            (1..10u32).any(|a| p.link_disruption(pa, a) == LinkDisruption::None)
+        });
+        assert!(cleared, "drops must be retryable, not sticky");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        let p = FaultPlan::default();
+        let b0 = p.retry_backoff_s("gass://x", 0);
+        let b1 = p.retry_backoff_s("gass://x", 1);
+        let b2 = p.retry_backoff_s("gass://x", 2);
+        assert!((0.05..0.075).contains(&b0), "b0 {b0}");
+        assert!(b1 > b0 && b2 > b1, "monotone: {b0} {b1} {b2}");
+        assert!(b2 <= 0.05 * 4.0 * 1.5, "jitter bounded: {b2}");
+    }
+
+    #[test]
+    fn trace_is_sorted_and_placement_free() {
+        let p = FaultPlan::new(chaos_cfg());
+        // record in one order…
+        for i in (0..50u32).rev() {
+            p.task_fault(1, "ds/0", (0, 10), i);
+        }
+        let t1 = p.trace();
+        let mut sorted = t1.clone();
+        sorted.sort();
+        assert_eq!(t1, sorted);
+        // …and no key mentions a host/node name (keys are
+        // (job, brick, range, attempt) / (path, attempt) only)
+        assert!(t1.iter().all(|e| !e.key.contains("node")));
+    }
+
+    #[test]
+    fn metrics_count_injections() {
+        let m = Arc::new(Registry::new());
+        let p = FaultPlan::new(chaos_cfg()).with_metrics(m.clone());
+        for i in 0..100u32 {
+            p.task_fault(1, "ds/0", (0, 10), i);
+        }
+        let total: u64 = ["crash", "stall", "slow"]
+            .iter()
+            .map(|d| m.counter(&format!("faultline.injected.{d}")).get())
+            .sum();
+        assert_eq!(total, p.trace().len() as u64);
+        assert!(total > 0);
+    }
+}

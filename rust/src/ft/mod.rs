@@ -15,6 +15,12 @@
 //!   newcomer until it owns a fair share, execute them over GASS
 //!   (integrity-checked) and let the catalogue's holder lists be
 //!   rewritten so locality scheduling lands on the new node.
+//! - [`Quarantine`]: a softer verdict than death — a node whose tasks
+//!   keep failing (`[fault] quarantine_threshold` strikes) is
+//!   *sidelined*: the JSE stops offering it work and re-issues its
+//!   in-flight tasks, but the node keeps its name, its bricks and its
+//!   heartbeats. No re-replication fires and nothing is reported in
+//!   `nodes_lost` — quarantine is reversible by restart, death is not.
 
 use crate::brick::BrickId;
 use crate::gass::GassService;
@@ -95,6 +101,69 @@ impl HeartbeatMonitor {
 
     pub fn tracked(&self) -> usize {
         self.last_seen.len()
+    }
+}
+
+/// Repeated-failure quarantine. Each task failure attributed to a node
+/// is a *strike*; at `threshold` strikes the node is quarantined:
+/// scheduling sidelines it (the JSE feeds its `on_node_down`-style
+/// hooks) but the node is **not** declared dead — its bricks stay
+/// catalogued, no re-replication fires, and its name is not burned.
+/// A completed task clears the node's strikes (failures must be
+/// *repeated*, not merely occasional). Quarantine is sticky: only an
+/// operator restart (a fresh node name) lifts it.
+#[derive(Debug)]
+pub struct Quarantine {
+    threshold: u32,
+    strikes: BTreeMap<String, u32>,
+    quarantined: BTreeSet<String>,
+}
+
+impl Quarantine {
+    pub fn new(threshold: u32) -> Self {
+        Quarantine {
+            threshold: threshold.max(1),
+            strikes: BTreeMap::new(),
+            quarantined: BTreeSet::new(),
+        }
+    }
+
+    /// Record a task failure on `node`. Returns `true` exactly once:
+    /// on the strike that crosses the threshold — the caller runs its
+    /// sideline path (re-issue in-flight work, stop offering tasks)
+    /// on that transition only.
+    pub fn strike(&mut self, node: &str) -> bool {
+        if self.quarantined.contains(node) {
+            return false;
+        }
+        let n = self.strikes.entry(node.to_string()).or_insert(0);
+        *n += 1;
+        if *n >= self.threshold {
+            self.quarantined.insert(node.to_string());
+            return true;
+        }
+        false
+    }
+
+    /// Record a successful task on `node`: clears its strikes (an
+    /// already-quarantined node stays quarantined — a late success
+    /// from a sidelined node is a stale reply, not rehabilitation).
+    pub fn clear(&mut self, node: &str) {
+        if !self.quarantined.contains(node) {
+            self.strikes.remove(node);
+        }
+    }
+
+    pub fn is_quarantined(&self, node: &str) -> bool {
+        self.quarantined.contains(node)
+    }
+
+    pub fn quarantined(&self) -> &BTreeSet<String> {
+        &self.quarantined
+    }
+
+    pub fn strikes(&self, node: &str) -> u32 {
+        self.strikes.get(node).copied().unwrap_or(0)
     }
 }
 
@@ -341,6 +410,68 @@ mod tests {
         assert!(m.is_dead("a"));
     }
 
+    #[test]
+    fn flapping_node_stays_dead_and_is_not_reannounced() {
+        // a node that beats again *after* being declared dead (network
+        // blip, paused VM) must not flap back alive: dead is a
+        // permanent verdict, its timer is never refreshed, and check()
+        // never announces it a second time
+        let mut m = HeartbeatMonitor::new(Duration::from_millis(30));
+        m.beat("flappy");
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(m.check(), vec!["flappy"]);
+        // the node comes back and beats enthusiastically
+        for _ in 0..5 {
+            m.beat("flappy");
+            assert!(m.is_dead("flappy"), "late beacons must not resurrect");
+        }
+        // and is never re-announced, now or after another timeout
+        assert!(m.check().is_empty());
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(m.check().is_empty(), "dead nodes are announced exactly once");
+        assert_eq!(m.dead_nodes().len(), 1);
+    }
+
+    #[test]
+    fn quarantine_trips_once_at_threshold() {
+        let mut q = Quarantine::new(3);
+        assert!(!q.strike("n"), "strike 1");
+        assert!(!q.strike("n"), "strike 2");
+        assert!(!q.is_quarantined("n"));
+        assert!(q.strike("n"), "strike 3 crosses the threshold");
+        assert!(q.is_quarantined("n"));
+        // the transition fires exactly once — later strikes are no-ops
+        assert!(!q.strike("n"));
+        assert!(q.is_quarantined("n"));
+        assert_eq!(q.quarantined().len(), 1);
+    }
+
+    #[test]
+    fn quarantine_success_clears_strikes_but_not_quarantine() {
+        let mut q = Quarantine::new(2);
+        q.strike("n");
+        assert_eq!(q.strikes("n"), 1);
+        q.clear("n"); // a completed task: failures must be repeated
+        assert_eq!(q.strikes("n"), 0);
+        q.strike("n");
+        assert!(q.strike("n"), "two consecutive failures trip a threshold of 2");
+        // a stale late success does not rehabilitate a sidelined node
+        q.clear("n");
+        assert!(q.is_quarantined("n"));
+    }
+
+    #[test]
+    fn quarantine_tracks_nodes_independently() {
+        let mut q = Quarantine::new(2);
+        q.strike("a");
+        q.strike("b");
+        assert!(!q.is_quarantined("a") && !q.is_quarantined("b"));
+        assert!(q.strike("a"));
+        assert!(q.is_quarantined("a"));
+        assert!(!q.is_quarantined("b"), "b keeps its own strike count");
+        assert_eq!(q.strikes("b"), 1);
+    }
+
     fn holders(
         entries: &[(BrickId, &[&str])],
     ) -> BTreeMap<BrickId, Vec<String>> {
@@ -387,6 +518,62 @@ mod tests {
         assert!(plan.copies.is_empty());
         // the lost brick is reported, not silently dropped
         assert_eq!(plan.unrecoverable, vec![BrickId::new(1, 1)]);
+    }
+
+    #[test]
+    fn plan_mixed_recoverable_and_unrecoverable_bricks() {
+        // a two-node simultaneous failure: some bricks lost one of two
+        // replicas (copy planned), some lost both (unrecoverable), one
+        // was never on the dead nodes (untouched) — the plan must
+        // classify each correctly in a single pass, and repeat runs
+        // must be deterministic
+        let r = Rereplicator::new(2);
+        let h = holders(&[
+            (BrickId::new(1, 0), &["a", "b"]), // b down -> 1 copy
+            (BrickId::new(1, 1), &["b", "c"]), // b,c down -> unrecoverable
+            (BrickId::new(1, 2), &["c", "a"]), // c down -> 1 copy
+            (BrickId::new(1, 3), &["a", "d"]), // healthy
+            (BrickId::new(1, 4), &["b", "c"]), // unrecoverable too
+        ]);
+        let down: BTreeSet<String> =
+            ["b".to_string(), "c".to_string()].into();
+        let nodes: Vec<String> =
+            ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        let plan = r.plan(&h, &down, &nodes);
+        assert_eq!(
+            plan.unrecoverable,
+            vec![BrickId::new(1, 1), BrickId::new(1, 4)],
+            "every fully-lost brick reported, in brick order"
+        );
+        assert_eq!(plan.copies.len(), 2, "one copy per degraded brick");
+        for p in &plan.copies {
+            assert!(
+                !down.contains(&p.source) && !down.contains(&p.target),
+                "copies must route around dead nodes: {p:?}"
+            );
+            assert!(
+                !h[&p.brick].contains(&p.target),
+                "target must not already hold the brick"
+            );
+        }
+        assert_eq!(plan, r.plan(&h, &down, &nodes), "planning is deterministic");
+    }
+
+    #[test]
+    fn plan_with_no_live_candidates_reports_deficit_without_copies() {
+        // replication 2 but every non-holder is down: the deficit is
+        // real yet no copy can be planned — the plan must come back
+        // empty (not panic, not invent a dead target) and the brick is
+        // NOT unrecoverable (one live replica still serves reads)
+        let r = Rereplicator::new(2);
+        let h = holders(&[(BrickId::new(1, 0), &["a", "b"])]);
+        let down: BTreeSet<String> =
+            ["b".to_string(), "c".to_string()].into();
+        let nodes: Vec<String> =
+            ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let plan = r.plan(&h, &down, &nodes);
+        assert!(plan.copies.is_empty());
+        assert!(plan.unrecoverable.is_empty());
     }
 
     #[test]

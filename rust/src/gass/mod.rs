@@ -5,9 +5,18 @@
 //! `time_scale` so integration tests run fast while the *virtual*
 //! seconds accounting matches the model exactly). The GridFTP extension
 //! (§7 future work) is the `streams > 1` path.
+//!
+//! Transfers are checksum-verified end to end and survive injected
+//! link faults ([`crate::faultline`]): drops and corrupt arrivals are
+//! retried up to `[fault] gass_retry_limit` times with exponential
+//! backoff and deterministic jitter (`gass.transfer_retries` counts
+//! them); a partition fails fast with a typed
+//! [`GassError::Partitioned`]. This module is in the gepslint
+//! panic-path scope — transfer failures are typed errors, never
+//! panics.
 
 pub mod store;
 pub mod transfer;
 
 pub use store::{GassStore, GassUrl};
-pub use transfer::{GassService, TransferOutcome};
+pub use transfer::{GassError, GassService, TransferOutcome};

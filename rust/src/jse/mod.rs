@@ -55,11 +55,11 @@ pub mod runner;
 
 use crate::brick::BrickId;
 use crate::catalog::{Catalog, JobStatus, ResultRow};
-use crate::ft::HeartbeatMonitor;
-use crate::metrics::Registry;
+use crate::ft::{HeartbeatMonitor, Quarantine};
+use crate::metrics::{Histogram, Registry};
 use crate::qcache::{self, Attach, CachedResult, PartialResult, QCache};
 use crate::rsl::synthesize_task_rsl;
-use crate::scheduler::{NodeState, Policy, SchedCtx};
+use crate::scheduler::{NodeState, Policy, SchedCtx, Task};
 use crate::wire::Message;
 use runner::{CacheInfo, JobRunner};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -120,6 +120,22 @@ pub struct JseConfig {
     /// how many jobs may hold runners at once (1 = the 2003 sequential
     /// broker; the admission queue holds the rest)
     pub max_concurrent_jobs: usize,
+    /// faultline recovery: how many failed attempts a single task may
+    /// accumulate before its job is failed explicitly (`[fault]
+    /// task_retry_budget`)
+    pub task_retry_budget: u32,
+    /// faultline recovery: re-dispatch straggling tasks speculatively
+    /// once a duration profile exists (`[fault] speculate`)
+    pub speculate: bool,
+    /// which quantile of observed task durations anchors the soft
+    /// deadline (`[fault] deadline_quantile`)
+    pub deadline_quantile: f64,
+    /// deadline = quantile * factor; an attempt in flight longer than
+    /// this is a straggler (`[fault] deadline_factor`)
+    pub deadline_factor: f64,
+    /// consecutive task failures on one node before it is quarantined
+    /// (`[fault] quarantine_threshold`)
+    pub quarantine_threshold: u32,
 }
 
 impl Default for JseConfig {
@@ -130,6 +146,11 @@ impl Default for JseConfig {
             time_scale: 200.0,
             streams: 1,
             max_concurrent_jobs: 1,
+            task_retry_budget: 3,
+            speculate: true,
+            deadline_quantile: 0.95,
+            deadline_factor: 3.0,
+            quarantine_threshold: 3,
         }
     }
 }
@@ -160,6 +181,13 @@ pub struct Jse {
     /// scan-sharing subscribers parked until their primary seals:
     /// job id -> the full-result key it follows
     pending_subscribers: BTreeMap<u64, u64>,
+    /// nodes sidelined after repeated task failures ([`crate::ft`]):
+    /// still alive (their bricks count, no re-replication fires) but
+    /// offered no further work
+    quarantine: Quarantine,
+    /// observed task wall times across all jobs; anchors the straggler
+    /// deadline (quantile * factor) once enough samples exist
+    durations: Histogram,
 }
 
 impl Jse {
@@ -175,6 +203,7 @@ impl Jse {
         let timeout = Duration::from_secs_f64(
             (cfg.heartbeat_timeout_s / cfg.time_scale.max(1e-9)).max(0.1),
         );
+        let quarantine = Quarantine::new(cfg.quarantine_threshold);
         Jse {
             cfg,
             nodes,
@@ -189,6 +218,8 @@ impl Jse {
             rr: 0,
             qcache: None,
             pending_subscribers: BTreeMap::new(),
+            quarantine,
+            durations: Histogram::new(),
         }
     }
 
@@ -221,6 +252,12 @@ impl Jse {
 
     pub fn monitor(&self) -> &HeartbeatMonitor {
         &self.monitor
+    }
+
+    /// The node quarantine ledger (read-only; chaos tests and the
+    /// portal's status page inspect it).
+    pub fn quarantine(&self) -> &Quarantine {
+        &self.quarantine
     }
 
     pub fn queued_jobs(&self) -> usize {
@@ -432,7 +469,9 @@ impl Jse {
                 name: n.name.clone(),
                 speed: n.speed,
                 slots: n.slots,
-                up: n.up && !self.monitor.is_dead(&n.name),
+                up: n.up
+                    && !self.monitor.is_dead(&n.name)
+                    && !self.quarantine.is_quarantined(&n.name),
             })
             .collect();
         let bricks = cat.bricks_for_dataset(dataset);
@@ -623,7 +662,10 @@ impl Jse {
             let cat = self.cat();
             let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
             for (_, n) in cat.nodes.iter() {
-                if n.up && !self.monitor.is_dead(&n.name) {
+                if n.up
+                    && !self.monitor.is_dead(&n.name)
+                    && !self.quarantine.is_quarantined(&n.name)
+                {
                     by_name.insert(n.name.clone(), n.slots);
                 }
             }
@@ -676,9 +718,15 @@ impl Jse {
                         self.cfg.streams,
                     )
                     .to_string();
+                    let attempt = self
+                        .runners
+                        .get_mut(&id)
+                        .map(|r| r.begin_attempt(task.brick, task.range))
+                        .unwrap_or(0);
                     let msg = Message::SubmitTask {
                         job: id,
                         task: task.clone(),
+                        attempt,
                         filter,
                         rsl,
                     };
@@ -689,7 +737,7 @@ impl Jse {
                         .unwrap_or(false);
                     if sent {
                         if let Some(r) = self.runners.get_mut(&id) {
-                            r.record_dispatch(name, task);
+                            r.record_dispatch(name, task, attempt);
                         }
                         if let Some(m) = &self.metrics {
                             m.counter("jse.tasks_dispatched").inc();
@@ -732,6 +780,164 @@ impl Jse {
         }
     }
 
+    /// Count a task failure against `node` and quarantine it when the
+    /// strike threshold trips. Quarantine is the *scheduling* shadow of
+    /// a node death: in-flight work fails over and no new work is
+    /// offered, but the node stays alive — no `nodes_lost` entry, no
+    /// re-replication, its brick replicas still count. Starvation
+    /// guard: the last live node is never quarantined (sidelining it
+    /// would stall every job; per-task retry budgets bound the damage
+    /// a misbehaving last node can do instead).
+    fn strike_node(&mut self, node: &str) {
+        let live_others = {
+            let cat = self.cat();
+            cat.nodes
+                .iter()
+                .filter(|(_, n)| {
+                    n.up
+                        && n.name != node
+                        && !self.monitor.is_dead(&n.name)
+                        && !self.quarantine.is_quarantined(&n.name)
+                })
+                .count()
+        };
+        if live_others == 0 {
+            return;
+        }
+        if self.quarantine.strike(node) {
+            if let Some(m) = &self.metrics {
+                m.counter("ft.nodes_quarantined").inc();
+            }
+            eprintln!(
+                "[jse] quarantining node {node} after repeated task \
+                 failures"
+            );
+            let mut failed_over = 0usize;
+            for r in self.runners.values_mut() {
+                failed_over += r.sideline_node(node);
+            }
+            if let Some(m) = &self.metrics {
+                m.counter("jse.tasks_failed_over")
+                    .add(failed_over as u64);
+            }
+        }
+    }
+
+    /// Straggler mitigation: once enough task durations have been
+    /// observed, any issued attempt in flight longer than
+    /// `quantile(deadline_quantile) * deadline_factor` is
+    /// speculatively re-dispatched (with a fresh attempt id) to
+    /// another live replica holder with a free slot. First result
+    /// wins; the loser's reply is dropped as stale by the runner.
+    fn speculate(&mut self) {
+        if !self.cfg.speculate || self.runners.is_empty() {
+            return;
+        }
+        // too few samples to call anything a straggler yet
+        if self.durations.count() < 8 {
+            return;
+        }
+        let q = self.durations.quantile(self.cfg.deadline_quantile);
+        let deadline_ns =
+            (q as f64 * self.cfg.deadline_factor.max(1.0)) as u64;
+        if let Some(m) = &self.metrics {
+            m.gauge("jse.task_deadline_ns").set(deadline_ns);
+        }
+        let deadline = Duration::from_nanos(deadline_ns.max(1));
+        // capacity view, as in dispatch(): live, heartbeating,
+        // unquarantined nodes only
+        let caps: BTreeMap<String, usize> = {
+            let cat = self.cat();
+            cat.nodes
+                .iter()
+                .filter(|(_, n)| {
+                    n.up
+                        && !self.monitor.is_dead(&n.name)
+                        && !self.quarantine.is_quarantined(&n.name)
+                })
+                .map(|(_, n)| (n.name.clone(), n.slots))
+                .collect()
+        };
+        let mut busy: BTreeMap<String, usize> = BTreeMap::new();
+        for r in self.runners.values() {
+            for name in caps.keys() {
+                *busy.entry(name.clone()).or_insert(0) += r.busy_on(name);
+            }
+        }
+        let ids: Vec<u64> = self.runners.keys().copied().collect();
+        for id in ids {
+            let overdue = self
+                .runners
+                .get(&id)
+                .map(|r| r.overdue(deadline))
+                .unwrap_or_default();
+            for (slow, task) in overdue {
+                let target = self.runners.get(&id).and_then(|r| {
+                    r.ctx.brick(task.brick).and_then(|b| {
+                        b.holders
+                            .iter()
+                            .find(|h| {
+                                let h = h.as_str();
+                                h != slow.as_str()
+                                    && r.ctx
+                                        .node(h)
+                                        .map(|n| n.up)
+                                        .unwrap_or(false)
+                                    && self.nodes.contains_key(h)
+                                    && caps.get(h).is_some_and(|c| {
+                                        busy.get(h)
+                                            .copied()
+                                            .unwrap_or(0)
+                                            < *c
+                                    })
+                            })
+                            .cloned()
+                    })
+                });
+                let Some(target) = target else { continue };
+                let (attempt, filter) = match self.runners.get_mut(&id)
+                {
+                    Some(r) => (
+                        r.begin_attempt(task.brick, task.range),
+                        r.filter_expr.clone(),
+                    ),
+                    None => continue,
+                };
+                // the target holds a replica: the copy reads local data
+                let spec = Task { source: None, ..task.clone() };
+                let rsl = synthesize_task_rsl(
+                    id,
+                    &spec,
+                    &filter,
+                    &target,
+                    self.cfg.streams,
+                )
+                .to_string();
+                let msg = Message::SubmitTask {
+                    job: id,
+                    task: spec.clone(),
+                    attempt,
+                    filter,
+                    rsl,
+                };
+                let sent = self
+                    .nodes
+                    .get(&target)
+                    .map(|tx| tx.send(msg).is_ok())
+                    .unwrap_or(false);
+                if sent {
+                    if let Some(r) = self.runners.get_mut(&id) {
+                        r.record_speculative(&target, spec, attempt);
+                    }
+                    if let Some(m) = &self.metrics {
+                        m.counter("jse.tasks_speculated").inc();
+                    }
+                    *busy.entry(target).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+
     /// Route one node->leader message to its job's runner.
     fn route(&mut self, msg: Message) {
         match msg {
@@ -740,6 +946,7 @@ impl Jse {
                 job,
                 brick,
                 range,
+                attempt,
                 events_in,
                 events_selected,
                 result_bytes,
@@ -752,6 +959,7 @@ impl Jse {
                     r.on_task_done(
                         brick,
                         range,
+                        attempt,
                         events_in,
                         events_selected,
                         result_bytes,
@@ -759,7 +967,16 @@ impl Jse {
                     )
                 });
                 match hit {
-                    Some((node, wall)) => {
+                    Some((node, wall, spec_win)) => {
+                        // a finishing node is behaving: forget its
+                        // quarantine strikes
+                        self.quarantine.clear(&node);
+                        self.durations.record(wall.as_nanos() as u64);
+                        if spec_win {
+                            if let Some(m) = &self.metrics {
+                                m.counter("jse.speculation_wins").inc();
+                            }
+                        }
                         // qcache layer-3 harvest: a whole-brick
                         // completion is memoized under the epoch
                         // snapshotted at admission (an epoch bumped
@@ -822,13 +1039,36 @@ impl Jse {
                     None => self.drop_stale("TaskDone", job),
                 }
             }
-            Message::TaskFailed { job, brick, range, error } => {
-                let hit = self
-                    .runners
-                    .get_mut(&job)
-                    .and_then(|r| r.on_task_failed(brick, range, error));
-                if hit.is_none() {
-                    self.drop_stale("TaskFailed", job);
+            Message::TaskFailed { job, brick, range, attempt, error } => {
+                let budget = self.cfg.task_retry_budget;
+                let hit = self.runners.get_mut(&job).and_then(|r| {
+                    r.on_task_failed(
+                        brick,
+                        range,
+                        attempt,
+                        error.clone(),
+                        budget,
+                    )
+                });
+                match hit {
+                    Some(fail) => {
+                        self.strike_node(&fail.node);
+                        if fail.exhausted {
+                            let msg = format!(
+                                "task {:?}:{}..{} exceeded its retry \
+                                 budget ({} failed attempts, budget \
+                                 {}): {}",
+                                brick,
+                                range.0,
+                                range.1,
+                                fail.failures,
+                                budget,
+                                error,
+                            );
+                            self.fail_job(job, &msg);
+                        }
+                    }
+                    None => self.drop_stale("TaskFailed", job),
                 }
             }
             // node-bound kinds never arrive on this channel
@@ -862,9 +1102,21 @@ impl Jse {
         let cache = runner.cache.clone();
         let out = runner.finish();
         let done = out.status == JobStatus::Done;
+        let fail_msg = (!done).then(|| {
+            out.error
+                .clone()
+                .unwrap_or_else(|| "job failed".to_string())
+        });
         self.cat().update_job(id, |j| {
             j.status =
                 if done { JobStatus::Merging } else { JobStatus::Failed };
+            // the typed error must be observable by callers polling the
+            // catalogue, not just by whoever drains the outcome
+            if let Some(msg) = &fail_msg {
+                if j.error.is_none() {
+                    j.error = Some(msg.clone());
+                }
+            }
         });
         if done {
             self.cat().update_job(id, |j| j.status = JobStatus::Done);
@@ -988,6 +1240,9 @@ impl Jse {
                 }
             }
         }
+
+        // straggler mitigation: speculatively re-dispatch overdue tasks
+        self.speculate();
 
         // liveness check: a node death affects every in-flight job
         for dead in self.monitor.check() {
@@ -1143,7 +1398,7 @@ mod tests {
             });
             while let Ok(msg) = rx.recv() {
                 match msg {
-                    Message::SubmitTask { job, task, rsl, .. } => {
+                    Message::SubmitTask { job, task, attempt, rsl, .. } => {
                         // the RSL must be parseable — nodes reject junk
                         assert!(crate::rsl::parse(&rsl).is_ok());
                         let n = task.n_events() as u64;
@@ -1158,6 +1413,7 @@ mod tests {
                             job,
                             brick: task.brick,
                             range: task.range,
+                            attempt,
                             events_in: n,
                             events_selected: n / 10,
                             result_bytes: n * 100,
@@ -1277,8 +1533,7 @@ mod tests {
             heartbeat_timeout_s: 20.0, // 100ms real at scale 200
             tick_s: 1.0,
             time_scale: 200.0,
-            streams: 1,
-            max_concurrent_jobs: 1,
+            ..Default::default()
         };
         let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
         let outcome = jse.run_job(job);
@@ -1366,6 +1621,7 @@ mod tests {
                 job: 9999,
                 brick: BrickId::new(7, 7),
                 range: (0, 10),
+                attempt: 0,
                 events_in: 10,
                 events_selected: 1,
                 result_bytes: 100,
@@ -1377,6 +1633,7 @@ mod tests {
                 job, // real job id, but a task nobody dispatched
                 brick: BrickId::new(1, 99),
                 range: (0, 5),
+                attempt: 0,
                 events_in: 5,
                 events_selected: 5,
                 result_bytes: 50,
@@ -1388,6 +1645,7 @@ mod tests {
                 job: 4242,
                 brick: BrickId::new(1, 0),
                 range: (0, 100),
+                attempt: 0,
                 error: "ghost".into(),
             })
             .unwrap();
@@ -1490,6 +1748,235 @@ mod tests {
         assert!(row_err.unwrap().contains("unrecoverable"));
         let _ = a_tx.send(Message::Shutdown);
         a_j.join().unwrap();
+    }
+
+    /// A node that heartbeats like a healthy one but answers every
+    /// task with `TaskFailed` (echoing the attempt id).
+    fn failing_node(
+        name: &str,
+        out: Sender<Message>,
+    ) -> (Sender<Message>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel::<Message>();
+        let beat_name = name.to_string();
+        let beat_out = out.clone();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+                if beat_out
+                    .send(Message::Heartbeat {
+                        node: beat_name.clone(),
+                        free_slots: 1,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        let j = std::thread::spawn(move || {
+            let _stop_on_exit = StopOnExit(stop);
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Message::SubmitTask { job, task, attempt, .. } => {
+                        let _ = out.send(Message::TaskFailed {
+                            job,
+                            brick: task.brick,
+                            range: task.range,
+                            attempt,
+                            error: "injected: task always fails".into(),
+                        });
+                    }
+                    Message::Shutdown => return,
+                    _ => {}
+                }
+            }
+        });
+        (tx, j)
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_the_job_explicitly() {
+        // central policy requeues failed tasks forever: before the
+        // retry budget existed, a task that always fails looped the
+        // job indefinitely. Now the budget turns it into an explicit,
+        // typed job failure — no hang, no silent truncation.
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = failing_node("a", out_tx.clone());
+        let mut cat = catalog_with(1, 2, &["a"]);
+        let job = cat.submit_job(1, "max_pt > 0", "central");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> =
+            [("a".to_string(), a_tx.clone())].into();
+        let cfg = JseConfig {
+            task_retry_budget: 2,
+            ..Default::default()
+        };
+        let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
+        let metrics = Arc::new(Registry::new());
+        jse.set_metrics(metrics.clone());
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Failed);
+        assert!(
+            outcome.error.as_deref().unwrap().contains("retry budget"),
+            "{:?}",
+            outcome.error
+        );
+        assert!(metrics.counter("jse.jobs_failed_explicitly").get() >= 1);
+        // the single node was never quarantined: sidelining the last
+        // live node would have stalled the job instead of failing it
+        assert!(!jse.quarantine().is_quarantined("a"));
+        let _ = a_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+    }
+
+    #[test]
+    fn flaky_node_is_quarantined_and_the_job_completes_elsewhere() {
+        let (out_tx, out_rx) = mpsc::channel();
+        let (a_tx, a_j) = failing_node("a", out_tx.clone());
+        let (b_tx, b_j) = fake_node("b", out_tx.clone());
+        let mut cat = catalog_with(1, 6, &["a", "b"]);
+        let job = cat.submit_job(1, "max_pt > 0", "central");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> = [
+            ("a".to_string(), a_tx.clone()),
+            ("b".to_string(), b_tx.clone()),
+        ]
+        .into();
+        let cfg = JseConfig {
+            quarantine_threshold: 2,
+            task_retry_budget: 20,
+            ..Default::default()
+        };
+        let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
+        let metrics = Arc::new(Registry::new());
+        jse.set_metrics(metrics.clone());
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Done, "{:?}", outcome.error);
+        assert_eq!(outcome.events_in, 600);
+        // the flaky node was sidelined, not declared dead: no
+        // nodes_lost entry (so no re-replication fires), but it is in
+        // quarantine and was struck off the dispatch set
+        assert!(outcome.nodes_lost.is_empty(), "{:?}", outcome.nodes_lost);
+        assert!(jse.quarantine().is_quarantined("a"));
+        assert_eq!(metrics.counter("ft.nodes_quarantined").get(), 1);
+        // every result was computed by the healthy node
+        let cat = catalog.lock().unwrap();
+        assert!(cat.job_results(job).iter().all(|r| r.node == "b"));
+        drop(cat);
+        let _ = a_tx.send(Message::Shutdown);
+        let _ = b_tx.send(Message::Shutdown);
+        a_j.join().unwrap();
+        b_j.join().unwrap();
+    }
+
+    #[test]
+    fn straggler_is_rescued_by_speculative_redispatch() {
+        // node "slow" swallows the task for brick 11 (still
+        // heartbeating, so the death path never fires); node "fast"
+        // answers instantly. The job can only finish if the JSE
+        // notices the straggler against its duration profile and
+        // speculatively re-dispatches the task to the other holder.
+        let (out_tx, out_rx) = mpsc::channel();
+        let (fast_tx, fast_j) = fake_node("fast", out_tx.clone());
+        let stuck = BrickId::new(1, 11);
+        let (slow_tx, slow_rx) = mpsc::channel::<Message>();
+        let slow_out = out_tx.clone();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        std::thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+                if slow_out
+                    .send(Message::Heartbeat {
+                        node: "slow".into(),
+                        free_slots: 1,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        let slow_reply = out_tx.clone();
+        let slow_j = std::thread::spawn(move || {
+            let _stop_on_exit = StopOnExit(stop);
+            while let Ok(msg) = slow_rx.recv() {
+                match msg {
+                    Message::SubmitTask { job, task, attempt, .. } => {
+                        if task.brick == stuck {
+                            continue; // never answer: a true straggler
+                        }
+                        let n = task.n_events() as u64;
+                        let hist: Vec<u8> = (0..8)
+                            .flat_map(|_| 1.0f32.to_le_bytes())
+                            .collect();
+                        let _ = slow_reply.send(Message::TaskDone {
+                            job,
+                            brick: task.brick,
+                            range: task.range,
+                            attempt,
+                            events_in: n,
+                            events_selected: n / 10,
+                            result_bytes: n * 100,
+                            histogram: hist,
+                        });
+                    }
+                    Message::Shutdown => return,
+                    _ => {}
+                }
+            }
+        });
+        let mut cat = Catalog::new();
+        cat.register_node("fast", 1.0, 1);
+        cat.register_node("slow", 1.0, 1);
+        for i in 0..12 {
+            let holders = if BrickId::new(1, i) == stuck {
+                vec!["slow".to_string(), "fast".to_string()]
+            } else {
+                vec!["fast".to_string(), "slow".to_string()]
+            };
+            cat.insert_brick(BrickId::new(1, i), 100, 100 << 20, holders);
+        }
+        let job = cat.submit_job(1, "max_pt > 0", "locality");
+        let catalog = Arc::new(Mutex::new(cat));
+        let nodes: BTreeMap<String, Sender<Message>> = [
+            ("fast".to_string(), fast_tx.clone()),
+            ("slow".to_string(), slow_tx.clone()),
+        ]
+        .into();
+        let cfg = JseConfig {
+            tick_s: 1.0,
+            deadline_factor: 2.0,
+            ..Default::default()
+        };
+        let mut jse = Jse::new(cfg, nodes, out_rx, catalog.clone());
+        let metrics = Arc::new(Registry::new());
+        jse.set_metrics(metrics.clone());
+        let outcome = jse.run_job(job);
+        assert_eq!(outcome.status, JobStatus::Done, "{:?}", outcome.error);
+        assert_eq!(outcome.events_in, 1200);
+        assert_eq!(outcome.tasks_completed, 12);
+        assert_eq!(outcome.histogram.len(), 8);
+        assert_eq!(outcome.histogram[0], 12.0, "merged exactly once each");
+        assert!(outcome.nodes_lost.is_empty(), "straggler is not a death");
+        assert!(metrics.counter("jse.tasks_speculated").get() >= 1);
+        assert!(metrics.counter("jse.speculation_wins").get() >= 1);
+        // the stuck brick's result came from the speculative holder
+        let cat = catalog.lock().unwrap();
+        let ran_on = cat
+            .job_results(job)
+            .iter()
+            .find(|r| r.brick == stuck)
+            .map(|r| r.node.clone())
+            .unwrap();
+        assert_eq!(ran_on, "fast");
+        drop(cat);
+        let _ = fast_tx.send(Message::Shutdown);
+        let _ = slow_tx.send(Message::Shutdown);
+        fast_j.join().unwrap();
+        slow_j.join().unwrap();
     }
 
     #[test]

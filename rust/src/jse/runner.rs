@@ -2,8 +2,8 @@
 //!
 //! A [`JobRunner`] owns everything *specific to one in-flight job*: its
 //! compiled scheduling policy, its view of the cluster ([`SchedCtx`]),
-//! its outstanding tasks and its accumulating [`JobOutcome`]. The
-//! [`super::Jse`] event loop owns everything *shared*: the node
+//! its outstanding task attempts and its accumulating [`JobOutcome`].
+//! The [`super::Jse`] event loop owns everything *shared*: the node
 //! channels, the heartbeat monitor, the catalogue and the global slot
 //! accounting. The runner is a passive state machine — the loop feeds
 //! it demultiplexed wire messages and idle-slot offers, and it answers
@@ -16,6 +16,21 @@
 //!             └─ merge (finish → terminal JobOutcome)
 //! ```
 //!
+//! **Attempts and speculation (faultline).** Every dispatch of a task
+//! carries an attempt id allocated by [`JobRunner::begin_attempt`], so
+//! the same `(brick, range)` can be safely in flight more than once:
+//! the loop may *speculatively* re-dispatch a straggling task to a
+//! second node ([`JobRunner::record_speculative`]). The scheduling
+//! policy only ever sees the attempt it issued itself — speculative
+//! copies are runner-side bookkeeping. First result wins: a completion
+//! retires *every* in-flight attempt of the task and is reported to
+//! the policy against its issued record; the losers' replies (and any
+//! duplicate deliveries) then find no outstanding entry and are
+//! dropped as stale, so a task can never merge twice. When the issued
+//! attempt has to be requeued (its node died or it failed within
+//! budget), speculative siblings are forgotten the same way, keeping
+//! the policy's single-assignment view of the world intact.
+//!
 //! Every message-handling path here is total: replies for tasks the
 //! runner does not know about (a node declared dead whose answer
 //! arrived late, a duplicate, a cancelled job's stragglers) return
@@ -26,7 +41,7 @@ use super::JobOutcome;
 use crate::brick::BrickId;
 use crate::catalog::JobStatus;
 use crate::scheduler::{NodeState, Policy, SchedCtx, Scheduler, Task};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
 
 /// qcache bookkeeping carried by a runner whose job was admitted as the
@@ -51,6 +66,35 @@ pub struct CacheInfo {
     pub planned_events: u64,
 }
 
+/// A task's identity within one job: the unit retries, budgets and
+/// duplicate suppression key on.
+type TaskKey = (BrickId, (usize, usize));
+
+fn key_of(task: &Task) -> TaskKey {
+    (task.brick, task.range)
+}
+
+/// One dispatched attempt of a task, still awaiting its reply.
+#[derive(Debug, Clone)]
+struct InFlight {
+    task: Task,
+    attempt: u32,
+    since: Instant,
+}
+
+/// What a routed `TaskFailed` amounted to (see
+/// [`JobRunner::on_task_failed`]).
+#[derive(Debug, Clone)]
+pub struct TaskFailure {
+    /// node the failing attempt ran on (quarantine strikes key on it)
+    pub node: String,
+    /// failed attempts of this task so far, across all nodes
+    pub failures: u32,
+    /// the per-task retry budget is spent and nothing was requeued:
+    /// the loop must fail the job explicitly or it would hang
+    pub exhausted: bool,
+}
+
 /// One job's in-flight state inside the shared event loop.
 pub struct JobRunner {
     pub job: u64,
@@ -58,8 +102,18 @@ pub struct JobRunner {
     pub policy: Policy,
     sched: Box<dyn Scheduler>,
     pub ctx: SchedCtx,
-    /// node -> in-flight tasks with their dispatch timestamps
-    outstanding: BTreeMap<String, Vec<(Task, Instant)>>,
+    /// node -> in-flight attempts with their dispatch timestamps
+    outstanding: BTreeMap<String, Vec<InFlight>>,
+    /// which node holds the *policy-issued* record for each in-flight
+    /// task (completions must be reported against exactly that pair —
+    /// the policies match outstanding records by `(node, task)`)
+    issued_on: BTreeMap<TaskKey, String>,
+    /// next attempt id per task (monotonic within the job)
+    attempts: BTreeMap<TaskKey, u32>,
+    /// failed attempts per task (the retry budget's ledger)
+    failures: BTreeMap<TaskKey, u32>,
+    /// tasks already merged: late duplicates must never merge twice
+    completed: BTreeSet<TaskKey>,
     pub out: JobOutcome,
     /// set when this runner is the primary computation for a qcache
     /// fingerprint (None when the cache is disabled)
@@ -81,6 +135,10 @@ impl JobRunner {
             sched,
             ctx,
             outstanding: BTreeMap::new(),
+            issued_on: BTreeMap::new(),
+            attempts: BTreeMap::new(),
+            failures: BTreeMap::new(),
+            completed: BTreeSet::new(),
             out: JobOutcome::pending(job),
             cache: None,
         }
@@ -105,7 +163,7 @@ impl JobRunner {
     }
 
     /// Tasks currently in flight on `node` for this job (the runner's
-    /// share of the node's slot budget).
+    /// share of the node's slot budget; speculative copies count).
     pub fn busy_on(&self, node: &str) -> usize {
         self.outstanding.get(node).map(|v| v.len()).unwrap_or(0)
     }
@@ -126,11 +184,36 @@ impl JobRunner {
         self.sched.next_task(node, &self.ctx)
     }
 
-    pub fn record_dispatch(&mut self, node: &str, task: Task) {
+    /// Allocate the attempt id for the next dispatch of `task` (0 for
+    /// the first, then monotonically increasing across failover
+    /// requeues and speculative copies). The id rides the wire so that
+    /// replies and fault-injection decisions key on `(job, task,
+    /// attempt)`.
+    pub fn begin_attempt(&mut self, brick: BrickId, range: (usize, usize)) -> u32 {
+        let n = self.attempts.entry((brick, range)).or_insert(0);
+        let a = *n;
+        *n += 1;
+        a
+    }
+
+    /// A policy-issued submission is on the wire: remember it as the
+    /// task's issued record (completions report against this pair).
+    pub fn record_dispatch(&mut self, node: &str, task: Task, attempt: u32) {
+        self.issued_on.insert(key_of(&task), node.to_string());
         self.outstanding
             .entry(node.to_string())
             .or_default()
-            .push((task, Instant::now()));
+            .push(InFlight { task, attempt, since: Instant::now() });
+    }
+
+    /// A speculative copy is on the wire: track it for slot accounting
+    /// and first-result-wins, but keep the policy unaware — its issued
+    /// record stays wherever [`JobRunner::record_dispatch`] put it.
+    pub fn record_speculative(&mut self, node: &str, task: Task, attempt: u32) {
+        self.outstanding
+            .entry(node.to_string())
+            .or_default()
+            .push(InFlight { task, attempt, since: Instant::now() });
     }
 
     /// The submission channel was closed mid-send: hand the task back
@@ -140,73 +223,176 @@ impl JobRunner {
         self.sched.on_failure(node, task, &self.ctx);
     }
 
-    /// Remove the outstanding entry matching (brick, range), returning
-    /// the node that ran it. None = stale/unknown (drop, never crash).
-    fn take_outstanding(
+    /// Issued attempts that have been in flight longer than `deadline`
+    /// with no speculative copy yet: `(node it is running on, task)`.
+    /// Tasks with more than one attempt in flight are skipped — the
+    /// loop never piles speculation on speculation.
+    pub fn overdue(&self, deadline: Duration) -> Vec<(String, Task)> {
+        let mut in_flight: BTreeMap<TaskKey, usize> = BTreeMap::new();
+        for v in self.outstanding.values() {
+            for fl in v {
+                *in_flight.entry(key_of(&fl.task)).or_insert(0) += 1;
+            }
+        }
+        let mut out = Vec::new();
+        for (node, v) in &self.outstanding {
+            for fl in v {
+                if in_flight.get(&key_of(&fl.task)) == Some(&1)
+                    && fl.since.elapsed() > deadline
+                {
+                    out.push((node.clone(), fl.task.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove every in-flight attempt of (brick, range), across all
+    /// nodes. Returns `(node, entry)` pairs in node order.
+    fn take_all(
         &mut self,
         brick: BrickId,
         range: (usize, usize),
-    ) -> Option<(String, Task, Instant)> {
-        let node = self
-            .outstanding
-            .iter()
-            .find(|(_, v)| {
-                v.iter().any(|(t, _)| t.brick == brick && t.range == range)
-            })
-            .map(|(n, _)| n.clone())?;
-        let v = self.outstanding.get_mut(&node)?;
-        let pos = v
-            .iter()
-            .position(|(t, _)| t.brick == brick && t.range == range)?;
-        let (task, t0) = v.remove(pos);
-        if v.is_empty() {
-            self.outstanding.remove(&node);
+    ) -> Vec<(String, InFlight)> {
+        let mut removed = Vec::new();
+        for (node, v) in self.outstanding.iter_mut() {
+            let mut kept = Vec::with_capacity(v.len());
+            for fl in v.drain(..) {
+                if fl.task.brick == brick && fl.task.range == range {
+                    removed.push((node.clone(), fl));
+                } else {
+                    kept.push(fl);
+                }
+            }
+            *v = kept;
         }
-        Some((node, task, t0))
+        self.outstanding.retain(|_, v| !v.is_empty());
+        removed
     }
 
     /// A `TaskDone` routed to this job (histogram already decoded to
     /// bin values — the loop decodes the wire payload exactly once and
-    /// shares it with the qcache harvest). Returns the node that ran
-    /// the task and the task's wall time, or `None` for an unknown
-    /// task (late reply from a declared-dead node, duplicate, …) which
-    /// is dropped without touching the outcome.
+    /// shares it with the qcache harvest). First result wins: *every*
+    /// in-flight attempt of the task is retired, the merge happens
+    /// once, and the policy is told about the record it issued. Returns
+    /// `(node that produced the result, wall time of that attempt,
+    /// speculation won)`, or `None` for an unknown/duplicate task
+    /// reply, which is dropped without touching the outcome.
     #[allow(clippy::too_many_arguments)]
     pub fn on_task_done(
         &mut self,
         brick: BrickId,
         range: (usize, usize),
+        attempt: u32,
         events_in: u64,
         events_selected: u64,
         result_bytes: u64,
         histogram: &[f32],
-    ) -> Option<(String, Duration)> {
-        let (node, task, t0) = self.take_outstanding(brick, range)?;
-        // virtual elapsed of 1.0 keeps the adaptive policies' feedback
-        // identical to the sequential prototype (wall time is reported
-        // separately for metrics)
-        self.sched.on_complete(&node, &task, 1.0);
+    ) -> Option<(String, Duration, bool)> {
+        let key = (brick, range);
+        if self.completed.contains(&key) {
+            return None; // duplicate of an already-merged result
+        }
+        let removed = self.take_all(brick, range);
+        // the winning attempt: prefer the exact (attempt) match for
+        // wall-time accounting, fall back to the first entry (a reply
+        // can only reach here if something was in flight)
+        let (win_node, win) = removed
+            .iter()
+            .find(|(_, fl)| fl.attempt == attempt)
+            .or_else(|| removed.first())?;
+        let win_node = win_node.clone();
+        let wall = win.since.elapsed();
+        self.completed.insert(key);
+        self.failures.remove(&key);
+        // report completion against the policy's issued record, even
+        // when a speculative copy produced the bytes — the policies
+        // match their outstanding bookkeeping by exact (node, task)
+        let issued = self.issued_on.remove(&key).and_then(|n| {
+            removed
+                .iter()
+                .find(|(rn, _)| *rn == n)
+                .map(|(rn, fl)| (rn.clone(), fl.task.clone()))
+        });
+        let spec_win = match issued {
+            Some((inode, itask)) => {
+                let won_elsewhere = inode != win_node;
+                self.sched.on_complete(&inode, &itask, 1.0);
+                won_elsewhere
+            }
+            None => {
+                // no issued record in flight (it was already retired);
+                // keep the policy's counters moving with the winner
+                let t = win.task.clone();
+                self.sched.on_complete(&win_node, &t, 1.0);
+                false
+            }
+        };
         self.out.tasks_completed += 1;
         self.out.events_in += events_in;
         self.out.events_selected += events_selected;
         self.out.result_bytes += result_bytes;
         super::merge_histogram_f32(&mut self.out.histogram, histogram);
-        Some((node, t0.elapsed()))
+        Some((win_node, wall, spec_win))
     }
 
-    /// A `TaskFailed` routed to this job: the work is re-queued via the
-    /// policy. Returns the node, or `None` for stale/unknown tasks.
+    /// A `TaskFailed` routed to this job, for one specific attempt.
+    /// An issued attempt failing within budget is requeued through the
+    /// policy (its speculative siblings, if any, are forgotten — their
+    /// late replies become stale). An issued attempt failing *beyond*
+    /// budget is NOT requeued: `exhausted` is set and the loop must
+    /// fail the job explicitly. A speculative copy failing never
+    /// touches the policy — the issued attempt is still in flight.
+    /// Returns `None` for stale/unknown attempts.
     pub fn on_task_failed(
         &mut self,
         brick: BrickId,
         range: (usize, usize),
+        attempt: u32,
         error: String,
-    ) -> Option<String> {
-        let (node, task, _) = self.take_outstanding(brick, range)?;
+        budget: u32,
+    ) -> Option<TaskFailure> {
+        let key = (brick, range);
+        let node = self
+            .outstanding
+            .iter()
+            .find(|(_, v)| {
+                v.iter().any(|fl| {
+                    key_of(&fl.task) == key && fl.attempt == attempt
+                })
+            })
+            .map(|(n, _)| n.clone())?;
+        let v = self.outstanding.get_mut(&node)?;
+        let pos = v.iter().position(|fl| {
+            key_of(&fl.task) == key && fl.attempt == attempt
+        })?;
+        let failed = v.remove(pos);
+        if v.is_empty() {
+            self.outstanding.remove(&node);
+        }
         self.out.tasks_failed += 1;
         self.out.error = Some(error);
-        self.sched.on_failure(&node, &task, &self.ctx);
-        Some(node)
+        let fails = {
+            let f = self.failures.entry(key).or_insert(0);
+            *f += 1;
+            *f
+        };
+        let is_issued =
+            self.issued_on.get(&key).is_some_and(|n| *n == node);
+        if !is_issued {
+            // a speculative copy failed; the issued attempt is still
+            // in flight and owns the task's fate
+            return Some(TaskFailure { node, failures: fails, exhausted: false });
+        }
+        self.issued_on.remove(&key);
+        // forget speculative siblings: the requeue below (or the
+        // explicit job failure on exhaustion) owns the task again
+        let _ = self.take_all(brick, range);
+        let exhausted = fails > budget;
+        if !exhausted {
+            self.sched.on_failure(&node, &failed.task, &self.ctx);
+        }
+        Some(TaskFailure { node, failures: fails, exhausted })
     }
 
     /// Elastic membership: a node joined the grid while this job is in
@@ -224,19 +410,45 @@ impl JobRunner {
     }
 
     /// `node` died (missed heartbeats or a closed channel): void its
-    /// in-flight work and re-queue everything through the policy's
-    /// failure paths. Returns how many in-flight tasks were failed
-    /// over; 0 if the node was not a live participant of this job.
+    /// in-flight work, re-queue its issued attempts through the
+    /// policy's failure paths, and record it in `nodes_lost` (the
+    /// cluster's recovery trigger). Returns how many in-flight attempts
+    /// were failed over; 0 if the node was not a live participant.
     pub fn on_node_down(&mut self, node: &str) -> usize {
+        self.fail_over(node, true)
+    }
+
+    /// `node` was quarantined (repeated task failures): exactly the
+    /// node-death failover, except the node is *not* recorded in
+    /// `nodes_lost` — it is sidelined from scheduling, but it is still
+    /// alive and its brick replicas still count, so the cluster's
+    /// re-replication machinery must not fire.
+    pub fn sideline_node(&mut self, node: &str) -> usize {
+        self.fail_over(node, false)
+    }
+
+    fn fail_over(&mut self, node: &str, record_loss: bool) -> usize {
         if !self.ctx.mark_down(node) {
             return 0; // not ours, or already handled
         }
-        self.out.nodes_lost.push(node.to_string());
+        if record_loss {
+            self.out.nodes_lost.push(node.to_string());
+        }
         let drained = self.outstanding.remove(node).unwrap_or_default();
         let n = drained.len();
-        for (t, _) in &drained {
+        for fl in &drained {
+            let key = key_of(&fl.task);
             self.out.tasks_failed += 1;
-            self.sched.on_failure(node, t, &self.ctx);
+            if self.issued_on.get(&key).is_some_and(|i| *i == node) {
+                // the policy's issued record dies with the node:
+                // requeue it, and forget any speculative siblings still
+                // in flight elsewhere (their replies become stale)
+                self.issued_on.remove(&key);
+                let _ = self.take_all(fl.task.brick, fl.task.range);
+                self.sched.on_failure(node, &fl.task, &self.ctx);
+            }
+            // else: a speculative copy died with the node; the issued
+            // attempt is still in flight elsewhere — nothing to requeue
         }
         self.sched.on_node_down(node, &self.ctx);
         n
@@ -256,10 +468,28 @@ impl JobRunner {
     }
 
     /// Merge phase: seal the outcome with its terminal status. A job is
-    /// Done when the policy covered everything and either nothing went
-    /// wrong or the failures were all recovered (some work completed).
+    /// Done when the policy covered everything, every planned event was
+    /// actually merged, and either nothing went wrong or the failures
+    /// were all recovered (some work completed).
+    ///
+    /// The coverage check is what rules out *silent truncation*: some
+    /// policies count a brick whose every holder died as "covered"
+    /// (lost) so `is_done` can still fire — such a job must seal
+    /// `Failed` with a typed error, never `Done` with a histogram
+    /// quietly missing events.
     pub fn finish(mut self) -> JobOutcome {
-        let done = self.sched.is_done()
+        let covered = self.sched.is_done();
+        let full = self.out.events_in >= self.ctx.n_events() as u64;
+        if covered && !full && self.out.error.is_none() {
+            self.out.error = Some(format!(
+                "coverage lost: only {} of {} events merged (brick(s) \
+                 with no surviving replica were dropped)",
+                self.out.events_in,
+                self.ctx.n_events()
+            ));
+        }
+        let done = covered
+            && full
             && (self.out.error.is_none() || self.out.tasks_completed > 0);
         self.out.status =
             if done { JobStatus::Done } else { JobStatus::Failed };

@@ -81,6 +81,44 @@
 //! ([`cluster::ClusterHandle::try_submit`]) so malformed expressions
 //! never enter the catalogue.
 //!
+//! ## Faults, deadlines and speculation: the `faultline` subsystem
+//!
+//! The paper names node failure the system's biggest disadvantage;
+//! [`faultline`] makes that failure mode *testable* and the recovery
+//! machinery *always armed*. A seeded [`faultline::FaultPlan`] (the
+//! `[fault]` config section) injects transfer drops, delay spikes,
+//! sticky partitions, payload corruption, node crashes, stalls,
+//! slowdowns and duplicate replies — every decision a stateless keyed
+//! hash, so the same seed reproduces the identical fault trace
+//! regardless of placement or thread timing
+//! ([`cluster::ClusterHandle::fault_trace`]). Surviving them:
+//!
+//! - **GASS bounded retry** — transfers verify checksums end to end
+//!   and retry with exponential backoff + deterministic jitter
+//!   (`gass_retry_limit`, `gass.transfer_retries`), failing typed
+//!   ([`gass::GassError`]) when the budget is spent or the path is
+//!   partitioned;
+//! - **retry budgets** — each task gets `task_retry_budget` failed
+//!   attempts across nodes; exhaustion fails the job explicitly
+//!   instead of retrying forever;
+//! - **soft deadlines + speculation** — the JSE derives a per-task
+//!   deadline from a running duration quantile (`deadline_quantile` ×
+//!   `deadline_factor`) and re-dispatches stragglers to another
+//!   replica holder; first result wins, stale duplicates are
+//!   suppressed by `(job, task, attempt)` ids on the wire
+//!   (`jse.tasks_speculated`, `jse.speculation_wins`);
+//! - **quarantine** — a node failing `quarantine_threshold` strikes is
+//!   sidelined from scheduling ([`ft::Quarantine`],
+//!   `ft.nodes_quarantined`) without being declared dead: its replicas
+//!   still count and no re-replication fires; the last live node is
+//!   never quarantined.
+//!
+//! The contract, enforced by `tests/chaos.rs` and the `ext_chaos`
+//! bench (CI-gated via `BENCH_ext_chaos.json`): under any seeded fault
+//! mix, every job seals Done with a histogram bit-identical to the
+//! fault-free run, or fails explicitly with a typed error — no hangs,
+//! no silent truncation.
+//!
 //! ## The columnar node hot path
 //!
 //! Per-node throughput is the whole ball game (§4.1: bricks exist "to
@@ -123,7 +161,8 @@
 //!   per-job from shared slot state), [`jse`] (event loop +
 //!   [`jse::runner`] state machines), [`qcache`] (query-result cache,
 //!   scan sharing, partial memoization), [`ft`] (heartbeat liveness +
-//!   re-replication; node death fails over across *all* jobs),
+//!   re-replication + quarantine; node death fails over across *all*
+//!   jobs), [`faultline`] (seeded deterministic fault injection),
 //!   [`cluster`] (admission + wiring), [`portal`] (submit / status /
 //!   cancel over HTTP)
 //! - compute: [`runtime`] (backend-dispatched engine: native PJRT over
@@ -173,7 +212,8 @@
 //!   `.counter()/.gauge()/.histogram()` call site, wildcards covering
 //!   formatted families).
 //! - **Panic paths.** No `unwrap`/`expect`/slice-indexing/`panic!` in
-//!   the always-on service loops (`jse`, `node::executor`, `portal`);
+//!   the always-on service loops (`jse`, `node::executor`, `portal`,
+//!   `gass`);
 //!   a poisoned-lock recovery helper ([`util::lock`]) replaces bare
 //!   `.lock().unwrap()` crate-wide. Justified exceptions carry a
 //!   `// gepslint:allow(<lint>): <why>` annotation.
@@ -192,6 +232,7 @@ pub mod catalog;
 pub mod cluster;
 pub mod config;
 pub mod events;
+pub mod faultline;
 pub mod filterexpr;
 pub mod ft;
 pub mod gass;

@@ -19,9 +19,12 @@ pub mod names {
     pub const REGISTERED: &[&str] = &[
         "cluster.nodes_joined",
         "cluster.nodes_killed",
+        "faultline.injected.*",
         "ft.bricks_rebalanced",
         "ft.bricks_rereplicated",
         "ft.bricks_unrecoverable",
+        "ft.nodes_quarantined",
+        "gass.transfer_retries",
         "jse.job_wall_ns",
         "jse.jobs_cancelled",
         "jse.jobs_discovered",
@@ -33,11 +36,14 @@ pub mod names {
         "jse.jobs_queued",
         "jse.nodes_joined",
         "jse.nodes_lost",
+        "jse.speculation_wins",
         "jse.stale_messages",
         "jse.task_busy_ns",
+        "jse.task_deadline_ns",
         "jse.tasks_dispatched",
         "jse.tasks_failed_over",
         "jse.tasks_outstanding",
+        "jse.tasks_speculated",
         "node.drain_reorder_depth",
         "node.pack_stall_ns",
         "node.pipeline.*.task_busy_ns",

@@ -98,6 +98,46 @@ pub fn multi_stream_throughput(link: &Link, streams: u32) -> f64 {
     (striped * efficiency).min(link.bandwidth_bps)
 }
 
+/// What faultline injected into one transfer attempt on a link. Pure
+/// data (no clocks, no randomness): the *decision* is made by
+/// `faultline::FaultPlan`; this module only prices the consequence, so
+/// netsim stays inside the determinism lint's strict set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkDisruption {
+    /// healthy attempt
+    None,
+    /// transient congestion: transfer takes `factor` times as long
+    DelaySpike(f64),
+    /// the attempt is lost mid-flight (retryable)
+    Drop,
+    /// the path is partitioned: this and every later attempt fails
+    Partitioned,
+}
+
+impl LinkDisruption {
+    /// Does this disruption lose the attempt outright?
+    pub fn severs(&self) -> bool {
+        matches!(self, LinkDisruption::Drop | LinkDisruption::Partitioned)
+    }
+}
+
+/// [`transfer_time`] under a disruption: `None` when the attempt never
+/// completes (drop/partition — the caller decides whether to retry),
+/// otherwise the modelled time scaled by any delay spike. A dropped
+/// attempt still *spent* wall clock before failing; callers charge
+/// [`transfer_time`] for it separately if they model that cost.
+pub fn disrupted_transfer_time(
+    link: &Link,
+    spec: &TransferSpec,
+    disruption: LinkDisruption,
+) -> Option<f64> {
+    match disruption {
+        LinkDisruption::None => Some(transfer_time(link, spec)),
+        LinkDisruption::DelaySpike(f) => Some(transfer_time(link, spec) * f.max(1.0)),
+        LinkDisruption::Drop | LinkDisruption::Partitioned => None,
+    }
+}
+
 /// Wall-clock seconds for a transfer: connection setup (1.5 RTT TCP
 /// handshake + control channel) once, plus payload over the aggregate
 /// stream rate. GridFTP's stripes share one control channel, so setup does
@@ -179,6 +219,29 @@ mod tests {
             &TransferSpec { bytes: ByteSize::mb(100), streams: 8 },
         );
         assert!(eight < one / 4.0, "8-stream {eight} vs 1-stream {one}");
+    }
+
+    #[test]
+    fn disruptions_price_correctly() {
+        let l = Link::lan_fast_ethernet();
+        let spec = TransferSpec::single(ByteSize::mb(1));
+        let base = transfer_time(&l, &spec);
+        assert_eq!(
+            disrupted_transfer_time(&l, &spec, LinkDisruption::None),
+            Some(base)
+        );
+        let spiked = disrupted_transfer_time(&l, &spec, LinkDisruption::DelaySpike(4.0))
+            .unwrap();
+        assert!((spiked - 4.0 * base).abs() < 1e-9);
+        assert_eq!(disrupted_transfer_time(&l, &spec, LinkDisruption::Drop), None);
+        assert_eq!(
+            disrupted_transfer_time(&l, &spec, LinkDisruption::Partitioned),
+            None
+        );
+        assert!(LinkDisruption::Drop.severs());
+        assert!(LinkDisruption::Partitioned.severs());
+        assert!(!LinkDisruption::None.severs());
+        assert!(!LinkDisruption::DelaySpike(2.0).severs());
     }
 
     #[test]

@@ -17,5 +17,8 @@
 pub mod link;
 pub mod topology;
 
-pub use link::{tcp_throughput, transfer_time, Link, TransferSpec};
+pub use link::{
+    disrupted_transfer_time, tcp_throughput, transfer_time, Link, LinkDisruption,
+    TransferSpec,
+};
 pub use topology::Topology;

@@ -49,8 +49,13 @@
 //!
 //! A fault-injection switch makes the thread die silently mid-task (a
 //! crash, not an error): the JSE only learns via missed heartbeats.
+//! The seeded [`crate::faultline`] plan drives the same switch per
+//! task (plus stall, slowdown and duplicate-reply faults), keyed by
+//! `(job, brick, range, attempt)` so the injected trace is identical
+//! across runs regardless of where the scheduler placed the task.
 
 use crate::brick::{BrickFile, Codec};
+use crate::faultline::{FaultPlan, TaskFault};
 use crate::filterexpr;
 use crate::gass::GassService;
 use crate::metrics::{Counter, Histogram, Registry};
@@ -151,50 +156,34 @@ impl Drop for NodeHandle {
 
 /// Spawn a node actor. The returned handle's `tx` is the node's inbox
 /// (leader->node); `outbox` carries node->leader messages. `metrics`
-/// receives the executor's pipeline instrumentation.
+/// receives the executor's pipeline instrumentation; `faults` is the
+/// cluster's seeded fault plan (crash/stall/slowdown/duplicate-reply
+/// injection — a default plan injects nothing).
+///
+/// Thread spawn failure (OS resource exhaustion) is propagated as a
+/// node-start error rather than killing the calling actor; a failed
+/// heartbeat spawn also reaps the already-started executor thread so
+/// no orphan actor survives the error path.
 pub fn spawn_node(
     cfg: NodeConfig,
     gass: GassService,
     pool: EnginePool,
     outbox: Sender<Message>,
     metrics: Arc<Registry>,
-) -> NodeHandle {
+    faults: Arc<FaultPlan>,
+) -> Result<NodeHandle> {
     let killed = Arc::new(AtomicBool::new(false));
     let tasks_done = Arc::new(AtomicUsize::new(0));
     let (self_tx, inbox): (Sender<Message>, Receiver<Message>) =
         std::sync::mpsc::channel();
-
-    // heartbeat thread
-    let hb_killed = killed.clone();
-    let hb_out = outbox.clone();
-    let hb_name = cfg.name.clone();
-    let hb_period =
-        Duration::from_secs_f64(cfg.heartbeat_s / cfg.time_scale.max(1e-9));
-    let hb_join = std::thread::Builder::new()
-        .name(format!("geps-hb-{}", cfg.name))
-        .spawn(move || {
-            while !hb_killed.load(Ordering::SeqCst) {
-                if hb_out
-                    .send(Message::Heartbeat {
-                        node: hb_name.clone(),
-                        free_slots: 1,
-                    })
-                    .is_err()
-                {
-                    return;
-                }
-                std::thread::sleep(hb_period);
-            }
-        })
-        // gepslint:allow(panic-path): thread spawn fails only on OS
-        // resource exhaustion at node bring-up — fatal by design
-        .expect("spawn heartbeat");
 
     // executor thread
     let ex_killed = killed.clone();
     let ex_done = tasks_done.clone();
     let name = cfg.name.clone();
     let pipelines = cfg.pipelines.max(1);
+    let time_scale = cfg.time_scale.max(1e-9);
+    let ex_out = outbox.clone();
     let join = std::thread::Builder::new()
         .name(format!("geps-node-{}", cfg.name))
         .spawn(move || {
@@ -222,10 +211,36 @@ pub fn spawn_node(
                     Message::JobCancel { job } => {
                         cancelled.insert(job);
                     }
-                    Message::SubmitTask { job, task, filter, rsl } => {
+                    Message::SubmitTask { job, task, attempt, filter, rsl } => {
                         if cancelled.contains(&job) {
                             continue;
                         }
+                        // consult the fault plan once per (job, task,
+                        // attempt) — keyed without the node name, so
+                        // the injected trace is placement-invariant
+                        let brick_name = task.brick.to_string();
+                        let mut slow: Option<f64> = None;
+                        match faults.task_fault(
+                            job,
+                            &brick_name,
+                            task.range,
+                            attempt,
+                        ) {
+                            TaskFault::Crash => {
+                                // silent death: heartbeats stop, no
+                                // reply — the JSE learns via liveness
+                                ex_killed.store(true, Ordering::SeqCst);
+                                return;
+                            }
+                            TaskFault::Stall(s) => {
+                                std::thread::sleep(Duration::from_secs_f64(
+                                    s / time_scale,
+                                ));
+                            }
+                            TaskFault::Slow(f) => slow = Some(f),
+                            TaskFault::None => {}
+                        }
+                        let t0 = Instant::now();
                         let outcome = run_task(
                             &name,
                             &store,
@@ -233,12 +248,20 @@ pub fn spawn_node(
                             &pool,
                             job,
                             &task,
+                            attempt,
                             &filter,
                             &rsl,
                             &ex_killed,
                             pipelines,
                             &node_metrics,
                         );
+                        if let Some(f) = slow {
+                            // a slowed node takes `f` times as long:
+                            // pad out the remaining (f - 1) fraction
+                            std::thread::sleep(
+                                t0.elapsed().mul_f64((f - 1.0).max(0.0)),
+                            );
+                        }
                         if ex_killed.load(Ordering::SeqCst) {
                             return; // died mid-task: no report
                         }
@@ -248,13 +271,26 @@ pub fn spawn_node(
                                 job,
                                 brick: task.brick,
                                 range: task.range,
+                                attempt,
                                 error: format!("{e:#}"),
                             },
                         };
                         if matches!(reply, Message::TaskDone { .. }) {
                             ex_done.fetch_add(1, Ordering::SeqCst);
                         }
-                        if outbox.send(reply).is_err() {
+                        if faults.duplicate_reply(
+                            job,
+                            &brick_name,
+                            task.range,
+                            attempt,
+                        ) {
+                            // duplicate delivery: the leader must
+                            // suppress the second copy as stale
+                            if ex_out.send(reply.clone()).is_err() {
+                                return;
+                            }
+                        }
+                        if ex_out.send(reply).is_err() {
                             return;
                         }
                     }
@@ -263,18 +299,49 @@ pub fn spawn_node(
                 }
             }
         })
-        // gepslint:allow(panic-path): thread spawn fails only on OS
-        // resource exhaustion at node bring-up — fatal by design
-        .expect("spawn node executor");
+        .map_err(|e| anyhow!("spawn node executor thread: {e}"))?;
 
-    NodeHandle {
+    // heartbeat thread — started second so a spawn failure here can
+    // still tear the executor down cleanly before returning the error
+    let hb_killed = killed.clone();
+    let hb_name = cfg.name.clone();
+    let hb_period =
+        Duration::from_secs_f64(cfg.heartbeat_s / cfg.time_scale.max(1e-9));
+    let hb_join = std::thread::Builder::new()
+        .name(format!("geps-hb-{}", cfg.name))
+        .spawn(move || {
+            while !hb_killed.load(Ordering::SeqCst) {
+                if outbox
+                    .send(Message::Heartbeat {
+                        node: hb_name.clone(),
+                        free_slots: 1,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                std::thread::sleep(hb_period);
+            }
+        });
+    let hb_join = match hb_join {
+        Ok(j) => j,
+        Err(e) => {
+            // no orphan executor on the error path
+            killed.store(true, Ordering::SeqCst);
+            let _ = self_tx.send(Message::Shutdown);
+            let _ = join.join();
+            return Err(anyhow!("spawn heartbeat thread: {e}"));
+        }
+    };
+
+    Ok(NodeHandle {
         name: cfg.name,
         tx: self_tx,
         killed,
         tasks_done,
         join: Some(join),
         hb_join: Some(hb_join),
-    }
+    })
 }
 
 /// One drained page: the accepted event indices (global within the
@@ -305,6 +372,7 @@ fn run_task(
     pool: &EnginePool,
     job: u64,
     task: &Task,
+    attempt: u32,
     filter_src: &str,
     rsl_text: &str,
     killed: &Arc<AtomicBool>,
@@ -565,6 +633,7 @@ fn run_task(
         job,
         brick: task.brick,
         range: task.range,
+        attempt,
         events_in,
         events_selected,
         result_bytes,

@@ -15,7 +15,14 @@
 //!   fresh slot capacity, and the rebalancer moves a fair share of
 //!   bricks onto it (integrity-checked copies, holder lists rewritten
 //!   in catalogue + WAL) so subsequent tasks schedule there.
-//! - `POST /kill/<node>` — fault injection (operations/testing surface)
+//! - `POST /kill/<node>` — fault injection (operations/testing surface).
+//!   For *deterministic* fault injection — seeded drop/duplicate/delay/
+//!   partition/corrupt/crash/stall/slowdown with soft task deadlines,
+//!   straggler speculation, bounded retry budgets and node quarantine —
+//!   configure the `[fault]` section (see [`crate::faultline`]); the
+//!   resulting counters (`faultline.injected.*`, `jse.tasks_speculated`,
+//!   `jse.speculation_wins`, `jse.stale_messages`, `gass.transfer_retries`,
+//!   `ft.nodes_quarantined`) appear on `GET /metrics`.
 //! - `GET /bricks` — brick placement view
 //! - `GET /cache` / `POST /cache/flush` — qcache statistics and flush
 //!   (full-result reuse, in-flight scan sharing, per-brick partials;
@@ -97,6 +104,30 @@ result is bit-identical at any pipeline count. Gauges and counters
 <code>node.drain_reorder_depth</code> and per-pipeline
 <code>node.pipeline.&lt;i&gt;.task_busy_ns</code> appear on
 <code>GET /metrics</code>.</p>
+<p><b>Faults, deadlines and speculation (faultline):</b> the
+<code>[fault]</code> config section arms a <i>seeded, deterministic</i>
+fault plan &mdash; every injection decision is a pure keyed hash of
+<code>(seed, domain, key)</code>, so the same seed replays the same
+fault trace with no OS randomness. Probability knobs
+(<code>drop_p</code>, <code>dup_p</code>, <code>delay_p</code>,
+<code>partition_p</code>, <code>corrupt_p</code>, <code>crash_p</code>,
+<code>stall_p</code>, <code>slow_p</code>) inject per-attempt network,
+transfer and executor faults; GASS survives corruption via
+checksum-verified bounded retry with deterministic backoff
+(<code>gass_retry_limit</code>, counter
+<code>gass.transfer_retries</code>); the JSE derives quantile soft
+deadlines (<code>deadline_quantile</code>/<code>deadline_factor</code>),
+speculates stragglers first-result-wins
+(<code>speculate</code>; stale duplicates suppressed by
+<code>(job, task, attempt)</code>), retries each task within
+<code>task_retry_budget</code>, and quarantines flaky nodes after
+<code>quarantine_threshold</code> strikes without dropping their bricks.
+The contract: every job seals <i>Done</i> bit-identical to a fault-free
+run or <i>Failed</i> with a typed error &mdash; no hangs, no silent
+truncation. Counters <code>faultline.injected.*</code>,
+<code>jse.tasks_speculated</code>, <code>jse.speculation_wins</code>,
+<code>jse.stale_messages</code> and <code>ft.nodes_quarantined</code>
+appear on <code>GET /metrics</code>.</p>
 <p><b>Membership protocol:</b> a node added via <code>/nodes/add</code> is
 registered in the catalogue (WAL-durable) and GRIS, its executor is
 spawned, and the broker receives a <code>NodeJoin</code> control message:

@@ -24,13 +24,19 @@ use crate::scheduler::Task;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// leader -> node: run this task (RSL text travels alongside for
-    /// fidelity with the paper's GRAM submission)
-    SubmitTask { job: u64, task: Task, filter: String, rsl: String },
+    /// fidelity with the paper's GRAM submission). `attempt` numbers
+    /// re-dispatches of the same task (failover and straggler
+    /// speculation); the node echoes it verbatim, so replies are
+    /// keyed `(job, task, attempt)` and a stale duplicate from a slow
+    /// or speculated-over attempt is suppressed, never double-merged.
+    SubmitTask { job: u64, task: Task, attempt: u32, filter: String, rsl: String },
     /// node -> leader: task done
     TaskDone {
         job: u64,
         brick: BrickId,
         range: (usize, usize),
+        /// echoed from `SubmitTask` (stale-duplicate suppression)
+        attempt: u32,
         events_in: u64,
         events_selected: u64,
         result_bytes: u64,
@@ -38,7 +44,14 @@ pub enum Message {
         histogram: Vec<u8>,
     },
     /// node -> leader: task failed
-    TaskFailed { job: u64, brick: BrickId, range: (usize, usize), error: String },
+    TaskFailed {
+        job: u64,
+        brick: BrickId,
+        range: (usize, usize),
+        /// echoed from `SubmitTask` (stale-duplicate suppression)
+        attempt: u32,
+        error: String,
+    },
     /// node -> leader: liveness beacon with free slots
     Heartbeat { node: String, free_slots: u32 },
     /// leader -> node: orderly shutdown
@@ -152,7 +165,7 @@ impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::new();
         match self {
-            Message::SubmitTask { job, task, filter, rsl } => {
+            Message::SubmitTask { job, task, attempt, filter, rsl } => {
                 put_varint(&mut body, *job);
                 put_brick(&mut body, task.brick);
                 put_varint(&mut body, task.range.0 as u64);
@@ -164,6 +177,7 @@ impl Message {
                     }
                     None => body.push(0),
                 }
+                put_varint(&mut body, *attempt as u64);
                 put_str(&mut body, filter);
                 put_str(&mut body, rsl);
             }
@@ -171,6 +185,7 @@ impl Message {
                 job,
                 brick,
                 range,
+                attempt,
                 events_in,
                 events_selected,
                 result_bytes,
@@ -180,16 +195,18 @@ impl Message {
                 put_brick(&mut body, *brick);
                 put_varint(&mut body, range.0 as u64);
                 put_varint(&mut body, range.1 as u64);
+                put_varint(&mut body, *attempt as u64);
                 put_varint(&mut body, *events_in);
                 put_varint(&mut body, *events_selected);
                 put_varint(&mut body, *result_bytes);
                 put_bytes(&mut body, histogram);
             }
-            Message::TaskFailed { job, brick, range, error } => {
+            Message::TaskFailed { job, brick, range, attempt, error } => {
                 put_varint(&mut body, *job);
                 put_brick(&mut body, *brick);
                 put_varint(&mut body, range.0 as u64);
                 put_varint(&mut body, range.1 as u64);
+                put_varint(&mut body, *attempt as u64);
                 put_str(&mut body, error);
             }
             Message::Heartbeat { node, free_slots } => {
@@ -241,11 +258,13 @@ impl Message {
                     }
                     _ => return Err(WireError("bad source flag".into())),
                 };
+                let attempt = r.varint()? as u32;
                 let filter = r.str()?;
                 let rsl = r.str()?;
                 Message::SubmitTask {
                     job,
                     task: Task { brick, range, source },
+                    attempt,
                     filter,
                     rsl,
                 }
@@ -254,6 +273,7 @@ impl Message {
                 job: r.varint()?,
                 brick: r.brick()?,
                 range: (r.varint()? as usize, r.varint()? as usize),
+                attempt: r.varint()? as u32,
                 events_in: r.varint()?,
                 events_selected: r.varint()?,
                 result_bytes: r.varint()?,
@@ -263,6 +283,7 @@ impl Message {
                 job: r.varint()?,
                 brick: r.brick()?,
                 range: (r.varint()? as usize, r.varint()? as usize),
+                attempt: r.varint()? as u32,
                 error: r.str()?,
             },
             4 => Message::Heartbeat {
@@ -305,6 +326,7 @@ mod tests {
                 range: (100, 350),
                 source: Some("gandalf".into()),
             },
+            attempt: 2,
             filter: "max_pt > 20".into(),
             rsl: "& (executable = /opt/geps/bin/event_filter)".into(),
         });
@@ -315,6 +337,7 @@ mod tests {
                 range: (0, 0),
                 source: None,
             },
+            attempt: 0,
             filter: String::new(),
             rsl: String::new(),
         });
@@ -322,6 +345,7 @@ mod tests {
             job: 7,
             brick: BrickId::new(2, 9),
             range: (0, 512),
+            attempt: 3,
             events_in: 512,
             events_selected: 48,
             result_bytes: 4800,
@@ -331,6 +355,7 @@ mod tests {
             job: 9,
             brick: BrickId::new(1, 1),
             range: (5, 10),
+            attempt: 1,
             error: "node exploded".into(),
         });
         roundtrip(Message::Heartbeat { node: "hobbit".into(), free_slots: 2 });
@@ -359,6 +384,7 @@ mod tests {
                     range: (0, 1),
                     source: None,
                 },
+                attempt: 0,
                 filter: "true".into(),
                 rsl: String::new(),
             },
@@ -366,6 +392,7 @@ mod tests {
                 job: 1,
                 brick: BrickId::new(0, 0),
                 range: (0, 1),
+                attempt: 0,
                 events_in: 1,
                 events_selected: 0,
                 result_bytes: 0,
@@ -375,6 +402,7 @@ mod tests {
                 job: 1,
                 brick: BrickId::new(0, 0),
                 range: (0, 1),
+                attempt: 0,
                 error: "e".into(),
             },
             Message::Heartbeat { node: "n".into(), free_slots: 1 },

@@ -1,0 +1,361 @@
+//! Chaos suite: the faultline seeded scenario matrix on the full live
+//! cluster. Each fault class runs alone, then combined, under
+//! multi-job traffic and node churn, and every job must satisfy the
+//! faultline contract:
+//!
+//! - it seals `Done` with a histogram **bit-identical** to a
+//!   fault-free run of the same filter (histogram bins are integer
+//!   event counts, so merge order cannot perturb the bits), or
+//! - it seals `Failed` with a **typed, non-empty error** in the
+//!   catalogue row, and
+//! - it reaches one of those states within the timeout — no hangs, no
+//!   silent truncation.
+//!
+//! Determinism is asserted separately: two clusters started from the
+//! same `[fault] seed` running the same jobs produce identical
+//! injected-fault traces and identical verdicts.
+//!
+//! Hermetic: kernels run on the backend `GEPS_BACKEND` selects (the
+//! pure-Rust reference programs by default).
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use geps::faultline::FaultConfig;
+use std::time::{Duration, Instant};
+
+const FILTERS: [&str; 2] = ["n_tracks >= 0", "met > 10"];
+
+fn runtime_available() -> bool {
+    geps::runtime::gate("chaos")
+}
+
+/// Three nodes, RF=2, six bricks; qcache off so every job actually
+/// dispatches tasks into the fault plan.
+fn chaos_config(fault: FaultConfig) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node2".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 2;
+    cfg.n_events = 600;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0;
+    cfg.qcache_enabled = false;
+    cfg.fault = fault;
+    cfg
+}
+
+/// Fault-free reference histograms, one per filter, from an identical
+/// cluster (same dataset seed => same bricks => same physics).
+fn baselines() -> Vec<Vec<u32>> {
+    let cluster = ClusterHandle::start(
+        chaos_config(FaultConfig::default()),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let out = FILTERS
+        .iter()
+        .map(|f| {
+            let job = cluster.submit(f, "locality");
+            assert_eq!(
+                cluster.wait(job, Duration::from_secs(120)).unwrap(),
+                JobStatus::Done
+            );
+            histogram_bits(&cluster, job)
+        })
+        .collect();
+    cluster.shutdown();
+    out
+}
+
+fn histogram_bits(cluster: &ClusterHandle, job: u64) -> Vec<u32> {
+    // the catalogue flips Done an instant before the broker publishes
+    // the merged histogram; poll the tiny window out
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Some(h) = cluster.histogram(job) {
+            return h.iter().map(|v| v.to_bits()).collect();
+        }
+        assert!(Instant::now() < deadline, "histogram never published");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The faultline contract for one job: terminal within the timeout
+/// (no hang), and either Done + bit-identical histogram or Failed +
+/// typed error. Returns the terminal status for callers that demand
+/// a specific one.
+fn assert_contract(
+    cluster: &ClusterHandle,
+    job: u64,
+    filter_idx: usize,
+    baseline: &[Vec<u32>],
+    scenario: &str,
+) -> JobStatus {
+    let status = cluster
+        .wait(job, Duration::from_secs(120))
+        .unwrap_or_else(|e| panic!("[{scenario}] job {job} hung: {e}"));
+    match status {
+        JobStatus::Done => {
+            let bits = histogram_bits(cluster, job);
+            assert_eq!(
+                bits, baseline[filter_idx],
+                "[{scenario}] job {job} sealed Done with a histogram \
+                 that differs from the fault-free run"
+            );
+        }
+        JobStatus::Failed => {
+            let err = cluster
+                .catalog
+                .lock()
+                .unwrap()
+                .jobs
+                .get(job)
+                .unwrap()
+                .error
+                .clone();
+            assert!(
+                err.as_deref().map(|e| !e.is_empty()).unwrap_or(false),
+                "[{scenario}] job {job} failed without a typed error"
+            );
+        }
+        other => panic!("[{scenario}] job {job}: unexpected {other:?}"),
+    }
+    status
+}
+
+#[test]
+fn each_fault_class_alone_honours_the_contract() {
+    if !runtime_available() {
+        return;
+    }
+    let baseline = baselines();
+    // (name, fault config, must_complete): classes that only delay or
+    // duplicate work can never legitimately fail a job, so they must
+    // seal Done; classes that destroy work (drops that exhaust the
+    // bounded transfer retry, sticky partitions, corruption, crashes)
+    // may also fail explicitly.
+    let scenarios: Vec<(&str, FaultConfig, bool)> = vec![
+        (
+            "delay",
+            FaultConfig {
+                seed: 11,
+                delay_p: 0.5,
+                delay_factor: 4.0,
+                ..FaultConfig::default()
+            },
+            true,
+        ),
+        (
+            "dup",
+            FaultConfig { seed: 12, dup_p: 0.5, ..FaultConfig::default() },
+            true,
+        ),
+        (
+            "stall",
+            FaultConfig {
+                seed: 13,
+                stall_p: 0.5,
+                stall_s: 2.0,
+                ..FaultConfig::default()
+            },
+            true,
+        ),
+        (
+            "slow",
+            FaultConfig {
+                seed: 14,
+                slow_p: 0.5,
+                slow_factor: 3.0,
+                ..FaultConfig::default()
+            },
+            true,
+        ),
+        (
+            "drop",
+            FaultConfig { seed: 15, drop_p: 0.3, ..FaultConfig::default() },
+            false,
+        ),
+        (
+            "corrupt",
+            FaultConfig { seed: 16, corrupt_p: 0.3, ..FaultConfig::default() },
+            false,
+        ),
+        (
+            "partition",
+            FaultConfig {
+                seed: 17,
+                partition_p: 0.3,
+                ..FaultConfig::default()
+            },
+            false,
+        ),
+        (
+            "crash",
+            FaultConfig { seed: 18, crash_p: 0.3, ..FaultConfig::default() },
+            false,
+        ),
+    ];
+    for (name, fault, must_complete) in scenarios {
+        let cluster = ClusterHandle::start(
+            chaos_config(fault),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap();
+        // multi-job traffic: a locality job (node-local compute) and a
+        // central job (leader staging over GASS — the transfer-fault
+        // classes only bite here)
+        let jobs: Vec<(u64, usize)> = vec![
+            (cluster.submit(FILTERS[0], "locality"), 0),
+            (cluster.submit(FILTERS[1], "central"), 1),
+        ];
+        for (job, fi) in jobs {
+            let status =
+                assert_contract(&cluster, job, fi, &baseline, name);
+            if must_complete {
+                assert_eq!(
+                    status,
+                    JobStatus::Done,
+                    "[{name}] a purely-delaying fault class failed a job"
+                );
+            }
+        }
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn combined_chaos_with_node_churn_honours_the_contract() {
+    if !runtime_available() {
+        return;
+    }
+    let baseline = baselines();
+    let fault = FaultConfig {
+        seed: 42,
+        drop_p: 0.1,
+        dup_p: 0.2,
+        delay_p: 0.2,
+        corrupt_p: 0.1,
+        stall_p: 0.2,
+        stall_s: 1.0,
+        slow_p: 0.2,
+        slow_factor: 2.0,
+        crash_p: 0.05,
+        ..FaultConfig::default()
+    };
+    let cluster = ClusterHandle::start(
+        chaos_config(fault),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .unwrap();
+    let jobs: Vec<(u64, usize)> = vec![
+        (cluster.submit(FILTERS[0], "locality"), 0),
+        (cluster.submit(FILTERS[1], "locality"), 1),
+        (cluster.submit(FILTERS[0], "central"), 0),
+        (cluster.submit(FILTERS[1], "central"), 1),
+    ];
+    // node churn on top of the injected faults
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(cluster.kill_node("node2"));
+    for (job, fi) in jobs {
+        assert_contract(&cluster, job, fi, &baseline, "combined+churn");
+    }
+    assert!(
+        !cluster.fault_trace().is_empty(),
+        "the combined scenario must actually inject faults"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn same_seed_reproduces_the_trace_and_the_verdicts() {
+    if !runtime_available() {
+        return;
+    }
+    // stall + slow only: tasks are delayed, never destroyed, so every
+    // task runs exactly one attempt and the set of keyed-hash queries
+    // is independent of thread timing. Speculation off keeps wall-clock
+    // from minting extra attempts.
+    let fault = FaultConfig {
+        seed: 77,
+        stall_p: 0.5,
+        stall_s: 1.0,
+        slow_p: 0.5,
+        slow_factor: 2.0,
+        speculate: false,
+        ..FaultConfig::default()
+    };
+    let run = || {
+        let cluster = ClusterHandle::start(
+            chaos_config(fault.clone()),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap();
+        let mut verdicts = Vec::new();
+        for f in FILTERS {
+            let job = cluster.submit(f, "locality");
+            let status =
+                cluster.wait(job, Duration::from_secs(120)).unwrap();
+            assert_eq!(status, JobStatus::Done);
+            verdicts.push((status, histogram_bits(&cluster, job)));
+        }
+        let trace = cluster.fault_trace();
+        cluster.shutdown();
+        (trace, verdicts)
+    };
+    let (trace_a, verdicts_a) = run();
+    let (trace_b, verdicts_b) = run();
+    assert!(!trace_a.is_empty(), "p=0.5 over 12 tasks must inject");
+    assert_eq!(trace_a, trace_b, "same seed must give the same trace");
+    assert_eq!(verdicts_a, verdicts_b);
+}
+
+#[test]
+fn unsurvivable_crashes_fail_explicitly_not_silently() {
+    if !runtime_available() {
+        return;
+    }
+    // crash_p = 1.0 with RF=1: the first task on each node kills it,
+    // every brick loses its only holder, and no retry can help. The
+    // job must seal Failed with a typed error — Done with a truncated
+    // histogram (or a hang) would be a contract violation.
+    let mut cfg = chaos_config(FaultConfig {
+        seed: 5,
+        crash_p: 1.0,
+        ..FaultConfig::default()
+    });
+    cfg.nodes = vec![
+        NodeSpec { name: "node0".into(), speed: 1.0, slots: 1 },
+        NodeSpec { name: "node1".into(), speed: 1.0, slots: 1 },
+    ];
+    cfg.replication = 1;
+    for policy in ["locality", "central"] {
+        let cluster = ClusterHandle::start(
+            cfg.clone(),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap();
+        let job = cluster.submit(FILTERS[0], policy);
+        let status = cluster
+            .wait(job, Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("[{policy}] job hung: {e}"));
+        assert_eq!(status, JobStatus::Failed, "{policy}");
+        let err = cluster
+            .catalog
+            .lock()
+            .unwrap()
+            .jobs
+            .get(job)
+            .unwrap()
+            .error
+            .clone();
+        assert!(
+            err.as_deref().map(|e| !e.is_empty()).unwrap_or(false),
+            "[{policy}] no typed error recorded"
+        );
+        cluster.shutdown();
+    }
+}

@@ -506,6 +506,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
                     },
                     source: rng.chance(0.5).then(|| rand_str(rng, 20)),
                 },
+                attempt: rng.next_u64() as u32 & 0xff,
                 filter: rand_str(rng, 100),
                 rsl: rand_str(rng, 300),
             },
@@ -513,6 +514,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
                 job: rng.next_u64(),
                 brick: BrickId::new(rng.next_u64() as u32, 0),
                 range: (0, rng.index(5000)),
+                attempt: rng.next_u64() as u32 & 0xff,
                 events_in: rng.next_u64() >> 20,
                 events_selected: rng.next_u64() >> 30,
                 result_bytes: rng.next_u64() >> 24,
@@ -524,6 +526,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
                 job: rng.next_u64(),
                 brick: BrickId::new(0, rng.next_u64() as u32),
                 range: (3, 7),
+                attempt: rng.next_u64() as u32 & 0xff,
                 error: rand_str(rng, 200),
             },
             3 => Message::Heartbeat {

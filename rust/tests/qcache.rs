@@ -68,7 +68,7 @@ fn fake_node(
         let _stop_on_exit = StopOnExit(stop);
         while let Ok(msg) = rx.recv() {
             match msg {
-                Message::SubmitTask { job, task, .. } => {
+                Message::SubmitTask { job, task, attempt, .. } => {
                     std::thread::sleep(delay);
                     let n = task.n_events() as u64;
                     let hist: Vec<u8> = (0..8)
@@ -81,6 +81,7 @@ fn fake_node(
                         job,
                         brick: task.brick,
                         range: task.range,
+                        attempt,
                         events_in: n,
                         events_selected: n / 10,
                         result_bytes: n * 100,

@@ -1,9 +1,11 @@
 //! Panic-path lint.
 //!
-//! The JSE event loop, the node executor's worker pipelines, and the
-//! portal's request handlers are long-running services: one panic
-//! takes down every in-flight job on the node (PR-2's "panic-proof
-//! event loop" guarantee). In these files `unwrap()`, `expect()`,
+//! The JSE event loop, the node executor's worker pipelines, the GASS
+//! transfer fabric, and the portal's request handlers are long-running
+//! services: one panic takes down every in-flight job on the node
+//! (PR-2's "panic-proof event loop" guarantee, extended to `gass/`
+//! when the faultline retry loop landed — a transfer failure must be
+//! a typed `GassError`, never a crash). In these files `unwrap()`, `expect()`,
 //! panicking macros, and bare slice indexing are lint errors — return
 //! a typed error instead, or justify a genuine logic-error assert with
 //! `// gepslint:allow(panic-path): <why it cannot fire>`.
@@ -15,6 +17,7 @@ use crate::lexer::Kind;
 fn in_scope(path: &str) -> bool {
     path.starts_with("src/jse/")
         || path.starts_with("src/portal/")
+        || path.starts_with("src/gass/")
         || path == "src/node/executor.rs"
 }
 
