@@ -1,0 +1,514 @@
+//! Bench: **Ext-S** — the scale/chaos scenario matrix with
+//! machine-readable verdicts.
+//!
+//! A named matrix of scenarios, each scored into one JSON cell:
+//!
+//! - `sim_wan_asymmetric` — the deterministic DES (`sim::Scenario` +
+//!   `netsim`) on a three-site asymmetric WAN with hundreds of
+//!   simulated nodes and a straggler speed spread, run under both
+//!   placement policies;
+//! - `sim_stragglers_churn` — a large LAN simulation with slow nodes
+//!   and staggered mid-run node kills (replication 2 must absorb them);
+//! - `live_chaos_stragglers` — the live cluster under seeded
+//!   stall/slow/delay faults with speculation on;
+//! - `live_churn_mixed` — kill + join churn during mixed query
+//!   traffic on the live cluster;
+//! - `live_zipf_qcache` — zipfian filter popularity against the
+//!   enabled query cache (cache-hot head, cold tail).
+//!
+//! Every cell records the same verdict shape: `ok` (terminal states
+//! and invariants held), `bit_identical` (results byte-equal to the
+//! fault-free baseline — or, for the DES cells, a same-config replay),
+//! jobs/sec, p50/p99 job wall time, and the speculation / retry /
+//! cache counters scraped from the metrics registry. Results land in
+//! `BENCH_ext_scenarios.json` at the repo root; CI runs this in smoke
+//! mode (`GEPS_BENCH_SMOKE=1`), uploads the JSON, and gates on every
+//! cell's `ok` and `bit_identical`.
+//!
+//! Hermetic: kernels run on the backend `GEPS_BACKEND` selects (the
+//! pure-Rust reference programs by default).
+
+use geps::catalog::JobStatus;
+use geps::cluster::ClusterHandle;
+use geps::config::{ClusterConfig, NodeSpec};
+use geps::faultline::FaultConfig;
+use geps::netsim::{Link, Topology};
+use geps::scheduler::Policy;
+use geps::sim::{FailureSpec, RunReport, Scenario, ScenarioConfig};
+use geps::util::bench::print_table;
+use geps::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Filter pool for the live cells; the zipfian cell samples ranks from
+/// the front (hot) to the back (cold).
+const POOL: [&str; 6] = [
+    "n_tracks >= 0",
+    "met > 10",
+    "met > 20",
+    "n_tracks > 5",
+    "max_pair_mass > 50",
+    "met > 10 && n_tracks > 2",
+];
+
+/// One verdict cell of the matrix.
+struct Cell {
+    name: &'static str,
+    kind: &'static str,
+    jobs: usize,
+    ok: bool,
+    bit_identical: bool,
+    jobs_per_sec: f64,
+    p50_wall_ms: f64,
+    p99_wall_ms: f64,
+    counters: Vec<(&'static str, u64)>,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(*k, *v);
+        }
+        Json::obj()
+            .set("name", self.name)
+            .set("kind", self.kind)
+            .set("jobs", self.jobs)
+            .set("ok", self.ok)
+            .set("bit_identical", self.bit_identical)
+            .set("jobs_per_sec", self.jobs_per_sec)
+            .set("p50_wall_ms", self.p50_wall_ms)
+            .set("p99_wall_ms", self.p99_wall_ms)
+            .set("counters", counters)
+    }
+}
+
+fn pct(vals: &[f64], q: f64) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = vals.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+// ---------------------------------------------------------------- sim cells
+
+/// The fields a same-config DES replay must reproduce exactly.
+fn sim_fingerprint(r: &RunReport) -> (u64, u64, usize, usize, bool) {
+    (
+        r.makespan_s.to_bits(),
+        r.raw_bytes_moved,
+        r.events_processed,
+        r.tasks_completed,
+        r.completed,
+    )
+}
+
+/// Three sites behind one leader: a gigabit campus LAN, a tuned-window
+/// WAN, and an untuned default-window WAN, with a straggler speed
+/// spread inside every site.
+fn wan_asymmetric_config(
+    policy: Policy,
+    per_site: usize,
+    n_events: usize,
+) -> ScenarioConfig {
+    let mut topo = Topology::new("jse", Link::wan_default_window());
+    let mut speeds = BTreeMap::new();
+    let site_links =
+        [Link::lan_gigabit(), Link::wan_tuned_window(), Link::wan_default_window()];
+    for (s, link) in site_links.iter().enumerate() {
+        for i in 0..per_site {
+            let name = format!("s{s}n{i:03}");
+            topo.add_host(&name);
+            topo.set_link("jse", &name, *link);
+            // deterministic straggler spread: 0.5×, 0.67×, 0.83×, 1.0×
+            speeds.insert(name, 0.5 + 0.5 * ((i % 4) as f64) / 3.0);
+        }
+    }
+    let mut cfg = ScenarioConfig::paper_defaults(topo, policy, n_events);
+    cfg.speeds = speeds;
+    cfg.events_per_brick = 100;
+    cfg.replication = 2;
+    cfg.raw_at_leader = false;
+    cfg.stage_parallel = true; // §7 extension; serialized staging of
+                               // hundreds of nodes would drown the signal
+    cfg.streams = 4;
+    cfg
+}
+
+fn sim_wan_asymmetric(per_site: usize, n_events: usize) -> Cell {
+    let mut walls = Vec::new();
+    let mut ok = true;
+    let mut bit_identical = true;
+    let mut tasks = 0u64;
+    let mut raw_bytes = 0u64;
+    for policy in [Policy::Locality, Policy::Central] {
+        let a = Scenario::run(wan_asymmetric_config(policy, per_site, n_events));
+        let b = Scenario::run(wan_asymmetric_config(policy, per_site, n_events));
+        bit_identical &= sim_fingerprint(&a) == sim_fingerprint(&b);
+        ok &= a.completed && a.events_processed == n_events && a.lost_bricks == 0;
+        walls.push(a.makespan_s * 1000.0);
+        tasks += a.tasks_completed as u64;
+        raw_bytes += a.raw_bytes_moved;
+    }
+    let total_s: f64 = walls.iter().sum::<f64>() / 1000.0;
+    Cell {
+        name: "sim_wan_asymmetric",
+        kind: "sim",
+        jobs: walls.len(),
+        ok,
+        bit_identical,
+        jobs_per_sec: walls.len() as f64 / total_s.max(1e-9),
+        p50_wall_ms: pct(&walls, 0.5),
+        p99_wall_ms: pct(&walls, 0.99),
+        counters: vec![
+            ("tasks_completed", tasks),
+            ("raw_bytes_moved", raw_bytes),
+            ("nodes", (3 * per_site) as u64),
+        ],
+    }
+}
+
+fn stragglers_churn_config(n_nodes: usize, n_events: usize) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::paper_defaults(
+        Topology::lan_cluster(n_nodes, Link::lan_fast_ethernet()),
+        Policy::Locality,
+        n_events,
+    );
+    for (i, w) in cfg.topology.workers().into_iter().enumerate() {
+        // spread 0.25× .. 1.0× — real stragglers, deterministically placed
+        cfg.speeds.insert(w, 0.25 + 0.75 * ((i % 5) as f64) / 4.0);
+    }
+    cfg.events_per_brick = 100;
+    cfg.replication = 2;
+    cfg.raw_at_leader = false;
+    cfg.stage_parallel = true;
+    // staggered mid-run kills; replication 2 must absorb every one
+    cfg.failures = (1..=3)
+        .map(|i| FailureSpec {
+            node: format!("node{i}"),
+            at_s: 150.0 * i as f64,
+        })
+        .collect();
+    cfg
+}
+
+fn sim_stragglers_churn(n_nodes: usize, n_events: usize) -> Cell {
+    let a = Scenario::run(stragglers_churn_config(n_nodes, n_events));
+    let b = Scenario::run(stragglers_churn_config(n_nodes, n_events));
+    let ok = a.completed && a.events_processed == n_events && a.lost_bricks == 0;
+    let wall_ms = a.makespan_s * 1000.0;
+    Cell {
+        name: "sim_stragglers_churn",
+        kind: "sim",
+        jobs: 1,
+        ok,
+        bit_identical: sim_fingerprint(&a) == sim_fingerprint(&b),
+        jobs_per_sec: 1.0 / a.makespan_s.max(1e-9),
+        p50_wall_ms: wall_ms,
+        p99_wall_ms: wall_ms,
+        counters: vec![
+            ("tasks_completed", a.tasks_completed as u64),
+            ("tasks_failed", a.tasks_failed as u64),
+            ("nodes", n_nodes as u64),
+            ("nodes_killed", 3),
+        ],
+    }
+}
+
+// --------------------------------------------------------------- live cells
+
+fn live_config(n_nodes: usize, n_events: usize, fault: FaultConfig) -> ClusterConfig {
+    let mut cfg = ClusterConfig::default();
+    cfg.nodes = (0..n_nodes)
+        .map(|i| NodeSpec { name: format!("node{i}"), speed: 1.0, slots: 1 })
+        .collect();
+    cfg.replication = 2;
+    cfg.n_events = n_events;
+    cfg.events_per_brick = 100;
+    cfg.time_scale = 2000.0;
+    cfg.qcache_enabled = false;
+    cfg.fault = fault;
+    cfg
+}
+
+fn histogram_bits(cluster: &ClusterHandle, job: u64) -> Option<Vec<u32>> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if let Some(h) = cluster.histogram(job) {
+            return Some(h.iter().map(|v| v.to_bits()).collect());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    None
+}
+
+/// Fault-free reference bits for every pool filter (the physics depend
+/// only on the dataset, never on node count, faults, or caching).
+fn baselines(n_events: usize) -> Vec<Vec<u32>> {
+    let cluster = ClusterHandle::start(
+        live_config(3, n_events, FaultConfig::default()),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .expect("baseline cluster");
+    let out = POOL
+        .iter()
+        .map(|f| {
+            let job = cluster.submit(f, "locality");
+            assert_eq!(
+                cluster.wait(job, TIMEOUT).expect("baseline job"),
+                JobStatus::Done
+            );
+            histogram_bits(&cluster, job).expect("baseline histogram")
+        })
+        .collect();
+    cluster.shutdown();
+    out
+}
+
+fn wall_quantiles_ms(cluster: &ClusterHandle) -> (f64, f64) {
+    let h = cluster.metrics.histogram("jse.job_wall_ns");
+    (h.quantile(0.5) as f64 / 1e6, h.quantile(0.99) as f64 / 1e6)
+}
+
+/// Wait every submitted job out and score it against the baseline.
+/// Returns (all done, all bit-identical).
+fn score_jobs(
+    cluster: &ClusterHandle,
+    jobs: &[(u64, usize)],
+    baseline: &[Vec<u32>],
+) -> (bool, bool) {
+    let mut all_done = true;
+    let mut bit_identical = true;
+    for (job, fi) in jobs {
+        match cluster.wait(*job, TIMEOUT) {
+            Ok(JobStatus::Done) => {
+                bit_identical &= histogram_bits(cluster, *job).as_deref()
+                    == Some(baseline[*fi].as_slice());
+            }
+            _ => all_done = false,
+        }
+    }
+    (all_done, bit_identical)
+}
+
+fn live_chaos_stragglers(n_events: usize, baseline: &[Vec<u32>]) -> Cell {
+    let fault = FaultConfig {
+        seed: 91,
+        stall_p: 0.3,
+        stall_s: 1.0,
+        slow_p: 0.3,
+        slow_factor: 3.0,
+        delay_p: 0.3,
+        delay_factor: 4.0,
+        ..FaultConfig::default()
+    };
+    let cluster = ClusterHandle::start(
+        live_config(3, n_events, fault),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .expect("cluster start");
+    let t0 = Instant::now();
+    let jobs: Vec<(u64, usize)> = vec![
+        (cluster.submit(POOL[0], "locality"), 0),
+        (cluster.submit(POOL[1], "locality"), 1),
+        (cluster.submit(POOL[0], "central"), 0),
+        (cluster.submit(POOL[1], "central"), 1),
+    ];
+    let (ok, bit_identical) = score_jobs(&cluster, &jobs, baseline);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (p50, p99) = wall_quantiles_ms(&cluster);
+    let injected = cluster.fault_trace().len() as u64;
+    let m = &cluster.metrics;
+    let counters = vec![
+        ("faults_injected", injected),
+        ("tasks_speculated", m.counter("jse.tasks_speculated").get()),
+        ("speculation_wins", m.counter("jse.speculation_wins").get()),
+        ("tasks_failed_over", m.counter("jse.tasks_failed_over").get()),
+        ("gass_transfer_retries", m.counter("gass.transfer_retries").get()),
+    ];
+    let n = jobs.len();
+    cluster.shutdown();
+    Cell {
+        name: "live_chaos_stragglers",
+        kind: "live",
+        jobs: n,
+        ok: ok && injected > 0,
+        bit_identical,
+        jobs_per_sec: n as f64 / elapsed.max(1e-9),
+        p50_wall_ms: p50,
+        p99_wall_ms: p99,
+        counters,
+    }
+}
+
+fn live_churn_mixed(n_events: usize, baseline: &[Vec<u32>]) -> Cell {
+    let cluster = ClusterHandle::start(
+        live_config(4, n_events, FaultConfig::default()),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .expect("cluster start");
+    let t0 = Instant::now();
+    let jobs: Vec<(u64, usize)> = vec![
+        (cluster.submit(POOL[0], "locality"), 0),
+        (cluster.submit(POOL[1], "central"), 1),
+        (cluster.submit(POOL[2], "locality"), 2),
+        (cluster.submit(POOL[3], "locality"), 3),
+    ];
+    // kill + join churn while the traffic is in flight; replication 2
+    // keeps every brick reachable, so the verdicts must not move
+    std::thread::sleep(Duration::from_millis(50));
+    cluster.kill_node("node3");
+    cluster.add_node("node4", 1.0, 1).expect("join during traffic");
+    let (ok, bit_identical) = score_jobs(&cluster, &jobs, baseline);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (p50, p99) = wall_quantiles_ms(&cluster);
+    let m = &cluster.metrics;
+    let counters = vec![
+        ("nodes_joined", m.counter("cluster.nodes_joined").get()),
+        ("nodes_killed", m.counter("cluster.nodes_killed").get()),
+        ("tasks_failed_over", m.counter("jse.tasks_failed_over").get()),
+        ("bricks_rereplicated", m.counter("ft.bricks_rereplicated").get()),
+    ];
+    let n = jobs.len();
+    cluster.shutdown();
+    Cell {
+        name: "live_churn_mixed",
+        kind: "live",
+        jobs: n,
+        ok,
+        bit_identical,
+        jobs_per_sec: n as f64 / elapsed.max(1e-9),
+        p50_wall_ms: p50,
+        p99_wall_ms: p99,
+        counters,
+    }
+}
+
+fn live_zipf_qcache(n_events: usize, n_jobs: usize, baseline: &[Vec<u32>]) -> Cell {
+    let mut cfg = live_config(3, n_events, FaultConfig::default());
+    cfg.qcache_enabled = true;
+    let cluster =
+        ClusterHandle::start(cfg, geps::runtime::default_artifacts_dir())
+            .expect("cluster start");
+    // zipf(1) over the pool via a seeded LCG: rank r gets weight 1/(r+1)
+    let weights: Vec<f64> = (0..POOL.len()).map(|r| 1.0 / (r + 1) as f64).collect();
+    let total: f64 = weights.iter().sum();
+    let mut state: u64 = 0x5eed_cafe_f00d_beef;
+    let mut rank = || {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let mut x = (state >> 11) as f64 / (1u64 << 53) as f64 * total;
+        for (r, w) in weights.iter().enumerate() {
+            if x < *w {
+                return r;
+            }
+            x -= w;
+        }
+        POOL.len() - 1
+    };
+    let t0 = Instant::now();
+    let jobs: Vec<(u64, usize)> = (0..n_jobs)
+        .map(|_| {
+            let r = rank();
+            (cluster.submit(POOL[r], "locality"), r)
+        })
+        .collect();
+    let (ok, bit_identical) = score_jobs(&cluster, &jobs, baseline);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (p50, p99) = wall_quantiles_ms(&cluster);
+    let m = &cluster.metrics;
+    let counters = vec![
+        ("qcache_hits_full", m.counter("qcache.hits_full").get()),
+        ("qcache_hits_partial", m.counter("qcache.hits_partial").get()),
+        ("qcache_shared_jobs", m.counter("qcache.shared_jobs").get()),
+        ("qcache_promotions", m.counter("qcache.promotions").get()),
+    ];
+    let hits = counters[0].1 + counters[1].1 + counters[2].1;
+    cluster.shutdown();
+    Cell {
+        name: "live_zipf_qcache",
+        kind: "live",
+        jobs: n_jobs,
+        // the hot head must actually hit the cache for the cell to count
+        ok: ok && hits > 0,
+        bit_identical,
+        jobs_per_sec: n_jobs as f64 / elapsed.max(1e-9),
+        p50_wall_ms: p50,
+        p99_wall_ms: p99,
+        counters,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("GEPS_BENCH_SMOKE").is_ok();
+    let n_events = if smoke { 400 } else { 1000 };
+    // DES scale: hundreds of simulated nodes in the full run
+    let per_site = if smoke { 20 } else { 100 };
+    let churn_nodes = if smoke { 40 } else { 200 };
+    let sim_events = if smoke { 12_000 } else { 60_000 };
+    let zipf_jobs = if smoke { 16 } else { 40 };
+
+    let baseline = baselines(n_events);
+    let cells = vec![
+        sim_wan_asymmetric(per_site, sim_events),
+        sim_stragglers_churn(churn_nodes, sim_events),
+        live_chaos_stragglers(n_events, &baseline),
+        live_churn_mixed(n_events, &baseline),
+        live_zipf_qcache(n_events, zipf_jobs, &baseline),
+    ];
+
+    print_table(
+        "Ext-S scenarios: scale/chaos matrix verdicts",
+        &["cell", "kind", "jobs", "ok", "bit-identical", "jobs/s", "p50", "p99"],
+        &cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.name.to_string(),
+                    c.kind.to_string(),
+                    c.jobs.to_string(),
+                    c.ok.to_string(),
+                    c.bit_identical.to_string(),
+                    format!("{:.2}", c.jobs_per_sec),
+                    format!("{:.1} ms", c.p50_wall_ms),
+                    format!("{:.1} ms", c.p99_wall_ms),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    let all_ok = cells.iter().all(|c| c.ok);
+    let all_bit_identical = cells.iter().all(|c| c.bit_identical);
+    println!("\nall ok: {all_ok}, all bit-identical: {all_bit_identical}");
+
+    let doc = Json::obj()
+        .set("bench", "ext_scenarios")
+        .set("generated", true)
+        .set("smoke", smoke)
+        .set(
+            "config",
+            Json::obj()
+                .set("n_events_live", n_events)
+                .set("n_events_sim", sim_events)
+                .set("sim_nodes_wan", 3 * per_site)
+                .set("sim_nodes_churn", churn_nodes)
+                .set("zipf_jobs", zipf_jobs),
+        )
+        .set("cells", cells.iter().map(Cell::to_json).collect::<Vec<_>>())
+        .set("all_ok", all_ok)
+        .set("all_bit_identical", all_bit_identical);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_ext_scenarios.json");
+    std::fs::write(&path, format!("{doc}\n"))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

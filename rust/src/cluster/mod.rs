@@ -77,6 +77,9 @@ pub struct ClusterHandle {
     /// seeded fault plan shared by GASS, every node executor and the
     /// JSE; `fault_trace()` exposes its reproducibility trace
     faults: Arc<FaultPlan>,
+    /// flight recorder shared by the JSE, nodes, GASS, qcache and the
+    /// fault plan; the portal serves its per-job traces
+    recorder: Arc<crate::obs::Recorder>,
     pool: EnginePool,
 }
 
@@ -84,17 +87,25 @@ impl ClusterHandle {
     /// Start a cluster from config + compiled artifacts.
     pub fn start(config: ClusterConfig, artifacts: std::path::PathBuf) -> Result<Self> {
         let metrics = Arc::new(Registry::new());
+        // one flight recorder for the whole cluster: every subsystem
+        // journals its per-job events here, the portal serves them
+        let recorder = Arc::new(
+            crate::obs::Recorder::new().with_metrics(metrics.clone()),
+        );
         let topology = config.topology();
         // one seeded fault plan for the whole cluster: GASS consults it
         // per transfer attempt, node executors per task attempt — same
         // seed, same injected trace, regardless of placement
         let faults = Arc::new(
-            FaultPlan::new(config.fault.clone()).with_metrics(metrics.clone()),
+            FaultPlan::new(config.fault.clone())
+                .with_metrics(metrics.clone())
+                .with_recorder(recorder.clone()),
         );
         let gass =
             GassService::new(topology.clone(), config.time_scale, config.streams)
                 .with_faults(faults.clone())
-                .with_metrics(metrics.clone());
+                .with_metrics(metrics.clone())
+                .with_recorder(recorder.clone());
         // one engine worker per node pipeline, min 1 — the multi-pipeline
         // executors submit kernel work concurrently, so the pool must be
         // able to absorb it (capped so a large auto-detected core count
@@ -204,6 +215,7 @@ impl ClusterHandle {
                 out_tx.clone(),
                 metrics.clone(),
                 faults.clone(),
+                Some(recorder.clone()),
             )?;
             node_txs.insert(spec.name.clone(), handle.tx.clone());
             handles.insert(spec.name.clone(), handle);
@@ -248,11 +260,13 @@ impl ClusterHandle {
         }));
         qcache.set_metrics(metrics.clone());
         let qcache2 = config.qcache_enabled.then(|| qcache.clone());
+        let rec2 = recorder.clone();
         let broker_join = std::thread::Builder::new()
             .name("geps-broker".into())
             .spawn(move || {
                 let mut jse = Jse::new(jse_cfg, node_txs, out_rx, cat2.clone());
                 jse.set_metrics(met2.clone());
+                jse.set_recorder(rec2);
                 if let Some(q) = qcache2 {
                     jse.set_qcache(q);
                 }
@@ -451,6 +465,7 @@ impl ClusterHandle {
             pending_joins,
             qcache,
             faults,
+            recorder,
             pool,
         })
     }
@@ -512,6 +527,7 @@ impl ClusterHandle {
             self.node_out_tx.clone(),
             self.metrics.clone(),
             self.faults.clone(),
+            Some(self.recorder.clone()),
         )?;
         let tx = handle.tx.clone();
         lock(&self.nodes).insert(name.to_string(), handle);
@@ -681,6 +697,12 @@ impl ClusterHandle {
 
     pub fn gass(&self) -> &GassService {
         &self.gass
+    }
+
+    /// The cluster-wide flight recorder ([`crate::obs`]): per-job
+    /// lifecycle traces (the portal's `GET /jobs/<id>/trace`).
+    pub fn recorder(&self) -> &Arc<crate::obs::Recorder> {
+        &self.recorder
     }
 
     /// Sorted snapshot of every fault injected so far (the faultline

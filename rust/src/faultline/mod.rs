@@ -166,16 +166,29 @@ pub struct FaultPlan {
     cfg: FaultConfig,
     trace: Mutex<Vec<FaultEvent>>,
     metrics: Option<Arc<Registry>>,
+    obs: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl FaultPlan {
     pub fn new(cfg: FaultConfig) -> Self {
-        FaultPlan { cfg, trace: Mutex::new(Vec::new()), metrics: None }
+        FaultPlan {
+            cfg,
+            trace: Mutex::new(Vec::new()),
+            metrics: None,
+            obs: None,
+        }
     }
 
     /// Count injections under `faultline.injected.*`.
     pub fn with_metrics(mut self, metrics: Arc<Registry>) -> Self {
         self.metrics = Some(metrics);
+        self
+    }
+
+    /// Mirror injections into per-job flight-recorder traces (the
+    /// decision keys carry the job id, so attribution is parse-only).
+    pub fn with_recorder(mut self, obs: Arc<crate::obs::Recorder>) -> Self {
+        self.obs = Some(obs);
         self
     }
 
@@ -195,6 +208,17 @@ impl FaultPlan {
     fn record(&self, domain: &'static str, key: String) {
         if let Some(m) = &self.metrics {
             m.counter(&format!("faultline.injected.{domain}")).inc();
+        }
+        if let Some(obs) = &self.obs {
+            // task keys lead with the job id; transfer keys carry a
+            // `/job<digits>/` path segment for result uploads. Faults
+            // on unattributable objects (brick stage-ins) still land
+            // in the global trace above.
+            let job = crate::obs::job_of_task_key(&key)
+                .or_else(|| crate::obs::job_of_path(&key));
+            if let Some(job) = job {
+                obs.record(job, "fault", key.clone(), domain);
+            }
         }
         lock(&self.trace).push(FaultEvent { domain, key });
     }

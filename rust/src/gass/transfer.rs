@@ -40,6 +40,9 @@ pub struct GassService {
     faults: Arc<FaultPlan>,
     /// counts `gass.transfer_retries` when present
     metrics: Option<Arc<Registry>>,
+    /// flight recorder ([`crate::obs`]): retried transfers on job
+    /// result paths are journalled under their job id
+    recorder: Option<Arc<crate::obs::Recorder>>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -89,6 +92,7 @@ impl GassService {
             streams: streams.max(1),
             faults: Arc::new(FaultPlan::default()),
             metrics: None,
+            recorder: None,
         }
     }
 
@@ -102,6 +106,16 @@ impl GassService {
     /// Count transfer retries under `gass.transfer_retries`.
     pub fn with_metrics(mut self, metrics: Arc<Registry>) -> Self {
         self.metrics = Some(metrics);
+        self
+    }
+
+    /// Attach the flight recorder: retries of transfers whose path
+    /// carries a `/job<id>/` segment become `gass_retry` trace events.
+    pub fn with_recorder(
+        mut self,
+        recorder: Arc<crate::obs::Recorder>,
+    ) -> Self {
+        self.recorder = Some(recorder);
         self
     }
 
@@ -177,6 +191,13 @@ impl GassService {
             if attempt > 0 {
                 if let Some(m) = &self.metrics {
                     m.counter("gass.transfer_retries").inc();
+                }
+                if let (Some(o), Some(job)) =
+                    (&self.recorder, crate::obs::job_of_path(path))
+                {
+                    // keyed like the faultline link decision for this
+                    // attempt, so trace and fault plan agree
+                    o.record(job, "gass_retry", format!("{path}#{attempt}"), "");
                 }
                 let backoff = self.faults.retry_backoff_s(path, attempt - 1);
                 self.sleep_virtual(backoff);

@@ -188,6 +188,8 @@ pub struct Jse {
     /// observed task wall times across all jobs; anchors the straggler
     /// deadline (quantile * factor) once enough samples exist
     durations: Histogram,
+    /// flight recorder ([`crate::obs`]): per-job lifecycle journal
+    obs: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl Jse {
@@ -220,6 +222,7 @@ impl Jse {
             pending_subscribers: BTreeMap::new(),
             quarantine,
             durations: Histogram::new(),
+            obs: None,
         }
     }
 
@@ -238,7 +241,27 @@ impl Jse {
         if let Some(m) = &self.metrics {
             qcache.set_metrics(m.clone());
         }
+        if let Some(o) = &self.obs {
+            qcache.set_recorder(o.clone());
+        }
         self.qcache = Some(qcache);
+    }
+
+    /// Attach the flight recorder ([`crate::obs`]): every admission,
+    /// qcache decision, dispatch, speculation, fault, failure and seal
+    /// is journalled under its job id from here on.
+    pub fn set_recorder(&mut self, obs: Arc<crate::obs::Recorder>) {
+        if let Some(q) = &self.qcache {
+            q.set_recorder(obs.clone());
+        }
+        self.obs = Some(obs);
+    }
+
+    /// Journal one event for `job` if a recorder is attached.
+    fn record(&self, job: u64, kind: &'static str, key: String, detail: &str) {
+        if let Some(o) = &self.obs {
+            o.record(job, kind, key, detail);
+        }
     }
 
     /// Lock the catalogue, recovering from poisoning
@@ -293,6 +316,7 @@ impl Jse {
     pub fn enqueue(&mut self, job_id: u64) {
         if self.admitted.insert(job_id) {
             self.queue.push_back(job_id);
+            self.record(job_id, "enqueued", job_id.to_string(), "");
         }
     }
 
@@ -354,6 +378,7 @@ impl Jse {
                 m.counter("jse.jobs_failed_explicitly").inc();
             }
             eprintln!("[jse] failing job {job_id}: {error}");
+            self.record(job_id, "sealed", job_id.to_string(), "failed");
             self.completed.push(JobOutcome::failed(job_id, msg));
             return true;
         }
@@ -390,6 +415,7 @@ impl Jse {
             m.counter("jse.jobs_failed_explicitly").inc();
         }
         eprintln!("[jse] failing job {job_id}: {error}");
+        self.record(job_id, "sealed", job_id.to_string(), "failed");
         self.completed.push(out);
         true
     }
@@ -450,6 +476,7 @@ impl Jse {
             j.status = JobStatus::Cancelled;
             j.error = Some("cancelled".into());
         });
+        self.record(job_id, "sealed", job_id.to_string(), "cancelled");
         self.completed.push(out);
         true
     }
@@ -518,6 +545,7 @@ impl Jse {
                 ));
                 continue;
             };
+            self.record(job_id, "admitted", job_id.to_string(), "");
             let policy =
                 Policy::by_name(&policy_name).unwrap_or(Policy::Locality);
 
@@ -550,6 +578,12 @@ impl Jse {
                 if let Some(hit) = q.lookup_full(full_key) {
                     // repeated query: serve the merged result at
                     // admission — zero tasks dispatched
+                    self.record(
+                        job_id,
+                        "qcache_hit",
+                        job_id.to_string(),
+                        "full result served at admission",
+                    );
                     self.seal_from_cached(job_id, &hit);
                     continue;
                 }
@@ -597,6 +631,14 @@ impl Jse {
                 // filtering preserves id order, so SchedCtx::brick's
                 // binary search stays valid
                 ctx.bricks = fresh;
+                if !memoized.is_empty() {
+                    self.record(
+                        job_id,
+                        "qcache_partial",
+                        job_id.to_string(),
+                        &format!("memoized={}", memoized.len()),
+                    );
+                }
             }
             if let Some(ci) = cache_info.as_mut() {
                 ci.planned_events = memoized
@@ -616,9 +658,20 @@ impl Jse {
                 m.counter(&format!("jse.jobs_policy.{}", policy.name()))
                     .inc();
             }
+            self.record(
+                job_id,
+                "planned",
+                job_id.to_string(),
+                &format!(
+                    "policy={} bricks={}",
+                    policy.name(),
+                    ctx.bricks.len()
+                ),
+            );
             let mut runner =
                 JobRunner::new(job_id, filter_expr, policy, ctx);
             runner.cache = cache_info;
+            runner.obs = self.obs.clone();
             if !memoized.is_empty() {
                 // one catalogue critical section for all preloads
                 let mut cat = self.cat();
@@ -736,8 +789,17 @@ impl Jse {
                         .map(|tx| tx.send(msg).is_ok())
                         .unwrap_or(false);
                     if sent {
+                        let tkey = crate::obs::task_key(
+                            id,
+                            task.brick,
+                            task.range,
+                            attempt,
+                        );
                         if let Some(r) = self.runners.get_mut(&id) {
                             r.record_dispatch(name, task, attempt);
+                        }
+                        if let Some(o) = &self.obs {
+                            o.record_on(id, "dispatched", tkey, "", name);
                         }
                         if let Some(m) = &self.metrics {
                             m.counter("jse.tasks_dispatched").inc();
@@ -770,6 +832,11 @@ impl Jse {
     /// Full node-death path, across *all* in-flight jobs.
     fn node_down(&mut self, name: &str) {
         self.mark_node_down(name);
+        if let Some(o) = &self.obs {
+            for id in self.runners.keys() {
+                o.record(*id, "node_lost", format!("node/{name}"), "");
+            }
+        }
         let mut failed_over = 0usize;
         for r in self.runners.values_mut() {
             failed_over += r.on_node_down(name);
@@ -812,6 +879,16 @@ impl Jse {
                 "[jse] quarantining node {node} after repeated task \
                  failures"
             );
+            if let Some(o) = &self.obs {
+                for id in self.runners.keys() {
+                    o.record(
+                        *id,
+                        "quarantine",
+                        format!("node/{node}"),
+                        "sidelined",
+                    );
+                }
+            }
             let mut failed_over = 0usize;
             for r in self.runners.values_mut() {
                 failed_over += r.sideline_node(node);
@@ -926,8 +1003,17 @@ impl Jse {
                     .map(|tx| tx.send(msg).is_ok())
                     .unwrap_or(false);
                 if sent {
+                    let tkey = crate::obs::task_key(
+                        id,
+                        spec.brick,
+                        spec.range,
+                        attempt,
+                    );
                     if let Some(r) = self.runners.get_mut(&id) {
                         r.record_speculative(&target, spec, attempt);
+                    }
+                    if let Some(o) = &self.obs {
+                        o.record_on(id, "speculated", tkey, "", &target);
                     }
                     if let Some(m) = &self.metrics {
                         m.counter("jse.tasks_speculated").inc();
@@ -1162,6 +1248,12 @@ impl Jse {
                 self.fail_subscribers(subs, &msg);
             }
         }
+        self.record(
+            id,
+            "sealed",
+            id.to_string(),
+            if done { "done" } else { "failed" },
+        );
         self.completed.push(out);
     }
 
@@ -1183,6 +1275,7 @@ impl Jse {
         out.result_bytes = hit.result_bytes;
         out.tasks_completed = hit.tasks_completed;
         out.histogram = hit.histogram.clone();
+        self.record(job, "sealed", job.to_string(), "done (cached)");
         self.completed.push(out);
     }
 
@@ -1197,6 +1290,7 @@ impl Jse {
                 j.status = JobStatus::Failed;
                 j.error = Some(msg.clone());
             });
+            self.record(s, "sealed", s.to_string(), "failed");
             self.completed.push(JobOutcome::failed(s, msg));
         }
     }

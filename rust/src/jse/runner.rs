@@ -118,6 +118,9 @@ pub struct JobRunner {
     /// set when this runner is the primary computation for a qcache
     /// fingerprint (None when the cache is disabled)
     pub cache: Option<CacheInfo>,
+    /// flight recorder for per-job merge/failure events (None in unit
+    /// tests and when the loop has no recorder wired)
+    pub obs: Option<std::sync::Arc<crate::obs::Recorder>>,
 }
 
 impl JobRunner {
@@ -141,6 +144,7 @@ impl JobRunner {
             completed: BTreeSet::new(),
             out: JobOutcome::pending(job),
             cache: None,
+            obs: None,
         }
     }
 
@@ -333,6 +337,15 @@ impl JobRunner {
         self.out.events_selected += events_selected;
         self.out.result_bytes += result_bytes;
         super::merge_histogram_f32(&mut self.out.histogram, histogram);
+        if let Some(obs) = &self.obs {
+            obs.record_on(
+                self.job,
+                "merged",
+                crate::obs::task_key(self.job, brick, range, win.attempt),
+                if spec_win { "spec_win" } else { "" },
+                &win_node,
+            );
+        }
         Some((win_node, wall, spec_win))
     }
 
@@ -382,6 +395,7 @@ impl JobRunner {
         if !is_issued {
             // a speculative copy failed; the issued attempt is still
             // in flight and owns the task's fate
+            self.record_failure(brick, range, attempt, "spec_failed", &node);
             return Some(TaskFailure { node, failures: fails, exhausted: false });
         }
         self.issued_on.remove(&key);
@@ -392,7 +406,33 @@ impl JobRunner {
         if !exhausted {
             self.sched.on_failure(&node, &failed.task, &self.ctx);
         }
+        self.record_failure(
+            brick,
+            range,
+            attempt,
+            if exhausted { "exhausted" } else { "failed" },
+            &node,
+        );
         Some(TaskFailure { node, failures: fails, exhausted })
+    }
+
+    fn record_failure(
+        &self,
+        brick: BrickId,
+        range: (usize, usize),
+        attempt: u32,
+        detail: &str,
+        node: &str,
+    ) {
+        if let Some(obs) = &self.obs {
+            obs.record_on(
+                self.job,
+                "task_failed",
+                crate::obs::task_key(self.job, brick, range, attempt),
+                detail,
+                node,
+            );
+        }
     }
 
     /// Elastic membership: a node joined the grid while this job is in

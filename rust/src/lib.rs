@@ -119,6 +119,40 @@
 //! fault-free run, or fails explicitly with a typed error — no hangs,
 //! no silent truncation.
 //!
+//! ## Observability: the `obs` subsystem
+//!
+//! [`obs`] is the monitoring layer the 2003 prototype lacked (DIAL and
+//! NorduGrid both treat response-time visibility as a first-class
+//! requirement):
+//!
+//! - **Per-job flight recorder** ([`obs::Recorder`]) — a bounded event
+//!   journal of the whole job lifecycle (admission, qcache lookup,
+//!   plan, per-attempt dispatch/speculation/retry, faultline
+//!   injections, GASS transfer retries, quarantine strikes, partial
+//!   merges, seal), threaded through `jse`, `jse/runner`,
+//!   `node/executor`, `qcache`, `gass` and `faultline`. The canonical
+//!   render (`GET /jobs/<id>/trace`) sorts events by a static
+//!   (phase, rank, key) table and excludes wall clock and placement,
+//!   so same-seed runs produce **byte-identical traces**; `?wall=1`
+//!   adds the diagnostic wall/node fields that power the `geps trace`
+//!   ASCII timeline (with critical-path annotation: which task attempt
+//!   gated the merge) and the per-job timing summary on
+//!   `GET /jobs/<id>` / `geps status` (queue wait, plan, execute,
+//!   merge durations).
+//! - **Prometheus exposition** ([`obs::prom`]) —
+//!   `GET /metrics?format=prometheus` renders the registry in the text
+//!   exposition format (`# TYPE` lines, cumulative
+//!   `_bucket`/`_sum`/`_count` from the log2 histograms, wildcard
+//!   families label-ified via [`obs::prom::PROM_FAMILIES`]), output
+//!   deterministic and validated by the in-repo
+//!   [`obs::prom::check_exposition`] checker.
+//! - **Scenario matrix** (`benches/ext_scenarios.rs`) — a named
+//!   scale/chaos matrix (asymmetric WAN, hundreds of simulated nodes,
+//!   stragglers, kill+join churn under mixed traffic, zipfian cache
+//!   traffic) emitting one machine-readable verdict per cell in
+//!   `BENCH_ext_scenarios.json`, CI-gated on every cell's bit-identity
+//!   verdict.
+//!
 //! ## The columnar node hot path
 //!
 //! Per-node throughput is the whole ball game (§4.1: bricks exist "to
@@ -163,6 +197,7 @@
 //!   scan sharing, partial memoization), [`ft`] (heartbeat liveness +
 //!   re-replication + quarantine; node death fails over across *all*
 //!   jobs), [`faultline`] (seeded deterministic fault injection),
+//!   [`obs`] (per-job flight recorder + Prometheus exposition),
 //!   [`cluster`] (admission + wiring), [`portal`] (submit / status /
 //!   cancel over HTTP)
 //! - compute: [`runtime`] (backend-dispatched engine: native PJRT over
@@ -197,7 +232,7 @@
 //!
 //! - **Determinism.** The modules whose outputs are part of the repo's
 //!   bit-identity surface (brick codec, catalog/WAL, filter VM, JSE,
-//!   metrics rendering, netsim, qcache, scheduler, sim, wire) must not
+//!   metrics rendering, netsim, obs, qcache, scheduler, sim, wire) must not
 //!   iterate `HashMap`/`HashSet` into anything order-sensitive — merges,
 //!   encodings, fingerprints, WAL records, rendered metrics — and the
 //!   simulation/scheduling modules must not read `SystemTime`/`Instant`
@@ -210,7 +245,11 @@
 //!   `catalog::schema::WAL_TAGS` (vs the `TAG_*` consts WAL replay
 //!   dispatches on), and [`metrics::names::REGISTERED`] (vs every
 //!   `.counter()/.gauge()/.histogram()` call site, wildcards covering
-//!   formatted families).
+//!   formatted families). The Prometheus renderer's label-ified
+//!   wildcard families ([`obs::prom::PROM_FAMILIES`]) must map 1:1
+//!   onto the `*` entries of `REGISTERED`
+//!   (`prom-family-registry`), so the catalogue stays authoritative
+//!   for scrapers.
 //! - **Panic paths.** No `unwrap`/`expect`/slice-indexing/`panic!` in
 //!   the always-on service loops (`jse`, `node::executor`, `portal`,
 //!   `gass`);
@@ -241,6 +280,7 @@ pub mod jse;
 pub mod metrics;
 pub mod netsim;
 pub mod node;
+pub mod obs;
 pub mod portal;
 pub mod qcache;
 pub mod rsl;

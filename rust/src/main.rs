@@ -5,6 +5,7 @@
 //!   demo       self-contained: start, submit, wait, report, shut down
 //!   submit     POST a job to a running portal
 //!   status     query job status from a running portal
+//!   trace      render a job's flight-recorder timeline (critical path)
 //!   cancel     cancel a queued or running job via the portal
 //!   add-node   register a new grid node mid-run (elastic membership)
 //!   node-info  GRIS node query via a running portal
@@ -244,6 +245,48 @@ fn cmd_status(flags: BTreeMap<String, String>) -> Result<()> {
     let (_, resp) =
         portal::http::request(&portal_addr(&flags), "GET", &path, None)?;
     println!("{}", String::from_utf8_lossy(&resp));
+    // per-job calls: render the flight-recorder timing summary (queue
+    // wait / plan / execute / merge) as readable lines under the JSON
+    if flags.contains_key("job") {
+        if let Ok(j) = Json::parse(&String::from_utf8_lossy(&resp)) {
+            if let Some(t) = j.get("timing") {
+                for (label, key) in [
+                    ("queue wait", "queue_wait_ns"),
+                    ("plan", "plan_ns"),
+                    ("execute", "execute_ns"),
+                    ("merge", "merge_ns"),
+                    ("total", "total_ns"),
+                ] {
+                    if let Some(ns) = t.get(key).and_then(Json::as_u64) {
+                        println!(
+                            "  {label:<10} {:>10.3} ms",
+                            ns as f64 / 1e6
+                        );
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(flags: BTreeMap<String, String>) -> Result<()> {
+    let job = flags
+        .get("job")
+        .cloned()
+        .ok_or_else(|| anyhow!("--job required"))?;
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        &format!("/jobs/{job}/trace?wall=1"),
+        None,
+    )?;
+    if status >= 300 {
+        bail!("trace fetch failed: {}", String::from_utf8_lossy(&resp));
+    }
+    let j = Json::parse(std::str::from_utf8(&resp)?)
+        .map_err(|e| anyhow!("{e}"))?;
+    print!("{}", geps::obs::render_ascii(&j));
     Ok(())
 }
 
@@ -449,11 +492,13 @@ fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: geps <serve|demo|submit|status|cancel|add-node|node-info|kill|histogram|bricks|cache-stats|cache-flush|gen-artifacts|calibrate|fig7> [--flags]
+        "usage: geps <serve|demo|submit|status|trace|cancel|add-node|node-info|kill|histogram|bricks|cache-stats|cache-flush|gen-artifacts|calibrate|fig7> [--flags]
   serve     --config FILE --listen ADDR --gris-listen ADDR
   demo      --config FILE --events N --policy P --filter EXPR
   submit    --portal ADDR --filter EXPR --policy P
-  status    --portal ADDR [--job ID]
+  status    --portal ADDR [--job ID]         (per-job: timing summary too)
+  trace     --portal ADDR --job ID           (flight-recorder timeline;
+                                              critical path marked)
   cancel    --portal ADDR --job ID           (cancel queued/running job)
   add-node  --portal ADDR --node NAME [--speed S] [--slots N]
                                              (join a node mid-run; bricks
@@ -484,6 +529,7 @@ fn main() -> Result<()> {
         "demo" => cmd_demo(flags),
         "submit" => cmd_submit(flags),
         "status" => cmd_status(flags),
+        "trace" => cmd_trace(flags),
         "cancel" => cmd_cancel(flags),
         "add-node" => cmd_add_node(flags),
         "node-info" => cmd_node_info(flags),

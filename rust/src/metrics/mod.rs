@@ -48,6 +48,8 @@ pub mod names {
         "node.pack_stall_ns",
         "node.pipeline.*.task_busy_ns",
         "node.pipelines",
+        "obs.trace_dropped",
+        "obs.trace_events",
         "portal.cancels",
         "portal.submissions",
         "portal.submissions_rejected",
@@ -139,7 +141,9 @@ impl Histogram {
     }
 
     /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket containing the q-th sample).
+    /// bucket containing the q-th sample). Bucket `i` holds values in
+    /// `[2^i, 2^(i+1))`, so its upper bound is `2^(i+1) - 1`; the top
+    /// bucket (63) is unbounded above and reports `u64::MAX`.
     pub fn quantile(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -150,10 +154,30 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (i + 1).min(63);
+                return Self::bucket_upper_bound(i);
             }
         }
         u64::MAX
+    }
+
+    /// Inclusive upper bound of bucket `i` (`2^(i+1) - 1`; `u64::MAX`
+    /// for the open-ended top bucket).
+    pub fn bucket_upper_bound(i: usize) -> u64 {
+        if i >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << (i + 1)) - 1
+        }
+    }
+
+    /// Point-in-time copy of the per-bucket counts (for exposition
+    /// renderers — the raw buckets stay private).
+    pub fn bucket_counts(&self) -> [u64; 64] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
     }
 }
 
@@ -208,6 +232,32 @@ impl Registry {
         }
         out
     }
+
+    /// Sorted point-in-time counter snapshot (name, value).
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        lock(&self.counters)
+            .iter()
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect()
+    }
+
+    /// Sorted point-in-time gauge snapshot (name, value).
+    pub fn gauges_snapshot(&self) -> Vec<(String, u64)> {
+        lock(&self.gauges)
+            .iter()
+            .map(|(n, g)| (n.clone(), g.get()))
+            .collect()
+    }
+
+    /// Sorted point-in-time histogram snapshot
+    /// (name, per-bucket counts, sum, count).
+    #[allow(clippy::type_complexity)]
+    pub fn histograms_snapshot(&self) -> Vec<(String, [u64; 64], u64, u64)> {
+        lock(&self.histograms)
+            .iter()
+            .map(|(n, h)| (n.clone(), h.bucket_counts(), h.sum(), h.count()))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +284,39 @@ mod tests {
         assert!(h.quantile(1.0) >= 1_000_000);
         let empty = Histogram::new();
         assert_eq!(empty.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn quantile_upper_bounds_are_exact() {
+        // regression: the old `(i + 1).min(63)` cap made buckets 62 and
+        // 63 both report `1 << 63`, understating large-sample p99. The
+        // top bucket must saturate to u64::MAX, and every lower bucket
+        // must report `2^(i+1) - 1` (the largest value it can hold).
+        let h = Histogram::new();
+        h.record(u64::MAX); // bucket 63
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        let h62 = Histogram::new();
+        h62.record(1u64 << 62); // bucket 62
+        assert_eq!(h62.quantile(1.0), (1u64 << 63) - 1);
+        let small = Histogram::new();
+        small.record(3); // bucket 1: [2, 4)
+        assert_eq!(small.quantile(0.5), 3);
+        assert_eq!(Histogram::bucket_upper_bound(0), 1);
+        assert_eq!(Histogram::bucket_upper_bound(63), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_snapshot_matches_records() {
+        let h = Histogram::new();
+        for v in [1u64, 3, 1024] {
+            h.record(v);
+        }
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets[0], 1); // 1
+        assert_eq!(buckets[1], 1); // 3
+        assert_eq!(buckets[10], 1); // 1024
+        assert_eq!(h.sum(), 1028);
+        assert_eq!(h.count(), 3);
     }
 
     #[test]

@@ -171,6 +171,7 @@ pub fn spawn_node(
     outbox: Sender<Message>,
     metrics: Arc<Registry>,
     faults: Arc<FaultPlan>,
+    obs: Option<Arc<crate::obs::Recorder>>,
 ) -> Result<NodeHandle> {
     let killed = Arc::new(AtomicBool::new(false));
     let tasks_done = Arc::new(AtomicUsize::new(0));
@@ -277,6 +278,26 @@ pub fn spawn_node(
                         };
                         if matches!(reply, Message::TaskDone { .. }) {
                             ex_done.fetch_add(1, Ordering::SeqCst);
+                        }
+                        // journal the completed attempt *before* the
+                        // reply leaves the node, so the trace already
+                        // holds the execution when the leader seals
+                        if let Some(o) = &obs {
+                            o.record_on(
+                                job,
+                                "executed",
+                                crate::obs::task_key(
+                                    job,
+                                    &brick_name,
+                                    task.range,
+                                    attempt,
+                                ),
+                                match &reply {
+                                    Message::TaskDone { .. } => "ok",
+                                    _ => "err",
+                                },
+                                &name,
+                            );
                         }
                         if faults.duplicate_reply(
                             job,

@@ -1,0 +1,502 @@
+//! obs: first-class observability for the coordination plane.
+//!
+//! Two legs live here; the third (the scenario matrix) is
+//! `benches/ext_scenarios.rs`.
+//!
+//! - **Flight recorder** ([`Recorder`]): a bounded per-job span/event
+//!   journal covering the whole job lifecycle — admission, qcache
+//!   lookup, planning, per-task attempt dispatch / speculation /
+//!   retry, faultline injections, GASS transfer retries, quarantine
+//!   strikes, partial merges, and the seal. Recording is lock-cheap
+//!   (one short mutex hold, no allocation beyond the event itself) and
+//!   the *canonical* rendering is deterministic: events are sorted by
+//!   a static (phase, rank, key, detail) table and timestamped with
+//!   their index in that order, so two same-seed runs produce
+//!   byte-identical `GET /jobs/<id>/trace` bodies. Wall-clock readings
+//!   and node placement are captured as side fields — excluded from
+//!   the canonical render, exposed via `?wall=1` for the `geps trace`
+//!   ASCII timeline and the per-job timing summary.
+//! - **Prometheus exposition** ([`prom`]): the metrics registry in the
+//!   text exposition format (`/metrics?format=prometheus`), with the
+//!   wildcard families from `metrics::names::REGISTERED` label-ified
+//!   (`node.pipeline.<i>.task_busy_ns` → one metric with a `pipeline`
+//!   label) and a tiny in-repo exposition checker.
+
+pub mod prom;
+
+use crate::metrics::Registry;
+use crate::util::json::Json;
+use crate::util::lock;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-job event cap: a runaway job cannot grow the journal without
+/// bound; overflow increments `dropped` (and `obs.trace_dropped`).
+pub const JOB_EVENT_CAP: usize = 4096;
+
+/// Canonical event ordering table: `(kind, phase, rank)`. The phase
+/// index names the lifecycle stage (see [`PHASES`]); the rank orders
+/// kinds within a phase. Events sort by `(phase, rank, key, detail)` —
+/// never by wall clock — which is what makes same-seed traces
+/// byte-identical.
+pub const KINDS: &[(&str, u8, u8)] = &[
+    ("enqueued", 0, 0),
+    ("admitted", 0, 1),
+    ("qcache_hit", 0, 2),
+    ("qcache_subscribed", 0, 3),
+    ("qcache_partial", 0, 4),
+    ("planned", 1, 0),
+    ("dispatched", 2, 0),
+    ("fault", 2, 1),
+    ("gass_retry", 2, 2),
+    ("executed", 2, 3),
+    ("speculated", 2, 4),
+    ("task_failed", 2, 5),
+    ("node_lost", 2, 6),
+    ("quarantine", 2, 7),
+    ("merged", 3, 0),
+    ("sealed", 4, 0),
+];
+
+/// Lifecycle stage names, indexed by the phase byte in [`KINDS`].
+pub const PHASES: &[&str] = &["admit", "plan", "exec", "merge", "seal"];
+
+/// (phase, rank) for a kind; unknown kinds sort last.
+pub fn kind_order(kind: &str) -> (u8, u8) {
+    for &(k, p, r) in KINDS {
+        if k == kind {
+            return (p, r);
+        }
+    }
+    (u8::MAX, u8::MAX)
+}
+
+/// One recorded event. `key` is placement-invariant (task keys follow
+/// the faultline format `{job}/{brick}/{r0}..{r1}#{attempt}`); `node`
+/// and `wall_ns` are diagnostic side fields excluded from the
+/// canonical render.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: &'static str,
+    pub key: String,
+    pub detail: String,
+    pub node: String,
+    pub wall_ns: u64,
+}
+
+#[derive(Debug, Default)]
+struct JobTrace {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+/// The flight recorder: one bounded journal per job, shared by every
+/// subsystem that touches the job (`jse`, `jse/runner`,
+/// `node/executor`, `qcache`, `gass`, `faultline`).
+#[derive(Debug)]
+pub struct Recorder {
+    jobs: Mutex<BTreeMap<u64, JobTrace>>,
+    t0: Instant,
+    metrics: Option<Arc<Registry>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder {
+            jobs: Mutex::new(BTreeMap::new()),
+            t0: Instant::now(),
+            metrics: None,
+        }
+    }
+
+    pub fn with_metrics(mut self, metrics: Arc<Registry>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Record an event with no node attribution.
+    pub fn record(
+        &self,
+        job: u64,
+        kind: &'static str,
+        key: impl Into<String>,
+        detail: impl Into<String>,
+    ) {
+        self.record_on(job, kind, key, detail, "");
+    }
+
+    /// Record an event attributed to a node. The node name is a side
+    /// field: it never participates in canonical ordering, so
+    /// placement changes cannot perturb the deterministic trace.
+    pub fn record_on(
+        &self,
+        job: u64,
+        kind: &'static str,
+        key: impl Into<String>,
+        detail: impl Into<String>,
+        node: &str,
+    ) {
+        let wall_ns = self.t0.elapsed().as_nanos() as u64;
+        let mut g = lock(&self.jobs);
+        let tr = g.entry(job).or_default();
+        if tr.events.len() >= JOB_EVENT_CAP {
+            tr.dropped += 1;
+            drop(g);
+            if let Some(m) = &self.metrics {
+                m.counter("obs.trace_dropped").inc();
+            }
+            return;
+        }
+        tr.events.push(TraceEvent {
+            kind,
+            key: key.into(),
+            detail: detail.into(),
+            node: node.to_string(),
+            wall_ns,
+        });
+        drop(g);
+        if let Some(m) = &self.metrics {
+            m.counter("obs.trace_events").inc();
+        }
+    }
+
+    /// Drop a job's journal (seal-from-cache of a cancelled duplicate,
+    /// tests). Jobs otherwise keep their journal for post-mortems.
+    pub fn forget(&self, job: u64) {
+        lock(&self.jobs).remove(&job);
+    }
+
+    fn snapshot(&self, job: u64) -> Option<(Vec<TraceEvent>, u64)> {
+        let g = lock(&self.jobs);
+        let tr = g.get(&job)?;
+        Some((tr.events.clone(), tr.dropped))
+    }
+
+    /// Canonical JSON trace for a job: events sorted by the static
+    /// (phase, rank, key, detail) table, `t` = index in that order.
+    /// Byte-identical across same-seed runs. With `wall`, each event
+    /// additionally carries `wall_ns` and `node` (diagnostic only —
+    /// the `geps trace` timeline and critical-path annotation).
+    pub fn trace_json(&self, job: u64, wall: bool) -> Option<Json> {
+        let (mut events, dropped) = self.snapshot(job)?;
+        events.sort_by(|a, b| {
+            (kind_order(a.kind), &a.key, &a.detail, &a.node, a.wall_ns).cmp(
+                &(kind_order(b.kind), &b.key, &b.detail, &b.node, b.wall_ns),
+            )
+        });
+        let mut arr = Vec::with_capacity(events.len());
+        for (t, e) in events.iter().enumerate() {
+            let (phase, _) = kind_order(e.kind);
+            let mut o = Json::obj()
+                .set("t", t)
+                .set(
+                    "phase",
+                    *PHASES.get(phase as usize).unwrap_or(&"other"),
+                )
+                .set("kind", e.kind)
+                .set("key", e.key.as_str())
+                .set("detail", e.detail.as_str());
+            if wall {
+                o = o
+                    .set("wall_ns", e.wall_ns)
+                    .set("node", e.node.as_str());
+            }
+            arr.push(o);
+        }
+        Some(
+            Json::obj()
+                .set("job", job)
+                .set("dropped", dropped)
+                .set("events", arr),
+        )
+    }
+
+    /// Per-job timing summary (queue wait, plan, execute, merge) from
+    /// the recorded wall-clock side fields. Wall readings are
+    /// diagnostic, so this summary is *not* part of the deterministic
+    /// surface — it feeds `GET /jobs/<id>` and `geps status`.
+    pub fn summary_json(&self, job: u64) -> Option<Json> {
+        let (events, dropped) = self.snapshot(job)?;
+        let first = |kind: &str| {
+            events
+                .iter()
+                .filter(|e| e.kind == kind)
+                .map(|e| e.wall_ns)
+                .min()
+        };
+        let last = |kind: &str| {
+            events
+                .iter()
+                .filter(|e| e.kind == kind)
+                .map(|e| e.wall_ns)
+                .max()
+        };
+        let enq = first("enqueued");
+        let adm = first("admitted");
+        let planned = first("planned");
+        let last_merge = last("merged");
+        let sealed = last("sealed");
+        let mut o = Json::obj()
+            .set("events", events.len())
+            .set("dropped", dropped);
+        if let Some(e) = events.iter().rev().find(|e| e.kind == "sealed") {
+            o = o.set("status", e.detail.as_str());
+        }
+        if let (Some(a), Some(b)) = (enq, adm) {
+            o = o.set("queue_wait_ns", b.saturating_sub(a));
+        }
+        if let (Some(a), Some(b)) = (adm, planned) {
+            o = o.set("plan_ns", b.saturating_sub(a));
+        }
+        let exec_end = last_merge.or(sealed);
+        if let (Some(a), Some(b)) = (planned, exec_end) {
+            o = o.set("execute_ns", b.saturating_sub(a));
+        }
+        if let (Some(a), Some(b)) = (last_merge, sealed) {
+            o = o.set("merge_ns", b.saturating_sub(a));
+        }
+        if let (Some(a), Some(b)) = (enq, sealed) {
+            o = o.set("total_ns", b.saturating_sub(a));
+        }
+        Some(o)
+    }
+}
+
+/// Canonical task-attempt key, identical to the faultline decision key
+/// (`{job}/{brick}/{r0}..{r1}#{attempt}`): placement-invariant, so the
+/// flight recorder and the fault plan agree on event identity.
+pub fn task_key(
+    job: u64,
+    brick: impl std::fmt::Display,
+    range: (usize, usize),
+    attempt: u32,
+) -> String {
+    format!("{job}/{brick}/{}..{}#{attempt}", range.0, range.1)
+}
+
+/// Job id from a faultline task key (`{job}/{brick}/{r0}..{r1}#{attempt}`).
+pub fn job_of_task_key(key: &str) -> Option<u64> {
+    key.split('/').next()?.parse().ok()
+}
+
+/// Job id from a store path containing a `/job<digits>/` segment
+/// (result bricks live at `/results/job{job}/{brick}.{r0}-{r1}.brick`).
+pub fn job_of_path(path: &str) -> Option<u64> {
+    let i = path.find("/job")?;
+    let rest = path.get(i + 4..)?;
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest.get(..end)?.parse().ok()
+}
+
+/// ASCII timeline for `geps trace`: one line per event ordered by wall
+/// clock, with the critical-path merge (the task attempt that gated
+/// the seal — the latest `merged` event) annotated. Input is the
+/// `?wall=1` trace JSON.
+pub fn render_ascii(trace: &Json) -> String {
+    let job = trace.get("job").and_then(Json::as_u64).unwrap_or(0);
+    let dropped = trace.get("dropped").and_then(Json::as_u64).unwrap_or(0);
+    let events = trace
+        .get("events")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    let mut rows: Vec<(u64, String, String, String, String, String)> = events
+        .iter()
+        .map(|e| {
+            let s = |k: &str| {
+                e.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+            };
+            (
+                e.get("wall_ns").and_then(Json::as_u64).unwrap_or(0),
+                s("phase"),
+                s("kind"),
+                s("key"),
+                s("detail"),
+                s("node"),
+            )
+        })
+        .collect();
+    rows.sort();
+    let t_base = rows.iter().map(|r| r.0).min().unwrap_or(0);
+    // critical path: the merged event with the largest wall reading
+    let critical = rows
+        .iter()
+        .filter(|r| r.2 == "merged")
+        .max_by_key(|r| r.0)
+        .cloned();
+    let mut out = format!(
+        "job {job} — {} events ({dropped} dropped)\n",
+        rows.len()
+    );
+    for (wall, phase, kind, key, detail, node) in &rows {
+        let ms = (*wall - t_base) as f64 / 1e6;
+        let mark = match &critical {
+            Some(c) if kind == "merged" && key == &c.3 && *wall == c.0 => {
+                "  <- critical"
+            }
+            _ => "",
+        };
+        let mut line = format!("  {ms:>10.3} ms  {phase:<5} {kind:<12}");
+        if !key.is_empty() {
+            line.push_str(&format!(" {key}"));
+        }
+        if !detail.is_empty() {
+            line.push_str(&format!("  [{detail}]"));
+        }
+        if !node.is_empty() {
+            line.push_str(&format!("  @{node}"));
+        }
+        line.push_str(mark);
+        line.push('\n');
+        out.push_str(&line);
+    }
+    match critical {
+        Some((wall, _, _, key, _, node)) => {
+            let ms = (wall - t_base) as f64 / 1e6;
+            out.push_str(&format!(
+                "critical path: attempt {key}{} gated the merge at \
+                 {ms:.3} ms\n",
+                if node.is_empty() {
+                    String::new()
+                } else {
+                    format!(" on {node}")
+                },
+            ));
+        }
+        None => out.push_str("critical path: no merged attempts (cached \
+                              or failed before execution)\n"),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_table_is_sorted_by_phase_rank() {
+        let orders: Vec<(u8, u8)> =
+            KINDS.iter().map(|&(_, p, r)| (p, r)).collect();
+        let mut sorted = orders.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(orders, sorted, "KINDS must be sorted and unique");
+        assert!(KINDS
+            .iter()
+            .all(|&(_, p, _)| (p as usize) < PHASES.len()));
+    }
+
+    #[test]
+    fn canonical_trace_ignores_record_order_and_wall() {
+        // two recorders see the same events in different interleavings
+        // with different wall clocks — canonical renders must be
+        // byte-identical
+        let a = Recorder::new();
+        a.record(1, "enqueued", "1", "");
+        a.record_on(1, "dispatched", "1/b0/0..10#1", "", "node0");
+        a.record_on(1, "merged", "1/b0/0..10#1", "", "node0");
+        a.record(1, "sealed", "1", "done");
+        let b = Recorder::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        b.record(1, "sealed", "1", "done");
+        b.record_on(1, "merged", "1/b0/0..10#1", "", "node2");
+        b.record(1, "enqueued", "1", "");
+        b.record_on(1, "dispatched", "1/b0/0..10#1", "", "node2");
+        let ta = a.trace_json(1, false).unwrap().to_string();
+        let tb = b.trace_json(1, false).unwrap().to_string();
+        assert_eq!(ta, tb);
+        assert!(ta.contains("\"kind\":\"enqueued\""));
+        // t follows canonical order: enqueued before dispatched
+        let ja = Json::parse(&ta).unwrap();
+        let ev = ja.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev[0].get("kind").unwrap().as_str(), Some("enqueued"));
+        assert_eq!(
+            ev.last().unwrap().get("kind").unwrap().as_str(),
+            Some("sealed")
+        );
+    }
+
+    #[test]
+    fn wall_render_carries_node_and_wall() {
+        let r = Recorder::new();
+        r.record_on(7, "dispatched", "7/b0/0..10#1", "", "node1");
+        let j = r.trace_json(7, true).unwrap();
+        let ev = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev[0].get("node").unwrap().as_str(), Some("node1"));
+        assert!(ev[0].get("wall_ns").is_some());
+        // canonical render excludes them
+        let c = r.trace_json(7, false).unwrap();
+        let ev = c.get("events").unwrap().as_arr().unwrap();
+        assert!(ev[0].get("node").is_none());
+        assert!(ev[0].get("wall_ns").is_none());
+    }
+
+    #[test]
+    fn cap_drops_and_counts() {
+        let r = Recorder::new();
+        for _ in 0..(JOB_EVENT_CAP + 5) {
+            r.record(1, "fault", "1/b/0..1#1", "stall");
+        }
+        let j = r.trace_json(1, false).unwrap();
+        assert_eq!(j.get("dropped").unwrap().as_u64(), Some(5));
+        assert_eq!(
+            j.get("events").unwrap().as_arr().unwrap().len(),
+            JOB_EVENT_CAP
+        );
+    }
+
+    #[test]
+    fn summary_durations_are_consistent() {
+        let r = Recorder::new();
+        r.record(3, "enqueued", "3", "");
+        r.record(3, "admitted", "3", "");
+        r.record(3, "planned", "3", "policy=locality");
+        r.record_on(3, "merged", "3/b0/0..10#1", "", "node0");
+        r.record(3, "sealed", "3", "done");
+        let s = r.summary_json(3).unwrap();
+        assert_eq!(s.get("status").unwrap().as_str(), Some("done"));
+        let total = s.get("total_ns").unwrap().as_u64().unwrap();
+        let parts = ["queue_wait_ns", "plan_ns", "execute_ns", "merge_ns"]
+            .iter()
+            .map(|k| s.get(k).unwrap().as_u64().unwrap())
+            .sum::<u64>();
+        assert_eq!(parts, total);
+        assert!(r.summary_json(99).is_none());
+    }
+
+    #[test]
+    fn job_attribution_parsers() {
+        assert_eq!(job_of_task_key("12/brick_0003/0..100#2"), Some(12));
+        assert_eq!(job_of_task_key("node/node1"), None);
+        assert_eq!(
+            job_of_path("/results/job7/brick_0001.0-100.brick"),
+            Some(7)
+        );
+        assert_eq!(job_of_path("/bricks/brick_0001.brick"), None);
+    }
+
+    #[test]
+    fn ascii_render_marks_critical_path() {
+        let r = Recorder::new();
+        r.record(2, "enqueued", "2", "");
+        r.record(2, "planned", "2", "policy=locality");
+        r.record_on(2, "dispatched", "2/b0/0..10#1", "", "node0");
+        r.record_on(2, "merged", "2/b0/0..10#1", "", "node0");
+        r.record_on(2, "dispatched", "2/b1/0..10#1", "", "node1");
+        r.record_on(2, "merged", "2/b1/0..10#1", "", "node1");
+        r.record(2, "sealed", "2", "done");
+        let j = r.trace_json(2, true).unwrap();
+        let text = render_ascii(&j);
+        assert!(text.contains("critical path: attempt 2/b"), "{text}");
+        assert!(text.contains("<- critical"), "{text}");
+        assert!(text.starts_with("job 2 — 7 events"), "{text}");
+    }
+}

@@ -1,0 +1,564 @@
+//! Prometheus text exposition for the metrics registry.
+//!
+//! `render` turns a [`Registry`] snapshot into the text exposition
+//! format: `# TYPE` lines, plain counters/gauges, and cumulative
+//! `_bucket`/`_sum`/`_count` series derived from the log2 histograms.
+//! Wildcard metric families from `metrics::names::REGISTERED` (for
+//! example `node.pipeline.<i>.task_busy_ns`) are label-ified into one
+//! metric with a label per family ([`PROM_FAMILIES`]); gepslint's
+//! `prom-family-registry` pass keeps that table 1:1 with the wildcard
+//! entries of the registered catalogue.
+//!
+//! Output is deterministic: families render in sorted name order,
+//! labeled series in sorted label order, histogram buckets in
+//! ascending `le` order. `check_exposition` is the tiny in-repo
+//! checker CI and the tests parse renders with.
+
+use crate::metrics::{Histogram, Registry};
+use std::collections::BTreeMap;
+
+/// Label names for the wildcard families in
+/// `metrics::names::REGISTERED`: `(pattern, label)`. Must map 1:1 onto
+/// the `*` entries of `REGISTERED` (enforced by gepslint's
+/// `prom-family-registry` pass), so the catalogue stays authoritative
+/// for scrapers.
+pub const PROM_FAMILIES: &[(&str, &str)] = &[
+    ("faultline.injected.*", "domain"),
+    ("jse.jobs_policy.*", "policy"),
+    ("node.pipeline.*.task_busy_ns", "pipeline"),
+];
+
+/// Mangle a dotted registry name into a Prometheus metric name.
+fn mangle(name: &str) -> String {
+    format!("geps_{}", name.replace(['.', '-'], "_"))
+}
+
+/// The family base name for a wildcard pattern: the `*` segment is
+/// dropped (`node.pipeline.*.task_busy_ns` → `node.pipeline.task_busy_ns`).
+fn family_base(pattern: &str) -> String {
+    pattern.replace(".*.", ".").trim_end_matches(".*").to_string()
+}
+
+/// Match `name` against the wildcard families; on a hit, return the
+/// mangled family metric name, the label key, and the label value
+/// (the text the `*` matched).
+fn family_for(name: &str) -> Option<(String, &'static str, String)> {
+    for &(pattern, label) in PROM_FAMILIES {
+        let Some((pre, suf)) = pattern.split_once('*') else {
+            continue;
+        };
+        if let Some(mid) =
+            name.strip_prefix(pre).and_then(|m| m.strip_suffix(suf))
+        {
+            if !mid.is_empty() {
+                return Some((mangle(&family_base(pattern)), label, mid.to_string()));
+            }
+        }
+    }
+    None
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One rendered family: its TYPE plus sample lines (kept in emission
+/// order — bucket order matters for histograms).
+struct Family {
+    ty: &'static str,
+    lines: Vec<String>,
+}
+
+fn scalar(
+    out: &mut BTreeMap<String, Family>,
+    name: &str,
+    value: u64,
+    ty: &'static str,
+) {
+    match family_for(name) {
+        Some((fname, label, lv)) => {
+            let line =
+                format!("{fname}{{{label}=\"{}\"}} {value}", escape_label(&lv));
+            out.entry(fname).or_insert_with(|| Family { ty, lines: Vec::new() })
+                .lines
+                .push(line);
+        }
+        None => {
+            let fname = mangle(name);
+            out.entry(fname.clone())
+                .or_insert_with(|| Family { ty, lines: Vec::new() })
+                .lines
+                .push(format!("{fname} {value}"));
+        }
+    }
+}
+
+fn histogram(
+    out: &mut BTreeMap<String, Family>,
+    name: &str,
+    buckets: &[u64; 64],
+    sum: u64,
+    count: u64,
+) {
+    let (fname, labels) = match family_for(name) {
+        Some((fname, label, lv)) => {
+            (fname, format!("{label}=\"{}\",", escape_label(&lv)))
+        }
+        None => (mangle(name), String::new()),
+    };
+    let fam = out
+        .entry(fname.clone())
+        .or_insert_with(|| Family { ty: "histogram", lines: Vec::new() });
+    // cumulative buckets up to the highest non-empty one, then +Inf —
+    // 64 log2 buckets would mostly be zeros, and +Inf always carries
+    // the full count
+    let top = buckets
+        .iter()
+        .rposition(|&c| c > 0)
+        .map(|i| i.min(62))
+        .unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, c) in buckets.iter().enumerate().take(top + 1) {
+        cum += c;
+        fam.lines.push(format!(
+            "{fname}_bucket{{{labels}le=\"{}\"}} {cum}",
+            Histogram::bucket_upper_bound(i)
+        ));
+    }
+    fam.lines
+        .push(format!("{fname}_bucket{{{labels}le=\"+Inf\"}} {count}"));
+    let bare = labels.trim_end_matches(',');
+    let wrap = |suffix: &str, v: u64| {
+        if bare.is_empty() {
+            format!("{fname}_{suffix} {v}")
+        } else {
+            format!("{fname}_{suffix}{{{bare}}} {v}")
+        }
+    };
+    fam.lines.push(wrap("sum", sum));
+    fam.lines.push(wrap("count", count));
+}
+
+/// Render the registry in the Prometheus text exposition format.
+/// Deterministic: repeat renders of an unchanged registry are
+/// byte-identical.
+pub fn render(reg: &Registry) -> String {
+    let mut fams: BTreeMap<String, Family> = BTreeMap::new();
+    for (name, v) in reg.counters_snapshot() {
+        scalar(&mut fams, &name, v, "counter");
+    }
+    for (name, v) in reg.gauges_snapshot() {
+        scalar(&mut fams, &name, v, "gauge");
+    }
+    for (name, buckets, sum, count) in reg.histograms_snapshot() {
+        histogram(&mut fams, &name, &buckets, sum, count);
+    }
+    let mut out = String::new();
+    for (fname, fam) in &fams {
+        out.push_str(&format!("# TYPE {fname} {}\n", fam.ty));
+        // labeled scalar series render sorted; histogram bucket order
+        // is already canonical (ascending le, then sum/count)
+        let mut lines = fam.lines.clone();
+        if fam.ty != "histogram" {
+            lines.sort();
+        }
+        for l in &lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Tiny exposition-format checker: validates `# TYPE` lines, metric
+/// and label syntax, sorted family order, that every sample belongs to
+/// a declared family, and that histogram buckets are cumulative
+/// (monotonically non-decreasing), end in `+Inf`, and agree with
+/// `_count`. Returns the first problem found.
+pub fn check_exposition(text: &str) -> Result<(), String> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut last_type_name = String::new();
+    // histogram series state: (base, labels-sans-le) ->
+    // (last_le, last_cum, inf, count)
+    #[derive(Default)]
+    struct HistSeries {
+        last_le: Option<f64>,
+        last_cum: Option<u64>,
+        inf: Option<u64>,
+        count: Option<u64>,
+    }
+    let mut hists: BTreeMap<(String, String), HistSeries> = BTreeMap::new();
+
+    let valid_name = |n: &str| {
+        !n.is_empty()
+            && n.chars().next().is_some_and(|c| {
+                c.is_ascii_alphabetic() || c == '_' || c == ':'
+            })
+            && n.chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    };
+
+    for (ln, line) in text.lines().enumerate() {
+        let err = |msg: String| Err(format!("line {}: {msg}", ln + 1));
+        if line.is_empty() {
+            return err("empty line".into());
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, ty) = match (it.next(), it.next(), it.next()) {
+                (Some(n), Some(t), None) => (n, t),
+                _ => return err(format!("malformed TYPE line: {line}")),
+            };
+            if !valid_name(name) {
+                return err(format!("bad metric name `{name}`"));
+            }
+            if !["counter", "gauge", "histogram"].contains(&ty) {
+                return err(format!("unknown type `{ty}`"));
+            }
+            if types.contains_key(name) {
+                return err(format!("duplicate TYPE for `{name}`"));
+            }
+            if name <= last_type_name.as_str() && !last_type_name.is_empty() {
+                return err(format!(
+                    "families out of sorted order: `{name}` after \
+                     `{last_type_name}`"
+                ));
+            }
+            last_type_name = name.to_string();
+            types.insert(name.to_string(), ty.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // comments / HELP
+        }
+        // sample: name[{labels}] value
+        let (name_labels, value) = match line.rsplit_once(' ') {
+            Some(x) => x,
+            None => return err(format!("malformed sample: {line}")),
+        };
+        if value.parse::<f64>().is_err()
+            && !["+Inf", "-Inf", "NaN"].contains(&value)
+        {
+            return err(format!("bad sample value `{value}`"));
+        }
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, rest)) => match rest.strip_suffix('}') {
+                Some(l) => (n, Some(l)),
+                None => return err(format!("unterminated labels: {line}")),
+            },
+            None => (name_labels, None),
+        };
+        if !valid_name(name) {
+            return err(format!("bad metric name `{name}`"));
+        }
+        let parsed = match labels {
+            Some(l) => match parse_labels(l) {
+                Ok(p) => p,
+                Err(e) => return err(format!("{e}: {line}")),
+            },
+            None => Vec::new(),
+        };
+        // resolve the declared family: histogram suffixes fold into
+        // their base name
+        let base = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|s| {
+                name.strip_suffix(s).filter(|b| {
+                    types.get(*b).is_some_and(|t| t == "histogram")
+                })
+            })
+            .unwrap_or(name);
+        let ty = match types.get(base) {
+            Some(t) => t.clone(),
+            None => {
+                return err(format!("sample `{name}` has no TYPE declared"))
+            }
+        };
+        if ty == "histogram" {
+            if base == name {
+                return err(format!(
+                    "histogram `{name}` must use _bucket/_sum/_count"
+                ));
+            }
+            let series_labels: Vec<String> = parsed
+                .iter()
+                .filter(|(k, _)| k != "le")
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            let key = (base.to_string(), series_labels.join(","));
+            let s = hists.entry(key).or_default();
+            if name.ends_with("_bucket") {
+                let le = match parsed.iter().find(|(k, _)| k == "le") {
+                    Some((_, v)) if v == "+Inf" => f64::INFINITY,
+                    Some((_, v)) => match v.parse::<f64>() {
+                        Ok(f) => f,
+                        Err(_) => {
+                            return err(format!("bad le `{v}`"));
+                        }
+                    },
+                    None => {
+                        return err(format!(
+                            "bucket sample without le label: {line}"
+                        ))
+                    }
+                };
+                let cum = value.parse::<u64>().map_err(|_| {
+                    format!("line {}: non-integer bucket count", ln + 1)
+                })?;
+                if let Some(prev) = s.last_le {
+                    if le <= prev {
+                        return err(format!(
+                            "le not increasing ({prev} -> {le})"
+                        ));
+                    }
+                }
+                if let Some(prev) = s.last_cum {
+                    if cum < prev {
+                        return err(format!(
+                            "bucket counts not cumulative \
+                             ({prev} -> {cum})"
+                        ));
+                    }
+                }
+                s.last_le = Some(le);
+                s.last_cum = Some(cum);
+                if le.is_infinite() {
+                    s.inf = Some(cum);
+                }
+            } else if name.ends_with("_count") {
+                s.count = value.parse::<u64>().ok();
+            }
+        }
+    }
+    for ((base, labels), s) in &hists {
+        let inf = s
+            .inf
+            .ok_or(format!("histogram `{base}`{{{labels}}} has no +Inf bucket"))?;
+        if let Some(c) = s.count {
+            if c != inf {
+                return Err(format!(
+                    "histogram `{base}`{{{labels}}}: +Inf bucket {inf} != \
+                     _count {c}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse a label body `k="v",k2="v2"` honoring `\\`, `\"`, `\n`.
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut chars = body.chars().peekable();
+    loop {
+        let mut key = String::new();
+        for c in chars.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        if key.is_empty() {
+            return Err("empty label name".into());
+        }
+        if chars.next() != Some('"') {
+            return Err(format!("label `{key}` value not quoted"));
+        }
+        let mut val = String::new();
+        loop {
+            match chars.next() {
+                None => return Err("unterminated label value".into()),
+                Some('"') => break,
+                Some('\\') => match chars.next() {
+                    Some('\\') => val.push('\\'),
+                    Some('"') => val.push('"'),
+                    Some('n') => val.push('\n'),
+                    _ => return Err("bad label escape".into()),
+                },
+                Some(c) => val.push(c),
+            }
+        }
+        out.push((key, val));
+        match chars.next() {
+            None => return Ok(out),
+            Some(',') => continue,
+            Some(c) => return Err(format!("unexpected `{c}` after label")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::names::REGISTERED;
+
+    fn sample_registry() -> Registry {
+        let r = Registry::new();
+        r.counter("jse.jobs_done").add(3);
+        r.counter("jse.jobs_policy.locality").add(2);
+        r.counter("jse.jobs_policy.central").inc();
+        r.counter("node.pipeline.0.task_busy_ns").add(500);
+        r.counter("node.pipeline.1.task_busy_ns").add(700);
+        r.counter("faultline.injected.stall").add(4);
+        r.gauge("jse.jobs_in_flight").set(1);
+        for v in [1u64, 3, 900, 70_000, u64::MAX] {
+            r.histogram("jse.job_wall_ns").record(v);
+        }
+        r
+    }
+
+    #[test]
+    fn render_parses_clean_and_is_repeatable() {
+        let r = sample_registry();
+        let text = render(&r);
+        check_exposition(&text).expect(&text);
+        assert_eq!(text, render(&r), "repeat renders must be identical");
+    }
+
+    #[test]
+    fn type_lines_and_sorted_families() {
+        let text = render(&sample_registry());
+        assert!(text.contains("# TYPE geps_jse_jobs_done counter"));
+        assert!(text.contains("# TYPE geps_jse_jobs_in_flight gauge"));
+        assert!(text.contains("# TYPE geps_jse_job_wall_ns histogram"));
+        let fams: Vec<&str> = text
+            .lines()
+            .filter_map(|l| l.strip_prefix("# TYPE "))
+            .filter_map(|l| l.split_whitespace().next())
+            .collect();
+        let mut sorted = fams.clone();
+        sorted.sort();
+        assert_eq!(fams, sorted, "families must render sorted: {text}");
+    }
+
+    #[test]
+    fn wildcard_families_become_labels() {
+        let text = render(&sample_registry());
+        assert!(
+            text.contains("geps_node_pipeline_task_busy_ns{pipeline=\"0\"} 500"),
+            "{text}"
+        );
+        assert!(
+            text.contains("geps_node_pipeline_task_busy_ns{pipeline=\"1\"} 700"),
+            "{text}"
+        );
+        assert!(
+            text.contains("geps_jse_jobs_policy{policy=\"central\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("geps_faultline_injected{domain=\"stall\"} 4"),
+            "{text}"
+        );
+        // the raw per-series names must NOT leak through
+        assert!(!text.contains("pipeline_0"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_in_inf() {
+        let text = render(&sample_registry());
+        let buckets: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("geps_jse_job_wall_ns_bucket"))
+            .collect();
+        assert!(buckets.len() >= 2);
+        assert!(buckets.last().unwrap().contains("le=\"+Inf\"} 5"));
+        let counts: Vec<u64> = buckets
+            .iter()
+            .filter_map(|l| l.rsplit_once(' '))
+            .map(|(_, v)| v.parse().unwrap())
+            .collect();
+        assert!(
+            counts.windows(2).all(|w| w[0] <= w[1]),
+            "buckets must be monotonically non-decreasing: {buckets:?}"
+        );
+        assert!(text.contains("geps_jse_job_wall_ns_count 5"));
+        assert!(text.contains("geps_jse_job_wall_ns_sum"));
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        assert_eq!(escape_label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        let r = Registry::new();
+        r.counter("jse.jobs_policy.we\"ird\\p\nolicy").inc();
+        let text = render(&r);
+        check_exposition(&text).expect(&text);
+        let labels = parse_labels("policy=\"we\\\"ird\\\\p\\nolicy\"").unwrap();
+        assert_eq!(labels[0].1, "we\"ird\\p\nolicy");
+    }
+
+    #[test]
+    fn checker_rejects_malformed_input() {
+        // sample without TYPE
+        assert!(check_exposition("geps_x 1").is_err());
+        // unsorted families
+        assert!(check_exposition(
+            "# TYPE geps_b counter\ngeps_b 1\n# TYPE geps_a counter\ngeps_a 1"
+        )
+        .is_err());
+        // non-cumulative buckets
+        assert!(check_exposition(
+            "# TYPE geps_h histogram\n\
+             geps_h_bucket{le=\"1\"} 5\n\
+             geps_h_bucket{le=\"3\"} 2\n\
+             geps_h_bucket{le=\"+Inf\"} 5\n\
+             geps_h_sum 9\ngeps_h_count 5"
+        )
+        .is_err());
+        // +Inf disagrees with _count
+        assert!(check_exposition(
+            "# TYPE geps_h histogram\n\
+             geps_h_bucket{le=\"+Inf\"} 5\n\
+             geps_h_sum 9\ngeps_h_count 4"
+        )
+        .is_err());
+        // missing +Inf
+        assert!(check_exposition(
+            "# TYPE geps_h histogram\ngeps_h_bucket{le=\"1\"} 1"
+        )
+        .is_err());
+        // bad metric name
+        assert!(check_exposition("# TYPE 1bad counter\n1bad 1").is_err());
+        // le must increase
+        assert!(check_exposition(
+            "# TYPE geps_h histogram\n\
+             geps_h_bucket{le=\"3\"} 1\n\
+             geps_h_bucket{le=\"1\"} 1\n\
+             geps_h_bucket{le=\"+Inf\"} 1"
+        )
+        .is_err());
+        // well-formed passes
+        assert!(check_exposition(
+            "# TYPE geps_h histogram\n\
+             geps_h_bucket{le=\"1\"} 1\n\
+             geps_h_bucket{le=\"+Inf\"} 2\n\
+             geps_h_sum 9\ngeps_h_count 2"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn prom_families_match_registered_wildcards() {
+        // the lint enforces this over source text; assert it at runtime
+        // too so a unit-test run catches drift without gepslint
+        let wildcards: Vec<&str> = REGISTERED
+            .iter()
+            .copied()
+            .filter(|n| n.contains('*'))
+            .collect();
+        let patterns: Vec<&str> =
+            PROM_FAMILIES.iter().map(|&(p, _)| p).collect();
+        assert_eq!(wildcards, patterns);
+    }
+}

@@ -54,14 +54,15 @@ const INDEX_HTML: &str = r#"<!doctype html>
 <ul>
   <li>POST /submit {"filter": "max_pair_mass > 80 && max_pt > 20", "policy": "locality"}</li>
   <li>GET /jobs &mdash; all jobs (live status; several run concurrently)</li>
-  <li>GET /jobs/&lt;id&gt; &mdash; job status details</li>
+  <li>GET /jobs/&lt;id&gt; &mdash; job status details (incl. flight-recorder timing summary)</li>
+  <li>GET /jobs/&lt;id&gt;/trace &mdash; flight-recorder span journal (deterministic; add ?wall=1 for wall clocks + node placement; <code>geps trace &lt;id&gt;</code> renders it as an ASCII timeline with the critical path marked)</li>
   <li>POST /cancel/&lt;id&gt; &mdash; cancel a queued or running job</li>
   <li>GET /nodes?filter=(&amp;(cpus&gt;=1)(status=up)) &mdash; GRIS node information</li>
   <li>POST /nodes/add {"name": "node3", "speed": 1.0, "slots": 1} &mdash; join a node mid-run</li>
   <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
   <li>GET /cache &mdash; qcache statistics (entries, bytes, hit/share counters)</li>
   <li>POST /cache/flush &mdash; drop all cached query results</li>
-  <li>GET /metrics &mdash; coordinator metrics</li>
+  <li>GET /metrics &mdash; coordinator metrics (add ?format=prometheus for the Prometheus text exposition: counters, gauges, cumulative histogram buckets, wildcard families label-ified)</li>
 </ul>
 <p><b>Query-result cache (qcache):</b> submissions are canonicalized
 (constant folding, commutative operand ordering, double-negation
@@ -140,6 +141,31 @@ under a fresh name.</p>
 <code>n_tracks &gt;= 4 || met &gt; 30</code></p>
 </body></html>"#;
 
+/// The index page with the live metric catalogue appended: every name
+/// in [`crate::metrics::names::REGISTERED`], with wildcard families
+/// annotated by the Prometheus label they map onto
+/// ([`crate::obs::prom::PROM_FAMILIES`]).
+fn index_html() -> String {
+    let mut cat = String::from(
+        "<h2>Metric catalogue</h2>\n<p>Every metric name the tree may \
+         emit (the gepslint-checked registry). Wildcard families are \
+         label-ified on <code>GET /metrics?format=prometheus</code>.</p>\n\
+         <ul>\n",
+    );
+    for name in crate::metrics::names::REGISTERED {
+        let label = crate::obs::prom::PROM_FAMILIES
+            .iter()
+            .find(|(p, _)| p == name)
+            .map(|(_, l)| {
+                format!(" &mdash; Prometheus label <code>{l}</code>")
+            })
+            .unwrap_or_default();
+        cat.push_str(&format!("  <li><code>{name}</code>{label}</li>\n"));
+    }
+    cat.push_str("</ul>\n</body></html>");
+    INDEX_HTML.replace("</body></html>", &cat)
+}
+
 fn job_json(cat: &crate::catalog::Catalog, id: u64) -> Option<Json> {
     let j = cat.jobs.get(id)?;
     let results = cat.job_results(id);
@@ -203,7 +229,7 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
         None => (req.path.as_str(), None),
     };
     match (req.method.as_str(), path) {
-        ("GET", "/") => Response::html(200, INDEX_HTML),
+        ("GET", "/") => Response::html(200, index_html()),
         ("POST", "/submit") => {
             let body = match std::str::from_utf8(&req.body)
                 .map_err(|e| e.to_string())
@@ -244,6 +270,35 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                 .collect();
             Response::json(200, Json::Arr(list))
         }
+        ("GET", p)
+            if p.starts_with("/jobs/") && p.ends_with("/trace") =>
+        {
+            let id: u64 = match p
+                .strip_prefix("/jobs/")
+                .and_then(|s| s.strip_suffix("/trace"))
+                .and_then(|s| s.parse().ok())
+            {
+                Some(v) => v,
+                None => {
+                    return Response::json(
+                        400,
+                        Json::obj().set("error", "bad job id"),
+                    )
+                }
+            };
+            // ?wall=1 adds wall-clock + node placement side fields;
+            // the default body is the deterministic canonical trace
+            let wall = query
+                .map(|q| q.split('&').any(|kv| kv == "wall=1"))
+                .unwrap_or(false);
+            match cluster.recorder().trace_json(id, wall) {
+                Some(t) => Response::json(200, t),
+                None => Response::json(
+                    404,
+                    Json::obj().set("error", "no trace for that job"),
+                ),
+            }
+        }
         ("GET", p) if p.starts_with("/jobs/") => {
             let id: u64 = match p
                 .strip_prefix("/jobs/")
@@ -257,9 +312,20 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                     )
                 }
             };
-            let cat = lock(&cluster.catalog);
-            match job_json(&cat, id) {
-                Some(j) => Response::json(200, j),
+            let row = {
+                let cat = lock(&cluster.catalog);
+                job_json(&cat, id)
+            };
+            match row {
+                Some(j) => {
+                    // flight-recorder timing summary (wall-clock side
+                    // fields: queue wait, plan, execute, merge)
+                    let j = match cluster.recorder().summary_json(id) {
+                        Some(s) => j.set("timing", s),
+                        None => j,
+                    };
+                    Response::json(200, j)
+                }
                 None => Response::json(
                     404,
                     Json::obj().set("error", "no such job"),
@@ -453,7 +519,17 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
             Response::json(200, Json::obj().set("flushed", n))
         }
         ("GET", "/metrics") => {
-            Response::text(200, cluster.metrics.render())
+            let prometheus = query
+                .map(|q| q.split('&').any(|kv| kv == "format=prometheus"))
+                .unwrap_or(false);
+            if prometheus {
+                Response::text(
+                    200,
+                    crate::obs::prom::render(&cluster.metrics),
+                )
+            } else {
+                Response::text(200, cluster.metrics.render())
+            }
         }
         ("GET", _) => Response::json(404, Json::obj().set("error", "not found")),
         _ => Response::json(405, Json::obj().set("error", "method not allowed")),

@@ -310,6 +310,9 @@ pub struct QCache {
     inner: Mutex<Inner>,
     cfg: QCacheConfig,
     metrics: OnceLock<Arc<Registry>>,
+    /// flight recorder ([`crate::obs`]): scan-sharing attachments are
+    /// journalled under the subscribing job's id
+    recorder: OnceLock<Arc<crate::obs::Recorder>>,
 }
 
 impl Default for QCache {
@@ -335,12 +338,19 @@ impl QCache {
             }),
             cfg,
             metrics: OnceLock::new(),
+            recorder: OnceLock::new(),
         }
     }
 
     /// Attach a metrics registry; counters/gauge mirror every mutation.
     pub fn set_metrics(&self, metrics: Arc<Registry>) {
         let _ = self.metrics.set(metrics);
+    }
+
+    /// Attach the flight recorder: scan-sharing subscriptions become
+    /// per-job `qcache_subscribed` trace events.
+    pub fn set_recorder(&self, recorder: Arc<crate::obs::Recorder>) {
+        let _ = self.recorder.set(recorder);
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
@@ -429,6 +439,14 @@ impl QCache {
         drop(guard);
         if newly_shared {
             self.bump("qcache.shared_jobs", 1);
+            if let Some(o) = self.recorder.get() {
+                o.record(
+                    job,
+                    "qcache_subscribed",
+                    job.to_string(),
+                    "riding an identical in-flight job",
+                );
+            }
         }
         out
     }

@@ -313,6 +313,74 @@ fn same_seed_reproduces_the_trace_and_the_verdicts() {
     assert_eq!(verdicts_a, verdicts_b);
 }
 
+/// The catalogue can flip `Done` an instant before the broker records
+/// the `sealed` span; poll the tiny window out.
+fn sealed_trace(cluster: &ClusterHandle, job: u64) -> String {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Some(t) = cluster.recorder().trace_json(job, false) {
+            let s = t.to_string();
+            if s.contains("sealed") {
+                return s;
+            }
+        }
+        assert!(Instant::now() < deadline, "trace never sealed");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn same_seed_chaos_reproduces_the_flight_recorder_trace() {
+    if !runtime_available() {
+        return;
+    }
+    // Same stall+slow scenario as above: every task runs exactly one
+    // attempt, so the flight recorder sees an identical set of spans.
+    // The default render (no wall-clock, no node column) must come out
+    // byte-identical across same-seed runs — that is the trace's whole
+    // contract.
+    let fault = FaultConfig {
+        seed: 77,
+        stall_p: 0.5,
+        stall_s: 1.0,
+        slow_p: 0.5,
+        slow_factor: 2.0,
+        speculate: false,
+        ..FaultConfig::default()
+    };
+    let run = || {
+        let cluster = ClusterHandle::start(
+            chaos_config(fault.clone()),
+            geps::runtime::default_artifacts_dir(),
+        )
+        .unwrap();
+        let mut traces = Vec::new();
+        for f in FILTERS {
+            let job = cluster.submit(f, "locality");
+            assert_eq!(
+                cluster.wait(job, Duration::from_secs(120)).unwrap(),
+                JobStatus::Done
+            );
+            traces.push(sealed_trace(&cluster, job));
+        }
+        cluster.shutdown();
+        traces
+    };
+    let traces_a = run();
+    let traces_b = run();
+    assert_eq!(
+        traces_a, traces_b,
+        "same seed must give byte-identical flight-recorder traces"
+    );
+    for t in &traces_a {
+        for kind in
+            ["enqueued", "admitted", "planned", "dispatched", "executed", "merged", "sealed"]
+        {
+            assert!(t.contains(kind), "trace missing `{kind}` events:\n{t}");
+        }
+    }
+}
+
 #[test]
 fn unsurvivable_crashes_fail_explicitly_not_silently() {
     if !runtime_available() {

@@ -190,6 +190,102 @@ fn error_handling() {
 }
 
 #[test]
+fn observability_endpoints() {
+    if !runtime_available() {
+        return;
+    }
+    let (cluster, addr) = start();
+    let body = Json::obj()
+        .set("filter", "met > 10")
+        .set("policy", "locality")
+        .to_string();
+    let (status, resp) =
+        http::request(&addr, "POST", "/submit", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&resp));
+    let job = Json::parse(std::str::from_utf8(&resp).unwrap())
+        .unwrap()
+        .get("job")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, j) = get_json(&addr, &format!("/jobs/{job}"));
+        assert_eq!(status, 200);
+        let s = j.get("status").unwrap().as_str().unwrap().to_string();
+        assert_ne!(s, "FAILED");
+        if s == "DONE" {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "portal job timeout");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // flight-recorder trace: poll until the `sealed` span lands (the
+    // catalogue can flip DONE an instant before the broker seals)
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let trace = loop {
+        let (status, t) = get_json(&addr, &format!("/jobs/{job}/trace"));
+        assert_eq!(status, 200);
+        let sealed = t.get("events").and_then(|e| e.as_arr()).is_some_and(|evs| {
+            evs.iter().any(|e| {
+                e.get("kind").and_then(|k| k.as_str()) == Some("sealed")
+            })
+        });
+        if sealed {
+            break t;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "trace never sealed: {t}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let events = trace.get("events").unwrap().as_arr().unwrap();
+    for kind in ["enqueued", "admitted", "planned", "dispatched", "executed", "merged"] {
+        assert!(
+            events.iter().any(|e| {
+                e.get("kind").and_then(|k| k.as_str()) == Some(kind)
+            }),
+            "trace missing `{kind}` events: {trace}"
+        );
+    }
+    // the default render is the deterministic surface — no wall clock,
+    // no node column; `?wall=1` opts the diagnostic fields in
+    assert!(events.iter().all(|e| e.get("wall_ns").is_none()), "{trace}");
+    let (status, t) = get_json(&addr, &format!("/jobs/{job}/trace?wall=1"));
+    assert_eq!(status, 200);
+    let evs = t.get("events").unwrap().as_arr().unwrap();
+    assert!(evs.iter().all(|e| e.get("wall_ns").is_some()), "{t}");
+
+    // the job row carries the timing summary once spans exist
+    let (_, j) = get_json(&addr, &format!("/jobs/{job}"));
+    let timing = j.get("timing").expect("job row must carry a timing summary");
+    assert_eq!(timing.get("status").and_then(|s| s.as_str()), Some("done"));
+    assert!(timing.get("total_ns").and_then(|v| v.as_u64()).is_some(), "{timing}");
+    assert!(timing.get("execute_ns").and_then(|v| v.as_u64()).is_some(), "{timing}");
+
+    // Prometheus exposition parses clean under the in-repo checker
+    let (status, body) =
+        http::request(&addr, "GET", "/metrics?format=prometheus", None)
+            .unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    geps::obs::prom::check_exposition(&text)
+        .unwrap_or_else(|e| panic!("exposition rejected: {e}\n{text}"));
+    assert!(text.contains("# TYPE geps_jse_jobs_done counter"), "{text}");
+    assert!(text.contains("geps_jse_job_wall_ns_bucket"), "{text}");
+
+    // no trace for a job that never existed
+    let (status, _) =
+        http::request(&addr, "GET", "/jobs/999/trace", None).unwrap();
+    assert_eq!(status, 404);
+
+    Arc::try_unwrap(cluster).ok().map(|c| c.shutdown());
+}
+
+#[test]
 fn bricks_and_kill_endpoints() {
     if !runtime_available() {
         return;

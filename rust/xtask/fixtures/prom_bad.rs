@@ -1,0 +1,7 @@
+// gepslint fixture — Prometheus family table skewed vs REGISTERED:
+// one family the catalogue never declares, while the catalogue's own
+// `jse.jobs_policy.*` wildcard is left unmapped
+// (linted under the fake path src/obs/prom.rs; never compiled).
+pub const PROM_FAMILIES: &[(&str, &str)] = &[
+    ("node.bogus.*", "shard"),
+];

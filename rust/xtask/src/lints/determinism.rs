@@ -28,6 +28,7 @@ const STRICT_MODULES: &[&str] = &[
     "jse",
     "metrics",
     "netsim",
+    "obs",
     "qcache",
     "scheduler",
     "sim",

@@ -1,9 +1,9 @@
 //! Registry lints: single-source-of-truth cross-checks.
 //!
-//! Three identifier spaces in this repo are protocol surface — wire
-//! message kinds, WAL record tags, and metric names. Each must be
-//! declared in exactly one registry, and every use site must agree
-//! with it:
+//! Four identifier spaces in this repo are protocol surface — wire
+//! message kinds, WAL record tags, metric names, and the Prometheus
+//! family table. Each must be declared in exactly one registry, and
+//! every use site must agree with it:
 //!
 //! - `wire-kind-registry`: `wire::WIRE_KINDS` vs `Message::kind()` vs
 //!   the `decode()` dispatch — a duplicated or skewed kind byte turns
@@ -15,6 +15,11 @@
 //!   `metrics::names::REGISTERED` (wildcard entries like
 //!   `jse.jobs_policy.*` cover formatted families), and every
 //!   registered name must be used — so dashboards can trust the list.
+//! - `prom-family-registry`: `obs::prom::PROM_FAMILIES` must map 1:1
+//!   onto the wildcard entries of `REGISTERED` — a skew means the
+//!   Prometheus renderer either invents label schemes for names the
+//!   catalogue doesn't declare, or silently emits a formatted family
+//!   as an unbounded set of raw mangled names.
 
 use super::{SourceFile, Violation};
 use crate::lexer::{Kind, Tok};
@@ -24,6 +29,7 @@ pub fn check(files: &[SourceFile]) -> Vec<Violation> {
     out.extend(wire(files));
     out.extend(wal(files));
     out.extend(metrics(files));
+    out.extend(prom_families(files));
     out.extend(single_declaration(files));
     out
 }
@@ -39,6 +45,7 @@ fn single_declaration(files: &[SourceFile]) -> Vec<Violation> {
         ("WIRE_KINDS", "wire-kind-registry"),
         ("WAL_TAGS", "wal-tag-registry"),
         ("REGISTERED", "metric-name-registry"),
+        ("PROM_FAMILIES", "prom-family-registry"),
     ] {
         let mut decls: Vec<(String, u32)> = Vec::new();
         for f in files {
@@ -449,6 +456,101 @@ fn metrics(files: &[SourceFile]) -> Vec<Violation> {
                 *line,
                 LINT,
                 format!("registered metric `{pat}` is never emitted"),
+            ));
+        }
+    }
+    out
+}
+
+/// The Prometheus renderer label-ifies wildcard metric families
+/// (`node.pipeline.*.task_busy_ns` → one metric with a `pipeline`
+/// label). Its `PROM_FAMILIES` table must cover exactly the `*`
+/// entries of `metrics::names::REGISTERED`: an extra family invents a
+/// label scheme the catalogue never declares, a missing one makes the
+/// renderer fall back to an unbounded set of raw mangled names.
+/// Skipped when no file in the set declares `PROM_FAMILIES`
+/// (`single_declaration` reports the missing registry on the real
+/// tree).
+fn prom_families(files: &[SourceFile]) -> Vec<Violation> {
+    const LINT: &str = "prom-family-registry";
+    let mut out = Vec::new();
+    let Some(pf) = files.iter().find(|f| registry_body(f, "PROM_FAMILIES").is_some()) else {
+        return out;
+    };
+    let toks = pf.toks();
+    let mut strs: Vec<(String, u32)> = Vec::new();
+    if let Some(mut i) = registry_body(pf, "PROM_FAMILIES") {
+        while i < toks.len() && !toks[i].is_punct("]") {
+            if toks[i].kind == Kind::Str {
+                strs.push((toks[i].text.clone(), toks[i].line));
+            }
+            i += 1;
+        }
+    }
+    if strs.len() % 2 != 0 {
+        out.push(v(
+            &pf.path,
+            strs.last().map(|s| s.1).unwrap_or(0),
+            LINT,
+            "PROM_FAMILIES entry is not a (pattern, label) string pair".into(),
+        ));
+    }
+    // entries are ("pattern", "label") tuples — strings alternate
+    let pats: Vec<(String, u32)> = strs.chunks(2).map(|c| c[0].clone()).collect();
+    for (n, (pat, line)) in pats.iter().enumerate() {
+        if pats[..n].iter().any(|(p, _)| p == pat) {
+            out.push(v(&pf.path, *line, LINT, format!("duplicate Prometheus family `{pat}`")));
+        }
+        if !pat.contains('*') {
+            out.push(v(
+                &pf.path,
+                *line,
+                LINT,
+                format!(
+                    "Prometheus family `{pat}` has no `*` segment — only \
+                     wildcard families need label-ification"
+                ),
+            ));
+        }
+    }
+
+    let Some(mf) = files.iter().find(|f| f.path == "src/metrics/mod.rs") else {
+        return out;
+    };
+    let mtoks = mf.toks();
+    let mut wild: Vec<(String, u32)> = Vec::new();
+    if let Some(mut i) = registry_body(mf, "REGISTERED") {
+        while i < mtoks.len() && !mtoks[i].is_punct("]") {
+            if mtoks[i].kind == Kind::Str && mtoks[i].text.contains('*') {
+                wild.push((mtoks[i].text.clone(), mtoks[i].line));
+            }
+            i += 1;
+        }
+    }
+    for (pat, line) in &pats {
+        if pat.contains('*') && !wild.iter().any(|(w, _)| w == pat) {
+            out.push(v(
+                &pf.path,
+                *line,
+                LINT,
+                format!(
+                    "Prometheus family `{pat}` is not a wildcard entry of \
+                     metrics::names::REGISTERED"
+                ),
+            ));
+        }
+    }
+    for (w, line) in &wild {
+        if !pats.iter().any(|(p, _)| p == w) {
+            out.push(v(
+                &mf.path,
+                *line,
+                LINT,
+                format!(
+                    "wildcard metric `{w}` has no label mapping in \
+                     PROM_FAMILIES — the Prometheus renderer would emit it \
+                     as an unbounded set of raw names"
+                ),
             ));
         }
     }

@@ -102,6 +102,21 @@ fn metrics_registry_fixture() {
 }
 
 #[test]
+fn prom_family_fixture() {
+    let files = [
+        file("src/metrics/mod.rs", include_str!("../fixtures/metrics_decl.rs")),
+        file("src/obs/prom.rs", include_str!("../fixtures/prom_bad.rs")),
+    ];
+    let vs = lints::registry::check(&files);
+    let ps: Vec<_> = vs.iter().filter(|v| v.lint == "prom-family-registry").collect();
+    // `node.bogus.*` absent from REGISTERED + `jse.jobs_policy.*` has
+    // no label mapping
+    assert_eq!(ps.len(), 2, "got: {ps:?}");
+    assert!(ps.iter().any(|v| v.msg.contains("node.bogus.*")));
+    assert!(ps.iter().any(|v| v.msg.contains("jse.jobs_policy.*")));
+}
+
+#[test]
 fn run_all_catches_every_seeded_fixture() {
     let files = [
         file("src/jse/bad.rs", include_str!("../fixtures/bad_panic.rs")),
@@ -112,6 +127,7 @@ fn run_all_catches_every_seeded_fixture() {
         file("src/wire/mod.rs", include_str!("../fixtures/wire_bad.rs")),
         file("src/metrics/mod.rs", include_str!("../fixtures/metrics_decl.rs")),
         file("src/node/bad_metrics.rs", include_str!("../fixtures/metrics_use.rs")),
+        file("src/obs/prom.rs", include_str!("../fixtures/prom_bad.rs")),
     ];
     let vs = lints::run_all(&files);
     for lint in [
@@ -123,6 +139,7 @@ fn run_all_catches_every_seeded_fixture() {
         "bare-lock-unwrap",
         "wire-kind-registry",
         "metric-name-registry",
+        "prom-family-registry",
         "allow-missing-justification",
     ] {
         assert!(count(&vs, lint) > 0, "lint `{lint}` caught nothing: {vs:?}");
