@@ -14,7 +14,12 @@
 //! - `live_churn_mixed` — kill + join churn during mixed query
 //!   traffic on the live cluster;
 //! - `live_zipf_qcache` — zipfian filter popularity against the
-//!   enabled query cache (cache-hot head, cold tail).
+//!   enabled query cache (cache-hot head, cold tail);
+//! - `live_doctor_quarantine` — a mid-traffic node kill scored through
+//!   the telemetry loop: the health engine must report the dead node
+//!   unhealthy on `/health`, its strikes must trip the quarantine
+//!   ledger, and the federated scrape's node-labeled counters must sum
+//!   exactly to the cluster roll-up.
 //!
 //! Every cell records the same verdict shape: `ok` (terminal states
 //! and invariants held), `bit_identical` (results byte-equal to the
@@ -389,6 +394,118 @@ fn live_churn_mixed(n_events: usize, baseline: &[Vec<u32>]) -> Cell {
     }
 }
 
+/// Check the federation invariant over one `/metrics` scrape: for every
+/// `geps_node_*` counter family (and histogram `_count`), the
+/// node-labeled samples must sum exactly to the unlabeled cluster
+/// roll-up — both sides render from the same snapshot set, so any
+/// drift is a merge bug, not a race. Gauges fold by max and are
+/// skipped. Returns false if no node-labeled series showed up at all.
+fn federation_sums_hold(text: &str) -> bool {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for l in text.lines() {
+        if let Some(rest) = l.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            if let (Some(n), Some(t)) = (it.next(), it.next()) {
+                types.insert(n.to_string(), t.to_string());
+            }
+        }
+    }
+    // family -> (roll-up total, node-labeled total, saw a node label)
+    let mut sums: BTreeMap<String, (u64, u64, bool)> = BTreeMap::new();
+    for l in text.lines() {
+        if l.starts_with('#') {
+            continue;
+        }
+        let Some((name_labels, value)) = l.rsplit_once(' ') else {
+            continue;
+        };
+        let Ok(v) = value.parse::<u64>() else {
+            continue;
+        };
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, rest)) => (n, rest.trim_end_matches('}')),
+            None => (name_labels, ""),
+        };
+        let base = name.strip_suffix("_count").unwrap_or(name);
+        let additive = match types.get(base).map(String::as_str) {
+            Some("counter") => base == name,
+            Some("histogram") => name.ends_with("_count"),
+            _ => false,
+        };
+        if !additive || !base.starts_with("geps_node_") {
+            continue;
+        }
+        let e = sums.entry(base.to_string()).or_insert((0, 0, false));
+        if labels.contains("node=\"") {
+            e.1 += v;
+            e.2 = true;
+        } else {
+            e.0 += v;
+        }
+    }
+    sums.values().any(|&(_, _, seen)| seen)
+        && sums.values().all(|&(rollup, labeled, seen)| !seen || rollup == labeled)
+}
+
+/// Kill a node mid-traffic and let the telemetry feedback loop run its
+/// course: the dead heartbeat turns the node's `/health` verdict
+/// unhealthy, every broker telemetry tick converts that verdict into a
+/// quarantine strike, and the strike threshold trips the quarantine
+/// ledger — all visible to `geps doctor` through the same body this
+/// cell polls.
+fn live_doctor_quarantine(n_events: usize, baseline: &[Vec<u32>]) -> Cell {
+    let cluster = ClusterHandle::start(
+        live_config(4, n_events, FaultConfig::default()),
+        geps::runtime::default_artifacts_dir(),
+    )
+    .expect("cluster start");
+    let t0 = Instant::now();
+    let jobs: Vec<(u64, usize)> = vec![
+        (cluster.submit(POOL[0], "locality"), 0),
+        (cluster.submit(POOL[4], "central"), 4),
+    ];
+    std::thread::sleep(Duration::from_millis(50));
+    cluster.kill_node("node3");
+    let (ok, bit_identical) = score_jobs(&cluster, &jobs, baseline);
+    // the verdict and the quarantine trip land on the broker's
+    // telemetry cadence; poll the doctor body until both show up
+    let needle = "\"node\":\"node3\",\"verdict\":\"unhealthy\"";
+    let mut doctored = false;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if cluster.health_json().contains(needle)
+            && cluster.metrics.counter("ft.nodes_quarantined").get() > 0
+        {
+            doctored = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let sums_ok = federation_sums_hold(&cluster.metrics_text());
+    let elapsed = t0.elapsed().as_secs_f64();
+    let (p50, p99) = wall_quantiles_ms(&cluster);
+    let m = &cluster.metrics;
+    let counters = vec![
+        ("nodes_quarantined", m.counter("ft.nodes_quarantined").get()),
+        ("tasks_failed_over", m.counter("jse.tasks_failed_over").get()),
+        ("doctor_unhealthy_reported", u64::from(doctored)),
+        ("federation_sums_ok", u64::from(sums_ok)),
+    ];
+    let n = jobs.len();
+    cluster.shutdown();
+    Cell {
+        name: "live_doctor_quarantine",
+        kind: "live",
+        jobs: n,
+        ok: ok && doctored && sums_ok,
+        bit_identical,
+        jobs_per_sec: n as f64 / elapsed.max(1e-9),
+        p50_wall_ms: p50,
+        p99_wall_ms: p99,
+        counters,
+    }
+}
+
 fn live_zipf_qcache(n_events: usize, n_jobs: usize, baseline: &[Vec<u32>]) -> Cell {
     let mut cfg = live_config(3, n_events, FaultConfig::default());
     cfg.qcache_enabled = true;
@@ -461,6 +578,7 @@ fn main() -> anyhow::Result<()> {
         live_chaos_stragglers(n_events, &baseline),
         live_churn_mixed(n_events, &baseline),
         live_zipf_qcache(n_events, zipf_jobs, &baseline),
+        live_doctor_quarantine(n_events, &baseline),
     ];
 
     print_table(

@@ -39,8 +39,10 @@ use crate::ft::{CopyPlan, Rebalancer, Rereplicator};
 use crate::gass::GassService;
 use crate::gris::{Directory, Entry, NodeInfoProvider};
 use crate::jse::{Jse, JseConfig};
-use crate::metrics::Registry;
+use crate::metrics::{Registry, Snapshot};
 use crate::node::store::brick_path;
+use crate::obs::health::{default_rules, evaluate};
+use crate::obs::history::{sample_rows, Federation, HistoryRing};
 use crate::node::{spawn_node, NodeConfig, NodeHandle};
 use crate::qcache::{QCache, QCacheConfig, QCacheStats};
 use crate::runtime::EnginePool;
@@ -80,6 +82,14 @@ pub struct ClusterHandle {
     /// flight recorder shared by the JSE, nodes, GASS, qcache and the
     /// fault plan; the portal serves its per-job traces
     recorder: Arc<crate::obs::Recorder>,
+    /// per-node telemetry federation: the freshest `MetricsReport`
+    /// snapshot per node (labeled `/metrics` scrapes read it). A killed
+    /// node's last snapshot is retained on purpose — its completed work
+    /// must keep counting in the cluster roll-up.
+    federation: Arc<Federation>,
+    /// bounded time-series ring, sampled by the broker loop on the
+    /// `[obs] history_interval` cadence (`GET /metrics/history`)
+    history: Arc<HistoryRing>,
     pool: EnginePool,
 }
 
@@ -201,6 +211,11 @@ impl ClusterHandle {
         let mut handles = BTreeMap::new();
         let mut node_txs: BTreeMap<String, Sender<Message>> = BTreeMap::new();
         for spec in &config.nodes {
+            // per-node registry: the actor records its node.* series
+            // here and ships cumulative snapshots to the leader as
+            // MetricsReport frames; the shared registry stays free of
+            // node-local series
+            let node_metrics = Arc::new(Registry::new());
             let handle = spawn_node(
                 NodeConfig {
                     name: spec.name.clone(),
@@ -213,7 +228,7 @@ impl ClusterHandle {
                 gass.clone(),
                 pool.clone(),
                 out_tx.clone(),
-                metrics.clone(),
+                node_metrics,
                 faults.clone(),
                 Some(recorder.clone()),
             )?;
@@ -261,15 +276,34 @@ impl ClusterHandle {
         qcache.set_metrics(metrics.clone());
         let qcache2 = config.qcache_enabled.then(|| qcache.clone());
         let rec2 = recorder.clone();
+        // federated telemetry: nodes report into their own registries,
+        // the JSE folds the snapshots here, and the broker samples the
+        // federated view into a bounded time-series ring on the [obs]
+        // cadence, feeding the health engine's verdicts back into
+        // placement (prefer-healthy dispatch + quarantine strikes)
+        let federation = Arc::new(Federation::new());
+        let history = Arc::new(HistoryRing::new(
+            config.obs_history_ticks,
+            (config.obs_history_interval * 1e9) as u64,
+        ));
+        let fed2 = federation.clone();
+        let ring2 = history.clone();
+        let obs_tick = Duration::from_secs_f64(
+            (config.obs_history_interval / config.time_scale.max(1e-9))
+                .max(1e-3),
+        );
         let broker_join = std::thread::Builder::new()
             .name("geps-broker".into())
             .spawn(move || {
                 let mut jse = Jse::new(jse_cfg, node_txs, out_rx, cat2.clone());
                 jse.set_metrics(met2.clone());
                 jse.set_recorder(rec2);
+                jse.set_federation(fed2.clone());
                 if let Some(q) = qcache2 {
                     jse.set_qcache(q);
                 }
+                let health_rules = default_rules();
+                let mut last_obs = Instant::now();
                 let mut cursor = 0u64;
                 // submission wall-clock per job (queue + run latency)
                 let mut started: BTreeMap<u64, Instant> = BTreeMap::new();
@@ -446,6 +480,47 @@ impl ClusterHandle {
                             }
                         }
                     }
+                    // telemetry tick: sample the shared registry and
+                    // every federated node snapshot into the history
+                    // ring, add the derived health inputs (quarantine
+                    // state, heartbeat staleness), then evaluate the
+                    // rule table and feed the verdicts back into
+                    // placement — unhealthy nodes accumulate quarantine
+                    // strikes, degraded ones are dispatched to last
+                    if last_obs.elapsed() >= obs_tick {
+                        last_obs = Instant::now();
+                        let snaps = fed2.snapshots();
+                        let mut rows = sample_rows(&met2, &snaps);
+                        for (name, _) in &snaps {
+                            rows.insert(
+                                (name.clone(), "ft.quarantined".into()),
+                                u64::from(
+                                    jse.quarantine().is_quarantined(name),
+                                ),
+                            );
+                            rows.insert(
+                                (
+                                    name.clone(),
+                                    "ft.quarantine_strikes".into(),
+                                ),
+                                u64::from(jse.quarantine().strikes(name)),
+                            );
+                            rows.insert(
+                                (name.clone(), "node.hb_stale".into()),
+                                u64::from(
+                                    jse.monitor().is_stale(name, 0.5),
+                                ),
+                            );
+                        }
+                        ring2.record_tick(rows);
+                        let report = evaluate(&ring2, &health_rules);
+                        for n in report.unhealthy_nodes() {
+                            jse.health_strike(&n);
+                        }
+                        jse.set_degraded(
+                            report.degraded_nodes().into_iter().collect(),
+                        );
+                    }
                 }
             })
             .expect("spawn broker");
@@ -466,6 +541,8 @@ impl ClusterHandle {
             qcache,
             faults,
             recorder,
+            federation,
+            history,
             pool,
         })
     }
@@ -513,6 +590,8 @@ impl ClusterHandle {
         // storage fabric next: the actor's executor thread resolves
         // its store at startup
         self.gass.add_host(name);
+        // per-node registry, as at startup: the newcomer's node.*
+        // series arrive at the leader as MetricsReport snapshots
         let handle = spawn_node(
             NodeConfig {
                 name: name.to_string(),
@@ -525,7 +604,7 @@ impl ClusterHandle {
             self.gass.clone(),
             self.pool.clone(),
             self.node_out_tx.clone(),
-            self.metrics.clone(),
+            Arc::new(Registry::new()),
             self.faults.clone(),
             Some(self.recorder.clone()),
         )?;
@@ -703,6 +782,47 @@ impl ClusterHandle {
     /// lifecycle traces (the portal's `GET /jobs/<id>/trace`).
     pub fn recorder(&self) -> &Arc<crate::obs::Recorder> {
         &self.recorder
+    }
+
+    /// Prometheus exposition with per-node labeled families riding the
+    /// cluster roll-up (the portal's `GET /metrics`): node-local series
+    /// come from the federation, everything else from the shared
+    /// registry, and the unlabeled roll-up lines are bit-identical to
+    /// what a single shared registry would have produced.
+    pub fn metrics_text(&self) -> String {
+        crate::obs::prom::render_federated(
+            &self.metrics,
+            &self.federation.snapshots(),
+        )
+    }
+
+    /// Plain-text metric listing (the portal's default `GET /metrics`
+    /// view): the shared registry merged with every federated node
+    /// snapshot — the same content a single shared registry carried
+    /// before per-node federation.
+    pub fn metrics_plain(&self) -> String {
+        let merged = Registry::new();
+        Snapshot::from_registry(&self.metrics).merge_into(&merged);
+        for (_, s) in self.federation.snapshots() {
+            s.merge_into(&merged);
+        }
+        merged.render()
+    }
+
+    /// Canonical `GET /metrics/history` body: the retained telemetry
+    /// ticks, optionally filtered to one series name and/or node id.
+    pub fn history_json(
+        &self,
+        name: Option<&str>,
+        node: Option<&str>,
+    ) -> String {
+        self.history.render(name, node)
+    }
+
+    /// Canonical `GET /health` body: the default health rule table
+    /// evaluated over the retained telemetry window.
+    pub fn health_json(&self) -> String {
+        evaluate(&self.history, &default_rules()).render()
     }
 
     /// Sorted snapshot of every fault injected so far (the faultline

@@ -39,6 +39,10 @@
 //! crash_p = 0.01       # node dies silently mid-task
 //! task_retry_budget = 3
 //! speculate = true     # deadline-driven straggler re-dispatch
+//!
+//! [obs]
+//! history_ticks = 64       # time-series ring length
+//! history_interval = 2.0   # virtual seconds between telemetry samples
 //! ```
 
 use crate::config::toml::{TomlDoc, TomlValue};
@@ -88,6 +92,13 @@ pub struct ClusterConfig {
     /// that let the grid survive them. The default injects nothing
     /// but leaves every recovery mechanism armed.
     pub fault: FaultConfig,
+    /// `[obs] history_ticks` — how many telemetry ticks the bounded
+    /// time-series ring retains (served at `GET /metrics/history`)
+    pub obs_history_ticks: usize,
+    /// `[obs] history_interval` — virtual seconds between telemetry
+    /// samples (the live broker scales it by `time_scale`; DES runs
+    /// tick on sim time directly)
+    pub obs_history_interval: f64,
     pub nodes: Vec<NodeSpec>,
 }
 
@@ -109,6 +120,8 @@ impl Default for ClusterConfig {
             seed: 42,
             pipelines: 0,
             fault: FaultConfig::default(),
+            obs_history_ticks: 64,
+            obs_history_interval: 2.0,
             nodes: vec![
                 NodeSpec { name: "gandalf".into(), speed: 0.8, slots: 1 },
                 NodeSpec { name: "hobbit".into(), speed: 1.0, slots: 1 },
@@ -320,6 +333,28 @@ impl ClusterConfig {
             cfg.fault.speculate = v;
         }
 
+        // [obs] — telemetry history + health engine sampling
+        if let Some(v) = doc.get("obs", "history_ticks").and_then(TomlValue::as_i64)
+        {
+            if !(1..=100_000).contains(&v) {
+                return Err(ConfigError(
+                    "obs history_ticks must be in 1..=100000".into(),
+                ));
+            }
+            cfg.obs_history_ticks = v as usize;
+        }
+        if let Some(v) = doc
+            .get("obs", "history_interval")
+            .and_then(TomlValue::as_f64)
+        {
+            if v <= 0.0 || !v.is_finite() {
+                return Err(ConfigError(
+                    "obs history_interval must be > 0".into(),
+                ));
+            }
+            cfg.obs_history_interval = v;
+        }
+
         for (name, kv) in doc.sections_under("node") {
             let node_name = name.strip_prefix("node.").unwrap().to_string();
             let speed = kv.get("speed").and_then(TomlValue::as_f64).unwrap_or(1.0);
@@ -497,6 +532,24 @@ mod tests {
         let cfg = ClusterConfig::parse("[fault]\n").unwrap();
         assert!(!cfg.fault.injects());
         assert_eq!(cfg.fault, crate::faultline::FaultConfig::default());
+    }
+
+    #[test]
+    fn obs_section_knobs() {
+        let cfg = ClusterConfig::parse(
+            "[obs]\nhistory_ticks = 16\nhistory_interval = 0.5",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs_history_ticks, 16);
+        assert!((cfg.obs_history_interval - 0.5).abs() < 1e-12);
+        // defaults
+        let d = ClusterConfig::parse("").unwrap();
+        assert_eq!(d.obs_history_ticks, 64);
+        assert!((d.obs_history_interval - 2.0).abs() < 1e-12);
+        // validation
+        assert!(ClusterConfig::parse("[obs]\nhistory_ticks = 0").is_err());
+        assert!(ClusterConfig::parse("[obs]\nhistory_interval = 0.0").is_err());
+        assert!(ClusterConfig::parse("[obs]\nhistory_interval = -1.0").is_err());
     }
 
     #[test]

@@ -95,6 +95,24 @@ impl HeartbeatMonitor {
         self.dead.contains(node)
     }
 
+    /// Early-warning staleness for the health engine: true when
+    /// `node`'s last beacon is older than `frac` of the death timeout
+    /// (or the node is already dead). Death itself stays the business
+    /// of [`HeartbeatMonitor::check`]; this probe lets telemetry flag
+    /// heartbeat jitter before the hard timeout fires.
+    pub fn is_stale(&self, node: &str, frac: f64) -> bool {
+        if self.dead.contains(node) {
+            return true;
+        }
+        match self.last_seen.get(node) {
+            Some(seen) => {
+                let limit = self.timeout.mul_f64(frac.clamp(0.05, 1.0));
+                seen.elapsed() > limit
+            }
+            None => false,
+        }
+    }
+
     pub fn dead_nodes(&self) -> &BTreeSet<String> {
         &self.dead
     }
@@ -430,6 +448,20 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         assert!(m.check().is_empty(), "dead nodes are announced exactly once");
         assert_eq!(m.dead_nodes().len(), 1);
+    }
+
+    #[test]
+    fn staleness_warns_before_the_hard_timeout() {
+        let mut m = HeartbeatMonitor::new(Duration::from_millis(100));
+        m.beat("a");
+        assert!(!m.is_stale("a", 0.3));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(m.is_stale("a", 0.3), "past 30% of the timeout");
+        assert!(!m.is_stale("a", 1.0), "not yet past the full timeout");
+        // untracked nodes are not stale; dead nodes always are
+        assert!(!m.is_stale("ghost", 0.3));
+        m.note_dead("a");
+        assert!(m.is_stale("a", 1.0));
     }
 
     #[test]

@@ -56,7 +56,8 @@ pub mod runner;
 use crate::brick::BrickId;
 use crate::catalog::{Catalog, JobStatus, ResultRow};
 use crate::ft::{HeartbeatMonitor, Quarantine};
-use crate::metrics::{Histogram, Registry};
+use crate::metrics::{Histogram, Registry, Snapshot};
+use crate::obs::history::Federation;
 use crate::qcache::{self, Attach, CachedResult, PartialResult, QCache};
 use crate::rsl::synthesize_task_rsl;
 use crate::scheduler::{NodeState, Policy, SchedCtx, Task};
@@ -190,6 +191,13 @@ pub struct Jse {
     durations: Histogram,
     /// flight recorder ([`crate::obs`]): per-job lifecycle journal
     obs: Option<Arc<crate::obs::Recorder>>,
+    /// per-node telemetry federation ([`crate::obs::history`]): node
+    /// `MetricsReport` frames routed by the event loop land here
+    federation: Option<Arc<Federation>>,
+    /// telemetry-driven placement hint from the health engine: nodes
+    /// judged Degraded/Unhealthy are offered slots only after every
+    /// healthy node has been saturated
+    degraded: BTreeSet<String>,
 }
 
 impl Jse {
@@ -223,6 +231,8 @@ impl Jse {
             quarantine,
             durations: Histogram::new(),
             obs: None,
+            federation: None,
+            degraded: BTreeSet::new(),
         }
     }
 
@@ -255,6 +265,43 @@ impl Jse {
             q.set_recorder(obs.clone());
         }
         self.obs = Some(obs);
+    }
+
+    /// Attach the per-node metrics federation ([`crate::obs::history`]):
+    /// from here on, `MetricsReport` frames arriving on the node channel
+    /// are decoded and folded in (seq-guarded — a reordered older report
+    /// is dropped, never accumulated).
+    pub fn set_federation(&mut self, federation: Arc<Federation>) {
+        self.federation = Some(federation);
+    }
+
+    /// Telemetry-driven placement hint from the health engine
+    /// ([`crate::obs::health`]): dispatch offers slots on nodes outside
+    /// `degraded` first. The hint is replaced wholesale on every call —
+    /// recovery is observed by the next evaluation dropping the node.
+    pub fn set_degraded(&mut self, degraded: BTreeSet<String>) {
+        // forward each transition (healthy ⇄ degraded) to every
+        // in-flight job's policy via the advisory `on_health` hook
+        let changed: Vec<(String, bool)> = self
+            .degraded
+            .symmetric_difference(&degraded)
+            .map(|n| (n.clone(), !degraded.contains(n)))
+            .collect();
+        self.degraded = degraded;
+        for (node, healthy) in changed {
+            for r in self.runners.values_mut() {
+                r.on_health(&node, healthy);
+            }
+        }
+    }
+
+    /// Health-engine feedback: count one strike against `node` toward
+    /// quarantine, exactly as a repeated task failure would
+    /// ([`crate::ft::Quarantine`]). The broker calls this for nodes the
+    /// rule table judges Unhealthy; the last live node is never
+    /// sidelined (same starvation guard as the task-failure path).
+    pub fn health_strike(&mut self, node: &str) {
+        self.strike_node(node);
     }
 
     /// Journal one event for `job` if a recorder is attached.
@@ -711,7 +758,7 @@ impl Jse {
         }
         // capacity view: slots per live node from the catalogue, minus
         // monitor-dead nodes — shared across every in-flight job
-        let caps: Vec<(String, usize)> = {
+        let mut caps: Vec<(String, usize)> = {
             let cat = self.cat();
             let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
             for (_, n) in cat.nodes.iter() {
@@ -724,6 +771,11 @@ impl Jse {
             }
             by_name.into_iter().collect()
         };
+        // telemetry-driven placement: a node the health engine marked
+        // degraded keeps its capacity but is offered slots only after
+        // every healthy node (the sort is stable, so within each class
+        // the deterministic name order is preserved)
+        caps.sort_by_key(|(name, _)| self.degraded.contains(name));
         let mut lost_channels: BTreeSet<String> = BTreeSet::new();
         for (name, cap) in &caps {
             // a joining node's catalogue row can land before its
@@ -1028,6 +1080,19 @@ impl Jse {
     fn route(&mut self, msg: Message) {
         match msg {
             Message::Heartbeat { node, .. } => self.monitor.beat(&node),
+            Message::MetricsReport { node, seq, payload } => {
+                if let Some(f) = &self.federation {
+                    match Snapshot::decode(&payload) {
+                        Some(snap) => {
+                            f.report(&node, seq, snap);
+                        }
+                        None => eprintln!(
+                            "[jse] dropping malformed metrics report \
+                             from {node}"
+                        ),
+                    }
+                }
+            }
             Message::TaskDone {
                 job,
                 brick,

@@ -449,6 +449,13 @@ impl JobRunner {
         true
     }
 
+    /// The telemetry health engine re-classified `node`; forward the
+    /// advisory hook to this job's policy (see
+    /// [`crate::scheduler::Scheduler::on_health`]).
+    pub fn on_health(&mut self, node: &str, healthy: bool) {
+        self.sched.on_health(node, healthy, &self.ctx);
+    }
+
     /// `node` died (missed heartbeats or a closed channel): void its
     /// in-flight work, re-queue its issued attempts through the
     /// policy's failure paths, and record it in `nodes_lost` (the

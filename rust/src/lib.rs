@@ -139,19 +139,43 @@
 //!   gated the merge) and the per-job timing summary on
 //!   `GET /jobs/<id>` / `geps status` (queue wait, plan, execute,
 //!   merge durations).
-//! - **Prometheus exposition** ([`obs::prom`]) —
-//!   `GET /metrics?format=prometheus` renders the registry in the text
-//!   exposition format (`# TYPE` lines, cumulative
-//!   `_bucket`/`_sum`/`_count` from the log2 histograms, wildcard
-//!   families label-ified via [`obs::prom::PROM_FAMILIES`]), output
+//! - **Per-node metrics federation** ([`metrics`] + [`obs::prom`]) —
+//!   each node actor records into its own [`metrics::Registry`] and
+//!   ships deterministic cumulative snapshots to the leader as
+//!   [`wire::Message::MetricsReport`] frames on the heartbeat cadence
+//!   (freshest sequence number wins, so reordered reports never skew
+//!   the fold; a dead node's last report is retained so completed work
+//!   keeps counting). `GET /metrics?format=prometheus` renders the
+//!   federated view: node-local families
+//!   ([`obs::prom::NODE_FAMILIES`]) appear once per node under a
+//!   `node` label (`geps_node_pack_stall_ns{node="n3"}`) and once as
+//!   the cluster roll-up, which stays **bit-identical** to what one
+//!   shared registry would have accumulated — labeled counter samples
+//!   sum exactly to the roll-up sample in any single scrape. Output
 //!   deterministic and validated by the in-repo
 //!   [`obs::prom::check_exposition`] checker.
+//! - **Time-series history** ([`obs::history`]) — the broker samples
+//!   the federated telemetry into a bounded ring
+//!   ([`obs::history::HistoryRing`]) on the `[obs]` cadence
+//!   (`history_ticks` / `history_interval` config knobs), served as
+//!   canonical JSON at `GET /metrics/history?name=...&node=...` and
+//!   rendered by the `geps top` ASCII dashboard. Under the DES the
+//!   tick rides virtual time, so same-seed runs produce
+//!   **byte-identical history bodies**.
+//! - **Health engine** ([`obs::health`]) — a declarative rule table
+//!   (levels, per-tick slopes, ratio gates over the ring) evaluated
+//!   into per-node verdicts at `GET /health` / `geps doctor`. Verdicts
+//!   feed back into placement: unhealthy nodes accumulate
+//!   [`ft::Quarantine`] strikes, degraded nodes are offered work only
+//!   after every healthy node is saturated, and policies get the
+//!   advisory [`scheduler::Scheduler::on_health`] hook.
 //! - **Scenario matrix** (`benches/ext_scenarios.rs`) — a named
 //!   scale/chaos matrix (asymmetric WAN, hundreds of simulated nodes,
 //!   stragglers, kill+join churn under mixed traffic, zipfian cache
-//!   traffic) emitting one machine-readable verdict per cell in
-//!   `BENCH_ext_scenarios.json`, CI-gated on every cell's bit-identity
-//!   verdict.
+//!   traffic, a telemetry/doctor cell proving a killed node is
+//!   quarantined and reported unhealthy) emitting one machine-readable
+//!   verdict per cell in `BENCH_ext_scenarios.json`, CI-gated on every
+//!   cell's bit-identity verdict.
 //!
 //! ## The columnar node hot path
 //!
@@ -248,8 +272,12 @@
 //!   formatted families). The Prometheus renderer's label-ified
 //!   wildcard families ([`obs::prom::PROM_FAMILIES`]) must map 1:1
 //!   onto the `*` entries of `REGISTERED`
-//!   (`prom-family-registry`), so the catalogue stays authoritative
-//!   for scrapers.
+//!   (`prom-family-registry`), and its federated per-node families
+//!   ([`obs::prom::NODE_FAMILIES`]) must be exactly the
+//!   `node.`-prefixed entries of `REGISTERED`
+//!   (`node-family-registry`), so the catalogue stays authoritative
+//!   for scrapers and no node-local series can silently fold into the
+//!   cluster roll-up without a labeled counterpart.
 //! - **Panic paths.** No `unwrap`/`expect`/slice-indexing/`panic!` in
 //!   the always-on service loops (`jse`, `node::executor`, `portal`,
 //!   `gass`);

@@ -12,6 +12,8 @@
 //!   cache-stats  query-result cache (qcache) statistics
 //!   cache-flush  drop all cached query results
 //!   gen-artifacts  write a reference-backend manifest (no python/XLA)
+//!   top        per-node telemetry dashboard from /metrics/history
+//!   doctor     cluster health verdicts from /health
 //!   calibrate  measure kernel throughput (DES calibration input)
 //!   fig7       run the Fig 7 DES sweep and print the table
 //!
@@ -376,6 +378,44 @@ fn cmd_bricks(flags: BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_top(flags: BTreeMap<String, String>) -> Result<()> {
+    let path = match flags.get("node") {
+        Some(n) => format!("/metrics/history?node={n}"),
+        None => "/metrics/history".to_string(),
+    };
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        &path,
+        None,
+    )?;
+    if status >= 300 {
+        bail!("top fetch failed: {}", String::from_utf8_lossy(&resp));
+    }
+    print!(
+        "{}",
+        geps::obs::history::render_top(std::str::from_utf8(&resp)?)
+    );
+    Ok(())
+}
+
+fn cmd_doctor(flags: BTreeMap<String, String>) -> Result<()> {
+    let (status, resp) = portal::http::request(
+        &portal_addr(&flags),
+        "GET",
+        "/health",
+        None,
+    )?;
+    if status >= 300 {
+        bail!("doctor fetch failed: {}", String::from_utf8_lossy(&resp));
+    }
+    print!(
+        "{}",
+        geps::obs::health::render_doctor(std::str::from_utf8(&resp)?)
+    );
+    Ok(())
+}
+
 fn cmd_kill(flags: BTreeMap<String, String>) -> Result<()> {
     let node = flags
         .get("node")
@@ -492,7 +532,7 @@ fn cmd_fig7(flags: BTreeMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: geps <serve|demo|submit|status|trace|cancel|add-node|node-info|kill|histogram|bricks|cache-stats|cache-flush|gen-artifacts|calibrate|fig7> [--flags]
+        "usage: geps <serve|demo|submit|status|trace|cancel|add-node|node-info|kill|top|doctor|histogram|bricks|cache-stats|cache-flush|gen-artifacts|calibrate|fig7> [--flags]
   serve     --config FILE --listen ADDR --gris-listen ADDR
   demo      --config FILE --events N --policy P --filter EXPR
   submit    --portal ADDR --filter EXPR --policy P
@@ -505,6 +545,11 @@ fn usage() -> ! {
                                               rebalance onto it)
   node-info --portal ADDR [--filter LDAP]
   kill      --portal ADDR --node NAME        (fault injection)
+  top       --portal ADDR [--node NAME]      (per-node telemetry dashboard:
+                                              in-flight, busy-ns p99, qcache
+                                              hit rate, retries, strikes)
+  doctor    --portal ADDR                    (health-engine verdicts per
+                                              node + cluster findings)
   histogram --portal ADDR --job ID           (visualize merged results)
   bricks    --portal ADDR                    (brick placement view)
   cache-stats --portal ADDR                  (qcache statistics)
@@ -534,6 +579,8 @@ fn main() -> Result<()> {
         "add-node" => cmd_add_node(flags),
         "node-info" => cmd_node_info(flags),
         "kill" => cmd_kill(flags),
+        "top" => cmd_top(flags),
+        "doctor" => cmd_doctor(flags),
         "histogram" => cmd_histogram(flags),
         "bricks" => cmd_bricks(flags),
         "cache-stats" => cmd_cache_stats(flags),

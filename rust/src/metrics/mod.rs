@@ -48,6 +48,9 @@ pub mod names {
         "node.pack_stall_ns",
         "node.pipeline.*.task_busy_ns",
         "node.pipelines",
+        "node.tasks_done",
+        "node.tasks_failed",
+        "node.tasks_in_flight",
         "obs.trace_dropped",
         "obs.trace_events",
         "portal.cancels",
@@ -93,6 +96,25 @@ impl Gauge {
 
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
+    }
+
+    /// Atomic increment — safe under concurrent writers, unlike the
+    /// read-modify-write `set(get() + n)` pattern which loses updates.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Atomic saturating decrement (a gauge at 0 stays at 0 rather
+    /// than wrapping — an unmatched `sub` must not explode the value).
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 }
 
@@ -149,7 +171,11 @@ impl Histogram {
         if total == 0 {
             return 0;
         }
-        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil() as u64;
+        // Floor the rank at 1: at q=0 `ceil` yields target 0, which made
+        // `seen >= target` vacuously true at bucket 0 even when bucket 0
+        // was empty. q=0 means "the smallest recorded sample", i.e. the
+        // upper bound of the first *non-empty* bucket.
+        let target = (((q.clamp(0.0, 1.0)) * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -178,6 +204,183 @@ impl Histogram {
 
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram's snapshot into this one, element-wise.
+    /// Bucket adds commute, so merging per-node partials in sorted node
+    /// order reproduces the exact counts a single shared histogram
+    /// would have accumulated (the federation bit-identity contract).
+    pub fn merge_from(&self, buckets: &[u64; 64], sum: u64, count: u64) {
+        for (i, b) in buckets.iter().enumerate() {
+            if *b > 0 {
+                self.buckets[i].fetch_add(*b, Ordering::Relaxed);
+            }
+        }
+        self.sum.fetch_add(sum, Ordering::Relaxed);
+        self.count.fetch_add(count, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of one histogram (buckets, sum, count).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; 64],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Same bucket-walk quantile as [`Histogram::quantile`], over the
+    /// frozen copy.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (((q.clamp(0.0, 1.0)) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Histogram::bucket_upper_bound(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// A deterministic, serialisable snapshot of a whole [`Registry`] —
+/// the unit a node ships to the JSE in a `MetricsReport`. Cumulative
+/// (not a delta): reports are idempotent, so a dropped or reordered
+/// report never skews the fold — the freshest sequence number wins.
+///
+/// All maps are BTreeMaps and the wire encoding walks them in key
+/// order, so the same registry state always encodes to the same bytes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Snapshot {
+    /// Capture the registry's current state.
+    pub fn from_registry(r: &Registry) -> Self {
+        let mut s = Snapshot::default();
+        for (n, v) in r.counters_snapshot() {
+            s.counters.insert(n, v);
+        }
+        for (n, v) in r.gauges_snapshot() {
+            s.gauges.insert(n, v);
+        }
+        for (n, buckets, sum, count) in r.histograms_snapshot() {
+            s.hists.insert(n, HistSnapshot { buckets, sum, count });
+        }
+        s
+    }
+
+    /// Canonical byte encoding: three sections (counters, gauges,
+    /// histograms), each a varint entry count followed by sorted
+    /// entries. Histogram buckets are sparse `(index, count)` pairs.
+    pub fn encode(&self) -> Vec<u8> {
+        use crate::brick::codec::put_varint;
+        let mut out = Vec::new();
+        let put_str = |out: &mut Vec<u8>, s: &str| {
+            put_varint(out, s.len() as u64);
+            out.extend_from_slice(s.as_bytes());
+        };
+        for section in [&self.counters, &self.gauges] {
+            put_varint(&mut out, section.len() as u64);
+            for (n, v) in section.iter() {
+                put_str(&mut out, n);
+                put_varint(&mut out, *v);
+            }
+        }
+        put_varint(&mut out, self.hists.len() as u64);
+        for (n, h) in self.hists.iter() {
+            put_str(&mut out, n);
+            let nonzero: Vec<(usize, u64)> = h
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| **c > 0)
+                .map(|(i, c)| (i, *c))
+                .collect();
+            put_varint(&mut out, nonzero.len() as u64);
+            for (i, c) in nonzero {
+                put_varint(&mut out, i as u64);
+                put_varint(&mut out, c);
+            }
+            put_varint(&mut out, h.sum);
+            put_varint(&mut out, h.count);
+        }
+        out
+    }
+
+    /// Decode an [`encode`](Self::encode)d snapshot. `None` on any
+    /// malformed input (truncation, bucket index out of range,
+    /// invalid UTF-8, trailing bytes).
+    pub fn decode(data: &[u8]) -> Option<Self> {
+        use crate::brick::codec::get_varint;
+        let mut i = 0usize;
+        let mut next = |data: &[u8], i: &mut usize| -> Option<u64> {
+            let (v, n) = get_varint(data.get(*i..)?)?;
+            *i += n;
+            Some(v)
+        };
+        let mut read_str = |data: &[u8], i: &mut usize| -> Option<String> {
+            let (len, n) = get_varint(data.get(*i..)?)?;
+            *i += n;
+            let end = i.checked_add(len as usize)?;
+            let s = std::str::from_utf8(data.get(*i..end)?).ok()?.to_string();
+            *i = end;
+            Some(s)
+        };
+        let mut s = Snapshot::default();
+        for section in [&mut s.counters, &mut s.gauges] {
+            let n = next(data, &mut i)?;
+            for _ in 0..n {
+                let name = read_str(data, &mut i)?;
+                let v = next(data, &mut i)?;
+                section.insert(name, v);
+            }
+        }
+        let nh = next(data, &mut i)?;
+        for _ in 0..nh {
+            let name = read_str(data, &mut i)?;
+            let mut h = HistSnapshot { buckets: [0u64; 64], sum: 0, count: 0 };
+            let nb = next(data, &mut i)?;
+            for _ in 0..nb {
+                let idx = next(data, &mut i)?;
+                let c = next(data, &mut i)?;
+                *h.buckets.get_mut(idx as usize)? += c;
+            }
+            h.sum = next(data, &mut i)?;
+            h.count = next(data, &mut i)?;
+            s.hists.insert(name, h);
+        }
+        if i != data.len() {
+            return None; // trailing garbage
+        }
+        Some(s)
+    }
+
+    /// Fold this snapshot into a registry: counters and histograms
+    /// add, gauges take the max (every node publishes the same value
+    /// for shared-shape gauges like `node.pipelines`, and max keeps
+    /// point-in-time gauges from summing across nodes).
+    pub fn merge_into(&self, r: &Registry) {
+        for (n, v) in self.counters.iter() {
+            r.counter(n).add(*v);
+        }
+        for (n, v) in self.gauges.iter() {
+            let g = r.gauge(n);
+            if *v > g.get() {
+                g.set(*v);
+            }
+        }
+        for (n, h) in self.hists.iter() {
+            r.histogram(n).merge_from(&h.buckets, h.sum, h.count);
+        }
     }
 }
 
@@ -303,6 +506,112 @@ mod tests {
         assert_eq!(small.quantile(0.5), 3);
         assert_eq!(Histogram::bucket_upper_bound(0), 1);
         assert_eq!(Histogram::bucket_upper_bound(63), u64::MAX);
+    }
+
+    #[test]
+    fn quantile_zero_skips_empty_low_buckets() {
+        // regression (alongside the 62/63 upper-bound fix): q=0 used to
+        // compute target 0, making `seen >= target` vacuously true at
+        // bucket 0 — an empty bucket 0 still reported upper bound 1.
+        // q=0 must return the first *non-empty* bucket's upper bound.
+        let h = Histogram::new();
+        h.record(1024); // bucket 10: [1024, 2048)
+        assert_eq!(h.quantile(0.0), 2047);
+        let low = Histogram::new();
+        low.record(1); // bucket 0
+        assert_eq!(low.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn gauge_add_sub_are_atomic_and_saturating() {
+        let g = std::sync::Arc::new(Gauge::default());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.add(1);
+                    g.sub(1);
+                }
+                g.add(2);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // the read-modify-write set(get()±1) pattern would lose updates
+        // here; the atomic helpers must land every one of them
+        assert_eq!(g.get(), 16);
+        g.sub(100);
+        assert_eq!(g.get(), 0, "sub must saturate at zero, not wrap");
+    }
+
+    #[test]
+    fn histogram_merge_from_is_elementwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [1u64, 3, 1024] {
+            a.record(v);
+        }
+        for v in [3u64, 5, 1 << 40] {
+            b.record(v);
+        }
+        let merged = Histogram::new();
+        merged.merge_from(&a.bucket_counts(), a.sum(), a.count());
+        merged.merge_from(&b.bucket_counts(), b.sum(), b.count());
+        let oracle = Histogram::new();
+        for v in [1u64, 3, 1024, 3, 5, 1 << 40] {
+            oracle.record(v);
+        }
+        assert_eq!(merged.bucket_counts(), oracle.bucket_counts());
+        assert_eq!(merged.sum(), oracle.sum());
+        assert_eq!(merged.count(), oracle.count());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_and_determinism() {
+        let r = Registry::new();
+        r.counter("node.tasks_done").add(7);
+        r.gauge("node.tasks_in_flight").set(3);
+        r.histogram("node.pack_stall_ns").record(4096);
+        r.histogram("node.pack_stall_ns").record(12);
+        let s = Snapshot::from_registry(&r);
+        let bytes = s.encode();
+        assert_eq!(bytes, s.encode(), "encode must be deterministic");
+        let back = Snapshot::decode(&bytes).expect("roundtrip");
+        assert_eq!(back, s);
+        assert_eq!(back.counters["node.tasks_done"], 7);
+        assert_eq!(back.hists["node.pack_stall_ns"].count, 2);
+        // malformed inputs are rejected, not panicked on
+        assert!(Snapshot::decode(&bytes[..bytes.len() - 1]).is_none());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(Snapshot::decode(&trailing).is_none());
+        assert!(Snapshot::decode(&[0xff]).is_none());
+    }
+
+    #[test]
+    fn snapshot_merge_reproduces_shared_registry() {
+        // the federation bit-identity contract in miniature: two nodes
+        // recording into private registries, folded, must equal one
+        // shared registry that saw every sample
+        let shared = Registry::new();
+        let n1 = Registry::new();
+        let n2 = Registry::new();
+        for (reg, vals) in [(&n1, [10u64, 1 << 20]), (&n2, [3, 1 << 33])] {
+            for v in vals {
+                reg.histogram("node.pack_stall_ns").record(v);
+                shared.histogram("node.pack_stall_ns").record(v);
+            }
+            reg.counter("node.tasks_done").inc();
+            shared.counter("node.tasks_done").inc();
+            reg.gauge("node.pipelines").set(4);
+        }
+        shared.gauge("node.pipelines").set(4);
+        let merged = Registry::new();
+        Snapshot::from_registry(&n1).merge_into(&merged);
+        Snapshot::from_registry(&n2).merge_into(&merged);
+        assert_eq!(merged.render(), shared.render());
     }
 
     #[test]

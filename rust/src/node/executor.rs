@@ -58,7 +58,7 @@ use crate::brick::{BrickFile, Codec};
 use crate::faultline::{FaultPlan, TaskFault};
 use crate::filterexpr;
 use crate::gass::GassService;
-use crate::metrics::{Counter, Histogram, Registry};
+use crate::metrics::{Counter, Gauge, Histogram, Registry, Snapshot};
 use crate::node::store::{brick_path, result_path, BrickStore};
 use crate::rsl;
 use crate::runtime::{EnginePool, FeatureMatrix};
@@ -93,6 +93,13 @@ struct NodeMetrics {
     drain_reorder_depth: Arc<Counter>,
     /// per-pipeline busy time, indexed by pipeline id
     pipeline_busy_ns: Vec<Arc<Histogram>>,
+    /// tasks currently executing on this node. Updated with the atomic
+    /// `Gauge::add`/`sub` helpers: the heartbeat thread snapshots the
+    /// registry concurrently with the executor's updates, so a
+    /// read-modify-write `set(get()±1)` would lose counts.
+    tasks_in_flight: Arc<Gauge>,
+    tasks_done: Arc<Counter>,
+    tasks_failed: Arc<Counter>,
 }
 
 impl NodeMetrics {
@@ -108,6 +115,9 @@ impl NodeMetrics {
                         .histogram(&format!("node.pipeline.{i}.task_busy_ns"))
                 })
                 .collect(),
+            tasks_in_flight: registry.gauge("node.tasks_in_flight"),
+            tasks_done: registry.counter("node.tasks_done"),
+            tasks_failed: registry.counter("node.tasks_failed"),
         }
     }
 }
@@ -181,6 +191,7 @@ pub fn spawn_node(
     // executor thread
     let ex_killed = killed.clone();
     let ex_done = tasks_done.clone();
+    let hb_metrics = metrics.clone();
     let name = cfg.name.clone();
     let pipelines = cfg.pipelines.max(1);
     let time_scale = cfg.time_scale.max(1e-9);
@@ -242,6 +253,7 @@ pub fn spawn_node(
                             TaskFault::None => {}
                         }
                         let t0 = Instant::now();
+                        node_metrics.tasks_in_flight.add(1);
                         let outcome = run_task(
                             &name,
                             &store,
@@ -256,6 +268,7 @@ pub fn spawn_node(
                             pipelines,
                             &node_metrics,
                         );
+                        node_metrics.tasks_in_flight.sub(1);
                         if let Some(f) = slow {
                             // a slowed node takes `f` times as long:
                             // pad out the remaining (f - 1) fraction
@@ -278,6 +291,9 @@ pub fn spawn_node(
                         };
                         if matches!(reply, Message::TaskDone { .. }) {
                             ex_done.fetch_add(1, Ordering::SeqCst);
+                            node_metrics.tasks_done.inc();
+                        } else {
+                            node_metrics.tasks_failed.inc();
                         }
                         // journal the completed attempt *before* the
                         // reply leaves the node, so the trace already
@@ -331,11 +347,29 @@ pub fn spawn_node(
     let hb_join = std::thread::Builder::new()
         .name(format!("geps-hb-{}", cfg.name))
         .spawn(move || {
+            // metrics ride the heartbeat channel: each beat also ships
+            // a cumulative registry snapshot. seq starts at 1 and the
+            // first report goes out immediately (before the first
+            // sleep), so the leader's federated view lights up as soon
+            // as the node is alive rather than one period later.
+            let mut seq = 0u64;
             while !hb_killed.load(Ordering::SeqCst) {
                 if outbox
                     .send(Message::Heartbeat {
                         node: hb_name.clone(),
                         free_slots: 1,
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+                seq += 1;
+                let payload = Snapshot::from_registry(&hb_metrics).encode();
+                if outbox
+                    .send(Message::MetricsReport {
+                        node: hb_name.clone(),
+                        seq,
+                        payload,
                     })
                     .is_err()
                 {

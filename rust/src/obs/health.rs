@@ -1,0 +1,454 @@
+//! Telemetry-driven cluster health engine.
+//!
+//! A small declarative rule table evaluated over the federated series
+//! in the [`HistoryRing`](super::history::HistoryRing): threshold
+//! (newest value), slope (rate of change per tick across the retained
+//! window) and ratio (percentage of one cumulative counter over
+//! another) rules, scoped per node or cluster-wide, each mapping to a
+//! `Degraded` / `Unhealthy` limit pair. The engine renders a canonical
+//! JSON body for `GET /health` (byte-identical across same-seed DES
+//! runs — sorted nodes, integer arithmetic only) and an ASCII verdict
+//! table for `geps doctor`.
+//!
+//! Verdicts feed back into placement: the cluster broker hands the
+//! unhealthy set to the JSE, which prefers non-degraded nodes when
+//! dispatching (preference, not exclusion — a degraded node still
+//! drains the queue when it is the only capacity left) and applies
+//! quarantine strikes for persistent unhealthiness.
+
+use super::history::{escape_json, HistoryRing};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Where a rule's series live: one evaluation per node, or one against
+/// the `"cluster"` pseudo node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    Node,
+    Cluster,
+}
+
+/// How a rule turns a series window into one observed value.
+#[derive(Debug, Clone, Copy)]
+pub enum RuleKind {
+    /// Newest value of the series.
+    Level(&'static str),
+    /// Increase per tick across the retained window (cumulative
+    /// counters; saturating, integer division).
+    SlopePerTick(&'static str),
+    /// `100 * num / den` over the newest values; absent/zero
+    /// denominator evaluates to 0.
+    RatioPct(&'static str, &'static str),
+}
+
+/// One health rule. Fires `Degraded` at `degraded <= v < unhealthy`
+/// and `Unhealthy` at `v >= unhealthy`. A `gate` series (always read
+/// from the cluster row) must be nonzero for the rule to apply at all
+/// — e.g. deadline rules only matter when `jse.task_deadline_ns` is
+/// actually configured.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    pub scope: Scope,
+    pub kind: RuleKind,
+    pub gate: Option<&'static str>,
+    pub degraded: u64,
+    pub unhealthy: u64,
+}
+
+/// Per-node (and cluster) verdicts, ordered by severity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    #[default]
+    Healthy,
+    Degraded,
+    Unhealthy,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Healthy => "healthy",
+            Verdict::Degraded => "degraded",
+            Verdict::Unhealthy => "unhealthy",
+        }
+    }
+}
+
+/// One fired rule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub value: u64,
+    pub limit: u64,
+    pub verdict: Verdict,
+}
+
+/// The evaluated report: a verdict and its findings per node, plus the
+/// cluster-scope findings and the overall verdict (worst of everything).
+#[derive(Debug, Clone, Default)]
+pub struct HealthReport {
+    pub nodes: BTreeMap<String, (Verdict, Vec<Finding>)>,
+    pub cluster_findings: Vec<Finding>,
+    pub cluster: Option<Verdict>,
+}
+
+/// The default rule table.
+///
+/// Derived series injected by the broker/simulator on each tick:
+/// `ft.quarantined` (0/1), `ft.quarantine_strikes`, and
+/// `node.hb_stale` (0/1, heartbeat older than the monitor's timeout —
+/// the live-cluster jitter signal; the DES marks killed nodes stale
+/// the way the live monitor would see them).
+pub fn default_rules() -> Vec<Rule> {
+    vec![
+        Rule {
+            id: "quarantined",
+            scope: Scope::Node,
+            kind: RuleKind::Level("ft.quarantined"),
+            gate: None,
+            degraded: 1,
+            unhealthy: 1,
+        },
+        Rule {
+            id: "quarantine-strikes",
+            scope: Scope::Node,
+            kind: RuleKind::Level("ft.quarantine_strikes"),
+            gate: None,
+            degraded: 1,
+            unhealthy: 3,
+        },
+        Rule {
+            id: "heartbeat-stale",
+            scope: Scope::Node,
+            kind: RuleKind::Level("node.hb_stale"),
+            gate: None,
+            degraded: 1,
+            unhealthy: 1,
+        },
+        Rule {
+            id: "task-failure-slope",
+            scope: Scope::Node,
+            kind: RuleKind::SlopePerTick("node.tasks_failed"),
+            gate: None,
+            degraded: 1,
+            unhealthy: 5,
+        },
+        Rule {
+            id: "transfer-retry-slope",
+            scope: Scope::Cluster,
+            kind: RuleKind::SlopePerTick("gass.transfer_retries"),
+            gate: None,
+            degraded: 1,
+            unhealthy: 10,
+        },
+        // deadline pressure: speculative re-dispatches as a fraction of
+        // all dispatches — only meaningful when a task deadline is set
+        Rule {
+            id: "deadline-speculation",
+            scope: Scope::Cluster,
+            kind: RuleKind::RatioPct("jse.tasks_speculated", "jse.tasks_dispatched"),
+            gate: Some("jse.task_deadline_ns"),
+            degraded: 10,
+            unhealthy: 50,
+        },
+        Rule {
+            id: "failover-ratio",
+            scope: Scope::Cluster,
+            kind: RuleKind::RatioPct("jse.tasks_failed_over", "jse.tasks_dispatched"),
+            gate: None,
+            degraded: 5,
+            unhealthy: 25,
+        },
+    ]
+}
+
+fn slope_per_tick(ring: &HistoryRing, node: &str, name: &str) -> u64 {
+    let pts = ring.series(node, name);
+    match (pts.first(), pts.last()) {
+        (Some((t0, v0)), Some((t1, v1))) if t1 > t0 => {
+            v1.saturating_sub(*v0) / (t1 - t0)
+        }
+        _ => 0,
+    }
+}
+
+fn observe(ring: &HistoryRing, node: &str, kind: &RuleKind) -> u64 {
+    match kind {
+        RuleKind::Level(name) => ring.latest(node, name).unwrap_or(0),
+        RuleKind::SlopePerTick(name) => slope_per_tick(ring, node, name),
+        RuleKind::RatioPct(num, den) => {
+            let d = ring.latest(node, den).unwrap_or(0);
+            if d == 0 {
+                0
+            } else {
+                ring.latest(node, num).unwrap_or(0).saturating_mul(100) / d
+            }
+        }
+    }
+}
+
+fn judge(rule: &Rule, value: u64) -> Option<Finding> {
+    let verdict = if value >= rule.unhealthy {
+        Verdict::Unhealthy
+    } else if value >= rule.degraded {
+        Verdict::Degraded
+    } else {
+        return None;
+    };
+    let limit = if verdict == Verdict::Unhealthy {
+        rule.unhealthy
+    } else {
+        rule.degraded
+    };
+    Some(Finding { rule: rule.id, value, limit, verdict })
+}
+
+/// Evaluate the rule table against the ring's retained window.
+pub fn evaluate(ring: &HistoryRing, rules: &[Rule]) -> HealthReport {
+    let mut report = HealthReport::default();
+    for node in ring.nodes() {
+        report.nodes.insert(node, (Verdict::Healthy, Vec::new()));
+    }
+    let mut worst = Verdict::Healthy;
+    for rule in rules {
+        if let Some(gate) = rule.gate {
+            if ring.latest("cluster", gate).unwrap_or(0) == 0 {
+                continue;
+            }
+        }
+        match rule.scope {
+            Scope::Cluster => {
+                if let Some(f) = judge(rule, observe(ring, "cluster", &rule.kind)) {
+                    worst = worst.max(f.verdict);
+                    report.cluster_findings.push(f);
+                }
+            }
+            Scope::Node => {
+                for (node, (verdict, findings)) in report.nodes.iter_mut() {
+                    if let Some(f) = judge(rule, observe(ring, node, &rule.kind)) {
+                        *verdict = (*verdict).max(f.verdict);
+                        worst = worst.max(f.verdict);
+                        findings.push(f);
+                    }
+                }
+            }
+        }
+    }
+    report.cluster = Some(worst);
+    report
+}
+
+fn render_finding(out: &mut String, f: &Finding) {
+    out.push_str("{\"rule\":\"");
+    out.push_str(f.rule);
+    out.push_str("\",\"value\":");
+    out.push_str(&f.value.to_string());
+    out.push_str(",\"limit\":");
+    out.push_str(&f.limit.to_string());
+    out.push_str(",\"verdict\":\"");
+    out.push_str(f.verdict.as_str());
+    out.push_str("\"}");
+}
+
+impl HealthReport {
+    /// Nodes whose verdict is `Unhealthy` (feeds quarantine strikes).
+    pub fn unhealthy_nodes(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter(|(_, (v, _))| *v == Verdict::Unhealthy)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// Nodes whose verdict is worse than `Healthy` (feeds the JSE's
+    /// prefer-healthy dispatch ordering).
+    pub fn degraded_nodes(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter(|(_, (v, _))| *v != Verdict::Healthy)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// Canonical JSON body for `GET /health`. Sorted node order,
+    /// integer values — byte-identical across same-seed runs.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\"cluster\":\"");
+        out.push_str(self.cluster.unwrap_or_default().as_str());
+        out.push_str("\",\"nodes\":[");
+        let mut first = true;
+        for (node, (verdict, findings)) in self.nodes.iter() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str("{\"node\":\"");
+            out.push_str(&escape_json(node));
+            out.push_str("\",\"verdict\":\"");
+            out.push_str(verdict.as_str());
+            out.push_str("\",\"findings\":[");
+            for (i, f) in findings.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                render_finding(&mut out, f);
+            }
+            out.push_str("]}");
+        }
+        out.push_str("],\"cluster_findings\":[");
+        for (i, f) in self.cluster_findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            render_finding(&mut out, f);
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// ASCII verdict table for `geps doctor`, from a `GET /health` body.
+pub fn render_doctor(body: &str) -> String {
+    let Ok(j) = Json::parse(body) else {
+        return format!("doctor: unparseable /health body: {body}\n");
+    };
+    let cluster = j.get("cluster").and_then(Json::as_str).unwrap_or("unknown");
+    let mut out = format!("cluster: {cluster}\n");
+    let empty: &[Json] = &[];
+    let nodes = j.get("nodes").and_then(Json::as_arr).unwrap_or(empty);
+    if nodes.is_empty() {
+        out.push_str("  (no federated nodes yet)\n");
+    }
+    for n in nodes {
+        let name = n.get("node").and_then(Json::as_str).unwrap_or("?");
+        let verdict = n.get("verdict").and_then(Json::as_str).unwrap_or("?");
+        out.push_str(&format!("  {name:<12} {verdict:<10}"));
+        let fs = n.get("findings").and_then(Json::as_arr).unwrap_or(empty);
+        let notes: Vec<String> = fs
+            .iter()
+            .map(|f| {
+                format!(
+                    "{}={} (limit {})",
+                    f.get("rule").and_then(Json::as_str).unwrap_or("?"),
+                    f.get("value").and_then(Json::as_u64).unwrap_or(0),
+                    f.get("limit").and_then(Json::as_u64).unwrap_or(0),
+                )
+            })
+            .collect();
+        if !notes.is_empty() {
+            out.push_str(&notes.join("; "));
+        }
+        out.push('\n');
+    }
+    let cfs = j.get("cluster_findings").and_then(Json::as_arr).unwrap_or(empty);
+    for f in cfs {
+        out.push_str(&format!(
+            "  cluster: {} {}={} (limit {})\n",
+            f.get("verdict").and_then(Json::as_str).unwrap_or("?"),
+            f.get("rule").and_then(Json::as_str).unwrap_or("?"),
+            f.get("value").and_then(Json::as_u64).unwrap_or(0),
+            f.get("limit").and_then(Json::as_u64).unwrap_or(0),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::history::TickRows;
+
+    fn tick(ring: &HistoryRing, rows: &[(&str, &str, u64)]) {
+        let mut t = TickRows::new();
+        for (node, name, v) in rows {
+            t.insert(((*node).to_string(), (*name).to_string()), *v);
+        }
+        ring.record_tick(t);
+    }
+
+    #[test]
+    fn healthy_cluster_reports_healthy() {
+        let ring = HistoryRing::new(8, 1);
+        tick(&ring, &[("n1", "node.tasks_failed", 0), ("cluster", "jse.jobs_done", 1)]);
+        let r = evaluate(&ring, &default_rules());
+        assert_eq!(r.cluster, Some(Verdict::Healthy));
+        assert_eq!(r.nodes["n1"].0, Verdict::Healthy);
+        assert!(r.unhealthy_nodes().is_empty());
+        assert!(r.degraded_nodes().is_empty());
+    }
+
+    #[test]
+    fn quarantined_node_is_unhealthy() {
+        let ring = HistoryRing::new(8, 1);
+        tick(&ring, &[("n1", "ft.quarantined", 1), ("n2", "node.tasks_done", 3)]);
+        let r = evaluate(&ring, &default_rules());
+        assert_eq!(r.nodes["n1"].0, Verdict::Unhealthy);
+        assert_eq!(r.nodes["n2"].0, Verdict::Healthy);
+        assert_eq!(r.cluster, Some(Verdict::Unhealthy));
+        assert_eq!(r.unhealthy_nodes(), vec!["n1".to_string()]);
+    }
+
+    #[test]
+    fn slope_rule_needs_rate_not_level() {
+        let ring = HistoryRing::new(8, 1);
+        // a high but flat cumulative counter has slope 0
+        tick(&ring, &[("cluster", "gass.transfer_retries", 100)]);
+        tick(&ring, &[("cluster", "gass.transfer_retries", 100)]);
+        let r = evaluate(&ring, &default_rules());
+        assert_eq!(r.cluster, Some(Verdict::Healthy), "{r:?}");
+        // climbing 20/tick trips unhealthy (limit 10)
+        tick(&ring, &[("cluster", "gass.transfer_retries", 120)]);
+        tick(&ring, &[("cluster", "gass.transfer_retries", 140)]);
+        let r = evaluate(&ring, &default_rules());
+        assert_eq!(r.cluster, Some(Verdict::Unhealthy), "{r:?}");
+        assert!(r.cluster_findings.iter().any(|f| f.rule == "transfer-retry-slope"));
+    }
+
+    #[test]
+    fn deadline_rule_is_gated_on_configured_deadline() {
+        let heavy_speculation = |deadline: u64| {
+            let ring = HistoryRing::new(8, 1);
+            tick(
+                &ring,
+                &[
+                    ("cluster", "jse.task_deadline_ns", deadline),
+                    ("cluster", "jse.tasks_dispatched", 10),
+                    ("cluster", "jse.tasks_speculated", 6),
+                ],
+            );
+            evaluate(&ring, &default_rules())
+        };
+        // no deadline configured: speculation ratio rule must not fire
+        assert_eq!(heavy_speculation(0).cluster, Some(Verdict::Healthy));
+        // deadline set: 60% speculated >= 50% unhealthy limit
+        let r = heavy_speculation(1_000_000);
+        assert_eq!(r.cluster, Some(Verdict::Unhealthy));
+        assert!(r.cluster_findings.iter().any(|f| f.rule == "deadline-speculation"));
+    }
+
+    #[test]
+    fn render_is_deterministic_and_doctor_readable() {
+        let build = || {
+            let ring = HistoryRing::new(8, 1);
+            tick(
+                &ring,
+                &[
+                    ("n2", "ft.quarantine_strikes", 1),
+                    ("n1", "node.tasks_done", 5),
+                    ("cluster", "jse.tasks_dispatched", 10),
+                    ("cluster", "jse.tasks_failed_over", 1),
+                ],
+            );
+            evaluate(&ring, &default_rules()).render()
+        };
+        let a = build();
+        assert_eq!(a, build(), "same window must render byte-identically");
+        assert!(a.starts_with("{\"cluster\":\""), "{a}");
+        assert!(a.contains("\"node\":\"n1\""), "{a}");
+        let text = render_doctor(&a);
+        assert!(text.contains("n2"), "{text}");
+        assert!(text.contains("quarantine-strikes=1"), "{text}");
+        assert!(render_doctor("not json").contains("unparseable"));
+    }
+}

@@ -1,0 +1,402 @@
+//! Metrics federation and the bounded time-series ring.
+//!
+//! Each node actor records into its own `metrics::Registry` and ships
+//! cumulative [`Snapshot`]s to the leader as `MetricsReport` frames on
+//! the heartbeat cadence. The [`Federation`] folds them: freshest
+//! sequence number wins per node, so dropped or reordered reports never
+//! skew the roll-up (reports are cumulative, not deltas — folding the
+//! same report twice is idempotent by construction because we *replace*
+//! rather than accumulate).
+//!
+//! The [`HistoryRing`] samples scalar series from the federated view on
+//! a fixed tick (`[obs] history_ticks` / `history_interval`; sim time
+//! in DES runs, never wall clock for cadence *content*) and renders a
+//! canonical JSON body for `GET /metrics/history`. Determinism
+//! contract: rows are `BTreeMap<(node, name), u64>`, ticks are numbered
+//! 0.., and the render walks everything in sorted order — two same-seed
+//! DES runs produce byte-identical bodies.
+
+use crate::metrics::{Registry, Snapshot};
+use crate::util::lock;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Leader-side fold point for per-node metric snapshots.
+#[derive(Debug, Default)]
+pub struct Federation {
+    nodes: Mutex<BTreeMap<String, (u64, Snapshot)>>,
+}
+
+impl Federation {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold a node's report. Returns `false` (and ignores the payload)
+    /// when `seq` is not strictly newer than the last accepted report
+    /// from this node — stale reports from a slow channel are expected
+    /// traffic, not errors.
+    pub fn report(&self, node: &str, seq: u64, snap: Snapshot) -> bool {
+        let mut g = lock(&self.nodes);
+        match g.get(node) {
+            Some((last, _)) if *last >= seq => false,
+            _ => {
+                g.insert(node.to_string(), (seq, snap));
+                true
+            }
+        }
+    }
+
+    /// Drop a node's snapshot (it was killed or left the grid); its
+    /// series stop appearing in new ticks and labeled scrapes.
+    pub fn forget(&self, node: &str) {
+        lock(&self.nodes).remove(node);
+    }
+
+    /// Sorted point-in-time copy of every node's freshest snapshot.
+    pub fn snapshots(&self) -> Vec<(String, Snapshot)> {
+        lock(&self.nodes)
+            .iter()
+            .map(|(n, (_, s))| (n.clone(), s.clone()))
+            .collect()
+    }
+}
+
+/// Scalar series rows for one tick, keyed `(node, name)`. The pseudo
+/// node `"cluster"` carries leader/shared-registry series.
+pub type TickRows = BTreeMap<(String, String), u64>;
+
+/// Build the standard sample rows: every counter and gauge, plus a
+/// derived `<name>.p99` per histogram, for the shared registry (under
+/// the `"cluster"` pseudo node) and each federated node snapshot.
+/// Callers append extra derived rows (quarantine strikes, heartbeat
+/// staleness) before recording the tick.
+pub fn sample_rows(shared: &Registry, nodes: &[(String, Snapshot)]) -> TickRows {
+    let mut rows = TickRows::new();
+    let cluster = Snapshot::from_registry(shared);
+    for (node, snap) in
+        std::iter::once(&("cluster".to_string(), cluster)).chain(nodes.iter())
+    {
+        for (name, v) in snap.counters.iter().chain(snap.gauges.iter()) {
+            rows.insert((node.clone(), name.clone()), *v);
+        }
+        for (name, h) in snap.hists.iter() {
+            rows.insert((node.clone(), format!("{name}.p99")), h.quantile(0.99));
+        }
+    }
+    rows
+}
+
+#[derive(Debug, Clone)]
+struct Tick {
+    t: u64,
+    rows: TickRows,
+}
+
+/// Bounded ring of sampled ticks.
+#[derive(Debug)]
+pub struct HistoryRing {
+    cap: usize,
+    interval_ns: u64,
+    inner: Mutex<RingInner>,
+}
+
+#[derive(Debug, Default)]
+struct RingInner {
+    ticks: VecDeque<Tick>,
+    next_t: u64,
+}
+
+impl HistoryRing {
+    /// `cap` ticks retained; `interval_ns` is advisory metadata echoed
+    /// in the render (the *caller* drives the cadence — sim time in
+    /// DES, the broker loop in live mode).
+    pub fn new(cap: usize, interval_ns: u64) -> Self {
+        HistoryRing {
+            cap: cap.max(1),
+            interval_ns,
+            inner: Mutex::new(RingInner::default()),
+        }
+    }
+
+    pub fn interval_ns(&self) -> u64 {
+        self.interval_ns
+    }
+
+    /// Record one tick; ticks are numbered 0.. in recording order and
+    /// the oldest falls off past `cap`.
+    pub fn record_tick(&self, rows: TickRows) -> u64 {
+        let mut g = lock(&self.inner);
+        let t = g.next_t;
+        g.next_t += 1;
+        g.ticks.push_back(Tick { t, rows });
+        while g.ticks.len() > self.cap {
+            g.ticks.pop_front();
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.inner).ticks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All node ids seen in retained ticks (excluding `"cluster"`).
+    pub fn nodes(&self) -> Vec<String> {
+        let mut out = std::collections::BTreeSet::new();
+        for tick in lock(&self.inner).ticks.iter() {
+            for (node, _) in tick.rows.keys() {
+                if node != "cluster" {
+                    out.insert(node.clone());
+                }
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    /// One series as `(tick, value)` points, oldest first. Ticks where
+    /// the series was absent (node not yet joined, already gone) are
+    /// skipped.
+    pub fn series(&self, node: &str, name: &str) -> Vec<(u64, u64)> {
+        let key = (node.to_string(), name.to_string());
+        lock(&self.inner)
+            .ticks
+            .iter()
+            .filter_map(|tk| tk.rows.get(&key).map(|v| (tk.t, *v)))
+            .collect()
+    }
+
+    /// Newest value of a series, if any tick carries it.
+    pub fn latest(&self, node: &str, name: &str) -> Option<u64> {
+        let key = (node.to_string(), name.to_string());
+        lock(&self.inner)
+            .ticks
+            .iter()
+            .rev()
+            .find_map(|tk| tk.rows.get(&key).copied())
+    }
+
+    /// Canonical JSON body for `GET /metrics/history`. Optional exact
+    /// filters on series name and node id. Byte-identical across
+    /// same-seed runs: sorted rows, integer values, no wall clock.
+    pub fn render(&self, name: Option<&str>, node: Option<&str>) -> String {
+        let g = lock(&self.inner);
+        let mut out = String::from("{\"interval_ns\":");
+        out.push_str(&self.interval_ns.to_string());
+        out.push_str(",\"ticks\":[");
+        let mut first_tick = true;
+        for tick in g.ticks.iter() {
+            if !first_tick {
+                out.push(',');
+            }
+            first_tick = false;
+            out.push_str("{\"t\":");
+            out.push_str(&tick.t.to_string());
+            out.push_str(",\"series\":[");
+            let mut first_row = true;
+            for ((n, m), v) in tick.rows.iter() {
+                if node.is_some_and(|f| f != n) || name.is_some_and(|f| f != m) {
+                    continue;
+                }
+                if !first_row {
+                    out.push(',');
+                }
+                first_row = false;
+                out.push_str("{\"node\":\"");
+                out.push_str(&escape_json(n));
+                out.push_str("\",\"name\":\"");
+                out.push_str(&escape_json(m));
+                out.push_str("\",\"v\":");
+                out.push_str(&v.to_string());
+                out.push('}');
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// ASCII dashboard for `geps top`, from a `GET /metrics/history` body:
+/// one row per node (tasks in flight, done, failed, busy-ns p99,
+/// quarantine strikes) from the newest tick, plus a cluster footer
+/// (jobs done, qcache hit rate, transfer retries).
+pub fn render_top(body: &str) -> String {
+    let Ok(j) = crate::util::json::Json::parse(body) else {
+        return format!("top: unparseable /metrics/history body: {body}\n");
+    };
+    use crate::util::json::Json;
+    let empty: &[Json] = &[];
+    let ticks = j.get("ticks").and_then(Json::as_arr).unwrap_or(empty);
+    let Some(last) = ticks.last() else {
+        return "top: no ticks recorded yet\n".to_string();
+    };
+    let t = last.get("t").and_then(Json::as_u64).unwrap_or(0);
+    // (node -> name -> v) from the newest tick
+    let mut rows: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+    for s in last.get("series").and_then(Json::as_arr).unwrap_or(empty) {
+        let node = s.get("node").and_then(Json::as_str).unwrap_or("");
+        let name = s.get("name").and_then(Json::as_str).unwrap_or("");
+        let v = s.get("v").and_then(Json::as_u64).unwrap_or(0);
+        rows.entry(node.to_string())
+            .or_default()
+            .insert(name.to_string(), v);
+    }
+    let n_nodes =
+        rows.len().saturating_sub(usize::from(rows.contains_key("cluster")));
+    let mut out = format!(
+        "tick {t}  ({n_nodes} node{})\n{:<12} {:>9} {:>7} {:>7} {:>14} {:>8}\n",
+        if n_nodes == 1 { "" } else { "s" },
+        "node",
+        "inflight",
+        "done",
+        "failed",
+        "busy_p99_ns",
+        "strikes",
+    );
+    for (node, m) in rows.iter() {
+        if node == "cluster" {
+            continue;
+        }
+        let get = |k: &str| m.get(k).copied().unwrap_or(0);
+        // busy p99: worst pipeline on the node
+        let busy = m
+            .iter()
+            .filter(|(k, _)| {
+                k.starts_with("node.pipeline.") && k.ends_with(".task_busy_ns.p99")
+            })
+            .map(|(_, v)| *v)
+            .max()
+            .unwrap_or(0);
+        out.push_str(&format!(
+            "{node:<12} {:>9} {:>7} {:>7} {busy:>14} {:>8}\n",
+            get("node.tasks_in_flight"),
+            get("node.tasks_done"),
+            get("node.tasks_failed"),
+            get("ft.quarantine_strikes"),
+        ));
+    }
+    if let Some(c) = rows.get("cluster") {
+        let get = |k: &str| c.get(k).copied().unwrap_or(0);
+        let done = get("jse.jobs_done");
+        let hits = get("qcache.hits_full");
+        let hit_pct = if done == 0 { 0 } else { hits.saturating_mul(100) / done };
+        out.push_str(&format!(
+            "cluster: jobs_done={done} qcache_hit={hit_pct}% \
+             transfer_retries={} tasks_outstanding={}\n",
+            get("gass.transfer_retries"),
+            get("jse.tasks_outstanding"),
+        ));
+    }
+    out
+}
+
+/// Minimal JSON string escaping (node ids and metric names are plain
+/// identifiers in practice, but the render must never emit invalid
+/// JSON for a hostile name).
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(counter: &str, v: u64) -> Snapshot {
+        let r = Registry::new();
+        r.counter(counter).add(v);
+        Snapshot::from_registry(&r)
+    }
+
+    #[test]
+    fn federation_is_seq_guarded_and_idempotent() {
+        let f = Federation::new();
+        assert!(f.report("n1", 1, snap("node.tasks_done", 5)));
+        assert!(!f.report("n1", 1, snap("node.tasks_done", 9)), "same seq is stale");
+        assert!(!f.report("n1", 0, snap("node.tasks_done", 9)), "older seq is stale");
+        assert!(f.report("n1", 2, snap("node.tasks_done", 9)));
+        let snaps = f.snapshots();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].1.counters["node.tasks_done"], 9);
+        f.forget("n1");
+        assert!(f.snapshots().is_empty());
+    }
+
+    #[test]
+    fn ring_bounds_and_numbers_ticks() {
+        let ring = HistoryRing::new(2, 1000);
+        for i in 0..5u64 {
+            let mut rows = TickRows::new();
+            rows.insert(("cluster".into(), "jse.jobs_done".into()), i);
+            ring.record_tick(rows);
+        }
+        assert_eq!(ring.len(), 2);
+        // oldest retained tick is t=3
+        assert_eq!(ring.series("cluster", "jse.jobs_done"), vec![(3, 3), (4, 4)]);
+        assert_eq!(ring.latest("cluster", "jse.jobs_done"), Some(4));
+        assert_eq!(ring.latest("cluster", "nope"), None);
+    }
+
+    #[test]
+    fn render_is_canonical_and_filterable() {
+        let build = || {
+            let ring = HistoryRing::new(8, 42);
+            let mut rows = TickRows::new();
+            // inserted out of order — BTreeMap sorts
+            rows.insert(("n2".into(), "node.tasks_done".into()), 7);
+            rows.insert(("cluster".into(), "jse.jobs_done".into()), 1);
+            rows.insert(("n1".into(), "node.tasks_done".into()), 3);
+            ring.record_tick(rows);
+            ring
+        };
+        let a = build().render(None, None);
+        let b = build().render(None, None);
+        assert_eq!(a, b, "same inputs must render byte-identically");
+        assert!(a.starts_with("{\"interval_ns\":42,\"ticks\":["), "{a}");
+        let c = a.find("cluster").unwrap();
+        let n1 = a.find("\"n1\"").unwrap();
+        let n2 = a.find("\"n2\"").unwrap();
+        assert!(c < n1 && n1 < n2, "nodes must render sorted: {a}");
+        let only_n1 = build().render(None, Some("n1"));
+        assert!(only_n1.contains("\"n1\"") && !only_n1.contains("\"n2\""));
+        let only_name = build().render(Some("jse.jobs_done"), None);
+        assert!(only_name.contains("jse.jobs_done"));
+        assert!(!only_name.contains("node.tasks_done"));
+        assert_eq!(build().nodes(), vec!["n1".to_string(), "n2".to_string()]);
+    }
+
+    #[test]
+    fn sample_rows_cover_shared_and_nodes() {
+        let shared = Registry::new();
+        shared.counter("jse.jobs_done").add(2);
+        shared.histogram("jse.task_busy_ns").record(1024);
+        let node_reg = Registry::new();
+        node_reg.gauge("node.tasks_in_flight").set(1);
+        let nodes = vec![("g".to_string(), Snapshot::from_registry(&node_reg))];
+        let rows = sample_rows(&shared, &nodes);
+        assert_eq!(rows[&("cluster".into(), "jse.jobs_done".into())], 2);
+        assert_eq!(rows[&("cluster".into(), "jse.task_busy_ns.p99".into())], 2047);
+        assert_eq!(rows[&("g".into(), "node.tasks_in_flight".into())], 1);
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape_json("plain.name"), "plain.name");
+        assert_eq!(escape_json("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+    }
+}

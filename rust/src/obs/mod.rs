@@ -21,7 +21,17 @@
 //!   wildcard families from `metrics::names::REGISTERED` label-ified
 //!   (`node.pipeline.<i>.task_busy_ns` → one metric with a `pipeline`
 //!   label) and a tiny in-repo exposition checker.
+//! - **Metrics federation + history** ([`history`]): per-node
+//!   registries shipped to the leader as `MetricsReport` snapshots,
+//!   folded into node-labeled Prometheus families and a bounded
+//!   time-series ring behind `GET /metrics/history` and `geps top`.
+//! - **Health engine** ([`health`]): a declarative rule table
+//!   (threshold / slope / ratio over the federated series) evaluated
+//!   into per-node verdicts behind `GET /health` and `geps doctor`,
+//!   feeding quarantine strikes and prefer-healthy placement.
 
+pub mod health;
+pub mod history;
 pub mod prom;
 
 use crate::metrics::Registry;

@@ -14,7 +14,7 @@
 //! ascending `le` order. `check_exposition` is the tiny in-repo
 //! checker CI and the tests parse renders with.
 
-use crate::metrics::{Histogram, Registry};
+use crate::metrics::{Histogram, Registry, Snapshot};
 use std::collections::BTreeMap;
 
 /// Label names for the wildcard families in
@@ -27,6 +27,35 @@ pub const PROM_FAMILIES: &[(&str, &str)] = &[
     ("jse.jobs_policy.*", "policy"),
     ("node.pipeline.*.task_busy_ns", "pipeline"),
 ];
+
+/// The federated (per-node) metric families: every name a node actor
+/// records into its private registry and ships in `MetricsReport`
+/// snapshots. [`render_federated`] emits these once as the cluster
+/// roll-up and once per node with a `node` label (always the first
+/// label). gepslint's `node-family-registry` pass keeps this table 1:1
+/// with the `node.`-prefixed entries of `metrics::names::REGISTERED`,
+/// so the catalogue stays authoritative and the `node` label name is
+/// fixed in one place.
+pub const NODE_FAMILIES: &[&str] = &[
+    "node.drain_reorder_depth",
+    "node.pack_stall_ns",
+    "node.pipeline.*.task_busy_ns",
+    "node.pipelines",
+    "node.tasks_done",
+    "node.tasks_failed",
+    "node.tasks_in_flight",
+];
+
+/// Does `name` belong to a federated family (exact or `*` wildcard)?
+fn is_node_family(name: &str) -> bool {
+    NODE_FAMILIES.iter().any(|pat| match pat.split_once('*') {
+        None => *pat == name,
+        Some((pre, suf)) => name
+            .strip_prefix(pre)
+            .and_then(|m| m.strip_suffix(suf))
+            .is_some_and(|mid| !mid.is_empty()),
+    })
+}
 
 /// Mangle a dotted registry name into a Prometheus metric name.
 fn mangle(name: &str) -> String {
@@ -80,43 +109,65 @@ struct Family {
     lines: Vec<String>,
 }
 
+/// Emit one scalar sample. `extra` is a ready-made label prefix
+/// (`node="g"` or empty) that always sorts before the family label.
+fn scalar_with(
+    out: &mut BTreeMap<String, Family>,
+    name: &str,
+    value: u64,
+    ty: &'static str,
+    extra: &str,
+) {
+    let (fname, labels) = match family_for(name) {
+        Some((fname, label, lv)) => {
+            let fam_label = format!("{label}=\"{}\"", escape_label(&lv));
+            let labels = if extra.is_empty() {
+                fam_label
+            } else {
+                format!("{extra},{fam_label}")
+            };
+            (fname, labels)
+        }
+        None => (mangle(name), extra.to_string()),
+    };
+    let fam = out
+        .entry(fname.clone())
+        .or_insert_with(|| Family { ty, lines: Vec::new() });
+    if labels.is_empty() {
+        fam.lines.push(format!("{fname} {value}"));
+    } else {
+        fam.lines.push(format!("{fname}{{{labels}}} {value}"));
+    }
+}
+
 fn scalar(
     out: &mut BTreeMap<String, Family>,
     name: &str,
     value: u64,
     ty: &'static str,
 ) {
-    match family_for(name) {
-        Some((fname, label, lv)) => {
-            let line =
-                format!("{fname}{{{label}=\"{}\"}} {value}", escape_label(&lv));
-            out.entry(fname).or_insert_with(|| Family { ty, lines: Vec::new() })
-                .lines
-                .push(line);
-        }
-        None => {
-            let fname = mangle(name);
-            out.entry(fname.clone())
-                .or_insert_with(|| Family { ty, lines: Vec::new() })
-                .lines
-                .push(format!("{fname} {value}"));
-        }
-    }
+    scalar_with(out, name, value, ty, "");
 }
 
-fn histogram(
+fn histogram_with(
     out: &mut BTreeMap<String, Family>,
     name: &str,
     buckets: &[u64; 64],
     sum: u64,
     count: u64,
+    extra: &str,
 ) {
-    let (fname, labels) = match family_for(name) {
+    let (fname, mut labels) = match family_for(name) {
         Some((fname, label, lv)) => {
             (fname, format!("{label}=\"{}\",", escape_label(&lv)))
         }
         None => (mangle(name), String::new()),
     };
+    if !extra.is_empty() {
+        // `labels` is empty or comma-terminated, so the result stays
+        // comma-terminated either way
+        labels = format!("{extra},{labels}");
+    }
     let fam = out
         .entry(fname.clone())
         .or_insert_with(|| Family { ty: "histogram", lines: Vec::new() });
@@ -150,6 +201,16 @@ fn histogram(
     fam.lines.push(wrap("count", count));
 }
 
+fn histogram(
+    out: &mut BTreeMap<String, Family>,
+    name: &str,
+    buckets: &[u64; 64],
+    sum: u64,
+    count: u64,
+) {
+    histogram_with(out, name, buckets, sum, count, "");
+}
+
 /// Render the registry in the Prometheus text exposition format.
 /// Deterministic: repeat renders of an unchanged registry are
 /// byte-identical.
@@ -171,6 +232,69 @@ pub fn render(reg: &Registry) -> String {
         // is already canonical (ascending le, then sum/count)
         let mut lines = fam.lines.clone();
         if fam.ty != "histogram" {
+            lines.sort();
+        }
+        for l in &lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Render the *federated* exposition: the shared (leader) registry
+/// plus every node's freshest `MetricsReport` snapshot.
+///
+/// Each federated family appears twice: once as the cluster roll-up
+/// (no `node` label; counters and histograms summed element-wise
+/// across nodes, gauges folded by max) and once per node with
+/// `node="<id>"` as the first label. Because the roll-up is computed
+/// from the same snapshots as the labeled series, the labeled samples
+/// of a counter family sum *exactly* to the roll-up sample at any
+/// scrape — and the roll-up itself is bit-identical to what the old
+/// single shared registry would have accumulated (adds commute).
+pub fn render_federated(shared: &Registry, nodes: &[(String, Snapshot)]) -> String {
+    // roll-up view: shared registry + every node snapshot folded in
+    let merged = Registry::new();
+    Snapshot::from_registry(shared).merge_into(&merged);
+    for (_, snap) in nodes {
+        snap.merge_into(&merged);
+    }
+    let mut fams: BTreeMap<String, Family> = BTreeMap::new();
+    for (name, v) in merged.counters_snapshot() {
+        scalar(&mut fams, &name, v, "counter");
+    }
+    for (name, v) in merged.gauges_snapshot() {
+        scalar(&mut fams, &name, v, "gauge");
+    }
+    for (name, buckets, sum, count) in merged.histograms_snapshot() {
+        histogram(&mut fams, &name, &buckets, sum, count);
+    }
+    // per-node labeled series for the declared federated families
+    for (node, snap) in nodes {
+        let extra = format!("node=\"{}\"", escape_label(node));
+        for (name, v) in snap.counters.iter() {
+            if is_node_family(name) {
+                scalar_with(&mut fams, name, *v, "counter", &extra);
+            }
+        }
+        for (name, v) in snap.gauges.iter() {
+            if is_node_family(name) {
+                scalar_with(&mut fams, name, *v, "gauge", &extra);
+            }
+        }
+        for (name, h) in snap.hists.iter() {
+            if is_node_family(name) {
+                histogram_with(&mut fams, name, &h.buckets, h.sum, h.count, &extra);
+            }
+        }
+    }
+    let mut out = String::new();
+    for (fname, fam) in &fams {
+        out.push_str(&format!("# TYPE {fname} {}\n", fam.ty));
+        let mut lines = fam.lines.clone();
+        if fam.ty != "histogram" {
+            // unlabeled roll-up sorts before `{`-labeled node series
             lines.sort();
         }
         for l in &lines {
@@ -546,6 +670,79 @@ mod tests {
              geps_h_sum 9\ngeps_h_count 2"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn federated_render_labels_and_rolls_up() {
+        let shared = Registry::new();
+        shared.counter("jse.jobs_done").add(2);
+        shared.histogram("jse.task_busy_ns").record(900);
+        let node_snap = |stall: u64, busy: u64, inflight: u64| {
+            let r = Registry::new();
+            r.counter("node.pack_stall_ns").add(stall);
+            r.histogram("node.pipeline.0.task_busy_ns").record(busy);
+            r.gauge("node.tasks_in_flight").set(inflight);
+            r.gauge("node.pipelines").set(2);
+            Snapshot::from_registry(&r)
+        };
+        let nodes = vec![
+            ("bilbo".to_string(), node_snap(100, 512, 1)),
+            ("gandalf".to_string(), node_snap(40, 2048, 3)),
+        ];
+        let text = render_federated(&shared, &nodes);
+        check_exposition(&text).expect(&text);
+        assert_eq!(text, render_federated(&shared, &nodes), "must be repeatable");
+        // roll-up: counters sum, gauges max
+        assert!(text.contains("geps_node_pack_stall_ns 140"), "{text}");
+        assert!(text.contains("geps_node_tasks_in_flight 3"), "{text}");
+        assert!(text.contains("geps_node_pipelines 2"), "{text}");
+        // node-labeled series, node label first
+        assert!(text.contains("geps_node_pack_stall_ns{node=\"bilbo\"} 100"), "{text}");
+        assert!(text.contains("geps_node_pack_stall_ns{node=\"gandalf\"} 40"), "{text}");
+        let labeled_hist =
+            "geps_node_pipeline_task_busy_ns_count{node=\"gandalf\",pipeline=\"0\"} 1";
+        assert!(text.contains(labeled_hist), "{text}");
+        // non-federated shared families never get a node label
+        assert!(!text.contains("geps_jse_jobs_done{"), "{text}");
+        // labeled counter samples sum exactly to the roll-up sample
+        let rollup: u64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix("geps_node_pack_stall_ns "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        let labeled: u64 = text
+            .lines()
+            .filter(|l| l.starts_with("geps_node_pack_stall_ns{"))
+            .filter_map(|l| l.rsplit_once(' '))
+            .map(|(_, v)| v.parse::<u64>().unwrap())
+            .sum();
+        assert_eq!(rollup, labeled);
+    }
+
+    #[test]
+    fn federated_render_without_nodes_matches_plain_render() {
+        // before any MetricsReport arrives the federated view must
+        // degrade to exactly the shared-registry render
+        let shared = sample_registry();
+        assert_eq!(render_federated(&shared, &[]), render(&shared));
+    }
+
+    #[test]
+    fn node_families_match_registered_node_names() {
+        // the node-family-registry lint enforces this over source text;
+        // mirror it at runtime: NODE_FAMILIES must be exactly the
+        // `node.`-prefixed entries of REGISTERED, in order
+        let node_entries: Vec<&str> = REGISTERED
+            .iter()
+            .copied()
+            .filter(|n| n.starts_with("node."))
+            .collect();
+        assert_eq!(NODE_FAMILIES, node_entries.as_slice());
+        assert!(is_node_family("node.pack_stall_ns"));
+        assert!(is_node_family("node.pipeline.3.task_busy_ns"));
+        assert!(!is_node_family("node.pipeline..task_busy_ns"), "empty wildcard");
+        assert!(!is_node_family("jse.jobs_done"));
     }
 
     #[test]

@@ -29,7 +29,15 @@
 //!   see [`crate::qcache`])
 //! - `GET /metrics` — coordinator metrics (jobs_queued, jobs_in_flight,
 //!   tasks_outstanding, per-policy job counters, nodes_joined,
-//!   bricks_rebalanced, …)
+//!   bricks_rebalanced, …); `?format=prometheus` federates node-local
+//!   families under a `node` label while keeping the unlabeled cluster
+//!   roll-up bit-identical to a single shared registry
+//! - `GET /metrics/history?name=...&node=...` — the bounded
+//!   time-series ring sampled from the federated telemetry on the
+//!   `[obs]` cadence (`geps top` renders it as an ASCII dashboard)
+//! - `GET /health` — per-node verdicts from the telemetry-driven
+//!   health rule table ([`crate::obs::health`]; `geps doctor` renders
+//!   them)
 //!
 //! The portal is a thin translation layer over [`ClusterHandle`]; all
 //! grid mechanics stay hidden behind it, which is the paper's main
@@ -62,8 +70,24 @@ const INDEX_HTML: &str = r#"<!doctype html>
   <li>GET /histogram/&lt;id&gt; &mdash; merged feature histograms</li>
   <li>GET /cache &mdash; qcache statistics (entries, bytes, hit/share counters)</li>
   <li>POST /cache/flush &mdash; drop all cached query results</li>
-  <li>GET /metrics &mdash; coordinator metrics (add ?format=prometheus for the Prometheus text exposition: counters, gauges, cumulative histogram buckets, wildcard families label-ified)</li>
+  <li>GET /metrics &mdash; coordinator metrics (add ?format=prometheus for the Prometheus text exposition: counters, gauges, cumulative histogram buckets, wildcard families label-ified, node-local families federated per node under a <code>node</code> label)</li>
+  <li>GET /metrics/history?name=&lt;series&gt;&amp;node=&lt;id&gt; &mdash; bounded time-series ring over the federated telemetry (<code>[obs] history_ticks</code> / <code>history_interval</code>; <code>geps top</code> renders it as a dashboard)</li>
+  <li>GET /health &mdash; telemetry-driven per-node health verdicts from the declarative rule table (<code>geps doctor</code> renders them)</li>
 </ul>
+<p><b>Per-node metrics federation:</b> each node actor records into its
+own registry and ships cumulative snapshots to the leader as
+<code>MetricsReport</code> frames on the heartbeat cadence; the freshest
+sequence number wins per node, so dropped or reordered reports never
+skew the fold. The Prometheus exposition labels node-local families
+(<code>geps_node_tasks_done{node="gandalf"}</code>) while the unlabeled
+cluster roll-up stays bit-identical to what one shared registry would
+have produced. The broker samples the federated view into a bounded
+time-series ring (<code>GET /metrics/history</code>) on the
+<code>[obs]</code> cadence and evaluates the health rule table over it
+(<code>GET /health</code>): quarantine state, heartbeat staleness,
+failure slopes and speculation ratios roll up into per-node verdicts,
+unhealthy nodes accumulate quarantine strikes, and degraded nodes are
+offered work only after every healthy node is saturated.</p>
 <p><b>Query-result cache (qcache):</b> submissions are canonicalized
 (constant folding, commutative operand ordering, double-negation
 elimination) and fingerprinted together with the histogram spec, the
@@ -160,7 +184,14 @@ fn index_html() -> String {
                 format!(" &mdash; Prometheus label <code>{l}</code>")
             })
             .unwrap_or_default();
-        cat.push_str(&format!("  <li><code>{name}</code>{label}</li>\n"));
+        let fed = if crate::obs::prom::NODE_FAMILIES.contains(name) {
+            " &mdash; federated per node (<code>node</code> label)"
+        } else {
+            ""
+        };
+        cat.push_str(&format!(
+            "  <li><code>{name}</code>{label}{fed}</li>\n"
+        ));
     }
     cat.push_str("</ul>\n</body></html>");
     INDEX_HTML.replace("</body></html>", &cat)
@@ -523,14 +554,30 @@ pub fn handle(cluster: &ClusterHandle, req: &Request) -> Response {
                 .map(|q| q.split('&').any(|kv| kv == "format=prometheus"))
                 .unwrap_or(false);
             if prometheus {
-                Response::text(
-                    200,
-                    crate::obs::prom::render(&cluster.metrics),
-                )
+                // federated exposition: node-labeled families + the
+                // bit-identical unlabeled cluster roll-up
+                Response::text(200, cluster.metrics_text())
             } else {
-                Response::text(200, cluster.metrics.render())
+                Response::text(200, cluster.metrics_plain())
             }
         }
+        ("GET", "/metrics/history") => {
+            let param = |key: &str| {
+                query.and_then(|q| {
+                    q.split('&')
+                        .find_map(|kv| kv.strip_prefix(key).map(url_decode))
+                })
+            };
+            let name = param("name=");
+            let node = param("node=");
+            // pre-rendered canonical body: passing the string through
+            // keeps the byte-identity contract
+            Response::json(
+                200,
+                cluster.history_json(name.as_deref(), node.as_deref()),
+            )
+        }
+        ("GET", "/health") => Response::json(200, cluster.health_json()),
         ("GET", _) => Response::json(404, Json::obj().set("error", "not found")),
         _ => Response::json(405, Json::obj().set("error", "method not allowed")),
     }

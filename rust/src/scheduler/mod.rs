@@ -147,6 +147,13 @@ pub trait Scheduler: Send {
     /// with the updated context, so most need no queue surgery.
     fn on_node_up(&mut self, _node: &str, _ctx: &SchedCtx) {}
 
+    /// The telemetry health engine re-classified `node` (healthy ⇄
+    /// degraded/unhealthy). Advisory: the JSE already orders its idle-slot
+    /// offers healthy-first, so the default is a no-op; adaptive policies
+    /// may additionally shrink packet sizes or steer queued affinity work
+    /// away from a sick node.
+    fn on_health(&mut self, _node: &str, _healthy: bool, _ctx: &SchedCtx) {}
+
     /// All work assigned AND completed.
     fn is_done(&self) -> bool;
 

@@ -21,17 +21,31 @@
 //! PJRT kernel throughput scaled to the paper's 1 MB events — see
 //! EXPERIMENTS.md §Calibration and `runtime::calibrate`.
 
+use crate::metrics::{Registry, Snapshot};
 use crate::netsim::{transfer_time, Topology, TransferSpec};
-use crate::scheduler::{Policy, SchedCtx, Scheduler, Task};
+use crate::obs::health::{default_rules, evaluate};
+use crate::obs::history::{sample_rows, Federation, HistoryRing};
+use crate::scheduler::{NodeState, Policy, SchedCtx, Scheduler, Task};
 use crate::sim::engine::Engine;
 use crate::sim::resource::{MultiSlot, SerialResource};
 use crate::util::ByteSize;
+use crate::wire::Message;
 use std::collections::BTreeMap;
 
 /// Kill `node` at `at_s` seconds of virtual time.
 #[derive(Debug, Clone)]
 pub struct FailureSpec {
     pub node: String,
+    pub at_s: f64,
+}
+
+/// Join `node` to the grid at `at_s` seconds of virtual time (elastic
+/// membership churn — the DES counterpart of `geps add-node`).
+#[derive(Debug, Clone)]
+pub struct JoinSpec {
+    pub node: String,
+    pub speed: f64,
+    pub slots: usize,
     pub at_s: f64,
 }
 
@@ -76,6 +90,13 @@ pub struct ScenarioConfig {
     /// faithful to the 2003 prototype.
     pub stage_parallel: bool,
     pub failures: Vec<FailureSpec>,
+    /// nodes that join the grid mid-run (kill+join churn scenarios)
+    pub joins: Vec<JoinSpec>,
+    /// telemetry history ring capacity, `[obs] history_ticks`
+    pub history_ticks: usize,
+    /// telemetry sampling cadence in *virtual* seconds,
+    /// `[obs] history_interval` — never wall clock
+    pub history_interval_s: f64,
 }
 
 impl ScenarioConfig {
@@ -103,6 +124,9 @@ impl ScenarioConfig {
             raw_at_leader: true, // the prototype §6 behaviour
             stage_parallel: false,
             failures: Vec::new(),
+            joins: Vec::new(),
+            history_ticks: 64,
+            history_interval_s: 30.0,
         }
     }
 
@@ -210,6 +234,11 @@ pub struct RunReport {
     pub lost_bricks: usize,
     /// job finished cleanly (all non-lost work processed)
     pub completed: bool,
+    /// canonical `GET /metrics/history` body sampled on virtual-time
+    /// ticks — byte-identical across same-config runs
+    pub history_body: String,
+    /// canonical `GET /health` body evaluated over the final window
+    pub health_body: String,
 }
 
 impl RunReport {
@@ -241,6 +270,21 @@ struct World {
     tasks_failed: usize,
     last_result_arrival: f64,
     finish_time: Option<f64>,
+    /// per-node private metric registries — federated to the leader
+    /// through real `MetricsReport` wire frames on the telemetry tick
+    node_regs: BTreeMap<String, Registry>,
+    federation: Federation,
+    ring: HistoryRing,
+    /// next report sequence number per node
+    obs_seq: BTreeMap<String, u64>,
+    /// consecutive ticks where the engine processed nothing but the
+    /// tick itself (the never-finishing-run ticker brake)
+    obs_idle: u32,
+    obs_last_processed: u64,
+    /// ticker paused (idle brake fired); completions restart it
+    obs_stopped: bool,
+    /// the finish-time tick was recorded — no further samples
+    obs_done: bool,
 }
 
 impl World {
@@ -278,13 +322,19 @@ impl Scenario {
         let mut nics = BTreeMap::new();
         let mut cpus = BTreeMap::new();
         let mut running = BTreeMap::new();
+        let mut node_regs = BTreeMap::new();
         for h in cfg.topology.hosts() {
             nics.insert(h.clone(), SerialResource::new());
         }
         for w in cfg.topology.workers() {
             cpus.insert(w.clone(), MultiSlot::new(cfg.node_slots(&w)));
             running.insert(w.clone(), 0);
+            node_regs.insert(w.clone(), Registry::new());
         }
+        let ring = HistoryRing::new(
+            cfg.history_ticks,
+            (cfg.history_interval_s * 1e9) as u64,
+        );
 
         let mut world = World {
             ctx,
@@ -302,6 +352,14 @@ impl Scenario {
             tasks_failed: 0,
             last_result_arrival: 0.0,
             finish_time: None,
+            node_regs,
+            federation: Federation::new(),
+            ring,
+            obs_seq: BTreeMap::new(),
+            obs_idle: 0,
+            obs_last_processed: 0,
+            obs_stopped: false,
+            obs_done: false,
             cfg,
         };
 
@@ -312,6 +370,14 @@ impl Scenario {
             let node = f.node.clone();
             eng.schedule(f.at_s, move |e, w| fail_node(e, w, &node));
         }
+
+        // elastic-membership joins
+        for j in world.cfg.joins.clone() {
+            eng.schedule(j.at_s, move |e, w| join_node(e, w, &j));
+        }
+
+        // telemetry: federate + sample on the virtual-time cadence
+        eng.schedule(world.cfg.history_interval_s, obs_tick);
 
         // 1. broker discovers the job at the next poll tick
         let poll = world.cfg.broker_poll_s;
@@ -400,8 +466,120 @@ impl Scenario {
             node_busy_s,
             lost_bricks: lost,
             completed: world.finish_time.is_some(),
+            history_body: world.ring.render(None, None),
+            health_body: evaluate(&world.ring, &default_rules()).render(),
         }
     }
+}
+
+/// One telemetry tick: every live node ships its cumulative snapshot
+/// to the leader **through the real wire codec** (encode → frame →
+/// decode → seq-guarded fold — the exact `MetricsReport` path the live
+/// heartbeat channel uses), then the federated view is sampled into the
+/// history ring. Entirely virtual-time driven, so two runs of the same
+/// config record byte-identical windows.
+fn federate_and_record(eng: &mut Engine<World>, w: &mut World) {
+    if w.obs_done {
+        return;
+    }
+    let now = eng.now();
+    for node in w.node_regs.keys().cloned().collect::<Vec<_>>() {
+        if w.is_down(&node, now) {
+            continue; // dead: its last accepted report is retained
+        }
+        let seq = w.obs_seq.entry(node.clone()).or_insert(0);
+        *seq += 1;
+        let frame = Message::MetricsReport {
+            node: node.clone(),
+            seq: *seq,
+            payload: Snapshot::from_registry(&w.node_regs[&node]).encode(),
+        }
+        .encode();
+        if let Ok((Message::MetricsReport { node, seq, payload }, _)) =
+            Message::decode(&frame)
+        {
+            if let Some(snap) = Snapshot::decode(&payload) {
+                w.federation.report(&node, seq, snap);
+            }
+        }
+    }
+    // the DES has no shared leader registry: cluster-row series come
+    // from an empty one; killed nodes are marked heartbeat-stale the
+    // way the live monitor would see them
+    let shared = Registry::new();
+    let mut rows = sample_rows(&shared, &w.federation.snapshots());
+    for node in w.node_regs.keys() {
+        rows.insert(
+            (node.clone(), "node.hb_stale".into()),
+            u64::from(w.is_down(node, now)),
+        );
+    }
+    w.ring.record_tick(rows);
+    if w.finish_time.is_some() {
+        w.obs_done = true;
+    }
+}
+
+fn obs_tick(eng: &mut Engine<World>, w: &mut World) {
+    federate_and_record(eng, w);
+    if w.obs_done {
+        return;
+    }
+    // idle brake: a run that can never finish (all nodes dead) must not
+    // tick forever — pause after 2 ticks where the engine processed
+    // nothing but the ticks themselves; progress restarts the ticker
+    let processed = eng.processed();
+    if processed.saturating_sub(w.obs_last_processed) <= 1 {
+        w.obs_idle += 1;
+    } else {
+        w.obs_idle = 0;
+    }
+    w.obs_last_processed = processed;
+    if w.obs_idle >= 2 {
+        w.obs_stopped = true;
+        return;
+    }
+    eng.schedule(w.cfg.history_interval_s, obs_tick);
+}
+
+/// Restart a paused ticker (called from the progress paths).
+fn obs_resume(eng: &mut Engine<World>, w: &mut World) {
+    if w.obs_stopped && !w.obs_done {
+        w.obs_stopped = false;
+        w.obs_idle = 0;
+        w.obs_last_processed = eng.processed();
+        eng.schedule(w.cfg.history_interval_s, obs_tick);
+    }
+}
+
+/// Elastic membership: fold a newcomer into the running world — fresh
+/// NIC/CPU resources, a private metrics registry, a context entry and
+/// an `on_node_up` to the policy — then stage and kick it.
+fn join_node(eng: &mut Engine<World>, w: &mut World, j: &JoinSpec) {
+    if w.ctx.node(&j.node).is_some() {
+        return; // names are never recycled within a job
+    }
+    w.cfg.topology.add_host(&j.node);
+    w.cfg.speeds.insert(j.node.clone(), j.speed);
+    w.cfg.slots.insert(j.node.clone(), j.slots);
+    w.nics.insert(j.node.clone(), SerialResource::new());
+    w.cpus.insert(j.node.clone(), MultiSlot::new(j.slots.max(1)));
+    w.running.insert(j.node.clone(), 0);
+    w.node_regs.insert(j.node.clone(), Registry::new());
+    w.ctx.add_node(NodeState {
+        name: j.node.clone(),
+        speed: j.speed,
+        slots: j.slots.max(1),
+        up: true,
+    });
+    let ctx = w.ctx.clone();
+    w.sched.on_node_up(&j.node, &ctx);
+    // the newcomer pays GRAM staging before its first pull
+    let ready = eng.now() + w.cfg.stage_overhead_s;
+    w.eligible_at.insert(j.node.clone(), ready);
+    let n = j.node.clone();
+    eng.schedule_at(ready, move |e, w2| kick(e, w2, &n));
+    obs_resume(eng, w);
 }
 
 fn lost_bricks(w: &World) -> usize {
@@ -429,6 +607,7 @@ fn fail_node(eng: &mut Engine<World>, w: &mut World, node: &str) {
     }
     let ctx = w.ctx.clone();
     w.sched.on_node_down(node, &ctx);
+    obs_resume(eng, w);
     kick_all(eng, w);
 }
 
@@ -466,6 +645,9 @@ fn kick(eng: &mut Engine<World>, w: &mut World, node: &str) {
 fn dispatch(eng: &mut Engine<World>, w: &mut World, node: &str, task: Task) {
     let now = eng.now();
     *w.running.get_mut(node).unwrap() += 1;
+    if let Some(reg) = w.node_regs.get(node) {
+        reg.gauge("node.tasks_in_flight").add(1);
+    }
 
     let n_events = task.n_events();
     let bytes = n_events as u64 * w.cfg.event_bytes;
@@ -525,12 +707,19 @@ fn complete(
     res_bytes: u64,
 ) {
     *w.running.get_mut(node).unwrap() -= 1;
+    if let Some(reg) = w.node_regs.get(node) {
+        reg.gauge("node.tasks_in_flight").sub(1);
+    }
+    obs_resume(eng, w);
 
     // if the node died before the result fully arrived at the leader,
     // the work is void; the failure path (on_node_down) already requeued
     // it — counting it here too would double-process those events.
     if w.down_at.get(node).map(|t| *t <= result_arrival).unwrap_or(false) {
         w.tasks_failed += 1;
+        if let Some(reg) = w.node_regs.get(node) {
+            reg.counter("node.tasks_failed").inc();
+        }
         kick_all(eng, w);
         return;
     }
@@ -546,12 +735,18 @@ fn complete(
     w.tasks_completed += 1;
     w.result_bytes += res_bytes;
     w.last_result_arrival = result_arrival;
+    if let Some(reg) = w.node_regs.get(node) {
+        reg.counter("node.tasks_done").inc();
+    }
 
     if w.sched.is_done() {
         // merge at the JSE
         let merge =
             w.cfg.merge_fixed_s + w.result_bytes as f64 / w.cfg.merge_bps;
-        w.finish_time = Some(eng.now() + merge);
+        let finish = eng.now() + merge;
+        w.finish_time = Some(finish);
+        // final telemetry sample at the makespan, then the ring seals
+        eng.schedule_at(finish, federate_and_record);
         return;
     }
 
@@ -690,6 +885,85 @@ mod tests {
         assert!(cen8 > cen2 / 3.0, "cen2 {cen2:.0} cen8 {cen8:.0}");
         // and locality beats central at scale
         assert!(loc8 < cen8);
+    }
+
+    #[test]
+    fn telemetry_bodies_are_byte_identical_across_runs() {
+        // kill+join churn: node1 dies mid-run, fresh1 joins — the
+        // federated history and health bodies must still be exactly
+        // reproducible (the tentpole's determinism contract)
+        let mk = || {
+            let mut cfg = ScenarioConfig::paper_defaults(
+                Topology::lan_cluster(4, crate::netsim::Link::lan_fast_ethernet()),
+                Policy::Locality,
+                4000,
+            );
+            cfg.raw_at_leader = false;
+            cfg.replication = 2;
+            cfg.history_interval_s = 20.0;
+            cfg.failures =
+                vec![FailureSpec { node: "node1".into(), at_s: 120.0 }];
+            cfg.joins = vec![JoinSpec {
+                node: "fresh1".into(),
+                speed: 1.0,
+                slots: 1,
+                at_s: 150.0,
+            }];
+            cfg
+        };
+        let a = Scenario::run(mk());
+        let b = Scenario::run(mk());
+        assert!(a.completed, "churn run must still finish");
+        assert_eq!(
+            a.history_body, b.history_body,
+            "/metrics/history must be byte-identical across same-seed runs"
+        );
+        assert_eq!(
+            a.health_body, b.health_body,
+            "/health must be byte-identical across same-seed runs"
+        );
+        assert!(
+            a.history_body.contains("\"node\":\"fresh1\""),
+            "joined node must federate: {}",
+            a.history_body
+        );
+        // the killed node goes heartbeat-stale → judged unhealthy
+        assert!(
+            a.health_body
+                .contains("\"node\":\"node1\",\"verdict\":\"unhealthy\""),
+            "{}",
+            a.health_body
+        );
+    }
+
+    #[test]
+    fn joined_node_steals_work_and_reports_metrics() {
+        let mut cfg = ScenarioConfig::paper_defaults(
+            Topology::lan_cluster(2, crate::netsim::Link::lan_fast_ethernet()),
+            Policy::Gfarm,
+            4000,
+        );
+        cfg.raw_at_leader = false;
+        cfg.history_interval_s = 20.0;
+        cfg.joins = vec![JoinSpec {
+            node: "fresh1".into(),
+            speed: 1.0,
+            slots: 1,
+            at_s: 100.0,
+        }];
+        let r = Scenario::run(cfg);
+        assert!(r.completed);
+        assert_eq!(r.events_processed, 4000);
+        assert!(
+            r.node_busy_s.get("fresh1").copied().unwrap_or(0.0) > 0.0,
+            "newcomer must end up computing (work-stealing policy)"
+        );
+        assert!(
+            r.history_body
+                .contains("\"node\":\"fresh1\",\"name\":\"node.tasks_done\""),
+            "newcomer's federated counters must reach the ring: {}",
+            r.history_body
+        );
     }
 
     #[test]

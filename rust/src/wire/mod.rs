@@ -66,6 +66,12 @@ pub enum Message {
     /// JSE event loop as fresh slot capacity and kicks off brick
     /// rebalancing toward it. Nodes themselves ignore this kind.
     NodeJoin { name: String, speed: f64, slots: u32 },
+    /// node -> leader: a cumulative snapshot of the node's private
+    /// metrics registry (see `metrics::Snapshot`), shipped on the
+    /// heartbeat cadence. Cumulative + `seq`-guarded: the leader folds
+    /// only reports with a fresh sequence number, so drops and
+    /// reorderings never skew the federated roll-up.
+    MetricsReport { node: String, seq: u64, payload: Vec<u8> },
 }
 
 /// The single declared registry of wire kind bytes. `gepslint`'s
@@ -81,6 +87,7 @@ pub const WIRE_KINDS: &[(u8, &str)] = &[
     (5, "Shutdown"),
     (6, "JobCancel"),
     (7, "NodeJoin"),
+    (8, "MetricsReport"),
 ];
 
 #[derive(Debug, Clone, PartialEq)]
@@ -158,6 +165,7 @@ impl Message {
             Message::Shutdown => 5,
             Message::JobCancel { .. } => 6,
             Message::NodeJoin { .. } => 7,
+            Message::MetricsReport { .. } => 8,
         }
     }
 
@@ -222,6 +230,11 @@ impl Message {
                 // f64 travels as its IEEE-754 bit pattern in a varint
                 put_varint(&mut body, speed.to_bits());
                 put_varint(&mut body, *slots as u64);
+            }
+            Message::MetricsReport { node, seq, payload } => {
+                put_str(&mut body, node);
+                put_varint(&mut body, *seq);
+                put_bytes(&mut body, payload);
             }
         }
         let mut out = Vec::with_capacity(body.len() + 5);
@@ -296,6 +309,11 @@ impl Message {
                 name: r.str()?,
                 speed: f64::from_bits(r.varint()?),
                 slots: r.varint()? as u32,
+            },
+            8 => Message::MetricsReport {
+                node: r.str()?,
+                seq: r.varint()?,
+                payload: r.bytes()?,
             },
             k => return Err(WireError(format!("unknown kind {k}"))),
         };
@@ -372,6 +390,16 @@ mod tests {
             speed: 0.0,
             slots: 0,
         });
+        roundtrip(Message::MetricsReport {
+            node: "gandalf".into(),
+            seq: 41,
+            payload: vec![0, 7, 128, 255],
+        });
+        roundtrip(Message::MetricsReport {
+            node: String::new(),
+            seq: 0,
+            payload: Vec::new(),
+        });
     }
 
     #[test]
@@ -409,6 +437,7 @@ mod tests {
             Message::Shutdown,
             Message::JobCancel { job: 1 },
             Message::NodeJoin { name: "n".into(), speed: 1.0, slots: 1 },
+            Message::MetricsReport { node: "n".into(), seq: 1, payload: vec![0] },
         ];
         assert_eq!(
             samples.len(),
@@ -424,6 +453,7 @@ mod tests {
                 Message::Shutdown => "Shutdown",
                 Message::JobCancel { .. } => "JobCancel",
                 Message::NodeJoin { .. } => "NodeJoin",
+                Message::MetricsReport { .. } => "MetricsReport",
             };
             let reg = WIRE_KINDS
                 .iter()

@@ -286,6 +286,155 @@ fn observability_endpoints() {
 }
 
 #[test]
+fn federated_metrics_history_and_health() {
+    if !runtime_available() {
+        return;
+    }
+    let (cluster, addr) = start();
+    let body = Json::obj()
+        .set("filter", "n_tracks >= 0")
+        .set("policy", "locality")
+        .to_string();
+    let (status, resp) =
+        http::request(&addr, "POST", "/submit", Some(body.as_bytes()))
+            .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&resp));
+    let job = Json::parse(std::str::from_utf8(&resp).unwrap())
+        .unwrap()
+        .get("job")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, j) = get_json(&addr, &format!("/jobs/{job}"));
+        assert_eq!(status, 200);
+        let s = j.get("status").unwrap().as_str().unwrap().to_string();
+        assert_ne!(s, "FAILED");
+        if s == "DONE" {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "portal job timeout");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // node-labeled families land on the heartbeat cadence; poll until
+    // both nodes' MetricsReport snapshots are federated in
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let text = loop {
+        let (status, body) =
+            http::request(&addr, "GET", "/metrics?format=prometheus", None)
+                .unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        if ["gandalf", "hobbit"].iter().all(|n| {
+            text.contains(&format!("geps_node_tasks_done{{node=\"{n}\"}}"))
+        }) {
+            break text;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "node-labeled series never federated: {text}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    geps::obs::prom::check_exposition(&text)
+        .unwrap_or_else(|e| panic!("exposition rejected: {e}\n{text}"));
+
+    // the labeled samples of a federated counter family sum *exactly*
+    // to the unlabeled cluster roll-up: one scrape renders both sides
+    // from the same snapshot set, so this is an identity, not a race
+    let rollup: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("geps_node_tasks_done "))
+        .expect("cluster roll-up sample")
+        .parse()
+        .unwrap();
+    let labeled: u64 = text
+        .lines()
+        .filter(|l| l.starts_with("geps_node_tasks_done{"))
+        .filter_map(|l| l.rsplit_once(' '))
+        .map(|(_, v)| v.parse::<u64>().unwrap())
+        .sum();
+    assert_eq!(rollup, labeled, "{text}");
+    assert!(rollup >= 3, "300 events / 100 per brick = 3 tasks: {text}");
+
+    // the history ring fills on the broker's `[obs]` cadence
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let hist = loop {
+        let (status, body) = http::request(
+            &addr,
+            "GET",
+            "/metrics/history?name=node.tasks_done",
+            None,
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        let raw = String::from_utf8(body).unwrap();
+        if ["gandalf", "hobbit"]
+            .iter()
+            .all(|n| raw.contains(&format!("\"node\":\"{n}\"")))
+        {
+            break raw;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "history ring never sampled both nodes: {raw}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    let j = Json::parse(&hist).unwrap();
+    assert!(j.get("interval_ns").unwrap().as_u64().unwrap() > 0, "{hist}");
+    assert!(!j.get("ticks").unwrap().as_arr().unwrap().is_empty(), "{hist}");
+
+    // the node filter narrows the series to one node
+    let (status, body) = http::request(
+        &addr,
+        "GET",
+        "/metrics/history?name=node.tasks_done&node=gandalf",
+        None,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let one = String::from_utf8(body).unwrap();
+    assert!(one.contains("\"node\":\"gandalf\""), "{one}");
+    assert!(!one.contains("\"node\":\"hobbit\""), "{one}");
+
+    // the health engine has a verdict row for both nodes
+    let health = |addr: &str| {
+        let (status, body) =
+            http::request(addr, "GET", "/health", None).unwrap();
+        assert_eq!(status, 200);
+        String::from_utf8(body).unwrap()
+    };
+    let h = health(&addr);
+    for n in ["gandalf", "hobbit"] {
+        assert!(h.contains(&format!("\"node\":\"{n}\"")), "{h}");
+    }
+
+    // kill a node: its heartbeat goes stale and the doctor body must
+    // flip its verdict to unhealthy on the telemetry cadence
+    let (status, _) =
+        http::request(&addr, "POST", "/kill/gandalf", None).unwrap();
+    assert_eq!(status, 200);
+    let needle = "\"node\":\"gandalf\",\"verdict\":\"unhealthy\"";
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let h = health(&addr);
+        if h.contains(needle) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "killed node never went unhealthy: {h}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    Arc::try_unwrap(cluster).ok().map(|c| c.shutdown());
+}
+
+#[test]
 fn bricks_and_kill_endpoints() {
     if !runtime_available() {
         return;

@@ -1,0 +1,9 @@
+// gepslint fixture — per-node federation table skewed vs REGISTERED:
+// one entry that is not node-local, one federated family the catalogue
+// never declares, while the catalogue's own `node.pipelines` is left
+// unfederated
+// (linted under the fake path src/obs/prom.rs; never compiled).
+pub const NODE_FAMILIES: &[&str] = &[
+    "jse.not_node_local",
+    "node.phantom_series",
+];

@@ -1,9 +1,10 @@
 //! Registry lints: single-source-of-truth cross-checks.
 //!
-//! Four identifier spaces in this repo are protocol surface — wire
-//! message kinds, WAL record tags, metric names, and the Prometheus
-//! family table. Each must be declared in exactly one registry, and
-//! every use site must agree with it:
+//! Five identifier spaces in this repo are protocol surface — wire
+//! message kinds, WAL record tags, metric names, the Prometheus
+//! family table, and the per-node federation table. Each must be
+//! declared in exactly one registry, and every use site must agree
+//! with it:
 //!
 //! - `wire-kind-registry`: `wire::WIRE_KINDS` vs `Message::kind()` vs
 //!   the `decode()` dispatch — a duplicated or skewed kind byte turns
@@ -20,6 +21,11 @@
 //!   Prometheus renderer either invents label schemes for names the
 //!   catalogue doesn't declare, or silently emits a formatted family
 //!   as an unbounded set of raw mangled names.
+//! - `node-family-registry`: `obs::prom::NODE_FAMILIES` must be
+//!   exactly the `node.`-prefixed entries of `REGISTERED` — a missing
+//!   entry silently drops a node-local series from the per-node
+//!   labeled scrape, an extra one invents a federated family the
+//!   node actors never ship.
 
 use super::{SourceFile, Violation};
 use crate::lexer::{Kind, Tok};
@@ -30,6 +36,7 @@ pub fn check(files: &[SourceFile]) -> Vec<Violation> {
     out.extend(wal(files));
     out.extend(metrics(files));
     out.extend(prom_families(files));
+    out.extend(node_families(files));
     out.extend(single_declaration(files));
     out
 }
@@ -46,6 +53,7 @@ fn single_declaration(files: &[SourceFile]) -> Vec<Violation> {
         ("WAL_TAGS", "wal-tag-registry"),
         ("REGISTERED", "metric-name-registry"),
         ("PROM_FAMILIES", "prom-family-registry"),
+        ("NODE_FAMILIES", "node-family-registry"),
     ] {
         let mut decls: Vec<(String, u32)> = Vec::new();
         for f in files {
@@ -550,6 +558,96 @@ fn prom_families(files: &[SourceFile]) -> Vec<Violation> {
                     "wildcard metric `{w}` has no label mapping in \
                      PROM_FAMILIES — the Prometheus renderer would emit it \
                      as an unbounded set of raw names"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// The per-node federation table `obs::prom::NODE_FAMILIES` must be
+/// exactly the `node.`-prefixed entries of
+/// `metrics::names::REGISTERED`, both ways: an entry missing from
+/// NODE_FAMILIES silently folds a node-local series into the cluster
+/// roll-up with no per-node labeled scrape, an extra entry declares a
+/// federated family no node actor ever ships. Skipped when no file in
+/// the set declares `NODE_FAMILIES` (`single_declaration` reports the
+/// missing registry on the real tree).
+fn node_families(files: &[SourceFile]) -> Vec<Violation> {
+    const LINT: &str = "node-family-registry";
+    let mut out = Vec::new();
+    let Some(nf) = files.iter().find(|f| registry_body(f, "NODE_FAMILIES").is_some()) else {
+        return out;
+    };
+    let toks = nf.toks();
+    let mut fams: Vec<(String, u32)> = Vec::new();
+    if let Some(mut i) = registry_body(nf, "NODE_FAMILIES") {
+        while i < toks.len() && !toks[i].is_punct("]") {
+            if toks[i].kind == Kind::Str {
+                fams.push((toks[i].text.clone(), toks[i].line));
+            }
+            i += 1;
+        }
+    }
+    for (n, (name, line)) in fams.iter().enumerate() {
+        if fams[..n].iter().any(|(m, _)| m == name) {
+            out.push(v(
+                &nf.path,
+                *line,
+                LINT,
+                format!("duplicate federated family `{name}`"),
+            ));
+        }
+        if !name.starts_with("node.") {
+            out.push(v(
+                &nf.path,
+                *line,
+                LINT,
+                format!(
+                    "federated family `{name}` is not `node.`-prefixed — \
+                     only node-local series ship in MetricsReport snapshots"
+                ),
+            ));
+        }
+    }
+
+    let Some(mf) = files.iter().find(|f| f.path == "src/metrics/mod.rs") else {
+        return out;
+    };
+    let mtoks = mf.toks();
+    let mut reg_node: Vec<(String, u32)> = Vec::new();
+    if let Some(mut i) = registry_body(mf, "REGISTERED") {
+        while i < mtoks.len() && !mtoks[i].is_punct("]") {
+            if mtoks[i].kind == Kind::Str && mtoks[i].text.starts_with("node.") {
+                reg_node.push((mtoks[i].text.clone(), mtoks[i].line));
+            }
+            i += 1;
+        }
+    }
+    for (name, line) in &fams {
+        if name.starts_with("node.") && !reg_node.iter().any(|(r, _)| r == name) {
+            out.push(v(
+                &nf.path,
+                *line,
+                LINT,
+                format!(
+                    "federated family `{name}` is not a `node.` entry of \
+                     metrics::names::REGISTERED"
+                ),
+            ));
+        }
+    }
+    for (name, line) in &reg_node {
+        if !fams.iter().any(|(p, _)| p == name) {
+            out.push(v(
+                &mf.path,
+                *line,
+                LINT,
+                format!(
+                    "`node.` metric `{name}` is missing from \
+                     obs::prom::NODE_FAMILIES — the Prometheus renderer \
+                     would fold it into the cluster roll-up with no \
+                     per-node labeled series"
                 ),
             ));
         }

@@ -117,6 +117,22 @@ fn prom_family_fixture() {
 }
 
 #[test]
+fn node_family_fixture() {
+    let files = [
+        file("src/metrics/mod.rs", include_str!("../fixtures/metrics_decl.rs")),
+        file("src/obs/prom.rs", include_str!("../fixtures/node_bad.rs")),
+    ];
+    let vs = lints::registry::check(&files);
+    let ns: Vec<_> = vs.iter().filter(|v| v.lint == "node-family-registry").collect();
+    // `jse.not_node_local` not `node.`-prefixed, `node.phantom_series`
+    // undeclared in REGISTERED, `node.pipelines` left unfederated
+    assert_eq!(ns.len(), 3, "got: {ns:?}");
+    assert!(ns.iter().any(|v| v.msg.contains("jse.not_node_local")));
+    assert!(ns.iter().any(|v| v.msg.contains("node.phantom_series")));
+    assert!(ns.iter().any(|v| v.msg.contains("node.pipelines")));
+}
+
+#[test]
 fn run_all_catches_every_seeded_fixture() {
     let files = [
         file("src/jse/bad.rs", include_str!("../fixtures/bad_panic.rs")),
@@ -128,6 +144,7 @@ fn run_all_catches_every_seeded_fixture() {
         file("src/metrics/mod.rs", include_str!("../fixtures/metrics_decl.rs")),
         file("src/node/bad_metrics.rs", include_str!("../fixtures/metrics_use.rs")),
         file("src/obs/prom.rs", include_str!("../fixtures/prom_bad.rs")),
+        file("src/obs/node_families.rs", include_str!("../fixtures/node_bad.rs")),
     ];
     let vs = lints::run_all(&files);
     for lint in [
@@ -140,6 +157,7 @@ fn run_all_catches_every_seeded_fixture() {
         "wire-kind-registry",
         "metric-name-registry",
         "prom-family-registry",
+        "node-family-registry",
         "allow-missing-justification",
     ] {
         assert!(count(&vs, lint) > 0, "lint `{lint}` caught nothing: {vs:?}");
